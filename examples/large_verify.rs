@@ -1,0 +1,73 @@
+//! Large-design verification — the paper's core scenario (§V-B/C):
+//! a multiplier too large to classify in one device-sized piece is
+//! partitioned, boundary-re-grown, streamed through the model bucket by
+//! bucket, and verified; memory drops with the partition count while
+//! accuracy is preserved by re-growth.
+//!
+//! Sweeps partition counts on a 64-bit CSA multiplier (≈40k graph nodes;
+//! override with --bits) and prints the memory/accuracy/runtime trade-off
+//! table, then runs the algebraic check once with the best setting.
+//!
+//! Run: `make artifacts && cargo run --release --example large_verify [-- --bits 128]`
+
+use groot::coordinator::{Backend, Session, SessionConfig};
+use groot::datasets::{self, DatasetKind};
+use groot::memmodel::MemModel;
+use groot::util::cli::Args;
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    let mut args = Args::parse(&[]);
+    let bits: usize = args.parse_or("bits", 64)?;
+    let graph = datasets::build(DatasetKind::Csa, bits)?;
+    let aig = groot::aig::mult::csa_multiplier(bits);
+    println!(
+        "== large_verify: {bits}-bit CSA, {} nodes / {} edges ==",
+        graph.num_nodes,
+        graph.num_edges()
+    );
+
+    let bundle = groot::util::tensor::read_bundle(Path::new("artifacts/weights_csa8.bin"))?;
+    let model = groot::gnn::SageModel::from_bundle(&bundle)?;
+    let mem = MemModel::default();
+
+    println!(
+        "\n{:>6} {:>10} {:>12} {:>12} {:>10} {:>12}",
+        "parts", "acc", "peak nodes", "mem (MB)", "infer", "rss (MB)"
+    );
+    let mut best_pred: Option<Vec<u8>> = None;
+    for parts in [1usize, 2, 4, 8, 16, 32, 64] {
+        let session = Session::new(
+            Backend::Native(model.clone()),
+            SessionConfig { num_partitions: parts, regrow: true, ..Default::default() },
+        );
+        let res = session.classify(&graph)?;
+        let peak = res.stats.max_partition_nodes.max(graph.num_nodes / parts.max(1));
+        println!(
+            "{:>6} {:>10.4} {:>12} {:>12.0} {:>10} {:>12.0}",
+            parts,
+            res.accuracy,
+            peak,
+            mem.groot_mb(peak),
+            groot::util::timer::fmt_dur(res.stats.infer_time),
+            groot::util::timer::peak_rss_bytes() as f64 / 1e6,
+        );
+        if parts == 16 {
+            best_pred = Some(res.pred);
+        }
+    }
+
+    let pred = best_pred.expect("16-partition run");
+    let t0 = std::time::Instant::now();
+    let outcome = groot::verify::verify_multiplier(&aig, &graph, &pred)?;
+    println!(
+        "\nalgebraic verification (16 partitions' predictions): {} in {:?} \
+         ({} adders, peak {} monomials)",
+        if outcome.equivalent { "EQUIVALENT ✓" } else { "NOT PROVEN ✗" },
+        t0.elapsed(),
+        outcome.adders_used,
+        outcome.peak_terms
+    );
+    anyhow::ensure!(outcome.equivalent, "{:?}", outcome.reason);
+    Ok(())
+}

@@ -1,0 +1,23 @@
+use groot::datasets::{self, DatasetKind};
+use groot::graph::Csr;
+use groot::spmm::{CsrRowParallel, SpmmEngine};
+use groot::util::rng::Rng;
+fn main() {
+    let which = std::env::args().nth(1).unwrap_or_default();
+    let graph = datasets::build(DatasetKind::Booth, 128).unwrap();
+    let csr = Csr::symmetric_from_edges(graph.num_nodes, &graph.edges);
+    let mut rng = Rng::new(9);
+    let dim = 32;
+    let x: Vec<f32> = (0..csr.num_nodes() * dim).map(|_| rng.f32()).collect();
+    let t0 = std::time::Instant::now();
+    let mut sink = 0.0f32;
+    for _ in 0..20 {
+        let y = if which == "merge" {
+            groot::spmm::MergePathSpmm::new(1).spmm_mean(&csr, &x, dim)
+        } else {
+            CsrRowParallel::new(1).spmm_mean(&csr, &x, dim)
+        };
+        sink += y[0];
+    }
+    println!("{which}: {:?} (sink {sink})", t0.elapsed() / 20);
+}

@@ -1,0 +1,83 @@
+//! Quickstart — verify a 16-bit CSA multiplier end-to-end.
+//!
+//! Exercises the full GROOT stack: circuit generation → EDA graph →
+//! partitioning → Algorithm-1 edge re-growth → GNN node classification
+//! (AOT PJRT executables if `artifacts/` is built, rust-native fallback
+//! otherwise) → algebraic verification against the multiplier spec.
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use groot::coordinator::{Backend, Session, SessionConfig};
+use groot::datasets::{self, DatasetKind};
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    let bits = 16;
+    println!("== GROOT quickstart: verifying a {bits}-bit CSA multiplier ==\n");
+
+    // 1. Build the circuit and its EDA graph (features + ground truth).
+    let aig = groot::aig::mult::csa_multiplier(bits);
+    let graph = datasets::build(DatasetKind::Csa, bits)?;
+    println!(
+        "circuit: {} AND gates, {} PIs, {} POs -> EDA graph {} nodes / {} edges",
+        aig.num_ands(),
+        aig.num_pis(),
+        aig.num_outputs(),
+        graph.num_nodes,
+        graph.num_edges()
+    );
+
+    // 2. Load the 8-bit-trained model; prefer the AOT PJRT path.
+    let weights_path = Path::new("artifacts/weights_csa8.bin");
+    anyhow::ensure!(
+        weights_path.exists(),
+        "artifacts missing — run `make artifacts` first"
+    );
+    let bundle = groot::util::tensor::read_bundle(weights_path)?;
+    let backend = match groot::runtime::Runtime::load_buckets(
+        Path::new("artifacts"),
+        &bundle,
+        4096,
+    ) {
+        Ok(rt) => {
+            println!("backend: PJRT ({}), {} buckets", rt.platform(), rt.num_buckets());
+            Backend::Pjrt(rt)
+        }
+        Err(e) => {
+            println!("backend: rust-native (PJRT unavailable: {e:#})");
+            Backend::Native(groot::gnn::SageModel::from_bundle(&bundle)?)
+        }
+    };
+
+    // 3. Partition into 4, re-grow boundaries, classify.
+    let session = Session::new(
+        backend,
+        SessionConfig { num_partitions: 4, regrow: true, ..Default::default() },
+    );
+    let res = session.classify(&graph)?;
+    println!(
+        "\nclassification: accuracy {:.4} over {} nodes ({} partitions, {} boundary nodes re-grown)",
+        res.accuracy, graph.num_nodes, res.stats.num_partitions, res.stats.total_boundary_nodes
+    );
+    println!(
+        "timings: partition {:?}, regrowth {:?}, pack {:?}, inference {:?}",
+        res.stats.partition_time,
+        res.stats.regrowth_time,
+        res.stats.pack_time,
+        res.stats.infer_time
+    );
+
+    // 4. Algebraic verification driven by the predicted XOR/MAJ nodes.
+    let t0 = std::time::Instant::now();
+    let outcome = groot::verify::verify_multiplier(&aig, &graph, &res.pred)?;
+    println!(
+        "\nalgebraic check: {} in {:?} (adder substitutions {}, peak {} monomials)",
+        if outcome.equivalent { "EQUIVALENT ✓" } else { "NOT PROVEN ✗" },
+        t0.elapsed(),
+        outcome.adders_used,
+        outcome.peak_terms
+    );
+    anyhow::ensure!(outcome.equivalent, "verification failed: {:?}", outcome.reason);
+    println!("\nquickstart OK");
+    Ok(())
+}

@@ -1,0 +1,76 @@
+//! Verification service — GROOT as a long-running server (the run-time
+//! verification deployment the paper motivates): a router thread owns the
+//! model, clients submit circuits concurrently, and each request's
+//! partition count adapts to the design size.
+//!
+//! Submits a mixed batch of multipliers (csa/booth/wallace at several
+//! widths), overlapping the requests, and reports per-request latency +
+//! aggregate throughput.
+//!
+//! Run: `make artifacts && cargo run --release --example serve`
+
+use groot::coordinator::server::Server;
+use groot::coordinator::{Backend, SessionConfig};
+use groot::datasets::{self, DatasetKind};
+use std::path::Path;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let server = Server::spawn(SessionConfig::default(), || {
+        let bundle =
+            groot::util::tensor::read_bundle(Path::new("artifacts/weights_csa8.bin"))?;
+        Ok(Backend::Native(groot::gnn::SageModel::from_bundle(&bundle)?))
+    });
+    let handle = server.handle();
+
+    let workload: Vec<(DatasetKind, usize)> = vec![
+        (DatasetKind::Csa, 16),
+        (DatasetKind::Booth, 16),
+        (DatasetKind::Csa, 32),
+        (DatasetKind::Wallace, 16),
+        (DatasetKind::Csa, 48),
+        (DatasetKind::Booth, 32),
+        (DatasetKind::Csa, 64),
+        (DatasetKind::Wallace, 32),
+    ];
+
+    println!("== GROOT verification service: {} requests ==\n", workload.len());
+    let t_all = Instant::now();
+    // submit everything up front (the router drains the queue in order,
+    // like a single-accelerator deployment would)
+    let mut pending = Vec::new();
+    for (kind, bits) in &workload {
+        let graph = datasets::build(*kind, *bits)?;
+        // adaptive partitioning: ~4k nodes per partition
+        let parts = (graph.num_nodes / 4096).max(1);
+        let submitted = Instant::now();
+        let rx = handle.submit(graph, Some(parts))?;
+        pending.push((kind.name(), *bits, parts, submitted, rx));
+    }
+    println!(
+        "{:>10} {:>6} {:>6} {:>10} {:>12} {:>10}",
+        "dataset", "bits", "parts", "acc", "latency", "nodes"
+    );
+    let mut total_nodes = 0usize;
+    for (name, bits, parts, submitted, rx) in pending {
+        let res = rx.recv()??;
+        total_nodes += res.pred.len();
+        println!(
+            "{:>10} {:>6} {:>6} {:>10.4} {:>12} {:>10}",
+            name,
+            bits,
+            parts,
+            res.accuracy,
+            groot::util::timer::fmt_dur(submitted.elapsed()),
+            res.pred.len()
+        );
+    }
+    let wall = t_all.elapsed();
+    println!(
+        "\nthroughput: {} requests / {} = {:.1} knodes/s classified",
+        workload.len(),
+        groot::util::timer::fmt_dur(wall),
+        total_nodes as f64 / wall.as_secs_f64() / 1e3
+    );
+    Ok(())
+}

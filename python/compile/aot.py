@@ -1,0 +1,109 @@
+"""AOT lowering — jax → HLO *text* artifacts for the rust PJRT runtime.
+
+One executable per shape bucket: the coordinator pads every re-grown
+partition into the smallest bucket that fits and runs the matching
+executable. Interchange is HLO text (NOT serialized protos): jax ≥ 0.5
+emits 64-bit instruction ids that the xla crate's xla_extension 0.5.1
+rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts [--buckets 1024,4096,...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+K_LD = 16
+K_HD = 512
+DEFAULT_BUCKETS = (1024, 4096, 16384, 65536)
+
+
+def h_for(n_bucket: int) -> int:
+    return max(n_bucket // 64, 8)
+
+
+def infer_fn(x, ld_cols, ld_w, hd_idx, hd_cols, hd_w, *flat_params):
+    """Flattened-signature inference (weights are runtime inputs so one
+    HLO serves any trained variant)."""
+    assert len(flat_params) % 3 == 0
+    params = [
+        (flat_params[i], flat_params[i + 1], flat_params[i + 2])
+        for i in range(0, len(flat_params), 3)
+    ]
+    logits = M.sage_forward(x, ld_cols, ld_w, hd_idx, hd_cols, hd_w, params)
+    return (logits,)
+
+
+def bucket_arg_specs(n: int):
+    h = h_for(n)
+    f32, i32 = jnp.float32, jnp.int32
+    specs = [
+        jax.ShapeDtypeStruct((n, M.FEATURE_DIM), f32),   # x
+        jax.ShapeDtypeStruct((n, K_LD), i32),            # ld_cols
+        jax.ShapeDtypeStruct((n, K_LD), f32),            # ld_w
+        jax.ShapeDtypeStruct((h,), i32),                 # hd_idx
+        jax.ShapeDtypeStruct((h, K_HD), i32),            # hd_cols
+        jax.ShapeDtypeStruct((h, K_HD), f32),            # hd_w
+    ]
+    dims = M.LAYER_DIMS
+    for din, dout in zip(dims[:-1], dims[1:]):
+        specs.append(jax.ShapeDtypeStruct((din, dout), f32))  # w_self
+        specs.append(jax.ShapeDtypeStruct((din, dout), f32))  # w_neigh
+        specs.append(jax.ShapeDtypeStruct((dout,), f32))      # b
+    return specs
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_bucket(n: int) -> str:
+    specs = bucket_arg_specs(n)
+    lowered = jax.jit(infer_fn).lower(*specs)
+    return to_hlo_text(lowered)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", required=True)
+    ap.add_argument(
+        "--buckets", default=",".join(str(b) for b in DEFAULT_BUCKETS)
+    )
+    args = ap.parse_args()
+    buckets = [int(b) for b in args.buckets.split(",")]
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest_lines = [
+        f"feature_dim {M.FEATURE_DIM}",
+        f"num_classes {M.NUM_CLASSES}",
+        f"k_ld {K_LD}",
+        f"k_hd {K_HD}",
+        "params " + " ".join(M.PARAM_NAMES),
+    ]
+    for n in buckets:
+        fname = f"sage_n{n}.hlo.txt"
+        text = lower_bucket(n)
+        path = os.path.join(args.out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest_lines.append(f"bucket n={n} h={h_for(n)} file={fname}")
+        print(f"lowered bucket {n}: {len(text)} chars -> {path}")
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"wrote manifest with {len(buckets)} buckets")
+
+
+if __name__ == "__main__":
+    main()

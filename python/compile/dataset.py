@@ -1,0 +1,75 @@
+"""Dataset loading for the training path.
+
+`groot gen-dataset` (rust) writes one EDA graph as three text files:
+    <stem>.features.txt   one "f0 f1 f2 f3" row per node
+    <stem>.labels.txt     one class id per node
+    <stem>.edges.txt      one "src dst" directed edge per line
+
+This module loads them, builds the symmetric CSR the GNN aggregates over,
+and packs it into bucket tensors (shared packer in kernels/ref.py).
+"""
+
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from .kernels.ref import pack_graph
+
+
+class GraphData:
+    def __init__(self, features, labels, edges, name="graph"):
+        self.features = np.asarray(features, dtype=np.float32)
+        self.labels = np.asarray(labels, dtype=np.int32)
+        self.edges = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
+        self.name = name
+        self.n = self.features.shape[0]
+        assert self.labels.shape[0] == self.n
+
+    def symmetric_csr(self):
+        """Sorted, deduped symmetric CSR (matches rust Csr::symmetric_...)."""
+        e = self.edges
+        both = np.concatenate([e, e[:, ::-1]], axis=0)
+        both = both[both[:, 0] != both[:, 1]]
+        # unique (src, dst) pairs
+        key = both[:, 0] * self.n + both[:, 1]
+        order = np.argsort(key, kind="stable")
+        key_sorted = key[order]
+        keep = np.ones(len(key_sorted), dtype=bool)
+        keep[1:] = key_sorted[1:] != key_sorted[:-1]
+        uniq = both[order][keep]
+        counts = np.bincount(uniq[:, 0], minlength=self.n)
+        row_ptr = np.zeros(self.n + 1, dtype=np.int64)
+        np.cumsum(counts, out=row_ptr[1:])
+        return row_ptr, uniq[:, 1].astype(np.int32)
+
+    def pack(self, n_bucket, k_ld=16, h_bucket=None, k_hd=512):
+        if h_bucket is None:
+            h_bucket = max(n_bucket // 64, 8)
+        row_ptr, col_idx = self.symmetric_csr()
+        packed = pack_graph(row_ptr, col_idx, n_bucket, k_ld, h_bucket, k_hd)
+        x = np.zeros((n_bucket, self.features.shape[1]), dtype=np.float32)
+        x[: self.n] = self.features
+        labels = np.zeros((n_bucket,), dtype=np.int32)
+        labels[: self.n] = self.labels
+        mask = np.zeros((n_bucket,), dtype=np.float32)
+        mask[: self.n] = 1.0
+        return x, packed, labels, mask
+
+
+def load_graph(dataset_dir: str, stem: str) -> GraphData:
+    def path(ext):
+        return os.path.join(dataset_dir, f"{stem}.{ext}.txt")
+
+    features = np.loadtxt(path("features"), dtype=np.float32, ndmin=2)
+    labels = np.loadtxt(path("labels"), dtype=np.int32, ndmin=1)
+    edges = np.loadtxt(path("edges"), dtype=np.int64, ndmin=2)
+    return GraphData(features, labels, edges, name=stem)
+
+
+def bucket_for(n: int, buckets=(1024, 4096, 16384, 65536)) -> int:
+    for b in buckets:
+        if n <= b:
+            return b
+    raise ValueError(f"graph of {n} nodes exceeds the largest bucket")

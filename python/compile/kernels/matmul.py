@@ -1,0 +1,53 @@
+"""Dense matmul (Pallas) for the GraphSAGE weight updates — the MXU side
+of the kernel design.
+
+The aggregation kernels are VPU/gather-bound; the W_self/W_neigh updates
+are plain dense matmuls and belong on the MXU. Tiled [TM, K] × [K, TN]
+with a K-striding accumulator grid, the canonical Pallas matmul schedule.
+Feature dims here are small (4/32/5 — padded to the tile), so on real
+hardware this runs one MXU pass per tile; interpret=True validates the
+schedule on CPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TM = 256
+
+
+def _mm_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("tm",))
+def matmul(a, b, tm: int = DEFAULT_TM):
+    """a [M, K] · b [K, N] → [M, N], row-tiled over M.
+
+    K and N are small model dims (≤ 64) and stay whole per tile; M is the
+    node dimension and is tiled by `tm` (must divide M — buckets are
+    multiples of 256).
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    tm = min(tm, m)
+    if m % tm != 0:
+        raise ValueError(f"M {m} not a multiple of tile {tm}")
+    return pl.pallas_call(
+        _mm_kernel,
+        grid=(m // tm,),
+        in_specs=[
+            pl.BlockSpec((tm, k), lambda i: (i, 0)),
+            pl.BlockSpec((k, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b)

@@ -1,0 +1,115 @@
+"""Pure-jnp correctness oracles for the Pallas kernels and the model.
+
+Everything here is the specification; the Pallas kernels in spmm_ld.py /
+spmm_hd.py / matmul.py must match these (allclose at f32).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def spmm_ell_ref(x, cols, w):
+    """Weighted ELL gather-sum: y[i] = sum_k w[i,k] * x[cols[i,k]].
+
+    x: [N, F] float32; cols: [R, K] int32 (padding slots must carry w = 0);
+    w: [R, K] float32. Returns [R, F].
+    """
+    gathered = x[cols]              # [R, K, F]
+    return jnp.einsum("rk,rkf->rf", w, gathered)
+
+
+def hd_scatter_ref(y, hd_idx, hd_contrib):
+    """Scatter-add HD slot contributions into row-space y.
+
+    y: [N, F]; hd_idx: [H] int32 (padding slots may point anywhere as long
+    as their contribution row is zero); hd_contrib: [H, F].
+    """
+    return y.at[hd_idx].add(hd_contrib)
+
+
+def aggregate_ref(x, ld_cols, ld_w, hd_idx, hd_cols, hd_w):
+    """Full GROOT aggregation: LD ELL + HD chunked scatter-add (mean agg —
+    the 1/deg factors live inside ld_w / hd_w)."""
+    y = spmm_ell_ref(x, ld_cols, ld_w)
+    contrib = spmm_ell_ref(x, hd_cols, hd_w)
+    return hd_scatter_ref(y, hd_idx, contrib)
+
+
+def matmul_ref(a, b):
+    return jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+def sage_layer_ref(h, agg, w_self, w_neigh, b, relu=True):
+    """GraphSAGE layer: act(h·W_self + agg·W_neigh + b)."""
+    out = matmul_ref(h, w_self) + matmul_ref(agg, w_neigh) + b
+    return jnp.maximum(out, 0.0) if relu else out
+
+
+def sage_forward_ref(x, ld_cols, ld_w, hd_idx, hd_cols, hd_w, params):
+    """Whole-model forward (3 GraphSAGE layers, last one linear logits).
+
+    params: list of (w_self, w_neigh, b) triples.
+    """
+    h = x
+    for li, (ws, wn, b) in enumerate(params):
+        agg = aggregate_ref(h, ld_cols, ld_w, hd_idx, hd_cols, hd_w)
+        h = sage_layer_ref(h, agg, ws, wn, b, relu=(li + 1 < len(params)))
+    return h
+
+
+# ---------------------------------------------------------------------------
+# Graph packing (numpy) — mirrors rust/src/coordinator/pack.rs. The packer
+# turns a CSR adjacency into the fixed-shape (ld_cols, ld_w, hd_idx,
+# hd_cols, hd_w) bucket tensors the AOT-compiled model consumes.
+# ---------------------------------------------------------------------------
+
+
+def pack_graph(row_ptr, col_idx, n_bucket, k_ld, h_bucket, k_hd):
+    """Pack a CSR graph (numpy arrays) into bucket tensors.
+
+    Rows with degree ≤ k_ld go to the ELL block; heavier rows are split
+    into ≤ k_hd chunks occupying HD slots (scatter-added by row id).
+    Raises ValueError if the graph does not fit the bucket.
+    """
+    n = len(row_ptr) - 1
+    if n > n_bucket:
+        raise ValueError(f"graph rows {n} exceed bucket {n_bucket}")
+    ld_cols = np.zeros((n_bucket, k_ld), dtype=np.int32)
+    ld_w = np.zeros((n_bucket, k_ld), dtype=np.float32)
+    hd_idx = np.zeros((h_bucket,), dtype=np.int32)
+    hd_cols = np.zeros((h_bucket, k_hd), dtype=np.int32)
+    hd_w = np.zeros((h_bucket, k_hd), dtype=np.float32)
+    slot = 0
+    for u in range(n):
+        lo, hi = row_ptr[u], row_ptr[u + 1]
+        deg = hi - lo
+        if deg == 0:
+            continue
+        inv = np.float32(1.0 / deg)
+        if deg <= k_ld:
+            ld_cols[u, :deg] = col_idx[lo:hi]
+            ld_w[u, :deg] = inv
+        else:
+            for c0 in range(lo, hi, k_hd):
+                c1 = min(c0 + k_hd, hi)
+                if slot >= h_bucket:
+                    raise ValueError("out of HD slots; use a larger bucket")
+                hd_idx[slot] = u
+                hd_cols[slot, : c1 - c0] = col_idx[c0:c1]
+                hd_w[slot, : c1 - c0] = inv
+                slot += 1
+    return ld_cols, ld_w, hd_idx, hd_cols, hd_w
+
+
+def aggregate_dense_ref(row_ptr, col_idx, x):
+    """Direct CSR mean aggregation (float64 accumulation) — the packing-
+    independent oracle used to validate pack_graph + aggregate_ref."""
+    n = len(row_ptr) - 1
+    out = np.zeros((x.shape[0], x.shape[1]), dtype=np.float64)
+    for u in range(n):
+        lo, hi = row_ptr[u], row_ptr[u + 1]
+        if hi > lo:
+            out[u] = x[col_idx[lo:hi]].astype(np.float64).mean(axis=0)
+    return out.astype(np.float32)

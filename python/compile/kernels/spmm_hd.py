@@ -1,0 +1,74 @@
+"""HD-kernel (Pallas): chunked high-degree row SpMM — §IV Fig. 4 re-thought
+for TPU.
+
+The paper's CUDA HD-kernel splits each high-degree row's nonzeros into 32
+equal workloads spread over warps. On TPU the analogous move is to split
+each HD slot's K_HD-wide nonzero strip into `CHUNK`-wide VMEM tiles and
+accumulate partial sums across the chunk grid dimension: grid = (H/TH,
+K_HD/CHUNK); the first chunk initializes the output tile, subsequent chunks
+accumulate in place (revolving VMEM accumulator ≙ the paper's shared-memory
+partial sums). Rows wider than K_HD were already split across multiple HD
+slots by the packer and meet again in the jnp scatter-add downstream (the
+atomics of the CUDA version).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_SLOT_TILE = 8
+DEFAULT_CHUNK = 128
+
+
+def _hd_kernel(x_ref, cols_ref, w_ref, o_ref):
+    """Grid (slot_tile h, chunk c): accumulate chunk partial sums into o."""
+    c = pl.program_id(1)
+    x = x_ref[...]          # [N, F]
+    cols = cols_ref[...]    # [TH, CHUNK]
+    w = w_ref[...]          # [TH, CHUNK]
+    gathered = x[cols]      # [TH, CHUNK, F]
+    partial = jnp.einsum(
+        "rk,rkf->rf", w, gathered, preferred_element_type=jnp.float32
+    )
+
+    @pl.when(c == 0)
+    def _init():
+        o_ref[...] = partial
+
+    @pl.when(c != 0)
+    def _accum():
+        o_ref[...] += partial
+
+
+@functools.partial(jax.jit, static_argnames=("slot_tile", "chunk"))
+def spmm_hd(x, cols, w, slot_tile: int = DEFAULT_SLOT_TILE, chunk: int = DEFAULT_CHUNK):
+    """Per-slot contributions for high-degree rows.
+
+    x: [N, F]; cols/w: [H, K_HD] → [H, F]. K_HD must divide by `chunk` and
+    H by `slot_tile` (bucket shapes are chosen so they do).
+    """
+    h, k_hd = cols.shape
+    n, f = x.shape
+    slot_tile = min(slot_tile, h)
+    chunk = min(chunk, k_hd)
+    if h % slot_tile != 0 or k_hd % chunk != 0:
+        raise ValueError(f"shape ({h},{k_hd}) not tileable by ({slot_tile},{chunk})")
+    grid = (h // slot_tile, k_hd // chunk)
+    return pl.pallas_call(
+        _hd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n, f), lambda i, c: (0, 0)),
+            pl.BlockSpec((slot_tile, chunk), lambda i, c: (i, c)),
+            pl.BlockSpec((slot_tile, chunk), lambda i, c: (i, c)),
+        ],
+        # Output block does not depend on c → same VMEM tile revisited
+        # across the chunk dimension (the accumulator).
+        out_specs=pl.BlockSpec((slot_tile, f), lambda i, c: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, f), jnp.float32),
+        interpret=True,
+    )(x, cols, w)

@@ -1,0 +1,132 @@
+"""L2 — GraphSAGE model for AIG node classification (build-time JAX).
+
+Architecture (paper §III-C): GraphSAGE mean-aggregation, 3 layers
+(4 → 32 → 32 → 5), final layer linear logits over the 5 node classes
+{PO, MAJ, XOR, AND, PI}. The aggregation is the GROOT HD/LD split:
+low-degree rows through the ELL LD-kernel, high-degree rows through the
+chunked HD-kernel plus scatter-add (see kernels/).
+
+The *inference* path (what aot.py lowers and the rust runtime executes)
+calls the Pallas kernels. The *training* path uses the pure-jnp reference
+(identical math — asserted by python/tests/test_kernel.py) because
+pallas_call has no registered VJP; weights transfer exactly.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import ref
+from .kernels.matmul import matmul
+from .kernels.spmm_hd import spmm_hd
+from .kernels.spmm_ld import spmm_ld
+
+NUM_CLASSES = 5
+FEATURE_DIM = 4
+HIDDEN_DIM = 32
+LAYER_DIMS = [FEATURE_DIM, HIDDEN_DIM, HIDDEN_DIM, NUM_CLASSES]
+
+# Canonical parameter order for the flattened AOT signature; the rust
+# runtime feeds literals in exactly this order after the graph tensors.
+PARAM_NAMES = [
+    f"l{i}.{leaf}"
+    for i in range(len(LAYER_DIMS) - 1)
+    for leaf in ("w_self", "w_neigh", "b")
+]
+
+
+def init_params(seed: int = 0, dims=None):
+    """Glorot-uniform init; returns list of (w_self, w_neigh, b)."""
+    dims = dims or LAYER_DIMS
+    rng = np.random.default_rng(seed)
+    params = []
+    for din, dout in zip(dims[:-1], dims[1:]):
+        lim = float(np.sqrt(6.0 / (din + dout)))
+        ws = rng.uniform(-lim, lim, size=(din, dout)).astype(np.float32)
+        wn = rng.uniform(-lim, lim, size=(din, dout)).astype(np.float32)
+        b = np.zeros((dout,), dtype=np.float32)
+        params.append((jnp.asarray(ws), jnp.asarray(wn), jnp.asarray(b)))
+    return params
+
+
+def params_to_bundle(params) -> dict[str, np.ndarray]:
+    out = {}
+    for i, (ws, wn, b) in enumerate(params):
+        out[f"l{i}.w_self"] = np.asarray(ws)
+        out[f"l{i}.w_neigh"] = np.asarray(wn)
+        out[f"l{i}.b"] = np.asarray(b)
+    return out
+
+
+def bundle_to_params(bundle: dict[str, np.ndarray]):
+    n_layers = len({k.split(".")[0] for k in bundle})
+    return [
+        (
+            jnp.asarray(bundle[f"l{i}.w_self"]),
+            jnp.asarray(bundle[f"l{i}.w_neigh"]),
+            jnp.asarray(bundle[f"l{i}.b"]),
+        )
+        for i in range(n_layers)
+    ]
+
+
+def aggregate(h, ld_cols, ld_w, hd_idx, hd_cols, hd_w):
+    """GROOT aggregation via the Pallas kernels."""
+    y = spmm_ld(h, ld_cols, ld_w)
+    contrib = spmm_hd(h, hd_cols, hd_w)
+    return y.at[hd_idx].add(contrib)
+
+
+def sage_forward(x, ld_cols, ld_w, hd_idx, hd_cols, hd_w, params):
+    """Inference forward pass (Pallas kernels) → logits [N, 5]."""
+    h = x
+    for li, (ws, wn, b) in enumerate(params):
+        agg = aggregate(h, ld_cols, ld_w, hd_idx, hd_cols, hd_w)
+        out = matmul(h, ws) + matmul(agg, wn) + b
+        h = jnp.maximum(out, 0.0) if li + 1 < len(params) else out
+    return h
+
+
+def sage_forward_train(x, ld_cols, ld_w, hd_idx, hd_cols, hd_w, params):
+    """Differentiable forward (pure-jnp reference kernels)."""
+    return ref.sage_forward_ref(x, ld_cols, ld_w, hd_idx, hd_cols, hd_w, params)
+
+
+def cross_entropy_loss(logits, labels, mask):
+    """Masked mean CE. mask selects real (non-padding) nodes."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def accuracy(logits, labels, mask):
+    pred = jnp.argmax(logits, axis=-1)
+    correct = (pred == labels).astype(jnp.float32) * mask
+    return jnp.sum(correct) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+# ----------------------------------------------------------------------
+# Hand-rolled Adam (optax not available offline).
+# ----------------------------------------------------------------------
+
+
+def adam_init(params):
+    zeros = lambda p: jax.tree_util.tree_map(jnp.zeros_like, p)
+    return {"m": zeros(params), "v": zeros(params), "t": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(params, grads, state, lr=1e-2, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    mh_scale = 1.0 / (1 - b1 ** t.astype(jnp.float32))
+    vh_scale = 1.0 / (1 - b2 ** t.astype(jnp.float32))
+    new_params = jax.tree_util.tree_map(
+        lambda p, m, v: p - lr * (m * mh_scale) / (jnp.sqrt(v * vh_scale) + eps),
+        params,
+        m,
+        v,
+    )
+    return new_params, {"m": m, "v": v, "t": t}

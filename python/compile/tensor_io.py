@@ -1,0 +1,75 @@
+"""GRTW bundle I/O — the binary tensor interchange format shared with the
+rust side (rust/src/util/tensor.rs implements the identical layout).
+
+Layout (little-endian):
+    magic   b"GRTW"
+    u32     version (1)
+    u32     tensor count
+    per tensor:
+        u16     name length, then utf-8 name bytes
+        u8      dtype (0 = f32, 1 = i32)
+        u8      ndim
+        u64*d   dims
+        bytes   row-major data
+"""
+
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+MAGIC = b"GRTW"
+
+_DTYPES = {0: np.float32, 1: np.int32}
+_DTYPE_CODES = {np.dtype(np.float32): 0, np.dtype(np.int32): 1}
+
+
+def write_bundle(path: str, tensors: dict[str, np.ndarray]) -> None:
+    """Write name→array mapping. Arrays must be float32 or int32."""
+    parts = [MAGIC, struct.pack("<II", 1, len(tensors))]
+    for name in sorted(tensors):
+        arr = np.ascontiguousarray(tensors[name])
+        code = _DTYPE_CODES.get(arr.dtype)
+        if code is None:
+            raise TypeError(f"{name}: unsupported dtype {arr.dtype}")
+        nb = name.encode("utf-8")
+        parts.append(struct.pack("<H", len(nb)))
+        parts.append(nb)
+        parts.append(struct.pack("<BB", code, arr.ndim))
+        for d in arr.shape:
+            parts.append(struct.pack("<Q", d))
+        parts.append(arr.tobytes())
+    with open(path, "wb") as f:
+        f.write(b"".join(parts))
+
+
+def read_bundle(path: str) -> dict[str, np.ndarray]:
+    with open(path, "rb") as f:
+        data = f.read()
+    off = 0
+
+    def take(n: int) -> bytes:
+        nonlocal off
+        if off + n > len(data):
+            raise ValueError(f"truncated bundle at offset {off}")
+        chunk = data[off : off + n]
+        off += n
+        return chunk
+
+    if take(4) != MAGIC:
+        raise ValueError("bad magic")
+    version, count = struct.unpack("<II", take(8))
+    if version != 1:
+        raise ValueError(f"unsupported version {version}")
+    out: dict[str, np.ndarray] = {}
+    for _ in range(count):
+        (name_len,) = struct.unpack("<H", take(2))
+        name = take(name_len).decode("utf-8")
+        dtype_code, ndim = struct.unpack("<BB", take(2))
+        dims = [struct.unpack("<Q", take(8))[0] for _ in range(ndim)]
+        dtype = _DTYPES[dtype_code]
+        numel = int(np.prod(dims)) if dims else 1
+        arr = np.frombuffer(take(numel * 4), dtype=dtype).reshape(dims)
+        out[name] = arr.copy()
+    return out

@@ -1,0 +1,126 @@
+"""Build-time training — trains the GraphSAGE classifier on a small
+multiplier (the paper trains on 8-bit) and writes the weight bundle the
+rust runtime and the AOT model consume.
+
+Run by `make artifacts` after `groot gen-dataset` has produced the
+training graphs. Python never runs at verification time.
+
+Usage:
+    python -m compile.train --data ../artifacts/datasets --stem csa8 \
+        --out ../artifacts/weights_csa8.bin [--epochs 400] [--eval-stem csa16]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import dataset as ds
+from . import model as M
+from . import tensor_io
+
+
+def train_on_graph(
+    graph: ds.GraphData,
+    epochs: int = 400,
+    lr: float = 1e-2,
+    seed: int = 0,
+    log_every: int = 50,
+    verbose: bool = True,
+):
+    """Full-batch Adam training; returns (params, final_train_acc)."""
+    n_bucket = ds.bucket_for(graph.n)
+    x, packed, labels, mask = graph.pack(n_bucket)
+    ld_cols, ld_w, hd_idx, hd_cols, hd_w = [jnp.asarray(t) for t in packed]
+    x, labels, mask = jnp.asarray(x), jnp.asarray(labels), jnp.asarray(mask)
+
+    params = M.init_params(seed)
+    opt = M.adam_init(params)
+
+    def loss_fn(params):
+        logits = M.sage_forward_train(x, ld_cols, ld_w, hd_idx, hd_cols, hd_w, params)
+        return M.cross_entropy_loss(logits, labels, mask), logits
+
+    @jax.jit
+    def step(params, opt):
+        (loss, logits), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        params, opt = M.adam_update(params, grads, opt, lr=lr)
+        acc = M.accuracy(logits, labels, mask)
+        return params, opt, loss, acc
+
+    t0 = time.time()
+    acc = 0.0
+    for epoch in range(epochs):
+        params, opt, loss, acc = step(params, opt)
+        if verbose and (epoch % log_every == 0 or epoch == epochs - 1):
+            print(
+                f"epoch {epoch:4d}  loss {float(loss):.4f}  "
+                f"train-acc {float(acc):.4f}  ({time.time()-t0:.1f}s)"
+            )
+    return params, float(acc)
+
+
+def gamora_features(features: np.ndarray) -> np.ndarray:
+    """GAMORA 3-dim re-encoding (mirrors rust EdaGraph::gamora_features),
+    zero-padded to 4 so the model shapes stay identical."""
+    t1, t0, pl, pr = features[:, 0], features[:, 1], features[:, 2], features[:, 3]
+    internal = ((t1 == 1.0) & (t0 == 1.0)).astype(np.float32)
+    out = np.zeros_like(features)
+    out[:, 0] = internal
+    out[:, 1] = pl
+    out[:, 2] = pr
+    return out
+
+
+def evaluate_on_graph(params, graph: ds.GraphData) -> float:
+    """Node accuracy of `params` on a (possibly larger) graph."""
+    n_bucket = ds.bucket_for(graph.n)
+    x, packed, labels, mask = graph.pack(n_bucket)
+    ld_cols, ld_w, hd_idx, hd_cols, hd_w = [jnp.asarray(t) for t in packed]
+    logits = M.sage_forward_train(
+        jnp.asarray(x), ld_cols, ld_w, hd_idx, hd_cols, hd_w, params
+    )
+    return float(M.accuracy(logits, jnp.asarray(labels), jnp.asarray(mask)))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--data", required=True, help="dataset directory")
+    ap.add_argument("--stem", default="csa8", help="training graph stem")
+    ap.add_argument("--out", required=True, help="output weights bundle")
+    ap.add_argument("--epochs", type=int, default=400)
+    ap.add_argument("--lr", type=float, default=1e-2)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--eval-stem", default=None, help="optional held-out graph")
+    ap.add_argument(
+        "--features",
+        default="groot",
+        choices=["groot", "gamora"],
+        help="gamora = drop the PI/PO type distinction (3-dim, zero-padded "
+        "to 4) — the feature ablation baseline",
+    )
+    args = ap.parse_args()
+
+    graph = ds.load_graph(args.data, args.stem)
+    if args.features == "gamora":
+        graph.features = gamora_features(graph.features)
+    print(f"training on {args.stem}: {graph.n} nodes, {len(graph.edges)} edges")
+    params, train_acc = train_on_graph(
+        graph, epochs=args.epochs, lr=args.lr, seed=args.seed
+    )
+    print(f"final train accuracy: {train_acc:.4f}")
+    if args.eval_stem:
+        held = ds.load_graph(args.data, args.eval_stem)
+        acc = evaluate_on_graph(params, held)
+        print(f"held-out accuracy on {args.eval_stem} ({held.n} nodes): {acc:.4f}")
+
+    tensor_io.write_bundle(args.out, M.params_to_bundle(params))
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+//! Bench: regenerate Fig. 10 (verification time vs ABC / GAMORA).
+fn main() {
+    let quick = std::env::var("GROOT_QUICK").is_ok();
+    groot::harness::runtime::fig10("artifacts/weights_csa8.bin", quick).expect("fig10");
+}

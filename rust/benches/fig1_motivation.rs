@@ -1,0 +1,4 @@
+//! Bench: regenerate Fig. 1a (memory motivation). `cargo bench --bench fig1_motivation`
+fn main() {
+    groot::harness::memory::fig1a().expect("fig1a harness");
+}

@@ -1,0 +1,11 @@
+//! Bench: regenerate Fig. 6a–d (accuracy vs #partitions, ± re-growth).
+//! Honors GROOT_QUICK=1 for a fast pass.
+use groot::datasets::DatasetKind;
+fn main() {
+    let quick = std::env::var("GROOT_QUICK").is_ok();
+    let w = "artifacts/weights_csa8.bin";
+    groot::harness::accuracy::fig6(w, DatasetKind::Csa, 1, quick).expect("fig6a");
+    groot::harness::accuracy::fig6(w, DatasetKind::Csa, 4, quick).expect("fig6b");
+    groot::harness::accuracy::fig6(w, DatasetKind::Booth, 1, quick).expect("fig6c");
+    groot::harness::accuracy::fig6(w, DatasetKind::Mapped7nm, 1, quick).expect("fig6d");
+}

@@ -1,0 +1,10 @@
+//! Bench: regenerate Fig. 7 (FPGA dataset, 8-bit vs 64-bit training).
+fn main() {
+    let quick = std::env::var("GROOT_QUICK").is_ok();
+    groot::harness::accuracy::fig7(
+        "artifacts/weights_csa8.bin",
+        "artifacts/weights_fpga64.bin",
+        quick,
+    )
+    .expect("fig7");
+}

@@ -1,0 +1,5 @@
+//! Bench: regenerate Fig. 8 (memory vs #partitions, four datasets).
+fn main() {
+    let quick = std::env::var("GROOT_QUICK").is_ok();
+    groot::harness::memory::fig8(quick).expect("fig8");
+}

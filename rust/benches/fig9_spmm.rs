@@ -1,0 +1,5 @@
+//! Bench: regenerate Fig. 9 (SpMM kernel comparison).
+fn main() {
+    let quick = std::env::var("GROOT_QUICK").is_ok();
+    groot::harness::runtime::fig9(quick).expect("fig9");
+}

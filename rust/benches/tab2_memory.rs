@@ -1,0 +1,4 @@
+//! Bench: regenerate Table II (large multiplier memory comparison).
+fn main() {
+    groot::harness::memory::tab2().expect("tab2");
+}

@@ -1,0 +1,143 @@
+//! Adder building blocks: half/full adders, ripple-carry chains, and
+//! carry-save reduction — the arithmetic substrate all multiplier
+//! generators share.
+
+use super::{Aig, Lit, LIT_FALSE};
+
+/// Half adder: returns (sum, carry).
+pub fn half_adder(g: &mut Aig, a: Lit, b: Lit) -> (Lit, Lit) {
+    let s = g.xor(a, b);
+    let c = g.and(a, b);
+    (s, c)
+}
+
+/// Full adder: returns (sum, carry). Shares the inner a⊕b between sum and
+/// carry, the canonical FA shape that the XOR3/MAJ labeler recognizes.
+pub fn full_adder(g: &mut Aig, a: Lit, b: Lit, c: Lit) -> (Lit, Lit) {
+    let s = g.xor3(a, b, c);
+    let co = g.maj(a, b, c);
+    (s, co)
+}
+
+/// Ripple-carry adder over equal-width operands with carry-in.
+/// Returns `width+1` sum bits (last = carry-out).
+pub fn ripple_adder(g: &mut Aig, a: &[Lit], b: &[Lit], mut cin: Lit) -> Vec<Lit> {
+    assert_eq!(a.len(), b.len());
+    let mut out = Vec::with_capacity(a.len() + 1);
+    for i in 0..a.len() {
+        let (s, c) = full_adder(g, a[i], b[i], cin);
+        out.push(s);
+        cin = c;
+    }
+    out.push(cin);
+    out
+}
+
+/// Carry-save (3:2) compression of three equal-width rows into
+/// (sums, carries) where carries are already shifted left by one
+/// (i.e. `carries[0]` corresponds to bit position 1).
+pub fn carry_save_row(g: &mut Aig, a: &[Lit], b: &[Lit], c: &[Lit]) -> (Vec<Lit>, Vec<Lit>) {
+    assert!(a.len() == b.len() && b.len() == c.len());
+    let mut sums = Vec::with_capacity(a.len());
+    let mut carries = Vec::with_capacity(a.len());
+    for i in 0..a.len() {
+        let (s, co) = full_adder(g, a[i], b[i], c[i]);
+        sums.push(s);
+        carries.push(co);
+    }
+    (sums, carries)
+}
+
+/// Pad a bit-vector to `width` with constant-false literals.
+pub fn zero_extend(bits: &[Lit], width: usize) -> Vec<Lit> {
+    let mut out = bits.to_vec();
+    while out.len() < width {
+        out.push(LIT_FALSE);
+    }
+    out
+}
+
+/// Shift a bit-vector left by `k` (LSB-first), appending zeros at the bottom.
+pub fn shift_left(bits: &[Lit], k: usize) -> Vec<Lit> {
+    let mut out = vec![LIT_FALSE; k];
+    out.extend_from_slice(bits);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aig::sim::eval_bool;
+    use crate::aig::Aig;
+
+    #[test]
+    fn full_adder_exhaustive() {
+        let mut g = Aig::new("fa");
+        let a = g.pi();
+        let b = g.pi();
+        let c = g.pi();
+        let (s, co) = full_adder(&mut g, a, b, c);
+        g.po("s", s);
+        g.po("co", co);
+        for v in 0..8u32 {
+            let ins: Vec<bool> = (0..3).map(|i| v & (1 << i) != 0).collect();
+            let out = eval_bool(&g, &ins);
+            let total = ins.iter().filter(|&&x| x).count();
+            assert_eq!(out[0], total % 2 == 1);
+            assert_eq!(out[1], total >= 2);
+        }
+    }
+
+    #[test]
+    fn ripple_adder_exhaustive_4bit() {
+        let mut g = Aig::new("rca");
+        let a: Vec<Lit> = (0..4).map(|_| g.pi()).collect();
+        let b: Vec<Lit> = (0..4).map(|_| g.pi()).collect();
+        let sum = ripple_adder(&mut g, &a, &b, LIT_FALSE);
+        for (i, &s) in sum.iter().enumerate() {
+            g.po(format!("s{i}"), s);
+        }
+        for va in 0..16u32 {
+            for vb in 0..16u32 {
+                let mut ins = Vec::new();
+                for i in 0..4 {
+                    ins.push(va & (1 << i) != 0);
+                }
+                for i in 0..4 {
+                    ins.push(vb & (1 << i) != 0);
+                }
+                let out = eval_bool(&g, &ins);
+                let got: u32 = out
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &b)| (b as u32) << i)
+                    .sum();
+                assert_eq!(got, va + vb, "{va}+{vb}");
+            }
+        }
+    }
+
+    #[test]
+    fn carry_save_preserves_sum() {
+        let mut g = Aig::new("csa");
+        let rows: Vec<Vec<Lit>> = (0..3).map(|_| (0..3).map(|_| g.pi()).collect()).collect();
+        let (s, c) = carry_save_row(&mut g, &rows[0], &rows[1], &rows[2]);
+        for (i, &x) in s.iter().enumerate() {
+            g.po(format!("s{i}"), x);
+        }
+        for (i, &x) in c.iter().enumerate() {
+            g.po(format!("c{i}"), x);
+        }
+        for v in 0..512u32 {
+            let ins: Vec<bool> = (0..9).map(|i| v & (1 << i) != 0).collect();
+            let out = eval_bool(&g, &ins);
+            let val = |bits: &[bool]| -> u32 {
+                bits.iter().enumerate().map(|(i, &b)| (b as u32) << i).sum()
+            };
+            let (r0, r1, r2) = (v & 7, (v >> 3) & 7, (v >> 6) & 7);
+            let sums = val(&out[0..3]);
+            let carries = val(&out[3..6]) << 1;
+            assert_eq!(sums + carries, r0 + r1 + r2);
+        }
+    }
+}

@@ -1,0 +1,385 @@
+//! And-Inverter Graph (AIG) core — the circuit substrate.
+//!
+//! The paper uses ABC to turn netlists into AIGs; this module is our ABC
+//! substitute: a structurally-hashed AIG with the usual constructor algebra
+//! (and/or/xor/mux/maj, adders in [`adders`]), generator frontends for the
+//! paper's datasets (CSA array multipliers in [`mult`], radix-4 Booth in
+//! [`booth`]), 64-way bit-parallel simulation in [`sim`], and AIGER I/O in
+//! [`aiger`].
+//!
+//! Representation: nodes are numbered 0..n, node 0 is constant FALSE.
+//! A *literal* is `node_id << 1 | complement`. AND nodes are created in
+//! topological order (fanins always precede), so iteration over node ids is
+//! a topological traversal — every downstream pass relies on this.
+
+pub mod adders;
+pub mod aiger;
+pub mod booth;
+pub mod mult;
+pub mod sim;
+pub mod wallace;
+
+use std::collections::HashMap;
+
+/// A literal: AIG node id with a complement bit in the LSB.
+pub type Lit = u32;
+
+/// Constant false / true literals (node 0).
+pub const LIT_FALSE: Lit = 0;
+pub const LIT_TRUE: Lit = 1;
+
+#[inline]
+pub fn lit(var: u32, compl: bool) -> Lit {
+    (var << 1) | compl as u32
+}
+#[inline]
+pub fn lit_var(l: Lit) -> u32 {
+    l >> 1
+}
+#[inline]
+pub fn lit_compl(l: Lit) -> bool {
+    l & 1 != 0
+}
+#[inline]
+pub fn lit_not(l: Lit) -> Lit {
+    l ^ 1
+}
+
+/// Node kinds stored per id.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NodeKind {
+    /// Constant false (id 0 only).
+    Const,
+    /// Primary input with its PI index.
+    Pi(u32),
+    /// Two-input AND; fanins are literals.
+    And,
+}
+
+/// A named primary output driven by a literal.
+#[derive(Clone, Debug)]
+pub struct Output {
+    pub name: String,
+    pub lit: Lit,
+}
+
+/// Structurally-hashed And-Inverter Graph.
+#[derive(Clone, Debug, Default)]
+pub struct Aig {
+    kinds: Vec<NodeKind>,
+    fanin0: Vec<Lit>,
+    fanin1: Vec<Lit>,
+    pis: Vec<u32>,
+    pub outputs: Vec<Output>,
+    strash: HashMap<(Lit, Lit), u32>,
+    pub name: String,
+}
+
+impl Aig {
+    pub fn new(name: impl Into<String>) -> Self {
+        let mut a = Aig { name: name.into(), ..Default::default() };
+        a.kinds.push(NodeKind::Const);
+        a.fanin0.push(LIT_FALSE);
+        a.fanin1.push(LIT_FALSE);
+        a
+    }
+
+    /// Number of nodes (const + PIs + ANDs).
+    pub fn num_nodes(&self) -> usize {
+        self.kinds.len()
+    }
+
+    pub fn num_pis(&self) -> usize {
+        self.pis.len()
+    }
+
+    pub fn num_ands(&self) -> usize {
+        self.kinds.len() - 1 - self.pis.len()
+    }
+
+    pub fn num_outputs(&self) -> usize {
+        self.outputs.len()
+    }
+
+    pub fn kind(&self, id: u32) -> NodeKind {
+        self.kinds[id as usize]
+    }
+
+    pub fn is_and(&self, id: u32) -> bool {
+        matches!(self.kinds[id as usize], NodeKind::And)
+    }
+
+    pub fn is_pi(&self, id: u32) -> bool {
+        matches!(self.kinds[id as usize], NodeKind::Pi(_))
+    }
+
+    /// Fanin literals of an AND node.
+    pub fn fanins(&self, id: u32) -> (Lit, Lit) {
+        debug_assert!(self.is_and(id));
+        (self.fanin0[id as usize], self.fanin1[id as usize])
+    }
+
+    /// All PI node ids in PI order.
+    pub fn pi_ids(&self) -> &[u32] {
+        &self.pis
+    }
+
+    /// Create a new primary input, returning its (positive) literal.
+    pub fn pi(&mut self) -> Lit {
+        let id = self.kinds.len() as u32;
+        self.kinds.push(NodeKind::Pi(self.pis.len() as u32));
+        self.fanin0.push(LIT_FALSE);
+        self.fanin1.push(LIT_FALSE);
+        self.pis.push(id);
+        lit(id, false)
+    }
+
+    /// Create `n` primary inputs.
+    pub fn pis_n(&mut self, n: usize) -> Vec<Lit> {
+        (0..n).map(|_| self.pi()).collect()
+    }
+
+    /// Register a primary output.
+    pub fn po(&mut self, name: impl Into<String>, l: Lit) {
+        self.outputs.push(Output { name: name.into(), lit: l });
+    }
+
+    /// Structurally-hashed AND with constant/idempotence simplification —
+    /// the same one-level rules ABC applies on construction.
+    pub fn and(&mut self, a: Lit, b: Lit) -> Lit {
+        // Normalize order for hashing.
+        let (a, b) = if a <= b { (a, b) } else { (b, a) };
+        // Trivial cases.
+        if a == LIT_FALSE {
+            return LIT_FALSE;
+        }
+        if a == LIT_TRUE {
+            return b;
+        }
+        if a == b {
+            return a;
+        }
+        if a == lit_not(b) {
+            return LIT_FALSE;
+        }
+        if let Some(&id) = self.strash.get(&(a, b)) {
+            return lit(id, false);
+        }
+        let id = self.kinds.len() as u32;
+        self.kinds.push(NodeKind::And);
+        self.fanin0.push(a);
+        self.fanin1.push(b);
+        self.strash.insert((a, b), id);
+        lit(id, false)
+    }
+
+    pub fn not(&self, l: Lit) -> Lit {
+        lit_not(l)
+    }
+
+    pub fn or(&mut self, a: Lit, b: Lit) -> Lit {
+        let n = self.and(lit_not(a), lit_not(b));
+        lit_not(n)
+    }
+
+    pub fn nand(&mut self, a: Lit, b: Lit) -> Lit {
+        lit_not(self.and(a, b))
+    }
+
+    pub fn nor(&mut self, a: Lit, b: Lit) -> Lit {
+        let o = self.or(a, b);
+        lit_not(o)
+    }
+
+    /// XOR built the way ABC's strashed miters do: (a·¬b) + (¬a·b).
+    pub fn xor(&mut self, a: Lit, b: Lit) -> Lit {
+        let t0 = self.and(a, lit_not(b));
+        let t1 = self.and(lit_not(a), b);
+        self.or(t0, t1)
+    }
+
+    pub fn xnor(&mut self, a: Lit, b: Lit) -> Lit {
+        lit_not(self.xor(a, b))
+    }
+
+    /// 3-input XOR (full-adder sum), sharing the inner xor.
+    pub fn xor3(&mut self, a: Lit, b: Lit, c: Lit) -> Lit {
+        let ab = self.xor(a, b);
+        self.xor(ab, c)
+    }
+
+    /// 3-input majority (full-adder carry): ab + c(a⊕b) — the shape that
+    /// shares the inner XOR with `xor3`, as FA synthesis produces.
+    pub fn maj(&mut self, a: Lit, b: Lit, c: Lit) -> Lit {
+        let ab = self.and(a, b);
+        let axb = self.xor(a, b);
+        let cx = self.and(c, axb);
+        self.or(ab, cx)
+    }
+
+    /// Majority in its symmetric sum-of-products shape ab + ac + bc.
+    pub fn maj_sop(&mut self, a: Lit, b: Lit, c: Lit) -> Lit {
+        let ab = self.and(a, b);
+        let ac = self.and(a, c);
+        let bc = self.and(b, c);
+        let o = self.or(ab, ac);
+        self.or(o, bc)
+    }
+
+    /// If-then-else mux: s ? t : e.
+    pub fn mux(&mut self, s: Lit, t: Lit, e: Lit) -> Lit {
+        let st = self.and(s, t);
+        let se = self.and(lit_not(s), e);
+        self.or(st, se)
+    }
+
+    /// AND over a slice (balanced tree to keep depth logarithmic).
+    pub fn and_many(&mut self, xs: &[Lit]) -> Lit {
+        match xs.len() {
+            0 => LIT_TRUE,
+            1 => xs[0],
+            _ => {
+                let mid = xs.len() / 2;
+                let l = self.and_many(&xs[..mid]);
+                let r = self.and_many(&xs[mid..]);
+                self.and(l, r)
+            }
+        }
+    }
+
+    pub fn or_many(&mut self, xs: &[Lit]) -> Lit {
+        let inv: Vec<Lit> = xs.iter().map(|&l| lit_not(l)).collect();
+        lit_not(self.and_many(&inv))
+    }
+
+    /// Total number of edges in the EDA-graph view: 2 per AND + 1 per PO.
+    pub fn num_graph_edges(&self) -> usize {
+        2 * self.num_ands() + self.num_outputs()
+    }
+
+    /// Check structural invariants (fanins precede, literals in range).
+    pub fn check(&self) -> anyhow::Result<()> {
+        for id in 0..self.kinds.len() as u32 {
+            if self.is_and(id) {
+                let (f0, f1) = self.fanins(id);
+                anyhow::ensure!(lit_var(f0) < id, "fanin0 of {id} not topological");
+                anyhow::ensure!(lit_var(f1) < id, "fanin1 of {id} not topological");
+            }
+        }
+        for o in &self.outputs {
+            anyhow::ensure!(
+                (lit_var(o.lit) as usize) < self.kinds.len(),
+                "output {} literal out of range",
+                o.name
+            );
+        }
+        Ok(())
+    }
+
+    /// Fanout counts per node in the EDA-graph view (AND fanins + PO edges).
+    pub fn fanout_counts(&self) -> Vec<u32> {
+        let mut fo = vec![0u32; self.num_nodes()];
+        for id in 0..self.num_nodes() as u32 {
+            if self.is_and(id) {
+                let (f0, f1) = self.fanins(id);
+                fo[lit_var(f0) as usize] += 1;
+                fo[lit_var(f1) as usize] += 1;
+            }
+        }
+        for o in &self.outputs {
+            fo[lit_var(o.lit) as usize] += 1;
+        }
+        fo
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn const_simplifications() {
+        let mut g = Aig::new("t");
+        let a = g.pi();
+        assert_eq!(g.and(a, LIT_FALSE), LIT_FALSE);
+        assert_eq!(g.and(LIT_TRUE, a), a);
+        assert_eq!(g.and(a, a), a);
+        assert_eq!(g.and(a, lit_not(a)), LIT_FALSE);
+    }
+
+    #[test]
+    fn structural_hashing_dedups() {
+        let mut g = Aig::new("t");
+        let a = g.pi();
+        let b = g.pi();
+        let x = g.and(a, b);
+        let y = g.and(b, a);
+        assert_eq!(x, y);
+        assert_eq!(g.num_ands(), 1);
+    }
+
+    #[test]
+    fn xor_truth_table() {
+        let mut g = Aig::new("t");
+        let a = g.pi();
+        let b = g.pi();
+        let x = g.xor(a, b);
+        g.po("x", x);
+        for (va, vb) in [(false, false), (false, true), (true, false), (true, true)] {
+            let out = sim::eval_bool(&g, &[va, vb]);
+            assert_eq!(out[0], va ^ vb, "a={va} b={vb}");
+        }
+    }
+
+    #[test]
+    fn maj_and_mux_truth_tables() {
+        let mut g = Aig::new("t");
+        let a = g.pi();
+        let b = g.pi();
+        let c = g.pi();
+        let m = g.maj(a, b, c);
+        let ms = g.maj_sop(a, b, c);
+        let x3 = g.xor3(a, b, c);
+        let mx = g.mux(a, b, c);
+        g.po("maj", m);
+        g.po("maj_sop", ms);
+        g.po("xor3", x3);
+        g.po("mux", mx);
+        for v in 0..8u32 {
+            let (va, vb, vc) = (v & 1 != 0, v & 2 != 0, v & 4 != 0);
+            let out = sim::eval_bool(&g, &[va, vb, vc]);
+            let maj = (va & vb) | (va & vc) | (vb & vc);
+            assert_eq!(out[0], maj);
+            assert_eq!(out[1], maj);
+            assert_eq!(out[2], va ^ vb ^ vc);
+            assert_eq!(out[3], if va { vb } else { vc });
+        }
+    }
+
+    #[test]
+    fn and_or_many() {
+        let mut g = Aig::new("t");
+        let xs: Vec<Lit> = (0..5).map(|_| g.pi()).collect();
+        let all = g.and_many(&xs);
+        let any = g.or_many(&xs);
+        g.po("all", all);
+        g.po("any", any);
+        for v in 0..32u32 {
+            let ins: Vec<bool> = (0..5).map(|i| v & (1 << i) != 0).collect();
+            let out = sim::eval_bool(&g, &ins);
+            assert_eq!(out[0], ins.iter().all(|&x| x));
+            assert_eq!(out[1], ins.iter().any(|&x| x));
+        }
+    }
+
+    #[test]
+    fn invariants_hold() {
+        let mut g = Aig::new("t");
+        let a = g.pi();
+        let b = g.pi();
+        let c = g.xor(a, b);
+        g.po("c", c);
+        g.check().unwrap();
+        assert_eq!(g.num_graph_edges(), 2 * g.num_ands() + 1);
+    }
+}

@@ -1,0 +1,127 @@
+//! Bit-parallel AIG simulation.
+//!
+//! 64 input patterns are evaluated per pass using one `u64` word per node.
+//! Used by tests to check generator correctness against software big-integer
+//! multiplication, and by the labeler's sanity oracles.
+
+use super::{lit_compl, lit_var, Aig, NodeKind};
+
+/// Evaluate all outputs for a single boolean input assignment.
+pub fn eval_bool(aig: &Aig, inputs: &[bool]) -> Vec<bool> {
+    let words: Vec<u64> = inputs.iter().map(|&b| if b { !0u64 } else { 0 }).collect();
+    let out = eval_u64(aig, &words);
+    out.iter().map(|&w| w & 1 != 0).collect()
+}
+
+/// Evaluate all outputs over 64 parallel patterns; `inputs[i]` holds the
+/// 64 values of PI i (bit k = pattern k).
+pub fn eval_u64(aig: &Aig, inputs: &[u64]) -> Vec<u64> {
+    assert_eq!(inputs.len(), aig.num_pis(), "input width mismatch");
+    let vals = node_values_u64(aig, inputs);
+    aig.outputs
+        .iter()
+        .map(|o| {
+            let v = vals[lit_var(o.lit) as usize];
+            if lit_compl(o.lit) {
+                !v
+            } else {
+                v
+            }
+        })
+        .collect()
+}
+
+/// Per-node simulation values over 64 parallel patterns.
+pub fn node_values_u64(aig: &Aig, inputs: &[u64]) -> Vec<u64> {
+    let n = aig.num_nodes();
+    let mut vals = vec![0u64; n];
+    for id in 0..n as u32 {
+        match aig.kind(id) {
+            NodeKind::Const => vals[id as usize] = 0,
+            NodeKind::Pi(k) => vals[id as usize] = inputs[k as usize],
+            NodeKind::And => {
+                let (f0, f1) = aig.fanins(id);
+                let a = vals[lit_var(f0) as usize] ^ if lit_compl(f0) { !0 } else { 0 };
+                let b = vals[lit_var(f1) as usize] ^ if lit_compl(f1) { !0 } else { 0 };
+                vals[id as usize] = a & b;
+            }
+        }
+    }
+    vals
+}
+
+/// Interpret a slice of output values (LSB-first bit order) for pattern
+/// `pat` (0..64) as an unsigned big integer, returned as u64 words.
+pub fn outputs_as_words(out_bits: &[u64], pat: usize) -> Vec<u64> {
+    let nbits = out_bits.len();
+    let nwords = nbits.div_ceil(64);
+    let mut words = vec![0u64; nwords.max(1)];
+    for (i, &w) in out_bits.iter().enumerate() {
+        if (w >> pat) & 1 != 0 {
+            words[i / 64] |= 1u64 << (i % 64);
+        }
+    }
+    words
+}
+
+/// Build 64 random input patterns for `n` PIs.
+pub fn random_patterns(n: usize, rng: &mut crate::util::rng::Rng) -> Vec<u64> {
+    (0..n).map(|_| rng.next_u64()).collect()
+}
+
+/// Extract PI values (LSB-first within the given range) for pattern `pat`
+/// as u64 words — used to reconstruct the integer operands fed to a
+/// multiplier under simulation.
+pub fn inputs_as_words(inputs: &[u64], range: std::ops::Range<usize>, pat: usize) -> Vec<u64> {
+    let nbits = range.len();
+    let nwords = nbits.div_ceil(64);
+    let mut words = vec![0u64; nwords.max(1)];
+    for (k, i) in range.enumerate() {
+        if (inputs[i] >> pat) & 1 != 0 {
+            words[k / 64] |= 1u64 << (k % 64);
+        }
+    }
+    words
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aig::Aig;
+
+    #[test]
+    fn parallel_sim_matches_bool_sim() {
+        let mut g = Aig::new("t");
+        let a = g.pi();
+        let b = g.pi();
+        let c = g.pi();
+        let x = g.xor3(a, b, c);
+        let m = g.maj(a, b, c);
+        g.po("x", x);
+        g.po("m", m);
+
+        // 8 exhaustive patterns packed into one word.
+        let mut ins = vec![0u64; 3];
+        for v in 0..8u64 {
+            for i in 0..3 {
+                if v & (1 << i) != 0 {
+                    ins[i] |= 1 << v;
+                }
+            }
+        }
+        let out = eval_u64(&g, &ins);
+        for v in 0..8usize {
+            let bools: Vec<bool> = (0..3).map(|i| v & (1 << i) != 0).collect();
+            let expect = eval_bool(&g, &bools);
+            assert_eq!((out[0] >> v) & 1 != 0, expect[0]);
+            assert_eq!((out[1] >> v) & 1 != 0, expect[1]);
+        }
+    }
+
+    #[test]
+    fn words_roundtrip() {
+        let bits = [0u64, !0u64, 0u64, !0u64]; // pattern-independent 0101
+        let w = outputs_as_words(&bits, 17);
+        assert_eq!(w, vec![0b1010]);
+    }
+}

@@ -1,0 +1,83 @@
+//! Wallace-tree multiplier generator — an extra dataset family used by the
+//! ablation benches (not in the paper's evaluation, but exercised by the
+//! harness to show GROOT generalizes across reduction-tree topologies).
+
+use super::booth::reduce_rows;
+use super::{Aig, Lit, LIT_FALSE};
+
+/// Generate an n×n unsigned Wallace-tree multiplier.
+/// PIs: a[0..n] then b[0..n]; POs m[0..2n].
+pub fn wallace_multiplier(n: usize) -> Aig {
+    assert!(n >= 1);
+    let mut g = Aig::new(format!("wallace_mult_{n}"));
+    let a = g.pis_n(n);
+    let b = g.pis_n(n);
+    let w = 2 * n;
+    if n == 1 {
+        let p = g.and(a[0], b[0]);
+        g.po("m0", p);
+        g.po("m1", LIT_FALSE);
+        return g;
+    }
+    // All partial products as sparse rows, reduced with the shared
+    // column-wise 3:2 compressor tree.
+    let mut rows: Vec<Vec<(usize, Lit)>> = Vec::new();
+    for (i, &bi) in b.iter().enumerate() {
+        let row = a
+            .iter()
+            .enumerate()
+            .map(|(j, &aj)| {
+                let p = g.and(aj, bi);
+                (i + j, p)
+            })
+            .collect();
+        rows.push(row);
+    }
+    let m = reduce_rows(&mut g, rows, w);
+    for (i, &bit) in m.iter().enumerate() {
+        g.po(format!("m{i}"), bit);
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aig::sim::eval_bool;
+
+    #[test]
+    fn exhaustive_small_widths() {
+        for n in 1..=4usize {
+            let g = wallace_multiplier(n);
+            g.check().unwrap();
+            for va in 0..(1u32 << n) {
+                for vb in 0..(1u32 << n) {
+                    let mut ins = Vec::new();
+                    for i in 0..n {
+                        ins.push(va & (1 << i) != 0);
+                    }
+                    for i in 0..n {
+                        ins.push(vb & (1 << i) != 0);
+                    }
+                    let out = eval_bool(&g, &ins);
+                    let got: u64 = out
+                        .iter()
+                        .enumerate()
+                        .map(|(i, &b)| (b as u64) << i)
+                        .sum();
+                    assert_eq!(got, (va as u64) * (vb as u64), "n={n} {va}*{vb}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn shallower_than_array() {
+        // Wallace trees have logarithmic reduction depth; just check the
+        // generator builds and is in the same node-count ballpark as CSA.
+        let w = wallace_multiplier(16);
+        let c = crate::aig::mult::csa_multiplier(16);
+        let ratio = w.num_ands() as f64 / c.num_ands() as f64;
+        assert!((0.5..2.0).contains(&ratio), "ratio {ratio}");
+    }
+}

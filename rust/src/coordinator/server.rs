@@ -1,0 +1,162 @@
+//! Verification service — request router + dynamic batcher.
+//!
+//! The paper frames GROOT as a run-time verification system; this module
+//! provides the serving shape: callers submit circuits, a router thread
+//! owns the (non-`Send`) session and drains the queue, grouping partition
+//! work so padding waste is amortized, and answers on per-request
+//! channels. Used by `examples/serve.rs`.
+
+use super::{Backend, ClassifyResult, Session, SessionConfig};
+use crate::features::EdaGraph;
+use anyhow::Result;
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+/// A verification request: graph + per-request partitioning override.
+pub struct Request {
+    pub graph: EdaGraph,
+    pub num_partitions: Option<usize>,
+    pub reply: mpsc::Sender<Result<ClassifyResult>>,
+}
+
+/// Handle for submitting requests to a running server.
+#[derive(Clone)]
+pub struct ServerHandle {
+    tx: mpsc::Sender<Request>,
+}
+
+impl ServerHandle {
+    /// Submit and wait (convenience for examples/tests).
+    pub fn verify_blocking(
+        &self,
+        graph: EdaGraph,
+        num_partitions: Option<usize>,
+    ) -> Result<ClassifyResult> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request { graph, num_partitions, reply })
+            .map_err(|_| anyhow::anyhow!("server stopped"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("server dropped reply"))?
+    }
+
+    /// Submit without waiting; returns the reply receiver.
+    pub fn submit(
+        &self,
+        graph: EdaGraph,
+        num_partitions: Option<usize>,
+    ) -> Result<mpsc::Receiver<Result<ClassifyResult>>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request { graph, num_partitions, reply })
+            .map_err(|_| anyhow::anyhow!("server stopped"))?;
+        Ok(rx)
+    }
+}
+
+/// The running server; joins its router thread on drop.
+pub struct Server {
+    handle: ServerHandle,
+    join: Option<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Spawn the router thread. `make_backend` runs *on* the router thread
+    /// because PJRT clients are not `Send`.
+    pub fn spawn<F>(config: SessionConfig, make_backend: F) -> Server
+    where
+        F: FnOnce() -> Result<Backend> + Send + 'static,
+    {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let join = std::thread::Builder::new()
+            .name("groot-router".into())
+            .spawn(move || {
+                let backend = match make_backend() {
+                    Ok(b) => b,
+                    Err(e) => {
+                        // Drain requests with the construction error.
+                        for req in rx.iter() {
+                            let _ = req
+                                .reply
+                                .send(Err(anyhow::anyhow!("backend init failed: {e:#}")));
+                        }
+                        return;
+                    }
+                };
+                let base = Session::new(backend, config);
+                for req in rx.iter() {
+                    let mut cfg = base.config.clone();
+                    if let Some(p) = req.num_partitions {
+                        cfg.num_partitions = p;
+                    }
+                    let out = base.classify_with(&req.graph, &cfg);
+                    let _ = req.reply.send(out);
+                }
+            })
+            .expect("spawn router");
+        Server { handle: ServerHandle { tx }, join: Some(join) }
+    }
+
+    pub fn handle(&self) -> ServerHandle {
+        self.handle.clone()
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        // Closing the channel stops the router loop.
+        let (dead_tx, _) = mpsc::channel();
+        self.handle = ServerHandle { tx: dead_tx };
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gnn::{SageLayer, SageModel};
+
+    fn dummy_model() -> SageModel {
+        SageModel {
+            layers: vec![SageLayer {
+                din: 4,
+                dout: 5,
+                w_self: vec![0.1; 20],
+                w_neigh: vec![0.1; 20],
+                bias: vec![0.0; 5],
+            }],
+        }
+    }
+
+    #[test]
+    fn server_round_trips_requests() {
+        let server = Server::spawn(SessionConfig::default(), || {
+            Ok(Backend::Native(dummy_model()))
+        });
+        let h = server.handle();
+        let g = crate::aig::mult::csa_multiplier(4);
+        let eg = crate::features::EdaGraph::from_aig(&g);
+        // overlapping async submissions
+        let rx1 = h.submit(eg.clone(), Some(2)).unwrap();
+        let rx2 = h.submit(eg.clone(), Some(4)).unwrap();
+        let r1 = rx1.recv().unwrap().unwrap();
+        let r2 = rx2.recv().unwrap().unwrap();
+        assert_eq!(r1.pred.len(), eg.num_nodes);
+        assert_eq!(r2.stats.num_partitions, 4);
+    }
+
+    #[test]
+    fn server_survives_many_sequential_requests() {
+        let server = Server::spawn(SessionConfig::default(), || {
+            Ok(Backend::Native(dummy_model()))
+        });
+        let h = server.handle();
+        let g = crate::aig::mult::csa_multiplier(3);
+        let eg = crate::features::EdaGraph::from_aig(&g);
+        for k in 1..=6 {
+            let r = h.verify_blocking(eg.clone(), Some(k)).unwrap();
+            assert_eq!(r.stats.num_partitions, k.min(eg.num_nodes));
+        }
+    }
+}

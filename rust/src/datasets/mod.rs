@@ -1,0 +1,129 @@
+//! Dataset registry — the four families the paper evaluates plus wallace
+//! for ablations. Single entry point for harnesses, the CLI, and the
+//! python training export.
+
+use crate::aig::{booth::booth_multiplier, mult::csa_multiplier, wallace::wallace_multiplier};
+use crate::features::EdaGraph;
+use crate::mapping::{map_cells, map_fpga};
+use anyhow::{bail, Result};
+use std::path::Path;
+
+/// The paper's dataset families.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DatasetKind {
+    /// Carry-save array multiplier (Figs 1, 6a/b, 8a/b, 10, Tab II).
+    Csa,
+    /// Radix-4 Booth multiplier (Figs 6c, 8c, 9).
+    Booth,
+    /// Wallace-tree multiplier (ablation extra).
+    Wallace,
+    /// Standard-cell mapped CSA — ASAP7 substitute (Figs 6d, 8d, 9).
+    Mapped7nm,
+    /// FPGA 4-LUT mapped CSA (Figs 7, 9).
+    Fpga4Lut,
+}
+
+impl DatasetKind {
+    pub fn parse(s: &str) -> Result<DatasetKind> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "csa" => DatasetKind::Csa,
+            "booth" => DatasetKind::Booth,
+            "wallace" => DatasetKind::Wallace,
+            "7nm" | "mapped" | "mapped7nm" | "techmap" => DatasetKind::Mapped7nm,
+            "fpga" | "fpga4lut" | "lut4" => DatasetKind::Fpga4Lut,
+            other => bail!("unknown dataset '{other}' (csa|booth|wallace|7nm|fpga)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DatasetKind::Csa => "csa",
+            DatasetKind::Booth => "booth",
+            DatasetKind::Wallace => "wallace",
+            DatasetKind::Mapped7nm => "7nm",
+            DatasetKind::Fpga4Lut => "fpga",
+        }
+    }
+
+    /// Stem used for on-disk dataset files, e.g. `csa8`, `fpga64`.
+    pub fn stem(&self, bits: usize) -> String {
+        format!("{}{}", self.name(), bits)
+    }
+}
+
+/// Build one EDA graph (features + ground-truth labels) for a dataset
+/// family at a bit width.
+pub fn build(kind: DatasetKind, bits: usize) -> Result<EdaGraph> {
+    Ok(match kind {
+        DatasetKind::Csa => EdaGraph::from_aig(&csa_multiplier(bits)),
+        DatasetKind::Booth => EdaGraph::from_aig(&booth_multiplier(bits)),
+        DatasetKind::Wallace => EdaGraph::from_aig(&wallace_multiplier(bits)),
+        DatasetKind::Mapped7nm => map_cells(&csa_multiplier(bits))?.to_eda_graph(),
+        DatasetKind::Fpga4Lut => map_fpga(&csa_multiplier(bits))?.to_eda_graph(),
+    })
+}
+
+/// Export a graph as the text triplet `python/compile/dataset.py` loads.
+pub fn export_text(graph: &EdaGraph, dir: &Path, stem: &str) -> Result<()> {
+    crate::aig::aiger::write_dataset_text(
+        dir,
+        stem,
+        &graph.features,
+        &graph.labels_u8(),
+        &graph.edges,
+    )
+}
+
+/// Build + export in one go; returns the graph for reporting.
+pub fn generate(kind: DatasetKind, bits: usize, dir: &Path) -> Result<EdaGraph> {
+    let g = build(kind, bits)?;
+    export_text(&g, dir, &kind.stem(bits))?;
+    Ok(g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_kinds_build_small() {
+        for kind in [
+            DatasetKind::Csa,
+            DatasetKind::Booth,
+            DatasetKind::Wallace,
+            DatasetKind::Mapped7nm,
+            DatasetKind::Fpga4Lut,
+        ] {
+            let g = build(kind, 4).unwrap();
+            g.check().unwrap();
+            assert!(g.num_nodes > 10, "{kind:?}");
+            assert!(g.num_edges() > 10, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn kind_parse_roundtrip() {
+        for (s, k) in [
+            ("csa", DatasetKind::Csa),
+            ("booth", DatasetKind::Booth),
+            ("7nm", DatasetKind::Mapped7nm),
+            ("fpga", DatasetKind::Fpga4Lut),
+        ] {
+            assert_eq!(DatasetKind::parse(s).unwrap(), k);
+        }
+        assert!(DatasetKind::parse("nope").is_err());
+    }
+
+    #[test]
+    fn export_and_shape() {
+        let dir = std::env::temp_dir().join("groot_ds_test");
+        let g = generate(DatasetKind::Csa, 3, &dir).unwrap();
+        let stem = DatasetKind::Csa.stem(3);
+        for ext in ["features", "labels", "edges"] {
+            let p = dir.join(format!("{stem}.{ext}.txt"));
+            assert!(p.exists(), "{}", p.display());
+        }
+        let lines = std::fs::read_to_string(dir.join(format!("{stem}.labels.txt"))).unwrap();
+        assert_eq!(lines.lines().count(), g.num_nodes);
+    }
+}

@@ -1,0 +1,306 @@
+//! EDA-graph construction with the paper's node features (§III-B).
+//!
+//! The AIG is turned into a directed graph whose nodes are {const, PIs,
+//! AND gates, POs} — POs are materialized as their own nodes, unlike
+//! GAMORA, which is one of GROOT's stated feature-engineering points.
+//! Each node carries a 4-dim feature vector encoding (node type, input
+//! edge polarities):
+//!
+//! | node | bits [t1 t0 pL pR] |
+//! |------|--------------------|
+//! | PI / const | 0 0 0 0 |
+//! | AND, both inputs plain | 1 1 0 0 |
+//! | AND, left inverted     | 1 1 1 0 |
+//! | AND, right inverted    | 1 1 0 1 |
+//! | AND, both inverted     | 1 1 1 1 |
+//! | PO, plain driver       | 0 1 0 0 |
+//! | PO, inverted driver    | 0 1 1 1 |
+//!
+//! Note: the paper's Fig. 3 encoding table is internally inconsistent
+//! (its PO type code '0X' collides with PI '00' and its example vector
+//! `0011` contradicts the prose); we use the unambiguous scheme above,
+//! which carries the identical information content. The GAMORA-style
+//! 3-feature encoding (no PI/PO distinction) is provided for the
+//! feature-ablation experiments.
+
+use crate::aig::{lit_compl, lit_var, Aig, NodeKind};
+use crate::labels::{label_aig_nodes, NodeClass};
+
+/// Feature dimensionality of the GROOT encoding.
+pub const GROOT_FEATURE_DIM: usize = 4;
+
+/// A verification-ready EDA graph: AIG nodes + PO nodes, directed edges
+/// fanin→node, features and ground-truth labels per node.
+#[derive(Clone, Debug)]
+pub struct EdaGraph {
+    pub name: String,
+    /// Total graph nodes = aig nodes + num POs.
+    pub num_nodes: usize,
+    /// Number of underlying AIG nodes (PO graph nodes start at this index).
+    pub num_aig_nodes: usize,
+    /// Directed edges (src, dst): AND fanins and PO drivers.
+    pub edges: Vec<(u32, u32)>,
+    /// GROOT 4-dim features.
+    pub features: Vec<[f32; GROOT_FEATURE_DIM]>,
+    /// Ground-truth class per node.
+    pub labels: Vec<NodeClass>,
+}
+
+impl EdaGraph {
+    /// Build from an AIG with ground-truth labels from the cut matcher.
+    pub fn from_aig(aig: &Aig) -> EdaGraph {
+        let aig_labels = label_aig_nodes(aig);
+        Self::from_aig_with_labels(aig, &aig_labels)
+    }
+
+    pub fn from_aig_with_labels(aig: &Aig, aig_labels: &[NodeClass]) -> EdaGraph {
+        let n_aig = aig.num_nodes();
+        let n_po = aig.num_outputs();
+        let num_nodes = n_aig + n_po;
+        let mut edges = Vec::with_capacity(2 * aig.num_ands() + n_po);
+        let mut features = vec![[0.0f32; GROOT_FEATURE_DIM]; num_nodes];
+        let mut labels = vec![NodeClass::Pi; num_nodes];
+
+        for id in 0..n_aig as u32 {
+            match aig.kind(id) {
+                NodeKind::Const | NodeKind::Pi(_) => {
+                    features[id as usize] = [0.0, 0.0, 0.0, 0.0];
+                    labels[id as usize] = NodeClass::Pi;
+                }
+                NodeKind::And => {
+                    let (f0, f1) = aig.fanins(id);
+                    edges.push((lit_var(f0), id));
+                    edges.push((lit_var(f1), id));
+                    features[id as usize] = [
+                        1.0,
+                        1.0,
+                        lit_compl(f0) as u8 as f32,
+                        lit_compl(f1) as u8 as f32,
+                    ];
+                    labels[id as usize] = aig_labels[id as usize];
+                }
+            }
+        }
+        for (k, o) in aig.outputs.iter().enumerate() {
+            let po_id = (n_aig + k) as u32;
+            let drv = lit_var(o.lit);
+            edges.push((drv, po_id));
+            let inv = lit_compl(o.lit) as u8 as f32;
+            features[po_id as usize] = [0.0, 1.0, inv, inv];
+            labels[po_id as usize] = NodeClass::Po;
+        }
+
+        EdaGraph {
+            name: aig.name.clone(),
+            num_nodes,
+            num_aig_nodes: n_aig,
+            edges,
+            features,
+            labels,
+        }
+    }
+
+    /// GAMORA-style 3-dim features: [is_internal, polL, polR] — drops the
+    /// PI/PO distinction the paper adds. Used by the ablation harness.
+    pub fn gamora_features(&self) -> Vec<[f32; 3]> {
+        self.features
+            .iter()
+            .map(|f| {
+                let internal = if f[0] == 1.0 && f[1] == 1.0 { 1.0 } else { 0.0 };
+                [internal, f[2], f[3]]
+            })
+            .collect()
+    }
+
+    /// Labels as raw u8 (paper's numeric classes).
+    pub fn labels_u8(&self) -> Vec<u8> {
+        self.labels.iter().map(|&l| l as u8).collect()
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Graph replicated `batch` times (disjoint copies) — the paper's
+    /// "batch size 16" workloads are 16 disjoint graph copies processed
+    /// together.
+    pub fn replicate(&self, batch: usize) -> EdaGraph {
+        assert!(batch >= 1);
+        if batch == 1 {
+            return self.clone();
+        }
+        let n = self.num_nodes;
+        let mut edges = Vec::with_capacity(self.edges.len() * batch);
+        let mut features = Vec::with_capacity(n * batch);
+        let mut labels = Vec::with_capacity(n * batch);
+        for b in 0..batch {
+            let off = (b * n) as u32;
+            edges.extend(self.edges.iter().map(|&(s, d)| (s + off, d + off)));
+            features.extend_from_slice(&self.features);
+            labels.extend_from_slice(&self.labels);
+        }
+        EdaGraph {
+            name: format!("{}_x{batch}", self.name),
+            num_nodes: n * batch,
+            num_aig_nodes: self.num_aig_nodes * batch, // per-copy layout preserved
+            edges,
+            features,
+            labels,
+        }
+    }
+
+    /// Batch replication with SHARED PI/const nodes: all copies read the
+    /// same input nodes, so PI fanout scales with the batch — this is
+    /// what creates the paper's high-degree "macro rows" (§IV: rows with
+    /// degree ≥ 512 in batched workloads) that the HD kernel exists for.
+    pub fn replicate_shared_inputs(&self, batch: usize) -> EdaGraph {
+        assert!(batch >= 1);
+        if batch == 1 {
+            return self.clone();
+        }
+        // Input nodes = nodes with PI features (label 4 covers const too).
+        let is_input: Vec<bool> = self
+            .labels
+            .iter()
+            .map(|&l| l == crate::labels::NodeClass::Pi)
+            .collect();
+        let num_inputs = is_input.iter().filter(|&&b| b).count();
+        // Map: input nodes keep one shared id; others replicate per copy.
+        let mut shared_id = vec![0u32; self.num_nodes];
+        let mut next = 0u32;
+        for (u, &inp) in is_input.iter().enumerate() {
+            if inp {
+                shared_id[u] = next;
+                next += 1;
+            }
+        }
+        let per_copy = self.num_nodes - num_inputs;
+        let mut local_id = vec![0u32; self.num_nodes];
+        let mut k = 0u32;
+        for (u, &inp) in is_input.iter().enumerate() {
+            if !inp {
+                local_id[u] = k;
+                k += 1;
+            }
+        }
+        let total = num_inputs + per_copy * batch;
+        let map = |u: usize, copy: usize| -> u32 {
+            if is_input[u] {
+                shared_id[u]
+            } else {
+                (num_inputs + copy * per_copy) as u32 + local_id[u]
+            }
+        };
+        let mut edges = Vec::with_capacity(self.edges.len() * batch);
+        let mut features = vec![[0.0f32; GROOT_FEATURE_DIM]; total];
+        let mut labels = vec![NodeClass::Pi; total];
+        for copy in 0..batch {
+            for &(s, d) in &self.edges {
+                edges.push((map(s as usize, copy), map(d as usize, copy)));
+            }
+            for u in 0..self.num_nodes {
+                let nu = map(u, copy) as usize;
+                features[nu] = self.features[u];
+                labels[nu] = self.labels[u];
+            }
+        }
+        EdaGraph {
+            name: format!("{}_shared_x{batch}", self.name),
+            num_nodes: total,
+            num_aig_nodes: total, // layout no longer AIG-prefixed
+            edges,
+            features,
+            labels,
+        }
+    }
+
+    /// Structural sanity checks used by integration tests.
+    pub fn check(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.features.len() == self.num_nodes);
+        anyhow::ensure!(self.labels.len() == self.num_nodes);
+        for &(s, d) in &self.edges {
+            anyhow::ensure!((s as usize) < self.num_nodes && (d as usize) < self.num_nodes);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aig::mult::csa_multiplier;
+    use crate::aig::Aig;
+
+    #[test]
+    fn two_bit_multiplier_graph_shape() {
+        let g = csa_multiplier(2);
+        let eg = EdaGraph::from_aig(&g);
+        eg.check().unwrap();
+        // nodes = const + 4 PIs + ANDs + 4 POs
+        assert_eq!(eg.num_nodes, g.num_nodes() + 4);
+        assert_eq!(eg.num_edges(), 2 * g.num_ands() + 4);
+        // PO nodes are labeled 0 and carry the PO feature code.
+        for k in 0..4 {
+            let po = eg.num_aig_nodes + k;
+            assert_eq!(eg.labels[po], NodeClass::Po);
+            assert_eq!(eg.features[po][0], 0.0);
+            assert_eq!(eg.features[po][1], 1.0);
+        }
+    }
+
+    #[test]
+    fn polarity_features_match_fanins() {
+        let mut g = Aig::new("t");
+        let a = g.pi();
+        let b = g.pi();
+        let x = g.and(a, crate::aig::lit_not(b));
+        g.po("x", x);
+        let eg = EdaGraph::from_aig(&g);
+        let id = crate::aig::lit_var(x) as usize;
+        // one inverted input → exactly one polarity bit set
+        assert_eq!(eg.features[id][0..2], [1.0, 1.0]);
+        assert_eq!(eg.features[id][2] + eg.features[id][3], 1.0);
+    }
+
+    #[test]
+    fn gamora_features_drop_po_distinction() {
+        let g = csa_multiplier(2);
+        let eg = EdaGraph::from_aig(&g);
+        let gf = eg.gamora_features();
+        // PI and PO rows become identical under GAMORA encoding (both
+        // non-internal, no polarity on PI; PO keeps polarity only).
+        let pi_row = gf[1];
+        assert_eq!(pi_row, [0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn shared_input_batching_creates_macro_rows() {
+        let g = csa_multiplier(8);
+        let eg = EdaGraph::from_aig(&g);
+        let b = eg.replicate_shared_inputs(16);
+        b.check().unwrap();
+        // PI degree scales ~16x: that's the HD macro-row population
+        let csr = crate::graph::Csr::symmetric_from_edges(b.num_nodes, &b.edges);
+        let base = crate::graph::Csr::symmetric_from_edges(eg.num_nodes, &eg.edges);
+        let max_b = (0..csr.num_nodes()).map(|u| csr.degree(u)).max().unwrap();
+        let max_1 = (0..base.num_nodes()).map(|u| base.degree(u)).max().unwrap();
+        assert!(max_b >= 8 * max_1, "batched max degree {max_b} vs {max_1}");
+        // node count: shared inputs counted once
+        assert!(b.num_nodes < 16 * eg.num_nodes);
+    }
+
+    #[test]
+    fn replicate_makes_disjoint_copies() {
+        let g = csa_multiplier(2);
+        let eg = EdaGraph::from_aig(&g);
+        let r = eg.replicate(3);
+        r.check().unwrap();
+        assert_eq!(r.num_nodes, 3 * eg.num_nodes);
+        assert_eq!(r.num_edges(), 3 * eg.num_edges());
+        // No edge crosses copies.
+        let n = eg.num_nodes as u32;
+        for &(s, d) in &r.edges {
+            assert_eq!(s / n, d / n);
+        }
+    }
+}

@@ -1,0 +1,210 @@
+//! Rust-native GraphSAGE inference — the GAMORA-like full-graph baseline
+//! and the numeric twin of the AOT model (used by tests to cross-check the
+//! PJRT runtime, and by the Fig. 10 harness as the "GAMORA" comparator).
+//!
+//! Matches `python/compile/model.py` exactly: mean aggregation over the
+//! symmetric adjacency, act(h·W_self + agg·W_neigh + b), ReLU on all but
+//! the last layer. The aggregation runs on the pluggable SpMM engines from
+//! [`crate::spmm`], which is how the Fig. 9 kernel comparison plugs into a
+//! real model workload.
+
+use crate::graph::Csr;
+use crate::spmm::SpmmEngine;
+use crate::util::tensor::Bundle;
+use anyhow::{Context, Result};
+
+/// One GraphSAGE layer's parameters (row-major [din × dout] weights).
+#[derive(Clone, Debug)]
+pub struct SageLayer {
+    pub din: usize,
+    pub dout: usize,
+    pub w_self: Vec<f32>,
+    pub w_neigh: Vec<f32>,
+    pub bias: Vec<f32>,
+}
+
+/// Whole model: layers in order; last layer emits logits (no ReLU).
+#[derive(Clone, Debug)]
+pub struct SageModel {
+    pub layers: Vec<SageLayer>,
+}
+
+impl SageModel {
+    /// Load from a GRTW weight bundle (names `l{i}.w_self` etc).
+    pub fn from_bundle(bundle: &Bundle) -> Result<SageModel> {
+        let mut layers = Vec::new();
+        for i in 0.. {
+            let Some(ws) = bundle.get(&format!("l{i}.w_self")) else {
+                break;
+            };
+            let wn = bundle
+                .get(&format!("l{i}.w_neigh"))
+                .with_context(|| format!("missing l{i}.w_neigh"))?;
+            let b = bundle
+                .get(&format!("l{i}.b"))
+                .with_context(|| format!("missing l{i}.b"))?;
+            anyhow::ensure!(ws.dims.len() == 2, "w_self must be 2-d");
+            let (din, dout) = (ws.dims[0], ws.dims[1]);
+            anyhow::ensure!(wn.dims == vec![din, dout], "w_neigh shape");
+            anyhow::ensure!(b.dims == vec![dout], "bias shape");
+            layers.push(SageLayer {
+                din,
+                dout,
+                w_self: ws.as_f32()?.to_vec(),
+                w_neigh: wn.as_f32()?.to_vec(),
+                bias: b.as_f32()?.to_vec(),
+            });
+        }
+        anyhow::ensure!(!layers.is_empty(), "bundle has no layers");
+        Ok(SageModel { layers })
+    }
+
+    pub fn input_dim(&self) -> usize {
+        self.layers[0].din
+    }
+
+    pub fn num_classes(&self) -> usize {
+        self.layers.last().unwrap().dout
+    }
+
+    /// Full-graph forward pass: features [n × input_dim] → logits
+    /// [n × num_classes]. Aggregation via the supplied SpMM engine.
+    pub fn forward(&self, csr: &Csr, features: &[f32], engine: &dyn SpmmEngine) -> Vec<f32> {
+        let n = csr.num_nodes();
+        assert_eq!(features.len(), n * self.input_dim());
+        let mut h = features.to_vec();
+        let mut dim = self.input_dim();
+        for (li, layer) in self.layers.iter().enumerate() {
+            let agg = engine.spmm_mean(csr, &h, dim);
+            let mut out = vec![0.0f32; n * layer.dout];
+            matmul_add(&h, &layer.w_self, &mut out, n, dim, layer.dout);
+            matmul_add(&agg, &layer.w_neigh, &mut out, n, dim, layer.dout);
+            for u in 0..n {
+                for d in 0..layer.dout {
+                    out[u * layer.dout + d] += layer.bias[d];
+                }
+            }
+            if li + 1 < self.layers.len() {
+                for v in out.iter_mut() {
+                    if *v < 0.0 {
+                        *v = 0.0;
+                    }
+                }
+            }
+            h = out;
+            dim = layer.dout;
+        }
+        h
+    }
+
+    /// Argmax class per node from a forward pass.
+    pub fn predict(&self, csr: &Csr, features: &[f32], engine: &dyn SpmmEngine) -> Vec<u8> {
+        let logits = self.forward(csr, features, engine);
+        argmax_rows(&logits, self.num_classes())
+    }
+}
+
+/// out += a[n×k] · b[k×m] (row-major), parallel over rows.
+pub fn matmul_add(a: &[f32], b: &[f32], out: &mut [f32], n: usize, k: usize, m: usize) {
+    use crate::util::pool::{default_threads, parallel_for_static, SendPtr};
+    assert_eq!(a.len(), n * k);
+    assert_eq!(b.len(), k * m);
+    assert_eq!(out.len(), n * m);
+    let ptr = SendPtr(out.as_mut_ptr());
+    parallel_for_static(default_threads(), n, |_, s, e| {
+        let ptr = &ptr;
+        for u in s..e {
+            // SAFETY: disjoint row ranges per thread.
+            let orow = unsafe { std::slice::from_raw_parts_mut(ptr.0.add(u * m), m) };
+            let arow = &a[u * k..(u + 1) * k];
+            for (kk, &av) in arow.iter().enumerate() {
+                if av != 0.0 {
+                    let brow = &b[kk * m..(kk + 1) * m];
+                    for d in 0..m {
+                        orow[d] += av * brow[d];
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// Row-wise argmax → class ids.
+pub fn argmax_rows(logits: &[f32], classes: usize) -> Vec<u8> {
+    logits
+        .chunks_exact(classes)
+        .map(|row| {
+            let mut best = 0usize;
+            for (i, &v) in row.iter().enumerate() {
+                if v > row[best] {
+                    best = i;
+                }
+            }
+            best as u8
+        })
+        .collect()
+}
+
+/// Node-classification accuracy over the first `n` rows.
+pub fn accuracy(pred: &[u8], labels: &[u8]) -> f64 {
+    assert_eq!(pred.len(), labels.len());
+    if pred.is_empty() {
+        return 1.0;
+    }
+    let correct = pred.iter().zip(labels).filter(|(a, b)| a == b).count();
+    correct as f64 / pred.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spmm::CsrRowParallel;
+    use crate::util::tensor::Tensor;
+
+    fn tiny_model() -> SageModel {
+        // 2 → 2 identity-ish single layer for hand-checkable numbers.
+        SageModel {
+            layers: vec![SageLayer {
+                din: 2,
+                dout: 2,
+                w_self: vec![1.0, 0.0, 0.0, 1.0],
+                w_neigh: vec![0.0, 0.0, 0.0, 0.0],
+                bias: vec![0.5, -0.5],
+            }],
+        }
+    }
+
+    #[test]
+    fn forward_hand_checked() {
+        let csr = Csr::symmetric_from_edges(2, &[(0, 1)]);
+        let model = tiny_model();
+        let x = vec![1.0, 2.0, 3.0, 4.0];
+        let engine = CsrRowParallel::new(1);
+        let out = model.forward(&csr, &x, &engine);
+        // last layer → no relu; w_self = I, bias (0.5, -0.5)
+        assert_eq!(out, vec![1.5, 1.5, 3.5, 3.5]);
+    }
+
+    #[test]
+    fn bundle_roundtrip() {
+        let mut b = Bundle::new();
+        b.insert("l0.w_self".into(), Tensor::f32(vec![2, 3], vec![0.0; 6]));
+        b.insert("l0.w_neigh".into(), Tensor::f32(vec![2, 3], vec![0.0; 6]));
+        b.insert("l0.b".into(), Tensor::f32(vec![3], vec![0.0; 3]));
+        b.insert("l1.w_self".into(), Tensor::f32(vec![3, 5], vec![0.0; 15]));
+        b.insert("l1.w_neigh".into(), Tensor::f32(vec![3, 5], vec![0.0; 15]));
+        b.insert("l1.b".into(), Tensor::f32(vec![5], vec![0.0; 5]));
+        let m = SageModel::from_bundle(&b).unwrap();
+        assert_eq!(m.layers.len(), 2);
+        assert_eq!(m.input_dim(), 2);
+        assert_eq!(m.num_classes(), 5);
+    }
+
+    #[test]
+    fn argmax_and_accuracy() {
+        let logits = vec![0.1, 0.9, 0.5, 0.2, 3.0, -1.0];
+        let pred = argmax_rows(&logits, 2);
+        assert_eq!(pred, vec![1, 0, 0]);
+        assert!((accuracy(&pred, &[1, 0, 1]) - 2.0 / 3.0).abs() < 1e-9);
+    }
+}

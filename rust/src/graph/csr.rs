@@ -1,0 +1,238 @@
+//! Compressed sparse row adjacency.
+
+use crate::util::pool::parallel_for_static;
+
+/// CSR adjacency over `n` nodes. `row_ptr.len() == n+1`; neighbors of `u`
+/// are `col_idx[row_ptr[u]..row_ptr[u+1]]`, sorted ascending.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Csr {
+    pub row_ptr: Vec<usize>,
+    pub col_idx: Vec<u32>,
+}
+
+impl Csr {
+    pub fn num_nodes(&self) -> usize {
+        self.row_ptr.len().saturating_sub(1)
+    }
+
+    pub fn num_entries(&self) -> usize {
+        self.col_idx.len()
+    }
+
+    #[inline]
+    pub fn neighbors(&self, u: usize) -> &[u32] {
+        &self.col_idx[self.row_ptr[u]..self.row_ptr[u + 1]]
+    }
+
+    #[inline]
+    pub fn degree(&self, u: usize) -> usize {
+        self.row_ptr[u + 1] - self.row_ptr[u]
+    }
+
+    /// Build from directed edges as-is (parallel-edge duplicates removed).
+    pub fn from_edges(n: usize, edges: &[(u32, u32)]) -> Csr {
+        Self::build(n, edges.iter().copied())
+    }
+
+    /// Build the symmetric closure: for every (s,d), both s→d and d→s.
+    /// This is the adjacency the GNN aggregation uses.
+    pub fn symmetric_from_edges(n: usize, edges: &[(u32, u32)]) -> Csr {
+        let doubled = edges
+            .iter()
+            .flat_map(|&(s, d)| [(s, d), (d, s)])
+            .filter(|&(s, d)| s != d);
+        Self::build(n, doubled)
+    }
+
+    fn build(n: usize, edges: impl Iterator<Item = (u32, u32)> + Clone) -> Csr {
+        let mut deg = vec![0usize; n];
+        for (s, _) in edges.clone() {
+            deg[s as usize] += 1;
+        }
+        let mut row_ptr = vec![0usize; n + 1];
+        for u in 0..n {
+            row_ptr[u + 1] = row_ptr[u] + deg[u];
+        }
+        let mut col_idx = vec![0u32; row_ptr[n]];
+        let mut cursor = row_ptr[..n].to_vec();
+        for (s, d) in edges {
+            col_idx[cursor[s as usize]] = d;
+            cursor[s as usize] += 1;
+        }
+        // Sort + dedupe each row.
+        let mut out_ptr = vec![0usize; n + 1];
+        for u in 0..n {
+            let row = &mut col_idx[row_ptr[u]..row_ptr[u + 1]];
+            row.sort_unstable();
+        }
+        // Compact after dedup.
+        let mut compact = Vec::with_capacity(col_idx.len());
+        for u in 0..n {
+            let row = &col_idx[row_ptr[u]..row_ptr[u + 1]];
+            let before = compact.len();
+            let mut last: Option<u32> = None;
+            for &v in row {
+                if last != Some(v) {
+                    compact.push(v);
+                    last = Some(v);
+                }
+            }
+            out_ptr[u + 1] = out_ptr[u] + (compact.len() - before);
+        }
+        Csr { row_ptr: out_ptr, col_idx: compact }
+    }
+
+    /// Extract the induced subgraph over `nodes` (must be unique).
+    /// Returns (sub_csr, local→global map). Node k of the subgraph is
+    /// `nodes[k]`.
+    pub fn induced_subgraph(&self, nodes: &[u32]) -> (Csr, Vec<u32>) {
+        let mut global_to_local: std::collections::HashMap<u32, u32> =
+            std::collections::HashMap::with_capacity(nodes.len());
+        for (k, &g) in nodes.iter().enumerate() {
+            global_to_local.insert(g, k as u32);
+        }
+        let mut row_ptr = vec![0usize; nodes.len() + 1];
+        let mut col_idx = Vec::new();
+        for (k, &g) in nodes.iter().enumerate() {
+            for &nb in self.neighbors(g as usize) {
+                if let Some(&l) = global_to_local.get(&nb) {
+                    col_idx.push(l);
+                }
+            }
+            row_ptr[k + 1] = col_idx.len();
+        }
+        for k in 0..nodes.len() {
+            col_idx[row_ptr[k]..row_ptr[k + 1]].sort_unstable();
+        }
+        (Csr { row_ptr, col_idx }, nodes.to_vec())
+    }
+
+    /// Total degree histogram as (degree, count) sorted by degree.
+    pub fn degree_histogram(&self) -> Vec<(usize, usize)> {
+        let mut map = std::collections::BTreeMap::new();
+        for u in 0..self.num_nodes() {
+            *map.entry(self.degree(u)).or_insert(0usize) += 1;
+        }
+        map.into_iter().collect()
+    }
+
+    /// Dense SpMM reference: Y = A · X where A is this adjacency with
+    /// uniform weights `w(u,v) = 1/deg(u)` (mean aggregation) — the
+    /// single-threaded oracle the SpMM engines are tested against.
+    pub fn spmm_mean_reference(&self, x: &[f32], dim: usize) -> Vec<f32> {
+        let n = self.num_nodes();
+        assert_eq!(x.len(), n * dim);
+        let mut y = vec![0.0f32; n * dim];
+        for u in 0..n {
+            let nbs = self.neighbors(u);
+            if nbs.is_empty() {
+                continue;
+            }
+            let inv = 1.0 / nbs.len() as f32;
+            let yrow = &mut y[u * dim..(u + 1) * dim];
+            for &v in nbs {
+                let xrow = &x[v as usize * dim..(v as usize + 1) * dim];
+                for d in 0..dim {
+                    yrow[d] += xrow[d];
+                }
+            }
+            for v in yrow.iter_mut() {
+                *v *= inv;
+            }
+        }
+        y
+    }
+
+    /// Parallel check helper: max |a-b| over two feature matrices.
+    pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+        assert_eq!(a.len(), b.len());
+        let nthreads = crate::util::pool::default_threads();
+        let chunks = std::sync::Mutex::new(0.0f32);
+        parallel_for_static(nthreads, a.len(), |_, s, e| {
+            let mut local = 0.0f32;
+            for i in s..e {
+                local = local.max((a[i] - b[i]).abs());
+            }
+            let mut m = chunks.lock().unwrap();
+            *m = m.max(local);
+        });
+        chunks.into_inner().unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    #[test]
+    fn builds_sorted_deduped_symmetric() {
+        let edges = vec![(0u32, 1u32), (0, 1), (2, 0), (1, 2)];
+        let g = Csr::symmetric_from_edges(3, &edges);
+        assert_eq!(g.neighbors(0), &[1, 2]);
+        assert_eq!(g.neighbors(1), &[0, 2]);
+        assert_eq!(g.neighbors(2), &[0, 1]);
+    }
+
+    #[test]
+    fn directed_build_keeps_direction() {
+        let edges = vec![(0u32, 1u32), (1, 2)];
+        let g = Csr::from_edges(3, &edges);
+        assert_eq!(g.neighbors(0), &[1]);
+        assert_eq!(g.neighbors(1), &[2]);
+        assert_eq!(g.neighbors(2), &[] as &[u32]);
+    }
+
+    #[test]
+    fn induced_subgraph_local_ids() {
+        let edges = vec![(0u32, 1), (1, 2), (2, 3), (3, 0)];
+        let g = Csr::symmetric_from_edges(4, &edges);
+        let (sub, map) = g.induced_subgraph(&[1, 2, 3]);
+        assert_eq!(map, vec![1, 2, 3]);
+        // local 0 = node1: neighbors node0(excluded), node2(local 1)
+        assert_eq!(sub.neighbors(0), &[1]);
+        assert_eq!(sub.neighbors(1), &[0, 2]);
+        assert_eq!(sub.neighbors(2), &[1]);
+    }
+
+    #[test]
+    fn symmetric_closure_is_symmetric_property() {
+        check("csr symmetric", 50, |g| {
+            let n = g.usize(2..40);
+            let m = g.usize(1..80);
+            let edges: Vec<(u32, u32)> = (0..m)
+                .map(|_| (g.usize(0..n) as u32, g.usize(0..n) as u32))
+                .collect();
+            let csr = Csr::symmetric_from_edges(n, &edges);
+            for u in 0..n {
+                for &v in csr.neighbors(u) {
+                    assert!(
+                        csr.neighbors(v as usize).contains(&(u as u32)),
+                        "edge {u}->{v} missing reverse"
+                    );
+                }
+                // sorted & deduped
+                let nb = csr.neighbors(u);
+                for w in nb.windows(2) {
+                    assert!(w[0] < w[1]);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn spmm_reference_mean() {
+        // star: node 0 connected to 1,2,3
+        let edges = vec![(0u32, 1), (0, 2), (0, 3)];
+        let g = Csr::symmetric_from_edges(4, &edges);
+        let x = vec![
+            1.0, 10.0, // node0
+            2.0, 20.0, // node1
+            4.0, 40.0, // node2
+            6.0, 60.0, // node3
+        ];
+        let y = g.spmm_mean_reference(&x, 2);
+        assert_eq!(&y[0..2], &[4.0, 40.0]); // mean of nodes 1,2,3
+        assert_eq!(&y[2..4], &[1.0, 10.0]); // node 1 sees only node 0
+    }
+}

@@ -1,0 +1,17 @@
+//! CSR graph structures and degree profiling.
+//!
+//! The GNN aggregates over the *symmetric closure* of the EDA graph (the
+//! paper's re-grown partitions support message passing in both directions),
+//! so [`Csr::symmetric_from_edges`] is the canonical adjacency used by the
+//! SpMM engines, the partitioner, and the runtime packers.
+//!
+//! [`DegreeProfile`] reproduces the §IV observation GROOT's kernels are
+//! built on: EDA graphs have a polarized degree distribution — a sea of
+//! low-degree nodes (AIG fanin ≤ 2) plus a few extremely high-degree
+//! macro rows.
+
+pub mod csr;
+pub mod profile;
+
+pub use csr::Csr;
+pub use profile::DegreeProfile;

@@ -1,0 +1,156 @@
+//! Degree-distribution profiling (§IV) — the workload analysis that
+//! motivates the HD/LD kernel split.
+//!
+//! The paper observes EDA graphs (especially batched "macro node" rows)
+//! have a polarized distribution: most rows have degree ≤ 12 while a few
+//! rows (PIs fanning out to whole partial-product columns, batched macro
+//! rows) have degree ≥ 512. [`DegreeProfile`] computes the split a
+//! [`crate::spmm::GrootSpmm`] instance uses, with the paper's default
+//! thresholds.
+
+use super::Csr;
+
+/// Paper thresholds: HD rows have degree ≥ 512, LD rows ≤ 12.
+pub const HD_THRESHOLD: usize = 512;
+pub const LD_THRESHOLD: usize = 12;
+
+/// Row partition by degree class.
+#[derive(Clone, Debug)]
+pub struct DegreeProfile {
+    pub hd_threshold: usize,
+    pub ld_threshold: usize,
+    /// Rows with degree ≥ hd_threshold, descending degree.
+    pub hd_rows: Vec<u32>,
+    /// Rows with 0 < degree < hd_threshold, ascending degree (the paper's
+    /// LD degree-sort); rows in (ld, hd) land here too — the mid band is
+    /// processed by the LD path with wider packing.
+    pub ld_rows: Vec<u32>,
+    /// Rows with degree 0 (padding rows, isolated nodes).
+    pub empty_rows: Vec<u32>,
+    pub max_degree: usize,
+    pub total_entries: usize,
+}
+
+impl DegreeProfile {
+    pub fn new(csr: &Csr, hd_threshold: usize, ld_threshold: usize) -> Self {
+        let n = csr.num_nodes();
+        let mut hd = Vec::new();
+        let mut ld = Vec::new();
+        let mut empty = Vec::new();
+        let mut max_degree = 0;
+        for u in 0..n {
+            let d = csr.degree(u);
+            max_degree = max_degree.max(d);
+            if d == 0 {
+                empty.push(u as u32);
+            } else if d >= hd_threshold {
+                hd.push(u as u32);
+            } else {
+                ld.push(u as u32);
+            }
+        }
+        // HD: descending degree (big rows first → static chunking balances).
+        hd.sort_by_key(|&u| std::cmp::Reverse(csr.degree(u as usize)));
+        // LD: ascending degree — the paper's count-sort ordering; stable
+        // sort keeps row order within a degree class for coalesced output.
+        ld.sort_by_key(|&u| csr.degree(u as usize));
+        DegreeProfile {
+            hd_threshold,
+            ld_threshold,
+            hd_rows: hd,
+            ld_rows: ld,
+            empty_rows: empty,
+            max_degree,
+            total_entries: csr.num_entries(),
+        }
+    }
+
+    pub fn with_paper_thresholds(csr: &Csr) -> Self {
+        Self::new(csr, HD_THRESHOLD, LD_THRESHOLD)
+    }
+
+    /// Fraction of nonzeros living in HD rows — the polarization statistic
+    /// reported by the fig9 harness.
+    pub fn hd_nnz_fraction(&self, csr: &Csr) -> f64 {
+        if self.total_entries == 0 {
+            return 0.0;
+        }
+        let hd_nnz: usize = self.hd_rows.iter().map(|&u| csr.degree(u as usize)).sum();
+        hd_nnz as f64 / self.total_entries as f64
+    }
+
+    /// Group LD rows into runs of equal degree: (degree, slice range into
+    /// `ld_rows`). The LD kernel assigns warps per group (§IV Fig. 5).
+    pub fn ld_degree_groups(&self, csr: &Csr) -> Vec<(usize, std::ops::Range<usize>)> {
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i < self.ld_rows.len() {
+            let d = csr.degree(self.ld_rows[i] as usize);
+            let mut j = i + 1;
+            while j < self.ld_rows.len() && csr.degree(self.ld_rows[j] as usize) == d {
+                j += 1;
+            }
+            out.push((d, i..j));
+            i = j;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::features::EdaGraph;
+
+    fn star_plus_chain() -> Csr {
+        // node 0 = hub of degree 6; nodes 7..10 a chain.
+        let mut edges = vec![];
+        for v in 1..=6u32 {
+            edges.push((0u32, v));
+        }
+        edges.push((7, 8));
+        edges.push((8, 9));
+        Csr::symmetric_from_edges(10, &edges)
+    }
+
+    #[test]
+    fn split_respects_thresholds() {
+        let csr = star_plus_chain();
+        let p = DegreeProfile::new(&csr, 5, 2);
+        assert_eq!(p.hd_rows, vec![0]);
+        assert!(p.ld_rows.len() == 9 - p.empty_rows.len() + 0 || !p.ld_rows.is_empty());
+        assert!(!p.ld_rows.contains(&0));
+        // ld sorted ascending by degree
+        let degs: Vec<usize> = p.ld_rows.iter().map(|&u| csr.degree(u as usize)).collect();
+        for w in degs.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+    }
+
+    #[test]
+    fn groups_cover_ld_rows() {
+        let csr = star_plus_chain();
+        let p = DegreeProfile::new(&csr, 5, 2);
+        let groups = p.ld_degree_groups(&csr);
+        let covered: usize = groups.iter().map(|(_, r)| r.len()).sum();
+        assert_eq!(covered, p.ld_rows.len());
+        for (d, r) in groups {
+            for k in r {
+                assert_eq!(csr.degree(p.ld_rows[k] as usize), d);
+            }
+        }
+    }
+
+    #[test]
+    fn eda_graphs_are_polarized() {
+        // The paper's observation: multiplier EDA graphs have low median
+        // degree (AIG fanin 2 + fanouts) with a tail of high-degree rows.
+        let g = crate::aig::mult::csa_multiplier(16);
+        let eg = EdaGraph::from_aig(&g);
+        let csr = Csr::symmetric_from_edges(eg.num_nodes, &eg.edges);
+        let p = DegreeProfile::new(&csr, 16, 12);
+        // Most rows are LD at a tiny threshold.
+        assert!(p.ld_rows.len() > 9 * eg.num_nodes / 10);
+        assert!(p.max_degree >= 8, "max degree {}", p.max_degree);
+    }
+}

@@ -1,0 +1,218 @@
+//! Accuracy harnesses: Fig. 6 (accuracy vs #partitions, ± re-growth),
+//! Fig. 7 (FPGA dataset, 8-bit vs 64-bit training), and two ablations
+//! (partitioner choice, GROOT vs GAMORA features) DESIGN.md calls out.
+
+use super::{native_model, Table};
+use crate::coordinator::{Backend, Session, SessionConfig};
+use crate::datasets::{self, DatasetKind};
+use anyhow::Result;
+
+fn widths_for(kind: DatasetKind, quick: bool) -> Vec<usize> {
+    match (kind, quick) {
+        (DatasetKind::Fpga4Lut, true) => vec![8, 16],
+        (DatasetKind::Fpga4Lut, false) => vec![8, 16, 32, 64],
+        (_, true) => vec![16, 32],
+        (_, false) => vec![16, 32, 64, 128],
+    }
+}
+
+fn partition_counts(quick: bool) -> Vec<usize> {
+    if quick {
+        vec![1, 4, 16]
+    } else {
+        vec![1, 2, 4, 8, 16, 32, 64]
+    }
+}
+
+/// Weights trained on the 8-bit design of the SAME family (the paper's
+/// Fig. 6 caption: "All the multipliers were trained using 8-bits"),
+/// falling back to the csa8 bundle when the family bundle is absent.
+fn family_weights(default: &str, kind: DatasetKind) -> String {
+    let family = match kind {
+        DatasetKind::Booth => "artifacts/weights_booth8.bin",
+        DatasetKind::Mapped7nm => "artifacts/weights_7nm8.bin",
+        DatasetKind::Fpga4Lut => "artifacts/weights_fpga8.bin",
+        _ => return default.to_string(),
+    };
+    if std::path::Path::new(family).exists() {
+        family.to_string()
+    } else {
+        default.to_string()
+    }
+}
+
+/// Fig. 6: accuracy vs number of partitions, dashed (no re-growth) and
+/// solid (re-grown) series, model trained on the family's 8-bit design.
+pub fn fig6(weights: &str, kind: DatasetKind, batch: usize, quick: bool) -> Result<()> {
+    let weights = family_weights(weights, kind);
+    let model = native_model(&weights)?;
+    let mut t = Table::new(
+        format!(
+            "Fig 6 ({}) — accuracy vs #partitions, batch {batch}, trained on {weights}",
+            kind.name()
+        ),
+        &["bits", "partitions", "acc (cut only)", "acc (re-grown)", "recovery"],
+    );
+    for bits in widths_for(kind, quick) {
+        let graph = datasets::build(kind, bits)?.replicate(batch);
+        for parts in partition_counts(quick) {
+            let mut acc = [0.0f64; 2];
+            for (i, regrow) in [false, true].into_iter().enumerate() {
+                let session = Session::new(
+                    Backend::Native(model.clone()),
+                    SessionConfig { num_partitions: parts, regrow, ..Default::default() },
+                );
+                acc[i] = session.classify(&graph)?.accuracy;
+            }
+            t.row(vec![
+                bits.to_string(),
+                parts.to_string(),
+                format!("{:.4}", acc[0]),
+                format!("{:.4}", acc[1]),
+                format!("{:+.2}%", 100.0 * (acc[1] - acc[0])),
+            ]);
+        }
+    }
+    t.print();
+    Ok(())
+}
+
+/// Fig. 7: FPGA-mapped accuracy with 8-bit-trained vs 64-bit-trained
+/// weights (the paper's +18.98% headline for 64-bit training).
+pub fn fig7(weights_8: &str, weights_fpga64: &str, quick: bool) -> Result<()> {
+    // paper fig 7a: trained on the FPGA family's own 8-bit design
+    let w8 = family_weights(weights_8, DatasetKind::Fpga4Lut);
+    let m8 = native_model(&w8)?;
+    let m64 = native_model(weights_fpga64).ok();
+    let mut t = Table::new(
+        format!("Fig 7 — FPGA 4-LUT dataset: 8-bit ({w8}) vs 64-bit training"),
+        &["bits", "partitions", "acc (8b-trained)", "acc (fpga64-trained)", "boost"],
+    );
+    let parts_list = if quick { vec![1, 8] } else { vec![1, 2, 4, 8, 16] };
+    for bits in widths_for(DatasetKind::Fpga4Lut, quick) {
+        let graph = datasets::build(DatasetKind::Fpga4Lut, bits)?;
+        for &parts in &parts_list {
+            let run = |model: &crate::gnn::SageModel| -> Result<f64> {
+                let session = Session::new(
+                    Backend::Native(model.clone()),
+                    SessionConfig { num_partitions: parts, ..Default::default() },
+                );
+                Ok(session.classify(&graph)?.accuracy)
+            };
+            let a8 = run(&m8)?;
+            let (a64s, boost) = match &m64 {
+                Some(m) => {
+                    let a = run(m)?;
+                    (format!("{a:.4}"), format!("{:+.2}%", 100.0 * (a - a8)))
+                }
+                None => ("(weights_fpga64.bin missing)".into(), "-".into()),
+            };
+            t.row(vec![
+                bits.to_string(),
+                parts.to_string(),
+                format!("{a8:.4}"),
+                a64s,
+                boost,
+            ]);
+        }
+    }
+    t.print();
+    Ok(())
+}
+
+/// Ablation: multilevel vs BFS vs random partitioning at equal k — the
+/// DESIGN.md design-choice bench (cut quality → accuracy after regrowth).
+pub fn ablation_partitioners(weights: &str, quick: bool) -> Result<()> {
+    use crate::graph::Csr;
+    use crate::partition::{partition_bfs, partition_kway, partition_random};
+    use crate::regrowth::regrow_partitions;
+
+    let model = native_model(weights)?;
+    let bits = if quick { 16 } else { 32 };
+    let graph = datasets::build(DatasetKind::Csa, bits)?;
+    let csr = Csr::symmetric_from_edges(graph.num_nodes, &graph.edges);
+    let mut t = Table::new(
+        format!("Ablation — partitioner choice (csa{bits}, k=8)"),
+        &["partitioner", "edge cut", "boundary nodes", "acc (cut only)", "acc (re-grown)"],
+    );
+    let k = 8;
+    let parts: Vec<(&str, crate::partition::Partitioning)> = vec![
+        ("multilevel", partition_kway(&csr, k, 0)),
+        ("bfs-chunks", partition_bfs(&csr, k)),
+        ("random", partition_random(csr.num_nodes(), k, 0)),
+    ];
+    for (name, p) in parts {
+        let cut = p.edge_cut(&csr);
+        let stats = crate::regrowth::stats(&regrow_partitions(&csr, &p, true));
+        // run the pipeline with this fixed partitioning via a session that
+        // reuses the assignment (emulated by classifying per partitioning
+        // through the internal path: use Session with the same k/seed for
+        // multilevel; for others compute directly).
+        let acc = |regrow: bool| -> Result<f64> {
+            let rparts = regrow_partitions(&csr, &p, regrow);
+            let mut pred = vec![0u8; graph.num_nodes];
+            for part in &rparts {
+                if part.nodes.is_empty() {
+                    continue;
+                }
+                let local = part.csr();
+                let mut feats = Vec::with_capacity(part.nodes.len() * 4);
+                for &g in &part.nodes {
+                    feats.extend_from_slice(&graph.features[g as usize]);
+                }
+                let engine = crate::spmm::GrootSpmm::new(crate::util::pool::default_threads());
+                let local_pred = model.predict(&local, &feats, &engine);
+                for (i, &gid) in part.nodes[..part.num_core].iter().enumerate() {
+                    pred[gid as usize] = local_pred[i];
+                }
+            }
+            Ok(crate::gnn::accuracy(&pred, &graph.labels_u8()))
+        };
+        t.row(vec![
+            name.to_string(),
+            cut.to_string(),
+            stats.total_boundary_nodes.to_string(),
+            format!("{:.4}", acc(false)?),
+            format!("{:.4}", acc(true)?),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+/// Ablation: GROOT 4-dim features vs GAMORA 3-dim features. Requires the
+/// GAMORA-trained weights bundle (artifacts/weights_gamora.bin, trained by
+/// `compile.train --features gamora`); prints what it can otherwise.
+pub fn ablation_features(weights: &str, quick: bool) -> Result<()> {
+    let model = native_model(weights)?;
+    let gamora = native_model("artifacts/weights_gamora.bin").ok();
+    let bits_list = if quick { vec![16] } else { vec![16, 32, 64] };
+    let mut t = Table::new(
+        "Ablation — GROOT 4-dim vs GAMORA 3-dim node features",
+        &["bits", "acc (groot 4f)", "acc (gamora 3f)"],
+    );
+    for bits in bits_list {
+        let graph = datasets::build(DatasetKind::Csa, bits)?;
+        let session = Session::new(
+            Backend::Native(model.clone()),
+            SessionConfig::default(),
+        );
+        let a4 = session.classify(&graph)?.accuracy;
+        let a3 = match &gamora {
+            Some(m) => {
+                // GAMORA features: re-encode graph features as 3-dim padded
+                // to 4 (model trained with the same padding).
+                let mut g3 = graph.clone();
+                for (f, g) in g3.features.iter_mut().zip(graph.gamora_features()) {
+                    *f = [g[0], g[1], g[2], 0.0];
+                }
+                let s = Session::new(Backend::Native(m.clone()), SessionConfig::default());
+                format!("{:.4}", s.classify(&g3)?.accuracy)
+            }
+            None => "(weights_gamora.bin missing)".into(),
+        };
+        t.row(vec![bits.to_string(), format!("{a4:.4}"), a3]);
+    }
+    t.print();
+    Ok(())
+}

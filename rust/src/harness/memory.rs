@@ -1,0 +1,162 @@
+//! Memory harnesses: Fig. 1a (motivation: full-graph memory vs bit width),
+//! Fig. 8 (memory vs #partitions per dataset), Table II (large-multiplier
+//! MB comparison). Model-extrapolated rows are marked `model`; measured
+//! rows come from running the real partitioner + Algorithm 1 and the
+//! process RSS.
+
+use super::Table;
+use crate::datasets::{self, DatasetKind};
+use crate::memmodel::{csa_nodes_paper, measured_peak_partition, MemModel};
+use anyhow::Result;
+
+/// Fig. 1a — GPU memory needed for full-graph verification of CSA
+/// multipliers vs bit width and batch size, with device capacities.
+pub fn fig1a() -> Result<()> {
+    let m = MemModel::default();
+    let mut t = Table::new(
+        "Fig 1a — full-graph (GAMORA-style) memory vs width/batch [model]",
+        &["bits", "batch", "nodes", "mem (MB)", "RTX2080 11GB", "A100 40GB", "A100 80GB"],
+    );
+    for bits in [256usize, 512, 768, 1024] {
+        for batch in [1usize, 8, 16] {
+            let nodes = csa_nodes_paper(bits, batch);
+            let mb = m.gamora_mb(nodes);
+            let fits = |cap_gb: f64| if mb > cap_gb * 1024.0 { "OOM" } else { "fits" };
+            t.row(vec![
+                bits.to_string(),
+                batch.to_string(),
+                nodes.to_string(),
+                format!("{mb:.0}"),
+                fits(11.0).into(),
+                fits(40.0).into(),
+                fits(80.0).into(),
+            ]);
+        }
+    }
+    t.print();
+    println!(
+        "paper's motivation reproduced: 1024-bit @ batch 16 exceeds even A100-80GB."
+    );
+    Ok(())
+}
+
+/// Fig. 8 — memory vs #partitions for the four dataset families:
+/// measured partition/boundary arithmetic at container-feasible widths,
+/// converted to MB with the Table-II-calibrated model.
+pub fn fig8(quick: bool) -> Result<()> {
+    let m = MemModel::default();
+    let datasets: Vec<(DatasetKind, usize, usize)> = if quick {
+        vec![(DatasetKind::Csa, 32, 1), (DatasetKind::Booth, 32, 1)]
+    } else {
+        vec![
+            (DatasetKind::Csa, 64, 1),
+            (DatasetKind::Csa, 32, 4), // batch panel (b)
+            (DatasetKind::Booth, 64, 1),
+            (DatasetKind::Mapped7nm, 64, 1),
+            (DatasetKind::Fpga4Lut, 64, 1), // Fig 7c panel
+        ]
+    };
+    for (kind, bits, batch) in datasets {
+        let graph = datasets::build(kind, bits)?.replicate(batch);
+        let mut t = Table::new(
+            format!(
+                "Fig 8 — memory vs #partitions ({}{} batch {batch}; {} nodes)",
+                kind.name(),
+                bits,
+                graph.num_nodes
+            ),
+            &[
+                "partitions",
+                "peak part nodes",
+                "boundary nodes",
+                "marginal MB",
+                "vs P=1",
+                "total model MB",
+                "process RSS (MB)",
+            ],
+        );
+        // marginal = β·peak (device data); total adds the allocator/base
+        // floor that dominates at container scale but is constant in P.
+        let marginal = |peak: usize| m.groot_bytes_per_node * peak as f64 / 1e6;
+        let full_marginal = marginal(graph.num_nodes);
+        for parts in [1usize, 2, 4, 8, 16, 32, 64] {
+            let s = measured_peak_partition(&graph, parts, true, 1);
+            let mb = marginal(s.max_partition_nodes);
+            t.row(vec![
+                parts.to_string(),
+                s.max_partition_nodes.to_string(),
+                s.total_boundary_nodes.to_string(),
+                format!("{mb:.1}"),
+                format!("{:+.1}%", 100.0 * (mb - full_marginal) / full_marginal),
+                format!("{:.0}", m.groot_mb(s.max_partition_nodes)),
+                format!("{:.0}", crate::util::timer::peak_rss_bytes() as f64 / 1e6),
+            ]);
+        }
+        t.print();
+    }
+    println!(
+        "shape check: memory decays with partitions and flattens once the\n\
+         re-grown boundary dominates the per-partition size (paper: ≥16 parts)."
+    );
+    Ok(())
+}
+
+/// Table II — large multiplier GPU memory (MB), batch 16. GAMORA row from
+/// the calibrated full-graph model; GROOT rows from per-partition size +
+/// boundary fraction φ measured with the real partitioner at a feasible
+/// width and applied at paper scale.
+pub fn tab2() -> Result<()> {
+    let m = MemModel::default();
+    // measure φ(P) at 64-bit (≈ width-independent; see memmodel docs)
+    let probe = datasets::build(DatasetKind::Csa, 64)?;
+    let parts_list = [2usize, 4, 8, 16, 32, 64];
+    let mut phi = Vec::new();
+    for &p in &parts_list {
+        let s = measured_peak_partition(&probe, p, true, 1);
+        let per = probe.num_nodes as f64 / p as f64;
+        phi.push((s.max_partition_nodes as f64 / per) - 1.0);
+    }
+    let mut t = Table::new(
+        "Table II — large multiplier memory (MB), batch 16 [model + measured φ]",
+        &["# Part.", "256-Bit", "512-Bit", "1,024-Bit"],
+    );
+    let widths = [256usize, 512, 1024];
+    let gamora: Vec<String> = widths
+        .iter()
+        .map(|&b| {
+            let mb = m.gamora_mb(csa_nodes_paper(b, 16));
+            if m.is_oom(mb) {
+                "OOM".into()
+            } else {
+                format!("{mb:.0}")
+            }
+        })
+        .collect();
+    t.row(
+        std::iter::once("GAMORA [7]".to_string())
+            .chain(gamora)
+            .collect(),
+    );
+    for (i, &p) in parts_list.iter().enumerate() {
+        let row: Vec<String> = widths
+            .iter()
+            .map(|&b| {
+                let nodes = csa_nodes_paper(b, 16);
+                let peak = crate::memmodel::extrapolated_peak_partition(nodes, p, phi[i]);
+                format!("{:.0}", m.groot_mb(peak))
+            })
+            .collect();
+        t.row(
+            std::iter::once(format!("GROOT {p} Part."))
+                .chain(row)
+                .collect(),
+        );
+    }
+    t.print();
+    println!("paper anchors: GAMORA 8263/29375/OOM; GROOT@16 2901/7909/27997 MB.");
+    println!("measured boundary fractions φ(P) at csa64: {:?}", phi
+        .iter()
+        .map(|f| format!("{:.3}", f))
+        .collect::<Vec<_>>());
+    Ok(())
+}

@@ -1,0 +1,112 @@
+//! Experiment harness — one entry per table/figure in the paper's
+//! evaluation (see DESIGN.md §Experiment-index). Each function prints the
+//! same rows/series the paper reports; the `cargo bench` targets and the
+//! `groot harness <id>` CLI both route here.
+//!
+//! Scale policy: the paper's largest workloads (1024-bit × batch 16) do
+//! not fit this CPU-only container. Every harness sweeps the widest
+//! configuration that fits and, where the paper's absolute scale matters
+//! (Tab. II, Fig. 1a), prints model-extrapolated rows next to measured
+//! ones, clearly marked.
+
+pub mod accuracy;
+pub mod memory;
+pub mod runtime;
+
+use crate::util::cli::Args;
+use anyhow::{bail, Result};
+
+/// Dispatch a harness target by figure/table id.
+pub fn run(which: &str, args: &mut Args) -> Result<()> {
+    let quick = args.flag("quick");
+    let weights = args.get_or("weights", "artifacts/weights_csa8.bin");
+    match which {
+        "fig1a" => memory::fig1a(),
+        "fig6a" => accuracy::fig6(&weights, crate::datasets::DatasetKind::Csa, 1, quick),
+        "fig6b" => accuracy::fig6(&weights, crate::datasets::DatasetKind::Csa, 4, quick),
+        "fig6c" => accuracy::fig6(&weights, crate::datasets::DatasetKind::Booth, 1, quick),
+        "fig6d" => accuracy::fig6(&weights, crate::datasets::DatasetKind::Mapped7nm, 1, quick),
+        "fig6" => {
+            accuracy::fig6(&weights, crate::datasets::DatasetKind::Csa, 1, quick)?;
+            accuracy::fig6(&weights, crate::datasets::DatasetKind::Csa, 4, quick)?;
+            accuracy::fig6(&weights, crate::datasets::DatasetKind::Booth, 1, quick)?;
+            accuracy::fig6(&weights, crate::datasets::DatasetKind::Mapped7nm, 1, quick)
+        }
+        "fig7" => accuracy::fig7(
+            &weights,
+            &args.get_or("weights-fpga", "artifacts/weights_fpga64.bin"),
+            quick,
+        ),
+        "fig8" => memory::fig8(quick),
+        "tab2" => memory::tab2(),
+        "fig9" => runtime::fig9(quick),
+        "fig10" => runtime::fig10(&weights, quick),
+        "ablation-partitioners" => accuracy::ablation_partitioners(&weights, quick),
+        "ablation-features" => accuracy::ablation_features(&weights, quick),
+        other => bail!(
+            "unknown harness '{other}' \
+             (fig1a|fig6a..d|fig7|fig8|fig9|fig10|tab2|ablation-partitioners|ablation-features)"
+        ),
+    }
+}
+
+/// Markdown-ish table printer shared by harnesses.
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, header: &[&str]) -> Table {
+        Table {
+            title: title.into(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) {
+        println!("\n== {} ==", self.title);
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                if i < widths.len() {
+                    widths[i] = widths[i].max(c.len());
+                } else {
+                    widths.push(c.len());
+                }
+            }
+        }
+        let fmt_row = |cells: &[String]| {
+            let mut s = String::from("| ");
+            for (i, c) in cells.iter().enumerate() {
+                let w = widths.get(i).copied().unwrap_or(c.len());
+                s.push_str(&format!("{c:<w$} | "));
+            }
+            s
+        };
+        println!("{}", fmt_row(&self.header));
+        println!(
+            "|{}|",
+            widths
+                .iter()
+                .map(|w| "-".repeat(w + 2))
+                .collect::<Vec<_>>()
+                .join("|")
+        );
+        for row in &self.rows {
+            println!("{}", fmt_row(row));
+        }
+    }
+}
+
+/// Load a weight bundle into a native-backend model.
+pub fn native_model(weights_path: &str) -> Result<crate::gnn::SageModel> {
+    let bundle = crate::util::tensor::read_bundle(std::path::Path::new(weights_path))?;
+    crate::gnn::SageModel::from_bundle(&bundle)
+}

@@ -1,0 +1,155 @@
+//! Runtime harnesses: Fig. 9 (SpMM kernel comparison) and Fig. 10
+//! (verification time GROOT vs GAMORA vs ABC).
+
+use super::{native_model, Table};
+use crate::coordinator::{Backend, Session, SessionConfig};
+use crate::datasets::{self, DatasetKind};
+use crate::graph::Csr;
+use crate::spmm::all_engines;
+use crate::util::rng::Rng;
+use crate::util::timer::{bench_for, fmt_dur};
+use anyhow::Result;
+use std::time::Duration;
+
+/// Fig. 9 — SpMM runtime of GROOT-GPU vs cuSPARSE-like, MergePath-SpMM,
+/// and GNNAdvisor-like, on Booth / 7nm-mapped / FPGA graphs, embedding
+/// dim 32; accelerations are reported relative to GNNAdvisor (the paper's
+/// dashed line at 1.0).
+pub fn fig9(quick: bool) -> Result<()> {
+    let dim = 32;
+    let widths: Vec<usize> = if quick { vec![64, 128] } else { vec![64, 128, 256, 512] };
+    let kinds = [DatasetKind::Booth, DatasetKind::Mapped7nm, DatasetKind::Fpga4Lut];
+    let threads = crate::util::pool::default_threads();
+    // The paper's comparison is about load balance across parallel lanes.
+    // This container exposes a single CPU, so we report BOTH the measured
+    // serial time (per-element efficiency: layout, overhead, cache) AND
+    // each strategy's analytic makespan on `lanes` parallel workers — the
+    // exact quantity GPU speedups derive from (see SpmmEngine::worker_loads).
+    let lanes = 256usize;
+    let budget = Duration::from_millis(if quick { 150 } else { 600 });
+    let mut t = Table::new(
+        format!(
+            "Fig 9 — SpMM, dim {dim}: measured serial time + {lanes}-lane balance \
+             (ratios vs gnnadvisor; >1 = faster)"
+        ),
+        &["dataset", "bits", "nnz", "engine", "serial median", "serial ratio",
+          "imbalance", "makespan ratio", "combined ratio"],
+    );
+    // (dataset label, bits, batch) — the ×16 batched rows share PI nodes,
+    // creating the paper's degree-≥512 macro rows the HD kernel targets.
+    let mut cases: Vec<(String, DatasetKind, usize, usize)> = Vec::new();
+    for kind in kinds {
+        for &bits in &widths {
+            // 7nm/FPGA mapping at 512 bits is slow to build in quick runs
+            if quick && kind != DatasetKind::Booth && bits > 128 {
+                continue;
+            }
+            cases.push((kind.name().to_string(), kind, bits, 1));
+        }
+    }
+    cases.push(("booth x16".into(), DatasetKind::Booth, if quick { 64 } else { 128 }, 16));
+    for (label, kind, bits, batch) in cases {
+        {
+            let graph = datasets::build(kind, bits)?.replicate_shared_inputs(batch);
+            let csr = Csr::symmetric_from_edges(graph.num_nodes, &graph.edges);
+            let mut rng = Rng::new(9);
+            let x: Vec<f32> = (0..csr.num_nodes() * dim).map(|_| rng.f32()).collect();
+            let engines = all_engines(threads);
+            let mut medians = Vec::new();
+            let mut makespans = Vec::new();
+            for e in &engines {
+                let stats = bench_for(budget, || e.spmm_mean(&csr, &x, dim));
+                medians.push(stats.median_secs());
+                makespans.push(crate::spmm::balance_report(e.as_ref(), &csr, lanes));
+            }
+            let adv_serial = medians[2];
+            let adv_span = makespans[2].makespan.max(1) as f64;
+            for (i, e) in engines.iter().enumerate() {
+                // predicted parallel time ∝ serial per-nnz cost × makespan
+                let per_nnz = medians[i] / csr.num_entries().max(1) as f64;
+                let combined = (adv_serial / csr.num_entries().max(1) as f64) * adv_span
+                    / (per_nnz * makespans[i].makespan.max(1) as f64);
+                t.row(vec![
+                    label.clone(),
+                    bits.to_string(),
+                    csr.num_entries().to_string(),
+                    e.name().into(),
+                    fmt_dur(Duration::from_secs_f64(medians[i])),
+                    format!("{:.2}x", adv_serial / medians[i]),
+                    format!("{:.2}", makespans[i].imbalance),
+                    format!("{:.2}x", adv_span / makespans[i].makespan.max(1) as f64),
+                    format!("{combined:.2}x"),
+                ]);
+            }
+        }
+    }
+    t.print();
+    println!(
+        "paper shape: groot-gpu leads in most cells and the gap widens with\n\
+         bit width (paper peak: 10.28x on booth-512 vs gnnadvisor).\n\
+         serial ratio = per-element efficiency (1 CPU); makespan ratio =\n\
+         {lanes}-lane load balance; combined = their product (GPU-analogue)."
+    );
+    Ok(())
+}
+
+/// Fig. 10 — verification time: GROOT pipeline (partitioned GNN +
+/// algebraic check) vs GAMORA-like (full-graph GNN + same check) vs the
+/// ABC-like structural baseline, plus the published ABC curve the paper
+/// compares against (this container cannot run days-long ABC jobs).
+pub fn fig10(weights: &str, quick: bool) -> Result<()> {
+    let model = native_model(weights)?;
+    let widths: Vec<usize> = if quick { vec![16, 32] } else { vec![16, 32, 64, 128] };
+    let mut t = Table::new(
+        "Fig 10 — CSA verification time",
+        &[
+            "bits",
+            "groot (64 parts)",
+            "groot acc",
+            "gamora-like (full)",
+            "abc-like (measured)",
+            "abc (published curve)",
+            "groot vs abc-pub",
+        ],
+    );
+    for bits in widths {
+        let graph = datasets::build(DatasetKind::Csa, bits)?;
+        let aig = crate::aig::mult::csa_multiplier(bits);
+
+        let run = |parts: usize| -> Result<(f64, f64, bool)> {
+            let session = Session::new(
+                Backend::Native(model.clone()),
+                SessionConfig { num_partitions: parts, ..Default::default() },
+            );
+            let t0 = std::time::Instant::now();
+            let res = session.classify(&graph)?;
+            let outcome = crate::verify::verify_multiplier(&aig, &graph, &res.pred)?;
+            Ok((t0.elapsed().as_secs_f64(), res.accuracy, outcome.equivalent))
+        };
+        let parts = 64.min(graph.num_nodes / 4).max(1);
+        let (groot_s, acc, eq) = run(parts)?;
+        let (gamora_s, _, _) = run(1)?;
+        let t0 = std::time::Instant::now();
+        let abc = crate::verify::abc_like::verify_structural(&aig, 4_000_000);
+        let abc_s = t0.elapsed().as_secs_f64();
+        let abc_pub = crate::verify::abc_like::abc_published_runtime_secs(bits);
+        t.row(vec![
+            bits.to_string(),
+            format!("{groot_s:.3}s{}", if eq { "" } else { " (!)" }),
+            format!("{acc:.4}"),
+            format!("{gamora_s:.3}s"),
+            format!(
+                "{abc_s:.3}s{}",
+                if abc.outcome.equivalent { "" } else { " (!)" }
+            ),
+            format!("{abc_pub:.1}s"),
+            format!("{:.0}x", abc_pub / groot_s),
+        ]);
+    }
+    t.print();
+    println!(
+        "paper shape: ABC grows super-polynomially (1.23e5x at 1024-bit/64\n\
+         parts); GROOT tracks GAMORA with a small partitioning overhead."
+    );
+    Ok(())
+}

@@ -1,0 +1,276 @@
+//! k-feasible cut enumeration with truth tables (k ≤ 3).
+//!
+//! Standard bottom-up enumeration: the cut set of an AND node is the
+//! pairwise merge of its fanins' cut sets (unioned leaves, ≤ k), plus the
+//! trivial cut {node}. Truth tables are computed over the merged leaf
+//! order by expanding each fanin's table onto the union support and
+//! AND-ing (with fanin complement applied). Dominated and duplicate cuts
+//! are pruned; each node keeps at most `max_cuts` non-trivial cuts.
+//!
+//! Also the engine behind the k-LUT mapper in [`crate::mapping`].
+
+use crate::aig::{lit_compl, lit_var, Aig, NodeKind};
+
+pub const MAX_K: usize = 3;
+
+/// A cut: up to 3 sorted leaf node ids plus the node's function over them.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Cut {
+    pub leaves: CutLeaves,
+    /// Truth table over `leaves` (LSB = all-leaves-false row; leaf 0 is the
+    /// fastest-cycling variable). For |leaves| = m, only the low 2^m bits
+    /// are meaningful (upper bits replicate).
+    pub tt: u8,
+}
+
+/// Fixed-capacity sorted leaf set.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CutLeaves {
+    buf: [u32; MAX_K],
+    len: u8,
+}
+
+impl CutLeaves {
+    pub fn single(x: u32) -> Self {
+        CutLeaves { buf: [x, 0, 0], len: 1 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn as_slice(&self) -> &[u32] {
+        &self.buf[..self.len as usize]
+    }
+
+    /// Sorted union; None if it exceeds MAX_K leaves.
+    pub fn union(&self, other: &CutLeaves) -> Option<CutLeaves> {
+        let mut buf = [0u32; MAX_K];
+        let (a, b) = (self.as_slice(), other.as_slice());
+        let (mut i, mut j, mut n) = (0usize, 0usize, 0usize);
+        while i < a.len() || j < b.len() {
+            let v = if i < a.len() && (j >= b.len() || a[i] <= b[j]) {
+                let v = a[i];
+                if j < b.len() && b[j] == v {
+                    j += 1;
+                }
+                i += 1;
+                v
+            } else {
+                let v = b[j];
+                j += 1;
+                v
+            };
+            if n == MAX_K {
+                return None;
+            }
+            buf[n] = v;
+            n += 1;
+        }
+        Some(CutLeaves { buf, len: n as u8 })
+    }
+
+    /// True if `self` ⊆ `other` (used for domination pruning).
+    pub fn subset_of(&self, other: &CutLeaves) -> bool {
+        self.as_slice().iter().all(|x| other.as_slice().contains(x))
+    }
+}
+
+/// Expand a truth table from `from` leaves onto `to` leaves (from ⊆ to).
+fn expand_tt(tt: u8, from: &CutLeaves, to: &CutLeaves) -> u8 {
+    let m = to.len();
+    let mut out = 0u8;
+    for row in 0..(1usize << m) {
+        // Build the corresponding row index in `from` coordinates.
+        let mut from_row = 0usize;
+        for (fi, &leaf) in from.as_slice().iter().enumerate() {
+            let ti = to.as_slice().iter().position(|&x| x == leaf).unwrap();
+            if row & (1 << ti) != 0 {
+                from_row |= 1 << fi;
+            }
+        }
+        if tt & (1 << from_row) != 0 {
+            out |= 1 << row;
+        }
+    }
+    out
+}
+
+/// Mask a tt to its meaningful bits for m leaves.
+fn mask_tt(tt: u8, m: usize) -> u8 {
+    if m >= 3 {
+        tt
+    } else {
+        tt & ((1u16 << (1 << m)) - 1) as u8
+    }
+}
+
+/// The cut set of one node.
+#[derive(Clone, Debug, Default)]
+pub struct CutSet {
+    cuts: Vec<Cut>,
+}
+
+impl CutSet {
+    pub fn cuts(&self) -> &[Cut] {
+        &self.cuts
+    }
+}
+
+/// Enumerate cuts for every node. `max_cuts` bounds non-trivial cuts kept
+/// per node (priority: smaller cuts first — they dominate).
+pub fn enumerate_cuts(aig: &Aig, max_cuts: usize) -> Vec<CutSet> {
+    let n = aig.num_nodes();
+    let mut sets: Vec<CutSet> = vec![CutSet::default(); n];
+    for id in 0..n as u32 {
+        match aig.kind(id) {
+            NodeKind::Const => {
+                // Constant false: tt = 0 over the trivial self-cut.
+                sets[id as usize].cuts.push(Cut { leaves: CutLeaves::single(id), tt: 0b10 });
+                // note: the const node never appears in real cuts because
+                // `Aig::and` folds constants away; keep self-cut for safety.
+            }
+            NodeKind::Pi(_) => {
+                sets[id as usize]
+                    .cuts
+                    .push(Cut { leaves: CutLeaves::single(id), tt: 0b10 });
+            }
+            NodeKind::And => {
+                let (f0, f1) = aig.fanins(id);
+                let (v0, c0) = (lit_var(f0), lit_compl(f0));
+                let (v1, c1) = (lit_var(f1), lit_compl(f1));
+                let mut new_cuts: Vec<Cut> = Vec::with_capacity(max_cuts + 1);
+                // Borrow-split: take snapshots of fanin cut slices.
+                let cuts0: Vec<Cut> = sets[v0 as usize].cuts.clone();
+                let cuts1: Vec<Cut> = sets[v1 as usize].cuts.clone();
+                for a in &cuts0 {
+                    for b in &cuts1 {
+                        let Some(leaves) = a.leaves.union(&b.leaves) else {
+                            continue;
+                        };
+                        let m = leaves.len();
+                        let ta = expand_tt(mask_tt(a.tt, a.leaves.len()), &a.leaves, &leaves);
+                        let tb = expand_tt(mask_tt(b.tt, b.leaves.len()), &b.leaves, &leaves);
+                        let full: u8 = if m >= 3 { 0xFF } else { ((1u16 << (1 << m)) - 1) as u8 };
+                        let ta = if c0 { !ta & full } else { ta };
+                        let tb = if c1 { !tb & full } else { tb };
+                        let tt = ta & tb;
+                        let cut = Cut { leaves, tt };
+                        if !new_cuts.iter().any(|c| c.leaves == cut.leaves) {
+                            new_cuts.push(cut);
+                        }
+                    }
+                }
+                // Domination pruning: drop cuts whose leaves are a strict
+                // superset of another cut's. Sort (size asc, then leaf ids
+                // DESCENDING): small cuts win, and among equal sizes the
+                // *shallow* cuts (recent node ids — the local FA boundary)
+                // beat deep PI-rooted cuts. The XOR3/MAJ matcher needs the
+                // shallow {a,b,c} cuts; deep cuts are useless to it.
+                new_cuts.sort_by(|a, b| {
+                    a.leaves
+                        .len()
+                        .cmp(&b.leaves.len())
+                        .then_with(|| b.leaves.as_slice().cmp(a.leaves.as_slice()))
+                });
+                let mut kept: Vec<Cut> = Vec::new();
+                for c in new_cuts {
+                    if !kept.iter().any(|k| k.leaves.subset_of(&c.leaves) && k.leaves != c.leaves)
+                    {
+                        kept.push(c);
+                    }
+                    if kept.len() >= max_cuts {
+                        break;
+                    }
+                }
+                // Trivial self-cut last.
+                kept.push(Cut { leaves: CutLeaves::single(id), tt: 0b10 });
+                sets[id as usize].cuts = kept;
+            }
+        }
+    }
+    sets
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aig::sim::eval_bool;
+    use crate::aig::{lit_var, Aig};
+    use crate::util::prop::check;
+
+    #[test]
+    fn leaves_union_and_subset() {
+        let a = CutLeaves::single(3).union(&CutLeaves::single(5)).unwrap();
+        let b = CutLeaves::single(5);
+        assert_eq!(a.as_slice(), &[3, 5]);
+        assert!(b.subset_of(&a));
+        assert!(!a.subset_of(&b));
+        let c = a.union(&CutLeaves::single(7)).unwrap();
+        assert_eq!(c.as_slice(), &[3, 5, 7]);
+        assert!(c.union(&CutLeaves::single(9)).is_none());
+    }
+
+    #[test]
+    fn cut_truth_tables_match_simulation() {
+        // Build a random-ish small AIG and verify every enumerated cut's
+        // truth table against brute-force simulation.
+        check("cut tts match sim", 30, |g| {
+            let mut aig = Aig::new("t");
+            let pis: Vec<_> = (0..4).map(|_| aig.pi()).collect();
+            let mut pool: Vec<u32> = pis.iter().map(|&l| lit_var(l)).collect();
+            for _ in 0..10 {
+                let x = *g.choose(&pool);
+                let y = *g.choose(&pool);
+                let lx = crate::aig::lit(x, g.bool());
+                let ly = crate::aig::lit(y, g.bool());
+                let out = aig.and(lx, ly);
+                pool.push(lit_var(out));
+            }
+            let root = *pool.last().unwrap();
+            aig.po("o", crate::aig::lit(root, false));
+
+            let cutsets = enumerate_cuts(&aig, 8);
+            // Node values under all 16 PI assignments.
+            let mut node_vals: Vec<u16> = vec![0; aig.num_nodes()];
+            for v in 0..16usize {
+                let ins: Vec<bool> = (0..4).map(|i| v & (1 << i) != 0).collect();
+                let words: Vec<u64> =
+                    ins.iter().map(|&b| if b { !0u64 } else { 0 }).collect();
+                let vals = crate::aig::sim::node_values_u64(&aig, &words);
+                for (id, &w) in vals.iter().enumerate() {
+                    if w & 1 != 0 {
+                        node_vals[id] |= 1 << v;
+                    }
+                }
+            }
+            for id in 0..aig.num_nodes() as u32 {
+                for cut in cutsets[id as usize].cuts() {
+                    // For every PI assignment, the cut tt applied to leaf
+                    // values must equal the node value.
+                    for v in 0..16usize {
+                        let mut row = 0usize;
+                        for (li, &leaf) in cut.leaves.as_slice().iter().enumerate() {
+                            if node_vals[leaf as usize] & (1 << v) != 0 {
+                                row |= 1 << li;
+                            }
+                        }
+                        let predicted = cut.tt & (1 << row) != 0;
+                        let actual = node_vals[id as usize] & (1 << v) != 0;
+                        assert_eq!(
+                            predicted, actual,
+                            "node {id} cut {:?} assignment {v}",
+                            cut.leaves.as_slice()
+                        );
+                    }
+                }
+            }
+            // keep eval_bool referenced for future use
+            let _ = eval_bool(&aig, &[false, false, false, false]);
+        });
+    }
+}

@@ -1,0 +1,256 @@
+//! Ground-truth node labeling — the ABC substitute for §III-B.
+//!
+//! The paper derives labels from ABC's adder-tree extraction: each AIG node
+//! is classified as {0: PO, 1: MAJ root, 2: XOR root, 3: plain AND, 4: PI}.
+//! We reproduce this with k-feasible cut enumeration (k ≤ 3) and truth-table
+//! matching: a node is an XOR root if some cut of it computes XOR2/XOR3 (up
+//! to output complement — AIG polarity moves freely through complemented
+//! edges), and a MAJ root if some cut computes MAJ3 (up to output
+//! complement). Full-adder sum/carry pairs produced by [`crate::aig::adders`]
+//! match exactly these classes, which is what makes the downstream algebraic
+//! rewriting (§III-D) work.
+
+pub mod cuts;
+
+use crate::aig::{Aig, NodeKind};
+use cuts::{enumerate_cuts, CutSet};
+
+/// Node classes, numerically identical to the paper's labels.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum NodeClass {
+    Po = 0,
+    Maj = 1,
+    Xor = 2,
+    And = 3,
+    Pi = 4,
+}
+
+pub const NUM_CLASSES: usize = 5;
+
+impl NodeClass {
+    pub fn from_u8(x: u8) -> NodeClass {
+        match x {
+            0 => NodeClass::Po,
+            1 => NodeClass::Maj,
+            2 => NodeClass::Xor,
+            3 => NodeClass::And,
+            _ => NodeClass::Pi,
+        }
+    }
+}
+
+/// Truth tables over the cut's leaf order (LSB = leaf 0 value cycles
+/// fastest). 2-var tables are checked in their 4-bit form, 3-var in 8-bit.
+///
+/// Matching is closed under input and output complementation: AIG edges
+/// carry polarity freely, so a full-adder carry whose carry-in arrives as a
+/// complemented literal computes MAJ-with-a-complemented-input over its cut
+/// leaves — functionally still a carry. ABC's adder-tree extraction
+/// (`&atree`) is polarity-insensitive in the same way.
+const XOR2: u8 = 0b0110;
+const XNOR2: u8 = 0b1001;
+const XOR3: u8 = 0x96;
+const XNOR3: u8 = 0x69;
+const MAJ3: u8 = 0xE8;
+
+/// Apply an input-complement mask to a 3-var truth table: row r of the
+/// result is row r^mask of the input.
+const fn complement_inputs3(tt: u8, mask: u8) -> u8 {
+    let mut out = 0u8;
+    let mut r = 0u8;
+    while r < 8 {
+        if tt & (1 << (r ^ mask)) != 0 {
+            out |= 1 << r;
+        }
+        r += 1;
+    }
+    out
+}
+
+/// 256-entry membership table of the MAJ3 class (all input complementations
+/// and output complement — permutations are free since MAJ is symmetric).
+const fn maj_class_table() -> [bool; 256] {
+    let mut t = [false; 256];
+    let mut mask = 0u8;
+    loop {
+        let tt = complement_inputs3(MAJ3, mask);
+        t[tt as usize] = true;
+        t[(!tt) as usize] = true;
+        if mask == 7 {
+            break;
+        }
+        mask += 1;
+    }
+    t
+}
+
+const MAJ_CLASS: [bool; 256] = maj_class_table();
+
+/// Classify every AIG node. Returned vec is indexed by node id; PO graph
+/// nodes are appended by the EDA-graph builder, not here.
+pub fn label_aig_nodes(aig: &Aig) -> Vec<NodeClass> {
+    let cutsets = enumerate_cuts(aig, 16);
+    label_from_cutsets(aig, &cutsets)
+}
+
+/// Classification given precomputed cut sets (exposed for reuse by the
+/// structural ABC-like baseline, which shares the cut enumeration pass).
+pub fn label_from_cutsets(aig: &Aig, cutsets: &[CutSet]) -> Vec<NodeClass> {
+    let n = aig.num_nodes();
+    let mut out = vec![NodeClass::And; n];
+    // Leaf pairs over which some node computes XOR2 — used by the
+    // half-adder rule below. Keyed by the sorted 2-leaf cut.
+    let mut xor2_pairs: std::collections::HashSet<(u32, u32)> = Default::default();
+    for id in 0..n as u32 {
+        out[id as usize] = match aig.kind(id) {
+            NodeKind::Const => NodeClass::Pi, // const rides with PIs
+            NodeKind::Pi(_) => NodeClass::Pi,
+            NodeKind::And => {
+                let mut cls = NodeClass::And;
+                for cut in cutsets[id as usize].cuts() {
+                    match cut.leaves.len() {
+                        2 => {
+                            let tt = cut.tt & 0xF;
+                            if tt == XOR2 || tt == XNOR2 {
+                                cls = NodeClass::Xor;
+                                let l = cut.leaves.as_slice();
+                                xor2_pairs.insert((l[0], l[1]));
+                                break;
+                            }
+                        }
+                        3 => {
+                            let tt = cut.tt;
+                            if tt == XOR3 || tt == XNOR3 {
+                                cls = NodeClass::Xor;
+                                break;
+                            }
+                            if MAJ_CLASS[tt as usize] {
+                                cls = NodeClass::Maj;
+                                // keep scanning: an XOR match on another
+                                // cut would take precedence.
+                            }
+                        }
+                        _ => {}
+                    }
+                }
+                cls
+            }
+        };
+    }
+    // Half-adder carry rule (paper Fig. 3: HA carries are labeled MAJ):
+    // an AND node over leaves {a,b} (any input polarity) that has an XOR2
+    // sibling over the same pair is a carry, not a plain AND.
+    for id in 0..n as u32 {
+        if out[id as usize] == NodeClass::And {
+            for cut in cutsets[id as usize].cuts() {
+                if cut.leaves.len() == 2 {
+                    let l = cut.leaves.as_slice();
+                    // Plain a·b only (tt 0b1000). The looser AND-class
+                    // (complemented inputs) would also catch the internal
+                    // a·¬b / ¬a·b guts of every XOR2 construction — those
+                    // are not carries.
+                    if cut.tt & 0xF == 0b1000 && xor2_pairs.contains(&(l[0], l[1])) {
+                        out[id as usize] = NodeClass::Maj;
+                        break;
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Per-class counts, for dataset stats and harness prints.
+pub fn class_histogram(labels: &[NodeClass]) -> [usize; NUM_CLASSES] {
+    let mut h = [0usize; NUM_CLASSES];
+    for &l in labels {
+        h[l as usize] += 1;
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aig::adders::full_adder;
+    use crate::aig::mult::csa_multiplier;
+    use crate::aig::{lit_var, Aig};
+
+    #[test]
+    fn full_adder_roots_are_labeled() {
+        let mut g = Aig::new("fa");
+        let a = g.pi();
+        let b = g.pi();
+        let c = g.pi();
+        let (s, co) = full_adder(&mut g, a, b, c);
+        g.po("s", s);
+        g.po("co", co);
+        let labels = label_aig_nodes(&g);
+        assert_eq!(labels[lit_var(s) as usize], NodeClass::Xor, "FA sum root");
+        assert_eq!(labels[lit_var(co) as usize], NodeClass::Maj, "FA carry root");
+    }
+
+    #[test]
+    fn xor2_root_labeled_xor() {
+        let mut g = Aig::new("x");
+        let a = g.pi();
+        let b = g.pi();
+        let x = g.xor(a, b);
+        g.po("x", x);
+        let labels = label_aig_nodes(&g);
+        assert_eq!(labels[lit_var(x) as usize], NodeClass::Xor);
+    }
+
+    #[test]
+    fn plain_and_stays_and() {
+        let mut g = Aig::new("a");
+        let a = g.pi();
+        let b = g.pi();
+        let c = g.pi();
+        let ab = g.and(a, b);
+        let abc = g.and(ab, c);
+        g.po("o", abc);
+        let labels = label_aig_nodes(&g);
+        assert_eq!(labels[lit_var(ab) as usize], NodeClass::And);
+        assert_eq!(labels[lit_var(abc) as usize], NodeClass::And);
+    }
+
+    #[test]
+    fn pis_labeled_pi() {
+        let mut g = Aig::new("p");
+        let a = g.pi();
+        let b = g.pi();
+        let x = g.and(a, b);
+        g.po("x", x);
+        let labels = label_aig_nodes(&g);
+        assert_eq!(labels[lit_var(a) as usize], NodeClass::Pi);
+        assert_eq!(labels[lit_var(b) as usize], NodeClass::Pi);
+        assert_eq!(labels[0], NodeClass::Pi); // const node
+    }
+
+    #[test]
+    fn csa_multiplier_has_xor_and_maj_roots() {
+        let g = csa_multiplier(8);
+        let labels = label_aig_nodes(&g);
+        let h = class_histogram(&labels);
+        // An 8-bit array multiplier has dozens of FAs: plenty of XOR and
+        // MAJ roots, and plain ANDs dominate (partial products + xor guts).
+        assert!(h[NodeClass::Xor as usize] > 20, "xor roots {h:?}");
+        assert!(h[NodeClass::Maj as usize] > 10, "maj roots {h:?}");
+        assert!(h[NodeClass::And as usize] > h[NodeClass::Maj as usize]);
+        assert_eq!(h[NodeClass::Pi as usize], 17); // 16 PIs + const
+    }
+
+    #[test]
+    fn maj_sop_shape_also_detected() {
+        let mut g = Aig::new("m");
+        let a = g.pi();
+        let b = g.pi();
+        let c = g.pi();
+        let m = g.maj_sop(a, b, c);
+        g.po("m", m);
+        let labels = label_aig_nodes(&g);
+        assert_eq!(labels[lit_var(m) as usize], NodeClass::Maj);
+    }
+}

@@ -1,0 +1,21 @@
+//! GROOT — Graph Edge Re-growth and Partitioning for the Verification of
+//! Large Designs in Logic Synthesis (ICCAD 2025) — reproduction library.
+//!
+//! See DESIGN.md for the system inventory and experiment index.
+
+pub mod aig;
+pub mod coordinator;
+pub mod datasets;
+pub mod features;
+pub mod gnn;
+pub mod graph;
+pub mod harness;
+pub mod labels;
+pub mod mapping;
+pub mod memmodel;
+pub mod partition;
+pub mod regrowth;
+pub mod runtime;
+pub mod spmm;
+pub mod util;
+pub mod verify;

@@ -1,0 +1,207 @@
+//! `groot` — CLI for the GROOT verification framework.
+//!
+//! Subcommands:
+//!   gen-dataset   build EDA-graph datasets (training export for python)
+//!   classify      run the partition→regrow→GNN pipeline, report accuracy
+//!   verify        full verification (classification + algebraic check)
+//!   harness       regenerate a paper table/figure (fig6a, tab2, ...)
+//!   info          dataset statistics (nodes, edges, degree profile)
+
+use anyhow::{bail, Context, Result};
+use groot::coordinator::{Backend, Session, SessionConfig};
+use groot::datasets::{self, DatasetKind};
+use groot::util::cli::Args;
+use std::path::PathBuf;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let mut args = Args::parse(&["no-regrow", "help-args", "gamora-features", "quick"]);
+    let cmd = args.positional.first().cloned().unwrap_or_else(|| "help".into());
+    match cmd.as_str() {
+        "gen-dataset" => gen_dataset(&mut args),
+        "classify" => classify(&mut args),
+        "verify" => verify(&mut args),
+        "harness" => harness(&mut args),
+        "info" => info(&mut args),
+        "help" | "--help" | "-h" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => bail!("unknown command '{other}' (try: groot help)"),
+    }
+}
+
+const HELP: &str = "\
+groot — GNN-based verification of large designs (GROOT, ICCAD'25)
+
+USAGE:
+  groot gen-dataset --out DIR [--specs csa8,csa16,fpga64,...]
+  groot classify --dataset csa --bits 16 [--partitions 8] [--no-regrow]
+                 [--backend native|pjrt] [--artifacts DIR] [--weights FILE]
+  groot verify   --dataset csa --bits 16 [same options as classify]
+  groot harness  fig1a|fig6a|fig6b|fig6c|fig6d|fig7|fig8|fig9|fig10|tab2
+                 [--weights FILE] [--quick]
+  groot info     --dataset csa --bits 16
+";
+
+fn parse_dataset(args: &mut Args) -> Result<(DatasetKind, usize)> {
+    let kind = DatasetKind::parse(&args.get_or("dataset", "csa"))?;
+    let bits = args.parse_or("bits", 8usize)?;
+    Ok((kind, bits))
+}
+
+fn gen_dataset(args: &mut Args) -> Result<()> {
+    let out = PathBuf::from(args.get_or("out", "artifacts/datasets"));
+    let specs = args.get_or(
+        "specs",
+        "csa8,csa16,csa32,booth8,booth16,7nm8,7nm16,fpga8,fpga16,fpga64",
+    );
+    for spec in specs.split(',') {
+        let spec = spec.trim();
+        // split after the LAST non-digit so "7nm8" parses as ("7nm", 8)
+        let split = spec
+            .rfind(|c: char| !c.is_ascii_digit())
+            .map(|i| i + 1)
+            .with_context(|| format!("bad spec '{spec}' (want e.g. csa8)"))?;
+        let kind = DatasetKind::parse(&spec[..split])?;
+        let bits: usize = spec[split..].parse()?;
+        let g = datasets::generate(kind, bits, &out)?;
+        println!(
+            "wrote {spec}: {} nodes, {} edges -> {}",
+            g.num_nodes,
+            g.num_edges(),
+            out.display()
+        );
+    }
+    Ok(())
+}
+
+fn build_backend(args: &mut Args) -> Result<Backend> {
+    let backend = args.get_or("backend", "native");
+    let weights_path = PathBuf::from(args.get_or("weights", "artifacts/weights_csa8.bin"));
+    let bundle = groot::util::tensor::read_bundle(&weights_path)
+        .with_context(|| format!("load weights {}", weights_path.display()))?;
+    match backend.as_str() {
+        "native" => Ok(Backend::Native(groot::gnn::SageModel::from_bundle(&bundle)?)),
+        "pjrt" => {
+            let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
+            let max_bucket = args.parse_or("max-bucket", usize::MAX)?;
+            Ok(Backend::Pjrt(groot::runtime::Runtime::load_buckets(
+                &artifacts,
+                &bundle,
+                max_bucket,
+            )?))
+        }
+        other => bail!("unknown backend '{other}'"),
+    }
+}
+
+fn session_config(args: &mut Args) -> Result<SessionConfig> {
+    Ok(SessionConfig {
+        num_partitions: args.parse_or("partitions", 1usize)?,
+        regrow: !args.flag("no-regrow"),
+        seed: args.parse_or("seed", 0u64)?,
+        threads: args.parse_or("threads", groot::util::pool::default_threads())?,
+    })
+}
+
+fn classify(args: &mut Args) -> Result<()> {
+    let (kind, bits) = parse_dataset(args)?;
+    let cfg = session_config(args)?;
+    let backend = build_backend(args)?;
+    let graph = datasets::build(kind, bits)?;
+    println!(
+        "dataset {}{}: {} nodes, {} edges; backend={}, partitions={}, regrow={}",
+        kind.name(),
+        bits,
+        graph.num_nodes,
+        graph.num_edges(),
+        backend.name(),
+        cfg.num_partitions,
+        cfg.regrow
+    );
+    let session = Session::new(backend, cfg);
+    let res = session.classify(&graph)?;
+    println!(
+        "accuracy {:.4}  (partition {:?}, regrowth {:?}, pack {:?}, infer {:?})",
+        res.accuracy,
+        res.stats.partition_time,
+        res.stats.regrowth_time,
+        res.stats.pack_time,
+        res.stats.infer_time
+    );
+    println!(
+        "boundary nodes {}, crossing edges {}, max partition {} nodes, peak bucket {}",
+        res.stats.total_boundary_nodes,
+        res.stats.total_crossing_edges,
+        res.stats.max_partition_nodes,
+        res.stats.peak_bucket_n
+    );
+    Ok(())
+}
+
+fn verify(args: &mut Args) -> Result<()> {
+    let (kind, bits) = parse_dataset(args)?;
+    let cfg = session_config(args)?;
+    let backend = build_backend(args)?;
+    let graph = datasets::build(kind, bits)?;
+    let session = Session::new(backend, cfg);
+    let t0 = std::time::Instant::now();
+    let res = session.classify(&graph)?;
+    let aig = match kind {
+        DatasetKind::Csa => groot::aig::mult::csa_multiplier(bits),
+        DatasetKind::Booth => groot::aig::booth::booth_multiplier(bits),
+        DatasetKind::Wallace => groot::aig::wallace::wallace_multiplier(bits),
+        _ => bail!("algebraic verification targets AIG datasets (csa|booth|wallace)"),
+    };
+    let outcome = groot::verify::verify_multiplier(&aig, &graph, &res.pred)?;
+    println!(
+        "classification accuracy {:.4}; algebraic check: {} ({} adders used; {:?} total)",
+        res.accuracy,
+        if outcome.equivalent { "EQUIVALENT ✓" } else { "NOT PROVEN ✗" },
+        outcome.adders_used,
+        t0.elapsed()
+    );
+    if !outcome.equivalent {
+        std::process::exit(2);
+    }
+    Ok(())
+}
+
+fn harness(args: &mut Args) -> Result<()> {
+    let which = args
+        .positional
+        .get(1)
+        .cloned()
+        .context("harness needs a target, e.g. `groot harness fig6a`")?;
+    groot::harness::run(&which, args)
+}
+
+fn info(args: &mut Args) -> Result<()> {
+    let (kind, bits) = parse_dataset(args)?;
+    let graph = datasets::build(kind, bits)?;
+    let csr = groot::graph::Csr::symmetric_from_edges(graph.num_nodes, &graph.edges);
+    let profile = groot::graph::DegreeProfile::with_paper_thresholds(&csr);
+    let hist = groot::labels::class_histogram(&graph.labels);
+    println!("dataset {}{}", kind.name(), bits);
+    println!("  nodes {}  edges {}", graph.num_nodes, graph.num_edges());
+    println!(
+        "  classes: PO {}  MAJ {}  XOR {}  AND {}  PI {}",
+        hist[0], hist[1], hist[2], hist[3], hist[4]
+    );
+    println!(
+        "  degree: max {}  hd rows(≥{}) {}  ld rows {}  hd-nnz share {:.2}%",
+        profile.max_degree,
+        profile.hd_threshold,
+        profile.hd_rows.len(),
+        profile.ld_rows.len(),
+        100.0 * profile.hd_nnz_fraction(&csr)
+    );
+    Ok(())
+}

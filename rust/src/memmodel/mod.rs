@@ -1,0 +1,180 @@
+//! Analytic accelerator-memory model — regenerates the paper's memory
+//! results (Fig. 1a, Fig. 8, Table II) on hardware we don't have.
+//!
+//! The paper measures GPU memory for GAMORA (full-graph PyG on A100) and
+//! GROOT (partitioned, single GPU). Neither an A100 nor CUDA exists in
+//! this container, so the *shape* is computed exactly from graph
+//! arithmetic (node/edge counts, partition sizes, re-grown boundaries —
+//! all measured by running our own partitioner) and the *scale* comes
+//! from two linear models calibrated against Table II:
+//!
+//! ```text
+//! GAMORA:  mem(N)        = base_f + β_f · N
+//! GROOT:   mem(N, P)     = base_g + β_g · (N/P + B̄_P)
+//! ```
+//!
+//! Calibration (Table II, CSA batch 16): β_f ≈ 838 B/node from the
+//! 256→512-bit row pair, base_f ≈ 1226 MB (CUDA context + allocator
+//! floor); β_g ≈ 730 B/node, base_g ≈ 2391 MB from the P ∈ {2,4,8} rows.
+//! B̄_P is the mean re-grown partition overhead (boundary nodes), measured
+//! exactly at widths this container can build and extrapolated by the
+//! fitted cut-growth law above that. The measured-RSS column printed by
+//! the harnesses next to the model keeps us honest about the shape.
+
+use crate::partition::partition_kway;
+use crate::regrowth::regrow_partitions;
+
+/// Bytes-per-node and base constants calibrated against Table II.
+#[derive(Clone, Copy, Debug)]
+pub struct MemModel {
+    pub gamora_base_mb: f64,
+    pub gamora_bytes_per_node: f64,
+    pub groot_base_mb: f64,
+    pub groot_bytes_per_node: f64,
+    /// Device capacity used for OOM marking (A100-SXM 80 GB).
+    pub device_mb: f64,
+}
+
+impl Default for MemModel {
+    fn default() -> Self {
+        MemModel {
+            gamora_base_mb: 1226.0,
+            gamora_bytes_per_node: 838.0,
+            groot_base_mb: 2391.0,
+            groot_bytes_per_node: 730.0,
+            device_mb: 80.0 * 1024.0,
+        }
+    }
+}
+
+impl MemModel {
+    /// GAMORA full-graph footprint (MB) for `nodes` graph nodes.
+    pub fn gamora_mb(&self, nodes: usize) -> f64 {
+        self.gamora_base_mb + self.gamora_bytes_per_node * nodes as f64 / 1e6
+    }
+
+    /// GROOT footprint (MB): the device holds one re-grown partition at a
+    /// time; `peak_partition_nodes` = max over partitions of |S_p ∪ B_p|.
+    pub fn groot_mb(&self, peak_partition_nodes: usize) -> f64 {
+        self.groot_base_mb + self.groot_bytes_per_node * peak_partition_nodes as f64 / 1e6
+    }
+
+    pub fn is_oom(&self, mb: f64) -> bool {
+        mb > self.device_mb
+    }
+}
+
+/// CSA node count at the *paper's* graph density — its 1024-bit batch-16
+/// workload has 134,103,040 nodes, i.e. 134,103,040/16 ≈ 7.995 · bits²
+/// per graph (ABC's generator is slightly denser-optimized than ours).
+/// Used when reproducing the paper's memory tables at their scale.
+pub fn csa_nodes_paper(bits: usize, batch: usize) -> usize {
+    ((7.995 * (bits as f64) * (bits as f64)) as usize) * batch
+}
+
+/// CSA multiplier EDA-graph node count of *our* generator: exact by
+/// construction below 256 bits, closed-form (measured density ≈ 9.96·n²)
+/// beyond.
+pub fn csa_nodes(bits: usize, batch: usize) -> usize {
+    let per_graph = if bits <= 256 {
+        let g = crate::aig::mult::csa_multiplier(bits);
+        g.num_nodes() + g.num_outputs()
+    } else {
+        (9.96 * (bits as f64) * (bits as f64)) as usize
+    };
+    per_graph * batch
+}
+
+/// Measured peak re-grown partition size for a graph this container can
+/// build: runs the real partitioner + Algorithm 1.
+pub fn measured_peak_partition(
+    graph: &crate::features::EdaGraph,
+    partitions: usize,
+    regrow: bool,
+    seed: u64,
+) -> crate::regrowth::RegrowthStats {
+    let csr = crate::graph::Csr::symmetric_from_edges(graph.num_nodes, &graph.edges);
+    let p = partition_kway(&csr, partitions, seed);
+    let parts = regrow_partitions(&csr, &p, regrow);
+    crate::regrowth::stats(&parts)
+}
+
+/// Boundary-overhead extrapolation: measure the re-grown boundary
+/// fraction φ(P) at a feasible width, apply it at the target size.
+/// EDA-graph cuts scale near-linearly in the bit width (the array has a
+/// 1-D column structure), so φ(P) is roughly width-independent — which we
+/// check by measuring two widths in the harness.
+pub fn extrapolated_peak_partition(nodes: usize, partitions: usize, phi: f64) -> usize {
+    let per = nodes as f64 / partitions.max(1) as f64;
+    (per * (1.0 + phi)) as usize
+}
+
+/// Convenience: Table II style row (model only, for sizes beyond measure).
+pub fn tab2_row(model: &MemModel, nodes: usize, partitions: &[usize], phi: &[f64]) -> Vec<f64> {
+    partitions
+        .iter()
+        .zip(phi)
+        .map(|(&p, &f)| model.groot_mb(extrapolated_peak_partition(nodes, p, f)))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn calibration_reproduces_table2_gamora() {
+        let m = MemModel::default();
+        // paper: 256-bit → 8,263 MB; 512-bit → 29,375 MB; 1024-bit → OOM
+        let n256 = csa_nodes_paper(256, 16);
+        let n512 = csa_nodes_paper(512, 16);
+        let n1024 = csa_nodes_paper(1024, 16);
+        let e256 = (m.gamora_mb(n256) - 8263.0).abs() / 8263.0;
+        let e512 = (m.gamora_mb(n512) - 29375.0).abs() / 29375.0;
+        assert!(e256 < 0.10, "256-bit rel err {e256}");
+        assert!(e512 < 0.10, "512-bit rel err {e512}");
+        assert!(m.is_oom(m.gamora_mb(n1024)), "1024-bit must be OOM");
+    }
+
+    #[test]
+    fn calibration_reproduces_table2_groot() {
+        let m = MemModel::default();
+        let n256 = csa_nodes_paper(256, 16);
+        // paper GROOT rows for 256-bit: P=2 → 5457, P=4 → 3923, P=8 → 3157
+        for (p, want) in [(2usize, 5457.0), (4, 3923.0), (8, 3157.0)] {
+            let got = m.groot_mb(extrapolated_peak_partition(n256, p, 0.0));
+            let rel = (got - want).abs() / want;
+            assert!(rel < 0.10, "P={p}: got {got} want {want} rel {rel}");
+        }
+    }
+
+    #[test]
+    fn csa_nodes_formula_matches_paper_anchor() {
+        // paper: 1024-bit, batch 16 → 134,103,040 nodes
+        let n = csa_nodes_paper(1024, 16);
+        let rel = (n as f64 - 134_103_040.0).abs() / 134_103_040.0;
+        assert!(rel < 0.01, "1024b16 nodes {n}");
+    }
+
+    #[test]
+    fn our_generator_density_is_close_to_papers() {
+        // our unoptimized array generator is ~25% denser than ABC's; the
+        // closed form for large widths must match our measured density
+        let exact = csa_nodes(256, 1);
+        let formula = (9.96 * 256.0 * 256.0) as usize;
+        let rel = (exact as f64 - formula as f64).abs() / exact as f64;
+        assert!(rel < 0.05, "exact {exact} vs formula {formula}");
+    }
+
+    #[test]
+    fn measured_boundary_fraction_is_small() {
+        let g = crate::datasets::build(crate::datasets::DatasetKind::Csa, 32).unwrap();
+        let s = measured_peak_partition(&g, 8, true, 1);
+        let phi = s.total_boundary_nodes as f64 / s.total_core_nodes as f64;
+        assert!(phi < 0.5, "boundary fraction {phi}");
+        // memory decreases with more partitions
+        let m = MemModel::default();
+        let s2 = measured_peak_partition(&g, 2, true, 1);
+        assert!(m.groot_mb(s.max_partition_nodes) < m.groot_mb(s2.max_partition_nodes));
+    }
+}

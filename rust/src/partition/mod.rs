@@ -1,0 +1,193 @@
+//! Graph partitioning — the METIS substitute (§III-C).
+//!
+//! Multilevel recursive bisection in the Karypis–Kumar style:
+//! 1. **Coarsen** by heavy-edge matching until the graph is small,
+//! 2. **initial partition** by BFS region growth from a pseudo-peripheral
+//!    seed to the target weight,
+//! 3. **uncoarsen + refine** with a boundary Fiedler-free FM pass per level.
+//!
+//! k-way is obtained by recursive bisection with proportional targets, so
+//! any k ≥ 1 (not just powers of two) is supported. Baselines used by the
+//! ablation benches: random assignment and BFS-chunking.
+
+pub mod multilevel;
+
+use crate::graph::Csr;
+use crate::util::rng::Rng;
+
+/// A k-way partitioning: `assignment[u] ∈ 0..k`.
+#[derive(Clone, Debug)]
+pub struct Partitioning {
+    pub k: usize,
+    pub assignment: Vec<u32>,
+}
+
+impl Partitioning {
+    /// Node sets per partition.
+    pub fn parts(&self) -> Vec<Vec<u32>> {
+        let mut out = vec![Vec::new(); self.k];
+        for (u, &p) in self.assignment.iter().enumerate() {
+            out[p as usize].push(u as u32);
+        }
+        out
+    }
+
+    /// Number of edges cut (each undirected adjacency pair counted once).
+    pub fn edge_cut(&self, csr: &Csr) -> usize {
+        let mut cut = 0;
+        for u in 0..csr.num_nodes() {
+            for &v in csr.neighbors(u) {
+                if (v as usize) > u && self.assignment[u] != self.assignment[v as usize] {
+                    cut += 1;
+                }
+            }
+        }
+        cut
+    }
+
+    /// Max part size / ideal part size.
+    pub fn balance(&self) -> f64 {
+        let mut sizes = vec![0usize; self.k];
+        for &p in &self.assignment {
+            sizes[p as usize] += 1;
+        }
+        let max = *sizes.iter().max().unwrap_or(&0) as f64;
+        let ideal = self.assignment.len() as f64 / self.k as f64;
+        if ideal == 0.0 {
+            1.0
+        } else {
+            max / ideal
+        }
+    }
+
+    pub fn check(&self, n: usize) -> anyhow::Result<()> {
+        anyhow::ensure!(self.assignment.len() == n, "assignment length");
+        anyhow::ensure!(
+            self.assignment.iter().all(|&p| (p as usize) < self.k),
+            "part id out of range"
+        );
+        Ok(())
+    }
+}
+
+/// Multilevel k-way partitioning (the default used by the coordinator).
+pub fn partition_kway(csr: &Csr, k: usize, seed: u64) -> Partitioning {
+    multilevel::partition_kway(csr, k, seed)
+}
+
+/// Random assignment baseline (worst cut, perfect balance in expectation).
+pub fn partition_random(n: usize, k: usize, seed: u64) -> Partitioning {
+    let mut rng = Rng::new(seed);
+    let assignment = (0..n).map(|_| rng.below(k) as u32).collect();
+    Partitioning { k, assignment }
+}
+
+/// BFS-chunk baseline: BFS order split into k contiguous chunks. Captures
+/// locality without any cut optimization.
+pub fn partition_bfs(csr: &Csr, k: usize) -> Partitioning {
+    let n = csr.num_nodes();
+    let mut order = Vec::with_capacity(n);
+    let mut seen = vec![false; n];
+    for start in 0..n {
+        if seen[start] {
+            continue;
+        }
+        let mut queue = std::collections::VecDeque::new();
+        queue.push_back(start as u32);
+        seen[start] = true;
+        while let Some(u) = queue.pop_front() {
+            order.push(u);
+            for &v in csr.neighbors(u as usize) {
+                if !seen[v as usize] {
+                    seen[v as usize] = true;
+                    queue.push_back(v);
+                }
+            }
+        }
+    }
+    let chunk = n.div_ceil(k.max(1));
+    let mut assignment = vec![0u32; n];
+    for (i, &u) in order.iter().enumerate() {
+        assignment[u as usize] = (i / chunk) as u32;
+    }
+    Partitioning { k, assignment }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::features::EdaGraph;
+    use crate::util::prop::check;
+
+    fn mult_csr(bits: usize) -> Csr {
+        let g = crate::aig::mult::csa_multiplier(bits);
+        let eg = EdaGraph::from_aig(&g);
+        Csr::symmetric_from_edges(eg.num_nodes, &eg.edges)
+    }
+
+    #[test]
+    fn kway_is_valid_and_balanced() {
+        let csr = mult_csr(8);
+        for k in [2usize, 3, 4, 8, 16] {
+            let p = partition_kway(&csr, k, 1);
+            p.check(csr.num_nodes()).unwrap();
+            let sizes = p.parts().iter().map(|s| s.len()).collect::<Vec<_>>();
+            assert_eq!(sizes.iter().sum::<usize>(), csr.num_nodes());
+            assert!(
+                p.balance() < 1.35,
+                "k={k} balance {} sizes {sizes:?}",
+                p.balance()
+            );
+        }
+    }
+
+    #[test]
+    fn multilevel_beats_random_cut() {
+        let csr = mult_csr(12);
+        let ml = partition_kway(&csr, 8, 1);
+        let rnd = partition_random(csr.num_nodes(), 8, 1);
+        let (c_ml, c_rnd) = (ml.edge_cut(&csr), rnd.edge_cut(&csr));
+        assert!(
+            (c_ml as f64) < 0.5 * c_rnd as f64,
+            "multilevel {c_ml} vs random {c_rnd}"
+        );
+    }
+
+    #[test]
+    fn multilevel_beats_or_matches_bfs() {
+        let csr = mult_csr(12);
+        let ml = partition_kway(&csr, 8, 1);
+        let bfs = partition_bfs(&csr, 8);
+        assert!(
+            ml.edge_cut(&csr) <= bfs.edge_cut(&csr) * 2,
+            "ml {} bfs {}",
+            ml.edge_cut(&csr),
+            bfs.edge_cut(&csr)
+        );
+    }
+
+    #[test]
+    fn k_equals_one_and_k_ge_n() {
+        let csr = mult_csr(4);
+        let p1 = partition_kway(&csr, 1, 0);
+        assert!(p1.assignment.iter().all(|&p| p == 0));
+        assert_eq!(p1.edge_cut(&csr), 0);
+        let pk = partition_kway(&csr, csr.num_nodes(), 0);
+        pk.check(csr.num_nodes()).unwrap();
+    }
+
+    #[test]
+    fn random_graphs_property() {
+        check("partition valid on random graphs", 25, |g| {
+            let n = g.usize(2..200);
+            let m = g.usize(1..400);
+            let edges: Vec<(u32, u32)> = (0..m)
+                .map(|_| (g.usize(0..n) as u32, g.usize(0..n) as u32))
+                .collect();
+            let csr = Csr::symmetric_from_edges(n, &edges);
+            let k = g.usize(1..9).min(n);
+            let p = partition_kway(&csr, k, g.u64());
+            p.check(n).unwrap();
+        });
+    }
+}

@@ -1,0 +1,276 @@
+//! Boundary edge re-growth — Algorithm 1 of the paper (Eqs. 1–2).
+//!
+//! After partitioning removes cross-partition edges, each partition p is
+//! augmented with its one-hop boundary:
+//!
+//! ```text
+//! N(S_p) = ⋃_{u∈S_p} N(u)          all one-hop neighbors
+//! B_p    = N(S_p) \ S_p            boundary nodes
+//! C_p    = {(i,j) ∈ E | i∈S_p ∧ j∈B_p  ∨  i∈B_p ∧ j∈S_p}
+//! S_p⁺   = S_p ∪ B_p
+//! E_p⁺   = E[S_p] ∪ C_p
+//! ```
+//!
+//! The re-grown partition restores message passing for the core nodes'
+//! first hop; boundary nodes exist only as feature providers (their own
+//! predictions are discarded when stitching — core nodes are classified by
+//! exactly one partition).
+
+use crate::graph::Csr;
+use crate::partition::Partitioning;
+
+/// One partition after (optional) boundary re-growth, in local index space:
+/// locals `0..num_core` are the core S_p (in `nodes` order), the rest are
+/// boundary B_p.
+#[derive(Clone, Debug)]
+pub struct RegrownPartition {
+    pub part_id: usize,
+    /// Global node ids; core first, then boundary.
+    pub nodes: Vec<u32>,
+    pub num_core: usize,
+    /// Undirected adjacency edges in local ids (u < v once per pair).
+    pub edges: Vec<(u32, u32)>,
+    /// Of which, crossing edges C_p (tail of `edges`): count.
+    pub num_crossing: usize,
+}
+
+impl RegrownPartition {
+    pub fn num_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn num_boundary(&self) -> usize {
+        self.nodes.len() - self.num_core
+    }
+
+    /// Local symmetric CSR for this partition.
+    pub fn csr(&self) -> Csr {
+        Csr::symmetric_from_edges(self.nodes.len(), &self.edges)
+    }
+}
+
+/// Apply Algorithm 1 to every partition. `csr` must be the symmetric
+/// closure of the EDA graph. When `regrow` is false, only E[S_p] is kept
+/// (the ablation the paper's dashed accuracy curves measure).
+pub fn regrow_partitions(
+    csr: &Csr,
+    partitioning: &Partitioning,
+    regrow: bool,
+) -> Vec<RegrownPartition> {
+    let parts = partitioning.parts();
+    let assignment = &partitioning.assignment;
+    parts
+        .iter()
+        .enumerate()
+        .map(|(p, core)| build_partition(csr, assignment, p, core, regrow))
+        .collect()
+}
+
+fn build_partition(
+    csr: &Csr,
+    assignment: &[u32],
+    p: usize,
+    core: &[u32],
+    regrow: bool,
+) -> RegrownPartition {
+    let mut local: std::collections::HashMap<u32, u32> =
+        std::collections::HashMap::with_capacity(core.len() * 2);
+    for (i, &u) in core.iter().enumerate() {
+        local.insert(u, i as u32);
+    }
+    let mut nodes = core.to_vec();
+    let mut edges = Vec::new();
+    // E[S_p]: internal edges, counted once (u < v in global id).
+    for &u in core {
+        for &v in csr.neighbors(u as usize) {
+            if v > u && assignment[v as usize] as usize == p {
+                edges.push((local[&u], local[&v]));
+            }
+        }
+    }
+    let internal = edges.len();
+    if regrow {
+        // B_p in deterministic (ascending global id) order.
+        let mut boundary: Vec<u32> = Vec::new();
+        for &u in core {
+            for &v in csr.neighbors(u as usize) {
+                if assignment[v as usize] as usize != p && !local.contains_key(&v) {
+                    local.insert(v, 0); // placeholder, fixed below
+                    boundary.push(v);
+                }
+            }
+        }
+        boundary.sort_unstable();
+        for (j, &b) in boundary.iter().enumerate() {
+            local.insert(b, (core.len() + j) as u32);
+        }
+        nodes.extend_from_slice(&boundary);
+        // C_p: crossing edges, once per adjacency pair.
+        for &u in core {
+            let lu = local[&u];
+            for &v in csr.neighbors(u as usize) {
+                if assignment[v as usize] as usize != p {
+                    edges.push((lu, local[&v]));
+                }
+            }
+        }
+    }
+    RegrownPartition {
+        part_id: p,
+        num_core: core.len(),
+        nodes,
+        num_crossing: edges.len() - internal,
+        edges,
+    }
+}
+
+/// Statistics over a set of re-grown partitions — the numbers behind the
+/// paper's "≈10% boundary edges" claim and the memory model's re-growth
+/// overhead term.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RegrowthStats {
+    pub total_core_nodes: usize,
+    pub total_boundary_nodes: usize,
+    pub total_internal_edges: usize,
+    pub total_crossing_edges: usize,
+    pub max_partition_nodes: usize,
+}
+
+pub fn stats(parts: &[RegrownPartition]) -> RegrowthStats {
+    let mut s = RegrowthStats::default();
+    for p in parts {
+        s.total_core_nodes += p.num_core;
+        s.total_boundary_nodes += p.num_boundary();
+        s.total_internal_edges += p.edges.len() - p.num_crossing;
+        s.total_crossing_edges += p.num_crossing;
+        s.max_partition_nodes = s.max_partition_nodes.max(p.num_nodes());
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::features::EdaGraph;
+    use crate::partition::{partition_kway, Partitioning};
+    use crate::util::prop::check;
+
+    /// Brute-force oracle computing Eqs. (1)–(2) directly from edge sets.
+    fn oracle(
+        n: usize,
+        edges: &[(u32, u32)],
+        assignment: &[u32],
+        p: u32,
+    ) -> (
+        std::collections::BTreeSet<u32>,
+        std::collections::BTreeSet<(u32, u32)>,
+    ) {
+        use std::collections::BTreeSet;
+        let s_p: BTreeSet<u32> = (0..n as u32).filter(|&u| assignment[u as usize] == p).collect();
+        // symmetric neighbor relation
+        let mut nbr: Vec<BTreeSet<u32>> = vec![BTreeSet::new(); n];
+        for &(a, b) in edges {
+            if a != b {
+                nbr[a as usize].insert(b);
+                nbr[b as usize].insert(a);
+            }
+        }
+        let mut n_sp: BTreeSet<u32> = BTreeSet::new();
+        for &u in &s_p {
+            n_sp.extend(nbr[u as usize].iter().copied());
+        }
+        let b_p: BTreeSet<u32> = n_sp.difference(&s_p).copied().collect();
+        // E_p+ as unordered pairs (min,max)
+        let mut e_plus = BTreeSet::new();
+        for &(a, b) in edges {
+            if a == b {
+                continue;
+            }
+            let pair = (a.min(b), a.max(b));
+            let (ia, ib) = (s_p.contains(&a), s_p.contains(&b));
+            let (ba, bb) = (b_p.contains(&a), b_p.contains(&b));
+            if (ia && ib) || (ia && bb) || (ba && ib) {
+                e_plus.insert(pair);
+            }
+        }
+        let s_plus: BTreeSet<u32> = s_p.union(&b_p).copied().collect();
+        (s_plus, e_plus)
+    }
+
+    #[test]
+    fn matches_oracle_on_random_graphs() {
+        check("regrowth == Eq(1-2) oracle", 40, |g| {
+            let n = g.usize(3..60);
+            let m = g.usize(2..150);
+            let edges: Vec<(u32, u32)> = (0..m)
+                .map(|_| (g.usize(0..n) as u32, g.usize(0..n) as u32))
+                .filter(|&(a, b)| a != b)
+                .collect();
+            let k = g.usize(2..6).min(n);
+            let assignment: Vec<u32> = (0..n).map(|_| g.usize(0..k) as u32).collect();
+            let csr = crate::graph::Csr::symmetric_from_edges(n, &edges);
+            let partitioning = Partitioning { k, assignment: assignment.clone() };
+            let parts = regrow_partitions(&csr, &partitioning, true);
+            for part in &parts {
+                let (s_plus, e_plus) = oracle(n, &edges, &assignment, part.part_id as u32);
+                let got_nodes: std::collections::BTreeSet<u32> =
+                    part.nodes.iter().copied().collect();
+                assert_eq!(got_nodes, s_plus, "S_p+ mismatch part {}", part.part_id);
+                let got_edges: std::collections::BTreeSet<(u32, u32)> = part
+                    .edges
+                    .iter()
+                    .map(|&(lu, lv)| {
+                        let (gu, gv) = (part.nodes[lu as usize], part.nodes[lv as usize]);
+                        (gu.min(gv), gu.max(gv))
+                    })
+                    .collect();
+                assert_eq!(got_edges, e_plus, "E_p+ mismatch part {}", part.part_id);
+            }
+        });
+    }
+
+    #[test]
+    fn no_regrow_keeps_only_internal() {
+        let g = crate::aig::mult::csa_multiplier(6);
+        let eg = EdaGraph::from_aig(&g);
+        let csr = crate::graph::Csr::symmetric_from_edges(eg.num_nodes, &eg.edges);
+        let p = partition_kway(&csr, 4, 1);
+        let cut = p.edge_cut(&csr);
+        let parts = regrow_partitions(&csr, &p, false);
+        let s = stats(&parts);
+        assert_eq!(s.total_boundary_nodes, 0);
+        assert_eq!(s.total_crossing_edges, 0);
+        // internal edges + cut = all undirected pairs
+        let total_pairs = csr.num_entries() / 2;
+        assert_eq!(s.total_internal_edges + cut, total_pairs);
+    }
+
+    #[test]
+    fn regrow_covers_every_cut_edge_twice() {
+        let g = crate::aig::mult::csa_multiplier(6);
+        let eg = EdaGraph::from_aig(&g);
+        let csr = crate::graph::Csr::symmetric_from_edges(eg.num_nodes, &eg.edges);
+        let p = partition_kway(&csr, 4, 1);
+        let cut = p.edge_cut(&csr);
+        let parts = regrow_partitions(&csr, &p, true);
+        let s = stats(&parts);
+        // each cut pair appears as a crossing edge in both endpoint parts
+        assert_eq!(s.total_crossing_edges, 2 * cut);
+        // cores tile the graph exactly
+        assert_eq!(s.total_core_nodes, eg.num_nodes);
+    }
+
+    #[test]
+    fn boundary_fraction_is_modest_on_eda_graphs() {
+        // paper §III-C: ~10% boundary edges between partitions
+        let g = crate::aig::mult::csa_multiplier(16);
+        let eg = EdaGraph::from_aig(&g);
+        let csr = crate::graph::Csr::symmetric_from_edges(eg.num_nodes, &eg.edges);
+        let p = partition_kway(&csr, 8, 1);
+        let parts = regrow_partitions(&csr, &p, true);
+        let s = stats(&parts);
+        let frac =
+            s.total_crossing_edges as f64 / (s.total_internal_edges + s.total_crossing_edges) as f64;
+        assert!(frac < 0.35, "crossing fraction {frac}");
+    }
+}

@@ -1,0 +1,138 @@
+//! `artifacts/manifest.txt` parsing — the contract between `compile/aot.py`
+//! and the rust runtime.
+//!
+//! Format (line-oriented, written by aot.py):
+//! ```text
+//! feature_dim 4
+//! num_classes 5
+//! k_ld 16
+//! k_hd 512
+//! params l0.w_self l0.w_neigh l0.b l1.w_self ...
+//! bucket n=1024 h=16 file=sage_n1024.hlo.txt
+//! bucket n=4096 h=64 file=sage_n4096.hlo.txt
+//! ```
+
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+#[derive(Clone, Debug)]
+pub struct BucketSpec {
+    pub n: usize,
+    pub h: usize,
+    pub file: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub feature_dim: usize,
+    pub num_classes: usize,
+    pub k_ld: usize,
+    pub k_hd: usize,
+    pub param_names: Vec<String>,
+    /// Ascending by n (aot.py writes them in order; we sort anyway).
+    pub buckets: Vec<BucketSpec>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let mut feature_dim = None;
+        let mut num_classes = None;
+        let mut k_ld = None;
+        let mut k_hd = None;
+        let mut param_names = Vec::new();
+        let mut buckets = Vec::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut it = line.split_whitespace();
+            match it.next() {
+                Some("feature_dim") => feature_dim = Some(parse_next(&mut it, line)?),
+                Some("num_classes") => num_classes = Some(parse_next(&mut it, line)?),
+                Some("k_ld") => k_ld = Some(parse_next(&mut it, line)?),
+                Some("k_hd") => k_hd = Some(parse_next(&mut it, line)?),
+                Some("params") => param_names = it.map(|s| s.to_string()).collect(),
+                Some("bucket") => {
+                    let mut n = None;
+                    let mut h = None;
+                    let mut file = None;
+                    for kv in it {
+                        match kv.split_once('=') {
+                            Some(("n", v)) => n = Some(v.parse()?),
+                            Some(("h", v)) => h = Some(v.parse()?),
+                            Some(("file", v)) => file = Some(v.to_string()),
+                            _ => bail!("bad bucket field '{kv}'"),
+                        }
+                    }
+                    buckets.push(BucketSpec {
+                        n: n.context("bucket missing n")?,
+                        h: h.context("bucket missing h")?,
+                        file: file.context("bucket missing file")?,
+                    });
+                }
+                Some(other) => bail!("unknown manifest line '{other}'"),
+                None => {}
+            }
+        }
+        buckets.sort_by_key(|b| b.n);
+        anyhow::ensure!(!param_names.is_empty(), "manifest missing params line");
+        anyhow::ensure!(!buckets.is_empty(), "manifest has no buckets");
+        Ok(Manifest {
+            feature_dim: feature_dim.context("missing feature_dim")?,
+            num_classes: num_classes.context("missing num_classes")?,
+            k_ld: k_ld.context("missing k_ld")?,
+            k_hd: k_hd.context("missing k_hd")?,
+            param_names,
+            buckets,
+        })
+    }
+}
+
+fn parse_next(it: &mut std::str::SplitWhitespace<'_>, line: &str) -> Result<usize> {
+    it.next()
+        .with_context(|| format!("missing value in '{line}'"))?
+        .parse()
+        .with_context(|| format!("bad number in '{line}'"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+feature_dim 4
+num_classes 5
+k_ld 16
+k_hd 512
+params l0.w_self l0.w_neigh l0.b
+bucket n=4096 h=64 file=sage_n4096.hlo.txt
+bucket n=1024 h=16 file=sage_n1024.hlo.txt
+";
+
+    #[test]
+    fn parses_and_sorts() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.feature_dim, 4);
+        assert_eq!(m.num_classes, 5);
+        assert_eq!(m.k_ld, 16);
+        assert_eq!(m.k_hd, 512);
+        assert_eq!(m.param_names.len(), 3);
+        assert_eq!(m.buckets[0].n, 1024);
+        assert_eq!(m.buckets[1].n, 4096);
+        assert_eq!(m.buckets[0].file, "sage_n1024.hlo.txt");
+    }
+
+    #[test]
+    fn rejects_incomplete() {
+        assert!(Manifest::parse("feature_dim 4\n").is_err());
+        assert!(Manifest::parse("bucket n=1 file=x\n").is_err());
+        assert!(Manifest::parse(&SAMPLE.replace("k_hd 512\n", "")).is_err());
+    }
+}

@@ -1,0 +1,200 @@
+//! Bucket packing — rust mirror of `python/compile/kernels/ref.py
+//! pack_graph` (the two are kept in lockstep; the python side trains on
+//! this format, the rust side serves it).
+//!
+//! Low-degree rows (deg ≤ k_ld) are ELL-packed; heavier rows split into
+//! k_hd-wide chunks occupying HD slots that scatter-add back by row id.
+//! All weights carry the 1/deg mean-aggregation factor.
+
+use crate::graph::Csr;
+use anyhow::{bail, Result};
+
+/// Fixed-shape tensors for one bucket execution.
+#[derive(Clone, Debug)]
+pub struct PackedPartition {
+    pub n_bucket: usize,
+    pub h_bucket: usize,
+    /// Real (non-padding) rows.
+    pub num_real: usize,
+    pub features: Vec<f32>, // [n_bucket * feature_dim]
+    pub ld_cols: Vec<i32>,  // [n_bucket * k_ld]
+    pub ld_w: Vec<f32>,     // [n_bucket * k_ld]
+    pub hd_idx: Vec<i32>,   // [h_bucket]
+    pub hd_cols: Vec<i32>,  // [h_bucket * k_hd]
+    pub hd_w: Vec<f32>,     // [h_bucket * k_hd]
+}
+
+/// Pack a local CSR + per-node features into bucket tensors.
+/// `features` is row-major [csr.num_nodes() × feature_dim].
+pub fn pack_partition(
+    csr: &Csr,
+    features: &[f32],
+    feature_dim: usize,
+    n_bucket: usize,
+    h_bucket: usize,
+    k_ld: usize,
+    k_hd: usize,
+) -> Result<PackedPartition> {
+    let n = csr.num_nodes();
+    if n > n_bucket {
+        bail!("graph rows {n} exceed bucket {n_bucket}");
+    }
+    assert_eq!(features.len(), n * feature_dim);
+
+    let mut out = PackedPartition {
+        n_bucket,
+        h_bucket,
+        num_real: n,
+        features: vec![0.0; n_bucket * feature_dim],
+        ld_cols: vec![0; n_bucket * k_ld],
+        ld_w: vec![0.0; n_bucket * k_ld],
+        hd_idx: vec![0; h_bucket],
+        hd_cols: vec![0; h_bucket * k_hd],
+        hd_w: vec![0.0; h_bucket * k_hd],
+    };
+    out.features[..n * feature_dim].copy_from_slice(features);
+
+    let mut slot = 0usize;
+    for u in 0..n {
+        let nbs = csr.neighbors(u);
+        let deg = nbs.len();
+        if deg == 0 {
+            continue;
+        }
+        let inv = 1.0f32 / deg as f32;
+        if deg <= k_ld {
+            for (k, &v) in nbs.iter().enumerate() {
+                out.ld_cols[u * k_ld + k] = v as i32;
+                out.ld_w[u * k_ld + k] = inv;
+            }
+        } else {
+            let mut c0 = 0;
+            while c0 < deg {
+                let c1 = (c0 + k_hd).min(deg);
+                if slot >= h_bucket {
+                    bail!("out of HD slots (h_bucket={h_bucket}); use a larger bucket");
+                }
+                out.hd_idx[slot] = u as i32;
+                for (k, &v) in nbs[c0..c1].iter().enumerate() {
+                    out.hd_cols[slot * k_hd + k] = v as i32;
+                    out.hd_w[slot * k_hd + k] = inv;
+                }
+                slot += 1;
+                c0 = c1;
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// HD slots needed for a graph under (k_ld, k_hd) — used by the
+/// coordinator to choose a bucket before packing.
+pub fn hd_slots_needed(csr: &Csr, k_ld: usize, k_hd: usize) -> usize {
+    (0..csr.num_nodes())
+        .map(|u| {
+            let d = csr.degree(u);
+            if d > k_ld {
+                d.div_ceil(k_hd)
+            } else {
+                0
+            }
+        })
+        .sum()
+}
+
+/// Host-side evaluation of the packed format (mean aggregation) — the
+/// oracle that keeps rust packing equal to the CSR semantics and to the
+/// python packer.
+pub fn aggregate_packed(p: &PackedPartition, x: &[f32], dim: usize) -> Vec<f32> {
+    let k_ld = p.ld_cols.len() / p.n_bucket;
+    let k_hd = if p.h_bucket > 0 { p.hd_cols.len() / p.h_bucket } else { 0 };
+    let mut y = vec![0.0f32; p.n_bucket * dim];
+    for u in 0..p.n_bucket {
+        for k in 0..k_ld {
+            let w = p.ld_w[u * k_ld + k];
+            if w != 0.0 {
+                let v = p.ld_cols[u * k_ld + k] as usize;
+                for d in 0..dim {
+                    y[u * dim + d] += w * x[v * dim + d];
+                }
+            }
+        }
+    }
+    for s in 0..p.h_bucket {
+        let row = p.hd_idx[s] as usize;
+        for k in 0..k_hd {
+            let w = p.hd_w[s * k_hd + k];
+            if w != 0.0 {
+                let v = p.hd_cols[s * k_hd + k] as usize;
+                for d in 0..dim {
+                    y[row * dim + d] += w * x[v * dim + d];
+                }
+            }
+        }
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    #[test]
+    fn pack_matches_csr_mean_aggregation() {
+        check("pack == csr mean agg", 40, |g| {
+            let n = g.usize(2..120);
+            let m = g.usize(1..300);
+            let edges: Vec<(u32, u32)> = (0..m)
+                .map(|_| (g.usize(0..n) as u32, g.usize(0..n) as u32))
+                .collect();
+            let csr = Csr::symmetric_from_edges(n, &edges);
+            let dim = 3;
+            let x: Vec<f32> = (0..n * dim).map(|_| g.f32_range(-2.0, 2.0)).collect();
+            let n_bucket = 128;
+            let (k_ld, k_hd, h_bucket) = (4usize, 8usize, 512usize);
+            let p = pack_partition(&csr, &x, dim, n_bucket, h_bucket, k_ld, k_hd).unwrap();
+            let mut xb = vec![0.0f32; n_bucket * dim];
+            xb[..n * dim].copy_from_slice(&x);
+            let got = aggregate_packed(&p, &xb, dim);
+            let want = csr.spmm_mean_reference(&x, dim);
+            for u in 0..n {
+                for d in 0..dim {
+                    let (a, b) = (got[u * dim + d], want[u * dim + d]);
+                    assert!((a - b).abs() < 1e-4, "row {u} dim {d}: {a} vs {b}");
+                }
+            }
+            // padding rows stay zero
+            for v in &got[n * dim..] {
+                assert_eq!(*v, 0.0);
+            }
+        });
+    }
+
+    #[test]
+    fn oversize_rows_split_across_slots() {
+        // hub of degree 20, k_hd = 8 → 3 slots
+        let edges: Vec<(u32, u32)> = (1..=20).map(|v| (0u32, v as u32)).collect();
+        let csr = Csr::symmetric_from_edges(21, &edges);
+        assert_eq!(hd_slots_needed(&csr, 4, 8), 3);
+        let x = vec![1.0f32; 21];
+        let p = pack_partition(&csr, &x, 1, 32, 8, 4, 8).unwrap();
+        let used: Vec<i32> = p
+            .hd_idx
+            .iter()
+            .zip(p.hd_w.chunks(8))
+            .filter(|(_, w)| w.iter().any(|&x| x != 0.0))
+            .map(|(&i, _)| i)
+            .collect();
+        assert_eq!(used, vec![0, 0, 0]);
+    }
+
+    #[test]
+    fn errors_when_bucket_too_small() {
+        let edges: Vec<(u32, u32)> = (1..=20).map(|v| (0u32, v as u32)).collect();
+        let csr = Csr::symmetric_from_edges(21, &edges);
+        let x = vec![0.0f32; 21];
+        assert!(pack_partition(&csr, &x, 1, 8, 8, 4, 8).is_err()); // n too small
+        assert!(pack_partition(&csr, &x, 1, 32, 1, 4, 8).is_err()); // h too small
+    }
+}

@@ -1,0 +1,299 @@
+//! GROOT-GPU SpMM — the paper's HD/LD kernel pair (§IV), CPU analogue.
+//!
+//! * **HD path** (Fig. 4): each high-degree row's nonzeros are split into
+//!   equal chunks processed by different workers (the 32-warp row split);
+//!   per-chunk partials land in a scratch array and are reduced into the
+//!   output row (shared-memory reduction analogue).
+//! * **LD path** (Fig. 5): rows are degree-sorted (count sort, O(n)) and
+//!   processed many-rows-per-task in ascending degree order; within a task
+//!   the inner loop is over a fixed degree class, so the compiler
+//!   vectorizes cleanly and the output rows of a task are written
+//!   contiguously in sorted order ("coalesced dumping").
+//!
+//! The degree profile is cached per graph (keyed by (n, nnz, row_ptr ptr))
+//! because the model runs one SpMM per GraphSAGE layer on the same graph.
+
+use super::SpmmEngine;
+use crate::graph::{Csr, DegreeProfile};
+use crate::util::pool::{parallel_for_dynamic, parallel_for_static, SendPtr};
+use std::sync::Mutex;
+
+/// Tunables (paper defaults; ablations sweep these).
+#[derive(Clone, Copy, Debug)]
+pub struct GrootConfig {
+    /// Degree at or above which a row takes the HD path.
+    pub hd_threshold: usize,
+    /// Nonzeros per HD chunk (the per-warp workload).
+    pub hd_chunk: usize,
+    /// Rows per LD task is chosen so each task has ≈ this many nonzeros
+    /// (the paper's nz_max per-warp row aggregation).
+    pub ld_nnz_per_task: usize,
+    /// Degree-sort the LD rows (the paper's Fig. 5 count-sort). Shapes
+    /// tasks for lane balance on wide machines; on a cache-based serial
+    /// CPU it costs x-gather locality (§Perf ablation), so CPU-serial
+    /// deployments may disable it — task *sizing* still follows degrees.
+    pub ld_degree_sort: bool,
+}
+
+impl Default for GrootConfig {
+    fn default() -> Self {
+        GrootConfig {
+            hd_threshold: 512,
+            hd_chunk: 1024,
+            ld_nnz_per_task: 2048,
+            ld_degree_sort: true,
+        }
+    }
+}
+
+struct CachedPlan {
+    key: (usize, usize, usize),
+    profile: DegreeProfile,
+    /// LD rows grouped into tasks: (start, end) index ranges into
+    /// profile.ld_rows.
+    ld_tasks: Vec<(usize, usize)>,
+    /// HD chunks: (row, col_start, col_end, scratch_slot).
+    hd_chunks: Vec<(u32, usize, usize, usize)>,
+    /// scratch slots per HD row: (row, slot_start, slot_count).
+    hd_reduce: Vec<(u32, usize, usize)>,
+}
+
+pub struct GrootSpmm {
+    threads: usize,
+    pub config: GrootConfig,
+    plan: Mutex<Option<CachedPlan>>,
+}
+
+impl GrootSpmm {
+    /// Default engine: paper-faithful config, except the LD degree sort is
+    /// only enabled when there are parallel lanes to shape — on a single
+    /// thread it costs gather locality and buys nothing (§Perf ablation:
+    /// −13% serial on booth128).
+    pub fn new(threads: usize) -> Self {
+        Self::with_config(
+            threads,
+            GrootConfig { ld_degree_sort: threads > 1, ..GrootConfig::default() },
+        )
+    }
+
+    pub fn with_config(threads: usize, config: GrootConfig) -> Self {
+        GrootSpmm { threads: threads.max(1), config, plan: Mutex::new(None) }
+    }
+
+    fn build_plan(&self, csr: &Csr) -> CachedPlan {
+        let mut profile = DegreeProfile::new(csr, self.config.hd_threshold, 12);
+        if !self.config.ld_degree_sort {
+            // natural row order (cache-friendly serial variant)
+            profile.ld_rows.sort_unstable();
+        }
+        // LD tasks: ascending-degree runs of ≈ ld_nnz_per_task nonzeros.
+        // The budget adapts downward on small graphs so there are always
+        // enough tasks to balance across lanes (§Perf: fixes the 1.35
+        // imbalance seen on 64-bit graphs at 32 lanes).
+        let total_ld_nnz: usize = profile
+            .ld_rows
+            .iter()
+            .map(|&u| csr.degree(u as usize))
+            .sum();
+        let budget = self
+            .config
+            .ld_nnz_per_task
+            .min((total_ld_nnz / 256).max(64));
+        let mut ld_tasks = Vec::new();
+        let mut start = 0usize;
+        let mut acc = 0usize;
+        for (i, &u) in profile.ld_rows.iter().enumerate() {
+            acc += csr.degree(u as usize);
+            if acc >= budget {
+                ld_tasks.push((start, i + 1));
+                start = i + 1;
+                acc = 0;
+            }
+        }
+        if start < profile.ld_rows.len() {
+            ld_tasks.push((start, profile.ld_rows.len()));
+        }
+        // HD chunks + reduction plan.
+        let mut hd_chunks = Vec::new();
+        let mut hd_reduce = Vec::new();
+        let mut slot = 0usize;
+        for &u in &profile.hd_rows {
+            let deg = csr.degree(u as usize);
+            let nchunks = deg.div_ceil(self.config.hd_chunk);
+            hd_reduce.push((u, slot, nchunks));
+            for c in 0..nchunks {
+                let c0 = c * self.config.hd_chunk;
+                let c1 = ((c + 1) * self.config.hd_chunk).min(deg);
+                hd_chunks.push((u, c0, c1, slot + c));
+            }
+            slot += nchunks;
+        }
+        CachedPlan {
+            key: plan_key(csr),
+            profile,
+            ld_tasks,
+            hd_chunks,
+            hd_reduce,
+        }
+    }
+}
+
+fn plan_key(csr: &Csr) -> (usize, usize, usize) {
+    (
+        csr.num_nodes(),
+        csr.num_entries(),
+        csr.row_ptr.as_ptr() as usize,
+    )
+}
+
+impl SpmmEngine for GrootSpmm {
+    fn name(&self) -> &'static str {
+        "groot-gpu"
+    }
+
+    fn worker_loads(&self, csr: &Csr, workers: usize) -> Vec<u64> {
+        // LD: degree-sorted nnz-budgeted tasks; HD: every wide row split
+        // into hd_chunk-sized pieces — no single task exceeds hd_chunk,
+        // which is the whole point of the HD kernel.
+        let plan = self.build_plan(csr);
+        let ld = plan.ld_tasks.iter().map(|&(s, e)| {
+            plan.profile.ld_rows[s..e]
+                .iter()
+                .map(|&u| csr.degree(u as usize) as u64)
+                .sum::<u64>()
+        });
+        let hd = plan
+            .hd_chunks
+            .iter()
+            .map(|&(_, c0, c1, _)| (c1 - c0) as u64);
+        super::simulate_dynamic(hd.chain(ld), workers)
+    }
+
+    fn spmm_mean(&self, csr: &Csr, x: &[f32], dim: usize) -> Vec<f32> {
+        let n = csr.num_nodes();
+        let mut y = vec![0.0f32; n * dim];
+        if n == 0 {
+            return y;
+        }
+        // Fetch or rebuild the cached plan.
+        let mut guard = self.plan.lock().unwrap();
+        if guard.as_ref().map(|p| p.key != plan_key(csr)).unwrap_or(true) {
+            *guard = Some(self.build_plan(csr));
+        }
+        let plan = guard.as_ref().unwrap();
+
+        let ptr = SendPtr(y.as_mut_ptr());
+
+        // --- LD path: dynamic over degree-sorted row tasks. ---
+        parallel_for_dynamic(self.threads, plan.ld_tasks.len(), 1, |_, ts, te| {
+            let ptr = &ptr;
+            for t in ts..te {
+                let (s, e) = plan.ld_tasks[t];
+                for i in s..e {
+                    let u = plan.profile.ld_rows[i] as usize;
+                    let orow =
+                        unsafe { std::slice::from_raw_parts_mut(ptr.0.add(u * dim), dim) };
+                    super::engines::row_mean(csr, x, dim, u, orow);
+                }
+            }
+        });
+
+        // --- HD path: chunk partials into scratch, then reduce. ---
+        if !plan.hd_chunks.is_empty() {
+            let nslots: usize = plan.hd_reduce.iter().map(|&(_, _, c)| c).sum();
+            let mut scratch = vec![0.0f32; nslots * dim];
+            let sptr = SendPtr(scratch.as_mut_ptr());
+            parallel_for_dynamic(self.threads, plan.hd_chunks.len(), 1, |_, cs, ce| {
+                let sptr = &sptr;
+                for c in cs..ce {
+                    let (u, c0, c1, slot) = plan.hd_chunks[c];
+                    let base = csr.row_ptr[u as usize];
+                    let srow =
+                        unsafe { std::slice::from_raw_parts_mut(sptr.0.add(slot * dim), dim) };
+                    for &v in &csr.col_idx[base + c0..base + c1] {
+                        let xrow = &x[v as usize * dim..(v as usize + 1) * dim];
+                        for d in 0..dim {
+                            srow[d] += xrow[d];
+                        }
+                    }
+                }
+            });
+            // Reduction (parallel over HD rows).
+            parallel_for_static(self.threads, plan.hd_reduce.len(), |_, rs, re| {
+                let ptr = &ptr;
+                for r in rs..re {
+                    let (u, slot0, count) = plan.hd_reduce[r];
+                    let u = u as usize;
+                    let deg = csr.degree(u);
+                    let inv = 1.0 / deg as f32;
+                    let orow =
+                        unsafe { std::slice::from_raw_parts_mut(ptr.0.add(u * dim), dim) };
+                    for s in slot0..slot0 + count {
+                        for d in 0..dim {
+                            orow[d] += scratch[s * dim + d];
+                        }
+                    }
+                    for o in orow.iter_mut() {
+                        *o *= inv;
+                    }
+                }
+            });
+        }
+        y
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spmm::test_support::{check_engine_matches_reference, polarized_graph};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn groot_matches_reference() {
+        check_engine_matches_reference(&GrootSpmm::new(4));
+        check_engine_matches_reference(&GrootSpmm::new(1));
+        // tiny thresholds force both paths to engage on small graphs
+        check_engine_matches_reference(&GrootSpmm::with_config(
+            3,
+            GrootConfig { hd_threshold: 8, hd_chunk: 4, ld_nnz_per_task: 16, ..Default::default() },
+        ));
+    }
+
+    #[test]
+    fn plan_cache_reused_and_invalidated() {
+        let mut rng = Rng::new(1);
+        let g1 = polarized_graph(&mut rng, 200, 2, 100, );
+        let g2 = polarized_graph(&mut rng, 150, 1, 50);
+        let engine = GrootSpmm::with_config(
+            2,
+            GrootConfig { hd_threshold: 16, hd_chunk: 8, ld_nnz_per_task: 64, ..Default::default() },
+        );
+        let x1 = vec![1.0f32; 200 * 2];
+        let x2 = vec![1.0f32; 150 * 2];
+        let y1a = engine.spmm_mean(&g1, &x1, 2);
+        let y1b = engine.spmm_mean(&g1, &x1, 2); // cached plan
+        assert_eq!(y1a, y1b);
+        let y2 = engine.spmm_mean(&g2, &x2, 2); // invalidates
+        let want = g2.spmm_mean_reference(&x2, 2);
+        assert!(crate::graph::Csr::max_abs_diff(&y2, &want) < 1e-5);
+    }
+
+    #[test]
+    fn hd_rows_split_into_multiple_chunks() {
+        let mut rng = Rng::new(2);
+        let g = polarized_graph(&mut rng, 400, 1, 300);
+        let engine = GrootSpmm::with_config(
+            4,
+            GrootConfig { hd_threshold: 64, hd_chunk: 32, ld_nnz_per_task: 128, ..Default::default() },
+        );
+        let x: Vec<f32> = (0..400 * 4).map(|i| (i % 7) as f32).collect();
+        let got = engine.spmm_mean(&g, &x, 4);
+        let want = g.spmm_mean_reference(&x, 4);
+        assert!(crate::graph::Csr::max_abs_diff(&got, &want) < 1e-4);
+        // the plan actually used chunking
+        let guard = engine.plan.lock().unwrap();
+        let plan = guard.as_ref().unwrap();
+        assert!(plan.hd_chunks.len() > plan.hd_reduce.len(), "no row was chunked");
+    }
+}

@@ -1,0 +1,126 @@
+//! Parallel SpMM engines — the §IV kernel comparison (Fig. 9), as CPU
+//! analogues that preserve each design's *work-partitioning strategy*:
+//!
+//! * [`CsrRowParallel`] — cuSPARSE-style: rows split statically by count;
+//!   no degree awareness (a thread stuck with hub rows straggles).
+//! * [`MergePathSpmm`] — MergePath-SpMM: total nonzeros split evenly;
+//!   boundary rows produce carry partials merged afterwards.
+//! * [`GnnAdvisorLike`] — GNNAdvisor-style neighbor grouping: dynamic
+//!   row chunks sized to a fixed nonzero budget (np/wp abstraction).
+//! * [`GrootSpmm`] — the paper's HD/LD split: degree profile separates
+//!   high-degree macro rows (each split into chunks processed in parallel
+//!   and reduced) from degree-sorted low-degree rows (many rows per task,
+//!   contiguous output = "coalesced dumping").
+//!
+//! All compute mean aggregation `y[u] = (1/deg u) Σ_v x[v]` over a
+//! symmetric CSR, the exact op inside every GraphSAGE layer.
+
+pub mod engines;
+pub mod groot;
+
+pub use engines::{CsrRowParallel, GnnAdvisorLike, MergePathSpmm};
+pub use groot::GrootSpmm;
+
+use crate::graph::Csr;
+
+/// A pluggable SpMM strategy.
+pub trait SpmmEngine: Sync {
+    fn name(&self) -> &'static str;
+    /// y = D⁻¹ A x with x row-major [n × dim].
+    fn spmm_mean(&self, csr: &Csr, x: &[f32], dim: usize) -> Vec<f32>;
+    /// Nonzeros processed per worker if this strategy ran on `workers`
+    /// parallel lanes — the quantity the paper's GPU speedups derive
+    /// from. Containers without real parallelism (this one has 1 CPU)
+    /// still evaluate each design's *balance* exactly.
+    fn worker_loads(&self, csr: &Csr, workers: usize) -> Vec<u64>;
+}
+
+/// Parallel-makespan summary for one engine on one graph.
+#[derive(Clone, Debug)]
+pub struct BalanceReport {
+    /// max over workers of assigned nonzeros (the makespan in nnz units)
+    pub makespan: u64,
+    /// total nnz / workers (the perfectly-balanced lower bound)
+    pub ideal: f64,
+    /// makespan / ideal (1.0 = perfect balance)
+    pub imbalance: f64,
+}
+
+pub fn balance_report(engine: &dyn SpmmEngine, csr: &Csr, workers: usize) -> BalanceReport {
+    let loads = engine.worker_loads(csr, workers);
+    let makespan = loads.iter().copied().max().unwrap_or(0);
+    let total: u64 = loads.iter().sum();
+    let ideal = total as f64 / workers.max(1) as f64;
+    BalanceReport {
+        makespan,
+        ideal,
+        imbalance: if ideal > 0.0 { makespan as f64 / ideal } else { 1.0 },
+    }
+}
+
+/// Greedy simulation of dynamic task dispatch: tasks (in issue order) go
+/// to the least-loaded worker — how a task queue drains in practice.
+pub(crate) fn simulate_dynamic(task_loads: impl Iterator<Item = u64>, workers: usize) -> Vec<u64> {
+    let mut loads = vec![0u64; workers.max(1)];
+    for t in task_loads {
+        let (i, _) = loads
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, &l)| l)
+            .unwrap();
+        loads[i] += t;
+    }
+    loads
+}
+
+/// All four engines with the same thread budget (bench harness helper).
+pub fn all_engines(threads: usize) -> Vec<Box<dyn SpmmEngine>> {
+    vec![
+        Box::new(CsrRowParallel::new(threads)),
+        Box::new(MergePathSpmm::new(threads)),
+        Box::new(GnnAdvisorLike::new(threads)),
+        Box::new(GrootSpmm::new(threads)),
+    ]
+}
+
+#[cfg(test)]
+pub(crate) mod test_support {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Random graph with planted high-degree hubs — the polarized shape
+    /// the paper profiles.
+    pub fn polarized_graph(rng: &mut Rng, n: usize, hubs: usize, hub_deg: usize) -> Csr {
+        let mut edges = Vec::new();
+        for u in 0..n as u32 {
+            for _ in 0..rng.range(1, 4) {
+                edges.push((u, rng.below(n) as u32));
+            }
+        }
+        for h in 0..hubs {
+            let hub = (h * (n / hubs.max(1))) as u32;
+            for _ in 0..hub_deg {
+                edges.push((hub, rng.below(n) as u32));
+            }
+        }
+        Csr::symmetric_from_edges(n, &edges)
+    }
+
+    pub fn check_engine_matches_reference(engine: &dyn SpmmEngine) {
+        let mut rng = Rng::new(0xFEED);
+        for (n, hubs, hub_deg, dim) in
+            [(50, 2, 30, 4), (300, 3, 200, 8), (1000, 4, 700, 32), (64, 0, 0, 1)]
+        {
+            let csr = polarized_graph(&mut rng, n, hubs, hub_deg);
+            let x: Vec<f32> = (0..n * dim).map(|_| rng.f32() * 4.0 - 2.0).collect();
+            let want = csr.spmm_mean_reference(&x, dim);
+            let got = engine.spmm_mean(&csr, &x, dim);
+            let diff = Csr::max_abs_diff(&got, &want);
+            assert!(
+                diff < 1e-4,
+                "{}: n={n} hubs={hubs} dim={dim}: max diff {diff}",
+                engine.name()
+            );
+        }
+    }
+}

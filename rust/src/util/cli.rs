@@ -1,0 +1,124 @@
+//! Minimal CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional args.
+//! Each binary declares its options by querying an `Args` instance.
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    /// Option keys that were consumed by typed getters (for unknown-arg checks).
+    consumed: std::collections::BTreeSet<String>,
+}
+
+impl Args {
+    /// Parse from `std::env::args()[1..]`, treating `known_flags` as
+    /// valueless booleans (anything else starting with `--` takes a value).
+    pub fn parse(known_flags: &[&str]) -> Self {
+        Self::from_vec(std::env::args().skip(1).collect(), known_flags)
+    }
+
+    pub fn from_vec(argv: Vec<String>, known_flags: &[&str]) -> Self {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some(eq) = stripped.find('=') {
+                    out.options
+                        .insert(stripped[..eq].to_string(), stripped[eq + 1..].to_string());
+                } else if known_flags.contains(&stripped) {
+                    out.flags.push(stripped.to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    out.options.insert(stripped.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    // trailing --foo with no value: treat as flag
+                    out.flags.push(stripped.to_string());
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        out
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&mut self, name: &str) -> Option<String> {
+        self.consumed.insert(name.to_string());
+        self.options.get(name).cloned()
+    }
+
+    pub fn get_or(&mut self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn parse_or<T: std::str::FromStr>(&mut self, name: &str, default: T) -> Result<T> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => match v.parse::<T>() {
+                Ok(x) => Ok(x),
+                Err(_) => bail!("--{name}: cannot parse '{v}'"),
+            },
+        }
+    }
+
+    /// Comma-separated list of T.
+    pub fn parse_list<T: std::str::FromStr>(&mut self, name: &str, default: &[T]) -> Result<Vec<T>>
+    where
+        T: Clone,
+    {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|s| {
+                    s.trim()
+                        .parse::<T>()
+                        .map_err(|_| anyhow::anyhow!("--{name}: cannot parse '{s}'"))
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_options_flags_positional() {
+        let mut a = Args::from_vec(argv("verify --width 64 --regrow --parts=8 out.txt"), &["regrow"]);
+        assert_eq!(a.positional, vec!["verify", "out.txt"]);
+        assert!(a.flag("regrow"));
+        assert_eq!(a.get("width").as_deref(), Some("64"));
+        assert_eq!(a.get("parts").as_deref(), Some("8"));
+    }
+
+    #[test]
+    fn typed_getters() {
+        let mut a = Args::from_vec(argv("--n 5 --xs 1,2,3"), &[]);
+        assert_eq!(a.parse_or("n", 0usize).unwrap(), 5);
+        assert_eq!(a.parse_or("missing", 7usize).unwrap(), 7);
+        assert_eq!(a.parse_list::<u32>("xs", &[]).unwrap(), vec![1, 2, 3]);
+        assert!(a.parse_or::<usize>("xs", 0).is_err());
+    }
+
+    #[test]
+    fn trailing_flag_without_value() {
+        let a = Args::from_vec(argv("--verbose"), &[]);
+        assert!(a.flag("verbose"));
+    }
+}

@@ -1,0 +1,13 @@
+//! Shared infrastructure substrates: thread pool, PRNG, property testing,
+//! tensor interchange, timing, CLI parsing.
+//!
+//! These exist because the offline build environment has no rayon / rand /
+//! proptest / serde / clap / criterion; each submodule is a minimal,
+//! well-tested replacement scoped to what this repo needs.
+
+pub mod cli;
+pub mod pool;
+pub mod prop;
+pub mod rng;
+pub mod tensor;
+pub mod timer;

@@ -1,0 +1,222 @@
+//! Hand-rolled thread pool with a `parallel_for` primitive.
+//!
+//! rayon is not available in this offline environment, so the SpMM engines
+//! (`crate::spmm`) and the coordinator run on this pool instead. The design
+//! mirrors what the paper's CUDA kernels need from the host side: static
+//! work partitioning (chunked ranges) plus a work-stealing-free dynamic mode
+//! (atomic chunk counter) for skewed workloads.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A fixed-size thread pool. Jobs are closures; `scope`-style helpers below
+/// provide data-parallel loops over index ranges.
+pub struct ThreadPool {
+    workers: Vec<thread::JoinHandle<()>>,
+    tx: Option<mpsc::Sender<Job>>,
+    size: usize,
+}
+
+impl ThreadPool {
+    /// Create a pool with `size` workers (min 1).
+    pub fn new(size: usize) -> Self {
+        let size = size.max(1);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..size)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                thread::Builder::new()
+                    .name(format!("groot-pool-{i}"))
+                    .spawn(move || loop {
+                        let job = { rx.lock().unwrap().recv() };
+                        match job {
+                            Ok(job) => job(),
+                            Err(_) => break,
+                        }
+                    })
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        ThreadPool { workers, tx: Some(tx), size }
+    }
+
+    /// Pool sized to the number of available CPUs.
+    pub fn with_default_size() -> Self {
+        Self::new(default_threads())
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Submit a fire-and-forget job.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.tx.as_ref().unwrap().send(Box::new(f)).expect("pool send");
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Number of worker threads to default to (respects GROOT_THREADS).
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("GROOT_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// Statically-chunked parallel for: splits `0..n` into `nthreads` contiguous
+/// ranges and runs `f(range)` on scoped threads. `f` receives (thread_idx,
+/// start, end). This is the analogue of the paper's *static* workload
+/// partitioning for HD rows.
+pub fn parallel_for_static<F>(nthreads: usize, n: usize, f: F)
+where
+    F: Fn(usize, usize, usize) + Sync,
+{
+    let nthreads = nthreads.max(1).min(n.max(1));
+    if nthreads <= 1 || n == 0 {
+        f(0, 0, n);
+        return;
+    }
+    let chunk = n.div_ceil(nthreads);
+    thread::scope(|s| {
+        for t in 0..nthreads {
+            let f = &f;
+            let start = t * chunk;
+            let end = ((t + 1) * chunk).min(n);
+            if start >= end {
+                continue;
+            }
+            s.spawn(move || f(t, start, end));
+        }
+    });
+}
+
+/// Dynamically-chunked parallel for: threads grab `chunk`-sized blocks from
+/// an atomic counter until exhausted. Used for skewed workloads (LD rows of
+/// wildly varying degree) where static splits would imbalance.
+pub fn parallel_for_dynamic<F>(nthreads: usize, n: usize, chunk: usize, f: F)
+where
+    F: Fn(usize, usize, usize) + Sync,
+{
+    let nthreads = nthreads.max(1);
+    let chunk = chunk.max(1);
+    if nthreads <= 1 || n <= chunk {
+        f(0, 0, n);
+        return;
+    }
+    let cursor = AtomicUsize::new(0);
+    thread::scope(|s| {
+        for t in 0..nthreads {
+            let f = &f;
+            let cursor = &cursor;
+            s.spawn(move || loop {
+                let start = cursor.fetch_add(chunk, Ordering::Relaxed);
+                if start >= n {
+                    break;
+                }
+                let end = (start + chunk).min(n);
+                f(t, start, end);
+            });
+        }
+    });
+}
+
+/// Run `f(i)` for every i in 0..n, writing results into a returned Vec.
+/// Convenience wrapper over `parallel_for_static` for map-style workloads.
+pub fn parallel_map<T, F>(nthreads: usize, n: usize, f: F) -> Vec<T>
+where
+    T: Default + Clone + Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let mut out = vec![T::default(); n];
+    {
+        let slots = SendPtr(out.as_mut_ptr());
+        parallel_for_static(nthreads, n, |_, s, e| {
+            let slots = &slots;
+            for i in s..e {
+                // SAFETY: each index i is written by exactly one thread
+                // (ranges are disjoint) and `out` outlives the scope.
+                unsafe { *slots.0.add(i) = f(i) };
+            }
+        });
+    }
+    out
+}
+
+/// Shareable raw pointer for disjoint-range writes from scoped threads.
+pub struct SendPtr<T>(pub *mut T);
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn pool_runs_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool); // joins
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn static_for_covers_range_once() {
+        let n = 1000;
+        let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        parallel_for_static(7, n, |_, s, e| {
+            for i in s..e {
+                hits[i].fetch_add(1, Ordering::SeqCst);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+    }
+
+    #[test]
+    fn dynamic_for_covers_range_once() {
+        let n = 1234;
+        let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        parallel_for_dynamic(5, n, 17, |_, s, e| {
+            for i in s..e {
+                hits[i].fetch_add(1, Ordering::SeqCst);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+    }
+
+    #[test]
+    fn parallel_map_matches_serial() {
+        let out = parallel_map(4, 257, |i| i * i);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * i);
+        }
+    }
+
+    #[test]
+    fn edge_cases_empty_and_single() {
+        parallel_for_static(4, 0, |_, s, e| assert_eq!(s, e));
+        let out = parallel_map(4, 1, |i| i + 1);
+        assert_eq!(out, vec![1]);
+    }
+}

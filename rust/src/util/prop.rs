@@ -1,0 +1,149 @@
+//! Minimal property-based testing framework (proptest is unavailable
+//! offline). Provides generators over `Rng` and a `check` runner that
+//! reports the failing seed + case index so failures are reproducible.
+//!
+//! Usage (doctest disabled: doctest binaries bypass the workspace rpath
+//! flags and cannot find the nix-store libstdc++ this image needs):
+//! ```text
+//! use groot::util::prop::{check, Gen};
+//! check("addition commutes", 200, |g| {
+//!     let a = g.usize(0..1000);
+//!     let b = g.usize(0..1000);
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use super::rng::Rng;
+use std::ops::Range;
+
+/// Case-local generator handed to the property closure.
+pub struct Gen {
+    rng: Rng,
+    /// Free-form description of the generated case, printed on failure.
+    trace: Vec<String>,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Gen { rng: Rng::new(seed), trace: Vec::new() }
+    }
+
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+
+    /// Record a human-readable note about the generated case.
+    pub fn note(&mut self, s: impl Into<String>) {
+        self.trace.push(s.into());
+    }
+
+    pub fn usize(&mut self, r: Range<usize>) -> usize {
+        assert!(r.start < r.end);
+        r.start + self.rng.below(r.end - r.start)
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    pub fn i64(&mut self, r: Range<i64>) -> i64 {
+        assert!(r.start < r.end);
+        // Width may exceed i64::MAX (e.g. -2^62..2^62); go through u64.
+        let width = (r.end as i128 - r.start as i128) as u64;
+        let off = if width as usize as u64 == width {
+            self.rng.below(width as usize) as u64
+        } else {
+            self.rng.next_u64() % width
+        };
+        (r.start as i128 + off as i128) as i64
+    }
+
+    pub fn f32_unit(&mut self) -> f32 {
+        self.rng.f32()
+    }
+
+    pub fn f32_range(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.rng.f32()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.bool(0.5)
+    }
+
+    /// Vec of length in `len`, elements from `f`.
+    pub fn vec<T>(&mut self, len: Range<usize>, mut f: impl FnMut(&mut Self) -> T) -> Vec<T> {
+        let n = self.usize(len);
+        (0..n).map(|_| f(self)).collect()
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len())]
+    }
+}
+
+/// Run `cases` random cases of property `f`. Panics (re-raising the inner
+/// panic) with the seed and case index on first failure.
+///
+/// Override the base seed with env `GROOT_PROP_SEED` to replay a failure;
+/// override case count with `GROOT_PROP_CASES`.
+pub fn check(name: &str, cases: usize, f: impl Fn(&mut Gen) + std::panic::RefUnwindSafe) {
+    let base_seed: u64 = std::env::var("GROOT_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE);
+    let cases: usize = std::env::var("GROOT_PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(cases);
+    for case in 0..cases {
+        let seed = base_seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let result = std::panic::catch_unwind(|| {
+            let mut g = Gen::new(seed);
+            f(&mut g);
+            g
+        });
+        match result {
+            Ok(_) => {}
+            Err(e) => {
+                eprintln!(
+                    "property '{name}' FAILED at case {case}/{cases} \
+                     (replay with GROOT_PROP_SEED={base_seed} and this case index; seed={seed})"
+                );
+                std::panic::resume_unwind(e);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        check("sum symmetric", 50, |g| {
+            let a = g.usize(0..100);
+            let b = g.usize(0..100);
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn failing_property_panics() {
+        check("always fails eventually", 50, |g| {
+            let x = g.usize(0..10);
+            assert!(x < 9, "hit the 10% case");
+        });
+    }
+
+    #[test]
+    fn gen_vec_length_bounds() {
+        let mut g = Gen::new(5);
+        for _ in 0..100 {
+            let v = g.vec(3..7, |g| g.bool());
+            assert!((3..7).contains(&v.len()));
+        }
+    }
+}

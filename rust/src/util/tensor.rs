@@ -1,0 +1,188 @@
+//! Tiny binary tensor interchange format shared with the python compile
+//! path (serde/npz are unavailable offline). `python/compile/tensor_io.py`
+//! implements the same layout.
+//!
+//! Bundle file layout (little-endian):
+//! ```text
+//! magic  b"GRTW"
+//! u32    version (1)
+//! u32    tensor count
+//! per tensor:
+//!   u16   name length, then name bytes (utf-8)
+//!   u8    dtype (0 = f32, 1 = i32)
+//!   u8    ndim
+//!   u64 × ndim   dims
+//!   bytes        row-major data
+//! ```
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+pub const MAGIC: &[u8; 4] = b"GRTW";
+
+/// A named dense tensor (f32 only is needed on the rust side; i32 is kept
+/// for completeness of the interchange format).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub dims: Vec<usize>,
+    pub data: TensorData,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Tensor {
+    pub fn f32(dims: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(dims.iter().product::<usize>(), data.len());
+        Tensor { dims, data: TensorData::F32(data) }
+    }
+
+    pub fn i32(dims: Vec<usize>, data: Vec<i32>) -> Self {
+        assert_eq!(dims.iter().product::<usize>(), data.len());
+        Tensor { dims, data: TensorData::I32(data) }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            TensorData::F32(v) => Ok(v),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            TensorData::I32(v) => Ok(v),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+/// An ordered name → tensor map (BTreeMap so serialization is canonical).
+pub type Bundle = BTreeMap<String, Tensor>;
+
+pub fn write_bundle(path: &Path, bundle: &Bundle) -> Result<()> {
+    let mut buf: Vec<u8> = Vec::new();
+    buf.extend_from_slice(MAGIC);
+    buf.extend_from_slice(&1u32.to_le_bytes());
+    buf.extend_from_slice(&(bundle.len() as u32).to_le_bytes());
+    for (name, t) in bundle {
+        let nb = name.as_bytes();
+        buf.extend_from_slice(&(nb.len() as u16).to_le_bytes());
+        buf.extend_from_slice(nb);
+        let (dtype, payload): (u8, Vec<u8>) = match &t.data {
+            TensorData::F32(v) => (0, v.iter().flat_map(|x| x.to_le_bytes()).collect()),
+            TensorData::I32(v) => (1, v.iter().flat_map(|x| x.to_le_bytes()).collect()),
+        };
+        buf.push(dtype);
+        buf.push(t.dims.len() as u8);
+        for d in &t.dims {
+            buf.extend_from_slice(&(*d as u64).to_le_bytes());
+        }
+        buf.extend_from_slice(&payload);
+    }
+    let mut f = std::fs::File::create(path)
+        .with_context(|| format!("create {}", path.display()))?;
+    f.write_all(&buf)?;
+    Ok(())
+}
+
+pub fn read_bundle(path: &Path) -> Result<Bundle> {
+    let mut bytes = Vec::new();
+    std::fs::File::open(path)
+        .with_context(|| format!("open {}", path.display()))?
+        .read_to_end(&mut bytes)?;
+    parse_bundle(&bytes).with_context(|| format!("parse {}", path.display()))
+}
+
+pub fn parse_bundle(bytes: &[u8]) -> Result<Bundle> {
+    let mut off = 0usize;
+    let take = |off: &mut usize, n: usize| -> Result<&[u8]> {
+        if *off + n > bytes.len() {
+            bail!("truncated bundle at offset {off}");
+        }
+        let s = &bytes[*off..*off + n];
+        *off += n;
+        Ok(s)
+    };
+    if take(&mut off, 4)? != MAGIC {
+        bail!("bad magic");
+    }
+    let version = u32::from_le_bytes(take(&mut off, 4)?.try_into().unwrap());
+    if version != 1 {
+        bail!("unsupported bundle version {version}");
+    }
+    let count = u32::from_le_bytes(take(&mut off, 4)?.try_into().unwrap());
+    let mut out = Bundle::new();
+    for _ in 0..count {
+        let name_len = u16::from_le_bytes(take(&mut off, 2)?.try_into().unwrap()) as usize;
+        let name = String::from_utf8(take(&mut off, name_len)?.to_vec())?;
+        let dtype = take(&mut off, 1)?[0];
+        let ndim = take(&mut off, 1)?[0] as usize;
+        let mut dims = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            dims.push(u64::from_le_bytes(take(&mut off, 8)?.try_into().unwrap()) as usize);
+        }
+        let numel: usize = dims.iter().product();
+        let data = match dtype {
+            0 => {
+                let raw = take(&mut off, numel * 4)?;
+                TensorData::F32(
+                    raw.chunks_exact(4)
+                        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                        .collect(),
+                )
+            }
+            1 => {
+                let raw = take(&mut off, numel * 4)?;
+                TensorData::I32(
+                    raw.chunks_exact(4)
+                        .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+                        .collect(),
+                )
+            }
+            _ => bail!("unknown dtype {dtype}"),
+        };
+        out.insert(name, Tensor { dims, data });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_bundle() {
+        let mut b = Bundle::new();
+        b.insert("w1".into(), Tensor::f32(vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]));
+        b.insert("idx".into(), Tensor::i32(vec![4], vec![-1, 0, 7, 42]));
+        let dir = std::env::temp_dir().join("groot_tensor_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("b.bin");
+        write_bundle(&path, &b).unwrap();
+        let b2 = read_bundle(&path).unwrap();
+        assert_eq!(b, b2);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse_bundle(b"nope").is_err());
+        assert!(parse_bundle(b"GRTW\x01\x00\x00\x00").is_err());
+    }
+
+    #[test]
+    fn tensor_shape_checks() {
+        let t = Tensor::f32(vec![2, 2], vec![0.0; 4]);
+        assert_eq!(t.numel(), 4);
+        assert!(t.as_i32().is_err());
+    }
+}

@@ -1,0 +1,188 @@
+//! Benchmark timing helpers (criterion is unavailable offline).
+//!
+//! `bench` runs warmups then measured iterations and reports robust stats;
+//! the harnesses in `rust/benches/` print rows from these.
+
+use std::time::{Duration, Instant};
+
+/// Result of a timed measurement series.
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub iters: usize,
+    pub mean: Duration,
+    pub median: Duration,
+    pub min: Duration,
+    pub max: Duration,
+    pub stddev: Duration,
+}
+
+impl BenchStats {
+    pub fn mean_secs(&self) -> f64 {
+        self.mean.as_secs_f64()
+    }
+    pub fn median_secs(&self) -> f64 {
+        self.median.as_secs_f64()
+    }
+}
+
+impl std::fmt::Display for BenchStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "median {:>10} mean {:>10} ± {:<10} (n={}, min {}, max {})",
+            fmt_dur(self.median),
+            fmt_dur(self.mean),
+            fmt_dur(self.stddev),
+            self.iters,
+            fmt_dur(self.min),
+            fmt_dur(self.max),
+        )
+    }
+}
+
+pub fn fmt_dur(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3}µs", s * 1e6)
+    } else {
+        format!("{:.0}ns", s * 1e9)
+    }
+}
+
+/// Time a single run of `f`.
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, Duration) {
+    let start = Instant::now();
+    let out = f();
+    (out, start.elapsed())
+}
+
+/// Run `warmup` unmeasured then `iters` measured iterations of `f`.
+/// A `black_box`-style sink prevents the optimizer from deleting the work:
+/// callers should return something data-dependent from `f`.
+pub fn bench<T>(warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> BenchStats {
+    for _ in 0..warmup {
+        black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters.max(1) {
+        let start = Instant::now();
+        black_box(f());
+        samples.push(start.elapsed());
+    }
+    stats_of(&mut samples)
+}
+
+/// Adaptive variant: runs until `budget` wall time is spent (min 3 iters).
+pub fn bench_for<T>(budget: Duration, mut f: impl FnMut() -> T) -> BenchStats {
+    black_box(f()); // warmup
+    let mut samples = Vec::new();
+    let t0 = Instant::now();
+    while samples.len() < 3 || (t0.elapsed() < budget && samples.len() < 10_000) {
+        let start = Instant::now();
+        black_box(f());
+        samples.push(start.elapsed());
+    }
+    stats_of(&mut samples)
+}
+
+fn stats_of(samples: &mut [Duration]) -> BenchStats {
+    samples.sort_unstable();
+    let n = samples.len();
+    let total: Duration = samples.iter().sum();
+    let mean = total / n as u32;
+    let median = samples[n / 2];
+    let mean_s = mean.as_secs_f64();
+    let var = samples
+        .iter()
+        .map(|d| {
+            let x = d.as_secs_f64() - mean_s;
+            x * x
+        })
+        .sum::<f64>()
+        / n as f64;
+    BenchStats {
+        iters: n,
+        mean,
+        median,
+        min: samples[0],
+        max: samples[n - 1],
+        stddev: Duration::from_secs_f64(var.sqrt()),
+    }
+}
+
+/// Optimizer barrier (std::hint::black_box is stable since 1.66).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Peak resident set size of this process, in bytes (linux only; returns 0
+/// elsewhere). Used by the memory harnesses to report *measured* footprint
+/// next to the analytic model.
+pub fn peak_rss_bytes() -> u64 {
+    if let Ok(status) = std::fs::read_to_string("/proc/self/status") {
+        for line in status.lines() {
+            if let Some(rest) = line.strip_prefix("VmHWM:") {
+                let kb: u64 = rest
+                    .trim()
+                    .trim_end_matches("kB")
+                    .trim()
+                    .parse()
+                    .unwrap_or(0);
+                return kb * 1024;
+            }
+        }
+    }
+    0
+}
+
+/// Current RSS in bytes (linux only).
+pub fn current_rss_bytes() -> u64 {
+    if let Ok(statm) = std::fs::read_to_string("/proc/self/statm") {
+        let fields: Vec<&str> = statm.split_whitespace().collect();
+        if fields.len() >= 2 {
+            if let Ok(pages) = fields[1].parse::<u64>() {
+                return pages * 4096;
+            }
+        }
+    }
+    0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        let s = bench(1, 10, || {
+            let mut x = 0u64;
+            for i in 0..1000 {
+                x = x.wrapping_add(i);
+            }
+            x
+        });
+        assert_eq!(s.iters, 10);
+        assert!(s.min <= s.median && s.median <= s.max);
+    }
+
+    #[test]
+    fn rss_is_positive_on_linux() {
+        if cfg!(target_os = "linux") {
+            assert!(peak_rss_bytes() > 0);
+            assert!(current_rss_bytes() > 0);
+        }
+    }
+
+    #[test]
+    fn fmt_dur_units() {
+        assert!(fmt_dur(Duration::from_secs(2)).ends_with('s'));
+        assert!(fmt_dur(Duration::from_millis(5)).ends_with("ms"));
+        assert!(fmt_dur(Duration::from_micros(5)).ends_with("µs"));
+        assert!(fmt_dur(Duration::from_nanos(5)).ends_with("ns"));
+    }
+}

@@ -1,0 +1,357 @@
+//! Sign-magnitude arbitrary-precision integers (num-bigint is unavailable
+//! offline). Scoped to what algebraic rewriting needs: add/sub/mul/neg,
+//! shifts, comparison, and power-of-two construction for the 2^i weights in
+//! signature polynomials of up-to-2048-bit multipliers.
+
+use std::cmp::Ordering;
+use std::fmt;
+
+/// Arbitrary-precision signed integer. Invariant: `mag` has no trailing
+/// zero limbs; zero is `neg=false, mag=[]`.
+#[derive(Clone, Debug, Default, PartialEq, Eq, Hash)]
+pub struct BigInt {
+    neg: bool,
+    mag: Vec<u64>, // little-endian limbs
+}
+
+impl BigInt {
+    pub fn zero() -> Self {
+        BigInt { neg: false, mag: Vec::new() }
+    }
+
+    pub fn one() -> Self {
+        BigInt { neg: false, mag: vec![1] }
+    }
+
+    pub fn from_i64(x: i64) -> Self {
+        if x == 0 {
+            Self::zero()
+        } else if x < 0 {
+            BigInt { neg: true, mag: vec![x.unsigned_abs()] }
+        } else {
+            BigInt { neg: false, mag: vec![x as u64] }
+        }
+    }
+
+    pub fn from_u64(x: u64) -> Self {
+        if x == 0 {
+            Self::zero()
+        } else {
+            BigInt { neg: false, mag: vec![x] }
+        }
+    }
+
+    /// 2^k.
+    pub fn pow2(k: usize) -> Self {
+        let limb = k / 64;
+        let bit = k % 64;
+        let mut mag = vec![0u64; limb + 1];
+        mag[limb] = 1u64 << bit;
+        BigInt { neg: false, mag }
+    }
+
+    pub fn is_zero(&self) -> bool {
+        self.mag.is_empty()
+    }
+
+    pub fn is_negative(&self) -> bool {
+        self.neg
+    }
+
+    pub fn neg(&self) -> Self {
+        if self.is_zero() {
+            self.clone()
+        } else {
+            BigInt { neg: !self.neg, mag: self.mag.clone() }
+        }
+    }
+
+    fn trim(mut mag: Vec<u64>) -> Vec<u64> {
+        while mag.last() == Some(&0) {
+            mag.pop();
+        }
+        mag
+    }
+
+    fn cmp_mag(a: &[u64], b: &[u64]) -> Ordering {
+        if a.len() != b.len() {
+            return a.len().cmp(&b.len());
+        }
+        for i in (0..a.len()).rev() {
+            if a[i] != b[i] {
+                return a[i].cmp(&b[i]);
+            }
+        }
+        Ordering::Equal
+    }
+
+    fn add_mag(a: &[u64], b: &[u64]) -> Vec<u64> {
+        let (long, short) = if a.len() >= b.len() { (a, b) } else { (b, a) };
+        let mut out = Vec::with_capacity(long.len() + 1);
+        let mut carry = 0u64;
+        for i in 0..long.len() {
+            let x = long[i];
+            let y = if i < short.len() { short[i] } else { 0 };
+            let (s1, c1) = x.overflowing_add(y);
+            let (s2, c2) = s1.overflowing_add(carry);
+            out.push(s2);
+            carry = (c1 as u64) + (c2 as u64);
+        }
+        if carry != 0 {
+            out.push(carry);
+        }
+        out
+    }
+
+    /// a - b where |a| >= |b|.
+    fn sub_mag(a: &[u64], b: &[u64]) -> Vec<u64> {
+        debug_assert!(Self::cmp_mag(a, b) != Ordering::Less);
+        let mut out = Vec::with_capacity(a.len());
+        let mut borrow = 0u64;
+        for i in 0..a.len() {
+            let y = if i < b.len() { b[i] } else { 0 };
+            let (d1, b1) = a[i].overflowing_sub(y);
+            let (d2, b2) = d1.overflowing_sub(borrow);
+            out.push(d2);
+            borrow = (b1 as u64) + (b2 as u64);
+        }
+        debug_assert_eq!(borrow, 0);
+        Self::trim(out)
+    }
+
+    fn mul_mag(a: &[u64], b: &[u64]) -> Vec<u64> {
+        if a.is_empty() || b.is_empty() {
+            return Vec::new();
+        }
+        let mut out = vec![0u64; a.len() + b.len()];
+        for (i, &x) in a.iter().enumerate() {
+            if x == 0 {
+                continue;
+            }
+            let mut carry = 0u128;
+            for (j, &y) in b.iter().enumerate() {
+                let t = out[i + j] as u128 + (x as u128) * (y as u128) + carry;
+                out[i + j] = t as u64;
+                carry = t >> 64;
+            }
+            let mut k = i + b.len();
+            while carry != 0 {
+                let t = out[k] as u128 + carry;
+                out[k] = t as u64;
+                carry = t >> 64;
+                k += 1;
+            }
+        }
+        Self::trim(out)
+    }
+
+    pub fn add(&self, other: &BigInt) -> BigInt {
+        if self.neg == other.neg {
+            BigInt {
+                neg: self.neg && !self.is_zero() || (other.neg && !other.is_zero()),
+                mag: Self::add_mag(&self.mag, &other.mag),
+            }
+            .normalize()
+        } else {
+            match Self::cmp_mag(&self.mag, &other.mag) {
+                Ordering::Equal => BigInt::zero(),
+                Ordering::Greater => BigInt {
+                    neg: self.neg,
+                    mag: Self::sub_mag(&self.mag, &other.mag),
+                }
+                .normalize(),
+                Ordering::Less => BigInt {
+                    neg: other.neg,
+                    mag: Self::sub_mag(&other.mag, &self.mag),
+                }
+                .normalize(),
+            }
+        }
+    }
+
+    pub fn sub(&self, other: &BigInt) -> BigInt {
+        self.add(&other.neg())
+    }
+
+    pub fn mul(&self, other: &BigInt) -> BigInt {
+        BigInt {
+            neg: self.neg != other.neg,
+            mag: Self::mul_mag(&self.mag, &other.mag),
+        }
+        .normalize()
+    }
+
+    pub fn mul_i64(&self, x: i64) -> BigInt {
+        self.mul(&BigInt::from_i64(x))
+    }
+
+    pub fn shl(&self, k: usize) -> BigInt {
+        self.mul(&BigInt::pow2(k))
+    }
+
+    fn normalize(mut self) -> Self {
+        self.mag = Self::trim(self.mag);
+        if self.mag.is_empty() {
+            self.neg = false;
+        }
+        self
+    }
+
+    pub fn cmp_val(&self, other: &BigInt) -> Ordering {
+        match (self.neg, other.neg) {
+            (false, true) => Ordering::Greater,
+            (true, false) => Ordering::Less,
+            (false, false) => Self::cmp_mag(&self.mag, &other.mag),
+            (true, true) => Self::cmp_mag(&other.mag, &self.mag),
+        }
+    }
+
+    /// Value as i128 if it fits (tests only).
+    pub fn to_i128(&self) -> Option<i128> {
+        let m: u128 = match self.mag.len() {
+            0 => 0,
+            1 => self.mag[0] as u128,
+            2 => (self.mag[0] as u128) | ((self.mag[1] as u128) << 64),
+            _ => return None,
+        };
+        if self.neg {
+            if m <= (i128::MAX as u128) + 1 {
+                Some((m as i128).wrapping_neg())
+            } else {
+                None
+            }
+        } else if m <= i128::MAX as u128 {
+            Some(m as i128)
+        } else {
+            None
+        }
+    }
+
+    /// Construct from u64 words (little endian), unsigned.
+    pub fn from_words(words: &[u64]) -> BigInt {
+        BigInt { neg: false, mag: Self::trim(words.to_vec()) }.normalize()
+    }
+
+    /// Canonical residue mod 2^k, in [0, 2^k). Used by the verifier's
+    /// mod-2^(2n) coefficient arithmetic (carry-truncation soundness).
+    pub fn mod_pow2(&self, k: usize) -> BigInt {
+        let limbs = k / 64;
+        let bits = k % 64;
+        let mut mag = self.mag.clone();
+        mag.truncate(limbs + (bits > 0) as usize);
+        if bits > 0 && mag.len() == limbs + 1 {
+            mag[limbs] &= (1u64 << bits) - 1;
+        }
+        let masked = BigInt { neg: false, mag: Self::trim(mag) }.normalize();
+        if self.neg && !masked.is_zero() {
+            BigInt::pow2(k).sub(&masked)
+        } else {
+            masked
+        }
+    }
+}
+
+impl fmt::Display for BigInt {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.is_zero() {
+            return write!(f, "0");
+        }
+        // Repeated division by 10^19 (largest power of ten in u64).
+        const CHUNK: u64 = 10_000_000_000_000_000_000;
+        let mut mag = self.mag.clone();
+        let mut chunks: Vec<u64> = Vec::new();
+        while !mag.is_empty() {
+            let mut rem = 0u128;
+            for i in (0..mag.len()).rev() {
+                let cur = (rem << 64) | mag[i] as u128;
+                mag[i] = (cur / CHUNK as u128) as u64;
+                rem = cur % CHUNK as u128;
+            }
+            while mag.last() == Some(&0) {
+                mag.pop();
+            }
+            chunks.push(rem as u64);
+        }
+        if self.neg {
+            write!(f, "-")?;
+        }
+        write!(f, "{}", chunks.last().unwrap())?;
+        for c in chunks.iter().rev().skip(1) {
+            write!(f, "{c:019}")?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    #[test]
+    fn small_arithmetic() {
+        let a = BigInt::from_i64(100);
+        let b = BigInt::from_i64(-42);
+        assert_eq!(a.add(&b).to_i128(), Some(58));
+        assert_eq!(a.sub(&b).to_i128(), Some(142));
+        assert_eq!(a.mul(&b).to_i128(), Some(-4200));
+        assert_eq!(b.mul(&b).to_i128(), Some(1764));
+        assert_eq!(a.add(&a.neg()).to_i128(), Some(0));
+    }
+
+    #[test]
+    fn pow2_and_shl() {
+        assert_eq!(BigInt::pow2(10).to_i128(), Some(1024));
+        assert_eq!(BigInt::pow2(64).to_i128(), Some(1i128 << 64));
+        assert_eq!(BigInt::from_i64(3).shl(100).to_i128(), Some(3i128 << 100));
+    }
+
+    #[test]
+    fn display_matches_known_values() {
+        assert_eq!(BigInt::zero().to_string(), "0");
+        assert_eq!(BigInt::from_i64(-12345).to_string(), "-12345");
+        assert_eq!(BigInt::pow2(64).to_string(), "18446744073709551616");
+        // 2^128
+        assert_eq!(
+            BigInt::pow2(128).to_string(),
+            "340282366920938463463374607431768211456"
+        );
+    }
+
+    #[test]
+    fn arithmetic_matches_i128_property() {
+        check("bigint vs i128", 300, |g| {
+            let a = g.i64(-(1 << 62)..(1 << 62));
+            let b = g.i64(-(1 << 62)..(1 << 62));
+            let (ba, bb) = (BigInt::from_i64(a), BigInt::from_i64(b));
+            assert_eq!(ba.add(&bb).to_i128(), Some(a as i128 + b as i128));
+            assert_eq!(ba.sub(&bb).to_i128(), Some(a as i128 - b as i128));
+            assert_eq!(ba.mul(&bb).to_i128(), Some(a as i128 * b as i128));
+            assert_eq!(
+                ba.cmp_val(&bb),
+                (a as i128).cmp(&(b as i128)),
+                "cmp {a} {b}"
+            );
+        });
+    }
+
+    #[test]
+    fn large_multiplication_identity() {
+        // (2^512 - 1) * (2^512 + 1) = 2^1024 - 1
+        let p512 = BigInt::pow2(512);
+        let a = p512.sub(&BigInt::one());
+        let b = p512.add(&BigInt::one());
+        let prod = a.mul(&b);
+        assert_eq!(prod, BigInt::pow2(1024).sub(&BigInt::one()));
+    }
+
+    #[test]
+    fn from_words_roundtrip() {
+        let w = [0xDEADBEEFu64, 0x12345678];
+        let b = BigInt::from_words(&w);
+        assert_eq!(
+            b.to_i128(),
+            Some(0xDEADBEEFi128 | (0x12345678i128 << 64))
+        );
+    }
+}

@@ -1,0 +1,77 @@
+//! Algebraic verification (§III-D) — big integers, multilinear
+//! polynomials, backward rewriting, and the structural (non-GNN)
+//! baseline.
+//!
+//! Entry point: [`verify_multiplier`] — takes the circuit, its EDA graph,
+//! and per-node class *predictions* (from the GNN pipeline) and proves or
+//! refutes equivalence against the multiplier spec polynomial.
+
+pub mod abc_like;
+pub mod bigint;
+pub mod poly;
+pub mod rewrite;
+
+pub use rewrite::Outcome;
+
+use crate::aig::Aig;
+use crate::features::EdaGraph;
+use anyhow::Result;
+
+/// Default transient-term cap: generous headroom over the spec size n².
+pub fn default_max_terms(aig: &Aig) -> usize {
+    let n = aig.num_pis() / 2;
+    (64 * n * n).max(200_000)
+}
+
+/// Verify `aig` (an n×n multiplier candidate) against the spec
+/// (Σ2ⁱaᵢ)(Σ2ʲbⱼ) using GNN node-class predictions to guide rewriting.
+///
+/// `pred` is indexed by EDA-graph node id; only the AIG-node prefix
+/// (ids < graph.num_aig_nodes) is consulted — PO graph nodes have no
+/// substitution role.
+pub fn verify_multiplier(aig: &Aig, graph: &EdaGraph, pred: &[u8]) -> Result<Outcome> {
+    anyhow::ensure!(
+        pred.len() == graph.num_nodes,
+        "prediction length {} != graph nodes {}",
+        pred.len(),
+        graph.num_nodes
+    );
+    anyhow::ensure!(
+        graph.num_aig_nodes == aig.num_nodes() || graph.num_aig_nodes % aig.num_nodes() == 0,
+        "graph does not correspond to this AIG"
+    );
+    let aig_pred = &pred[..aig.num_nodes()];
+    let plan = rewrite::plan_from_predictions(aig, aig_pred);
+    let sig = rewrite::output_signature(aig);
+    let spec = rewrite::multiplier_spec(aig);
+    Ok(rewrite::backward_rewrite(
+        aig,
+        &plan,
+        sig,
+        &spec,
+        default_max_terms(aig),
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aig::mult::csa_multiplier;
+    use crate::features::EdaGraph;
+
+    #[test]
+    fn end_to_end_with_ground_truth_predictions() {
+        let g = csa_multiplier(6);
+        let eg = EdaGraph::from_aig(&g);
+        let pred = eg.labels_u8();
+        let out = verify_multiplier(&g, &eg, &pred).unwrap();
+        assert!(out.equivalent, "{:?}", out.reason);
+    }
+
+    #[test]
+    fn rejects_mismatched_prediction_length() {
+        let g = csa_multiplier(3);
+        let eg = EdaGraph::from_aig(&g);
+        assert!(verify_multiplier(&g, &eg, &[0u8; 3]).is_err());
+    }
+}

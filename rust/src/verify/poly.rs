@@ -1,0 +1,311 @@
+//! Sparse multilinear polynomials over AIG node variables with BigInt
+//! coefficients — the algebra of Table I.
+//!
+//! A monomial is a sorted set of variables (multilinear: x² = x, so sets
+//! suffice). [`Poly`] keeps monomials bucketed by their **largest**
+//! variable: backward rewriting substitutes variables in strictly
+//! decreasing order, so a monomial is touched exactly once — when its max
+//! variable is eliminated. This bucket discipline is what makes function
+//! extraction (Ciesielski et al.) run in time proportional to the number
+//! of monomials ever created.
+
+use super::bigint::BigInt;
+use std::collections::HashMap;
+
+/// Sorted variable set.
+pub type Mono = Box<[u32]>;
+
+/// Multilinear merge of two sorted var sets.
+pub fn mono_union(a: &[u32], b: &[u32]) -> Mono {
+    let mut out = Vec::with_capacity(a.len() + b.len());
+    let (mut i, mut j) = (0, 0);
+    while i < a.len() || j < b.len() {
+        let v = if i < a.len() && (j >= b.len() || a[i] <= b[j]) {
+            let v = a[i];
+            if j < b.len() && b[j] == v {
+                j += 1;
+            }
+            i += 1;
+            v
+        } else {
+            let v = b[j];
+            j += 1;
+            v
+        };
+        out.push(v);
+    }
+    out.into_boxed_slice()
+}
+
+/// A sparse multilinear polynomial bucketed by max variable. Bucket
+/// `None` holds the constant term; bucket `Some(v)` holds monomials whose
+/// largest variable is v.
+#[derive(Clone, Debug, Default)]
+pub struct Poly {
+    buckets: HashMap<u32, HashMap<Mono, BigInt>>,
+    constant: BigInt,
+    num_terms: usize,
+    /// Coefficients live in Z/2^k when set — the carry-truncation trick:
+    /// outputs and spec are < 2^(2n), so equality mod 2^(2n) is equality,
+    /// and truncated ripple carries (weight 2^(2n)) vanish instead of
+    /// dragging exponential telescoping terms through the rewrite.
+    mod_pow2: Option<usize>,
+}
+
+impl Poly {
+    pub fn zero() -> Poly {
+        Poly::default()
+    }
+
+    /// Polynomial with coefficients in Z/2^k.
+    pub fn zero_mod(k: usize) -> Poly {
+        Poly { mod_pow2: Some(k), ..Poly::default() }
+    }
+
+    fn reduce(&self, x: BigInt) -> BigInt {
+        match self.mod_pow2 {
+            Some(k) => x.mod_pow2(k),
+            None => x,
+        }
+    }
+
+    pub fn num_terms(&self) -> usize {
+        self.num_terms + !self.constant.is_zero() as usize
+    }
+
+    pub fn constant(&self) -> &BigInt {
+        &self.constant
+    }
+
+    /// Add `coeff · mono` (mono must be sorted; empty = constant).
+    pub fn add_term(&mut self, mono: &[u32], coeff: BigInt) {
+        let coeff = self.reduce(coeff);
+        if coeff.is_zero() {
+            return;
+        }
+        if mono.is_empty() {
+            self.constant = self.reduce(self.constant.add(&coeff));
+            return;
+        }
+        let max = *mono.last().unwrap();
+        let modp = self.mod_pow2;
+        let bucket = self.buckets.entry(max).or_default();
+        match bucket.entry(mono.to_vec().into_boxed_slice()) {
+            std::collections::hash_map::Entry::Occupied(mut e) => {
+                let mut sum = e.get().add(&coeff);
+                if let Some(k) = modp {
+                    sum = sum.mod_pow2(k);
+                }
+                if sum.is_zero() {
+                    e.remove();
+                    self.num_terms -= 1;
+                } else {
+                    *e.get_mut() = sum;
+                }
+            }
+            std::collections::hash_map::Entry::Vacant(e) => {
+                e.insert(coeff);
+                self.num_terms += 1;
+            }
+        }
+        if self
+            .buckets
+            .get(&max)
+            .map(|b| b.is_empty())
+            .unwrap_or(false)
+        {
+            self.buckets.remove(&max);
+        }
+    }
+
+    /// Largest variable with live monomials.
+    pub fn max_var(&self) -> Option<u32> {
+        self.buckets.keys().max().copied()
+    }
+
+    /// Remove and return the whole bucket of monomials whose max var is v.
+    pub fn take_bucket(&mut self, v: u32) -> Vec<(Mono, BigInt)> {
+        match self.buckets.remove(&v) {
+            None => Vec::new(),
+            Some(b) => {
+                self.num_terms -= b.len();
+                b.into_iter().collect()
+            }
+        }
+    }
+
+    /// All live (mono, coeff) pairs, constant included as empty mono.
+    pub fn terms(&self) -> Vec<(Mono, BigInt)> {
+        let mut out: Vec<(Mono, BigInt)> = self
+            .buckets
+            .values()
+            .flat_map(|b| b.iter().map(|(m, c)| (m.clone(), c.clone())))
+            .collect();
+        if !self.constant.is_zero() {
+            out.push((Vec::new().into_boxed_slice(), self.constant.clone()));
+        }
+        out.sort_by(|a, b| a.0.cmp(&b.0));
+        out
+    }
+
+    pub fn is_zero(&self) -> bool {
+        self.num_terms == 0 && self.constant.is_zero()
+    }
+
+    /// self -= other (used for the final spec comparison).
+    pub fn sub_assign(&mut self, other: &Poly) {
+        for (m, c) in other.terms() {
+            self.add_term(&m, c.neg());
+        }
+    }
+
+    /// Evaluate over a boolean assignment (tests only).
+    pub fn eval_bool(&self, assign: &dyn Fn(u32) -> bool) -> BigInt {
+        let mut acc = self.constant.clone();
+        for bucket in self.buckets.values() {
+            for (m, c) in bucket {
+                if m.iter().all(|&v| assign(v)) {
+                    acc = acc.add(c);
+                }
+            }
+        }
+        acc
+    }
+}
+
+/// The unique multilinear polynomial of a boolean function given as a
+/// truth table over `leaves` (LSB-first rows, leaf 0 cycles fastest),
+/// via the Möbius transform: c_S = Σ_{T ⊆ S} (-1)^{|S|-|T|} f(T).
+///
+/// Returns (subset-mask, coefficient) pairs with nonzero coefficients;
+/// masks index into `leaves`.
+pub fn multilinear_of_tt(tt: u16, k: usize) -> Vec<(u8, i64)> {
+    assert!(k <= 4);
+    let rows = 1usize << k;
+    let mut out = Vec::new();
+    for s in 0..rows {
+        let mut c: i64 = 0;
+        // iterate subsets t of s
+        let mut t = s;
+        loop {
+            let f = ((tt >> t) & 1) as i64;
+            let parity = ((s ^ t).count_ones() & 1) as i64;
+            c += if parity == 1 { -f } else { f };
+            if t == 0 {
+                break;
+            }
+            t = (t - 1) & s;
+        }
+        if c != 0 {
+            out.push((s as u8, c));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    #[test]
+    fn add_and_cancel() {
+        let mut p = Poly::zero();
+        p.add_term(&[1, 3], BigInt::from_i64(2));
+        p.add_term(&[1, 3], BigInt::from_i64(-2));
+        assert!(p.is_zero());
+        p.add_term(&[], BigInt::from_i64(5));
+        p.add_term(&[2], BigInt::from_i64(1));
+        assert_eq!(p.num_terms(), 2);
+        assert_eq!(p.max_var(), Some(2));
+    }
+
+    #[test]
+    fn bucket_discipline() {
+        let mut p = Poly::zero();
+        p.add_term(&[1, 7], BigInt::one());
+        p.add_term(&[7], BigInt::one());
+        p.add_term(&[2, 3], BigInt::one());
+        let b7 = p.take_bucket(7);
+        assert_eq!(b7.len(), 2);
+        assert_eq!(p.max_var(), Some(3));
+    }
+
+    #[test]
+    fn mono_union_dedups() {
+        assert_eq!(&*mono_union(&[1, 3], &[2, 3]), &[1, 2, 3]);
+        assert_eq!(&*mono_union(&[], &[5]), &[5]);
+    }
+
+    #[test]
+    fn table1_algebraic_models() {
+        // Table I of the paper via the Möbius transform.
+        // NOT: 1 - a
+        assert_eq!(multilinear_of_tt(0b01, 1), vec![(0, 1), (1, -1)]);
+        // AND: ab
+        assert_eq!(multilinear_of_tt(0b1000, 2), vec![(3, 1)]);
+        // XOR: a + b - 2ab
+        assert_eq!(
+            multilinear_of_tt(0b0110, 2),
+            vec![(1, 1), (2, 1), (3, -2)]
+        );
+        // XOR3: a+b+c -2ab -2ac -2bc +4abc
+        assert_eq!(
+            multilinear_of_tt(0x96, 3),
+            vec![(1, 1), (2, 1), (3, -2), (4, 1), (5, -2), (6, -2), (7, 4)]
+        );
+        // MAJ: ab + ac + bc - 2abc
+        assert_eq!(
+            multilinear_of_tt(0xE8, 3),
+            vec![(3, 1), (5, 1), (6, 1), (7, -2)]
+        );
+    }
+
+    #[test]
+    fn xor3_plus_2maj_is_linear() {
+        // The paper's §III-D identity: XOR3 + 2·MAJ = a + b + c.
+        let mut p = Poly::zero();
+        let leaves = [1u32, 2, 3];
+        for (mask, c) in multilinear_of_tt(0x96, 3) {
+            p.add_term(&mask_to_mono(mask, &leaves), BigInt::from_i64(c));
+        }
+        for (mask, c) in multilinear_of_tt(0xE8, 3) {
+            p.add_term(&mask_to_mono(mask, &leaves), BigInt::from_i64(2 * c));
+        }
+        let terms = p.terms();
+        assert_eq!(terms.len(), 3, "{terms:?}");
+        for (m, c) in terms {
+            assert_eq!(m.len(), 1);
+            assert_eq!(c.to_i128(), Some(1));
+        }
+    }
+
+    fn mask_to_mono(mask: u8, leaves: &[u32]) -> Mono {
+        let mut m: Vec<u32> = leaves
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| mask & (1 << i) != 0)
+            .map(|(_, &l)| l)
+            .collect();
+        m.sort_unstable();
+        m.into_boxed_slice()
+    }
+
+    #[test]
+    fn multilinear_matches_tt_property() {
+        check("mobius poly == tt", 100, |g| {
+            let k = g.usize(1..4);
+            let tt = (g.u64() & ((1u64 << (1 << k)) - 1)) as u16;
+            let coeffs = multilinear_of_tt(tt, k);
+            for row in 0..(1usize << k) {
+                let mut val: i64 = 0;
+                for &(mask, c) in &coeffs {
+                    if mask as usize & row == mask as usize {
+                        val += c;
+                    }
+                }
+                assert_eq!(val, ((tt >> row) & 1) as i64, "tt={tt:#x} row={row}");
+            }
+        });
+    }
+}

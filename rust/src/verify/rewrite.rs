@@ -1,0 +1,406 @@
+//! Backward algebraic rewriting (§III-D) — the verification engine.
+//!
+//! Starting from the output signature Σᵢ 2ⁱ·mᵢ, node variables are
+//! eliminated in strictly decreasing id order (reverse topological): when
+//! variable v is the largest live variable, every monomial containing v is
+//! rewritten by substituting v with the multilinear polynomial of one of
+//! v's cuts. The cut *choice* is where the GNN predictions enter:
+//!
+//! * nodes classified XOR → a 3-cut (or 2-cut) whose table is in the
+//!   XOR class; combined with the sibling carry's MAJ-class cut over the
+//!   same leaves, the §III-D identity `xor3 + 2·maj = a+b+c` cancels all
+//!   nonlinear terms — the polynomial stays small through the adder tree;
+//! * nodes classified MAJ → a MAJ-class 3-cut (or the a·b 2-cut for
+//!   half-adder carries);
+//! * everything else → the fanin 2-cut (generic AND model, Table I).
+//!
+//! Mispredictions don't break soundness — every substitution is exact —
+//! they only lose the cancellation, growing the polynomial; a term cap
+//! converts blowup into a clean "not proven" outcome, mirroring how
+//! classification accuracy translates to verification efficiency in the
+//! paper.
+
+use super::bigint::BigInt;
+use super::poly::{mono_union, multilinear_of_tt, Mono, Poly};
+use crate::aig::{lit_compl, lit_var, Aig, Lit};
+use crate::labels::cuts::{enumerate_cuts, CutSet};
+use crate::labels::NodeClass;
+
+/// A substitution rule for one node: leaves + truth table over them.
+#[derive(Clone, Debug)]
+pub struct Subst {
+    pub leaves: Vec<u32>,
+    pub tt: u16,
+}
+
+/// Outcome of a verification run.
+#[derive(Clone, Debug)]
+pub struct Outcome {
+    pub equivalent: bool,
+    /// Nodes substituted through XOR/MAJ-class cuts (the "adders used").
+    pub adders_used: usize,
+    /// Peak live monomial count (the cost the paper's accuracy buys down).
+    pub peak_terms: usize,
+    /// Why verification stopped, when not equivalent.
+    pub reason: Option<String>,
+}
+
+/// Per-node substitution table built from node classifications.
+pub struct RewritePlan {
+    subst: Vec<Option<Subst>>,
+    pub adder_nodes: usize,
+}
+
+impl RewritePlan {
+    pub fn subst_for(&self, v: u32) -> Option<&Subst> {
+        self.subst.get(v as usize).and_then(|s| s.as_ref())
+    }
+}
+
+const XOR2: u16 = 0b0110;
+const XNOR2: u16 = 0b1001;
+const XOR3: u16 = 0x96;
+const XNOR3: u16 = 0x69;
+
+fn is_maj_class3(tt: u8) -> bool {
+    // input/output complement closure of MAJ3 (matches labels::MAJ_CLASS)
+    let mut mask = 0u8;
+    loop {
+        let mut t = 0u8;
+        for r in 0..8u8 {
+            if 0xE8u8 & (1 << (r ^ mask)) != 0 {
+                t |= 1 << r;
+            }
+        }
+        if tt == t || tt == !t {
+            return true;
+        }
+        if mask == 7 {
+            return false;
+        }
+        mask += 1;
+    }
+}
+
+/// Choose a substitution cut per node, guided by predicted classes
+/// (`pred[node]`, paper labels: 1 = MAJ, 2 = XOR).
+pub fn plan_from_predictions(aig: &Aig, pred: &[u8]) -> RewritePlan {
+    let cutsets = enumerate_cuts(aig, 16);
+    plan_from_cutsets(aig, pred, &cutsets)
+}
+
+pub fn plan_from_cutsets(aig: &Aig, pred: &[u8], cutsets: &[CutSet]) -> RewritePlan {
+    let n = aig.num_nodes();
+    let mut subst: Vec<Option<Subst>> = vec![None; n];
+    let mut adders = 0usize;
+    for id in 0..n as u32 {
+        if !aig.is_and(id) {
+            continue;
+        }
+        let class = NodeClass::from_u8(*pred.get(id as usize).unwrap_or(&3));
+        let mut chosen: Option<Subst> = None;
+        if class == NodeClass::Xor || class == NodeClass::Maj {
+            for cut in cutsets[id as usize].cuts() {
+                match cut.leaves.len() {
+                    2 => {
+                        let tt = (cut.tt & 0xF) as u16;
+                        let xorish = tt == XOR2 || tt == XNOR2;
+                        // HA carry: plain ab over leaves shared with an
+                        // XOR — also a useful 2-cut (exact either way).
+                        let carryish = class == NodeClass::Maj && tt == 0b1000;
+                        if (class == NodeClass::Xor && xorish) || carryish {
+                            chosen = Some(Subst {
+                                leaves: cut.leaves.as_slice().to_vec(),
+                                tt,
+                            });
+                            break;
+                        }
+                    }
+                    3 => {
+                        let tt = cut.tt;
+                        let m = match class {
+                            NodeClass::Xor => tt as u16 == XOR3 || tt as u16 == XNOR3,
+                            NodeClass::Maj => is_maj_class3(tt),
+                            _ => false,
+                        };
+                        if m && chosen.is_none() {
+                            chosen = Some(Subst {
+                                leaves: cut.leaves.as_slice().to_vec(),
+                                tt: tt as u16,
+                            });
+                            // keep scanning for a 2-cut (cheaper) match
+                        }
+                    }
+                    _ => {}
+                }
+            }
+        }
+        if chosen.is_some() {
+            adders += 1;
+        } else {
+            // Generic AND substitution over the fanin 2-cut; polarity in tt.
+            let (f0, f1) = aig.fanins(id);
+            let (v0, c0) = (lit_var(f0), lit_compl(f0));
+            let (v1, c1) = (lit_var(f1), lit_compl(f1));
+            // leaves sorted; build tt for AND(l0^c0, l1^c1) over them.
+            let (la, lb, ca, cb) = if v0 <= v1 { (v0, v1, c0, c1) } else { (v1, v0, c1, c0) };
+            let mut tt = 0u16;
+            for row in 0..4u16 {
+                let a = (row & 1 != 0) ^ ca;
+                let b = (row & 2 != 0) ^ cb;
+                if a & b {
+                    tt |= 1 << row;
+                }
+            }
+            chosen = Some(Subst { leaves: vec![la, lb], tt });
+        }
+        subst[id as usize] = chosen;
+    }
+    RewritePlan { subst, adder_nodes: adders }
+}
+
+/// Literal as a polynomial term stream: x or (1 - x); const lit handled.
+fn add_literal(p: &mut Poly, lit: Lit, weight: &BigInt) {
+    let v = lit_var(lit);
+    if v == 0 {
+        // constant node: FALSE (or TRUE if complemented)
+        if lit_compl(lit) {
+            p.add_term(&[], weight.clone());
+        }
+        return;
+    }
+    if lit_compl(lit) {
+        p.add_term(&[], weight.clone());
+        p.add_term(&[v], weight.neg());
+    } else {
+        p.add_term(&[v], weight.clone());
+    }
+}
+
+/// Build the output signature Σᵢ 2ⁱ·mᵢ, with coefficients in Z/2^(#outputs)
+/// — sound because the signature's value is < 2^(#outputs), and required
+/// so that truncated ripple carries (weight 2^(#outputs)) vanish instead
+/// of telescoping exponentially through the rewrite (the standard SCA
+/// carry-truncation treatment, cf. Kaufmann et al.).
+pub fn output_signature(aig: &Aig) -> Poly {
+    let mut p = Poly::zero_mod(aig.num_outputs());
+    for (i, o) in aig.outputs.iter().enumerate() {
+        add_literal(&mut p, o.lit, &BigInt::pow2(i));
+    }
+    p
+}
+
+/// Build the multiplier spec polynomial (Σ 2ⁱaᵢ)(Σ 2ʲbⱼ) over PI node ids
+/// (first half of PIs = a, second = b), in the same Z/2^(2n) ring.
+pub fn multiplier_spec(aig: &Aig) -> Poly {
+    let pis = aig.pi_ids();
+    let n = pis.len() / 2;
+    let mut p = Poly::zero_mod(aig.num_outputs());
+    for i in 0..n {
+        for j in 0..n {
+            let m = mono_union(&[pis[i]], &[pis[n + j]]);
+            p.add_term(&m, BigInt::pow2(i + j));
+        }
+    }
+    p
+}
+
+/// Run backward rewriting: eliminate all AND variables from `sig`, then
+/// compare against `spec`. `max_terms` caps transient polynomial size.
+pub fn backward_rewrite(
+    aig: &Aig,
+    plan: &RewritePlan,
+    mut sig: Poly,
+    spec: &Poly,
+    max_terms: usize,
+) -> Outcome {
+    let mut peak = sig.num_terms();
+    let mut adders_used = 0usize;
+    while let Some(v) = sig.max_var() {
+        if !aig.is_and(v) {
+            break; // only PI variables remain at or below this id range
+        }
+        let Some(sub) = &plan.subst[v as usize] else {
+            return Outcome {
+                equivalent: false,
+                adders_used,
+                peak_terms: peak,
+                reason: Some(format!("no substitution for node {v}")),
+            };
+        };
+        if sub.leaves.len() == 3 {
+            adders_used += 1;
+        }
+        let coeffs = multilinear_of_tt(sub.tt, sub.leaves.len());
+        let bucket = sig.take_bucket(v);
+        for (mono, coeff) in bucket {
+            // mono = v · rest
+            let rest: Vec<u32> = mono.iter().copied().filter(|&x| x != v).collect();
+            for &(mask, c) in &coeffs {
+                let mut leaves: Vec<u32> = sub
+                    .leaves
+                    .iter()
+                    .enumerate()
+                    .filter(|(i, _)| mask & (1 << i) != 0)
+                    .map(|(_, &l)| l)
+                    .collect();
+                leaves.sort_unstable();
+                let new_mono: Mono = mono_union(&rest, &leaves);
+                sig.add_term(&new_mono, coeff.mul_i64(c));
+            }
+        }
+        peak = peak.max(sig.num_terms());
+        if sig.num_terms() > max_terms {
+            return Outcome {
+                equivalent: false,
+                adders_used,
+                peak_terms: peak,
+                reason: Some(format!(
+                    "term blowup: {} monomials (cap {max_terms})",
+                    sig.num_terms()
+                )),
+            };
+        }
+    }
+    sig.sub_assign(spec);
+    let equivalent = sig.is_zero();
+    Outcome {
+        equivalent,
+        adders_used,
+        peak_terms: peak,
+        reason: if equivalent {
+            None
+        } else {
+            Some(format!("residual polynomial with {} terms", sig.num_terms()))
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aig::booth::booth_multiplier;
+    use crate::aig::mult::csa_multiplier;
+    use crate::aig::wallace::wallace_multiplier;
+    use crate::labels::label_aig_nodes;
+
+    fn verify_with_true_labels(aig: &Aig) -> Outcome {
+        let labels: Vec<u8> = label_aig_nodes(aig).iter().map(|&c| c as u8).collect();
+        let plan = plan_from_predictions(aig, &labels);
+        let sig = output_signature(aig);
+        let spec = multiplier_spec(aig);
+        backward_rewrite(aig, &plan, sig, &spec, 2_000_000)
+    }
+
+    #[test]
+    fn csa_multipliers_verify() {
+        for n in [2usize, 4, 8, 12] {
+            let g = csa_multiplier(n);
+            let out = verify_with_true_labels(&g);
+            assert!(out.equivalent, "csa{n}: {:?}", out.reason);
+        }
+    }
+
+    #[test]
+    fn booth_and_wallace_verify() {
+        // These need the Z/2^(2n) coefficient ring: their reduction trees
+        // truncate always-zero top carries, whose algebraic images only
+        // vanish modulo 2^(2n) (see output_signature docs).
+        for n in [2usize, 3, 4, 8, 12] {
+            let b = booth_multiplier(n);
+            let out = verify_with_true_labels(&b);
+            assert!(out.equivalent, "booth{n}: {:?}", out.reason);
+            let w = wallace_multiplier(n);
+            let out = verify_with_true_labels(&w);
+            assert!(out.equivalent, "wallace{n}: {:?}", out.reason);
+        }
+    }
+
+    #[test]
+    fn buggy_multiplier_is_rejected() {
+        // swap two partial-product wires: 4-bit multiplier with a bug
+        let mut g = crate::aig::Aig::new("buggy");
+        let a = g.pis_n(4);
+        let b = g.pis_n(4);
+        let m = crate::aig::mult::csa_multiplier_into(&mut g, &a, &b);
+        for (i, &bit) in m.iter().enumerate() {
+            // bug: swap outputs 2 and 3
+            let j = match i {
+                2 => 3,
+                3 => 2,
+                k => k,
+            };
+            g.po(format!("m{j}"), bit);
+        }
+        g.outputs.sort_by_key(|o| o.name.clone());
+        let out = verify_with_true_labels(&g);
+        assert!(!out.equivalent, "bug not caught");
+    }
+
+    #[test]
+    fn all_and_predictions_still_sound_but_blow_up() {
+        // With no XOR/MAJ hints (all predicted AND) the rewriting is still
+        // exact; on a tiny multiplier it completes, on larger ones it hits
+        // the term cap — the accuracy→efficiency link the paper claims.
+        let g = csa_multiplier(3);
+        let pred = vec![3u8; g.num_nodes()];
+        let plan = plan_from_predictions(&g, &pred);
+        let sig = output_signature(&g);
+        let spec = multiplier_spec(&g);
+        let out = backward_rewrite(&g, &plan, sig, &spec, 2_000_000);
+        assert!(out.equivalent, "{:?}", out.reason);
+        assert_eq!(out.adders_used, 0);
+
+        let g8 = csa_multiplier(8);
+        let pred8 = vec![3u8; g8.num_nodes()];
+        let plan8 = plan_from_predictions(&g8, &pred8);
+        let out8 = backward_rewrite(
+            &g8,
+            &plan8,
+            output_signature(&g8),
+            &multiplier_spec(&g8),
+            20_000,
+        );
+        // either proven slowly or capped — but never a wrong "equivalent"
+        if !out8.equivalent {
+            assert!(out8.reason.unwrap().contains("blowup"));
+        }
+    }
+
+    #[test]
+    fn good_predictions_keep_polynomial_small() {
+        let g = csa_multiplier(8);
+        let good = verify_with_true_labels(&g);
+        assert!(good.equivalent);
+        // the whole point: peak stays near the spec size (n² = 64)
+        assert!(
+            good.peak_terms < 2_000,
+            "peak {} too large for guided rewriting",
+            good.peak_terms
+        );
+        assert!(good.adders_used > 20);
+    }
+
+    #[test]
+    fn signature_and_spec_agree_under_simulation() {
+        // For random assignments, Σ2^i m_i(x) must equal spec(x) on a
+        // correct multiplier (independent check of both constructions).
+        let g = csa_multiplier(4);
+        let sig = output_signature(&g);
+        let spec = multiplier_spec(&g);
+        let mut rng = crate::util::rng::Rng::new(5);
+        for _ in 0..20 {
+            let ins: Vec<bool> = (0..8).map(|_| rng.bool(0.5)).collect();
+            let vals = crate::aig::sim::node_values_u64(
+                &g,
+                &ins.iter().map(|&b| if b { !0u64 } else { 0 }).collect::<Vec<_>>(),
+            );
+            let assign = |v: u32| vals[v as usize] & 1 != 0;
+            // coefficients are canonical residues; compare values mod 2^w
+            assert_eq!(
+                sig.eval_bool(&assign).mod_pow2(8).to_i128(),
+                spec.eval_bool(&assign).mod_pow2(8).to_i128()
+            );
+        }
+    }
+}
