@@ -1,12 +1,17 @@
 //! Kernel comparison — a compact Fig. 9: the four SpMM engines on one
 //! polarized EDA graph, with the degree profile that motivates the HD/LD
-//! split printed first.
+//! split printed first; then the same engines inside a full GraphSAGE
+//! forward pass through [`NativeBackend`] (the scratch-arena inference
+//! path — no artifacts or XLA toolchain needed; on the GROOT engine the
+//! forward is allocation-free apart from the returned logits vector).
 //!
 //! Run: `cargo run --release --example kernel_compare [-- --bits 128 --dataset booth]`
 
+use groot::backend::{InferenceBackend, NativeBackend, PartitionInput};
 use groot::datasets::{self, DatasetKind};
+use groot::gnn::{SageLayer, SageModel};
 use groot::graph::{Csr, DegreeProfile};
-use groot::spmm::all_engines;
+use groot::spmm::{all_engines, SpmmEngine};
 use groot::util::cli::Args;
 use groot::util::rng::Rng;
 use groot::util::timer::{bench_for, fmt_dur};
@@ -43,12 +48,17 @@ fn main() -> anyhow::Result<()> {
 
     println!("\n{:>16} {:>12} {:>10}", "engine", "median", "speedup");
     let mut baseline = None;
+    let mut out = vec![0.0f32; csr.num_nodes() * dim];
     for engine in all_engines(threads) {
         // correctness first
         let y = engine.spmm_mean(&csr, &x, dim);
         let diff = Csr::max_abs_diff(&y, &reference);
         assert!(diff < 1e-4, "{} wrong by {diff}", engine.name());
-        let stats = bench_for(Duration::from_millis(500), || engine.spmm_mean(&csr, &x, dim));
+        // bench the in-place hot path the model actually runs (reused
+        // output buffer, no per-call allocation for the result)
+        let stats = bench_for(Duration::from_millis(500), || {
+            engine.spmm_mean_into(&csr, &x, dim, &mut out)
+        });
         let med = stats.median_secs();
         let speedup = match baseline {
             None => {
@@ -65,5 +75,70 @@ fn main() -> anyhow::Result<()> {
         );
     }
     println!("\n(speedup relative to cusparse-like; correctness checked vs dense reference)");
+
+    // --- The same engines as the aggregation kernel of a full GraphSAGE
+    // forward pass, via the pluggable NativeBackend. ---
+    let model = random_model(&mut rng, dim, 16, 5);
+    println!(
+        "\n== GraphSAGE forward ({} → 16 → 5) per engine, NativeBackend ==",
+        dim
+    );
+    println!("{:>16} {:>12} {:>10}", "engine", "median", "speedup");
+    let mut reference_logits: Option<Vec<f32>> = None;
+    let mut baseline = None;
+    for engine in all_engines(threads) {
+        let name = engine.name();
+        let backend = NativeBackend::with_engine(model.clone(), engine);
+        let input = PartitionInput { csr: &csr, features: &x, feature_dim: dim };
+        let out = backend.infer(input)?;
+        if let Some(want) = reference_logits.as_deref() {
+            let diff = Csr::max_abs_diff(&out.logits, want);
+            assert!(diff < 1e-3, "{name} logits diverge by {diff}");
+        } else {
+            reference_logits = Some(out.logits);
+        }
+        let stats = bench_for(Duration::from_millis(500), || {
+            backend.infer(input).expect("forward")
+        });
+        let med = stats.median_secs();
+        let speedup = match baseline {
+            None => {
+                baseline = Some(med);
+                1.0
+            }
+            Some(b) => b / med,
+        };
+        println!(
+            "{:>16} {:>12} {:>9.2}x",
+            name,
+            fmt_dur(Duration::from_secs_f64(med)),
+            speedup
+        );
+    }
+    println!("(all engines agree on the logits; forward reuses the scratch arena)");
     Ok(())
+}
+
+/// Random two-layer model so the forward pass exercises the ping-pong
+/// buffers; weights are small to keep activations finite.
+fn random_model(rng: &mut Rng, din: usize, hidden: usize, classes: usize) -> SageModel {
+    let mut w = |n: usize| -> Vec<f32> { (0..n).map(|_| rng.f32() * 0.2 - 0.1).collect() };
+    SageModel {
+        layers: vec![
+            SageLayer {
+                din,
+                dout: hidden,
+                w_self: w(din * hidden),
+                w_neigh: w(din * hidden),
+                bias: w(hidden),
+            },
+            SageLayer {
+                din: hidden,
+                dout: classes,
+                w_self: w(hidden * classes),
+                w_neigh: w(hidden * classes),
+                bias: w(classes),
+            },
+        ],
+    }
 }

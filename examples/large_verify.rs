@@ -10,7 +10,7 @@
 //!
 //! Run: `make artifacts && cargo run --release --example large_verify [-- --bits 128]`
 
-use groot::coordinator::{Backend, Session, SessionConfig};
+use groot::coordinator::{Session, SessionConfig};
 use groot::datasets::{self, DatasetKind};
 use groot::memmodel::MemModel;
 use groot::util::cli::Args;
@@ -37,8 +37,8 @@ fn main() -> anyhow::Result<()> {
     );
     let mut best_pred: Option<Vec<u8>> = None;
     for parts in [1usize, 2, 4, 8, 16, 32, 64] {
-        let session = Session::new(
-            Backend::Native(model.clone()),
+        let session = Session::native(
+            model.clone(),
             SessionConfig { num_partitions: parts, regrow: true, ..Default::default() },
         );
         let res = session.classify(&graph)?;

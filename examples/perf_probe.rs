@@ -1,7 +1,7 @@
 //! Perf probe used by the EXPERIMENTS.md §Perf iteration log.
 use groot::datasets::{self, DatasetKind};
 use groot::graph::Csr;
-use groot::spmm::all_engines;
+use groot::spmm::{all_engines, SpmmEngine};
 use groot::util::rng::Rng;
 use groot::util::timer::{bench, fmt_dur};
 
@@ -14,8 +14,9 @@ fn main() -> anyhow::Result<()> {
     println!("booth128: {} rows, {} nnz, dim {dim}", csr.num_nodes(), csr.num_entries());
     let mut engines = all_engines(1);
     engines.push(Box::new(groot::spmm::GrootSpmm::with_config(1, groot::spmm::groot::GrootConfig { ld_degree_sort: false, ..Default::default() })));
+    let mut out = vec![0.0f32; csr.num_nodes() * dim];
     for e in &engines {
-        let s = bench(3, 15, || e.spmm_mean(&csr, &x, dim));
+        let s = bench(3, 15, || e.spmm_mean_into(&csr, &x, dim, &mut out));
         let gflops = 2.0 * csr.num_entries() as f64 * dim as f64 / s.median_secs() / 1e9;
         let tag = if matches!(engines.iter().position(|x| std::ptr::eq(x.as_ref() as *const _ as *const u8, e.as_ref() as *const _ as *const u8)), Some(4)) { " (no deg-sort)" } else { "" };
         println!("{:>16}{tag}: median {} ({gflops:.2} GFLOP/s)", e.name(), fmt_dur(s.median));

@@ -2,12 +2,14 @@
 //!
 //! Exercises the full GROOT stack: circuit generation → EDA graph →
 //! partitioning → Algorithm-1 edge re-growth → GNN node classification
-//! (AOT PJRT executables if `artifacts/` is built, rust-native fallback
-//! otherwise) → algebraic verification against the multiplier spec.
+//! (AOT PJRT executables when built with `--features xla` and
+//! `artifacts/` exists, rust-native fallback otherwise) → algebraic
+//! verification against the multiplier spec.
 //!
 //! Run: `make artifacts && cargo run --release --example quickstart`
 
-use groot::coordinator::{Backend, Session, SessionConfig};
+use groot::backend::{backend_by_name, InferenceBackend};
+use groot::coordinator::{Session, SessionConfig};
 use groot::datasets::{self, DatasetKind};
 use std::path::Path;
 
@@ -27,25 +29,23 @@ fn main() -> anyhow::Result<()> {
         graph.num_edges()
     );
 
-    // 2. Load the 8-bit-trained model; prefer the AOT PJRT path.
+    // 2. Load the 8-bit-trained model; prefer the AOT PJRT path when this
+    // build carries it (cargo feature `xla`), falling back to rust-native.
     let weights_path = Path::new("artifacts/weights_csa8.bin");
     anyhow::ensure!(
         weights_path.exists(),
         "artifacts missing — run `make artifacts` first"
     );
     let bundle = groot::util::tensor::read_bundle(weights_path)?;
-    let backend = match groot::runtime::Runtime::load_buckets(
-        Path::new("artifacts"),
-        &bundle,
-        4096,
-    ) {
-        Ok(rt) => {
-            println!("backend: PJRT ({}), {} buckets", rt.platform(), rt.num_buckets());
-            Backend::Pjrt(rt)
+    let threads = groot::util::pool::default_threads();
+    let backend = match backend_by_name("xla", &bundle, Path::new("artifacts"), 4096, threads) {
+        Ok(b) => {
+            println!("backend: {}", b.name());
+            b
         }
         Err(e) => {
-            println!("backend: rust-native (PJRT unavailable: {e:#})");
-            Backend::Native(groot::gnn::SageModel::from_bundle(&bundle)?)
+            println!("backend: native (XLA unavailable: {e:#})");
+            backend_by_name("native", &bundle, Path::new("artifacts"), 4096, threads)?
         }
     };
 

@@ -9,6 +9,7 @@
 //!
 //! Run: `make artifacts && cargo run --release --example serve`
 
+use groot::backend::NativeBackend;
 use groot::coordinator::server::Server;
 use groot::coordinator::{Backend, SessionConfig};
 use groot::datasets::{self, DatasetKind};
@@ -16,10 +17,11 @@ use std::path::Path;
 use std::time::Instant;
 
 fn main() -> anyhow::Result<()> {
-    let server = Server::spawn(SessionConfig::default(), || {
+    let server = Server::spawn(SessionConfig::default(), || -> anyhow::Result<Backend> {
         let bundle =
             groot::util::tensor::read_bundle(Path::new("artifacts/weights_csa8.bin"))?;
-        Ok(Backend::Native(groot::gnn::SageModel::from_bundle(&bundle)?))
+        let model = groot::gnn::SageModel::from_bundle(&bundle)?;
+        Ok(Box::new(NativeBackend::new(model)))
     });
     let handle = server.handle();
 

@@ -1,0 +1,210 @@
+//! Pluggable inference backends — the seam between the GROOT coordinator
+//! and whatever executes the GNN.
+//!
+//! The coordinator's job (partition → re-grow → pack → stitch) is backend
+//! agnostic; everything device-specific sits behind [`InferenceBackend`]:
+//!
+//! * [`NativeBackend`] — pure-rust GraphSAGE on a pluggable
+//!   [`crate::spmm::SpmmEngine`], operating directly on the partition's
+//!   local [`Csr`]. Allocation-free in steady state (a persistent
+//!   [`crate::gnn::ForwardScratch`] ping-pongs activations). This is the
+//!   default and the only backend the tier-1 environment can build.
+//! * `XlaBackend` (cargo feature `xla`) — the AOT-compiled PJRT path:
+//!   packs each partition into a fixed shape bucket
+//!   ([`crate::runtime::PackedPartition`]) and runs the compiled HLO
+//!   executable. Source-compatible with environments lacking the real
+//!   XLA toolchain via the vendored API stub (see rust/vendor/xla-stub).
+//!
+//! Every entry point (CLI, examples, server) selects a backend by name
+//! through [`backend_by_name`]; see rust/DESIGN.md §Backend selection.
+
+pub mod native;
+#[cfg(feature = "xla")]
+pub mod xla;
+
+pub use native::NativeBackend;
+#[cfg(feature = "xla")]
+pub use xla::XlaBackend;
+
+use crate::graph::Csr;
+use crate::util::tensor::Bundle;
+use anyhow::Result;
+use std::path::Path;
+
+/// One partition's inference input: the local symmetric adjacency plus
+/// row-major node features (`features.len() == csr.num_nodes() ×
+/// feature_dim`). Rows are in partition-local order (core nodes first).
+#[derive(Clone, Copy)]
+pub struct PartitionInput<'a> {
+    pub csr: &'a Csr,
+    pub features: &'a [f32],
+    pub feature_dim: usize,
+}
+
+impl PartitionInput<'_> {
+    /// Shape validation every backend runs before touching the data, so
+    /// malformed inputs get a uniform `Err` instead of a downstream panic.
+    pub fn validate(&self, expected_dim: usize) -> Result<()> {
+        anyhow::ensure!(
+            self.feature_dim == expected_dim,
+            "feature dim {} does not match backend feature dim {expected_dim}",
+            self.feature_dim
+        );
+        anyhow::ensure!(
+            self.features.len() == self.csr.num_nodes() * self.feature_dim,
+            "features len {} != {} nodes × {} dims",
+            self.features.len(),
+            self.csr.num_nodes(),
+            self.feature_dim
+        );
+        Ok(())
+    }
+}
+
+/// Logits for one partition.
+#[derive(Clone, Debug)]
+pub struct PartitionLogits {
+    /// Row-major [csr.num_nodes() × num_classes]; bucket padding rows
+    /// (if the backend materialized any) are already sliced off.
+    pub logits: Vec<f32>,
+    /// Rows the backend actually materialized — the partition size for
+    /// native execution, the padded shape-bucket size for PJRT. Feeds the
+    /// coordinator's peak-memory stats.
+    pub bucket_rows: usize,
+}
+
+/// A pluggable inference executor for re-grown partitions.
+///
+/// Implementations are used from a single thread at a time (the
+/// coordinator session or the server's router thread own them), so they
+/// may keep interior scratch state; they are not required to be `Send`
+/// (the PJRT client is `Rc`-based).
+pub trait InferenceBackend {
+    fn name(&self) -> &'static str;
+
+    /// Output classes per node.
+    fn num_classes(&self) -> usize;
+
+    /// Run the GNN on one partition; returns per-node logits.
+    fn infer(&self, part: PartitionInput<'_>) -> Result<PartitionLogits>;
+
+    /// Batch entry point: run several partitions through the backend in
+    /// issue order. The default simply streams them through [`Self::infer`]
+    /// (the paper's single-device model); backends with real batching can
+    /// override.
+    fn infer_batch(&self, parts: &[PartitionInput<'_>]) -> Result<Vec<PartitionLogits>> {
+        parts.iter().map(|p| self.infer(*p)).collect()
+    }
+}
+
+/// Build a backend from its CLI name.
+///
+/// * `"native"` — [`NativeBackend`] from the weight bundle, GROOT SpMM
+///   engine with `threads` lanes; needs nothing else.
+/// * `"xla"` (alias `"pjrt"`) — the AOT PJRT path: loads every compiled
+///   bucket with n ≤ `max_bucket` from `artifacts_dir`. Errors unless the
+///   crate was built with `--features xla`.
+pub fn backend_by_name(
+    name: &str,
+    bundle: &Bundle,
+    artifacts_dir: &Path,
+    max_bucket: usize,
+    threads: usize,
+) -> Result<Box<dyn InferenceBackend>> {
+    match name {
+        "native" => {
+            let model = crate::gnn::SageModel::from_bundle(bundle)?;
+            Ok(Box::new(NativeBackend::with_threads(model, threads)))
+        }
+        "xla" | "pjrt" => build_xla(bundle, artifacts_dir, max_bucket),
+        other => anyhow::bail!("unknown backend '{other}' (native|xla)"),
+    }
+}
+
+#[cfg(feature = "xla")]
+fn build_xla(
+    bundle: &Bundle,
+    artifacts_dir: &Path,
+    max_bucket: usize,
+) -> Result<Box<dyn InferenceBackend>> {
+    Ok(Box::new(XlaBackend::load(artifacts_dir, bundle, max_bucket)?))
+}
+
+#[cfg(not(feature = "xla"))]
+fn build_xla(
+    _bundle: &Bundle,
+    _artifacts_dir: &Path,
+    _max_bucket: usize,
+) -> Result<Box<dyn InferenceBackend>> {
+    anyhow::bail!(
+        "the xla backend requires building with `--features xla` \
+         (and a real xla crate checkout; see rust/DESIGN.md)"
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gnn::{SageLayer, SageModel};
+    use crate::util::tensor::{Bundle, Tensor};
+
+    fn bundle_1layer() -> Bundle {
+        let mut b = Bundle::new();
+        b.insert("l0.w_self".into(), Tensor::f32(vec![4, 5], vec![0.1; 20]));
+        b.insert("l0.w_neigh".into(), Tensor::f32(vec![4, 5], vec![0.2; 20]));
+        b.insert("l0.b".into(), Tensor::f32(vec![5], vec![0.0; 5]));
+        b
+    }
+
+    #[test]
+    fn backend_by_name_builds_native() {
+        let b = bundle_1layer();
+        let backend =
+            backend_by_name("native", &b, Path::new("artifacts"), usize::MAX, 1).unwrap();
+        assert_eq!(backend.name(), "native");
+        assert_eq!(backend.num_classes(), 5);
+    }
+
+    #[test]
+    fn backend_by_name_rejects_unknown() {
+        let b = bundle_1layer();
+        assert!(backend_by_name("cuda", &b, Path::new("x"), 0, 1).is_err());
+    }
+
+    #[cfg(not(feature = "xla"))]
+    #[test]
+    fn xla_backend_requires_feature() {
+        let b = bundle_1layer();
+        let err = backend_by_name("xla", &b, Path::new("artifacts"), usize::MAX, 1)
+            .unwrap_err();
+        assert!(err.to_string().contains("--features xla"), "{err:#}");
+    }
+
+    #[test]
+    fn default_infer_batch_streams_partitions() {
+        let model = SageModel {
+            layers: vec![SageLayer {
+                din: 2,
+                dout: 2,
+                w_self: vec![1.0, 0.0, 0.0, 1.0],
+                w_neigh: vec![0.0; 4],
+                bias: vec![0.0, 0.0],
+            }],
+        };
+        let backend = NativeBackend::with_threads(model, 1);
+        let g1 = Csr::symmetric_from_edges(2, &[(0, 1)]);
+        let g2 = Csr::symmetric_from_edges(3, &[(0, 1), (1, 2)]);
+        let x1 = vec![1.0, 2.0, 3.0, 4.0];
+        let x2 = vec![0.5; 6];
+        let parts = [
+            PartitionInput { csr: &g1, features: &x1, feature_dim: 2 },
+            PartitionInput { csr: &g2, features: &x2, feature_dim: 2 },
+        ];
+        let outs = backend.infer_batch(&parts).unwrap();
+        assert_eq!(outs.len(), 2);
+        assert_eq!(outs[0].logits.len(), 2 * 2);
+        assert_eq!(outs[1].logits.len(), 3 * 2);
+        // identity w_self, zero w_neigh/bias → logits == features
+        assert_eq!(outs[0].logits, x1);
+    }
+}

@@ -1,0 +1,112 @@
+//! Rust-native inference backend — [`crate::gnn::SageModel`] on a
+//! pluggable [`SpmmEngine`], operating directly on each partition's local
+//! CSR. No artifacts, no device runtime; also serves as the GAMORA-like
+//! full-graph comparator in the Fig. 10 harness.
+//!
+//! Steady-state inference is allocation-free: a persistent
+//! [`ForwardScratch`] arena ping-pongs activations between two reusable
+//! buffers (see [`SageModel::forward_with`]) and the default
+//! [`GrootSpmm`] engine caches its execution plan and HD scratch per
+//! graph. The only per-call allocation is the returned logits vector.
+
+use super::{InferenceBackend, PartitionInput, PartitionLogits};
+use crate::gnn::{ForwardScratch, SageModel};
+use crate::spmm::{GrootSpmm, SpmmEngine};
+use anyhow::Result;
+use std::sync::Mutex;
+
+pub struct NativeBackend {
+    model: SageModel,
+    engine: Box<dyn SpmmEngine>,
+    /// Reused across calls; behind a Mutex only because `infer` takes
+    /// `&self` — callers are single-threaded, so the lock is uncontended.
+    scratch: Mutex<ForwardScratch>,
+}
+
+impl NativeBackend {
+    /// Default engine: the paper's GROOT SpMM with the default thread
+    /// budget.
+    pub fn new(model: SageModel) -> NativeBackend {
+        Self::with_threads(model, crate::util::pool::default_threads())
+    }
+
+    pub fn with_threads(model: SageModel, threads: usize) -> NativeBackend {
+        Self::with_engine(model, Box::new(GrootSpmm::new(threads)))
+    }
+
+    /// Run the model on an arbitrary SpMM engine (the Fig. 9 comparison
+    /// inside a real model workload).
+    pub fn with_engine(model: SageModel, engine: Box<dyn SpmmEngine>) -> NativeBackend {
+        NativeBackend { model, engine, scratch: Mutex::new(ForwardScratch::new()) }
+    }
+
+    pub fn model(&self) -> &SageModel {
+        &self.model
+    }
+
+    pub fn engine_name(&self) -> &'static str {
+        self.engine.name()
+    }
+}
+
+impl InferenceBackend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn num_classes(&self) -> usize {
+        self.model.num_classes()
+    }
+
+    fn infer(&self, part: PartitionInput<'_>) -> Result<PartitionLogits> {
+        let n = part.csr.num_nodes();
+        part.validate(self.model.input_dim())?;
+        let mut scratch = self.scratch.lock().unwrap();
+        let logits =
+            self.model
+                .forward_with(part.csr, part.features, self.engine.as_ref(), &mut scratch);
+        Ok(PartitionLogits { logits: logits.to_vec(), bucket_rows: n })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Csr;
+    use crate::spmm::CsrRowParallel;
+
+    fn model() -> SageModel {
+        SageModel {
+            layers: vec![crate::gnn::SageLayer {
+                din: 2,
+                dout: 3,
+                w_self: vec![0.4, -0.1, 0.2, 0.3, 0.8, -0.5],
+                w_neigh: vec![0.25, 0.5, -0.75, 0.1, 0.0, 0.9],
+                bias: vec![0.05, -0.05, 0.0],
+            }],
+        }
+    }
+
+    #[test]
+    fn infer_matches_model_forward() {
+        let csr = Csr::symmetric_from_edges(5, &[(0, 1), (1, 2), (2, 3), (3, 4), (4, 0)]);
+        let x: Vec<f32> = (0..10).map(|i| (i as f32).sin()).collect();
+        let m = model();
+        let backend = NativeBackend::with_engine(m.clone(), Box::new(CsrRowParallel::new(1)));
+        let input = PartitionInput { csr: &csr, features: &x, feature_dim: 2 };
+        let out = backend.infer(input).unwrap();
+        let want = m.forward(&csr, &x, &CsrRowParallel::new(1));
+        assert_eq!(out.logits, want);
+        assert_eq!(out.bucket_rows, 5);
+    }
+
+    #[test]
+    fn infer_rejects_shape_mismatch() {
+        let csr = Csr::symmetric_from_edges(2, &[(0, 1)]);
+        let backend = NativeBackend::with_threads(model(), 1);
+        let bad_dim = PartitionInput { csr: &csr, features: &[0.0; 6], feature_dim: 3 };
+        assert!(backend.infer(bad_dim).is_err());
+        let bad_len = PartitionInput { csr: &csr, features: &[0.0; 6], feature_dim: 2 };
+        assert!(backend.infer(bad_len).is_err());
+    }
+}

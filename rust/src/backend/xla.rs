@@ -1,0 +1,77 @@
+//! PJRT/XLA inference backend (cargo feature `xla`) — adapts the
+//! AOT-compiled [`Runtime`] to the [`InferenceBackend`] trait.
+//!
+//! Each partition is packed into the smallest compiled shape bucket that
+//! fits (rows and HD slots) and executed; the padding rows are sliced off
+//! before the logits are returned, so the coordinator stitches core
+//! predictions identically for every backend.
+
+use super::{InferenceBackend, PartitionInput, PartitionLogits};
+use crate::runtime::packed::{hd_slots_needed, pack_partition};
+use crate::runtime::Runtime;
+use crate::util::tensor::Bundle;
+use anyhow::Result;
+use std::path::Path;
+
+pub struct XlaBackend {
+    rt: Runtime,
+}
+
+impl XlaBackend {
+    pub fn new(rt: Runtime) -> XlaBackend {
+        XlaBackend { rt }
+    }
+
+    /// Load every compiled bucket with n ≤ `max_bucket` from
+    /// `artifacts_dir` and upload the weight bundle.
+    pub fn load(artifacts_dir: &Path, weights: &Bundle, max_bucket: usize) -> Result<XlaBackend> {
+        Ok(XlaBackend { rt: Runtime::load_buckets(artifacts_dir, weights, max_bucket)? })
+    }
+
+    /// The underlying PJRT runtime (bucket inspection, weight swaps).
+    pub fn runtime(&self) -> &Runtime {
+        &self.rt
+    }
+
+    pub fn runtime_mut(&mut self) -> &mut Runtime {
+        &mut self.rt
+    }
+}
+
+impl InferenceBackend for XlaBackend {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn num_classes(&self) -> usize {
+        self.rt.manifest.num_classes
+    }
+
+    fn infer(&self, part: PartitionInput<'_>) -> Result<PartitionLogits> {
+        let n = part.csr.num_nodes();
+        part.validate(self.rt.manifest.feature_dim)?;
+        let (k_ld, k_hd) = (self.rt.manifest.k_ld, self.rt.manifest.k_hd);
+        let h_needed = hd_slots_needed(part.csr, k_ld, k_hd);
+        let bucket = self.rt.bucket_for(n, h_needed)?;
+        let spec = self.rt.bucket_spec(bucket);
+        let packed = pack_partition(
+            part.csr,
+            part.features,
+            part.feature_dim,
+            spec.n,
+            spec.h,
+            k_ld,
+            k_hd,
+        )?;
+        let bucket_rows = spec.n;
+        let logits = self.rt.infer(bucket, &packed)?;
+        let classes = self.rt.manifest.num_classes;
+        anyhow::ensure!(
+            logits.len() >= n * classes,
+            "bucket returned {} logits, expected at least {}",
+            logits.len(),
+            n * classes
+        );
+        Ok(PartitionLogits { logits: logits[..n * classes].to_vec(), bucket_rows })
+    }
+}

@@ -2,25 +2,26 @@
 //!
 //! ```text
 //! circuit ──► EDA graph ──► partition (METIS-substitute) ──► re-growth
-//!     (Alg. 1) ──► pack into shape buckets ──► GNN inference
-//!     (PJRT executables or rust-native fallback) ──► stitch core
+//!     (Alg. 1) ──► per-partition GNN inference through a pluggable
+//!     InferenceBackend (native rust or PJRT executables) ──► stitch core
 //!     predictions ──► algebraic verification (crate::verify)
 //! ```
 //!
-//! Packing runs on the thread pool; PJRT execution stays on the session
-//! thread (the `xla` crate's client is `Rc`-based and not `Send`), which
-//! matches the paper's single-GPU model: one device, partitions streamed
-//! through it.
+//! The coordinator never sees a device: each re-grown partition's local
+//! CSR + features go through [`crate::backend::InferenceBackend::infer`],
+//! which packs/pads however its executor needs. Execution stays on the
+//! session thread (the `xla` crate's client is `Rc`-based and not
+//! `Send`), matching the paper's single-GPU model: one device,
+//! partitions streamed through it.
 
 pub mod server;
 
+use crate::backend::{InferenceBackend, NativeBackend, PartitionInput};
 use crate::features::EdaGraph;
 use crate::gnn::SageModel;
 use crate::graph::Csr;
 use crate::partition::{partition_kway, Partitioning};
 use crate::regrowth::{regrow_partitions, RegrownPartition};
-use crate::runtime::{packed::pack_partition, PackedPartition, Runtime};
-use crate::spmm::{GrootSpmm, SpmmEngine};
 use anyhow::{Context, Result};
 use std::time::{Duration, Instant};
 
@@ -48,22 +49,10 @@ impl Default for SessionConfig {
     }
 }
 
-/// Inference backend: AOT PJRT executables (the shipped path) or the
-/// rust-native numeric twin (no artifacts needed; also the GAMORA-like
-/// full-graph baseline).
-pub enum Backend {
-    Pjrt(Runtime),
-    Native(SageModel),
-}
-
-impl Backend {
-    pub fn name(&self) -> &'static str {
-        match self {
-            Backend::Pjrt(_) => "pjrt",
-            Backend::Native(_) => "native",
-        }
-    }
-}
+/// The boxed inference backend a session drives: see
+/// [`crate::backend::InferenceBackend`] for the trait and
+/// [`crate::backend::backend_by_name`] for name-based construction.
+pub type Backend = Box<dyn InferenceBackend>;
 
 /// Per-run observability the harnesses print.
 #[derive(Clone, Debug, Default)]
@@ -100,6 +89,14 @@ pub struct Session {
 impl Session {
     pub fn new(backend: Backend, config: SessionConfig) -> Session {
         Session { backend, config }
+    }
+
+    /// Convenience: a session on the rust-native backend (GROOT SpMM
+    /// engine sized to `config.threads`) — the path every environment can
+    /// run, artifacts or not.
+    pub fn native(model: SageModel, config: SessionConfig) -> Session {
+        let backend = NativeBackend::with_threads(model, config.threads);
+        Session::new(Box::new(backend), config)
     }
 
     /// Run the full classification pipeline on one EDA graph.
@@ -158,50 +155,30 @@ impl Session {
             return Ok(());
         }
         let local_csr = part.csr();
-        // Gather local features.
+        // Gather local features (backend-specific packing — bucket
+        // padding, ELL layout — happens inside the backend and counts as
+        // inference time).
         let fdim = crate::features::GROOT_FEATURE_DIM;
         let t_pack = Instant::now();
         let mut feats = Vec::with_capacity(part.nodes.len() * fdim);
         for &g in &part.nodes {
             feats.extend_from_slice(&graph.features[g as usize]);
         }
-        match &self.backend {
-            Backend::Pjrt(rt) => {
-                let (k_ld, k_hd) = (rt.manifest.k_ld, rt.manifest.k_hd);
-                let h_needed = crate::runtime::packed::hd_slots_needed(&local_csr, k_ld, k_hd);
-                let bucket = rt.bucket_for(part.nodes.len(), h_needed)?;
-                let spec = rt.bucket_spec(bucket);
-                let packed: PackedPartition = pack_partition(
-                    &local_csr,
-                    &feats,
-                    fdim,
-                    spec.n,
-                    spec.h,
-                    k_ld,
-                    k_hd,
-                )?;
-                stats.pack_time += t_pack.elapsed();
-                stats.peak_bucket_n = stats.peak_bucket_n.max(spec.n);
-                let t_inf = Instant::now();
-                let logits = rt.infer(bucket, &packed)?;
-                stats.infer_time += t_inf.elapsed();
-                let classes = rt.manifest.num_classes;
-                for (i, &g) in part.nodes[..part.num_core].iter().enumerate() {
-                    let row = &logits[i * classes..(i + 1) * classes];
-                    pred[g as usize] = argmax(row);
-                }
-            }
-            Backend::Native(model) => {
-                stats.pack_time += t_pack.elapsed();
-                stats.peak_bucket_n = stats.peak_bucket_n.max(part.nodes.len());
-                let t_inf = Instant::now();
-                let engine = GrootSpmm::new(self.config.threads);
-                let local_pred = model.predict(&local_csr, &feats, &engine as &dyn SpmmEngine);
-                stats.infer_time += t_inf.elapsed();
-                for (i, &g) in part.nodes[..part.num_core].iter().enumerate() {
-                    pred[g as usize] = local_pred[i];
-                }
-            }
+        stats.pack_time += t_pack.elapsed();
+
+        let t_inf = Instant::now();
+        let out = self.backend.infer(PartitionInput {
+            csr: &local_csr,
+            features: &feats,
+            feature_dim: fdim,
+        })?;
+        stats.infer_time += t_inf.elapsed();
+        stats.peak_bucket_n = stats.peak_bucket_n.max(out.bucket_rows);
+
+        let classes = self.backend.num_classes();
+        for (i, &g) in part.nodes[..part.num_core].iter().enumerate() {
+            let row = &out.logits[i * classes..(i + 1) * classes];
+            pred[g as usize] = argmax(row);
         }
         Ok(())
     }
@@ -260,8 +237,8 @@ mod tests {
     fn native_pipeline_runs_and_stitches_every_node() {
         let g = csa_multiplier(6);
         let eg = crate::features::EdaGraph::from_aig(&g);
-        let session = Session::new(
-            Backend::Native(type_bit_model()),
+        let session = Session::native(
+            type_bit_model(),
             SessionConfig { num_partitions: 4, regrow: true, ..Default::default() },
         );
         let res = session.classify(&eg).unwrap();
@@ -283,8 +260,8 @@ mod tests {
         let g = csa_multiplier(5);
         let eg = crate::features::EdaGraph::from_aig(&g);
         let mk = |parts| {
-            Session::new(
-                Backend::Native(type_bit_model()),
+            Session::native(
+                type_bit_model(),
                 SessionConfig { num_partitions: parts, regrow: false, ..Default::default() },
             )
         };

@@ -61,7 +61,8 @@ pub struct Server {
 
 impl Server {
     /// Spawn the router thread. `make_backend` runs *on* the router thread
-    /// because PJRT clients are not `Send`.
+    /// because backends need not be `Send` (PJRT clients are `Rc`-based);
+    /// only the constructor closure crosses threads.
     pub fn spawn<F>(config: SessionConfig, make_backend: F) -> Server
     where
         F: FnOnce() -> Result<Backend> + Send + 'static,
@@ -115,6 +116,7 @@ impl Drop for Server {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::backend::NativeBackend;
     use crate::gnn::{SageLayer, SageModel};
 
     fn dummy_model() -> SageModel {
@@ -129,11 +131,13 @@ mod tests {
         }
     }
 
+    fn dummy_backend() -> Result<Backend> {
+        Ok(Box::new(NativeBackend::new(dummy_model())))
+    }
+
     #[test]
     fn server_round_trips_requests() {
-        let server = Server::spawn(SessionConfig::default(), || {
-            Ok(Backend::Native(dummy_model()))
-        });
+        let server = Server::spawn(SessionConfig::default(), dummy_backend);
         let h = server.handle();
         let g = crate::aig::mult::csa_multiplier(4);
         let eg = crate::features::EdaGraph::from_aig(&g);
@@ -148,9 +152,7 @@ mod tests {
 
     #[test]
     fn server_survives_many_sequential_requests() {
-        let server = Server::spawn(SessionConfig::default(), || {
-            Ok(Backend::Native(dummy_model()))
-        });
+        let server = Server::spawn(SessionConfig::default(), dummy_backend);
         let h = server.handle();
         let g = crate::aig::mult::csa_multiplier(3);
         let eg = crate::features::EdaGraph::from_aig(&g);

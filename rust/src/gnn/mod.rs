@@ -29,6 +29,51 @@ pub struct SageModel {
     pub layers: Vec<SageLayer>,
 }
 
+/// Reusable buffer arena for [`SageModel::forward_with`].
+///
+/// Holds the two ping-pong activation buffers plus the aggregation buffer,
+/// all sized `n × max_width` and grown on demand but never shrunk: after
+/// the first forward pass at a given graph size, subsequent passes perform
+/// zero heap allocations (the engine side is covered by
+/// [`crate::spmm::SpmmEngine::spmm_mean_into`]).
+#[derive(Debug, Default)]
+pub struct ForwardScratch {
+    /// Current layer input (the features on entry). Swapped with `pong`
+    /// after every layer, so the final activations always end up here.
+    ping: Vec<f32>,
+    /// Current layer output.
+    pong: Vec<f32>,
+    /// Mean-aggregated neighborhood features for the current layer.
+    agg: Vec<f32>,
+}
+
+impl ForwardScratch {
+    pub fn new() -> ForwardScratch {
+        ForwardScratch::default()
+    }
+
+    /// Grow (never shrink) all three buffers to at least `len` elements.
+    fn reserve_len(&mut self, len: usize) {
+        if self.ping.len() < len {
+            self.ping.resize(len, 0.0);
+        }
+        if self.pong.len() < len {
+            self.pong.resize(len, 0.0);
+        }
+        if self.agg.len() < len {
+            self.agg.resize(len, 0.0);
+        }
+    }
+
+    /// The (unordered) set of buffer base pointers — lets tests assert the
+    /// arena is stable (no reallocation) across warm forward passes.
+    pub fn buffer_ptrs(&self) -> [*const f32; 3] {
+        let mut p = [self.ping.as_ptr(), self.pong.as_ptr(), self.agg.as_ptr()];
+        p.sort();
+        p
+    }
+}
+
 impl SageModel {
     /// Load from a GRTW weight bundle (names `l{i}.w_self` etc).
     pub fn from_bundle(bundle: &Bundle) -> Result<SageModel> {
@@ -67,21 +112,55 @@ impl SageModel {
         self.layers.last().unwrap().dout
     }
 
+    /// Widest activation row the forward pass materializes: the input dim
+    /// and every layer's output dim. Sizes the [`ForwardScratch`] buffers.
+    pub fn max_width(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| l.dout)
+            .max()
+            .unwrap_or(0)
+            .max(self.input_dim())
+    }
+
     /// Full-graph forward pass: features [n × input_dim] → logits
     /// [n × num_classes]. Aggregation via the supplied SpMM engine.
+    ///
+    /// Allocating wrapper over [`SageModel::forward_with`]; hot paths
+    /// (e.g. [`crate::backend::NativeBackend`]) hold a [`ForwardScratch`]
+    /// and call `forward_with` directly.
     pub fn forward(&self, csr: &Csr, features: &[f32], engine: &dyn SpmmEngine) -> Vec<f32> {
+        let mut scratch = ForwardScratch::new();
+        self.forward_with(csr, features, engine, &mut scratch).to_vec()
+    }
+
+    /// Forward pass into a caller-owned [`ForwardScratch`]: each layer
+    /// aggregates into the scratch `agg` buffer and writes activations
+    /// into the opposite ping-pong buffer — no per-layer allocation. The
+    /// returned slice (the logits, [n × num_classes]) borrows the scratch
+    /// and is valid until the next pass.
+    pub fn forward_with<'s>(
+        &self,
+        csr: &Csr,
+        features: &[f32],
+        engine: &dyn SpmmEngine,
+        scratch: &'s mut ForwardScratch,
+    ) -> &'s [f32] {
         let n = csr.num_nodes();
-        assert_eq!(features.len(), n * self.input_dim());
-        let mut h = features.to_vec();
         let mut dim = self.input_dim();
+        assert_eq!(features.len(), n * dim);
+        scratch.reserve_len(n * self.max_width());
+        scratch.ping[..n * dim].copy_from_slice(features);
         for (li, layer) in self.layers.iter().enumerate() {
-            let agg = engine.spmm_mean(csr, &h, dim);
-            let mut out = vec![0.0f32; n * layer.dout];
-            matmul_add(&h, &layer.w_self, &mut out, n, dim, layer.dout);
-            matmul_add(&agg, &layer.w_neigh, &mut out, n, dim, layer.dout);
-            for u in 0..n {
-                for d in 0..layer.dout {
-                    out[u * layer.dout + d] += layer.bias[d];
+            let h = &scratch.ping[..n * dim];
+            engine.spmm_mean_into(csr, h, dim, &mut scratch.agg[..n * dim]);
+            let out = &mut scratch.pong[..n * layer.dout];
+            out.fill(0.0);
+            matmul_add(h, &layer.w_self, out, n, dim, layer.dout);
+            matmul_add(&scratch.agg[..n * dim], &layer.w_neigh, out, n, dim, layer.dout);
+            for row in out.chunks_exact_mut(layer.dout) {
+                for (d, v) in row.iter_mut().enumerate() {
+                    *v += layer.bias[d];
                 }
             }
             if li + 1 < self.layers.len() {
@@ -91,10 +170,11 @@ impl SageModel {
                     }
                 }
             }
-            h = out;
+            // ping-pong: this layer's output becomes the next layer's input
+            std::mem::swap(&mut scratch.ping, &mut scratch.pong);
             dim = layer.dout;
         }
-        h
+        &scratch.ping[..n * dim]
     }
 
     /// Argmax class per node from a forward pass.
@@ -198,6 +278,44 @@ mod tests {
         assert_eq!(m.layers.len(), 2);
         assert_eq!(m.input_dim(), 2);
         assert_eq!(m.num_classes(), 5);
+    }
+
+    #[test]
+    fn forward_with_matches_forward_and_reuses_buffers() {
+        // two layers force at least one ping-pong swap
+        let model = SageModel {
+            layers: vec![
+                SageLayer {
+                    din: 2,
+                    dout: 3,
+                    w_self: vec![0.5, -0.25, 1.0, 0.75, 0.1, -0.6],
+                    w_neigh: vec![-0.3, 0.2, 0.4, 0.9, -0.8, 0.05],
+                    bias: vec![0.1, -0.2, 0.3],
+                },
+                SageLayer {
+                    din: 3,
+                    dout: 2,
+                    w_self: vec![1.0, 0.0, 0.0, 1.0, 0.5, -0.5],
+                    w_neigh: vec![0.2, 0.2, -0.1, 0.3, 0.0, 0.7],
+                    bias: vec![0.0, 0.25],
+                },
+            ],
+        };
+        let csr = Csr::symmetric_from_edges(4, &[(0, 1), (1, 2), (2, 3), (3, 0)]);
+        let x: Vec<f32> = (0..8).map(|i| i as f32 * 0.5 - 1.0).collect();
+        let engine = CsrRowParallel::new(1);
+        let want = model.forward(&csr, &x, &engine);
+
+        let mut scratch = ForwardScratch::new();
+        let p1 = model.forward_with(&csr, &x, &engine, &mut scratch).as_ptr();
+        let bufs1 = scratch.buffer_ptrs();
+        let got = model.forward_with(&csr, &x, &engine, &mut scratch);
+        assert_eq!(got, &want[..], "forward_with diverges from forward");
+        let p2 = got.as_ptr();
+        // warm passes ping-pong inside the same arena: same logits buffer,
+        // same three backing allocations — no reallocation happened
+        assert_eq!(p1, p2, "logits buffer not stable across warm passes");
+        assert_eq!(bufs1, scratch.buffer_ptrs(), "scratch arena reallocated");
     }
 
     #[test]

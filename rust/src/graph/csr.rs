@@ -144,19 +144,24 @@ impl Csr {
     }
 
     /// Parallel check helper: max |a-b| over two feature matrices.
+    /// Each thread accumulates its own partial maximum into a private
+    /// slot; the slots are reduced serially at the end — no lock on the
+    /// parallel path.
     pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
         assert_eq!(a.len(), b.len());
-        let nthreads = crate::util::pool::default_threads();
-        let chunks = std::sync::Mutex::new(0.0f32);
-        parallel_for_static(nthreads, a.len(), |_, s, e| {
+        let nthreads = crate::util::pool::default_threads().max(1);
+        let mut partials = vec![0.0f32; nthreads];
+        let slots = crate::util::pool::SendPtr(partials.as_mut_ptr());
+        parallel_for_static(nthreads, a.len(), |t, s, e| {
             let mut local = 0.0f32;
             for i in s..e {
                 local = local.max((a[i] - b[i]).abs());
             }
-            let mut m = chunks.lock().unwrap();
-            *m = m.max(local);
+            // SAFETY: parallel_for_static hands each thread index t < nthreads
+            // exactly one contiguous range, so slot t is written by one thread.
+            unsafe { *slots.0.add(t) = local };
         });
-        chunks.into_inner().unwrap()
+        partials.iter().fold(0.0f32, |m, &x| m.max(x))
     }
 }
 
@@ -218,6 +223,17 @@ mod tests {
                 }
             }
         });
+    }
+
+    #[test]
+    fn max_abs_diff_reduces_per_thread_partials() {
+        assert_eq!(Csr::max_abs_diff(&[], &[]), 0.0);
+        let a: Vec<f32> = (0..10_000).map(|i| i as f32).collect();
+        let mut b = a.clone();
+        assert_eq!(Csr::max_abs_diff(&a, &b), 0.0);
+        b[7_777] += 3.5; // single spike, deep inside one thread's range
+        b[123] -= 1.25;
+        assert!((Csr::max_abs_diff(&a, &b) - 3.5).abs() < 1e-6);
     }
 
     #[test]

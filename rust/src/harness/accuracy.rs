@@ -3,7 +3,7 @@
 //! (partitioner choice, GROOT vs GAMORA features) DESIGN.md calls out.
 
 use super::{native_model, Table};
-use crate::coordinator::{Backend, Session, SessionConfig};
+use crate::coordinator::{Session, SessionConfig};
 use crate::datasets::{self, DatasetKind};
 use anyhow::Result;
 
@@ -58,8 +58,8 @@ pub fn fig6(weights: &str, kind: DatasetKind, batch: usize, quick: bool) -> Resu
         for parts in partition_counts(quick) {
             let mut acc = [0.0f64; 2];
             for (i, regrow) in [false, true].into_iter().enumerate() {
-                let session = Session::new(
-                    Backend::Native(model.clone()),
+                let session = Session::native(
+                    model.clone(),
                     SessionConfig { num_partitions: parts, regrow, ..Default::default() },
                 );
                 acc[i] = session.classify(&graph)?.accuracy;
@@ -93,8 +93,8 @@ pub fn fig7(weights_8: &str, weights_fpga64: &str, quick: bool) -> Result<()> {
         let graph = datasets::build(DatasetKind::Fpga4Lut, bits)?;
         for &parts in &parts_list {
             let run = |model: &crate::gnn::SageModel| -> Result<f64> {
-                let session = Session::new(
-                    Backend::Native(model.clone()),
+                let session = Session::native(
+                    model.clone(),
                     SessionConfig { num_partitions: parts, ..Default::default() },
                 );
                 Ok(session.classify(&graph)?.accuracy)
@@ -193,10 +193,7 @@ pub fn ablation_features(weights: &str, quick: bool) -> Result<()> {
     );
     for bits in bits_list {
         let graph = datasets::build(DatasetKind::Csa, bits)?;
-        let session = Session::new(
-            Backend::Native(model.clone()),
-            SessionConfig::default(),
-        );
+        let session = Session::native(model.clone(), SessionConfig::default());
         let a4 = session.classify(&graph)?.accuracy;
         let a3 = match &gamora {
             Some(m) => {
@@ -206,7 +203,7 @@ pub fn ablation_features(weights: &str, quick: bool) -> Result<()> {
                 for (f, g) in g3.features.iter_mut().zip(graph.gamora_features()) {
                     *f = [g[0], g[1], g[2], 0.0];
                 }
-                let s = Session::new(Backend::Native(m.clone()), SessionConfig::default());
+                let s = Session::native(m.clone(), SessionConfig::default());
                 format!("{:.4}", s.classify(&g3)?.accuracy)
             }
             None => "(weights_gamora.bin missing)".into(),

@@ -2,10 +2,10 @@
 //! (verification time GROOT vs GAMORA vs ABC).
 
 use super::{native_model, Table};
-use crate::coordinator::{Backend, Session, SessionConfig};
+use crate::coordinator::{Session, SessionConfig};
 use crate::datasets::{self, DatasetKind};
 use crate::graph::Csr;
-use crate::spmm::all_engines;
+use crate::spmm::{all_engines, SpmmEngine};
 use crate::util::rng::Rng;
 use crate::util::timer::{bench_for, fmt_dur};
 use anyhow::Result;
@@ -57,8 +57,11 @@ pub fn fig9(quick: bool) -> Result<()> {
             let engines = all_engines(threads);
             let mut medians = Vec::new();
             let mut makespans = Vec::new();
+            // reused output buffer: time the in-place hot path, not the
+            // allocating convenience wrapper
+            let mut out = vec![0.0f32; csr.num_nodes() * dim];
             for e in &engines {
-                let stats = bench_for(budget, || e.spmm_mean(&csr, &x, dim));
+                let stats = bench_for(budget, || e.spmm_mean_into(&csr, &x, dim, &mut out));
                 medians.push(stats.median_secs());
                 makespans.push(crate::spmm::balance_report(e.as_ref(), &csr, lanes));
             }
@@ -117,8 +120,8 @@ pub fn fig10(weights: &str, quick: bool) -> Result<()> {
         let aig = crate::aig::mult::csa_multiplier(bits);
 
         let run = |parts: usize| -> Result<(f64, f64, bool)> {
-            let session = Session::new(
-                Backend::Native(model.clone()),
+            let session = Session::native(
+                model.clone(),
                 SessionConfig { num_partitions: parts, ..Default::default() },
             );
             let t0 = std::time::Instant::now();

@@ -4,6 +4,7 @@
 //! See DESIGN.md for the system inventory and experiment index.
 
 pub mod aig;
+pub mod backend;
 pub mod coordinator;
 pub mod datasets;
 pub mod features;

@@ -8,6 +8,7 @@
 //!   info          dataset statistics (nodes, edges, degree profile)
 
 use anyhow::{bail, Context, Result};
+use groot::backend::InferenceBackend;
 use groot::coordinator::{Backend, Session, SessionConfig};
 use groot::datasets::{self, DatasetKind};
 use groot::util::cli::Args;
@@ -43,7 +44,7 @@ groot — GNN-based verification of large designs (GROOT, ICCAD'25)
 USAGE:
   groot gen-dataset --out DIR [--specs csa8,csa16,fpga64,...]
   groot classify --dataset csa --bits 16 [--partitions 8] [--no-regrow]
-                 [--backend native|pjrt] [--artifacts DIR] [--weights FILE]
+                 [--backend native|xla] [--artifacts DIR] [--weights FILE]
   groot verify   --dataset csa --bits 16 [same options as classify]
   groot harness  fig1a|fig6a|fig6b|fig6c|fig6d|fig7|fig8|fig9|fig10|tab2
                  [--weights FILE] [--quick]
@@ -82,24 +83,14 @@ fn gen_dataset(args: &mut Args) -> Result<()> {
     Ok(())
 }
 
-fn build_backend(args: &mut Args) -> Result<Backend> {
+fn build_backend(args: &mut Args, threads: usize) -> Result<Backend> {
     let backend = args.get_or("backend", "native");
     let weights_path = PathBuf::from(args.get_or("weights", "artifacts/weights_csa8.bin"));
     let bundle = groot::util::tensor::read_bundle(&weights_path)
         .with_context(|| format!("load weights {}", weights_path.display()))?;
-    match backend.as_str() {
-        "native" => Ok(Backend::Native(groot::gnn::SageModel::from_bundle(&bundle)?)),
-        "pjrt" => {
-            let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
-            let max_bucket = args.parse_or("max-bucket", usize::MAX)?;
-            Ok(Backend::Pjrt(groot::runtime::Runtime::load_buckets(
-                &artifacts,
-                &bundle,
-                max_bucket,
-            )?))
-        }
-        other => bail!("unknown backend '{other}'"),
-    }
+    let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let max_bucket = args.parse_or("max-bucket", usize::MAX)?;
+    groot::backend::backend_by_name(&backend, &bundle, &artifacts, max_bucket, threads)
 }
 
 fn session_config(args: &mut Args) -> Result<SessionConfig> {
@@ -114,7 +105,7 @@ fn session_config(args: &mut Args) -> Result<SessionConfig> {
 fn classify(args: &mut Args) -> Result<()> {
     let (kind, bits) = parse_dataset(args)?;
     let cfg = session_config(args)?;
-    let backend = build_backend(args)?;
+    let backend = build_backend(args, cfg.threads)?;
     let graph = datasets::build(kind, bits)?;
     println!(
         "dataset {}{}: {} nodes, {} edges; backend={}, partitions={}, regrow={}",
@@ -149,7 +140,7 @@ fn classify(args: &mut Args) -> Result<()> {
 fn verify(args: &mut Args) -> Result<()> {
     let (kind, bits) = parse_dataset(args)?;
     let cfg = session_config(args)?;
-    let backend = build_backend(args)?;
+    let backend = build_backend(args, cfg.threads)?;
     let graph = datasets::build(kind, bits)?;
     let session = Session::new(backend, cfg);
     let t0 = std::time::Instant::now();

@@ -1,0 +1,164 @@
+//! PJRT runtime (cargo feature `xla`) — loads the AOT-compiled HLO
+//! artifacts and executes them from the rust request path (python is
+//! never involved at run time).
+//!
+//! One compiled executable per shape bucket; the coordinator pads each
+//! re-grown partition into the smallest fitting bucket. Weights are
+//! uploaded once per session and cloned per call (small tensors).
+//!
+//! Adapted from the /opt/xla-example/load_hlo reference: HLO **text** is
+//! the interchange format (serialized jax≥0.5 protos are rejected by
+//! xla_extension 0.5.1).
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+use super::manifest::{BucketSpec, Manifest};
+use super::packed::PackedPartition;
+use crate::util::tensor::Bundle;
+
+/// A compiled bucket: executable + its shape spec.
+struct CompiledBucket {
+    spec: BucketSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The inference runtime: PJRT CPU client + per-bucket executables +
+/// model weights.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    buckets: Vec<CompiledBucket>,
+    pub manifest: Manifest,
+    /// Weight literals in manifest param order.
+    weights: Vec<xla::Literal>,
+}
+
+impl Runtime {
+    /// Load every bucket listed in `artifacts/manifest.txt` and upload the
+    /// weight bundle.
+    pub fn load(artifacts_dir: &Path, weights: &Bundle) -> Result<Runtime> {
+        Self::load_buckets(artifacts_dir, weights, usize::MAX)
+    }
+
+    /// Load only buckets with n ≤ `max_bucket` (tests use the small ones
+    /// to keep compile time down).
+    pub fn load_buckets(
+        artifacts_dir: &Path,
+        weights: &Bundle,
+        max_bucket: usize,
+    ) -> Result<Runtime> {
+        let mut manifest = Manifest::load(&artifacts_dir.join("manifest.txt"))?;
+        manifest.buckets.retain(|b| b.n <= max_bucket);
+        anyhow::ensure!(!manifest.buckets.is_empty(), "no buckets ≤ {max_bucket}");
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        let mut buckets = Vec::new();
+        for spec in &manifest.buckets {
+            let path = artifacts_dir.join(&spec.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 path")?,
+            )
+            .with_context(|| format!("parse HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compile bucket n={}", spec.n))?;
+            buckets.push(CompiledBucket { spec: spec.clone(), exe });
+        }
+        let weights = Self::pack_weights(&manifest, weights)?;
+        Ok(Runtime { client, buckets, manifest, weights })
+    }
+
+    fn pack_weights(manifest: &Manifest, bundle: &Bundle) -> Result<Vec<xla::Literal>> {
+        let mut out = Vec::with_capacity(manifest.param_names.len());
+        for name in &manifest.param_names {
+            let t = bundle
+                .get(name)
+                .with_context(|| format!("weights bundle missing {name}"))?;
+            let data = t.as_f32()?;
+            let dims: Vec<i64> = t.dims.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(data)
+                .reshape(&dims)
+                .with_context(|| format!("reshape {name}"))?;
+            out.push(lit);
+        }
+        Ok(out)
+    }
+
+    /// Swap in a different weight bundle (e.g. the 64-bit-trained FPGA
+    /// variant for Fig. 7) without recompiling executables.
+    pub fn set_weights(&mut self, bundle: &Bundle) -> Result<()> {
+        self.weights = Self::pack_weights(&self.manifest, bundle)?;
+        Ok(())
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Smallest bucket fitting `n` rows and `h` HD slots.
+    pub fn bucket_for(&self, n: usize, h: usize) -> Result<usize> {
+        self.buckets
+            .iter()
+            .position(|b| b.spec.n >= n && b.spec.h >= h)
+            .with_context(|| format!("no bucket fits n={n} h={h}"))
+    }
+
+    pub fn bucket_spec(&self, idx: usize) -> &BucketSpec {
+        &self.buckets[idx].spec
+    }
+
+    pub fn num_buckets(&self) -> usize {
+        self.buckets.len()
+    }
+
+    /// Execute one packed partition; returns logits
+    /// [n_bucket * num_classes] (caller slices the real rows back out).
+    pub fn infer(&self, bucket_idx: usize, packed: &PackedPartition) -> Result<Vec<f32>> {
+        let bucket = &self.buckets[bucket_idx];
+        let spec = &bucket.spec;
+        anyhow::ensure!(
+            packed.n_bucket == spec.n && packed.h_bucket == spec.h,
+            "packed partition shape ({}, {}) does not match bucket ({}, {})",
+            packed.n_bucket,
+            packed.h_bucket,
+            spec.n,
+            spec.h
+        );
+        let f = self.manifest.feature_dim;
+        let (k_ld, k_hd) = (self.manifest.k_ld, self.manifest.k_hd);
+        let mk_f32 = |data: &[f32], dims: &[i64]| -> Result<xla::Literal> {
+            Ok(xla::Literal::vec1(data).reshape(dims)?)
+        };
+        let mk_i32 = |data: &[i32], dims: &[i64]| -> Result<xla::Literal> {
+            Ok(xla::Literal::vec1(data).reshape(dims)?)
+        };
+        let mut args: Vec<xla::Literal> = vec![
+            mk_f32(&packed.features, &[spec.n as i64, f as i64])?,
+            mk_i32(&packed.ld_cols, &[spec.n as i64, k_ld as i64])?,
+            mk_f32(&packed.ld_w, &[spec.n as i64, k_ld as i64])?,
+            mk_i32(&packed.hd_idx, &[spec.h as i64])?,
+            mk_i32(&packed.hd_cols, &[spec.h as i64, k_hd as i64])?,
+            mk_f32(&packed.hd_w, &[spec.h as i64, k_hd as i64])?,
+        ];
+        for w in &self.weights {
+            args.push(clone_literal(w)?);
+        }
+        let result = bucket.exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let logits = result.to_tuple1()?;
+        Ok(logits.to_vec::<f32>()?)
+    }
+}
+
+/// The xla crate's Literal has no Clone; round-trip through host data.
+fn clone_literal(l: &xla::Literal) -> Result<xla::Literal> {
+    let shape = l.array_shape()?;
+    let dims: Vec<i64> = shape.dims().to_vec();
+    let data = l.to_vec::<f32>()?;
+    Ok(xla::Literal::vec1(&data).reshape(&dims)?)
+}
+
+#[cfg(test)]
+mod tests {
+    // Runtime integration tests live in rust/tests/runtime_integration.rs
+    // (they need artifacts/ built by `make artifacts`).
+}

@@ -35,18 +35,20 @@ impl SpmmEngine for CsrRowParallel {
             .collect()
     }
 
-    fn spmm_mean(&self, csr: &Csr, x: &[f32], dim: usize) -> Vec<f32> {
+    fn spmm_mean_into(&self, csr: &Csr, x: &[f32], dim: usize, out: &mut [f32]) {
         let n = csr.num_nodes();
-        let mut y = vec![0.0f32; n * dim];
+        assert_eq!(x.len(), n * dim);
+        assert_eq!(out.len(), n * dim);
+        out.fill(0.0);
         if self.threads <= 1 {
             // serial fast path: safe chunked iteration lets LLVM see the
             // disjointness directly (§Perf)
-            for (u, orow) in y.chunks_exact_mut(dim).enumerate() {
+            for (u, orow) in out.chunks_exact_mut(dim).enumerate() {
                 row_mean(csr, x, dim, u, orow);
             }
-            return y;
+            return;
         }
-        let ptr = SendPtr(y.as_mut_ptr());
+        let ptr = SendPtr(out.as_mut_ptr());
         parallel_for_static(self.threads, n, |_, s, e| {
             let ptr = &ptr;
             for u in s..e {
@@ -54,7 +56,6 @@ impl SpmmEngine for CsrRowParallel {
                 row_mean(csr, x, dim, u, orow);
             }
         });
-        y
     }
 }
 
@@ -86,12 +87,14 @@ impl SpmmEngine for MergePathSpmm {
             .collect()
     }
 
-    fn spmm_mean(&self, csr: &Csr, x: &[f32], dim: usize) -> Vec<f32> {
+    fn spmm_mean_into(&self, csr: &Csr, x: &[f32], dim: usize, out: &mut [f32]) {
         let n = csr.num_nodes();
         let nnz = csr.num_entries();
-        let mut y = vec![0.0f32; n * dim];
+        assert_eq!(x.len(), n * dim);
+        assert_eq!(out.len(), n * dim);
+        out.fill(0.0);
         if nnz == 0 {
-            return y;
+            return;
         }
         let t = self.threads.min(nnz).max(1);
         let per = nnz.div_ceil(t);
@@ -99,7 +102,7 @@ impl SpmmEngine for MergePathSpmm {
         // partial for last row) when those rows straddle range boundaries.
         let carries: Vec<std::sync::Mutex<Vec<(usize, Vec<f32>)>>> =
             (0..t).map(|_| std::sync::Mutex::new(Vec::new())).collect();
-        let ptr = SendPtr(y.as_mut_ptr());
+        let ptr = SendPtr(out.as_mut_ptr());
         parallel_for_static(t, t, |_, ws, we| {
             let ptr = &ptr;
             for w in ws..we {
@@ -161,11 +164,10 @@ impl SpmmEngine for MergePathSpmm {
         for c in carries {
             for (u, part) in c.into_inner().unwrap() {
                 for d in 0..dim {
-                    y[u * dim + d] += part[d];
+                    out[u * dim + d] += part[d];
                 }
             }
         }
-        y
     }
 }
 
@@ -215,11 +217,13 @@ impl SpmmEngine for GnnAdvisorLike {
         super::simulate_dynamic(tasks.into_iter(), workers)
     }
 
-    fn spmm_mean(&self, csr: &Csr, x: &[f32], dim: usize) -> Vec<f32> {
+    fn spmm_mean_into(&self, csr: &Csr, x: &[f32], dim: usize, out: &mut [f32]) {
         let n = csr.num_nodes();
-        let mut y = vec![0.0f32; n * dim];
+        assert_eq!(x.len(), n * dim);
+        assert_eq!(out.len(), n * dim);
+        out.fill(0.0);
         if n == 0 {
-            return y;
+            return;
         }
         // Pre-chunk rows into tasks of ≈ nnz_budget nonzeros.
         let mut tasks: Vec<(usize, usize)> = Vec::new(); // row ranges
@@ -236,7 +240,7 @@ impl SpmmEngine for GnnAdvisorLike {
         if start < n {
             tasks.push((start, n));
         }
-        let ptr = SendPtr(y.as_mut_ptr());
+        let ptr = SendPtr(out.as_mut_ptr());
         parallel_for_dynamic(self.threads, tasks.len(), 1, |_, ts, te| {
             let ptr = &ptr;
             for t in ts..te {
@@ -247,7 +251,6 @@ impl SpmmEngine for GnnAdvisorLike {
                 }
             }
         });
-        y
     }
 }
 

@@ -10,8 +10,14 @@
 //!   vectorizes cleanly and the output rows of a task are written
 //!   contiguously in sorted order ("coalesced dumping").
 //!
-//! The degree profile is cached per graph (keyed by (n, nnz, row_ptr ptr))
-//! because the model runs one SpMM per GraphSAGE layer on the same graph.
+//! The degree profile is cached per graph because the model runs one SpMM
+//! per GraphSAGE layer on the same graph. The cache is keyed by the
+//! graph's `row_ptr` *contents*: the plan depends only on the degree
+//! structure (never on `col_idx`, which is re-read at execution time), so
+//! equal row pointers make a cached plan valid — and, unlike the address
+//! of a possibly-freed allocation, contents cannot alias a different
+//! graph. The HD partial-sum scratch also lives in the cached plan so the
+//! steady-state execution path performs no allocation.
 
 use super::SpmmEngine;
 use crate::graph::{Csr, DegreeProfile};
@@ -47,7 +53,11 @@ impl Default for GrootConfig {
 }
 
 struct CachedPlan {
-    key: (usize, usize, usize),
+    /// Row pointers of the graph the plan was built for. The plan is a
+    /// pure function of this degree structure, so content equality is the
+    /// exact validity condition (an address-based key can be aliased by a
+    /// freed graph's reused allocation and silently serve a stale plan).
+    row_ptr: Vec<usize>,
     profile: DegreeProfile,
     /// LD rows grouped into tasks: (start, end) index ranges into
     /// profile.ld_rows.
@@ -56,6 +66,9 @@ struct CachedPlan {
     hd_chunks: Vec<(u32, usize, usize, usize)>,
     /// scratch slots per HD row: (row, slot_start, slot_count).
     hd_reduce: Vec<(u32, usize, usize)>,
+    /// Grow-only HD partial-sum scratch (`total slots × dim` floats),
+    /// reused across calls so steady-state execution is allocation-free.
+    hd_scratch: Vec<f32>,
 }
 
 pub struct GrootSpmm {
@@ -129,21 +142,14 @@ impl GrootSpmm {
             slot += nchunks;
         }
         CachedPlan {
-            key: plan_key(csr),
+            row_ptr: csr.row_ptr.clone(),
             profile,
             ld_tasks,
             hd_chunks,
             hd_reduce,
+            hd_scratch: Vec::new(),
         }
     }
-}
-
-fn plan_key(csr: &Csr) -> (usize, usize, usize) {
-    (
-        csr.num_nodes(),
-        csr.num_entries(),
-        csr.row_ptr.as_ptr() as usize,
-    )
 }
 
 impl SpmmEngine for GrootSpmm {
@@ -169,28 +175,42 @@ impl SpmmEngine for GrootSpmm {
         super::simulate_dynamic(hd.chain(ld), workers)
     }
 
-    fn spmm_mean(&self, csr: &Csr, x: &[f32], dim: usize) -> Vec<f32> {
+    fn spmm_mean_into(&self, csr: &Csr, x: &[f32], dim: usize, out: &mut [f32]) {
         let n = csr.num_nodes();
-        let mut y = vec![0.0f32; n * dim];
+        assert_eq!(x.len(), n * dim);
+        assert_eq!(out.len(), n * dim);
+        out.fill(0.0);
         if n == 0 {
-            return y;
+            return;
         }
-        // Fetch or rebuild the cached plan.
+        // Fetch or rebuild the cached plan (content-keyed; see CachedPlan).
         let mut guard = self.plan.lock().unwrap();
-        if guard.as_ref().map(|p| p.key != plan_key(csr)).unwrap_or(true) {
+        if guard
+            .as_ref()
+            .map(|p| p.row_ptr != csr.row_ptr)
+            .unwrap_or(true)
+        {
             *guard = Some(self.build_plan(csr));
         }
-        let plan = guard.as_ref().unwrap();
+        // Split the plan into its read-only parts and the mutable scratch.
+        let CachedPlan {
+            ref profile,
+            ref ld_tasks,
+            ref hd_chunks,
+            ref hd_reduce,
+            ref mut hd_scratch,
+            ..
+        } = *guard.as_mut().unwrap();
 
-        let ptr = SendPtr(y.as_mut_ptr());
+        let ptr = SendPtr(out.as_mut_ptr());
 
         // --- LD path: dynamic over degree-sorted row tasks. ---
-        parallel_for_dynamic(self.threads, plan.ld_tasks.len(), 1, |_, ts, te| {
+        parallel_for_dynamic(self.threads, ld_tasks.len(), 1, |_, ts, te| {
             let ptr = &ptr;
             for t in ts..te {
-                let (s, e) = plan.ld_tasks[t];
+                let (s, e) = ld_tasks[t];
                 for i in s..e {
-                    let u = plan.profile.ld_rows[i] as usize;
+                    let u = profile.ld_rows[i] as usize;
                     let orow =
                         unsafe { std::slice::from_raw_parts_mut(ptr.0.add(u * dim), dim) };
                     super::engines::row_mean(csr, x, dim, u, orow);
@@ -199,14 +219,20 @@ impl SpmmEngine for GrootSpmm {
         });
 
         // --- HD path: chunk partials into scratch, then reduce. ---
-        if !plan.hd_chunks.is_empty() {
-            let nslots: usize = plan.hd_reduce.iter().map(|&(_, _, c)| c).sum();
-            let mut scratch = vec![0.0f32; nslots * dim];
-            let sptr = SendPtr(scratch.as_mut_ptr());
-            parallel_for_dynamic(self.threads, plan.hd_chunks.len(), 1, |_, cs, ce| {
+        if !hd_chunks.is_empty() {
+            let nslots: usize = hd_reduce.iter().map(|&(_, _, c)| c).sum();
+            let need = nslots * dim;
+            // zero the reused prefix; resize zero-fills any new tail itself
+            let reused = hd_scratch.len().min(need);
+            hd_scratch[..reused].fill(0.0);
+            if hd_scratch.len() < need {
+                hd_scratch.resize(need, 0.0);
+            }
+            let sptr = SendPtr(hd_scratch.as_mut_ptr());
+            parallel_for_dynamic(self.threads, hd_chunks.len(), 1, |_, cs, ce| {
                 let sptr = &sptr;
                 for c in cs..ce {
-                    let (u, c0, c1, slot) = plan.hd_chunks[c];
+                    let (u, c0, c1, slot) = hd_chunks[c];
                     let base = csr.row_ptr[u as usize];
                     let srow =
                         unsafe { std::slice::from_raw_parts_mut(sptr.0.add(slot * dim), dim) };
@@ -219,10 +245,11 @@ impl SpmmEngine for GrootSpmm {
                 }
             });
             // Reduction (parallel over HD rows).
-            parallel_for_static(self.threads, plan.hd_reduce.len(), |_, rs, re| {
+            let scratch: &[f32] = hd_scratch;
+            parallel_for_static(self.threads, hd_reduce.len(), |_, rs, re| {
                 let ptr = &ptr;
                 for r in rs..re {
-                    let (u, slot0, count) = plan.hd_reduce[r];
+                    let (u, slot0, count) = hd_reduce[r];
                     let u = u as usize;
                     let deg = csr.degree(u);
                     let inv = 1.0 / deg as f32;
@@ -239,7 +266,6 @@ impl SpmmEngine for GrootSpmm {
                 }
             });
         }
-        y
     }
 }
 
@@ -277,6 +303,36 @@ mod tests {
         let y2 = engine.spmm_mean(&g2, &x2, 2); // invalidates
         let want = g2.spmm_mean_reference(&x2, 2);
         assert!(crate::graph::Csr::max_abs_diff(&y2, &want) < 1e-5);
+    }
+
+    #[test]
+    fn plan_cache_keyed_by_degree_structure_not_address() {
+        // Regression: the cache used to be keyed by (n, nnz, row_ptr
+        // address); a freed graph's allocation reused at the same address
+        // silently served a stale plan. Star and path below agree on n and
+        // nnz but have different degree structures, and dropping the star
+        // before building the path invites the allocator to reuse its
+        // blocks. The content-keyed cache must rebuild regardless.
+        let engine = GrootSpmm::with_config(
+            2,
+            GrootConfig { hd_threshold: 3, hd_chunk: 2, ld_nnz_per_task: 4, ..Default::default() },
+        );
+        let x: Vec<f32> = (0..8).map(|i| i as f32).collect();
+        let y_star = {
+            let star = crate::graph::Csr::symmetric_from_edges(4, &[(0, 1), (0, 2), (0, 3)]);
+            let want = star.spmm_mean_reference(&x, 2);
+            let got = engine.spmm_mean(&star, &x, 2);
+            assert!(crate::graph::Csr::max_abs_diff(&got, &want) < 1e-6);
+            (star.num_nodes(), star.num_entries())
+        }; // star (and its row_ptr allocation) dropped here
+        let path = crate::graph::Csr::symmetric_from_edges(4, &[(0, 1), (1, 2), (2, 3)]);
+        assert_eq!((path.num_nodes(), path.num_entries()), y_star);
+        let want = path.spmm_mean_reference(&x, 2);
+        let got = engine.spmm_mean(&path, &x, 2);
+        assert!(
+            crate::graph::Csr::max_abs_diff(&got, &want) < 1e-6,
+            "stale plan served for a different graph with matching n/nnz"
+        );
     }
 
     #[test]

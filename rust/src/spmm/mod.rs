@@ -26,8 +26,27 @@ use crate::graph::Csr;
 /// A pluggable SpMM strategy.
 pub trait SpmmEngine: Sync {
     fn name(&self) -> &'static str;
-    /// y = D⁻¹ A x with x row-major [n × dim].
-    fn spmm_mean(&self, csr: &Csr, x: &[f32], dim: usize) -> Vec<f32>;
+
+    /// y = D⁻¹ A x written into caller-owned `out` (row-major [n × dim],
+    /// `out.len() == n·dim`). Every element of `out` is overwritten
+    /// (isolated rows become 0); prior contents are ignored. This is the
+    /// hot path [`crate::gnn::SageModel::forward_with`] runs once per
+    /// layer: engines never allocate the output. The serving engine
+    /// ([`GrootSpmm`]) is fully allocation-free in steady state (cached
+    /// per-graph plan + grow-only scratch); the comparison baselines may
+    /// still build small internal task lists per call.
+    fn spmm_mean_into(&self, csr: &Csr, x: &[f32], dim: usize, out: &mut [f32]);
+
+    /// Allocating convenience wrapper over [`SpmmEngine::spmm_mean_into`].
+    /// (The fresh buffer is zeroed here and overwritten by the impl — the
+    /// redundant memset is the price of the convenience path; hot code
+    /// calls `spmm_mean_into` with a reused buffer instead.)
+    fn spmm_mean(&self, csr: &Csr, x: &[f32], dim: usize) -> Vec<f32> {
+        let mut y = vec![0.0f32; csr.num_nodes() * dim];
+        self.spmm_mean_into(csr, x, dim, &mut y);
+        y
+    }
+
     /// Nonzeros processed per worker if this strategy ran on `workers`
     /// parallel lanes — the quantity the paper's GPU speedups derive
     /// from. Containers without real parallelism (this one has 1 CPU)
@@ -119,6 +138,16 @@ pub(crate) mod test_support {
             assert!(
                 diff < 1e-4,
                 "{}: n={n} hubs={hubs} dim={dim}: max diff {diff}",
+                engine.name()
+            );
+            // The into-variant must fully overwrite a poisoned buffer
+            // (large finite sentinel: NaN would be swallowed by max()).
+            let mut dirty = vec![1e30f32; n * dim];
+            engine.spmm_mean_into(&csr, &x, dim, &mut dirty);
+            let diff = Csr::max_abs_diff(&dirty, &want);
+            assert!(
+                diff < 1e-4,
+                "{} (into): n={n} hubs={hubs} dim={dim}: max diff {diff}",
                 engine.name()
             );
         }

@@ -69,13 +69,18 @@ impl Drop for ThreadPool {
 }
 
 /// Number of worker threads to default to (respects GROOT_THREADS).
+/// Resolved once per process and cached: this sits on the per-layer hot
+/// path (`matmul_add`), and `env::var` allocates its value on every call.
 pub fn default_threads() -> usize {
-    if let Ok(v) = std::env::var("GROOT_THREADS") {
-        if let Ok(n) = v.parse::<usize>() {
-            return n.max(1);
+    static DEFAULT: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+    *DEFAULT.get_or_init(|| {
+        if let Ok(v) = std::env::var("GROOT_THREADS") {
+            if let Ok(n) = v.parse::<usize>() {
+                return n.max(1);
+            }
         }
-    }
-    thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+        thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+    })
 }
 
 /// Statically-chunked parallel for: splits `0..n` into `nthreads` contiguous

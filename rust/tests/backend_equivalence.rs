@@ -1,0 +1,163 @@
+//! Backend-layer equivalence suite:
+//!
+//! 1. property tests pinning every SpMM engine's `spmm_mean_into` to the
+//!    dense single-threaded reference on random polarized graphs (the
+//!    degree shape the paper's kernels are designed around), and
+//! 2. a NativeBackend vs `SageModel::forward` equivalence check over a
+//!    real partitioned multiplier, including the packed-partition
+//!    round-trip the PJRT path would take.
+
+use groot::backend::{InferenceBackend, NativeBackend, PartitionInput};
+use groot::gnn::{SageLayer, SageModel};
+use groot::graph::Csr;
+use groot::spmm::{all_engines, GrootSpmm, SpmmEngine};
+use groot::util::prop::{check, Gen};
+
+/// Random graph with planted high-degree hubs — the polarized HD/LD shape
+/// the paper profiles (§IV).
+fn polarized_graph(g: &mut Gen, n: usize, hubs: usize, hub_deg: usize) -> Csr {
+    let mut edges = Vec::new();
+    for u in 0..n as u32 {
+        for _ in 0..g.usize(1..4) {
+            edges.push((u, g.usize(0..n) as u32));
+        }
+    }
+    for h in 0..hubs {
+        let hub = (h * (n / hubs.max(1))) as u32;
+        for _ in 0..hub_deg {
+            edges.push((hub, g.usize(0..n) as u32));
+        }
+    }
+    Csr::symmetric_from_edges(n, &edges)
+}
+
+#[test]
+fn spmm_mean_into_matches_reference_on_polarized_graphs() {
+    for threads in [1usize, 3] {
+        check("spmm_mean_into == reference", 25, move |g| {
+            let n = g.usize(8..250);
+            let hubs = g.usize(0..4);
+            let hub_deg = if hubs > 0 { g.usize(16..160) } else { 0 };
+            let dim = *g.choose(&[1usize, 3, 4, 8, 32]);
+            let csr = polarized_graph(g, n, hubs, hub_deg);
+            let x: Vec<f32> = (0..n * dim).map(|_| g.f32_range(-2.0, 2.0)).collect();
+            let want = csr.spmm_mean_reference(&x, dim);
+            for engine in all_engines(threads) {
+                // poisoned output buffer: the contract is full overwrite
+                let mut out = vec![1e30f32; n * dim];
+                engine.spmm_mean_into(&csr, &x, dim, &mut out);
+                let diff = Csr::max_abs_diff(&out, &want);
+                assert!(
+                    diff < 1e-3,
+                    "{} (threads={threads}): n={n} hubs={hubs} hub_deg={hub_deg} \
+                     dim={dim}: max diff {diff}",
+                    engine.name()
+                );
+                // and the default allocating wrapper agrees with it
+                let alloc = engine.spmm_mean(&csr, &x, dim);
+                assert_eq!(alloc, out, "{}: wrapper diverges from into", engine.name());
+            }
+        });
+    }
+}
+
+fn test_model() -> SageModel {
+    // 4 → 8 → 5, deterministic smallish weights: exercises the ping-pong
+    // swap and a non-trivial hidden width.
+    let w = |n: usize, scale: f32| -> Vec<f32> {
+        (0..n).map(|i| ((i % 13) as f32 - 6.0) * scale).collect()
+    };
+    SageModel {
+        layers: vec![
+            SageLayer {
+                din: 4,
+                dout: 8,
+                w_self: w(32, 0.05),
+                w_neigh: w(32, -0.03),
+                bias: w(8, 0.01),
+            },
+            SageLayer {
+                din: 8,
+                dout: 5,
+                w_self: w(40, 0.04),
+                w_neigh: w(40, 0.02),
+                bias: w(5, -0.01),
+            },
+        ],
+    }
+}
+
+#[test]
+fn native_backend_equals_forward_on_regrown_partitions() {
+    let aig = groot::aig::mult::csa_multiplier(10);
+    let graph = groot::features::EdaGraph::from_aig(&aig);
+    let csr = Csr::symmetric_from_edges(graph.num_nodes, &graph.edges);
+    let partitioning = groot::partition::partition_kway(&csr, 5, 7);
+    let parts = groot::regrowth::regrow_partitions(&csr, &partitioning, true);
+    assert!(parts.iter().any(|p| p.num_boundary() > 0), "want re-grown boundaries");
+
+    let model = test_model();
+    let backend = NativeBackend::with_threads(model.clone(), 2);
+    let oracle_engine = GrootSpmm::new(1);
+    for part in &parts {
+        if part.nodes.is_empty() {
+            continue;
+        }
+        let local = part.csr();
+        let mut feats = Vec::with_capacity(part.nodes.len() * 4);
+        for &g in &part.nodes {
+            feats.extend_from_slice(&graph.features[g as usize]);
+        }
+        let out = backend
+            .infer(PartitionInput { csr: &local, features: &feats, feature_dim: 4 })
+            .unwrap();
+        let want = model.forward(&local, &feats, &oracle_engine);
+        assert_eq!(out.logits.len(), want.len());
+        let diff = Csr::max_abs_diff(&out.logits, &want);
+        assert!(
+            diff < 1e-3,
+            "partition {}: backend logits diverge from forward by {diff}",
+            part.part_id
+        );
+        assert_eq!(out.bucket_rows, part.nodes.len());
+    }
+}
+
+#[test]
+fn packed_partition_roundtrip_matches_csr_aggregation() {
+    // The PJRT path packs each partition into ELL/HD bucket tensors; the
+    // host-side oracle must agree with the CSR engines on the re-grown
+    // partitions, so native and xla backends see the same math.
+    use groot::runtime::packed::{aggregate_packed, hd_slots_needed, pack_partition};
+
+    let aig = groot::aig::mult::csa_multiplier(8);
+    let graph = groot::features::EdaGraph::from_aig(&aig);
+    let csr = Csr::symmetric_from_edges(graph.num_nodes, &graph.edges);
+    let partitioning = groot::partition::partition_kway(&csr, 3, 0);
+    let parts = groot::regrowth::regrow_partitions(&csr, &partitioning, true);
+    let engine = GrootSpmm::new(2);
+    let (k_ld, k_hd) = (8usize, 16usize);
+    let dim = 4usize;
+    for part in &parts {
+        if part.nodes.is_empty() {
+            continue;
+        }
+        let local = part.csr();
+        let n = local.num_nodes();
+        let x: Vec<f32> = (0..n * dim).map(|i| ((i * 37 % 101) as f32) / 50.0 - 1.0).collect();
+        let n_bucket = n.next_power_of_two().max(16);
+        let h_bucket = hd_slots_needed(&local, k_ld, k_hd).max(1);
+        let packed =
+            pack_partition(&local, &x, dim, n_bucket, h_bucket, k_ld, k_hd).unwrap();
+        let mut xb = vec![0.0f32; n_bucket * dim];
+        xb[..n * dim].copy_from_slice(&x);
+        let agg_packed = aggregate_packed(&packed, &xb, dim);
+        let agg_csr = engine.spmm_mean(&local, &x, dim);
+        let diff = Csr::max_abs_diff(&agg_packed[..n * dim], &agg_csr);
+        assert!(
+            diff < 1e-4,
+            "partition {}: packed round-trip diverges from CSR engine by {diff}",
+            part.part_id
+        );
+    }
+}

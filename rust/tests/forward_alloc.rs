@@ -1,0 +1,111 @@
+//! Zero-allocation forward path: after a warm-up pass (plan cache + the
+//! ForwardScratch arena populated), `SageModel::forward_with` on the
+//! GROOT engine must perform no heap allocation at all.
+//!
+//! A counting global allocator measures this directly. The whole file is
+//! its own test binary with a single test so the counter is not perturbed
+//! by concurrent tests, and GROOT_THREADS=1 pins every parallel_for to
+//! the inline path (spawning worker threads allocates, and a 1-CPU
+//! container would not spawn any — the env var makes that deterministic
+//! everywhere).
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+struct CountingAlloc;
+
+static ALLOCATIONS: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+use groot::gnn::{ForwardScratch, SageLayer, SageModel};
+use groot::graph::Csr;
+use groot::spmm::GrootSpmm;
+
+fn model() -> SageModel {
+    let w = |n: usize, s: f32| -> Vec<f32> {
+        (0..n).map(|i| ((i % 7) as f32 - 3.0) * s).collect()
+    };
+    SageModel {
+        layers: vec![
+            SageLayer { din: 4, dout: 8, w_self: w(32, 0.1), w_neigh: w(32, 0.05), bias: w(8, 0.02) },
+            SageLayer { din: 8, dout: 5, w_self: w(40, 0.08), w_neigh: w(40, 0.03), bias: w(5, 0.01) },
+        ],
+    }
+}
+
+#[test]
+fn forward_with_is_allocation_free_after_warmup() {
+    // Inline (thread-free) parallel_for paths regardless of host CPUs.
+    // default_threads() latches its value on first call, so this must run
+    // before anything touches it — assert the latch took, loudly, rather
+    // than flaking later if another test sneaks in front.
+    std::env::set_var("GROOT_THREADS", "1");
+    assert_eq!(
+        groot::util::pool::default_threads(),
+        1,
+        "default_threads latched before GROOT_THREADS was set; \
+         keep this binary to a single test"
+    );
+
+    // Polarized graph: hub rows push the GrootSpmm HD path (chunking +
+    // cached scratch), the rest take the LD path.
+    let mut edges: Vec<(u32, u32)> = (1..400u32).map(|v| (v - 1, v)).collect();
+    for v in 0..120u32 {
+        edges.push((0, 3 * v + 1));
+    }
+    let csr = Csr::symmetric_from_edges(400, &edges);
+    let x: Vec<f32> = (0..400 * 4).map(|i| ((i % 17) as f32) * 0.1 - 0.8).collect();
+    let model = model();
+    let engine = GrootSpmm::with_config(
+        1,
+        groot::spmm::groot::GrootConfig {
+            hd_threshold: 32,
+            hd_chunk: 16,
+            ld_nnz_per_task: 64,
+            ..Default::default()
+        },
+    );
+    let mut scratch = ForwardScratch::new();
+
+    // Warm-up: builds the SpMM plan, its HD scratch, and the arena.
+    let warm = model.forward_with(&csr, &x, &engine, &mut scratch).to_vec();
+
+    // Steady state: zero heap allocations per pass. Take the minimum over
+    // a few passes so an unrelated one-off allocation elsewhere in the
+    // process cannot flake the assertion — the claim is that the forward
+    // path itself allocates nothing.
+    let mut min_delta = usize::MAX;
+    for _ in 0..5 {
+        let before = ALLOCATIONS.load(Ordering::Relaxed);
+        let out = model.forward_with(&csr, &x, &engine, &mut scratch);
+        let delta = ALLOCATIONS.load(Ordering::Relaxed) - before;
+        assert!(!out.is_empty());
+        min_delta = min_delta.min(delta);
+    }
+    assert_eq!(
+        min_delta, 0,
+        "warm forward_with performed {min_delta} heap allocations per pass"
+    );
+
+    // And it still computes the right thing.
+    let again = model.forward_with(&csr, &x, &engine, &mut scratch);
+    assert_eq!(again, &warm[..]);
+}

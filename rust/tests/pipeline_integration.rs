@@ -2,7 +2,7 @@
 //! generators → labeler → partitioner → regrowth → packing → native GNN →
 //! verifier, plus failure injection.
 
-use groot::coordinator::{Backend, Session, SessionConfig};
+use groot::coordinator::{Session, SessionConfig};
 use groot::datasets::{self, DatasetKind};
 use groot::gnn::{SageLayer, SageModel};
 
@@ -33,8 +33,8 @@ fn every_dataset_flows_through_the_pipeline() {
         DatasetKind::Fpga4Lut,
     ] {
         let graph = datasets::build(kind, 8).unwrap();
-        let session = Session::new(
-            Backend::Native(dumb_model()),
+        let session = Session::native(
+            dumb_model(),
             SessionConfig { num_partitions: 3, ..Default::default() },
         );
         let res = session.classify(&graph).unwrap();
@@ -116,8 +116,8 @@ fn random_mispredictions_degrade_gracefully() {
 #[test]
 fn partition_counts_beyond_nodes_are_clamped() {
     let graph = datasets::build(DatasetKind::Csa, 4).unwrap();
-    let session = Session::new(
-        Backend::Native(dumb_model()),
+    let session = Session::native(
+        dumb_model(),
         SessionConfig { num_partitions: 10_000, ..Default::default() },
     );
     let res = session.classify(&graph).unwrap();
@@ -130,7 +130,7 @@ fn batch_replication_is_consistent() {
     // the full-graph (no partitioning) path
     let graph = datasets::build(DatasetKind::Csa, 6).unwrap();
     let batched = graph.replicate(3);
-    let session = Session::new(Backend::Native(dumb_model()), SessionConfig::default());
+    let session = Session::native(dumb_model(), SessionConfig::default());
     let r1 = session.classify(&graph).unwrap();
     let rb = session.classify(&batched).unwrap();
     for copy in 0..3 {

@@ -1,75 +1,31 @@
-//! Integration tests over the AOT artifacts + PJRT runtime + coordinator.
+//! Integration tests over the AOT artifacts + coordinator.
 //!
-//! These need `make artifacts` to have run (they are skipped with a
-//! message otherwise, so plain `cargo test` works on a fresh checkout).
+//! The PJRT-backed tests need `make artifacts` (weights + HLO buckets)
+//! AND the crate built with `--features xla` against a real xla crate;
+//! they are compiled out otherwise. The native tests need only the
+//! weight bundle (skipped with a message when missing, so plain
+//! `cargo test` works on a fresh checkout).
 
-use groot::coordinator::{Backend, Session, SessionConfig};
+use groot::coordinator::{Session, SessionConfig};
 use groot::datasets::{self, DatasetKind};
 use std::path::Path;
 
-fn artifacts_ready() -> bool {
-    Path::new("artifacts/manifest.txt").exists()
-        && Path::new("artifacts/weights_csa8.bin").exists()
-}
-
-fn load_runtime(max_bucket: usize) -> groot::runtime::Runtime {
-    let bundle =
-        groot::util::tensor::read_bundle(Path::new("artifacts/weights_csa8.bin")).unwrap();
-    groot::runtime::Runtime::load_buckets(Path::new("artifacts"), &bundle, max_bucket).unwrap()
-}
-
-#[test]
-fn pjrt_matches_native_backend_exactly() {
-    if !artifacts_ready() {
-        eprintln!("skipping: run `make artifacts` first");
-        return;
-    }
-    let graph = datasets::build(DatasetKind::Csa, 12).unwrap();
-    let bundle =
-        groot::util::tensor::read_bundle(Path::new("artifacts/weights_csa8.bin")).unwrap();
-    let native = Session::new(
-        Backend::Native(groot::gnn::SageModel::from_bundle(&bundle).unwrap()),
-        SessionConfig { num_partitions: 3, ..Default::default() },
-    );
-    let pjrt = Session::new(
-        Backend::Pjrt(load_runtime(4096)),
-        SessionConfig { num_partitions: 3, ..Default::default() },
-    );
-    let rn = native.classify(&graph).unwrap();
-    let rp = pjrt.classify(&graph).unwrap();
-    // identical argmax decisions (same weights, same math, f32)
-    assert_eq!(rn.pred, rp.pred, "native and PJRT predictions diverge");
-    assert!((rn.accuracy - rp.accuracy).abs() < 1e-12);
-}
-
-#[test]
-fn pjrt_bucket_selection_and_padding() {
-    if !artifacts_ready() {
-        eprintln!("skipping: run `make artifacts` first");
-        return;
-    }
-    let rt = load_runtime(16384);
-    // small partition → smallest bucket
-    let b = rt.bucket_for(500, 4).unwrap();
-    assert_eq!(rt.bucket_spec(b).n, 1024);
-    // just over → next bucket
-    let b = rt.bucket_for(1025, 4).unwrap();
-    assert_eq!(rt.bucket_spec(b).n, 4096);
-    // beyond max loaded → error
-    assert!(rt.bucket_for(1_000_000, 4).is_err());
+/// Native tests need only the trained weight bundle.
+fn weights_ready() -> bool {
+    Path::new("artifacts/weights_csa8.bin").exists()
 }
 
 #[test]
 fn trained_model_generalizes_to_larger_multipliers() {
-    if !artifacts_ready() {
+    if !weights_ready() {
         eprintln!("skipping: run `make artifacts` first");
         return;
     }
     // paper: trained on 8-bit, ≥99.9% on larger CSA multipliers
     let bundle =
         groot::util::tensor::read_bundle(Path::new("artifacts/weights_csa8.bin")).unwrap();
-    let session = Session::new(
-        Backend::Native(groot::gnn::SageModel::from_bundle(&bundle).unwrap()),
+    let session = Session::native(
+        groot::gnn::SageModel::from_bundle(&bundle).unwrap(),
         SessionConfig::default(),
     );
     for bits in [16usize, 32, 64] {
@@ -85,7 +41,7 @@ fn trained_model_generalizes_to_larger_multipliers() {
 
 #[test]
 fn regrowth_recovers_partitioning_accuracy() {
-    if !artifacts_ready() {
+    if !weights_ready() {
         eprintln!("skipping: run `make artifacts` first");
         return;
     }
@@ -94,8 +50,8 @@ fn regrowth_recovers_partitioning_accuracy() {
     let model = groot::gnn::SageModel::from_bundle(&bundle).unwrap();
     let graph = datasets::build(DatasetKind::Csa, 32).unwrap();
     let acc = |parts: usize, regrow: bool| -> f64 {
-        let s = Session::new(
-            Backend::Native(model.clone()),
+        let s = Session::native(
+            model.clone(),
             SessionConfig { num_partitions: parts, regrow, ..Default::default() },
         );
         s.classify(&graph).unwrap().accuracy
@@ -111,41 +67,99 @@ fn regrowth_recovers_partitioning_accuracy() {
     );
 }
 
-#[test]
-fn end_to_end_verification_through_pjrt() {
-    if !artifacts_ready() {
-        eprintln!("skipping: run `make artifacts` first");
-        return;
-    }
-    let bits = 16;
-    let aig = groot::aig::mult::csa_multiplier(bits);
-    let graph = datasets::build(DatasetKind::Csa, bits).unwrap();
-    let session = Session::new(
-        Backend::Pjrt(load_runtime(4096)),
-        SessionConfig { num_partitions: 4, ..Default::default() },
-    );
-    let res = session.classify(&graph).unwrap();
-    let outcome = groot::verify::verify_multiplier(&aig, &graph, &res.pred).unwrap();
-    assert!(outcome.equivalent, "{:?}", outcome.reason);
-    assert!(res.accuracy > 0.99);
-}
+#[cfg(feature = "xla")]
+mod pjrt {
+    use super::*;
+    use groot::backend::XlaBackend;
 
-#[test]
-fn fpga_weights_swap_via_set_weights() {
-    if !artifacts_ready() || !Path::new("artifacts/weights_fpga64.bin").exists() {
-        eprintln!("skipping: run `make artifacts` first");
-        return;
+    /// PJRT tests additionally need the compiled HLO buckets.
+    fn artifacts_ready() -> bool {
+        weights_ready() && Path::new("artifacts/manifest.txt").exists()
     }
-    let mut rt = load_runtime(4096);
-    let fpga = groot::util::tensor::read_bundle(Path::new("artifacts/weights_fpga64.bin"))
-        .unwrap();
-    rt.set_weights(&fpga).unwrap();
-    let graph = datasets::build(DatasetKind::Fpga4Lut, 16).unwrap();
-    let session = Session::new(
-        Backend::Pjrt(rt),
-        SessionConfig { num_partitions: 2, ..Default::default() },
-    );
-    let res = session.classify(&graph).unwrap();
-    // 64-bit-FPGA-trained weights should do decently on fpga16
-    assert!(res.accuracy > 0.80, "fpga16 accuracy {}", res.accuracy);
+
+    fn load_runtime(max_bucket: usize) -> groot::runtime::Runtime {
+        let bundle =
+            groot::util::tensor::read_bundle(Path::new("artifacts/weights_csa8.bin")).unwrap();
+        groot::runtime::Runtime::load_buckets(Path::new("artifacts"), &bundle, max_bucket)
+            .unwrap()
+    }
+
+    fn xla_session(max_bucket: usize, cfg: SessionConfig) -> Session {
+        Session::new(Box::new(XlaBackend::new(load_runtime(max_bucket))), cfg)
+    }
+
+    #[test]
+    fn pjrt_matches_native_backend_exactly() {
+        if !artifacts_ready() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let graph = datasets::build(DatasetKind::Csa, 12).unwrap();
+        let bundle =
+            groot::util::tensor::read_bundle(Path::new("artifacts/weights_csa8.bin")).unwrap();
+        let native = Session::native(
+            groot::gnn::SageModel::from_bundle(&bundle).unwrap(),
+            SessionConfig { num_partitions: 3, ..Default::default() },
+        );
+        let pjrt = xla_session(4096, SessionConfig { num_partitions: 3, ..Default::default() });
+        let rn = native.classify(&graph).unwrap();
+        let rp = pjrt.classify(&graph).unwrap();
+        // identical argmax decisions (same weights, same math, f32)
+        assert_eq!(rn.pred, rp.pred, "native and PJRT predictions diverge");
+        assert!((rn.accuracy - rp.accuracy).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pjrt_bucket_selection_and_padding() {
+        if !artifacts_ready() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let rt = load_runtime(16384);
+        // small partition → smallest bucket
+        let b = rt.bucket_for(500, 4).unwrap();
+        assert_eq!(rt.bucket_spec(b).n, 1024);
+        // just over → next bucket
+        let b = rt.bucket_for(1025, 4).unwrap();
+        assert_eq!(rt.bucket_spec(b).n, 4096);
+        // beyond max loaded → error
+        assert!(rt.bucket_for(1_000_000, 4).is_err());
+    }
+
+    #[test]
+    fn end_to_end_verification_through_pjrt() {
+        if !artifacts_ready() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let bits = 16;
+        let aig = groot::aig::mult::csa_multiplier(bits);
+        let graph = datasets::build(DatasetKind::Csa, bits).unwrap();
+        let session =
+            xla_session(4096, SessionConfig { num_partitions: 4, ..Default::default() });
+        let res = session.classify(&graph).unwrap();
+        let outcome = groot::verify::verify_multiplier(&aig, &graph, &res.pred).unwrap();
+        assert!(outcome.equivalent, "{:?}", outcome.reason);
+        assert!(res.accuracy > 0.99);
+    }
+
+    #[test]
+    fn fpga_weights_swap_via_set_weights() {
+        if !artifacts_ready() || !Path::new("artifacts/weights_fpga64.bin").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let mut backend = XlaBackend::new(load_runtime(4096));
+        let fpga = groot::util::tensor::read_bundle(Path::new("artifacts/weights_fpga64.bin"))
+            .unwrap();
+        backend.runtime_mut().set_weights(&fpga).unwrap();
+        let graph = datasets::build(DatasetKind::Fpga4Lut, 16).unwrap();
+        let session = Session::new(
+            Box::new(backend),
+            SessionConfig { num_partitions: 2, ..Default::default() },
+        );
+        let res = session.classify(&graph).unwrap();
+        // 64-bit-FPGA-trained weights should do decently on fpga16
+        assert!(res.accuracy > 0.80, "fpga16 accuracy {}", res.accuracy);
+    }
 }

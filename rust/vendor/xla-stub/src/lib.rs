@@ -1,0 +1,146 @@
+//! Offline API stub for the `xla` (PJRT) crate.
+//!
+//! The tier-1 build environment has no XLA toolchain, but the workspace
+//! keeps the PJRT backend source compiling behind the `xla` cargo feature.
+//! This stub mirrors exactly the API surface `rust/src/runtime/pjrt.rs`
+//! uses; every entry point that would touch a real device errors with a
+//! clear message ([`PjRtClient::cpu`] fails first, so nothing else is ever
+//! reached at run time).
+//!
+//! Environments with the real crate repoint the `xla` path dependency in
+//! the workspace `Cargo.toml` at their checkout; no source change needed.
+
+use std::fmt;
+
+/// Error type matching the real crate's `anyhow`-compatible errors.
+#[derive(Debug)]
+pub struct Error(String);
+
+impl Error {
+    fn stub() -> Error {
+        Error(
+            "xla stub: this build vendors an API stub instead of the real \
+             XLA/PJRT runtime; repoint the `xla` path dependency in \
+             Cargo.toml at a real xla crate checkout"
+                .to_string(),
+        )
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Host-side literal (tensor) handle.
+#[derive(Debug, Default)]
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1<T: Copy>(_data: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Err(Error::stub())
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(Error::stub())
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Err(Error::stub())
+    }
+
+    pub fn to_tuple1(&self) -> Result<Literal> {
+        Err(Error::stub())
+    }
+}
+
+/// Array shape of a literal.
+#[derive(Debug, Default)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Parsed HLO module.
+#[derive(Debug, Default)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(Error::stub())
+    }
+}
+
+/// An XLA computation built from an HLO module.
+#[derive(Debug, Default)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Device-resident buffer returned by an execution.
+#[derive(Debug, Default)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::stub())
+    }
+}
+
+/// A compiled, loaded executable.
+#[derive(Debug, Default)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::stub())
+    }
+}
+
+/// PJRT client handle. [`PjRtClient::cpu`] is the construction entry point
+/// the runtime uses; it fails immediately in the stub.
+#[derive(Debug, Default)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::stub())
+    }
+
+    pub fn platform_name(&self) -> String {
+        "xla-stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::stub())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_construction_fails_with_stub_message() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("xla stub"));
+    }
+}
