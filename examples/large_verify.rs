@@ -4,13 +4,18 @@
 //! bucket, and verified; memory drops with the partition count while
 //! accuracy is preserved by re-growth.
 //!
+//! Uses the staged pipeline the way a sweep should: the graph is
+//! prepared ONCE (CSR + features + fingerprint), each partition count is
+//! one plan over it, and every plan executes as a single batched backend
+//! call. Then the algebraic check runs once with the best setting.
+//!
 //! Sweeps partition counts on a 64-bit CSA multiplier (≈40k graph nodes;
 //! override with --bits) and prints the memory/accuracy/runtime trade-off
-//! table, then runs the algebraic check once with the best setting.
+//! table.
 //!
 //! Run: `make artifacts && cargo run --release --example large_verify [-- --bits 128]`
 
-use groot::coordinator::{Session, SessionConfig};
+use groot::coordinator::{PlanOptions, PreparedGraph, Session, SessionConfig};
 use groot::datasets::{self, DatasetKind};
 use groot::memmodel::MemModel;
 use groot::util::cli::Args;
@@ -30,6 +35,11 @@ fn main() -> anyhow::Result<()> {
     let bundle = groot::util::tensor::read_bundle(Path::new("artifacts/weights_csa8.bin"))?;
     let model = groot::gnn::SageModel::from_bundle(&bundle)?;
     let mem = MemModel::default();
+    let session = Session::native(model, SessionConfig::default());
+
+    // Stage 1 once for the whole sweep; each row below only plans+executes.
+    let prepared = PreparedGraph::new(&graph);
+    println!("prepared once: fingerprint {:016x}", prepared.fingerprint());
 
     println!(
         "\n{:>6} {:>10} {:>12} {:>12} {:>10} {:>12}",
@@ -37,11 +47,9 @@ fn main() -> anyhow::Result<()> {
     );
     let mut best_pred: Option<Vec<u8>> = None;
     for parts in [1usize, 2, 4, 8, 16, 32, 64] {
-        let session = Session::native(
-            model.clone(),
-            SessionConfig { num_partitions: parts, regrow: true, ..Default::default() },
-        );
-        let res = session.classify(&graph)?;
+        let plan =
+            prepared.plan(&PlanOptions { partitions: parts, regrow: true, seed: 0 });
+        let res = session.classify_plan(&prepared, &plan, false)?;
         let peak = res.stats.max_partition_nodes.max(graph.num_nodes / parts.max(1));
         println!(
             "{:>6} {:>10.4} {:>12} {:>12.0} {:>10} {:>12.0}",

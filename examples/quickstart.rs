@@ -9,7 +9,7 @@
 //! Run: `make artifacts && cargo run --release --example quickstart`
 
 use groot::backend::{backend_by_name, InferenceBackend};
-use groot::coordinator::{Session, SessionConfig};
+use groot::coordinator::{PlanOptions, PreparedGraph, Session, SessionConfig};
 use groot::datasets::{self, DatasetKind};
 use std::path::Path;
 
@@ -49,18 +49,32 @@ fn main() -> anyhow::Result<()> {
         }
     };
 
-    // 3. Partition into 4, re-grow boundaries, classify.
-    let session = Session::new(
-        backend,
-        SessionConfig { num_partitions: 4, regrow: true, ..Default::default() },
-    );
-    let res = session.classify(&graph)?;
+    // 3. The staged pipeline, spelled out: prepare the graph once
+    // (symmetric CSR + dense features + content fingerprint), build a
+    // 4-partition re-grown plan from it, then execute the whole plan
+    // through one batched backend call. `Session::classify` is exactly
+    // this composition for callers that reuse nothing.
+    let session = Session::new(backend, SessionConfig::default());
+    let prepared = PreparedGraph::new(&graph);
     println!(
-        "\nclassification: accuracy {:.4} over {} nodes ({} partitions, {} boundary nodes re-grown)",
-        res.accuracy, graph.num_nodes, res.stats.num_partitions, res.stats.total_boundary_nodes
+        "\nprepared: fingerprint {:016x}; {} csr entries",
+        prepared.fingerprint(),
+        prepared.csr().num_entries()
+    );
+    let plan = prepared.plan(&PlanOptions { partitions: 4, regrow: true, seed: 0 });
+    println!(
+        "plan: {} partitions, {} boundary nodes re-grown, peak partition {} nodes",
+        plan.num_partitions(),
+        plan.stats.regrowth.total_boundary_nodes,
+        plan.stats.regrowth.max_partition_nodes
+    );
+    let res = session.classify_plan(&prepared, &plan, false)?;
+    println!(
+        "classification: accuracy {:.4} over {} nodes (one infer_batch of {} partitions)",
+        res.accuracy, graph.num_nodes, res.stats.batch_size
     );
     println!(
-        "timings: partition {:?}, regrowth {:?}, pack {:?}, inference {:?}",
+        "timings: partition {:?}, regrowth {:?}, gather {:?}, inference {:?}",
         res.stats.partition_time,
         res.stats.regrowth_time,
         res.stats.pack_time,

@@ -1,16 +1,18 @@
 //! Verification service — GROOT as a long-running server (the run-time
 //! verification deployment the paper motivates): a router thread owns the
-//! model, clients submit circuits concurrently, and each request's
-//! partition count adapts to the design size.
+//! model AND the partition-plan cache, clients submit circuits with
+//! per-request [`VerifyOptions`], and each request's partition count
+//! adapts to the design size.
 //!
-//! Submits a mixed batch of multipliers (csa/booth/wallace at several
-//! widths), overlapping the requests, and reports per-request latency +
-//! aggregate throughput.
+//! The workload deliberately repeats circuits: repeat requests hit the
+//! router's plan LRU (no partitioning/re-growth/gathering) and the
+//! per-request stats show it. All of a request's partitions go through
+//! one `infer_batch` call.
 //!
 //! Run: `make artifacts && cargo run --release --example serve`
 
 use groot::backend::NativeBackend;
-use groot::coordinator::server::Server;
+use groot::coordinator::server::{Server, VerifyOptions};
 use groot::coordinator::{Backend, SessionConfig};
 use groot::datasets::{self, DatasetKind};
 use std::path::Path;
@@ -25,14 +27,19 @@ fn main() -> anyhow::Result<()> {
     });
     let handle = server.handle();
 
+    // Mixed families and widths, with repeats: a verification service
+    // sees the same design again after every incremental synthesis step.
     let workload: Vec<(DatasetKind, usize)> = vec![
         (DatasetKind::Csa, 16),
         (DatasetKind::Booth, 16),
         (DatasetKind::Csa, 32),
+        (DatasetKind::Csa, 16),   // repeat → plan-cache hit
         (DatasetKind::Wallace, 16),
         (DatasetKind::Csa, 48),
+        (DatasetKind::Booth, 16), // repeat → plan-cache hit
         (DatasetKind::Booth, 32),
         (DatasetKind::Csa, 64),
+        (DatasetKind::Csa, 32),   // repeat → plan-cache hit
         (DatasetKind::Wallace, 32),
     ];
 
@@ -46,33 +53,40 @@ fn main() -> anyhow::Result<()> {
         // adaptive partitioning: ~4k nodes per partition
         let parts = (graph.num_nodes / 4096).max(1);
         let submitted = Instant::now();
-        let rx = handle.submit(graph, Some(parts))?;
+        let rx = handle.submit(graph, VerifyOptions::partitions(parts))?;
         pending.push((kind.name(), *bits, parts, submitted, rx));
     }
     println!(
-        "{:>10} {:>6} {:>6} {:>10} {:>12} {:>10}",
-        "dataset", "bits", "parts", "acc", "latency", "nodes"
+        "{:>10} {:>6} {:>6} {:>6} {:>10} {:>12} {:>10} {:>6}",
+        "dataset", "bits", "parts", "batch", "acc", "latency", "nodes", "plan"
     );
     let mut total_nodes = 0usize;
+    let mut cache_hits = 0usize;
     for (name, bits, parts, submitted, rx) in pending {
         let res = rx.recv()??;
         total_nodes += res.pred.len();
+        cache_hits += res.stats.plan_cache_hit as usize;
         println!(
-            "{:>10} {:>6} {:>6} {:>10.4} {:>12} {:>10}",
+            "{:>10} {:>6} {:>6} {:>6} {:>10.4} {:>12} {:>10} {:>6}",
             name,
             bits,
             parts,
+            res.stats.batch_size,
             res.accuracy,
             groot::util::timer::fmt_dur(submitted.elapsed()),
-            res.pred.len()
+            res.pred.len(),
+            if res.stats.plan_cache_hit { "warm" } else { "cold" }
         );
     }
     let wall = t_all.elapsed();
     println!(
-        "\nthroughput: {} requests / {} = {:.1} knodes/s classified",
+        "\nthroughput: {} requests / {} = {:.1} knodes/s classified; {} plan-cache hits",
         workload.len(),
         groot::util::timer::fmt_dur(wall),
-        total_nodes as f64 / wall.as_secs_f64() / 1e3
+        total_nodes as f64 / wall.as_secs_f64() / 1e3,
+        cache_hits
     );
+    // Explicit deterministic shutdown even though `handle` is still alive.
+    server.shutdown();
     Ok(())
 }

@@ -88,10 +88,13 @@ pub trait InferenceBackend {
     /// Run the GNN on one partition; returns per-node logits.
     fn infer(&self, part: PartitionInput<'_>) -> Result<PartitionLogits>;
 
-    /// Batch entry point: run several partitions through the backend in
-    /// issue order. The default simply streams them through [`Self::infer`]
-    /// (the paper's single-device model); backends with real batching can
-    /// override.
+    /// Batch entry point — the call the coordinator's execution stage
+    /// makes: ALL of a [`crate::coordinator::PartitionPlan`]'s partitions
+    /// arrive in one call, in plan order, and outputs must come back in
+    /// the same order. The default simply streams them through
+    /// [`Self::infer`] (the paper's single-device model); real backends
+    /// override to amortize — the native path holds its scratch arena
+    /// across the batch, the PJRT path groups partitions by shape bucket.
     fn infer_batch(&self, parts: &[PartitionInput<'_>]) -> Result<Vec<PartitionLogits>> {
         parts.iter().map(|p| self.infer(*p)).collect()
     }
@@ -180,9 +183,8 @@ mod tests {
         assert!(err.to_string().contains("--features xla"), "{err:#}");
     }
 
-    #[test]
-    fn default_infer_batch_streams_partitions() {
-        let model = SageModel {
+    fn identity_model() -> SageModel {
+        SageModel {
             layers: vec![SageLayer {
                 din: 2,
                 dout: 2,
@@ -190,8 +192,29 @@ mod tests {
                 w_neigh: vec![0.0; 4],
                 bias: vec![0.0, 0.0],
             }],
-        };
-        let backend = NativeBackend::with_threads(model, 1);
+        }
+    }
+
+    /// A backend that keeps the trait's default `infer_batch` (NativeBackend
+    /// overrides it), pinning the stream-through-`infer` fallback contract.
+    struct DefaultBatchBackend(NativeBackend);
+
+    impl InferenceBackend for DefaultBatchBackend {
+        fn name(&self) -> &'static str {
+            "default-batch"
+        }
+        fn num_classes(&self) -> usize {
+            self.0.num_classes()
+        }
+        fn infer(&self, part: PartitionInput<'_>) -> Result<PartitionLogits> {
+            self.0.infer(part)
+        }
+    }
+
+    #[test]
+    fn infer_batch_matches_streaming_and_preserves_order() {
+        let native = NativeBackend::with_threads(identity_model(), 1);
+        let fallback = DefaultBatchBackend(NativeBackend::with_threads(identity_model(), 1));
         let g1 = Csr::symmetric_from_edges(2, &[(0, 1)]);
         let g2 = Csr::symmetric_from_edges(3, &[(0, 1), (1, 2)]);
         let x1 = vec![1.0, 2.0, 3.0, 4.0];
@@ -200,11 +223,14 @@ mod tests {
             PartitionInput { csr: &g1, features: &x1, feature_dim: 2 },
             PartitionInput { csr: &g2, features: &x2, feature_dim: 2 },
         ];
-        let outs = backend.infer_batch(&parts).unwrap();
-        assert_eq!(outs.len(), 2);
-        assert_eq!(outs[0].logits.len(), 2 * 2);
-        assert_eq!(outs[1].logits.len(), 3 * 2);
-        // identity w_self, zero w_neigh/bias → logits == features
-        assert_eq!(outs[0].logits, x1);
+        for backend in [&native as &dyn InferenceBackend, &fallback] {
+            let outs = backend.infer_batch(&parts).unwrap();
+            assert_eq!(outs.len(), 2);
+            assert_eq!(outs[0].logits.len(), 2 * 2);
+            assert_eq!(outs[1].logits.len(), 3 * 2);
+            // identity w_self, zero w_neigh/bias → logits == features
+            assert_eq!(outs[0].logits, x1);
+            assert_eq!(outs[1].logits, x2);
+        }
     }
 }

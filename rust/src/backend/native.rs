@@ -67,6 +67,28 @@ impl InferenceBackend for NativeBackend {
                 .forward_with(part.csr, part.features, self.engine.as_ref(), &mut scratch);
         Ok(PartitionLogits { logits: logits.to_vec(), bucket_rows: n })
     }
+
+    /// Batch override: validate all partitions up front, then run the
+    /// whole plan under a single scratch acquisition — the arena stays
+    /// warm at the batch's widest partition instead of being re-locked
+    /// (and on first use re-grown) per partition.
+    fn infer_batch(&self, parts: &[PartitionInput<'_>]) -> Result<Vec<PartitionLogits>> {
+        for p in parts {
+            p.validate(self.model.input_dim())?;
+        }
+        let mut scratch = self.scratch.lock().unwrap();
+        let mut out = Vec::with_capacity(parts.len());
+        for p in parts {
+            let logits =
+                self.model
+                    .forward_with(p.csr, p.features, self.engine.as_ref(), &mut scratch);
+            out.push(PartitionLogits {
+                logits: logits.to_vec(),
+                bucket_rows: p.csr.num_nodes(),
+            });
+        }
+        Ok(out)
+    }
 }
 
 #[cfg(test)]

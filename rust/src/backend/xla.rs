@@ -38,21 +38,25 @@ impl XlaBackend {
     }
 }
 
-impl InferenceBackend for XlaBackend {
-    fn name(&self) -> &'static str {
-        "xla"
-    }
-
-    fn num_classes(&self) -> usize {
-        self.rt.manifest.num_classes
-    }
-
-    fn infer(&self, part: PartitionInput<'_>) -> Result<PartitionLogits> {
-        let n = part.csr.num_nodes();
+impl XlaBackend {
+    /// Validate and pick the smallest compiled bucket that fits (rows and
+    /// HD slots) — the per-partition setup shared by `infer` and
+    /// `infer_batch`.
+    fn resolve_bucket(&self, part: &PartitionInput<'_>) -> Result<usize> {
         part.validate(self.rt.manifest.feature_dim)?;
         let (k_ld, k_hd) = (self.rt.manifest.k_ld, self.rt.manifest.k_hd);
         let h_needed = hd_slots_needed(part.csr, k_ld, k_hd);
-        let bucket = self.rt.bucket_for(n, h_needed)?;
+        self.rt.bucket_for(part.csr.num_nodes(), h_needed)
+    }
+
+    /// Pack into the already-resolved bucket, execute, slice padding off.
+    fn infer_in_bucket(
+        &self,
+        part: PartitionInput<'_>,
+        bucket: usize,
+    ) -> Result<PartitionLogits> {
+        let n = part.csr.num_nodes();
+        let (k_ld, k_hd) = (self.rt.manifest.k_ld, self.rt.manifest.k_hd);
         let spec = self.rt.bucket_spec(bucket);
         let packed = pack_partition(
             part.csr,
@@ -73,5 +77,39 @@ impl InferenceBackend for XlaBackend {
             n * classes
         );
         Ok(PartitionLogits { logits: logits[..n * classes].to_vec(), bucket_rows })
+    }
+}
+
+impl InferenceBackend for XlaBackend {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn num_classes(&self) -> usize {
+        self.rt.manifest.num_classes
+    }
+
+    fn infer(&self, part: PartitionInput<'_>) -> Result<PartitionLogits> {
+        let bucket = self.resolve_bucket(&part)?;
+        self.infer_in_bucket(part, bucket)
+    }
+
+    /// Batch override: execute partitions grouped by their target shape
+    /// bucket (stable within a bucket), so each compiled executable runs
+    /// its padding-shaped work consecutively instead of ping-ponging
+    /// between executables per partition. Buckets are resolved once here
+    /// and reused for execution. Results are returned in the caller's
+    /// submission order.
+    fn infer_batch(&self, parts: &[PartitionInput<'_>]) -> Result<Vec<PartitionLogits>> {
+        let mut order: Vec<(usize, usize)> = Vec::with_capacity(parts.len());
+        for (i, p) in parts.iter().enumerate() {
+            order.push((self.resolve_bucket(p)?, i));
+        }
+        order.sort_unstable();
+        let mut out: Vec<Option<PartitionLogits>> = (0..parts.len()).map(|_| None).collect();
+        for (bucket, i) in order {
+            out[i] = Some(self.infer_in_bucket(parts[i], bucket)?);
+        }
+        Ok(out.into_iter().map(|o| o.expect("every index visited")).collect())
     }
 }

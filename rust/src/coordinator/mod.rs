@@ -1,29 +1,35 @@
-//! L3 coordinator — the GROOT verification pipeline (Fig. 2).
+//! L3 coordinator — the GROOT verification pipeline (Fig. 2), staged.
 //!
 //! ```text
-//! circuit ──► EDA graph ──► partition (METIS-substitute) ──► re-growth
-//!     (Alg. 1) ──► per-partition GNN inference through a pluggable
-//!     InferenceBackend (native rust or PJRT executables) ──► stitch core
-//!     predictions ──► algebraic verification (crate::verify)
+//! circuit ──► EDA graph ──► PreparedGraph (CSR + features + fingerprint)
+//!     ──► PartitionPlan (partition → Alg.-1 re-growth → gathered buffers,
+//!         LRU-cacheable by (fingerprint, PlanOptions))
+//!     ──► execute_plan: ONE InferenceBackend::infer_batch call over all
+//!         partitions, core predictions stitched back
+//!     ──► algebraic verification (crate::verify)
 //! ```
 //!
-//! The coordinator never sees a device: each re-grown partition's local
-//! CSR + features go through [`crate::backend::InferenceBackend::infer`],
-//! which packs/pads however its executor needs. Execution stays on the
-//! session thread (the `xla` crate's client is `Rc`-based and not
-//! `Send`), matching the paper's single-GPU model: one device,
-//! partitions streamed through it.
+//! The stage objects live in [`pipeline`]; [`Session::classify`] is the
+//! thin eager composition kept for callers that don't reuse anything.
+//! The coordinator never sees a device: partitions go through
+//! [`crate::backend::InferenceBackend::infer_batch`], which packs/pads
+//! however its executor needs. Execution stays on the session thread
+//! (the `xla` crate's client is `Rc`-based and not `Send`), matching the
+//! paper's single-GPU model: one device, partitions streamed through it.
 
+pub mod pipeline;
 pub mod server;
 
-use crate::backend::{InferenceBackend, NativeBackend, PartitionInput};
+pub use pipeline::{
+    execute_plan, ExecStats, PartitionPlan, PlanCache, PlannedPartition, PlanOptions,
+    PlanStats, PreparedGraph, DEFAULT_PLAN_CACHE_CAPACITY,
+};
+
+use crate::backend::{InferenceBackend, NativeBackend};
 use crate::features::EdaGraph;
 use crate::gnn::SageModel;
-use crate::graph::Csr;
-use crate::partition::{partition_kway, Partitioning};
-use crate::regrowth::{regrow_partitions, RegrownPartition};
 use anyhow::{Context, Result};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 /// Session configuration (the CLI mirrors these).
 #[derive(Clone, Debug)]
@@ -54,13 +60,15 @@ impl Default for SessionConfig {
 /// [`crate::backend::backend_by_name`] for name-based construction.
 pub type Backend = Box<dyn InferenceBackend>;
 
-/// Per-run observability the harnesses print.
+/// Per-run observability the harnesses print. Plan-stage times are zero
+/// when the run executed a cached plan (`plan_cache_hit`).
 #[derive(Clone, Debug, Default)]
 pub struct RunStats {
     pub num_partitions: usize,
     pub regrown: bool,
     pub partition_time: Duration,
     pub regrowth_time: Duration,
+    /// Plan-time local-CSR build + feature gather (was per-request "pack").
     pub pack_time: Duration,
     pub infer_time: Duration,
     pub total_nodes: usize,
@@ -70,6 +78,11 @@ pub struct RunStats {
     /// Peak bucket footprint actually used (elements, see memmodel for
     /// byte conversion).
     pub peak_bucket_n: usize,
+    /// This run reused a cached [`PartitionPlan`] — no partitioning,
+    /// re-growth, or gathering happened.
+    pub plan_cache_hit: bool,
+    /// Partitions submitted in the single `infer_batch` call.
+    pub batch_size: usize,
 }
 
 /// Classification output: one predicted class per graph node + stats.
@@ -100,98 +113,98 @@ impl Session {
     }
 
     /// Run the full classification pipeline on one EDA graph.
+    ///
+    /// Thin wrapper: prepare → plan → [`classify_plan`](Self::classify_plan).
+    /// Callers that verify the same circuit repeatedly should hold a
+    /// [`PreparedGraph`] and a [`PlanCache`] instead (or go through the
+    /// serving router, which does).
     pub fn classify(&self, graph: &EdaGraph) -> Result<ClassifyResult> {
         self.classify_with(graph, &self.config)
     }
 
-    /// Same, with a per-request config override (used by the server's
-    /// router so one backend serves differently-partitioned requests).
+    /// Same, with a per-request config override.
     pub fn classify_with(&self, graph: &EdaGraph, cfg: &SessionConfig) -> Result<ClassifyResult> {
-        let csr = Csr::symmetric_from_edges(graph.num_nodes, &graph.edges);
+        let prepared = PreparedGraph::new(graph);
+        let plan = prepared.plan(&PlanOptions::from_config(cfg));
+        // This eager path stamps and re-checks a fingerprint it just
+        // computed — a deliberate redundancy: the word-wise hash is
+        // trivial next to partitioning, and one code path serving both
+        // eager and cached callers beats a second unchecked variant.
+        self.classify_plan(&prepared, &plan, false)
+    }
 
-        let t0 = Instant::now();
-        let partitioning = if cfg.num_partitions <= 1 {
-            Partitioning { k: 1, assignment: vec![0; graph.num_nodes] }
-        } else {
-            partition_kway(&csr, cfg.num_partitions, cfg.seed)
-        };
-        let partition_time = t0.elapsed();
-
-        let t1 = Instant::now();
-        let parts = regrow_partitions(&csr, &partitioning, cfg.regrow);
-        let regrowth_time = t1.elapsed();
-        let rstats = crate::regrowth::stats(&parts);
-
-        let mut pred = vec![0u8; graph.num_nodes];
-        let mut stats = RunStats {
-            num_partitions: parts.len(),
-            regrown: cfg.regrow,
-            partition_time,
-            regrowth_time,
+    /// Execute a pre-built plan: the batched stage-3 call plus label
+    /// lookup. The plan's fingerprint must match the prepared graph's —
+    /// a stale plan (same-size but different or since-mutated graph) is
+    /// rejected instead of silently classifying from stale buffers.
+    /// `cache_hit` marks the plan as reused so the stats report zero
+    /// plan-stage time (the work was paid by an earlier request).
+    pub fn classify_plan(
+        &self,
+        prepared: &PreparedGraph<'_>,
+        plan: &PartitionPlan,
+        cache_hit: bool,
+    ) -> Result<ClassifyResult> {
+        anyhow::ensure!(
+            plan.fingerprint == prepared.fingerprint(),
+            "plan fingerprint {:016x} does not match the graph's {:016x} \
+             (plan is stale or was built from a different graph)",
+            plan.fingerprint,
+            prepared.fingerprint()
+        );
+        // Belt-and-suspenders alongside the (non-cryptographic) 64-bit
+        // fingerprint: a colliding graph of a different size must error
+        // here rather than panic downstream in the accuracy check.
+        anyhow::ensure!(
+            plan.num_nodes == prepared.num_nodes(),
+            "plan was built for {} nodes but the graph has {}",
+            plan.num_nodes,
+            prepared.num_nodes()
+        );
+        let graph = prepared.graph;
+        let (pred, exec) = execute_plan(self.backend.as_ref(), plan)?;
+        let stats = RunStats {
+            num_partitions: plan.num_partitions(),
+            regrown: plan.options.regrow,
+            partition_time: if cache_hit { Duration::ZERO } else { plan.stats.partition_time },
+            regrowth_time: if cache_hit { Duration::ZERO } else { plan.stats.regrowth_time },
+            pack_time: if cache_hit { Duration::ZERO } else { plan.stats.gather_time },
+            infer_time: exec.infer_time,
             total_nodes: graph.num_nodes,
-            total_boundary_nodes: rstats.total_boundary_nodes,
-            total_crossing_edges: rstats.total_crossing_edges,
-            max_partition_nodes: rstats.max_partition_nodes,
-            ..Default::default()
+            total_boundary_nodes: plan.stats.regrowth.total_boundary_nodes,
+            total_crossing_edges: plan.stats.regrowth.total_crossing_edges,
+            max_partition_nodes: plan.stats.regrowth.max_partition_nodes,
+            peak_bucket_n: exec.peak_bucket_n,
+            plan_cache_hit: cache_hit,
+            batch_size: exec.batch_size,
         };
-
-        for part in &parts {
-            self.classify_partition(graph, part, &mut pred, &mut stats)?;
-        }
-
         let labels = graph.labels_u8();
         let accuracy = crate::gnn::accuracy(&pred, &labels);
         Ok(ClassifyResult { pred, accuracy, stats })
     }
-
-    fn classify_partition(
-        &self,
-        graph: &EdaGraph,
-        part: &RegrownPartition,
-        pred: &mut [u8],
-        stats: &mut RunStats,
-    ) -> Result<()> {
-        if part.nodes.is_empty() {
-            return Ok(());
-        }
-        let local_csr = part.csr();
-        // Gather local features (backend-specific packing — bucket
-        // padding, ELL layout — happens inside the backend and counts as
-        // inference time).
-        let fdim = crate::features::GROOT_FEATURE_DIM;
-        let t_pack = Instant::now();
-        let mut feats = Vec::with_capacity(part.nodes.len() * fdim);
-        for &g in &part.nodes {
-            feats.extend_from_slice(&graph.features[g as usize]);
-        }
-        stats.pack_time += t_pack.elapsed();
-
-        let t_inf = Instant::now();
-        let out = self.backend.infer(PartitionInput {
-            csr: &local_csr,
-            features: &feats,
-            feature_dim: fdim,
-        })?;
-        stats.infer_time += t_inf.elapsed();
-        stats.peak_bucket_n = stats.peak_bucket_n.max(out.bucket_rows);
-
-        let classes = self.backend.num_classes();
-        for (i, &g) in part.nodes[..part.num_core].iter().enumerate() {
-            let row = &out.logits[i * classes..(i + 1) * classes];
-            pred[g as usize] = argmax(row);
-        }
-        Ok(())
-    }
 }
 
-fn argmax(row: &[f32]) -> u8 {
-    let mut best = 0usize;
+/// Row argmax with deterministic tie- and NaN-handling: returns the
+/// LOWEST index holding the maximum value; NaN entries are never
+/// selected (a row of all NaNs returns 0). This makes stitched
+/// predictions reproducible across backends even when a numerically
+/// degenerate model emits NaN logits.
+pub fn argmax(row: &[f32]) -> u8 {
+    let mut best: Option<usize> = None;
     for (i, &v) in row.iter().enumerate() {
-        if v > row[best] {
-            best = i;
+        if v.is_nan() {
+            continue;
+        }
+        match best {
+            None => best = Some(i),
+            Some(b) => {
+                if v > row[b] {
+                    best = Some(i);
+                }
+            }
         }
     }
-    best as u8
+    best.unwrap_or(0) as u8
 }
 
 /// Load the weight bundle from the default artifacts location.
@@ -251,6 +264,8 @@ mod tests {
         assert!(res.accuracy >= easy as f64 / labels.len() as f64 * 0.99);
         assert_eq!(res.stats.num_partitions, 4);
         assert!(res.stats.total_crossing_edges > 0);
+        assert_eq!(res.stats.batch_size, 4);
+        assert!(!res.stats.plan_cache_hit);
     }
 
     #[test]
@@ -268,5 +283,64 @@ mod tests {
         let full = mk(1).classify(&eg).unwrap();
         let parted = mk(6).classify(&eg).unwrap();
         assert_eq!(full.pred, parted.pred);
+    }
+
+    #[test]
+    fn staged_composition_matches_eager_classify() {
+        let g = csa_multiplier(5);
+        let eg = crate::features::EdaGraph::from_aig(&g);
+        let cfg = SessionConfig { num_partitions: 3, regrow: true, ..Default::default() };
+        let session = Session::native(type_bit_model(), cfg.clone());
+        let eager = session.classify(&eg).unwrap();
+
+        let prepared = PreparedGraph::new(&eg);
+        let plan = prepared.plan(&PlanOptions::from_config(&cfg));
+        let staged = session.classify_plan(&prepared, &plan, false).unwrap();
+        assert_eq!(eager.pred, staged.pred);
+        assert_eq!(eager.accuracy, staged.accuracy);
+    }
+
+    #[test]
+    fn classify_plan_rejects_mismatched_graph() {
+        let eg5 = crate::features::EdaGraph::from_aig(&csa_multiplier(5));
+        let session = Session::native(type_bit_model(), SessionConfig::default());
+        let plan = PreparedGraph::new(&eg5).plan(&PlanOptions::default());
+
+        // different circuit entirely
+        let eg6 = crate::features::EdaGraph::from_aig(&csa_multiplier(6));
+        assert!(session.classify_plan(&PreparedGraph::new(&eg6), &plan, false).is_err());
+
+        // same-size graph whose content was mutated after planning
+        let mut altered = eg5.clone();
+        altered.features[0][0] += 1.0;
+        let err = session
+            .classify_plan(&PreparedGraph::new(&altered), &plan, false)
+            .unwrap_err();
+        assert!(err.to_string().contains("fingerprint"), "{err:#}");
+    }
+
+    #[test]
+    fn argmax_picks_lowest_index_on_ties() {
+        assert_eq!(argmax(&[2.0, 2.0, 1.0]), 0);
+        assert_eq!(argmax(&[1.0, 3.0, 3.0]), 1);
+        assert_eq!(argmax(&[0.0]), 0);
+    }
+
+    #[test]
+    fn argmax_never_selects_nan() {
+        // A leading NaN used to win by default (every comparison against
+        // NaN is false); it must lose to any real value.
+        assert_eq!(argmax(&[f32::NAN, 1.0, 0.5]), 1);
+        assert_eq!(argmax(&[0.5, f32::NAN, 1.0]), 2);
+        assert_eq!(argmax(&[-1.0, f32::NAN]), 0);
+        // Degenerate all-NaN row: deterministic fallback to 0.
+        assert_eq!(argmax(&[f32::NAN, f32::NAN]), 0);
+        assert_eq!(argmax(&[]), 0);
+    }
+
+    #[test]
+    fn argmax_handles_negative_infinities() {
+        assert_eq!(argmax(&[f32::NEG_INFINITY, -3.0]), 1);
+        assert_eq!(argmax(&[f32::INFINITY, 1.0, f32::NAN]), 0);
     }
 }

@@ -1,28 +1,75 @@
-//! Verification service — request router + dynamic batcher.
+//! Verification service — the staged pipeline behind a request channel.
 //!
 //! The paper frames GROOT as a run-time verification system; this module
-//! provides the serving shape: callers submit circuits, a router thread
-//! owns the (non-`Send`) session and drains the queue, grouping partition
-//! work so padding waste is amortized, and answers on per-request
-//! channels. Used by `examples/serve.rs`.
+//! provides the serving shape: callers submit circuits with per-request
+//! [`VerifyOptions`], a router thread owns the (non-`Send`) backend *and
+//! the plan cache*, and answers on per-request channels. For every
+//! request the router prepares the graph, looks its
+//! [`PartitionPlan`](super::PartitionPlan) up in an LRU keyed by
+//! `(content fingerprint, PlanOptions)` — so repeat verifications of the
+//! same circuit skip partitioning/re-growth/gathering entirely — and
+//! submits all partitions through one `infer_batch` call.
+//! [`RunStats::plan_cache_hit`](super::RunStats) and
+//! [`RunStats::batch_size`](super::RunStats) expose both effects per
+//! response.
+//!
+//! Shutdown is an explicit sentinel message: dropping (or
+//! [`Server::shutdown`]-ing) the server wakes the router even while
+//! user-cloned [`ServerHandle`]s keep the request channel open, so
+//! `join()` terminates deterministically. Used by `examples/serve.rs`.
 
-use super::{Backend, ClassifyResult, Session, SessionConfig};
+use super::{Backend, ClassifyResult, PlanCache, PlanOptions, PreparedGraph, Session, SessionConfig};
 use crate::features::EdaGraph;
 use anyhow::Result;
 use std::sync::mpsc;
 use std::thread::JoinHandle;
 
-/// A verification request: graph + per-request partitioning override.
+/// Per-request plan options; `None` fields inherit the server's base
+/// [`SessionConfig`].
+#[derive(Clone, Debug, Default)]
+pub struct VerifyOptions {
+    pub partitions: Option<usize>,
+    pub regrow: Option<bool>,
+    pub seed: Option<u64>,
+}
+
+impl VerifyOptions {
+    /// Shorthand for the common "just override the partition count" case.
+    pub fn partitions(n: usize) -> VerifyOptions {
+        VerifyOptions { partitions: Some(n), ..Default::default() }
+    }
+
+    /// Resolve against the server's base config into a full plan key.
+    pub fn resolve(&self, base: &SessionConfig) -> PlanOptions {
+        PlanOptions {
+            partitions: self.partitions.unwrap_or(base.num_partitions),
+            regrow: self.regrow.unwrap_or(base.regrow),
+            seed: self.seed.unwrap_or(base.seed),
+        }
+    }
+}
+
+/// A verification request: graph + per-request plan options.
 pub struct Request {
     pub graph: EdaGraph,
-    pub num_partitions: Option<usize>,
+    pub options: VerifyOptions,
     pub reply: mpsc::Sender<Result<ClassifyResult>>,
 }
 
-/// Handle for submitting requests to a running server.
+/// Router mailbox: work, or the explicit shutdown sentinel the owning
+/// [`Server`] sends on drop (closing the channel alone is not enough —
+/// cloned handles keep it open).
+enum Msg {
+    Verify(Box<Request>),
+    Shutdown,
+}
+
+/// Handle for submitting requests to a running server. Cloneable and
+/// `Send`; outliving the `Server` is safe (submissions then fail with
+/// "server stopped").
 #[derive(Clone)]
 pub struct ServerHandle {
-    tx: mpsc::Sender<Request>,
+    tx: mpsc::Sender<Msg>,
 }
 
 impl ServerHandle {
@@ -30,12 +77,9 @@ impl ServerHandle {
     pub fn verify_blocking(
         &self,
         graph: EdaGraph,
-        num_partitions: Option<usize>,
+        options: VerifyOptions,
     ) -> Result<ClassifyResult> {
-        let (reply, rx) = mpsc::channel();
-        self.tx
-            .send(Request { graph, num_partitions, reply })
-            .map_err(|_| anyhow::anyhow!("server stopped"))?;
+        let rx = self.submit(graph, options)?;
         rx.recv().map_err(|_| anyhow::anyhow!("server dropped reply"))?
     }
 
@@ -43,53 +87,85 @@ impl ServerHandle {
     pub fn submit(
         &self,
         graph: EdaGraph,
-        num_partitions: Option<usize>,
+        options: VerifyOptions,
     ) -> Result<mpsc::Receiver<Result<ClassifyResult>>> {
         let (reply, rx) = mpsc::channel();
         self.tx
-            .send(Request { graph, num_partitions, reply })
+            .send(Msg::Verify(Box::new(Request { graph, options, reply })))
             .map_err(|_| anyhow::anyhow!("server stopped"))?;
         Ok(rx)
     }
 }
 
-/// The running server; joins its router thread on drop.
+/// The running server; shuts its router down (sentinel + join) on drop.
 pub struct Server {
     handle: ServerHandle,
     join: Option<JoinHandle<()>>,
 }
 
 impl Server {
-    /// Spawn the router thread. `make_backend` runs *on* the router thread
-    /// because backends need not be `Send` (PJRT clients are `Rc`-based);
-    /// only the constructor closure crosses threads.
+    /// Spawn the router thread with the default plan-cache capacity.
+    /// `make_backend` runs *on* the router thread because backends need
+    /// not be `Send` (PJRT clients are `Rc`-based); only the constructor
+    /// closure crosses threads.
     pub fn spawn<F>(config: SessionConfig, make_backend: F) -> Server
     where
         F: FnOnce() -> Result<Backend> + Send + 'static,
     {
-        let (tx, rx) = mpsc::channel::<Request>();
+        Self::spawn_with_cache(config, super::DEFAULT_PLAN_CACHE_CAPACITY, make_backend)
+    }
+
+    /// Spawn with an explicit plan-cache capacity (0 is clamped to 1).
+    ///
+    /// Capacity is an entry count, not a byte budget: each cached plan
+    /// holds its circuit's partition node lists, local CSRs, and
+    /// gathered f32 feature buffers — roughly one graph's worth of data
+    /// per entry. Deployments serving many distinct large circuits
+    /// should size this against `capacity × largest-graph footprint`.
+    pub fn spawn_with_cache<F>(
+        config: SessionConfig,
+        plan_cache_capacity: usize,
+        make_backend: F,
+    ) -> Server
+    where
+        F: FnOnce() -> Result<Backend> + Send + 'static,
+    {
+        let (tx, rx) = mpsc::channel::<Msg>();
         let join = std::thread::Builder::new()
             .name("groot-router".into())
             .spawn(move || {
                 let backend = match make_backend() {
                     Ok(b) => b,
                     Err(e) => {
-                        // Drain requests with the construction error.
-                        for req in rx.iter() {
-                            let _ = req
-                                .reply
-                                .send(Err(anyhow::anyhow!("backend init failed: {e:#}")));
+                        // Answer requests with the construction error
+                        // until shutdown.
+                        for msg in rx.iter() {
+                            match msg {
+                                Msg::Verify(req) => {
+                                    let _ = req.reply.send(Err(anyhow::anyhow!(
+                                        "backend init failed: {e:#}"
+                                    )));
+                                }
+                                Msg::Shutdown => return,
+                            }
                         }
                         return;
                     }
                 };
-                let base = Session::new(backend, config);
-                for req in rx.iter() {
-                    let mut cfg = base.config.clone();
-                    if let Some(p) = req.num_partitions {
-                        cfg.num_partitions = p;
-                    }
-                    let out = base.classify_with(&req.graph, &cfg);
+                let session = Session::new(backend, config);
+                let mut plans = PlanCache::new(plan_cache_capacity);
+                for msg in rx.iter() {
+                    let req = match msg {
+                        Msg::Verify(req) => req,
+                        Msg::Shutdown => break,
+                    };
+                    let opts = req.options.resolve(&session.config);
+                    // Preparation is cheap (content hash); the CSR and
+                    // feature matrix only materialize on a cache miss,
+                    // inside plan().
+                    let prepared = PreparedGraph::new(&req.graph);
+                    let (plan, hit) = plans.get_or_build(&prepared, &opts);
+                    let out = session.classify_plan(&prepared, &plan, hit);
                     let _ = req.reply.send(out);
                 }
             })
@@ -100,16 +176,28 @@ impl Server {
     pub fn handle(&self) -> ServerHandle {
         self.handle.clone()
     }
+
+    /// Explicit deterministic shutdown: in-flight requests already queued
+    /// ahead of the sentinel are answered; later submissions fail.
+    /// (Dropping the server does the same.)
+    pub fn shutdown(mut self) {
+        self.shutdown_inner();
+    }
+
+    fn shutdown_inner(&mut self) {
+        // The sentinel — NOT channel closure — stops the router: cloned
+        // user handles may keep the channel alive indefinitely, which
+        // used to deadlock this join.
+        let _ = self.handle.tx.send(Msg::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
 }
 
 impl Drop for Server {
     fn drop(&mut self) {
-        // Closing the channel stops the router loop.
-        let (dead_tx, _) = mpsc::channel();
-        self.handle = ServerHandle { tx: dead_tx };
-        if let Some(j) = self.join.take() {
-            let _ = j.join();
-        }
+        self.shutdown_inner();
     }
 }
 
@@ -118,6 +206,7 @@ mod tests {
     use super::*;
     use crate::backend::NativeBackend;
     use crate::gnn::{SageLayer, SageModel};
+    use std::time::Duration;
 
     fn dummy_model() -> SageModel {
         SageModel {
@@ -142,8 +231,8 @@ mod tests {
         let g = crate::aig::mult::csa_multiplier(4);
         let eg = crate::features::EdaGraph::from_aig(&g);
         // overlapping async submissions
-        let rx1 = h.submit(eg.clone(), Some(2)).unwrap();
-        let rx2 = h.submit(eg.clone(), Some(4)).unwrap();
+        let rx1 = h.submit(eg.clone(), VerifyOptions::partitions(2)).unwrap();
+        let rx2 = h.submit(eg.clone(), VerifyOptions::partitions(4)).unwrap();
         let r1 = rx1.recv().unwrap().unwrap();
         let r2 = rx2.recv().unwrap().unwrap();
         assert_eq!(r1.pred.len(), eg.num_nodes);
@@ -157,8 +246,54 @@ mod tests {
         let g = crate::aig::mult::csa_multiplier(3);
         let eg = crate::features::EdaGraph::from_aig(&g);
         for k in 1..=6 {
-            let r = h.verify_blocking(eg.clone(), Some(k)).unwrap();
+            let r = h.verify_blocking(eg.clone(), VerifyOptions::partitions(k)).unwrap();
             assert_eq!(r.stats.num_partitions, k.min(eg.num_nodes));
         }
+    }
+
+    #[test]
+    fn repeat_requests_hit_the_plan_cache() {
+        let server = Server::spawn(SessionConfig::default(), dummy_backend);
+        let h = server.handle();
+        let eg = crate::features::EdaGraph::from_aig(&crate::aig::mult::csa_multiplier(4));
+        let cold = h.verify_blocking(eg.clone(), VerifyOptions::partitions(3)).unwrap();
+        assert!(!cold.stats.plan_cache_hit);
+        let warm = h.verify_blocking(eg.clone(), VerifyOptions::partitions(3)).unwrap();
+        assert!(warm.stats.plan_cache_hit, "same circuit+options must reuse the plan");
+        assert_eq!(warm.stats.partition_time, Duration::ZERO);
+        assert_eq!(warm.stats.regrowth_time, Duration::ZERO);
+        assert_eq!(warm.pred, cold.pred);
+        // different options on the same circuit: a different plan
+        let other = h.verify_blocking(eg, VerifyOptions::partitions(2)).unwrap();
+        assert!(!other.stats.plan_cache_hit);
+    }
+
+    #[test]
+    fn dropping_server_with_live_handle_clone_terminates() {
+        // Regression: `Server::drop` used to wait for the request channel
+        // to close, which never happens while a cloned handle is alive.
+        let server = Server::spawn(SessionConfig::default(), dummy_backend);
+        let clone = server.handle();
+        let (done_tx, done_rx) = mpsc::channel();
+        std::thread::spawn(move || {
+            drop(server);
+            let _ = done_tx.send(());
+        });
+        done_rx
+            .recv_timeout(Duration::from_secs(30))
+            .expect("Server::drop hung with a live ServerHandle clone");
+        // The surviving handle reports a stopped server instead of
+        // queueing into the void.
+        let eg = crate::features::EdaGraph::from_aig(&crate::aig::mult::csa_multiplier(3));
+        assert!(clone.submit(eg, VerifyOptions::default()).is_err());
+    }
+
+    #[test]
+    fn explicit_shutdown_then_submit_errors() {
+        let server = Server::spawn(SessionConfig::default(), dummy_backend);
+        let h = server.handle();
+        server.shutdown();
+        let eg = crate::features::EdaGraph::from_aig(&crate::aig::mult::csa_multiplier(3));
+        assert!(h.verify_blocking(eg, VerifyOptions::default()).is_err());
     }
 }

@@ -3,7 +3,7 @@
 //! (partitioner choice, GROOT vs GAMORA features) DESIGN.md calls out.
 
 use super::{native_model, Table};
-use crate::coordinator::{Session, SessionConfig};
+use crate::coordinator::{PlanOptions, PreparedGraph, Session, SessionConfig};
 use crate::datasets::{self, DatasetKind};
 use anyhow::Result;
 
@@ -53,16 +53,18 @@ pub fn fig6(weights: &str, kind: DatasetKind, batch: usize, quick: bool) -> Resu
         ),
         &["bits", "partitions", "acc (cut only)", "acc (re-grown)", "recovery"],
     );
+    // One backend for the whole figure; one PreparedGraph (CSR + features
+    // + fingerprint) per width — each sweep cell only plans + executes.
+    let session = Session::native(model, SessionConfig::default());
     for bits in widths_for(kind, quick) {
         let graph = datasets::build(kind, bits)?.replicate(batch);
+        let prepared = PreparedGraph::new(&graph);
         for parts in partition_counts(quick) {
             let mut acc = [0.0f64; 2];
             for (i, regrow) in [false, true].into_iter().enumerate() {
-                let session = Session::native(
-                    model.clone(),
-                    SessionConfig { num_partitions: parts, regrow, ..Default::default() },
-                );
-                acc[i] = session.classify(&graph)?.accuracy;
+                let plan =
+                    prepared.plan(&PlanOptions { partitions: parts, regrow, seed: 0 });
+                acc[i] = session.classify_plan(&prepared, &plan, false)?.accuracy;
             }
             t.row(vec![
                 bits.to_string(),
@@ -89,20 +91,20 @@ pub fn fig7(weights_8: &str, weights_fpga64: &str, quick: bool) -> Result<()> {
         &["bits", "partitions", "acc (8b-trained)", "acc (fpga64-trained)", "boost"],
     );
     let parts_list = if quick { vec![1, 8] } else { vec![1, 2, 4, 8, 16] };
+    // Two sessions (one per training run) share every plan: the partition
+    // structure depends only on the graph, not on the weights.
+    let s8 = Session::native(m8, SessionConfig::default());
+    let s64 = m64.map(|m| Session::native(m, SessionConfig::default()));
     for bits in widths_for(DatasetKind::Fpga4Lut, quick) {
         let graph = datasets::build(DatasetKind::Fpga4Lut, bits)?;
+        let prepared = PreparedGraph::new(&graph);
         for &parts in &parts_list {
-            let run = |model: &crate::gnn::SageModel| -> Result<f64> {
-                let session = Session::native(
-                    model.clone(),
-                    SessionConfig { num_partitions: parts, ..Default::default() },
-                );
-                Ok(session.classify(&graph)?.accuracy)
-            };
-            let a8 = run(&m8)?;
-            let (a64s, boost) = match &m64 {
-                Some(m) => {
-                    let a = run(m)?;
+            let plan =
+                prepared.plan(&PlanOptions { partitions: parts, ..Default::default() });
+            let a8 = s8.classify_plan(&prepared, &plan, false)?.accuracy;
+            let (a64s, boost) = match &s64 {
+                Some(s) => {
+                    let a = s.classify_plan(&prepared, &plan, false)?.accuracy;
                     (format!("{a:.4}"), format!("{:+.2}%", 100.0 * (a - a8)))
                 }
                 None => ("(weights_fpga64.bin missing)".into(), "-".into()),

@@ -1,0 +1,177 @@
+//! Pipeline throughput bench — `groot harness bench`.
+//!
+//! Measures end-to-end classify throughput of the staged pipeline on CSA
+//! multipliers, cold (prepare + plan + execute every request, what the
+//! monolithic API always paid) vs plan-cache-warm (execute only, what a
+//! repeat server request pays), and writes the rows to
+//! `BENCH_pipeline.json` so successive PRs can track the trajectory.
+//!
+//! Works with or without trained artifacts: if the weights bundle is
+//! missing, a fixed synthetic two-layer model is used — the bench times
+//! the pipeline, not the accuracy.
+
+use super::Table;
+use crate::coordinator::{PlanCache, PlanOptions, PreparedGraph, Session, SessionConfig};
+use crate::datasets::{self, DatasetKind};
+use crate::gnn::{SageLayer, SageModel};
+use crate::util::timer::{bench_for, fmt_dur};
+use anyhow::{Context, Result};
+use std::time::Duration;
+
+/// One measured row, serialized into BENCH_pipeline.json.
+struct BenchRow {
+    dataset: String,
+    nodes: usize,
+    partitions: usize,
+    cold_median_s: f64,
+    warm_median_s: f64,
+    speedup: f64,
+    warm_knodes_per_s: f64,
+}
+
+pub fn bench_pipeline(weights: &str, quick: bool, out_path: &str) -> Result<()> {
+    let model = super::native_model(weights).unwrap_or_else(|_| synthetic_model());
+    let session = Session::native(model, SessionConfig::default());
+    let budget = Duration::from_millis(if quick { 200 } else { 1000 });
+
+    let cases: Vec<(usize, usize)> = if quick {
+        vec![(16, 8)]
+    } else {
+        vec![(16, 8), (32, 8), (32, 32)]
+    };
+
+    let mut t = Table::new(
+        "Pipeline classify throughput — cold (prepare+plan+execute) vs plan-cache-warm",
+        &["dataset", "nodes", "parts", "cold median", "warm median", "speedup", "warm knodes/s"],
+    );
+    let mut rows = Vec::new();
+    for (bits, parts) in cases {
+        let graph = datasets::build(DatasetKind::Csa, bits)?;
+        let opts = PlanOptions { partitions: parts, regrow: true, seed: 0 };
+
+        // cold: the full request path with nothing reusable
+        let cold = bench_for(budget, || {
+            let prepared = PreparedGraph::new(&graph);
+            let plan = prepared.plan(&opts);
+            session.classify_plan(&prepared, &plan, false).expect("cold classify")
+        });
+
+        // warm: plan served from the LRU, execution stage only
+        let prepared = PreparedGraph::new(&graph);
+        let mut cache = PlanCache::default();
+        cache.get_or_build(&prepared, &opts); // populate
+        let warm = bench_for(budget, || {
+            let (plan, hit) = cache.get_or_build(&prepared, &opts);
+            assert!(hit, "warm path must hit the plan cache");
+            session.classify_plan(&prepared, &plan, hit).expect("warm classify")
+        });
+
+        let row = BenchRow {
+            dataset: format!("csa{bits}"),
+            nodes: graph.num_nodes,
+            partitions: parts,
+            cold_median_s: cold.median_secs(),
+            warm_median_s: warm.median_secs(),
+            speedup: cold.median_secs() / warm.median_secs().max(1e-12),
+            warm_knodes_per_s: graph.num_nodes as f64
+                / warm.median_secs().max(1e-12)
+                / 1e3,
+        };
+        t.row(vec![
+            row.dataset.clone(),
+            row.nodes.to_string(),
+            row.partitions.to_string(),
+            fmt_dur(cold.median),
+            fmt_dur(warm.median),
+            format!("{:.2}x", row.speedup),
+            format!("{:.1}", row.warm_knodes_per_s),
+        ]);
+        rows.push(row);
+    }
+    t.print();
+
+    std::fs::write(out_path, render_json(&rows))
+        .with_context(|| format!("write {out_path}"))?;
+    println!("\nwrote {out_path}");
+    Ok(())
+}
+
+/// Hand-rolled JSON (no serde in the dependency set): stable key order,
+/// one row object per case.
+fn render_json(rows: &[BenchRow]) -> String {
+    let mut s = String::from("{\n  \"bench\": \"pipeline_classify\",\n");
+    s.push_str("  \"unit\": \"seconds (median)\",\n  \"results\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"dataset\": \"{}\", \"nodes\": {}, \"partitions\": {}, \
+             \"cold_median_s\": {:.6}, \"warm_median_s\": {:.6}, \
+             \"plan_cache_speedup\": {:.3}, \"warm_knodes_per_s\": {:.1}}}{}\n",
+            r.dataset,
+            r.nodes,
+            r.partitions,
+            r.cold_median_s,
+            r.warm_median_s,
+            r.speedup,
+            r.warm_knodes_per_s,
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
+/// Fixed-weight 4→16→5 model for artifact-free benching (values are
+/// arbitrary but deterministic; small enough to keep activations finite).
+fn synthetic_model() -> SageModel {
+    let wave = |n: usize, scale: f32| -> Vec<f32> {
+        (0..n).map(|i| ((i as f32 * 0.7).sin()) * scale).collect()
+    };
+    SageModel {
+        layers: vec![
+            SageLayer {
+                din: 4,
+                dout: 16,
+                w_self: wave(4 * 16, 0.3),
+                w_neigh: wave(4 * 16, 0.2),
+                bias: wave(16, 0.1),
+            },
+            SageLayer {
+                din: 16,
+                dout: 5,
+                w_self: wave(16 * 5, 0.3),
+                w_neigh: wave(16 * 5, 0.2),
+                bias: wave(5, 0.1),
+            },
+        ],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_is_well_formed_ish() {
+        let rows = vec![BenchRow {
+            dataset: "csa16".into(),
+            nodes: 9000,
+            partitions: 8,
+            cold_median_s: 0.01,
+            warm_median_s: 0.002,
+            speedup: 5.0,
+            warm_knodes_per_s: 4500.0,
+        }];
+        let s = render_json(&rows);
+        assert!(s.contains("\"dataset\": \"csa16\""));
+        assert!(s.contains("\"plan_cache_speedup\": 5.000"));
+        assert_eq!(s.matches('{').count(), s.matches('}').count());
+        assert_eq!(s.matches('[').count(), s.matches(']').count());
+    }
+
+    #[test]
+    fn synthetic_model_shapes_line_up() {
+        let m = synthetic_model();
+        assert_eq!(m.input_dim(), 4);
+        assert_eq!(m.num_classes(), 5);
+    }
+}

@@ -5,8 +5,9 @@
 //! process RSS.
 
 use super::Table;
+use crate::coordinator::{PlanOptions, PreparedGraph};
 use crate::datasets::{self, DatasetKind};
-use crate::memmodel::{csa_nodes_paper, measured_peak_partition, MemModel};
+use crate::memmodel::{csa_nodes_paper, MemModel};
 use anyhow::Result;
 
 /// Fig. 1a — GPU memory needed for full-graph verification of CSA
@@ -79,8 +80,12 @@ pub fn fig8(quick: bool) -> Result<()> {
         // floor that dominates at container scale but is constant in P.
         let marginal = |peak: usize| m.groot_bytes_per_node * peak as f64 / 1e6;
         let full_marginal = marginal(graph.num_nodes);
+        // one prepared graph per dataset; each row is a plan over it
+        let prepared = PreparedGraph::new(&graph);
         for parts in [1usize, 2, 4, 8, 16, 32, 64] {
-            let s = measured_peak_partition(&graph, parts, true, 1);
+            let s = prepared
+                .plan_stats(&PlanOptions { partitions: parts, regrow: true, seed: 1 })
+                .regrowth;
             let mb = marginal(s.max_partition_nodes);
             t.row(vec![
                 parts.to_string(),
@@ -109,10 +114,13 @@ pub fn tab2() -> Result<()> {
     let m = MemModel::default();
     // measure φ(P) at 64-bit (≈ width-independent; see memmodel docs)
     let probe = datasets::build(DatasetKind::Csa, 64)?;
+    let prepared = PreparedGraph::new(&probe);
     let parts_list = [2usize, 4, 8, 16, 32, 64];
     let mut phi = Vec::new();
     for &p in &parts_list {
-        let s = measured_peak_partition(&probe, p, true, 1);
+        let s = prepared
+            .plan_stats(&PlanOptions { partitions: p, regrow: true, seed: 1 })
+            .regrowth;
         let per = probe.num_nodes as f64 / p as f64;
         phi.push((s.max_partition_nodes as f64 / per) - 1.0);
     }

@@ -10,6 +10,7 @@
 //! ones, clearly marked.
 
 pub mod accuracy;
+pub mod bench;
 pub mod memory;
 pub mod runtime;
 
@@ -41,11 +42,16 @@ pub fn run(which: &str, args: &mut Args) -> Result<()> {
         "tab2" => memory::tab2(),
         "fig9" => runtime::fig9(quick),
         "fig10" => runtime::fig10(&weights, quick),
+        "bench" => {
+            let out = args.get_or("out", "BENCH_pipeline.json");
+            bench::bench_pipeline(&weights, quick, &out)
+        }
         "ablation-partitioners" => accuracy::ablation_partitioners(&weights, quick),
         "ablation-features" => accuracy::ablation_features(&weights, quick),
         other => bail!(
             "unknown harness '{other}' \
-             (fig1a|fig6a..d|fig7|fig8|fig9|fig10|tab2|ablation-partitioners|ablation-features)"
+             (fig1a|fig6a..d|fig7|fig8|fig9|fig10|tab2|bench|\
+              ablation-partitioners|ablation-features)"
         ),
     }
 }

@@ -2,9 +2,8 @@
 //! (verification time GROOT vs GAMORA vs ABC).
 
 use super::{native_model, Table};
-use crate::coordinator::{Session, SessionConfig};
+use crate::coordinator::{PlanOptions, PreparedGraph, Session, SessionConfig};
 use crate::datasets::{self, DatasetKind};
-use crate::graph::Csr;
 use crate::spmm::{all_engines, SpmmEngine};
 use crate::util::rng::Rng;
 use crate::util::timer::{bench_for, fmt_dur};
@@ -51,7 +50,10 @@ pub fn fig9(quick: bool) -> Result<()> {
     for (label, kind, bits, batch) in cases {
         {
             let graph = datasets::build(kind, bits)?.replicate_shared_inputs(batch);
-            let csr = Csr::symmetric_from_edges(graph.num_nodes, &graph.edges);
+            // stage-1 of the pipeline builds the symmetric closure the
+            // kernels aggregate over (same CSR the classify path uses)
+            let prepared = PreparedGraph::new(&graph);
+            let csr = prepared.csr();
             let mut rng = Rng::new(9);
             let x: Vec<f32> = (0..csr.num_nodes() * dim).map(|_| rng.f32()).collect();
             let engines = all_engines(threads);
@@ -61,9 +63,9 @@ pub fn fig9(quick: bool) -> Result<()> {
             // allocating convenience wrapper
             let mut out = vec![0.0f32; csr.num_nodes() * dim];
             for e in &engines {
-                let stats = bench_for(budget, || e.spmm_mean_into(&csr, &x, dim, &mut out));
+                let stats = bench_for(budget, || e.spmm_mean_into(csr, &x, dim, &mut out));
                 medians.push(stats.median_secs());
-                makespans.push(crate::spmm::balance_report(e.as_ref(), &csr, lanes));
+                makespans.push(crate::spmm::balance_report(e.as_ref(), csr, lanes));
             }
             let adv_serial = medians[2];
             let adv_span = makespans[2].makespan.max(1) as f64;
@@ -115,17 +117,19 @@ pub fn fig10(weights: &str, quick: bool) -> Result<()> {
             "groot vs abc-pub",
         ],
     );
+    let session = Session::native(model, SessionConfig::default());
     for bits in widths {
         let graph = datasets::build(DatasetKind::Csa, bits)?;
         let aig = crate::aig::mult::csa_multiplier(bits);
 
+        // Cold end-to-end timing per row: prepare + plan + batched
+        // execute + algebraic check (the staged pipeline, uncached).
         let run = |parts: usize| -> Result<(f64, f64, bool)> {
-            let session = Session::native(
-                model.clone(),
-                SessionConfig { num_partitions: parts, ..Default::default() },
-            );
             let t0 = std::time::Instant::now();
-            let res = session.classify(&graph)?;
+            let prepared = PreparedGraph::new(&graph);
+            let plan =
+                prepared.plan(&PlanOptions { partitions: parts, ..Default::default() });
+            let res = session.classify_plan(&prepared, &plan, false)?;
             let outcome = crate::verify::verify_multiplier(&aig, &graph, &res.pred)?;
             Ok((t0.elapsed().as_secs_f64(), res.accuracy, outcome.equivalent))
         };

@@ -46,8 +46,8 @@ USAGE:
   groot classify --dataset csa --bits 16 [--partitions 8] [--no-regrow]
                  [--backend native|xla] [--artifacts DIR] [--weights FILE]
   groot verify   --dataset csa --bits 16 [same options as classify]
-  groot harness  fig1a|fig6a|fig6b|fig6c|fig6d|fig7|fig8|fig9|fig10|tab2
-                 [--weights FILE] [--quick]
+  groot harness  fig1a|fig6a|fig6b|fig6c|fig6d|fig7|fig8|fig9|fig10|tab2|bench
+                 [--weights FILE] [--quick] [--out FILE (bench)]
   groot info     --dataset csa --bits 16
 ";
 
@@ -120,12 +120,14 @@ fn classify(args: &mut Args) -> Result<()> {
     let session = Session::new(backend, cfg);
     let res = session.classify(&graph)?;
     println!(
-        "accuracy {:.4}  (partition {:?}, regrowth {:?}, pack {:?}, infer {:?})",
+        "accuracy {:.4}  (partition {:?}, regrowth {:?}, gather {:?}, infer {:?}; \
+         batch of {} partitions)",
         res.accuracy,
         res.stats.partition_time,
         res.stats.regrowth_time,
         res.stats.pack_time,
-        res.stats.infer_time
+        res.stats.infer_time,
+        res.stats.batch_size
     );
     println!(
         "boundary nodes {}, crossing edges {}, max partition {} nodes, peak bucket {}",

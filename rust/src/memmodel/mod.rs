@@ -21,8 +21,7 @@
 //! fitted cut-growth law above that. The measured-RSS column printed by
 //! the harnesses next to the model keeps us honest about the shape.
 
-use crate::partition::partition_kway;
-use crate::regrowth::regrow_partitions;
+use crate::coordinator::{PlanOptions, PreparedGraph};
 
 /// Bytes-per-node and base constants calibrated against Table II.
 #[derive(Clone, Copy, Debug)]
@@ -86,17 +85,19 @@ pub fn csa_nodes(bits: usize, batch: usize) -> usize {
 }
 
 /// Measured peak re-grown partition size for a graph this container can
-/// build: runs the real partitioner + Algorithm 1.
+/// build: one stats-only pipeline probe (real partitioner + Algorithm 1,
+/// no per-partition buffer materialization). Callers sweeping partition
+/// counts should hold a [`PreparedGraph`] and call
+/// [`PreparedGraph::plan_stats`] directly so the CSR is built once.
 pub fn measured_peak_partition(
     graph: &crate::features::EdaGraph,
     partitions: usize,
     regrow: bool,
     seed: u64,
 ) -> crate::regrowth::RegrowthStats {
-    let csr = crate::graph::Csr::symmetric_from_edges(graph.num_nodes, &graph.edges);
-    let p = partition_kway(&csr, partitions, seed);
-    let parts = regrow_partitions(&csr, &p, regrow);
-    crate::regrowth::stats(&parts)
+    PreparedGraph::new(graph)
+        .plan_stats(&PlanOptions { partitions, regrow, seed })
+        .regrowth
 }
 
 /// Boundary-overhead extrapolation: measure the re-grown boundary

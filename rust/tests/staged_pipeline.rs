@@ -1,0 +1,204 @@
+//! Integration tests for the staged verification pipeline:
+//! PreparedGraph → PartitionPlan → batched execution, the plan cache, and
+//! the serving contract on top of them.
+
+use groot::backend::{InferenceBackend, NativeBackend, PartitionInput, PartitionLogits};
+use groot::coordinator::server::{Server, VerifyOptions};
+use groot::coordinator::{
+    Backend, PlanCache, PlanOptions, PreparedGraph, Session, SessionConfig,
+};
+use groot::datasets::{self, DatasetKind};
+use groot::gnn::{SageLayer, SageModel};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn small_model() -> SageModel {
+    SageModel {
+        layers: vec![SageLayer {
+            din: 4,
+            dout: 5,
+            w_self: vec![0.3; 20],
+            w_neigh: vec![-0.2; 20],
+            bias: vec![0.01; 5],
+        }],
+    }
+}
+
+/// Counters shared with the test after the backend is boxed away.
+#[derive(Default)]
+struct Counters {
+    infer_calls: AtomicUsize,
+    batch_calls: AtomicUsize,
+    last_batch_size: AtomicUsize,
+}
+
+/// Wraps the native backend and counts how the coordinator drives it.
+struct CountingBackend {
+    inner: NativeBackend,
+    counters: Arc<Counters>,
+}
+
+impl CountingBackend {
+    fn boxed(counters: Arc<Counters>) -> Backend {
+        Box::new(CountingBackend { inner: NativeBackend::with_threads(small_model(), 1), counters })
+    }
+}
+
+impl InferenceBackend for CountingBackend {
+    fn name(&self) -> &'static str {
+        "counting"
+    }
+
+    fn num_classes(&self) -> usize {
+        self.inner.num_classes()
+    }
+
+    fn infer(&self, part: PartitionInput<'_>) -> anyhow::Result<PartitionLogits> {
+        self.counters.infer_calls.fetch_add(1, Ordering::SeqCst);
+        self.inner.infer(part)
+    }
+
+    fn infer_batch(&self, parts: &[PartitionInput<'_>]) -> anyhow::Result<Vec<PartitionLogits>> {
+        self.counters.batch_calls.fetch_add(1, Ordering::SeqCst);
+        self.counters.last_batch_size.store(parts.len(), Ordering::SeqCst);
+        self.inner.infer_batch(parts)
+    }
+}
+
+#[test]
+fn all_partitions_reach_the_backend_in_one_batch_call() {
+    let counters = Arc::new(Counters::default());
+    let session = Session::new(
+        CountingBackend::boxed(counters.clone()),
+        SessionConfig { num_partitions: 6, ..Default::default() },
+    );
+    let graph = datasets::build(DatasetKind::Csa, 8).unwrap();
+    let res = session.classify(&graph).unwrap();
+
+    assert_eq!(counters.batch_calls.load(Ordering::SeqCst), 1, "one infer_batch per plan");
+    assert_eq!(
+        counters.infer_calls.load(Ordering::SeqCst),
+        0,
+        "the coordinator must not stream partitions through infer()"
+    );
+    let batch = counters.last_batch_size.load(Ordering::SeqCst);
+    assert_eq!(res.stats.batch_size, batch);
+    assert!((2..=6).contains(&batch), "expected a real multi-partition batch, got {batch}");
+    assert_eq!(res.pred.len(), graph.num_nodes);
+
+    // a second classify is a second (cold) plan → a second batch call
+    session.classify(&graph).unwrap();
+    assert_eq!(counters.batch_calls.load(Ordering::SeqCst), 2);
+}
+
+#[test]
+fn cached_plans_classify_byte_identically_to_cold_plans() {
+    // The cache must be invisible to results across the option space.
+    let session = Session::native(small_model(), SessionConfig::default());
+    for bits in [6usize, 8] {
+        let graph = datasets::build(DatasetKind::Csa, bits).unwrap();
+        let prepared = PreparedGraph::new(&graph);
+        let mut cache = PlanCache::new(32);
+        for partitions in [1usize, 3, 8] {
+            for seed in [0u64, 7] {
+                for regrow in [false, true] {
+                    let opts = PlanOptions { partitions, regrow, seed };
+                    let (plan, hit) = cache.get_or_build(&prepared, &opts);
+                    assert!(!hit, "first build of {opts:?} must be cold");
+                    let cold = session.classify_plan(&prepared, &plan, hit).unwrap();
+
+                    let (plan, hit) = cache.get_or_build(&prepared, &opts);
+                    assert!(hit, "second lookup of {opts:?} must hit");
+                    let warm = session.classify_plan(&prepared, &plan, hit).unwrap();
+
+                    assert_eq!(cold.pred, warm.pred, "csa{bits} {opts:?}");
+                    assert_eq!(cold.accuracy, warm.accuracy);
+                    // warm runs report zero plan-stage work
+                    assert!(warm.stats.plan_cache_hit);
+                    assert_eq!(warm.stats.partition_time, Duration::ZERO);
+                    assert_eq!(warm.stats.regrowth_time, Duration::ZERO);
+                    assert_eq!(warm.stats.pack_time, Duration::ZERO);
+                    assert!(!cold.stats.plan_cache_hit);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn plan_cache_evicts_at_capacity() {
+    let graph = datasets::build(DatasetKind::Csa, 6).unwrap();
+    let prepared = PreparedGraph::new(&graph);
+    let mut cache = PlanCache::new(3);
+    for partitions in 1..=5usize {
+        cache.get_or_build(
+            &prepared,
+            &PlanOptions { partitions, regrow: true, seed: 0 },
+        );
+    }
+    assert_eq!(cache.len(), 3, "LRU must hold exactly its capacity");
+    // oldest two evicted, newest three present
+    for (partitions, want_hit) in [(1usize, false), (2, false), (3, true), (4, true), (5, true)] {
+        let got = cache
+            .get(prepared.fingerprint(), &PlanOptions { partitions, regrow: true, seed: 0 })
+            .is_some();
+        assert_eq!(got, want_hit, "partitions={partitions}");
+    }
+}
+
+#[test]
+fn warm_server_requests_skip_planning_and_match_cold_results() {
+    let server = Server::spawn(SessionConfig::default(), || -> anyhow::Result<Backend> {
+        Ok(Box::new(NativeBackend::with_threads(small_model(), 1)))
+    });
+    let h = server.handle();
+    let graph = datasets::build(DatasetKind::Csa, 8).unwrap();
+
+    let cold = h.verify_blocking(graph.clone(), VerifyOptions::partitions(4)).unwrap();
+    let warm = h.verify_blocking(graph.clone(), VerifyOptions::partitions(4)).unwrap();
+    assert!(!cold.stats.plan_cache_hit);
+    assert!(warm.stats.plan_cache_hit);
+    assert_eq!(cold.pred, warm.pred);
+    assert_eq!(warm.stats.partition_time, Duration::ZERO);
+    assert_eq!(warm.stats.regrowth_time, Duration::ZERO);
+    assert!(warm.stats.batch_size >= 2, "warm run still batches all partitions");
+
+    // full per-request option plumbing: seed and regrow reach the plan
+    let other_seed = h
+        .verify_blocking(
+            graph.clone(),
+            VerifyOptions { partitions: Some(4), seed: Some(9), regrow: None },
+        )
+        .unwrap();
+    assert!(!other_seed.stats.plan_cache_hit, "different seed = different plan");
+    let no_regrow = h
+        .verify_blocking(
+            graph,
+            VerifyOptions { partitions: Some(4), seed: None, regrow: Some(false) },
+        )
+        .unwrap();
+    assert!(!no_regrow.stats.plan_cache_hit);
+    assert!(!no_regrow.stats.regrown);
+    assert_eq!(no_regrow.stats.total_boundary_nodes, 0);
+}
+
+#[test]
+fn staged_and_monolithic_paths_agree_on_every_dataset_family() {
+    let session = Session::native(small_model(), SessionConfig::default());
+    for kind in [
+        DatasetKind::Csa,
+        DatasetKind::Booth,
+        DatasetKind::Wallace,
+        DatasetKind::Mapped7nm,
+        DatasetKind::Fpga4Lut,
+    ] {
+        let graph = datasets::build(kind, 8).unwrap();
+        let cfg = SessionConfig { num_partitions: 3, ..Default::default() };
+        let eager = session.classify_with(&graph, &cfg).unwrap();
+        let prepared = PreparedGraph::new(&graph);
+        let plan = prepared.plan(&PlanOptions::from_config(&cfg));
+        let staged = session.classify_plan(&prepared, &plan, false).unwrap();
+        assert_eq!(eager.pred, staged.pred, "{kind:?}");
+    }
+}
