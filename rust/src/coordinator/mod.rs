@@ -184,28 +184,12 @@ impl Session {
     }
 }
 
-/// Row argmax with deterministic tie- and NaN-handling: returns the
-/// LOWEST index holding the maximum value; NaN entries are never
-/// selected (a row of all NaNs returns 0). This makes stitched
-/// predictions reproducible across backends even when a numerically
-/// degenerate model emits NaN logits.
-pub fn argmax(row: &[f32]) -> u8 {
-    let mut best: Option<usize> = None;
-    for (i, &v) in row.iter().enumerate() {
-        if v.is_nan() {
-            continue;
-        }
-        match best {
-            None => best = Some(i),
-            Some(b) => {
-                if v > row[b] {
-                    best = Some(i);
-                }
-            }
-        }
-    }
-    best.unwrap_or(0) as u8
-}
+/// Row argmax with deterministic tie- and NaN-handling — re-exported
+/// from [`crate::gnn::argmax`], the crate's single implementation, so the
+/// tie/NaN rule cannot diverge between serving (plan stitching) and
+/// training eval ([`crate::gnn::argmax_rows`]). The behavioral tests
+/// below stay in this module: they pin the serving-visible contract.
+pub use crate::gnn::argmax;
 
 /// Load the weight bundle from the default artifacts location.
 pub fn load_weights(path: &std::path::Path) -> Result<crate::util::tensor::Bundle> {

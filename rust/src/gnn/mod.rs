@@ -209,20 +209,98 @@ pub fn matmul_add(a: &[f32], b: &[f32], out: &mut [f32], n: usize, k: usize, m: 
     });
 }
 
-/// Row-wise argmax → class ids.
-pub fn argmax_rows(logits: &[f32], classes: usize) -> Vec<u8> {
-    logits
-        .chunks_exact(classes)
-        .map(|row| {
-            let mut best = 0usize;
-            for (i, &v) in row.iter().enumerate() {
-                if v > row[best] {
-                    best = i;
+/// out += a[n×m] · bᵀ where b is row-major [k×m] — the "gradient times
+/// transposed weight" product both terms of the SAGE input-gradient need
+/// (`dh = dz·W_selfᵀ + Aᵀmean(dz·W_neighᵀ)`). Each output row is a dot
+/// of an `a` row against `b` rows, so rows parallelize like
+/// [`matmul_add`] and the accumulation order per row is fixed —
+/// deterministic regardless of thread count.
+pub fn matmul_abt_add(a: &[f32], b: &[f32], out: &mut [f32], n: usize, k: usize, m: usize) {
+    use crate::util::pool::{default_threads, parallel_for_static, SendPtr};
+    assert_eq!(a.len(), n * m);
+    assert_eq!(b.len(), k * m);
+    assert_eq!(out.len(), n * k);
+    let ptr = SendPtr(out.as_mut_ptr());
+    parallel_for_static(default_threads(), n, |_, s, e| {
+        let ptr = &ptr;
+        for u in s..e {
+            // SAFETY: disjoint row ranges per thread.
+            let orow = unsafe { std::slice::from_raw_parts_mut(ptr.0.add(u * k), k) };
+            let arow = &a[u * m..(u + 1) * m];
+            for (i, o) in orow.iter_mut().enumerate() {
+                let brow = &b[i * m..(i + 1) * m];
+                let mut acc = 0.0f32;
+                for j in 0..m {
+                    acc += arow[j] * brow[j];
+                }
+                *o += acc;
+            }
+        }
+    });
+}
+
+/// out += aᵀ[k×n] · g — the weight-gradient product `dW = hᵀ·dz`
+/// ([k×m] += [n×k]ᵀ·[n×m]). Runs serially: every output element reduces
+/// over all n rows, the model's weight matrices are tiny (≤ 64×64), and a
+/// fixed accumulation order keeps training byte-deterministic.
+pub fn matmul_at_b_add(a: &[f32], g: &[f32], out: &mut [f32], n: usize, k: usize, m: usize) {
+    assert_eq!(a.len(), n * k);
+    assert_eq!(g.len(), n * m);
+    assert_eq!(out.len(), k * m);
+    for u in 0..n {
+        let arow = &a[u * k..(u + 1) * k];
+        let grow = &g[u * m..(u + 1) * m];
+        for (i, &av) in arow.iter().enumerate() {
+            if av != 0.0 {
+                let orow = &mut out[i * m..(i + 1) * m];
+                for j in 0..m {
+                    orow[j] += av * grow[j];
                 }
             }
-            best as u8
-        })
-        .collect()
+        }
+    }
+}
+
+/// out[m] += column sums of g[n×m] — the bias gradient.
+pub fn colsum_add(g: &[f32], out: &mut [f32], n: usize, m: usize) {
+    assert_eq!(g.len(), n * m);
+    assert_eq!(out.len(), m);
+    for row in g.chunks_exact(m) {
+        for (o, &v) in out.iter_mut().zip(row) {
+            *o += v;
+        }
+    }
+}
+
+/// Row argmax with deterministic tie- and NaN-handling: returns the
+/// LOWEST index holding the maximum value; NaN entries are never
+/// selected (a row of all NaNs returns 0). This is the ONE argmax in the
+/// crate — serving re-exports it as `coordinator::argmax` and training
+/// eval goes through [`argmax_rows`] — so the tie/NaN rule cannot
+/// diverge between the two paths, and stitched predictions stay
+/// reproducible across backends even when a numerically degenerate model
+/// emits NaN logits.
+pub fn argmax(row: &[f32]) -> u8 {
+    let mut best: Option<usize> = None;
+    for (i, &v) in row.iter().enumerate() {
+        if v.is_nan() {
+            continue;
+        }
+        match best {
+            None => best = Some(i),
+            Some(b) => {
+                if v > row[b] {
+                    best = Some(i);
+                }
+            }
+        }
+    }
+    best.unwrap_or(0) as u8
+}
+
+/// Row-wise argmax → class ids (delegates to [`argmax`] per row).
+pub fn argmax_rows(logits: &[f32], classes: usize) -> Vec<u8> {
+    logits.chunks_exact(classes).map(argmax).collect()
 }
 
 /// Node-classification accuracy over the first `n` rows.
@@ -324,5 +402,69 @@ mod tests {
         let pred = argmax_rows(&logits, 2);
         assert_eq!(pred, vec![1, 0, 0]);
         assert!((accuracy(&pred, &[1, 0, 1]) - 2.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn argmax_rows_inherits_nan_and_tie_rules() {
+        // argmax_rows delegates to the canonical argmax: lowest index on
+        // ties, NaN never wins (a leading NaN used to win here by default).
+        let logits = vec![f32::NAN, 1.0, 2.0, 2.0, f32::NAN, f32::NAN];
+        assert_eq!(argmax_rows(&logits, 2), vec![1, 0, 0]);
+    }
+
+    #[test]
+    fn matmul_abt_add_matches_hand_product() {
+        // a [2×3] · bᵀ where b is [2×3] ⇒ out [2×2]
+        let a = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let b = vec![1.0, 0.0, -1.0, 0.5, 0.5, 0.5];
+        let mut out = vec![10.0, 0.0, 0.0, -10.0];
+        matmul_abt_add(&a, &b, &mut out, 2, 2, 3);
+        // row0: [1,2,3]·[1,0,-1] = -2 ; [1,2,3]·[.5,.5,.5] = 3
+        // row1: [4,5,6]·[1,0,-1] = -2 ; [4,5,6]·[.5,.5,.5] = 7.5
+        assert_eq!(out, vec![8.0, 3.0, -2.0, -2.5]);
+    }
+
+    #[test]
+    fn matmul_at_b_add_matches_hand_product() {
+        // aᵀ [2×3]ᵀ=[3×2]... here a [3×2], g [3×2] ⇒ out [2×2] += aᵀg
+        let a = vec![1.0, 0.0, 2.0, 1.0, 0.0, 3.0];
+        let g = vec![1.0, 1.0, 2.0, 0.0, -1.0, 1.0];
+        let mut out = vec![0.0; 4];
+        matmul_at_b_add(&a, &g, &mut out, 3, 2, 2);
+        // out[0,:] = 1·[1,1] + 2·[2,0] + 0·[-1,1] = [5,1]
+        // out[1,:] = 0·[1,1] + 1·[2,0] + 3·[-1,1] = [-1,3]
+        assert_eq!(out, vec![5.0, 1.0, -1.0, 3.0]);
+    }
+
+    #[test]
+    fn matmul_transposes_are_consistent_with_matmul_add() {
+        // ⟨a·b, g⟩ = ⟨b, aᵀ·g⟩ = ⟨a, g·bᵀ⟩ for random-ish fixed inputs.
+        let (n, k, m) = (4, 3, 5);
+        let mut st = 7u64;
+        let mut next = || {
+            (crate::util::rng::splitmix64(&mut st) >> 40) as f32 / (1u64 << 24) as f32 - 0.5
+        };
+        let a: Vec<f32> = (0..n * k).map(|_| next()).collect();
+        let b: Vec<f32> = (0..k * m).map(|_| next()).collect();
+        let g: Vec<f32> = (0..n * m).map(|_| next()).collect();
+        let mut ab = vec![0.0; n * m];
+        matmul_add(&a, &b, &mut ab, n, k, m);
+        let mut atg = vec![0.0; k * m];
+        matmul_at_b_add(&a, &g, &mut atg, n, k, m);
+        let mut gbt = vec![0.0; n * k];
+        matmul_abt_add(&g, &b, &mut gbt, n, k, m);
+        let dot = |x: &[f32], y: &[f32]| -> f64 {
+            x.iter().zip(y).map(|(&p, &q)| p as f64 * q as f64).sum()
+        };
+        assert!((dot(&ab, &g) - dot(&b, &atg)).abs() < 1e-5);
+        assert!((dot(&ab, &g) - dot(&a, &gbt)).abs() < 1e-5);
+    }
+
+    #[test]
+    fn colsum_add_sums_columns() {
+        let g = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let mut out = vec![0.5, 0.0];
+        colsum_add(&g, &mut out, 3, 2);
+        assert_eq!(out, vec![9.5, 12.0]);
     }
 }

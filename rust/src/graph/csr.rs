@@ -143,6 +143,34 @@ impl Csr {
         y
     }
 
+    /// Dense reference for the *transpose* of mean aggregation:
+    /// Y = (D⁻¹A)ᵀ X = A D⁻¹ X for a symmetric adjacency, i.e.
+    /// `y[v] = Σ_{u ∈ N(v)} x[u] / deg(u)` — the gradient of
+    /// [`Csr::spmm_mean_reference`] with respect to its input, which is
+    /// what `SpmmEngine::spmm_mean_backward_into` implementations are
+    /// tested against. Rows whose neighbor has no out-entries contribute
+    /// nothing (only reachable on non-symmetric adjacencies).
+    pub fn spmm_mean_backward_reference(&self, x: &[f32], dim: usize) -> Vec<f32> {
+        let n = self.num_nodes();
+        assert_eq!(x.len(), n * dim);
+        let mut y = vec![0.0f32; n * dim];
+        for v in 0..n {
+            let yrow = &mut y[v * dim..(v + 1) * dim];
+            for &u in self.neighbors(v) {
+                let deg = self.degree(u as usize);
+                if deg == 0 {
+                    continue;
+                }
+                let w = 1.0 / deg as f32;
+                let xrow = &x[u as usize * dim..(u as usize + 1) * dim];
+                for d in 0..dim {
+                    yrow[d] += xrow[d] * w;
+                }
+            }
+        }
+        y
+    }
+
     /// Parallel check helper: max |a-b| over two feature matrices.
     /// Each thread accumulates its own partial maximum into a private
     /// slot; the slots are reduced serially at the end — no lock on the
@@ -234,6 +262,27 @@ mod tests {
         b[7_777] += 3.5; // single spike, deep inside one thread's range
         b[123] -= 1.25;
         assert!((Csr::max_abs_diff(&a, &b) - 3.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn spmm_backward_reference_is_adjoint_of_forward() {
+        // ⟨A_mean x, g⟩ must equal ⟨x, A_meanᵀ g⟩ for any x, g.
+        let edges = vec![(0u32, 1), (0, 2), (0, 3), (2, 3)];
+        let csr = Csr::symmetric_from_edges(5, &edges); // node 4 isolated
+        let dim = 3;
+        let n = csr.num_nodes();
+        let mut st = 0x1234u64;
+        let mut next = || {
+            (crate::util::rng::splitmix64(&mut st) >> 40) as f32 / (1u64 << 24) as f32 - 0.5
+        };
+        let x: Vec<f32> = (0..n * dim).map(|_| next()).collect();
+        let g: Vec<f32> = (0..n * dim).map(|_| next()).collect();
+        let y = csr.spmm_mean_reference(&x, dim);
+        let gx = csr.spmm_mean_backward_reference(&g, dim);
+        let dot = |a: &[f32], b: &[f32]| -> f64 {
+            a.iter().zip(b).map(|(&p, &q)| p as f64 * q as f64).sum()
+        };
+        assert!((dot(&y, &g) - dot(&x, &gx)).abs() < 1e-5, "adjoint identity violated");
     }
 
     #[test]

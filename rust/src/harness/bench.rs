@@ -120,6 +120,104 @@ fn render_json(rows: &[BenchRow]) -> String {
     s
 }
 
+/// One measured training row, serialized into BENCH_train.json.
+struct TrainBenchRow {
+    dataset: String,
+    nodes: usize,
+    partitions: usize,
+    epochs: usize,
+    epoch_median_s: f64,
+    knodes_per_s: f64,
+    first_loss: f64,
+    final_loss: f64,
+}
+
+/// `groot harness bench --train` — the training perf trajectory: epoch
+/// wall time and core-nodes/sec for the default `groot train`
+/// configuration, plus first→final loss so regressions in *convergence*
+/// (not just speed) show up in the same file.
+pub fn bench_train(quick: bool, out_path: &str) -> Result<()> {
+    use crate::train::{self, TrainConfig};
+
+    let cases: Vec<(usize, usize)> = if quick { vec![(8, 4)] } else { vec![(8, 4), (16, 8)] };
+    let epochs = if quick { 2 } else { 5 };
+
+    let mut t = Table::new(
+        "Training throughput — default model (4→64→64→5), partition-aware batches",
+        &["dataset", "nodes", "parts", "epochs", "epoch median", "knodes/s", "loss first→final"],
+    );
+    let mut rows = Vec::new();
+    for (bits, parts) in cases {
+        let graph = datasets::build(DatasetKind::Csa, bits)?;
+        let cfg = TrainConfig {
+            epochs,
+            partitions: parts,
+            seed: 1,
+            eval_every: usize::MAX, // benching the train loop, not eval
+            checkpoint_every: 0,
+            out: None,
+            ..Default::default()
+        };
+        let report = train::train(std::slice::from_ref(&graph), &[], &cfg, |_| {})?;
+        // Drop epoch 1: it carries one-time SpMM plan builds and arena
+        // warm-up, and the file tracks steady-state throughput.
+        let warm_skip = usize::from(report.history.len() > 1);
+        let mut secs: Vec<f64> =
+            report.history.iter().skip(warm_skip).map(|e| e.secs).collect();
+        secs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = secs[secs.len() / 2];
+        let row = TrainBenchRow {
+            dataset: format!("csa{bits}"),
+            nodes: graph.num_nodes,
+            partitions: parts,
+            epochs,
+            epoch_median_s: median,
+            knodes_per_s: graph.num_nodes as f64 / median.max(1e-12) / 1e3,
+            first_loss: report.first_loss(),
+            final_loss: report.final_loss(),
+        };
+        t.row(vec![
+            row.dataset.clone(),
+            row.nodes.to_string(),
+            row.partitions.to_string(),
+            row.epochs.to_string(),
+            fmt_dur(Duration::from_secs_f64(median)),
+            format!("{:.1}", row.knodes_per_s),
+            format!("{:.4} → {:.4}", row.first_loss, row.final_loss),
+        ]);
+        rows.push(row);
+    }
+    t.print();
+
+    std::fs::write(out_path, render_train_json(&rows))
+        .with_context(|| format!("write {out_path}"))?;
+    println!("\nwrote {out_path}");
+    Ok(())
+}
+
+fn render_train_json(rows: &[TrainBenchRow]) -> String {
+    let mut s = String::from("{\n  \"bench\": \"train_epoch\",\n");
+    s.push_str("  \"unit\": \"seconds per epoch (median)\",\n  \"results\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"dataset\": \"{}\", \"nodes\": {}, \"partitions\": {}, \
+             \"epochs\": {}, \"epoch_median_s\": {:.6}, \"knodes_per_s\": {:.1}, \
+             \"first_loss\": {:.6}, \"final_loss\": {:.6}}}{}\n",
+            r.dataset,
+            r.nodes,
+            r.partitions,
+            r.epochs,
+            r.epoch_median_s,
+            r.knodes_per_s,
+            r.first_loss,
+            r.final_loss,
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
 /// Fixed-weight 4→16→5 model for artifact-free benching (values are
 /// arbitrary but deterministic; small enough to keep activations finite).
 fn synthetic_model() -> SageModel {
@@ -164,6 +262,25 @@ mod tests {
         let s = render_json(&rows);
         assert!(s.contains("\"dataset\": \"csa16\""));
         assert!(s.contains("\"plan_cache_speedup\": 5.000"));
+        assert_eq!(s.matches('{').count(), s.matches('}').count());
+        assert_eq!(s.matches('[').count(), s.matches(']').count());
+    }
+
+    #[test]
+    fn train_json_is_well_formed_ish() {
+        let rows = vec![TrainBenchRow {
+            dataset: "csa8".into(),
+            nodes: 600,
+            partitions: 4,
+            epochs: 2,
+            epoch_median_s: 0.01,
+            knodes_per_s: 60.0,
+            first_loss: 1.6,
+            final_loss: 1.2,
+        }];
+        let s = render_train_json(&rows);
+        assert!(s.contains("\"bench\": \"train_epoch\""));
+        assert!(s.contains("\"final_loss\": 1.200000"));
         assert_eq!(s.matches('{').count(), s.matches('}').count());
         assert_eq!(s.matches('[').count(), s.matches(']').count());
     }

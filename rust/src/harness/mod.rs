@@ -43,8 +43,13 @@ pub fn run(which: &str, args: &mut Args) -> Result<()> {
         "fig9" => runtime::fig9(quick),
         "fig10" => runtime::fig10(&weights, quick),
         "bench" => {
-            let out = args.get_or("out", "BENCH_pipeline.json");
-            bench::bench_pipeline(&weights, quick, &out)
+            if args.flag("train") {
+                let out = args.get_or("out", "BENCH_train.json");
+                bench::bench_train(quick, &out)
+            } else {
+                let out = args.get_or("out", "BENCH_pipeline.json");
+                bench::bench_pipeline(&weights, quick, &out)
+            }
         }
         "ablation-partitioners" => accuracy::ablation_partitioners(&weights, quick),
         "ablation-features" => accuracy::ablation_features(&weights, quick),

@@ -18,5 +18,6 @@ pub mod partition;
 pub mod regrowth;
 pub mod runtime;
 pub mod spmm;
+pub mod train;
 pub mod util;
 pub mod verify;

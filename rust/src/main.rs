@@ -22,12 +22,20 @@ fn main() {
 }
 
 fn run() -> Result<()> {
-    let mut args = Args::parse(&["no-regrow", "help-args", "gamora-features", "quick"]);
+    let mut args = Args::parse(&[
+        "no-regrow",
+        "help-args",
+        "gamora-features",
+        "quick",
+        "train",
+        "assert-improves",
+    ]);
     let cmd = args.positional.first().cloned().unwrap_or_else(|| "help".into());
     match cmd.as_str() {
         "gen-dataset" => gen_dataset(&mut args),
         "classify" => classify(&mut args),
         "verify" => verify(&mut args),
+        "train" => train_cmd(&mut args),
         "harness" => harness(&mut args),
         "info" => info(&mut args),
         "help" | "--help" | "-h" => {
@@ -46,9 +54,18 @@ USAGE:
   groot classify --dataset csa --bits 16 [--partitions 8] [--no-regrow]
                  [--backend native|xla] [--artifacts DIR] [--weights FILE]
   groot verify   --dataset csa --bits 16 [same options as classify]
+  groot train    --dataset csa --bits 8 [--val-bits 16,32] [--epochs 200]
+                 [--lr 0.01] [--hidden 64,64] [--partitions 4] [--seed 0]
+                 [--threads N (SpMM engine lanes; matmuls follow GROOT_THREADS)]
+                 [--out FILE] [--checkpoint-every 25] [--eval-every 10]
+                 [--resume CKPT] [--assert-improves]
   groot harness  fig1a|fig6a|fig6b|fig6c|fig6d|fig7|fig8|fig9|fig10|tab2|bench
-                 [--weights FILE] [--quick] [--out FILE (bench)]
+                 [--weights FILE] [--quick] [--train (bench)] [--out FILE (bench)]
   groot info     --dataset csa --bits 16
+
+The paper's flow end-to-end from nothing but the circuit generators:
+  groot train --dataset csa --bits 8 --seed 1        # writes artifacts/ckpt_csa8.bin
+  groot harness fig6a --weights artifacts/ckpt_csa8.bin
 ";
 
 fn parse_dataset(args: &mut Args) -> Result<(DatasetKind, usize)> {
@@ -164,6 +181,134 @@ fn verify(args: &mut Args) -> Result<()> {
     if !outcome.equivalent {
         std::process::exit(2);
     }
+    Ok(())
+}
+
+/// `groot train` — train GraphSAGE on an 8-bit design, validate on the
+/// family's held-out larger designs, and write a GRTW checkpoint that
+/// loads straight back into `Session`/`NativeBackend` (verified here by
+/// re-classifying through the served path before returning).
+fn train_cmd(args: &mut Args) -> Result<()> {
+    use groot::train::{self, checkpoint, TrainConfig};
+
+    let (kind, bits) = parse_dataset(args)?;
+    let val_bits: Vec<usize> = args.parse_list("val-bits", &[bits * 2])?;
+    let out = PathBuf::from(
+        args.get_or("out", &format!("artifacts/ckpt_{}.bin", kind.stem(bits))),
+    );
+    let (resume, epoch_offset) = match args.get("resume") {
+        Some(p) => {
+            let (model, epoch) = checkpoint::load(std::path::Path::new(&p))?;
+            println!("resuming from {p} (epochs already trained: {})", epoch.unwrap_or(0));
+            if args.options.contains_key("hidden") {
+                println!(
+                    "note: --hidden is ignored with --resume \
+                     (architecture comes from the checkpoint)"
+                );
+            }
+            // carry the checkpoint's progress forward so meta.epoch stays
+            // cumulative across resumed runs
+            (Some(model), epoch.unwrap_or(0))
+        }
+        None => (None, 0),
+    };
+    let cfg = TrainConfig {
+        hidden: args.parse_list("hidden", &[64usize, 64])?,
+        epochs: args.parse_or("epochs", 200usize)?,
+        lr: args.parse_or("lr", 0.01f32)?,
+        partitions: args.parse_or("partitions", 4usize)?,
+        seed: args.parse_or("seed", 0u64)?,
+        threads: args.parse_or("threads", groot::util::pool::default_threads())?,
+        eval_every: args.parse_or("eval-every", 10usize)?,
+        checkpoint_every: args.parse_or("checkpoint-every", 25usize)?,
+        out: Some(out.clone()),
+        resume,
+        epoch_offset,
+    };
+
+    let train_graph = datasets::build(kind, bits)?;
+    let mut val_graphs = Vec::new();
+    for &vb in &val_bits {
+        val_graphs.push((kind.stem(vb), datasets::build(kind, vb)?));
+    }
+    // Report the architecture actually trained: on --resume it comes from
+    // the checkpoint, not from --hidden.
+    let arch: Vec<usize> = match &cfg.resume {
+        Some(m) => m.layers[..m.layers.len() - 1].iter().map(|l| l.dout).collect(),
+        None => cfg.hidden.clone(),
+    };
+    println!(
+        "training on {}: {} nodes, {} partitions/epoch; validating on {:?}; \
+         model 4→{:?}→5, lr {}, seed {}",
+        kind.stem(bits),
+        train_graph.num_nodes,
+        cfg.partitions,
+        val_graphs.iter().map(|(n, _)| n.clone()).collect::<Vec<_>>(),
+        arch,
+        cfg.lr,
+        cfg.seed
+    );
+
+    let report = train::train(
+        std::slice::from_ref(&train_graph),
+        &val_graphs,
+        &cfg,
+        |e| {
+            let val = match e.val_acc {
+                Some(a) => format!("  val acc {a:.4}"),
+                None => String::new(),
+            };
+            println!(
+                "epoch {:>4}  loss {:.5}  train acc {:.4}{}  ({:.1} knodes/s)",
+                e.epoch,
+                e.loss,
+                e.train_acc,
+                val,
+                e.core_nodes as f64 / e.secs.max(1e-9) / 1e3
+            );
+        },
+    )?;
+
+    println!("\nwrote checkpoint {}", out.display());
+    for (name, acc) in &report.val_results {
+        println!("held-out {name}: accuracy {acc:.4}");
+    }
+
+    if args.flag("assert-improves") {
+        anyhow::ensure!(
+            report.final_loss() < report.first_loss(),
+            "training loss did not decrease: {} -> {}",
+            report.first_loss(),
+            report.final_loss()
+        );
+        println!(
+            "loss improved {:.5} -> {:.5} ✓",
+            report.first_loss(),
+            report.final_loss()
+        );
+    }
+
+    // Close the loop: the checkpoint must load through the exact serving
+    // path (weight bundle → NativeBackend → partitioned Session) and
+    // reproduce the trained model's accuracy on the training design.
+    let bundle = groot::util::tensor::read_bundle(&out)?;
+    let backend = groot::backend::backend_by_name(
+        "native",
+        &bundle,
+        std::path::Path::new("artifacts"),
+        usize::MAX,
+        cfg.threads,
+    )?;
+    let session = Session::new(
+        backend,
+        SessionConfig { num_partitions: cfg.partitions, ..Default::default() },
+    );
+    let res = session.classify(&train_graph)?;
+    println!(
+        "checkpoint reloaded through Session::classify: accuracy {:.4} on {}",
+        res.accuracy,
+        kind.stem(bits)
+    );
     Ok(())
 }
 

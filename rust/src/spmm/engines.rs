@@ -57,6 +57,30 @@ impl SpmmEngine for CsrRowParallel {
             }
         });
     }
+
+    fn spmm_mean_backward_into(&self, csr: &Csr, x: &[f32], dim: usize, out: &mut [f32]) {
+        // Same static row split as the forward: the transpose of a
+        // symmetric adjacency has the identical sparsity, so rows remain
+        // the natural (if skew-blind) work unit.
+        let n = csr.num_nodes();
+        assert_eq!(x.len(), n * dim);
+        assert_eq!(out.len(), n * dim);
+        out.fill(0.0);
+        if self.threads <= 1 {
+            for (v, orow) in out.chunks_exact_mut(dim).enumerate() {
+                row_backward(csr, x, dim, v, orow);
+            }
+            return;
+        }
+        let ptr = SendPtr(out.as_mut_ptr());
+        parallel_for_static(self.threads, n, |_, s, e| {
+            let ptr = &ptr;
+            for v in s..e {
+                let orow = unsafe { std::slice::from_raw_parts_mut(ptr.0.add(v * dim), dim) };
+                row_backward(csr, x, dim, v, orow);
+            }
+        });
+    }
 }
 
 /// MergePath-SpMM: nonzeros split evenly; each worker handles the rows its
@@ -73,21 +97,14 @@ impl MergePathSpmm {
     }
 }
 
-impl SpmmEngine for MergePathSpmm {
-    fn name(&self) -> &'static str {
-        "mergepath-spmm"
-    }
-
-    fn worker_loads(&self, csr: &Csr, workers: usize) -> Vec<u64> {
-        // nonzeros split exactly evenly — balanced by construction
-        let nnz = csr.num_entries() as u64;
-        let workers = workers.max(1) as u64;
-        (0..workers)
-            .map(|w| nnz / workers + u64::from(w < nnz % workers))
-            .collect()
-    }
-
-    fn spmm_mean_into(&self, csr: &Csr, x: &[f32], dim: usize, out: &mut [f32]) {
+impl MergePathSpmm {
+    /// Shared nnz-split executor — forward and backward traverse the
+    /// identical sparsity (symmetric adjacency), so the range split,
+    /// boundary-row detection, and carry merge live once; only the
+    /// per-range kernel differs (see [`range_kernel`]). Backward partials
+    /// are already column-weighted, so both directions carry-merge by
+    /// plain addition.
+    fn run(&self, csr: &Csr, x: &[f32], dim: usize, out: &mut [f32], backward: bool) {
         let n = csr.num_nodes();
         let nnz = csr.num_entries();
         assert_eq!(x.len(), n * dim);
@@ -98,8 +115,7 @@ impl SpmmEngine for MergePathSpmm {
         }
         let t = self.threads.min(nnz).max(1);
         let per = nnz.div_ceil(t);
-        // carries[worker] = (first_row, partial for first row, last_row,
-        // partial for last row) when those rows straddle range boundaries.
+        // carries[worker]: partials for rows straddling range boundaries.
         let carries: Vec<std::sync::Mutex<Vec<(usize, Vec<f32>)>>> =
             (0..t).map(|_| std::sync::Mutex::new(Vec::new())).collect();
         let ptr = SendPtr(out.as_mut_ptr());
@@ -126,31 +142,13 @@ impl SpmmEngine for MergePathSpmm {
                         continue;
                     }
                     let full = lo == csr.row_ptr[u] && hi == csr.row_ptr[u + 1];
-                    let deg = csr.row_ptr[u + 1] - csr.row_ptr[u];
-                    let inv = 1.0 / deg as f32;
                     if full {
                         let orow =
                             unsafe { std::slice::from_raw_parts_mut(ptr.0.add(u * dim), dim) };
-                        for &v in &csr.col_idx[lo..hi] {
-                            let xrow = &x[v as usize * dim..(v as usize + 1) * dim];
-                            for d in 0..dim {
-                                orow[d] += xrow[d];
-                            }
-                        }
-                        for o in orow.iter_mut() {
-                            *o *= inv;
-                        }
+                        range_kernel(csr, x, dim, u, lo, hi, orow, backward);
                     } else {
                         let mut part = vec![0.0f32; dim];
-                        for &v in &csr.col_idx[lo..hi] {
-                            let xrow = &x[v as usize * dim..(v as usize + 1) * dim];
-                            for d in 0..dim {
-                                part[d] += xrow[d];
-                            }
-                        }
-                        for p in part.iter_mut() {
-                            *p *= inv;
-                        }
+                        range_kernel(csr, x, dim, u, lo, hi, &mut part, backward);
                         local_carry.push((u, part));
                     }
                     u += 1;
@@ -167,6 +165,61 @@ impl SpmmEngine for MergePathSpmm {
                     out[u * dim + d] += part[d];
                 }
             }
+        }
+    }
+}
+
+impl SpmmEngine for MergePathSpmm {
+    fn name(&self) -> &'static str {
+        "mergepath-spmm"
+    }
+
+    fn worker_loads(&self, csr: &Csr, workers: usize) -> Vec<u64> {
+        // nonzeros split exactly evenly — balanced by construction
+        let nnz = csr.num_entries() as u64;
+        let workers = workers.max(1) as u64;
+        (0..workers)
+            .map(|w| nnz / workers + u64::from(w < nnz % workers))
+            .collect()
+    }
+
+    fn spmm_mean_into(&self, csr: &Csr, x: &[f32], dim: usize, out: &mut [f32]) {
+        self.run(csr, x, dim, out, false);
+    }
+
+    fn spmm_mean_backward_into(&self, csr: &Csr, x: &[f32], dim: usize, out: &mut [f32]) {
+        self.run(csr, x, dim, out, true);
+    }
+}
+
+/// One sub-range `[lo, hi)` of row `u`'s entries into `orow` (pre-zeroed):
+/// forward = raw neighbor sum scaled by `1/deg(u)` (the mean weight
+/// distributes over a split row, so partials scale too); backward = the
+/// column-degree-weighted gather with no row scale.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn range_kernel(
+    csr: &Csr,
+    x: &[f32],
+    dim: usize,
+    u: usize,
+    lo: usize,
+    hi: usize,
+    orow: &mut [f32],
+    backward: bool,
+) {
+    if backward {
+        weighted_accumulate(csr, x, dim, &csr.col_idx[lo..hi], orow);
+    } else {
+        for &v in &csr.col_idx[lo..hi] {
+            let xrow = &x[v as usize * dim..(v as usize + 1) * dim];
+            for d in 0..dim {
+                orow[d] += xrow[d];
+            }
+        }
+        let inv = 1.0 / csr.degree(u) as f32;
+        for o in orow.iter_mut() {
+            *o *= inv;
         }
     }
 }
@@ -218,6 +271,21 @@ impl SpmmEngine for GnnAdvisorLike {
     }
 
     fn spmm_mean_into(&self, csr: &Csr, x: &[f32], dim: usize, out: &mut [f32]) {
+        self.run(csr, x, dim, out, false);
+    }
+
+    fn spmm_mean_backward_into(&self, csr: &Csr, x: &[f32], dim: usize, out: &mut [f32]) {
+        // Identical nnz-budgeted row chunking + dynamic dispatch as the
+        // forward (the transpose keeps the sparsity), with the per-row
+        // kernel swapped for the column-degree-weighted gather.
+        self.run(csr, x, dim, out, true);
+    }
+}
+
+impl GnnAdvisorLike {
+    /// Shared executor: nnz-budgeted row chunking + dynamic dispatch, the
+    /// per-row kernel selected by direction.
+    fn run(&self, csr: &Csr, x: &[f32], dim: usize, out: &mut [f32], backward: bool) {
         let n = csr.num_nodes();
         assert_eq!(x.len(), n * dim);
         assert_eq!(out.len(), n * dim);
@@ -247,7 +315,11 @@ impl SpmmEngine for GnnAdvisorLike {
                 let (s, e) = tasks[t];
                 for u in s..e {
                     let orow = unsafe { std::slice::from_raw_parts_mut(ptr.0.add(u * dim), dim) };
-                    row_mean(csr, x, dim, u, orow);
+                    if backward {
+                        row_backward(csr, x, dim, u, orow);
+                    } else {
+                        row_mean(csr, x, dim, u, orow);
+                    }
                 }
             }
         });
@@ -295,6 +367,70 @@ fn row_mean_const<const DIM: usize>(csr: &Csr, x: &[f32], u: usize, orow: &mut [
     }
 }
 
+/// Shared per-row *backward* kernel: `orow = Σ_{u ∈ N(v)} x[u] / deg(u)`
+/// — one row of the transpose-mean SpMM. On the symmetric adjacencies the
+/// model runs on, every neighbor u has deg(u) ≥ 1 (it neighbors v back);
+/// the guard below only fires on hand-built non-symmetric CSRs, where a
+/// zero-out-degree column contributes nothing. Const-dim dispatch mirrors
+/// [`row_mean`] so the accumulator stays in registers.
+#[inline]
+pub(crate) fn row_backward(csr: &Csr, x: &[f32], dim: usize, v: usize, orow: &mut [f32]) {
+    match dim {
+        4 => row_backward_const::<4>(csr, x, v, orow),
+        8 => row_backward_const::<8>(csr, x, v, orow),
+        16 => row_backward_const::<16>(csr, x, v, orow),
+        32 => row_backward_const::<32>(csr, x, v, orow),
+        64 => row_backward_const::<64>(csr, x, v, orow),
+        _ => row_backward_dyn(csr, x, dim, v, orow),
+    }
+}
+
+#[inline]
+fn row_backward_const<const DIM: usize>(csr: &Csr, x: &[f32], v: usize, orow: &mut [f32]) {
+    let nbs = csr.neighbors(v);
+    let mut acc = [0.0f32; DIM];
+    for &u in nbs {
+        let deg = csr.degree(u as usize);
+        if deg == 0 {
+            continue;
+        }
+        let w = 1.0 / deg as f32;
+        let xrow: &[f32; DIM] = x[u as usize * DIM..(u as usize + 1) * DIM]
+            .try_into()
+            .unwrap();
+        for d in 0..DIM {
+            acc[d] += xrow[d] * w;
+        }
+    }
+    orow[..DIM].copy_from_slice(&acc);
+}
+
+#[inline]
+fn row_backward_dyn(csr: &Csr, x: &[f32], dim: usize, v: usize, orow: &mut [f32]) {
+    // one gather rule for every engine: see weighted_accumulate
+    weighted_accumulate(csr, x, dim, csr.neighbors(v), orow);
+}
+
+/// Column-degree-weighted gather over an explicit entry slice — the one
+/// copy of the backward gather rule (deg==0 guard, 1/deg weighting):
+/// [`row_backward`]'s dynamic path runs it over a whole row, MergePath
+/// over nonzero sub-ranges (partial rows accumulate into a carry buffer,
+/// full rows straight into the output row).
+#[inline]
+fn weighted_accumulate(csr: &Csr, x: &[f32], dim: usize, cols: &[u32], orow: &mut [f32]) {
+    for &u in cols {
+        let deg = csr.degree(u as usize);
+        if deg == 0 {
+            continue;
+        }
+        let w = 1.0 / deg as f32;
+        let xrow = &x[u as usize * dim..(u as usize + 1) * dim];
+        for d in 0..dim {
+            orow[d] += xrow[d] * w;
+        }
+    }
+}
+
 #[inline]
 fn row_mean_dyn(csr: &Csr, x: &[f32], dim: usize, u: usize, orow: &mut [f32]) {
     let nbs = csr.neighbors(u);
@@ -316,7 +452,9 @@ fn row_mean_dyn(csr: &Csr, x: &[f32], dim: usize, u: usize, orow: &mut [f32]) {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::spmm::test_support::check_engine_matches_reference;
+    use crate::spmm::test_support::{
+        check_engine_backward_matches_reference, check_engine_matches_reference,
+    };
 
     #[test]
     fn csr_rowparallel_matches_reference() {
@@ -335,5 +473,41 @@ mod tests {
     fn gnnadvisor_matches_reference() {
         check_engine_matches_reference(&GnnAdvisorLike::new(4));
         check_engine_matches_reference(&GnnAdvisorLike::with_budget(2, 7));
+    }
+
+    #[test]
+    fn csr_rowparallel_backward_matches_reference() {
+        check_engine_backward_matches_reference(&CsrRowParallel::new(4));
+        check_engine_backward_matches_reference(&CsrRowParallel::new(1));
+    }
+
+    #[test]
+    fn mergepath_backward_matches_reference() {
+        check_engine_backward_matches_reference(&MergePathSpmm::new(4));
+        check_engine_backward_matches_reference(&MergePathSpmm::new(3));
+        check_engine_backward_matches_reference(&MergePathSpmm::new(1));
+    }
+
+    #[test]
+    fn gnnadvisor_backward_matches_reference() {
+        check_engine_backward_matches_reference(&GnnAdvisorLike::new(4));
+        check_engine_backward_matches_reference(&GnnAdvisorLike::with_budget(2, 7));
+    }
+
+    #[test]
+    fn backward_handles_zero_out_degree_columns() {
+        // Non-symmetric CSR: node 2 appears as a column but has no row
+        // entries — its weight is 0 by the documented guard, not a panic
+        // or an inf. (Row layout: 0→{1,2}, 1→{0}, 2→{}.)
+        let csr = Csr::from_edges(3, &[(0, 1), (0, 2), (1, 0)]);
+        let x = vec![1.0f32, 10.0, 100.0];
+        let mut out = vec![f32::NAN; 3];
+        let engine = CsrRowParallel::new(1);
+        engine.spmm_mean_backward_into(&csr, &x, 1, &mut out);
+        // out[v] = Σ_{u ∈ row v} x[u]/deg(u):
+        //   v=0: x[1]/deg(1) + x[2]/deg(2)=skip → 10.0
+        //   v=1: x[0]/deg(0) = 1.0/2
+        //   v=2: (no entries) = 0
+        assert_eq!(out, vec![10.0, 0.5, 0.0]);
     }
 }

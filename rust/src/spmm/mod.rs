@@ -47,6 +47,27 @@ pub trait SpmmEngine: Sync {
         y
     }
 
+    /// Transpose-mean SpMM — the backward of [`SpmmEngine::spmm_mean_into`]:
+    /// `out[v] = Σ_{u ∈ N(v)} x[u] / deg(u)`, i.e. `out = (D⁻¹A)ᵀ x`
+    /// (= `A D⁻¹ x` on the symmetric adjacencies this crate uses). This is
+    /// the aggregation gradient every GraphSAGE layer's backward pass runs
+    /// once per layer during training; like the forward, every element of
+    /// `out` (row-major `[n × dim]`) is overwritten and engines never
+    /// allocate the output.
+    ///
+    /// Engines override this with their own work-partitioning strategy —
+    /// the default is the single-threaded reference loop so third-party
+    /// engines stay source-compatible.
+    fn spmm_mean_backward_into(&self, csr: &Csr, x: &[f32], dim: usize, out: &mut [f32]) {
+        let n = csr.num_nodes();
+        assert_eq!(x.len(), n * dim);
+        assert_eq!(out.len(), n * dim);
+        out.fill(0.0);
+        for (v, orow) in out.chunks_exact_mut(dim).enumerate() {
+            engines::row_backward(csr, x, dim, v, orow);
+        }
+    }
+
     /// Nonzeros processed per worker if this strategy ran on `workers`
     /// parallel lanes — the quantity the paper's GPU speedups derive
     /// from. Containers without real parallelism (this one has 1 CPU)
@@ -103,6 +124,33 @@ pub fn all_engines(threads: usize) -> Vec<Box<dyn SpmmEngine>> {
 }
 
 #[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Engine implementing only the required methods — pins the trait's
+    /// default (serial reference) `spmm_mean_backward_into` so third-party
+    /// engines get a correct backward for free.
+    struct MinimalEngine;
+
+    impl SpmmEngine for MinimalEngine {
+        fn name(&self) -> &'static str {
+            "minimal"
+        }
+        fn spmm_mean_into(&self, csr: &Csr, x: &[f32], dim: usize, out: &mut [f32]) {
+            out.copy_from_slice(&csr.spmm_mean_reference(x, dim));
+        }
+        fn worker_loads(&self, csr: &Csr, workers: usize) -> Vec<u64> {
+            vec![csr.num_entries() as u64; workers.max(1)]
+        }
+    }
+
+    #[test]
+    fn default_backward_matches_reference() {
+        test_support::check_engine_backward_matches_reference(&MinimalEngine);
+    }
+}
+
+#[cfg(test)]
 pub(crate) mod test_support {
     use super::*;
     use crate::util::rng::Rng;
@@ -148,6 +196,35 @@ pub(crate) mod test_support {
             assert!(
                 diff < 1e-4,
                 "{} (into): n={n} hubs={hubs} dim={dim}: max diff {diff}",
+                engine.name()
+            );
+        }
+    }
+
+    /// Backward (transpose-mean) counterpart of
+    /// [`check_engine_matches_reference`]: same polarized shapes, checked
+    /// against [`Csr::spmm_mean_backward_reference`], including the
+    /// fully-overwrites-a-poisoned-buffer contract. Tolerance is scaled
+    /// by the result's magnitude: unlike the forward, backward rows are
+    /// unnormalized weighted sums (a hub row accumulates hundreds of
+    /// terms), so engines that split rows across workers legitimately
+    /// round differently than the serial reference.
+    pub fn check_engine_backward_matches_reference(engine: &dyn SpmmEngine) {
+        let mut rng = Rng::new(0xBACC);
+        for (n, hubs, hub_deg, dim) in
+            [(50, 2, 30, 4), (300, 3, 200, 8), (1000, 4, 700, 32), (64, 0, 0, 1)]
+        {
+            let csr = polarized_graph(&mut rng, n, hubs, hub_deg);
+            let x: Vec<f32> = (0..n * dim).map(|_| rng.f32() * 4.0 - 2.0).collect();
+            let want = csr.spmm_mean_backward_reference(&x, dim);
+            let mut got = vec![1e30f32; n * dim];
+            engine.spmm_mean_backward_into(&csr, &x, dim, &mut got);
+            let diff = Csr::max_abs_diff(&got, &want);
+            let scale = want.iter().fold(1.0f32, |m, &v| m.max(v.abs()));
+            assert!(
+                diff < 1e-4 * scale,
+                "{} (backward): n={n} hubs={hubs} dim={dim}: max diff {diff} \
+                 (scale {scale})",
                 engine.name()
             );
         }

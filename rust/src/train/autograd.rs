@@ -1,0 +1,345 @@
+//! Reverse-mode gradients for [`SageModel`] — a hand-rolled tape for the
+//! one architecture this crate runs.
+//!
+//! The inference forward ([`SageModel::forward_with`]) ping-pongs
+//! activations and therefore destroys exactly what the backward pass
+//! needs, so training runs [`forward_tape`]: the same math, but every
+//! layer's input `h⁽ˡ⁾` and aggregated input `agg⁽ˡ⁾ = D⁻¹A h⁽ˡ⁾` is
+//! retained in a [`TrainScratch`] tape. [`backward`] then walks the
+//! layers in reverse:
+//!
+//! ```text
+//! dz⁽ˡ⁾        = dL/dh⁽ˡ⁺¹⁾ ⊙ 1[h⁽ˡ⁺¹⁾ > 0]      (mask skipped on the last layer)
+//! dW_self⁽ˡ⁾  += h⁽ˡ⁾ᵀ · dz⁽ˡ⁾
+//! dW_neigh⁽ˡ⁾ += agg⁽ˡ⁾ᵀ · dz⁽ˡ⁾
+//! db⁽ˡ⁾       += colsum(dz⁽ˡ⁾)
+//! dL/dh⁽ˡ⁾     = dz⁽ˡ⁾·W_selfᵀ + (D⁻¹A)ᵀ(dz⁽ˡ⁾·W_neighᵀ)
+//! ```
+//!
+//! The `(D⁻¹A)ᵀ` product is
+//! [`SpmmEngine::spmm_mean_backward_into`] — the transpose-mean SpMM every
+//! engine implements with its own work-partitioning strategy, so the
+//! training hot loop rides the same kernels the paper benchmarks.
+//!
+//! [`TrainScratch`] extends the inference [`ForwardScratch`] arena with
+//! the tape and three grow-only gradient buffers; like inference, a warm
+//! train step performs no heap allocation (`buffer_ptrs` lets tests pin
+//! this).
+
+use crate::gnn::{
+    colsum_add, matmul_abt_add, matmul_add, matmul_at_b_add, ForwardScratch, SageModel,
+};
+use crate::graph::Csr;
+use crate::spmm::SpmmEngine;
+
+/// Per-layer parameter gradients, shaped exactly like the layer.
+#[derive(Clone, Debug)]
+pub struct LayerGrads {
+    pub w_self: Vec<f32>,
+    pub w_neigh: Vec<f32>,
+    pub bias: Vec<f32>,
+}
+
+/// Gradients for a whole model (also reused as Adam's moment buffers).
+#[derive(Clone, Debug)]
+pub struct GradBuffers {
+    pub layers: Vec<LayerGrads>,
+}
+
+impl GradBuffers {
+    pub fn zeros_like(model: &SageModel) -> GradBuffers {
+        GradBuffers {
+            layers: model
+                .layers
+                .iter()
+                .map(|l| LayerGrads {
+                    w_self: vec![0.0; l.w_self.len()],
+                    w_neigh: vec![0.0; l.w_neigh.len()],
+                    bias: vec![0.0; l.bias.len()],
+                })
+                .collect(),
+        }
+    }
+
+    pub fn zero(&mut self) {
+        for l in &mut self.layers {
+            l.w_self.fill(0.0);
+            l.w_neigh.fill(0.0);
+            l.bias.fill(0.0);
+        }
+    }
+}
+
+/// Training arena: the inference [`ForwardScratch`] (used verbatim for
+/// validation forward passes) extended with the activation tape and the
+/// gradient ping-pong buffers. All buffers grow on demand and never
+/// shrink — after the first step at a given (nodes × width), forward-tape
+/// + backward run allocation-free.
+#[derive(Debug, Default)]
+pub struct TrainScratch {
+    /// Plain inference arena for validation / eval passes.
+    pub fwd: ForwardScratch,
+    /// `acts[l]` = layer-l input `h⁽ˡ⁾` ([n × din_l]); `acts[L]` = logits.
+    acts: Vec<Vec<f32>>,
+    /// `aggs[l]` = `D⁻¹A h⁽ˡ⁾` ([n × din_l]).
+    aggs: Vec<Vec<f32>>,
+    /// Gradient w.r.t. the current layer's output (ping).
+    grad: Vec<f32>,
+    /// Gradient w.r.t. the current layer's input (pong).
+    grad_next: Vec<f32>,
+    /// `dz·W_neighᵀ` staging before the transpose-mean SpMM.
+    tmp: Vec<f32>,
+    /// Layer count of the model behind the current tape — `acts[layers]`
+    /// holds the logits even when the (grow-only) tape is longer because
+    /// the scratch previously served a deeper model.
+    layers: usize,
+}
+
+fn reserve(buf: &mut Vec<f32>, len: usize) {
+    if buf.len() < len {
+        buf.resize(len, 0.0);
+    }
+}
+
+impl TrainScratch {
+    pub fn new() -> TrainScratch {
+        TrainScratch::default()
+    }
+
+    /// Size the tape for `model` on an `n`-node graph.
+    fn reserve_for(&mut self, model: &SageModel, n: usize) {
+        let nl = model.layers.len();
+        if self.acts.len() < nl + 1 {
+            self.acts.resize_with(nl + 1, Vec::new);
+        }
+        if self.aggs.len() < nl {
+            self.aggs.resize_with(nl, Vec::new);
+        }
+        reserve(&mut self.acts[0], n * model.input_dim());
+        for (l, layer) in model.layers.iter().enumerate() {
+            reserve(&mut self.aggs[l], n * layer.din);
+            reserve(&mut self.acts[l + 1], n * layer.dout);
+        }
+        let widest = n * model.max_width();
+        reserve(&mut self.grad, widest);
+        reserve(&mut self.grad_next, widest);
+        reserve(&mut self.tmp, widest);
+    }
+
+    /// The logits of the last [`forward_tape`] (first `n × classes` of the
+    /// final tape slot).
+    pub fn logits(&self, n: usize, classes: usize) -> &[f32] {
+        &self.acts[self.layers][..n * classes]
+    }
+
+    /// Split borrow for the loss: (logits, dL/dlogits) — the gradient
+    /// slice is the ping buffer [`backward`] consumes.
+    pub fn loss_views(&mut self, n: usize, classes: usize) -> (&[f32], &mut [f32]) {
+        let TrainScratch { acts, grad, layers, .. } = self;
+        let logits = &acts[*layers][..n * classes];
+        (logits, &mut grad[..n * classes])
+    }
+
+    /// Tape accessor (tests/diagnostics): the activation buffer for
+    /// `layer` — 0 is the input features, `model.layers.len()` the
+    /// logits; hidden slots hold post-ReLU values, whose sign pattern a
+    /// finite-difference gradcheck uses to detect kink crossings.
+    pub fn tape_act(&self, layer: usize) -> &[f32] {
+        &self.acts[layer]
+    }
+
+    /// Sorted base pointers of every arena buffer — lets tests assert the
+    /// warm backward path does not reallocate.
+    pub fn buffer_ptrs(&self) -> Vec<*const f32> {
+        let mut p: Vec<*const f32> = self
+            .acts
+            .iter()
+            .chain(self.aggs.iter())
+            .map(|b| b.as_ptr())
+            .chain([self.grad.as_ptr(), self.grad_next.as_ptr(), self.tmp.as_ptr()])
+            .collect();
+        p.sort();
+        p
+    }
+}
+
+/// Taped forward pass: identical numbers to [`SageModel::forward_with`]
+/// (same matmul and SpMM kernels, same ReLU placement), but every layer's
+/// input and aggregation is retained in `scratch` for [`backward`].
+/// Returns nothing — read the logits via [`TrainScratch::logits`] /
+/// [`TrainScratch::loss_views`].
+pub fn forward_tape(
+    model: &SageModel,
+    csr: &Csr,
+    features: &[f32],
+    engine: &dyn SpmmEngine,
+    scratch: &mut TrainScratch,
+) {
+    let n = csr.num_nodes();
+    assert_eq!(features.len(), n * model.input_dim());
+    scratch.reserve_for(model, n);
+    scratch.layers = model.layers.len();
+    scratch.acts[0][..features.len()].copy_from_slice(features);
+    let nl = model.layers.len();
+    for (l, layer) in model.layers.iter().enumerate() {
+        // Tape slots are distinct Vecs, so disjoint indices split-borrow.
+        let (head, tail) = scratch.acts.split_at_mut(l + 1);
+        let h = &head[l][..n * layer.din];
+        let out = &mut tail[0][..n * layer.dout];
+        let agg = &mut scratch.aggs[l][..n * layer.din];
+        engine.spmm_mean_into(csr, h, layer.din, agg);
+        out.fill(0.0);
+        matmul_add(h, &layer.w_self, out, n, layer.din, layer.dout);
+        matmul_add(agg, &layer.w_neigh, out, n, layer.din, layer.dout);
+        for row in out.chunks_exact_mut(layer.dout) {
+            for (d, v) in row.iter_mut().enumerate() {
+                *v += layer.bias[d];
+            }
+        }
+        if l + 1 < nl {
+            for v in out.iter_mut() {
+                if *v < 0.0 {
+                    *v = 0.0;
+                }
+            }
+        }
+    }
+}
+
+/// Reverse pass over the tape recorded by [`forward_tape`]. Consumes
+/// `dL/dlogits` from the scratch ping buffer (written there by the loss
+/// via [`TrainScratch::loss_views`]) and ACCUMULATES parameter gradients
+/// into `grads` (callers zero between steps).
+pub fn backward(
+    model: &SageModel,
+    csr: &Csr,
+    engine: &dyn SpmmEngine,
+    scratch: &mut TrainScratch,
+    grads: &mut GradBuffers,
+) {
+    let n = csr.num_nodes();
+    assert_eq!(grads.layers.len(), model.layers.len());
+    let nl = model.layers.len();
+    let TrainScratch { acts, aggs, grad, grad_next, tmp, .. } = scratch;
+    for l in (0..nl).rev() {
+        let layer = &model.layers[l];
+        let g = &mut grad[..n * layer.dout];
+        if l + 1 < nl {
+            // dz = dL/dh⁽ˡ⁺¹⁾ ⊙ relu'(z): post-activation h⁽ˡ⁺¹⁾ > 0 marks
+            // the pass-through entries (ties at exactly 0 use gradient 0,
+            // the standard subgradient choice).
+            for (gv, &hv) in g.iter_mut().zip(&acts[l + 1][..n * layer.dout]) {
+                if hv <= 0.0 {
+                    *gv = 0.0;
+                }
+            }
+        }
+        let lg = &mut grads.layers[l];
+        matmul_at_b_add(&acts[l][..n * layer.din], g, &mut lg.w_self, n, layer.din, layer.dout);
+        matmul_at_b_add(&aggs[l][..n * layer.din], g, &mut lg.w_neigh, n, layer.din, layer.dout);
+        colsum_add(g, &mut lg.bias, n, layer.dout);
+        if l > 0 {
+            // dh = dz·W_selfᵀ + (D⁻¹A)ᵀ(dz·W_neighᵀ)
+            let t = &mut tmp[..n * layer.din];
+            t.fill(0.0);
+            matmul_abt_add(g, &layer.w_neigh, t, n, layer.din, layer.dout);
+            let gn = &mut grad_next[..n * layer.din];
+            engine.spmm_mean_backward_into(csr, t, layer.din, gn);
+            matmul_abt_add(g, &layer.w_self, gn, n, layer.din, layer.dout);
+            std::mem::swap(grad, grad_next);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gnn::SageLayer;
+    use crate::spmm::CsrRowParallel;
+
+    fn model2() -> SageModel {
+        SageModel {
+            layers: vec![
+                SageLayer {
+                    din: 2,
+                    dout: 3,
+                    w_self: vec![0.5, -0.25, 1.0, 0.75, 0.1, -0.6],
+                    w_neigh: vec![-0.3, 0.2, 0.4, 0.9, -0.8, 0.05],
+                    bias: vec![0.1, -0.2, 0.3],
+                },
+                SageLayer {
+                    din: 3,
+                    dout: 2,
+                    w_self: vec![1.0, 0.0, 0.0, 1.0, 0.5, -0.5],
+                    w_neigh: vec![0.2, 0.2, -0.1, 0.3, 0.0, 0.7],
+                    bias: vec![0.0, 0.25],
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn forward_tape_matches_inference_forward() {
+        let model = model2();
+        let csr = Csr::symmetric_from_edges(4, &[(0, 1), (1, 2), (2, 3), (3, 0)]);
+        let x: Vec<f32> = (0..8).map(|i| i as f32 * 0.5 - 1.0).collect();
+        let engine = CsrRowParallel::new(1);
+        let want = model.forward(&csr, &x, &engine);
+        let mut scratch = TrainScratch::new();
+        forward_tape(&model, &csr, &x, &engine, &mut scratch);
+        assert_eq!(scratch.logits(4, 2), &want[..]);
+    }
+
+    #[test]
+    fn warm_steps_do_not_reallocate_the_arena() {
+        let model = model2();
+        let csr = Csr::symmetric_from_edges(5, &[(0, 1), (1, 2), (2, 3), (3, 4)]);
+        let x = vec![0.25f32; 10];
+        let engine = CsrRowParallel::new(1);
+        let mut scratch = TrainScratch::new();
+        let mut grads = GradBuffers::zeros_like(&model);
+        let step = |scratch: &mut TrainScratch, grads: &mut GradBuffers| {
+            forward_tape(&model, &csr, &x, &engine, scratch);
+            let (_, dlogits) = scratch.loss_views(5, 2);
+            for (i, d) in dlogits.iter_mut().enumerate() {
+                *d = (i as f32 * 0.1).sin();
+            }
+            grads.zero();
+            backward(&model, &csr, &engine, scratch, grads);
+        };
+        step(&mut scratch, &mut grads);
+        let ptrs = scratch.buffer_ptrs();
+        step(&mut scratch, &mut grads);
+        step(&mut scratch, &mut grads);
+        assert_eq!(ptrs, scratch.buffer_ptrs(), "training arena reallocated when warm");
+    }
+
+    #[test]
+    fn single_linear_layer_gradients_are_exact() {
+        // One layer, no neighbors (empty graph ⇒ agg = 0), identity-free
+        // weights: logits = x·W + b, dL/dlogits = g ⇒ dW = xᵀg, db = Σg.
+        let model = SageModel {
+            layers: vec![SageLayer {
+                din: 2,
+                dout: 2,
+                w_self: vec![1.0, 2.0, 3.0, 4.0],
+                w_neigh: vec![0.0; 4],
+                bias: vec![0.0, 0.0],
+            }],
+        };
+        let csr = Csr::symmetric_from_edges(2, &[]);
+        let x = vec![1.0, 2.0, 3.0, 4.0];
+        let engine = CsrRowParallel::new(1);
+        let mut scratch = TrainScratch::new();
+        forward_tape(&model, &csr, &x, &engine, &mut scratch);
+        let (_, dlogits) = scratch.loss_views(2, 2);
+        dlogits.copy_from_slice(&[1.0, 0.0, 0.0, 1.0]);
+        let mut grads = GradBuffers::zeros_like(&model);
+        backward(&model, &csr, &engine, &mut scratch, &mut grads);
+        // dW_self = xᵀ·g = [[1,3],[2,4]]ᵀ... x rows [1,2],[3,4]; g rows
+        // [1,0],[0,1] ⇒ dW[i][j] = Σ_u x[u,i] g[u,j] = [[1,3],[2,4]]
+        assert_eq!(grads.layers[0].w_self, vec![1.0, 3.0, 2.0, 4.0]);
+        assert_eq!(grads.layers[0].bias, vec![1.0, 1.0]);
+        assert_eq!(grads.layers[0].w_neigh, vec![0.0; 4]);
+    }
+}

@@ -1,0 +1,109 @@
+//! Checkpointing to the GRTW weight-bundle format.
+//!
+//! A checkpoint IS a weight bundle: the same `l{i}.w_self` /
+//! `l{i}.w_neigh` / `l{i}.b` tensors [`SageModel::from_bundle`] reads
+//! (plus a `meta.epoch` record, which `from_bundle` ignores), so a
+//! trained checkpoint loads directly into `Session` / `NativeBackend` /
+//! the python compile path with no conversion step. Bundles serialize
+//! from a BTreeMap, so equal models produce byte-identical files — the
+//! property the seed-determinism test pins.
+
+use crate::gnn::SageModel;
+use crate::util::tensor::{read_bundle, write_bundle, Bundle, Tensor};
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Model → bundle with the exact tensor names [`SageModel::from_bundle`]
+/// expects.
+pub fn model_to_bundle(model: &SageModel) -> Bundle {
+    let mut b = Bundle::new();
+    for (i, l) in model.layers.iter().enumerate() {
+        b.insert(
+            format!("l{i}.w_self"),
+            Tensor::f32(vec![l.din, l.dout], l.w_self.clone()),
+        );
+        b.insert(
+            format!("l{i}.w_neigh"),
+            Tensor::f32(vec![l.din, l.dout], l.w_neigh.clone()),
+        );
+        b.insert(format!("l{i}.b"), Tensor::f32(vec![l.dout], l.bias.clone()));
+    }
+    b
+}
+
+/// Write a training checkpoint: the weight bundle plus a `meta.epoch`
+/// marker (how far training had progressed when this was written).
+pub fn save(path: &Path, model: &SageModel, epoch: usize) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)
+                .with_context(|| format!("create {}", parent.display()))?;
+        }
+    }
+    let mut bundle = model_to_bundle(model);
+    bundle.insert("meta.epoch".into(), Tensor::i32(vec![1], vec![epoch as i32]));
+    write_bundle(path, &bundle).with_context(|| format!("write checkpoint {}", path.display()))
+}
+
+/// Load a checkpoint (or any plain weight bundle): the model plus the
+/// recorded epoch, if present.
+pub fn load(path: &Path) -> Result<(SageModel, Option<usize>)> {
+    let bundle = read_bundle(path)?;
+    let model = SageModel::from_bundle(&bundle)
+        .with_context(|| format!("checkpoint {} has no model layers", path.display()))?;
+    let epoch = bundle
+        .get("meta.epoch")
+        .and_then(|t| t.as_i32().ok().and_then(|v| v.first().copied()))
+        .map(|e| e.max(0) as usize);
+    Ok((model, epoch))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::train::optim::init_model;
+
+    #[test]
+    fn roundtrip_preserves_model_and_epoch() {
+        let model = init_model(&[4, 8, 5], 3);
+        let dir = std::env::temp_dir().join("groot_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ckpt.bin");
+        save(&path, &model, 17).unwrap();
+        let (back, epoch) = load(&path).unwrap();
+        assert_eq!(epoch, Some(17));
+        assert_eq!(back.layers.len(), model.layers.len());
+        for (a, b) in back.layers.iter().zip(&model.layers) {
+            assert_eq!(a.w_self, b.w_self);
+            assert_eq!(a.w_neigh, b.w_neigh);
+            assert_eq!(a.bias, b.bias);
+        }
+    }
+
+    #[test]
+    fn checkpoint_loads_as_plain_weight_bundle() {
+        // The inference loader must accept a training checkpoint verbatim
+        // (meta.* ignored) — this is the train→verify seam.
+        let model = init_model(&[4, 16, 5], 11);
+        let dir = std::env::temp_dir().join("groot_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("as_weights.bin");
+        save(&path, &model, 2).unwrap();
+        let bundle = read_bundle(&path).unwrap();
+        let m = SageModel::from_bundle(&bundle).unwrap();
+        assert_eq!(m.input_dim(), 4);
+        assert_eq!(m.num_classes(), 5);
+        assert_eq!(m.layers[0].w_self, model.layers[0].w_self);
+    }
+
+    #[test]
+    fn equal_models_write_identical_bytes() {
+        let dir = std::env::temp_dir().join("groot_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p1 = dir.join("a.bin");
+        let p2 = dir.join("b.bin");
+        save(&p1, &init_model(&[4, 8, 5], 5), 2).unwrap();
+        save(&p2, &init_model(&[4, 8, 5], 5), 2).unwrap();
+        assert_eq!(std::fs::read(&p1).unwrap(), std::fs::read(&p2).unwrap());
+    }
+}

@@ -1,0 +1,227 @@
+//! Partition-aware dataloader — mini-batches are re-grown sub-graphs,
+//! exactly the units inference executes.
+//!
+//! The loader reuses the serving pipeline's stage objects
+//! ([`PreparedGraph`] → [`PartitionPlan`]) rather than re-implementing
+//! partitioning: each non-empty [`PlannedPartition`] (core nodes + Alg.-1
+//! boundary, local CSR, gathered features) becomes one batch, augmented
+//! with the per-node labels the plan doesn't carry. Training therefore
+//! sees the same local adjacencies, the same core/boundary split, and the
+//! same feature gather as `Session::classify` — the train→verify loop is
+//! closed over identical tensors.
+//!
+//! Epoch order is a seeded Fisher–Yates shuffle, so a (seed, partition
+//! count) pair fully determines the batch sequence.
+
+use crate::coordinator::{PlanOptions, PreparedGraph};
+use crate::features::{EdaGraph, GROOT_FEATURE_DIM};
+use crate::graph::Csr;
+use crate::util::rng::Rng;
+
+/// One mini-batch: a re-grown partition plus labels in local node order
+/// (core first — the loss only counts rows `0..num_core`; boundary rows
+/// are feature providers, mirroring inference stitching).
+#[derive(Clone, Debug)]
+pub struct PartitionBatch {
+    /// (graph index, partition id) provenance for logging.
+    pub graph_idx: usize,
+    pub part_id: usize,
+    /// Local symmetric adjacency (core nodes first).
+    pub csr: Csr,
+    /// Row-major `[nodes × GROOT_FEATURE_DIM]`.
+    pub features: Vec<f32>,
+    /// Ground-truth class per local node.
+    pub labels: Vec<u8>,
+    /// Locals `0..num_core` are loss-bearing core nodes.
+    pub num_core: usize,
+}
+
+impl PartitionBatch {
+    pub fn num_nodes(&self) -> usize {
+        self.csr.num_nodes()
+    }
+}
+
+/// Shuffling loader over the partition batches of one or more graphs.
+pub struct Dataloader {
+    batches: Vec<PartitionBatch>,
+    order: Vec<usize>,
+    rng: Rng,
+    /// Core (loss-bearing) nodes per epoch, Σ over batches.
+    core_nodes: usize,
+}
+
+impl Dataloader {
+    /// Plan every graph at `partitions` with Algorithm-1 re-growth and
+    /// turn the partitions into labeled batches. `partitions = 1` yields
+    /// one full-graph batch per graph (no boundary).
+    pub fn new(graphs: &[EdaGraph], partitions: usize, seed: u64) -> Dataloader {
+        let mut batches = Vec::new();
+        for (gi, g) in graphs.iter().enumerate() {
+            let prepared = PreparedGraph::new(g);
+            let plan =
+                prepared.plan(&PlanOptions { partitions: partitions.max(1), regrow: true, seed });
+            let labels = g.labels_u8();
+            for part in plan.parts {
+                if part.nodes.is_empty() {
+                    continue;
+                }
+                let local_labels: Vec<u8> =
+                    part.nodes.iter().map(|&gid| labels[gid as usize]).collect();
+                batches.push(PartitionBatch {
+                    graph_idx: gi,
+                    part_id: part.part_id,
+                    csr: part.csr,
+                    features: part.features,
+                    labels: local_labels,
+                    num_core: part.num_core,
+                });
+            }
+        }
+        let core_nodes = batches.iter().map(|b| b.num_core).sum();
+        let order = (0..batches.len()).collect();
+        Dataloader {
+            batches,
+            order,
+            // decorrelate the shuffle stream from the partitioner seed
+            rng: Rng::new(seed ^ 0x9E37_79B9_7F4A_7C15),
+            core_nodes,
+        }
+    }
+
+    pub fn num_batches(&self) -> usize {
+        self.batches.len()
+    }
+
+    pub fn core_nodes(&self) -> usize {
+        self.core_nodes
+    }
+
+    pub fn batches(&self) -> &[PartitionBatch] {
+        &self.batches
+    }
+
+    /// Reshuffle for a new epoch (deterministic given the construction
+    /// seed and call count).
+    pub fn shuffle_epoch(&mut self) {
+        let Dataloader { order, rng, .. } = self;
+        rng.shuffle(order);
+    }
+
+    /// Batches in the current epoch order.
+    pub fn iter(&self) -> impl Iterator<Item = &PartitionBatch> + '_ {
+        self.order.iter().map(|&i| &self.batches[i])
+    }
+
+    /// Epoch-order iteration with each batch's STABLE index (0..num_batches)
+    /// — the trainer keys per-batch resources (one SpMM engine per batch,
+    /// so each engine's cached plan matches its one CSR forever) off this
+    /// index, which shuffling does not change.
+    pub fn iter_indexed(&self) -> impl Iterator<Item = (usize, &PartitionBatch)> + '_ {
+        self.order.iter().map(|&i| (i, &self.batches[i]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::{self, DatasetKind};
+
+    fn graph() -> EdaGraph {
+        datasets::build(DatasetKind::Csa, 5).unwrap()
+    }
+
+    #[test]
+    fn batches_cover_core_nodes_exactly_once() {
+        let g = graph();
+        let loader = Dataloader::new(std::slice::from_ref(&g), 4, 0);
+        // the plan's core cover is a partition of the graph, so the loss
+        // sees every node exactly once per epoch
+        assert_eq!(loader.core_nodes(), g.num_nodes);
+        let total: usize = loader.batches().iter().map(|b| b.num_core).sum();
+        assert_eq!(total, g.num_nodes);
+        for b in loader.batches() {
+            assert_eq!(b.features.len(), b.num_nodes() * GROOT_FEATURE_DIM);
+            assert_eq!(b.labels.len(), b.num_nodes());
+            assert!(b.num_core <= b.num_nodes());
+        }
+    }
+
+    #[test]
+    fn batch_tensors_match_the_serving_plan() {
+        // The loader must hand training the SAME local CSR + features the
+        // inference plan executes.
+        let g = graph();
+        let prepared = PreparedGraph::new(&g);
+        let plan = prepared.plan(&PlanOptions { partitions: 3, regrow: true, seed: 7 });
+        let loader = Dataloader::new(std::slice::from_ref(&g), 3, 7);
+        let live: Vec<_> = plan.parts.iter().filter(|p| !p.nodes.is_empty()).collect();
+        assert_eq!(loader.num_batches(), live.len());
+        let labels = g.labels_u8();
+        for (b, p) in loader.batches().iter().zip(&live) {
+            assert_eq!(b.part_id, p.part_id);
+            assert_eq!(b.num_core, p.num_core);
+            assert_eq!(b.csr, p.csr);
+            assert_eq!(b.features, p.features);
+            for (l, &gid) in b.labels.iter().zip(&p.nodes) {
+                assert_eq!(*l, labels[gid as usize]);
+            }
+        }
+    }
+
+    #[test]
+    fn shuffle_is_seeded_and_reorders() {
+        let g = graph();
+        let mk = |seed| {
+            let mut l = Dataloader::new(std::slice::from_ref(&g), 8, seed);
+            l.shuffle_epoch();
+            l.iter().map(|b| b.part_id).collect::<Vec<_>>()
+        };
+        assert_eq!(mk(1), mk(1), "same seed must give the same epoch order");
+        // across epochs the order changes (8 parts ⇒ astronomically
+        // unlikely to repeat identically twice in a row)
+        let mut l = Dataloader::new(std::slice::from_ref(&g), 8, 1);
+        l.shuffle_epoch();
+        let e1: Vec<_> = l.iter().map(|b| b.part_id).collect();
+        l.shuffle_epoch();
+        let e2: Vec<_> = l.iter().map(|b| b.part_id).collect();
+        assert_ne!(e1, e2, "epoch order did not change");
+        // every batch appears exactly once per epoch
+        let mut sorted = e1.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn iter_indexed_yields_stable_batch_indices() {
+        let g = graph();
+        let mut l = Dataloader::new(std::slice::from_ref(&g), 4, 0);
+        l.shuffle_epoch();
+        for (bi, b) in l.iter_indexed() {
+            // the index must identify the batch regardless of epoch order
+            assert!(std::ptr::eq(b, &l.batches()[bi]));
+        }
+        let n: usize = l.iter_indexed().count();
+        assert_eq!(n, l.num_batches());
+    }
+
+    #[test]
+    fn multiple_graphs_concatenate() {
+        let g1 = datasets::build(DatasetKind::Csa, 4).unwrap();
+        let g2 = datasets::build(DatasetKind::Csa, 5).unwrap();
+        let loader = Dataloader::new(&[g1.clone(), g2.clone()], 2, 0);
+        assert_eq!(loader.core_nodes(), g1.num_nodes + g2.num_nodes);
+        assert!(loader.batches().iter().any(|b| b.graph_idx == 0));
+        assert!(loader.batches().iter().any(|b| b.graph_idx == 1));
+    }
+
+    #[test]
+    fn single_partition_is_full_graph_no_boundary() {
+        let g = graph();
+        let loader = Dataloader::new(std::slice::from_ref(&g), 1, 0);
+        assert_eq!(loader.num_batches(), 1);
+        let b = &loader.batches()[0];
+        assert_eq!(b.num_core, g.num_nodes);
+        assert_eq!(b.num_nodes(), g.num_nodes);
+    }
+}

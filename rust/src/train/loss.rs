@@ -1,0 +1,179 @@
+//! Softmax cross-entropy with class weighting.
+//!
+//! AIG node labels are heavily skewed — plain ANDs and PIs dominate while
+//! PO/MAJ/XOR (the classes the verifier actually keys on) are a small
+//! minority — so every row's loss and gradient is scaled by an
+//! inverse-frequency class weight and the batch is normalized by the sum
+//! of the weights it saw (a weighted mean). Boundary rows of a re-grown
+//! partition are feature providers only: their gradient is zeroed, which
+//! is exactly the stitching rule inference applies to their predictions.
+
+/// Balanced inverse-frequency weights from a label population:
+/// `w_c = N / (C_present · n_c)` (0 for absent classes), so a perfectly
+/// balanced dataset gets all-ones and a rare class counts proportionally
+/// more. Computed once from the full training graphs, not per batch.
+pub fn class_weights(labels: &[u8], num_classes: usize) -> Vec<f32> {
+    let mut counts = vec![0usize; num_classes];
+    for &l in labels {
+        counts[l as usize] += 1;
+    }
+    let present = counts.iter().filter(|&&c| c > 0).count().max(1);
+    let total = labels.len();
+    counts
+        .iter()
+        .map(|&c| {
+            if c == 0 {
+                0.0
+            } else {
+                total as f32 / (present as f32 * c as f32)
+            }
+        })
+        .collect()
+}
+
+/// Batch loss summary. `loss_sum` is the un-normalized Σ w·nll and
+/// `weight_sum` its normalizer, so multi-batch epochs aggregate exactly
+/// (`epoch loss = Σ loss_sum / Σ weight_sum`); `correct`/`counted` give
+/// unweighted core-node accuracy.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LossOut {
+    pub loss_sum: f64,
+    pub weight_sum: f64,
+    pub correct: usize,
+    pub counted: usize,
+}
+
+/// Weighted softmax cross-entropy over the first `num_core` rows of
+/// `logits` ([n × classes], labels in local row order). Writes
+/// `dL/dlogits` for ALL n rows into `dlogits` — boundary rows get zeros —
+/// already normalized by the batch weight sum, so [`super::autograd::backward`]
+/// consumes it directly.
+pub fn softmax_xent(
+    logits: &[f32],
+    labels: &[u8],
+    num_core: usize,
+    classes: usize,
+    weights: &[f32],
+    dlogits: &mut [f32],
+) -> LossOut {
+    assert!(classes > 0);
+    assert_eq!(logits.len() % classes, 0);
+    let n = logits.len() / classes;
+    assert_eq!(dlogits.len(), logits.len());
+    assert!(num_core <= n, "num_core {num_core} > {n} rows");
+    assert!(labels.len() >= num_core);
+    assert_eq!(weights.len(), classes);
+
+    let mut out = LossOut::default();
+    for i in 0..n {
+        let row = &logits[i * classes..(i + 1) * classes];
+        let drow = &mut dlogits[i * classes..(i + 1) * classes];
+        if i >= num_core {
+            drow.fill(0.0);
+            continue;
+        }
+        let y = labels[i] as usize;
+        assert!(y < classes, "label {y} out of range");
+        let w = weights[y];
+        // Numerically stable softmax: exponentials of max-shifted logits.
+        let maxv = row.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+        let mut denom = 0.0f32;
+        for (d, &v) in drow.iter_mut().zip(row) {
+            let e = (v - maxv).exp();
+            *d = e;
+            denom += e;
+        }
+        let inv = 1.0 / denom;
+        let py = (drow[y] * inv).max(1e-30);
+        out.loss_sum += -(py as f64).ln() * w as f64;
+        out.weight_sum += w as f64;
+        out.counted += 1;
+        if crate::gnn::argmax(row) as usize == y {
+            out.correct += 1;
+        }
+        for (j, d) in drow.iter_mut().enumerate() {
+            *d = (*d * inv - if j == y { 1.0 } else { 0.0 }) * w;
+        }
+    }
+    if out.weight_sum > 0.0 {
+        let invw = (1.0 / out.weight_sum) as f32;
+        for d in dlogits[..num_core * classes].iter_mut() {
+            *d *= invw;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn class_weights_inverse_frequency() {
+        // 6 of class 0, 2 of class 1, none of class 2.
+        let labels = [0, 0, 0, 0, 0, 0, 1, 1];
+        let w = class_weights(&labels, 3);
+        assert!((w[0] - 8.0 / (2.0 * 6.0)).abs() < 1e-6);
+        assert!((w[1] - 8.0 / (2.0 * 2.0)).abs() < 1e-6);
+        assert_eq!(w[2], 0.0);
+        // rare class weighs more
+        assert!(w[1] > w[0]);
+    }
+
+    #[test]
+    fn uniform_logits_give_log_c_loss_and_zero_sum_grad() {
+        let logits = vec![0.0f32; 2 * 3];
+        let labels = [1u8, 2];
+        let weights = vec![1.0f32; 3];
+        let mut d = vec![9.0f32; 6];
+        let out = softmax_xent(&logits, &labels, 2, 3, &weights, &mut d);
+        assert!((out.loss_sum / out.weight_sum - (3.0f64).ln()).abs() < 1e-6);
+        assert_eq!(out.counted, 2);
+        // softmax-CE gradient rows sum to zero
+        for row in d.chunks_exact(3) {
+            let s: f32 = row.iter().sum();
+            assert!(s.abs() < 1e-6, "row grad sum {s}");
+        }
+        // gradient points away from the true class
+        assert!(d[1] < 0.0 && d[0] > 0.0 && d[2] > 0.0);
+    }
+
+    #[test]
+    fn boundary_rows_get_zero_gradient() {
+        let logits = vec![1.0f32, 0.0, 0.5, 2.0]; // 2 rows × 2 classes
+        let labels = [0u8, 1];
+        let weights = vec![1.0f32, 1.0];
+        let mut d = vec![7.0f32; 4];
+        let out = softmax_xent(&logits, &labels, 1, 2, &weights, &mut d);
+        assert_eq!(out.counted, 1);
+        assert_eq!(&d[2..4], &[0.0, 0.0], "boundary row gradient must be zeroed");
+        assert!(d[0] != 0.0);
+    }
+
+    #[test]
+    fn class_weight_scales_gradient_and_loss() {
+        let logits = vec![0.0f32, 0.0];
+        let labels = [0u8];
+        let mut d1 = vec![0.0f32; 2];
+        let o1 = softmax_xent(&logits, &labels, 1, 2, &[1.0, 1.0], &mut d1);
+        let mut d3 = vec![0.0f32; 2];
+        let o3 = softmax_xent(&logits, &labels, 1, 2, &[3.0, 1.0], &mut d3);
+        // weighted-mean normalization: one row ⇒ identical normalized
+        // grads/loss, but the raw sums scale by the weight.
+        assert!((o3.loss_sum - 3.0 * o1.loss_sum).abs() < 1e-9);
+        assert!((o3.weight_sum - 3.0 * o1.weight_sum).abs() < 1e-9);
+        for (a, b) in d1.iter().zip(&d3) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn accuracy_counts_argmax_hits() {
+        let logits = vec![2.0f32, 0.0, 0.0, 2.0]; // preds: 0, 1
+        let labels = [0u8, 0];
+        let mut d = vec![0.0f32; 4];
+        let out = softmax_xent(&logits, &labels, 2, 2, &[1.0, 1.0], &mut d);
+        assert_eq!(out.correct, 1);
+        assert_eq!(out.counted, 2);
+    }
+}

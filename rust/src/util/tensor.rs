@@ -129,12 +129,30 @@ pub fn parse_bundle(bytes: &[u8]) -> Result<Bundle> {
         let ndim = take(&mut off, 1)?[0] as usize;
         let mut dims = Vec::with_capacity(ndim);
         for _ in 0..ndim {
-            dims.push(u64::from_le_bytes(take(&mut off, 8)?.try_into().unwrap()) as usize);
+            let d = u64::from_le_bytes(take(&mut off, 8)?.try_into().unwrap());
+            let d = usize::try_from(d).map_err(|_| {
+                anyhow::anyhow!("tensor '{name}': dim {d} exceeds this platform's address space")
+            })?;
+            dims.push(d);
         }
-        let numel: usize = dims.iter().product();
+        // Checked shape arithmetic: a corrupt header whose dims product
+        // wraps could otherwise claim a tiny payload and silently parse
+        // garbage into a "valid" tensor. Zero-sized tensors are rejected
+        // outright — no writer produces them and every reader (model
+        // loading, checkpoint resume) would only break later and worse.
+        let numel = dims
+            .iter()
+            .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+            .with_context(|| format!("tensor '{name}': dims {dims:?} overflow"))?;
+        anyhow::ensure!(numel > 0, "tensor '{name}': zero-sized (dims {dims:?})");
+        let nbytes = numel
+            .checked_mul(4)
+            .with_context(|| format!("tensor '{name}': byte size overflows"))?;
         let data = match dtype {
             0 => {
-                let raw = take(&mut off, numel * 4)?;
+                let raw = take(&mut off, nbytes).with_context(|| {
+                    format!("tensor '{name}': payload for dims {dims:?} truncated")
+                })?;
                 TensorData::F32(
                     raw.chunks_exact(4)
                         .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
@@ -142,7 +160,9 @@ pub fn parse_bundle(bytes: &[u8]) -> Result<Bundle> {
                 )
             }
             1 => {
-                let raw = take(&mut off, numel * 4)?;
+                let raw = take(&mut off, nbytes).with_context(|| {
+                    format!("tensor '{name}': payload for dims {dims:?} truncated")
+                })?;
                 TensorData::I32(
                     raw.chunks_exact(4)
                         .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
@@ -153,6 +173,12 @@ pub fn parse_bundle(bytes: &[u8]) -> Result<Bundle> {
         };
         out.insert(name, Tensor { dims, data });
     }
+    anyhow::ensure!(
+        off == bytes.len(),
+        "{} trailing bytes after the last declared tensor (corrupt or \
+         mis-declared bundle)",
+        bytes.len() - off
+    );
     Ok(out)
 }
 
@@ -177,6 +203,71 @@ mod tests {
     fn rejects_garbage() {
         assert!(parse_bundle(b"nope").is_err());
         assert!(parse_bundle(b"GRTW\x01\x00\x00\x00").is_err());
+    }
+
+    /// Serialize a bundle to bytes (the write path without the file).
+    /// `stem` keeps parallel tests off each other's temp files.
+    fn bundle_bytes(b: &Bundle, stem: &str) -> Vec<u8> {
+        let dir = std::env::temp_dir().join("groot_tensor_hardening");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("{stem}.bin"));
+        write_bundle(&path, b).unwrap();
+        std::fs::read(&path).unwrap()
+    }
+
+    #[test]
+    fn rejects_truncated_payload() {
+        let mut b = Bundle::new();
+        b.insert("w".into(), Tensor::f32(vec![4, 4], vec![1.0; 16]));
+        let bytes = bundle_bytes(&b, "truncated");
+        // chop mid-payload: declared dims no longer match what's on disk
+        let err = parse_bundle(&bytes[..bytes.len() - 7]).unwrap_err();
+        assert!(format!("{err:#}").contains("truncated"), "{err:#}");
+    }
+
+    #[test]
+    fn rejects_trailing_garbage() {
+        let mut b = Bundle::new();
+        b.insert("w".into(), Tensor::f32(vec![2], vec![1.0, 2.0]));
+        let mut bytes = bundle_bytes(&b, "trailing");
+        bytes.extend_from_slice(&[0xAB, 0xCD]);
+        let err = parse_bundle(&bytes).unwrap_err();
+        assert!(format!("{err:#}").contains("trailing"), "{err:#}");
+    }
+
+    #[test]
+    fn rejects_zero_sized_tensor() {
+        // Hand-build a header declaring dims [0] — no writer produces
+        // this, so the parser must refuse rather than yield an empty
+        // tensor checkpoint loading trips over later.
+        let mut bytes: Vec<u8> = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.extend_from_slice(&1u16.to_le_bytes());
+        bytes.push(b'z');
+        bytes.push(0); // dtype f32
+        bytes.push(1); // ndim
+        bytes.extend_from_slice(&0u64.to_le_bytes()); // dim 0
+        let err = parse_bundle(&bytes).unwrap_err();
+        assert!(format!("{err:#}").contains("zero-sized"), "{err:#}");
+    }
+
+    #[test]
+    fn rejects_overflowing_dims_product() {
+        // dims [2^40, 2^40] — the product wraps usize; the old parser
+        // could end up asking for a tiny payload and "succeeding".
+        let mut bytes: Vec<u8> = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.extend_from_slice(&1u16.to_le_bytes());
+        bytes.push(b'w');
+        bytes.push(0); // dtype f32
+        bytes.push(2); // ndim
+        bytes.extend_from_slice(&(1u64 << 40).to_le_bytes());
+        bytes.extend_from_slice(&(1u64 << 40).to_le_bytes());
+        assert!(parse_bundle(&bytes).is_err());
     }
 
     #[test]

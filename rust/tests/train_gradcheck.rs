@@ -1,0 +1,259 @@
+//! Training-subsystem integration tests:
+//!
+//! 1. Finite-difference gradient checks of the SAGE backward — every
+//!    parameter of a small model (all gradients flow through
+//!    `SpmmEngine::spmm_mean_backward_into` on an asymmetric-degree CSR),
+//!    plus a sampled check over every tensor of the default-architecture
+//!    model (4→64→64→5).
+//! 2. Seed determinism: the same seed/config writes a byte-identical
+//!    checkpoint after 2 epochs.
+//! 3. Train→serve smoke: a short run's loss falls and its checkpoint
+//!    reloads through `Session::classify`.
+
+use groot::gnn::SageModel;
+use groot::graph::Csr;
+use groot::spmm::{GrootSpmm, SpmmEngine};
+use groot::train::{self, autograd, checkpoint, loss, TrainConfig, TrainScratch};
+
+/// Weighted-CE loss of `model` on one fixed batch (f64 accumulation).
+#[allow(clippy::too_many_arguments)]
+fn loss_of(
+    model: &SageModel,
+    csr: &Csr,
+    x: &[f32],
+    labels: &[u8],
+    num_core: usize,
+    weights: &[f32],
+    engine: &dyn SpmmEngine,
+    scratch: &mut TrainScratch,
+) -> f64 {
+    autograd::forward_tape(model, csr, x, engine, scratch);
+    let classes = model.num_classes();
+    let (logits, dlogits) = scratch.loss_views(csr.num_nodes(), classes);
+    let out = loss::softmax_xent(logits, labels, num_core, classes, weights, dlogits);
+    out.loss_sum / out.weight_sum
+}
+
+/// Sign pattern of every hidden (post-ReLU) activation — if a ±h
+/// perturbation flips any unit across the kink, the two-sided difference
+/// quotient is not comparable to the subgradient and that parameter is
+/// skipped (standard gradcheck practice for piecewise-linear nets).
+fn relu_pattern(model: &SageModel, scratch: &TrainScratch, n: usize) -> Vec<bool> {
+    let mut pat = Vec::new();
+    for l in 1..model.layers.len() {
+        let dout = model.layers[l - 1].dout;
+        pat.extend(scratch.tape_act(l)[..n * dout].iter().map(|&v| v > 0.0));
+    }
+    pat
+}
+
+/// Mutable access to parameter `pi` of tensor `ti` (0 = w_self,
+/// 1 = w_neigh, 2 = bias) of layer `li`.
+fn param_mut(m: &mut SageModel, li: usize, ti: usize, pi: usize) -> &mut f32 {
+    let l = &mut m.layers[li];
+    match ti {
+        0 => &mut l.w_self[pi],
+        1 => &mut l.w_neigh[pi],
+        _ => &mut l.bias[pi],
+    }
+}
+
+/// Check analytic vs central-difference gradients for every `stride`-th
+/// parameter of every tensor. Returns (checked, skipped).
+#[allow(clippy::too_many_arguments)]
+fn gradcheck(
+    model: &mut SageModel,
+    csr: &Csr,
+    x: &[f32],
+    labels: &[u8],
+    num_core: usize,
+    weights: &[f32],
+    stride: usize,
+) -> (usize, usize) {
+    let engine = GrootSpmm::new(1);
+    let mut scratch = TrainScratch::new();
+    let n = csr.num_nodes();
+
+    // Analytic gradients.
+    let _ = loss_of(model, csr, x, labels, num_core, weights, &engine, &mut scratch);
+    let base_pattern = relu_pattern(model, &scratch, n);
+    let mut grads = autograd::GradBuffers::zeros_like(model);
+    autograd::backward(model, csr, &engine, &mut scratch, &mut grads);
+
+    let h = 5e-3f32;
+    let mut checked = 0usize;
+    let mut skipped = 0usize;
+    let nl = model.layers.len();
+    for li in 0..nl {
+        // (tensor id, length) triplets; indices resolved per iteration so
+        // the mutable borrows don't overlap.
+        let lens = [
+            model.layers[li].w_self.len(),
+            model.layers[li].w_neigh.len(),
+            model.layers[li].bias.len(),
+        ];
+        for (ti, &len) in lens.iter().enumerate() {
+            for pi in (0..len).step_by(stride.max(1)) {
+                let analytic = match ti {
+                    0 => grads.layers[li].w_self[pi],
+                    1 => grads.layers[li].w_neigh[pi],
+                    _ => grads.layers[li].bias[pi],
+                } as f64;
+
+                let orig = *param_mut(model, li, ti, pi);
+                *param_mut(model, li, ti, pi) = orig + h;
+                let lp = loss_of(model, csr, x, labels, num_core, weights, &engine, &mut scratch);
+                let pat_p = relu_pattern(model, &scratch, n);
+                *param_mut(model, li, ti, pi) = orig - h;
+                let lm = loss_of(model, csr, x, labels, num_core, weights, &engine, &mut scratch);
+                let pat_m = relu_pattern(model, &scratch, n);
+                *param_mut(model, li, ti, pi) = orig;
+
+                if pat_p != base_pattern || pat_m != base_pattern {
+                    skipped += 1;
+                    continue;
+                }
+                let numeric = (lp - lm) / (2.0 * h as f64);
+                let tol = 1e-3 * (analytic.abs() + numeric.abs()) + 1e-4;
+                assert!(
+                    (numeric - analytic).abs() <= tol,
+                    "layer {li} tensor {ti} param {pi}: numeric {numeric:.6e} \
+                     vs analytic {analytic:.6e} (tol {tol:.2e})"
+                );
+                checked += 1;
+            }
+        }
+    }
+    (checked, skipped)
+}
+
+/// Small asymmetric graph: degrees range 1..=4, so the transpose-mean
+/// weighting (1/deg of the NEIGHBOR, not the row) is actually exercised —
+/// a symmetric-degree graph would let a wrong implementation slip by.
+fn asymmetric_csr() -> Csr {
+    Csr::symmetric_from_edges(
+        7,
+        &[(0, 1), (0, 2), (0, 3), (3, 4), (4, 5), (5, 6), (1, 2)],
+    )
+}
+
+#[test]
+fn every_parameter_of_a_small_model_gradchecks() {
+    let csr = asymmetric_csr();
+    let n = csr.num_nodes();
+    let din = 3;
+    let mut model = train::init_model(&[din, 4, 3], 12);
+    let x: Vec<f32> = (0..n * din).map(|i| ((i * 13 % 7) as f32) * 0.3 - 0.9).collect();
+    let labels: Vec<u8> = (0..n).map(|i| (i % 3) as u8).collect();
+    let weights = vec![1.0f32, 2.0, 0.5];
+    // num_core < n: the boundary rows' zero-gradient path is part of the
+    // checked computation.
+    let (checked, skipped) = gradcheck(&mut model, &csr, &x, &labels, 5, &weights, 1);
+    let total = checked + skipped;
+    assert_eq!(total, 3 * 4 * 2 + 4 + 4 * 3 * 2 + 3);
+    // kink skips are legitimate but must stay the exception
+    assert!(
+        checked * 3 >= total * 2,
+        "too many ReLU-kink skips: {checked}/{total} checked"
+    );
+}
+
+#[test]
+fn default_architecture_gradchecks_on_sampled_parameters() {
+    // The default `groot train` model (4→64→64→5) on a small graph with
+    // GROOT-style 0/1 features; every tensor of every layer is sampled.
+    let csr = Csr::symmetric_from_edges(
+        10,
+        &[(0, 2), (1, 2), (2, 3), (3, 4), (4, 5), (5, 6), (6, 7), (2, 8), (8, 9), (0, 9)],
+    );
+    let n = csr.num_nodes();
+    let mut model = train::init_model(&[4, 64, 64, 5], 3);
+    let x: Vec<f32> = (0..n * 4).map(|i| ((i * 7) % 3 == 0) as u8 as f32).collect();
+    let labels: Vec<u8> = (0..n).map(|i| (i % 5) as u8).collect();
+    let weights = vec![1.5f32, 1.0, 0.8, 0.5, 1.2];
+    let (checked, skipped) = gradcheck(&mut model, &csr, &x, &labels, 8, &weights, 37);
+    assert!(checked >= 50, "only {checked} parameters checked ({skipped} skipped)");
+}
+
+#[test]
+fn same_seed_writes_byte_identical_checkpoint_after_two_epochs() {
+    let g = groot::datasets::build(groot::datasets::DatasetKind::Csa, 4).unwrap();
+    let dir = std::env::temp_dir().join("groot_train_determinism");
+    std::fs::create_dir_all(&dir).unwrap();
+    let run = |name: &str| {
+        let out = dir.join(name);
+        let cfg = TrainConfig {
+            hidden: vec![16],
+            epochs: 2,
+            partitions: 2,
+            seed: 42,
+            threads: 1,
+            eval_every: 0,
+            checkpoint_every: 0,
+            out: Some(out.clone()),
+            resume: None,
+            ..Default::default()
+        };
+        train::train(std::slice::from_ref(&g), &[], &cfg, |_| {}).unwrap();
+        std::fs::read(&out).unwrap()
+    };
+    let a = run("a.bin");
+    let b = run("b.bin");
+    assert!(!a.is_empty());
+    assert_eq!(a, b, "same seed/config must write byte-identical checkpoints");
+}
+
+#[test]
+fn short_training_run_improves_and_reloads_through_session() {
+    let g = groot::datasets::build(groot::datasets::DatasetKind::Csa, 6).unwrap();
+    let dir = std::env::temp_dir().join("groot_train_smoke");
+    std::fs::create_dir_all(&dir).unwrap();
+    let out = dir.join("smoke.bin");
+    let cfg = TrainConfig {
+        hidden: vec![16, 16],
+        epochs: 20,
+        lr: 0.02,
+        partitions: 2,
+        seed: 1,
+        threads: 1,
+        eval_every: 0,
+        checkpoint_every: 0,
+        out: Some(out.clone()),
+        resume: None,
+        ..Default::default()
+    };
+    let report = train::train(std::slice::from_ref(&g), &[], &cfg, |_| {}).unwrap();
+    assert!(
+        report.final_loss() < report.first_loss(),
+        "loss must strictly decrease: {} -> {}",
+        report.first_loss(),
+        report.final_loss()
+    );
+
+    // The checkpoint round-trips through the standard loaders...
+    let (model, epoch) = checkpoint::load(&out).unwrap();
+    assert_eq!(epoch, Some(20));
+    assert_eq!(model.layers.len(), 3);
+
+    // ...and through the full serving path.
+    let bundle = groot::util::tensor::read_bundle(&out).unwrap();
+    let backend = groot::backend::backend_by_name(
+        "native",
+        &bundle,
+        std::path::Path::new("artifacts"),
+        usize::MAX,
+        1,
+    )
+    .unwrap();
+    let session = groot::coordinator::Session::new(
+        backend,
+        groot::coordinator::SessionConfig { num_partitions: 3, ..Default::default() },
+    );
+    let res = session.classify(&g).unwrap();
+    assert_eq!(res.pred.len(), g.num_nodes);
+    assert!(
+        res.accuracy > 0.5,
+        "trained model no better than chance when served: {}",
+        res.accuracy
+    );
+}
