@@ -54,6 +54,7 @@ fn main() -> anyhow::Result<()> {
     // 4-partition re-grown plan from it, then execute the whole plan
     // through one batched backend call. `Session::classify` is exactly
     // this composition for callers that reuse nothing.
+    let backend_name = backend.name();
     let session = Session::new(backend, SessionConfig::default());
     let prepared = PreparedGraph::new(&graph);
     println!(
@@ -81,7 +82,38 @@ fn main() -> anyhow::Result<()> {
         res.stats.infer_time
     );
 
-    // 4. Algebraic verification driven by the predicted XOR/MAJ nodes.
+    // 4. The same circuit through STREAMING ingestion: a chunked
+    // GraphSource into the compact columnar store (1 packed byte of
+    // features per node, flat u32 edge arrays), executed one bounded
+    // window of partitions at a time. Predictions are byte-identical;
+    // the execution working set is a fraction of the eager plan's.
+    let compact = PreparedGraph::from_source(groot::aig::mult::csa_source(bits, 8192))?;
+    let stream_session = Session::new(
+        backend_by_name("native", &bundle, Path::new("artifacts"), 4096, threads)?,
+        SessionConfig { num_partitions: 4, ..Default::default() },
+    );
+    let streamed = stream_session.classify_streaming(&compact, 2)?;
+    // The byte-identity contract holds per backend; only claim (and
+    // check) it when the eager run above used the same native backend.
+    let parity = if backend_name == "native" {
+        anyhow::ensure!(
+            streamed.pred == res.pred,
+            "streaming and eager predictions must be byte-identical"
+        );
+        " — identical predictions"
+    } else {
+        " (eager ran on xla; cross-backend parity not asserted)"
+    };
+    println!(
+        "\nstreaming path: compact store {:.1} B/node (legacy {:.1}); exec working set \
+         {:.2} MB vs eager {:.2} MB{parity}",
+        compact.resident_bytes() as f64 / compact.num_nodes() as f64,
+        graph.resident_bytes() as f64 / graph.num_nodes as f64,
+        streamed.stats.peak_resident_bytes as f64 / 1e6,
+        res.stats.peak_resident_bytes as f64 / 1e6
+    );
+
+    // 5. Algebraic verification driven by the predicted XOR/MAJ nodes.
     let t0 = std::time::Instant::now();
     let outcome = groot::verify::verify_multiplier(&aig, &graph, &res.pred)?;
     println!(

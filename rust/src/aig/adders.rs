@@ -64,6 +64,27 @@ pub fn shift_left(bits: &[Lit], k: usize) -> Vec<Lit> {
     out
 }
 
+/// Standalone n-bit ripple-carry adder circuit (a[0..n], b[0..n] →
+/// s[0..n+1]) — the adder-family workload for ingestion and training
+/// experiments that want FA chains without a multiplier around them.
+pub fn ripple_adder_circuit(n: usize) -> Aig {
+    assert!(n >= 1);
+    let mut g = Aig::new(format!("ripple_add_{n}"));
+    let a = g.pis_n(n);
+    let b = g.pis_n(n);
+    let sum = ripple_adder(&mut g, &a, &b, LIT_FALSE);
+    for (i, &s) in sum.iter().enumerate() {
+        g.po(format!("s{i}"), s);
+    }
+    g
+}
+
+/// Streaming frontend: the ripple-carry adder as a chunked
+/// [`crate::graph::GraphSource`].
+pub fn ripple_source(n: usize, chunk: usize) -> crate::features::AigSource {
+    crate::features::AigSource::new(ripple_adder_circuit(n), chunk)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

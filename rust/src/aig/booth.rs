@@ -26,6 +26,12 @@ pub fn booth_multiplier(n: usize) -> Aig {
     g
 }
 
+/// Streaming frontend: the radix-4 Booth multiplier as a chunked
+/// [`crate::graph::GraphSource`].
+pub fn booth_source(n: usize, chunk: usize) -> crate::features::AigSource {
+    crate::features::AigSource::new(booth_multiplier(n), chunk)
+}
+
 /// Build booth multiplier logic; returns 2n product bits.
 pub fn booth_multiplier_into(g: &mut Aig, a: &[Lit], b: &[Lit]) -> Vec<Lit> {
     let n = a.len();

@@ -252,6 +252,16 @@ impl Aig {
         lit_not(self.and_many(&inv))
     }
 
+    /// Drop the structural-hashing table. It exists only to dedupe
+    /// during construction and costs far more per AND than the fanin
+    /// columns; finished circuits headed into streaming ingestion
+    /// ([`crate::features::AigSource`]) shed it so the resident producer
+    /// is just kinds + fanins. Further `and()` calls on this AIG will
+    /// stop deduplicating structurally (they still simplify constants).
+    pub fn clear_strash(&mut self) {
+        self.strash = HashMap::new();
+    }
+
     /// Total number of edges in the EDA-graph view: 2 per AND + 1 per PO.
     pub fn num_graph_edges(&self) -> usize {
         2 * self.num_ands() + self.num_outputs()

@@ -23,6 +23,13 @@ pub fn csa_multiplier(n: usize) -> Aig {
     g
 }
 
+/// Streaming frontend: the n×n CSA multiplier as a chunked
+/// [`crate::graph::GraphSource`] — the ingestion path that never builds a
+/// dense-feature `EdaGraph`.
+pub fn csa_source(n: usize, chunk: usize) -> crate::features::AigSource {
+    crate::features::AigSource::new(csa_multiplier(n), chunk)
+}
+
 /// Build the multiplier logic into an existing AIG; returns 2n product bits.
 pub fn csa_multiplier_into(g: &mut Aig, a: &[Lit], b: &[Lit]) -> Vec<Lit> {
     let n = a.len();

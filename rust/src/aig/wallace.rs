@@ -5,6 +5,12 @@
 use super::booth::reduce_rows;
 use super::{Aig, Lit, LIT_FALSE};
 
+/// Streaming frontend: the Wallace-tree multiplier as a chunked
+/// [`crate::graph::GraphSource`].
+pub fn wallace_source(n: usize, chunk: usize) -> crate::features::AigSource {
+    crate::features::AigSource::new(wallace_multiplier(n), chunk)
+}
+
 /// Generate an n×n unsigned Wallace-tree multiplier.
 /// PIs: a[0..n] then b[0..n]; POs m[0..2n].
 pub fn wallace_multiplier(n: usize) -> Aig {

@@ -59,6 +59,13 @@ impl PartitionInput<'_> {
         );
         Ok(())
     }
+
+    /// Heap bytes of this input's buffers (local CSR + gathered
+    /// features) — the unit both executors account execution memory in
+    /// (`RunStats::peak_resident_bytes`).
+    pub fn resident_bytes(&self) -> usize {
+        self.csr.resident_bytes() + std::mem::size_of_val(self.features)
+    }
 }
 
 /// Logits for one partition.

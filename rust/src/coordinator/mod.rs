@@ -21,8 +21,9 @@ pub mod pipeline;
 pub mod server;
 
 pub use pipeline::{
-    execute_plan, ExecStats, PartitionPlan, PlanCache, PlannedPartition, PlanOptions,
-    PlanStats, PreparedGraph, DEFAULT_PLAN_CACHE_CAPACITY,
+    execute_plan, execute_plan_streaming, ExecStats, PartitionPlan, PlanCache,
+    PlannedPartition, PlanOptions, PlanStats, PreparedGraph, StreamPlan, StreamStats,
+    DEFAULT_PLAN_CACHE_CAPACITY,
 };
 
 use crate::backend::{InferenceBackend, NativeBackend};
@@ -81,8 +82,14 @@ pub struct RunStats {
     /// This run reused a cached [`PartitionPlan`] — no partitioning,
     /// re-growth, or gathering happened.
     pub plan_cache_hit: bool,
-    /// Partitions submitted in the single `infer_batch` call.
+    /// Partitions per `infer_batch` call (the whole plan on the eager
+    /// path; the window size on the streaming path).
     pub batch_size: usize,
+    /// Execution-buffer bytes live at once (local CSRs + gathered
+    /// features + logits): the whole plan for the eager path, the
+    /// largest window for [`execute_plan_streaming`] — the measured
+    /// out-of-core claim.
+    pub peak_resident_bytes: usize,
 }
 
 /// Classification output: one predicted class per graph node + stats.
@@ -161,7 +168,6 @@ impl Session {
             plan.num_nodes,
             prepared.num_nodes()
         );
-        let graph = prepared.graph;
         let (pred, exec) = execute_plan(self.backend.as_ref(), plan)?;
         let stats = RunStats {
             num_partitions: plan.num_partitions(),
@@ -170,15 +176,63 @@ impl Session {
             regrowth_time: if cache_hit { Duration::ZERO } else { plan.stats.regrowth_time },
             pack_time: if cache_hit { Duration::ZERO } else { plan.stats.gather_time },
             infer_time: exec.infer_time,
-            total_nodes: graph.num_nodes,
+            total_nodes: prepared.num_nodes(),
             total_boundary_nodes: plan.stats.regrowth.total_boundary_nodes,
             total_crossing_edges: plan.stats.regrowth.total_crossing_edges,
             max_partition_nodes: plan.stats.regrowth.max_partition_nodes,
             peak_bucket_n: exec.peak_bucket_n,
             plan_cache_hit: cache_hit,
             batch_size: exec.batch_size,
+            peak_resident_bytes: exec.peak_resident_bytes,
         };
-        let labels = graph.labels_u8();
+        let labels = prepared.labels_u8();
+        let accuracy = crate::gnn::accuracy(&pred, &labels);
+        Ok(ClassifyResult { pred, accuracy, stats })
+    }
+
+    /// Out-of-core classification: build a lean [`StreamPlan`] from the
+    /// session config and drive it through
+    /// [`execute_plan_streaming`] `window` partitions at a time.
+    /// Predictions are byte-identical to [`Self::classify`] /
+    /// [`Self::classify_plan`] on the same `(graph, options)`; peak
+    /// execution memory is ∝ the largest window instead of the whole
+    /// plan (`RunStats::peak_resident_bytes` reports it, measured).
+    pub fn classify_streaming(
+        &self,
+        prepared: &PreparedGraph<'_>,
+        window: usize,
+    ) -> Result<ClassifyResult> {
+        let plan = prepared.plan_stream(&PlanOptions::from_config(&self.config));
+        self.classify_stream_plan(prepared, &plan, window)
+    }
+
+    /// Execute a pre-built [`StreamPlan`] (same staleness guard as
+    /// [`Self::classify_plan`], enforced by the executor).
+    pub fn classify_stream_plan(
+        &self,
+        prepared: &PreparedGraph<'_>,
+        plan: &StreamPlan,
+        window: usize,
+    ) -> Result<ClassifyResult> {
+        let (pred, exec) =
+            execute_plan_streaming(self.backend.as_ref(), prepared, plan, window)?;
+        let stats = RunStats {
+            num_partitions: plan.num_partitions(),
+            regrown: plan.options.regrow,
+            partition_time: plan.partition_time,
+            regrowth_time: exec.regrowth_time,
+            pack_time: exec.gather_time,
+            infer_time: exec.infer_time,
+            total_nodes: prepared.num_nodes(),
+            total_boundary_nodes: exec.regrowth.total_boundary_nodes,
+            total_crossing_edges: exec.regrowth.total_crossing_edges,
+            max_partition_nodes: exec.regrowth.max_partition_nodes,
+            peak_bucket_n: exec.peak_bucket_n,
+            plan_cache_hit: false,
+            batch_size: exec.max_window,
+            peak_resident_bytes: exec.peak_resident_bytes,
+        };
+        let labels = prepared.labels_u8();
         let accuracy = crate::gnn::accuracy(&pred, &labels);
         Ok(ClassifyResult { pred, accuracy, stats })
     }
@@ -282,6 +336,38 @@ mod tests {
         let staged = session.classify_plan(&prepared, &plan, false).unwrap();
         assert_eq!(eager.pred, staged.pred);
         assert_eq!(eager.accuracy, staged.accuracy);
+    }
+
+    #[test]
+    fn streaming_matches_eager_and_bounds_memory() {
+        let g = csa_multiplier(6);
+        let eg = crate::features::EdaGraph::from_aig(&g);
+        let cfg = SessionConfig { num_partitions: 5, regrow: true, ..Default::default() };
+        let session = Session::native(type_bit_model(), cfg);
+        let eager = session.classify(&eg).unwrap();
+        assert!(eager.stats.peak_resident_bytes > 0);
+        let prepared = PreparedGraph::new(&eg);
+        for window in [1usize, 2, 16] {
+            let streamed = session.classify_streaming(&prepared, window).unwrap();
+            assert_eq!(streamed.pred, eager.pred, "window {window}");
+            assert_eq!(streamed.accuracy, eager.accuracy);
+            assert_eq!(streamed.stats.batch_size, window.min(5));
+            // the windowed working set never exceeds the whole-plan one,
+            // and is a strict fraction of it for small windows
+            assert!(
+                streamed.stats.peak_resident_bytes <= eager.stats.peak_resident_bytes,
+                "window {window}: {} > {}",
+                streamed.stats.peak_resident_bytes,
+                eager.stats.peak_resident_bytes
+            );
+            if window == 1 {
+                assert!(
+                    streamed.stats.peak_resident_bytes
+                        < eager.stats.peak_resident_bytes / 2,
+                    "single-partition window should be far below the full plan"
+                );
+            }
+        }
     }
 
     #[test]

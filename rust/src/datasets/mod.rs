@@ -3,7 +3,8 @@
 //! python training export.
 
 use crate::aig::{booth::booth_multiplier, mult::csa_multiplier, wallace::wallace_multiplier};
-use crate::features::EdaGraph;
+use crate::features::{EdaGraph, EdaGraphSource};
+use crate::graph::{GraphSource, ReplicateSource};
 use crate::mapping::{map_cells, map_fpga};
 use anyhow::{bail, Result};
 use std::path::Path;
@@ -61,6 +62,40 @@ pub fn build(kind: DatasetKind, bits: usize) -> Result<EdaGraph> {
         DatasetKind::Mapped7nm => map_cells(&csa_multiplier(bits))?.to_eda_graph(),
         DatasetKind::Fpga4Lut => map_fpga(&csa_multiplier(bits))?.to_eda_graph(),
     })
+}
+
+/// Streaming counterpart of [`build`]: the dataset as a chunked
+/// [`GraphSource`] feeding the compact columnar
+/// [`crate::graph::CircuitGraph`] — no dense-feature `EdaGraph` is
+/// materialized for the AIG families. The mapped families construct
+/// their (much smaller, cell-level) legacy graph and adapt it.
+pub fn source(kind: DatasetKind, bits: usize, chunk: usize) -> Result<Box<dyn GraphSource>> {
+    Ok(match kind {
+        DatasetKind::Csa => Box::new(crate::aig::mult::csa_source(bits, chunk)),
+        DatasetKind::Booth => Box::new(crate::aig::booth::booth_source(bits, chunk)),
+        DatasetKind::Wallace => Box::new(crate::aig::wallace::wallace_source(bits, chunk)),
+        DatasetKind::Mapped7nm => {
+            Box::new(EdaGraphSource::new(map_cells(&csa_multiplier(bits))?.to_eda_graph(), chunk))
+        }
+        DatasetKind::Fpga4Lut => {
+            Box::new(EdaGraphSource::new(map_fpga(&csa_multiplier(bits))?.to_eda_graph(), chunk))
+        }
+    })
+}
+
+/// [`source`] with the paper's disjoint-copy batch replication applied
+/// (batch 1 passes the base source through unbuffered).
+pub fn replicated_source(
+    kind: DatasetKind,
+    bits: usize,
+    batch: usize,
+    chunk: usize,
+) -> Result<Box<dyn GraphSource>> {
+    let base = source(kind, bits, chunk)?;
+    if batch <= 1 {
+        return Ok(base);
+    }
+    Ok(Box::new(ReplicateSource::new(base, batch, chunk)?))
 }
 
 /// Export a graph as the text triplet `python/compile/dataset.py` loads.

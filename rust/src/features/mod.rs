@@ -23,6 +23,10 @@
 //! 3-feature encoding (no PI/PO distinction) is provided for the
 //! feature-ablation experiments.
 
+pub mod stream;
+
+pub use stream::{AigSource, EdaGraphSource};
+
 use crate::aig::{lit_compl, lit_var, Aig, NodeKind};
 use crate::labels::{label_aig_nodes, NodeClass};
 
@@ -115,6 +119,30 @@ impl EdaGraph {
     /// Labels as raw u8 (paper's numeric classes).
     pub fn labels_u8(&self) -> Vec<u8> {
         self.labels.iter().map(|&l| l as u8).collect()
+    }
+
+    /// The feature matrix as one flat row-major `&[f32]` — zero-copy:
+    /// `Vec<[f32; 4]>` storage is already `num_nodes × 4` contiguous
+    /// floats, so consumers that want a dense matrix (the eager pipeline,
+    /// validation eval) reinterpret instead of duplicating 16 B/node.
+    pub fn features_flat(&self) -> &[f32] {
+        // SAFETY: `[f32; GROOT_FEATURE_DIM]` is exactly GROOT_FEATURE_DIM
+        // consecutive f32s with f32 alignment and no padding, and the
+        // element count cannot overflow isize (the rows are in memory).
+        unsafe {
+            std::slice::from_raw_parts(
+                self.features.as_ptr().cast::<f32>(),
+                self.features.len() * GROOT_FEATURE_DIM,
+            )
+        }
+    }
+
+    /// Heap bytes of this representation's content (feature rows, labels,
+    /// edge tuples) — the legacy side of BENCH_memory.json.
+    pub fn resident_bytes(&self) -> usize {
+        self.features.len() * std::mem::size_of::<[f32; GROOT_FEATURE_DIM]>()
+            + self.labels.len() * std::mem::size_of::<NodeClass>()
+            + self.edges.len() * std::mem::size_of::<(u32, u32)>()
     }
 
     pub fn num_edges(&self) -> usize {
@@ -214,12 +242,38 @@ impl EdaGraph {
         }
     }
 
-    /// Structural sanity checks used by integration tests.
+    /// Structural sanity checks. Checkpoint and AIGER ingestion make
+    /// malformed graphs a real input, so beyond the column lengths this
+    /// rejects an AIG-prefix overrun and dangling edge endpoints. Label
+    /// range needs no check here — `NodeClass` is a closed 5-variant
+    /// enum, so every value is in `0..NUM_CLASSES` by construction; the
+    /// raw-`u8` label column of `CircuitGraph` is where out-of-range
+    /// labels can actually occur, and its `check()` rejects them.
     pub fn check(&self) -> anyhow::Result<()> {
-        anyhow::ensure!(self.features.len() == self.num_nodes);
-        anyhow::ensure!(self.labels.len() == self.num_nodes);
+        anyhow::ensure!(
+            self.num_aig_nodes <= self.num_nodes,
+            "num_aig_nodes {} exceeds num_nodes {}",
+            self.num_aig_nodes,
+            self.num_nodes
+        );
+        anyhow::ensure!(
+            self.features.len() == self.num_nodes,
+            "feature rows {} != num_nodes {}",
+            self.features.len(),
+            self.num_nodes
+        );
+        anyhow::ensure!(
+            self.labels.len() == self.num_nodes,
+            "labels {} != num_nodes {}",
+            self.labels.len(),
+            self.num_nodes
+        );
         for &(s, d) in &self.edges {
-            anyhow::ensure!((s as usize) < self.num_nodes && (d as usize) < self.num_nodes);
+            anyhow::ensure!(
+                (s as usize) < self.num_nodes && (d as usize) < self.num_nodes,
+                "edge ({s}, {d}) out of range (num_nodes {})",
+                self.num_nodes
+            );
         }
         Ok(())
     }
@@ -287,6 +341,36 @@ mod tests {
         assert!(max_b >= 8 * max_1, "batched max degree {max_b} vs {max_1}");
         // node count: shared inputs counted once
         assert!(b.num_nodes < 16 * eg.num_nodes);
+    }
+
+    #[test]
+    fn features_flat_is_zero_copy() {
+        let eg = EdaGraph::from_aig(&csa_multiplier(3));
+        let flat = eg.features_flat();
+        assert_eq!(flat.len(), eg.num_nodes * GROOT_FEATURE_DIM);
+        // same storage, not a copy
+        assert!(std::ptr::eq(flat.as_ptr(), eg.features.as_ptr().cast::<f32>()));
+        for u in 0..eg.num_nodes {
+            assert_eq!(&flat[u * 4..u * 4 + 4], &eg.features[u]);
+        }
+    }
+
+    #[test]
+    fn check_rejects_malformed_graphs() {
+        let good = EdaGraph::from_aig(&csa_multiplier(3));
+        good.check().unwrap();
+
+        let mut bad = good.clone();
+        bad.num_aig_nodes = bad.num_nodes + 1;
+        assert!(bad.check().is_err(), "aig prefix overrun must be rejected");
+
+        let mut bad = good.clone();
+        bad.edges.push((bad.num_nodes as u32, 0));
+        assert!(bad.check().is_err(), "dangling edge must be rejected");
+
+        let mut bad = good;
+        bad.features.pop();
+        assert!(bad.check().is_err(), "short feature column must be rejected");
     }
 
     #[test]

@@ -1,0 +1,301 @@
+//! Streaming emitters for the feature layer: the [`GraphSource`]
+//! implementations that feed [`CircuitGraph`] ingestion.
+//!
+//! * [`AigSource`] — chunked emission straight from an [`Aig`]: node
+//!   descriptors are derived per chunk from (kind, fanin polarity), PO
+//!   nodes are appended after the AIG prefix, and the strash table is
+//!   dropped up front so the resident producer is just the fanin
+//!   columns. This is the path every generator frontend
+//!   (`aig::{adders, mult, booth, wallace}::*_source`) and the AIGER
+//!   reader (`aig::aiger::source_from_aag`) return.
+//! * [`EdaGraphSource`] — back-compat adapter over a legacy [`EdaGraph`]
+//!   (owned or borrowed): feature rows are re-packed into descriptor
+//!   bytes and the tuple edge list is re-grouped by destination once at
+//!   construction.
+//!
+//! Both emit the same node order (and per-destination edge order) as
+//! `EdaGraph::from_aig`, so the compact and legacy representations of a
+//! circuit carry identical content — the parity the pipeline's
+//! representation-independent fingerprint and the streaming-vs-eager
+//! byte-identical-prediction tests rely on.
+
+use super::EdaGraph;
+use crate::aig::{lit_compl, lit_var, Aig, NodeKind};
+use crate::graph::circuit::{pack_desc, KIND_AND, KIND_INPUT, KIND_PO};
+use crate::graph::{CircuitGraph, GraphSource, NodeChunk};
+use crate::labels::{label_aig_nodes, NodeClass};
+use anyhow::Result;
+use std::borrow::Borrow;
+
+/// Pack one legacy 4-dim feature row back into a descriptor byte.
+/// Rejects rows outside the documented encoding (see the table in
+/// [`super`]) — malformed graphs must fail ingestion, not classify.
+pub fn desc_from_feature_row(f: &[f32; 4]) -> Result<u8> {
+    let bit = |x: f32| -> Result<bool> {
+        if x == 0.0 {
+            Ok(false)
+        } else if x == 1.0 {
+            Ok(true)
+        } else {
+            anyhow::bail!("feature value {x} is not a 0/1 bit")
+        }
+    };
+    let (t1, t0, pl, pr) = (bit(f[0])?, bit(f[1])?, bit(f[2])?, bit(f[3])?);
+    match (t1, t0) {
+        (false, false) => {
+            anyhow::ensure!(!pl && !pr, "PI row with polarity bits set");
+            Ok(pack_desc(KIND_INPUT, false, false))
+        }
+        (true, true) => Ok(pack_desc(KIND_AND, pl, pr)),
+        (false, true) => {
+            anyhow::ensure!(pl == pr, "PO row with disagreeing polarity bits");
+            Ok(pack_desc(KIND_PO, pl, pr))
+        }
+        (true, false) => anyhow::bail!("unrecognized node-type bits [1, 0]"),
+    }
+}
+
+/// Chunked [`GraphSource`] over an AIG: emits the AIG nodes (in id
+/// order) followed by one PO node per output — the exact layout
+/// [`EdaGraph::from_aig`] builds, without ever holding dense features.
+pub struct AigSource {
+    aig: Aig,
+    /// Ground-truth class per AIG node (PO graph nodes are labeled on
+    /// emission).
+    labels: Vec<NodeClass>,
+    chunk: usize,
+    cursor: usize,
+}
+
+impl AigSource {
+    /// Label the AIG and prepare chunked emission. The strash table —
+    /// construction-only state that can dwarf the fanin columns — is
+    /// dropped immediately.
+    pub fn new(mut aig: Aig, chunk: usize) -> AigSource {
+        let labels = label_aig_nodes(&aig);
+        aig.clear_strash();
+        AigSource { aig, labels, chunk: chunk.max(1), cursor: 0 }
+    }
+
+    fn total_nodes(&self) -> usize {
+        self.aig.num_nodes() + self.aig.num_outputs()
+    }
+}
+
+impl GraphSource for AigSource {
+    fn name(&self) -> &str {
+        &self.aig.name
+    }
+
+    fn num_nodes_hint(&self) -> Option<usize> {
+        Some(self.total_nodes())
+    }
+
+    fn aig_prefix(&self) -> Option<usize> {
+        Some(self.aig.num_nodes())
+    }
+
+    fn next_chunk(&mut self) -> Result<Option<NodeChunk>> {
+        let total = self.total_nodes();
+        if self.cursor >= total {
+            return Ok(None);
+        }
+        let n_aig = self.aig.num_nodes();
+        let start = self.cursor;
+        let take = self.chunk.min(total - start);
+        let mut desc = Vec::with_capacity(take);
+        let mut labels = Vec::with_capacity(take);
+        let mut edges = Vec::with_capacity(2 * take);
+        for id in start..start + take {
+            if id < n_aig {
+                match self.aig.kind(id as u32) {
+                    NodeKind::Const | NodeKind::Pi(_) => {
+                        desc.push(pack_desc(KIND_INPUT, false, false));
+                        labels.push(NodeClass::Pi as u8);
+                    }
+                    NodeKind::And => {
+                        let (f0, f1) = self.aig.fanins(id as u32);
+                        edges.push((lit_var(f0), id as u32));
+                        edges.push((lit_var(f1), id as u32));
+                        desc.push(pack_desc(KIND_AND, lit_compl(f0), lit_compl(f1)));
+                        labels.push(self.labels[id] as u8);
+                    }
+                }
+            } else {
+                let o = &self.aig.outputs[id - n_aig];
+                edges.push((lit_var(o.lit), id as u32));
+                let inv = lit_compl(o.lit);
+                desc.push(pack_desc(KIND_PO, inv, inv));
+                labels.push(NodeClass::Po as u8);
+            }
+        }
+        self.cursor += take;
+        Ok(Some(NodeChunk { start, desc, labels, edges }))
+    }
+}
+
+/// Back-compat [`GraphSource`] over a legacy [`EdaGraph`] (owned for
+/// `Box<dyn GraphSource>` pipelines, or borrowed via
+/// [`EdaGraph::to_circuit`]): feature rows become descriptor bytes and
+/// the tuple edge list is re-grouped by destination (stable, so graphs
+/// whose edges are already destination-ordered — every AIG-built one —
+/// stream out in their original edge order).
+pub struct EdaGraphSource<G: Borrow<EdaGraph> = EdaGraph> {
+    graph: G,
+    /// Edges regrouped by destination: sources of `v` are
+    /// `src[ptr[v] as usize..ptr[v + 1] as usize]`.
+    ptr: Vec<u32>,
+    src: Vec<u32>,
+    chunk: usize,
+    cursor: usize,
+}
+
+impl EdaGraphSource<EdaGraph> {
+    pub fn new(graph: EdaGraph, chunk: usize) -> EdaGraphSource<EdaGraph> {
+        Self::with_graph(graph, chunk)
+    }
+}
+
+impl<'g> EdaGraphSource<&'g EdaGraph> {
+    pub fn borrowed(graph: &'g EdaGraph, chunk: usize) -> EdaGraphSource<&'g EdaGraph> {
+        Self::with_graph(graph, chunk)
+    }
+}
+
+impl<G: Borrow<EdaGraph>> EdaGraphSource<G> {
+    fn with_graph(graph: G, chunk: usize) -> EdaGraphSource<G> {
+        let (ptr, src) = {
+            let g: &EdaGraph = graph.borrow();
+            let n = g.num_nodes;
+            let mut ptr = vec![0u32; n + 1];
+            for &(_, d) in &g.edges {
+                ptr[d as usize + 1] += 1;
+            }
+            for v in 0..n {
+                ptr[v + 1] += ptr[v];
+            }
+            let mut cursor: Vec<u32> = ptr[..n].to_vec();
+            let mut src = vec![0u32; g.edges.len()];
+            for &(s, d) in &g.edges {
+                src[cursor[d as usize] as usize] = s;
+                cursor[d as usize] += 1;
+            }
+            (ptr, src)
+        };
+        EdaGraphSource { graph, ptr, src, chunk: chunk.max(1), cursor: 0 }
+    }
+}
+
+impl<G: Borrow<EdaGraph>> GraphSource for EdaGraphSource<G> {
+    fn name(&self) -> &str {
+        &self.graph.borrow().name
+    }
+
+    fn num_nodes_hint(&self) -> Option<usize> {
+        Some(self.graph.borrow().num_nodes)
+    }
+
+    fn aig_prefix(&self) -> Option<usize> {
+        Some(self.graph.borrow().num_aig_nodes)
+    }
+
+    fn next_chunk(&mut self) -> Result<Option<NodeChunk>> {
+        let g = self.graph.borrow();
+        if self.cursor >= g.num_nodes {
+            return Ok(None);
+        }
+        let start = self.cursor;
+        let take = self.chunk.min(g.num_nodes - start);
+        let mut desc = Vec::with_capacity(take);
+        let mut labels = Vec::with_capacity(take);
+        let mut edges = Vec::new();
+        for v in start..start + take {
+            desc.push(desc_from_feature_row(&g.features[v]).map_err(|e| {
+                e.context(format!("graph '{}' node {v}: cannot pack feature row", g.name))
+            })?);
+            labels.push(g.labels[v] as u8);
+            for &s in &self.src[self.ptr[v] as usize..self.ptr[v + 1] as usize] {
+                edges.push((s, v as u32));
+            }
+        }
+        self.cursor += take;
+        Ok(Some(NodeChunk { start, desc, labels, edges }))
+    }
+}
+
+impl EdaGraph {
+    /// Convert the legacy representation into the compact columnar store
+    /// (borrow-based: no clone of the dense feature matrix).
+    pub fn to_circuit(&self) -> Result<CircuitGraph> {
+        CircuitGraph::from_source(EdaGraphSource::borrowed(self, crate::graph::DEFAULT_CHUNK_NODES))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aig::mult::csa_multiplier;
+    use crate::graph::Csr;
+
+    /// The compact store produced by streaming an AIG must carry exactly
+    /// the content of the legacy eager construction.
+    fn assert_matches_legacy(g: &CircuitGraph, eg: &EdaGraph) {
+        assert_eq!(g.num_nodes(), eg.num_nodes);
+        assert_eq!(g.num_aig_nodes(), eg.num_aig_nodes);
+        assert_eq!(g.num_edges(), eg.num_edges());
+        for u in 0..eg.num_nodes {
+            assert_eq!(g.feature_row(u), eg.features[u], "node {u} features");
+            assert_eq!(g.labels_u8()[u], eg.labels[u] as u8, "node {u} label");
+        }
+        let streamed: Vec<(u32, u32)> = g.edges_iter().collect();
+        assert_eq!(streamed, eg.edges, "edge sequence");
+    }
+
+    #[test]
+    fn aig_source_matches_eager_construction() {
+        let aig = csa_multiplier(6);
+        let eg = EdaGraph::from_aig(&aig);
+        // tiny chunks to exercise chunk boundaries
+        let g = CircuitGraph::from_source(AigSource::new(aig, 17)).unwrap();
+        assert_matches_legacy(&g, &eg);
+    }
+
+    #[test]
+    fn eda_adapter_matches_borrowed_conversion() {
+        let aig = csa_multiplier(5);
+        let eg = EdaGraph::from_aig(&aig);
+        let owned = CircuitGraph::from_source(EdaGraphSource::new(eg.clone(), 13)).unwrap();
+        let borrowed = eg.to_circuit().unwrap();
+        assert_matches_legacy(&owned, &eg);
+        assert_matches_legacy(&borrowed, &eg);
+    }
+
+    #[test]
+    fn adapter_handles_replicated_and_mapped_feature_rows() {
+        // replicate_shared_inputs interleaves PO rows and sets
+        // num_aig_nodes == num_nodes; the adapter must still round-trip.
+        let eg = EdaGraph::from_aig(&csa_multiplier(3)).replicate_shared_inputs(4);
+        let g = eg.to_circuit().unwrap();
+        assert_eq!(g.num_nodes(), eg.num_nodes);
+        assert_eq!(g.num_aig_nodes(), eg.num_nodes);
+        let csr_legacy = Csr::symmetric_from_edges(eg.num_nodes, &eg.edges);
+        assert_eq!(g.symmetric_csr(), csr_legacy);
+
+        let mapped = crate::datasets::build(crate::datasets::DatasetKind::Mapped7nm, 4).unwrap();
+        let gm = mapped.to_circuit().unwrap();
+        assert_eq!(gm.num_nodes(), mapped.num_nodes);
+        for u in 0..mapped.num_nodes {
+            assert_eq!(gm.feature_row(u), mapped.features[u]);
+        }
+    }
+
+    #[test]
+    fn adapter_rejects_non_bit_feature_rows() {
+        let mut eg = EdaGraph::from_aig(&csa_multiplier(3));
+        eg.features[2] = [0.5, 0.0, 0.0, 0.0];
+        assert!(eg.to_circuit().is_err());
+        let mut eg2 = EdaGraph::from_aig(&csa_multiplier(3));
+        eg2.features[1] = [1.0, 0.0, 0.0, 0.0]; // type bits [1,0] unused
+        assert!(eg2.to_circuit().is_err());
+    }
+}

@@ -1,0 +1,393 @@
+//! Compact columnar circuit store — the ingestion-layer representation
+//! sized for paper-scale widths (the 1,024-bit CSA multiplier is 134M
+//! nodes / 268M edges; a dense `[f32; 4]` feature matrix alone would be
+//! 2.1 GB before a single partition executes).
+//!
+//! The observation (see `features`): GROOT's 4-dim node features are a
+//! pure function of (node kind, fanin polarities), so the whole feature
+//! row fits in ONE packed descriptor byte per node. Dense `f32` matrices
+//! are materialized *per partition on demand* by the execution stages —
+//! never whole-graph. Edges are stored as flat `u32` CSR-by-destination
+//! arrays (4 B/edge + 4 B/node) instead of `Vec<(u32, u32)>` tuples
+//! (8 B/edge).
+//!
+//! Per-node cost, with the EDA-graph average of ≈2.1 fanin edges/node:
+//!
+//! | store                  | node bytes            | edge bytes | ≈ B/node |
+//! |------------------------|-----------------------|------------|----------|
+//! | legacy `EdaGraph`      | 16 (features) + 1 (label) | 8 (tuple)  | ~34  |
+//! | compact `CircuitGraph` | 1 (desc) + 1 (label) + 4 (ptr) | 4 (src) | ~14.4 |
+//!
+//! — a ≥50% ingestion-store reduction, the in-crate counterpart of the
+//! paper's 59.38% memory-footprint claim. `groot harness memory` writes
+//! the measured numbers to BENCH_memory.json.
+
+use super::source::GraphSource;
+use super::Csr;
+use crate::labels::NUM_CLASSES;
+use anyhow::Result;
+
+/// Node-kind field of a packed descriptor (low 2 bits).
+pub const KIND_INPUT: u8 = 0; // PI or constant
+pub const KIND_AND: u8 = 1;
+pub const KIND_PO: u8 = 2;
+
+const INV_L: u8 = 1 << 2;
+const INV_R: u8 = 1 << 3;
+
+/// Pack (kind, left/right fanin polarity) into one descriptor byte.
+/// PO nodes store their driver polarity in BOTH bits, mirroring the
+/// `[0, 1, inv, inv]` feature row of the legacy encoding.
+#[inline]
+pub fn pack_desc(kind: u8, inv_l: bool, inv_r: bool) -> u8 {
+    debug_assert!(kind <= KIND_PO);
+    kind | if inv_l { INV_L } else { 0 } | if inv_r { INV_R } else { 0 }
+}
+
+#[inline]
+pub fn desc_kind(d: u8) -> u8 {
+    d & 0b11
+}
+
+/// Decode a descriptor byte into the GROOT 4-dim feature row — exactly
+/// the values `EdaGraph::from_aig` writes, so gathered matrices are
+/// bit-identical across representations.
+#[inline]
+pub fn desc_features(d: u8) -> [f32; 4] {
+    let pl = ((d & INV_L) != 0) as u8 as f32;
+    let pr = ((d & INV_R) != 0) as u8 as f32;
+    match desc_kind(d) {
+        KIND_INPUT => [0.0, 0.0, 0.0, 0.0],
+        KIND_AND => [1.0, 1.0, pl, pr],
+        _ => [0.0, 1.0, pl, pr], // KIND_PO (kind 3 is rejected by check())
+    }
+}
+
+/// Columnar EDA graph: packed descriptor bytes, `u8` labels, and fanin
+/// edges in CSR-by-destination form. This is what [`GraphSource`]
+/// ingestion produces and what the streaming execution path reads;
+/// dense feature matrices exist only as per-partition gather outputs.
+#[derive(Clone, Debug)]
+pub struct CircuitGraph {
+    pub name: String,
+    /// Number of underlying AIG nodes (PO graph nodes start at this
+    /// index for single-copy graphs; replicated layouts only guarantee
+    /// `num_aig_nodes ≤ num_nodes`).
+    num_aig_nodes: usize,
+    /// One packed descriptor byte per node (see [`pack_desc`]).
+    desc: Vec<u8>,
+    /// Ground-truth class per node (`0..NUM_CLASSES`).
+    labels: Vec<u8>,
+    /// Fanin sources of node `v` are
+    /// `edge_src[edge_ptr[v] as usize..edge_ptr[v + 1] as usize]`,
+    /// in emission order.
+    edge_ptr: Vec<u32>,
+    edge_src: Vec<u32>,
+}
+
+impl CircuitGraph {
+    /// Drain a [`GraphSource`] into a columnar store. Chunks must arrive
+    /// contiguously from node 0; each chunk's edges must target nodes of
+    /// that chunk in non-decreasing destination order (every in-crate
+    /// source emits fanin edges grouped by their defining node, which
+    /// satisfies this for free).
+    pub fn from_source<S: GraphSource>(mut src: S) -> Result<CircuitGraph> {
+        let hint = src.num_nodes_hint().unwrap_or(0);
+        let name = src.name().to_string();
+        let mut desc: Vec<u8> = Vec::with_capacity(hint);
+        let mut labels: Vec<u8> = Vec::with_capacity(hint);
+        let mut edge_ptr: Vec<u32> = Vec::with_capacity(hint + 1);
+        edge_ptr.push(0);
+        let mut edge_src: Vec<u32> = Vec::new();
+        while let Some(chunk) = src.next_chunk()? {
+            anyhow::ensure!(
+                chunk.start == desc.len(),
+                "source '{name}' emitted chunk at {} but {} nodes are ingested",
+                chunk.start,
+                desc.len()
+            );
+            anyhow::ensure!(
+                chunk.desc.len() == chunk.labels.len(),
+                "chunk at {}: {} descriptors vs {} labels",
+                chunk.start,
+                chunk.desc.len(),
+                chunk.labels.len()
+            );
+            let end = chunk.start + chunk.desc.len();
+            anyhow::ensure!(
+                u32::try_from(end).is_ok()
+                    && u32::try_from(edge_src.len() + chunk.edges.len()).is_ok(),
+                "graph exceeds u32 node/edge index space"
+            );
+            let mut last_dst = chunk.start as u32;
+            for &(s, d) in &chunk.edges {
+                anyhow::ensure!(
+                    (chunk.start..end).contains(&(d as usize)) && d >= last_dst,
+                    "chunk at {}: edge destination {d} out of order or range",
+                    chunk.start
+                );
+                // close the rows between the previous destination and d
+                while edge_ptr.len() <= d as usize {
+                    edge_ptr.push(edge_src.len() as u32);
+                }
+                edge_src.push(s);
+                last_dst = d;
+            }
+            while edge_ptr.len() <= end {
+                edge_ptr.push(edge_src.len() as u32);
+            }
+            desc.extend_from_slice(&chunk.desc);
+            labels.extend_from_slice(&chunk.labels);
+        }
+        let num_aig_nodes = src.aig_prefix().unwrap_or(desc.len());
+        let g = CircuitGraph { name, num_aig_nodes, desc, labels, edge_ptr, edge_src };
+        g.check()?;
+        Ok(g)
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.desc.len()
+    }
+
+    pub fn num_aig_nodes(&self) -> usize {
+        self.num_aig_nodes
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.edge_src.len()
+    }
+
+    pub fn labels_u8(&self) -> &[u8] {
+        &self.labels
+    }
+
+    pub fn desc(&self, u: usize) -> u8 {
+        self.desc[u]
+    }
+
+    /// Contiguous descriptor bytes for nodes `start..start + len` (used
+    /// by re-emitting source combinators).
+    pub fn desc_slice(&self, start: usize, len: usize) -> &[u8] {
+        &self.desc[start..start + len]
+    }
+
+    /// Decoded feature row of one node.
+    pub fn feature_row(&self, u: usize) -> [f32; 4] {
+        desc_features(self.desc[u])
+    }
+
+    /// Fanin sources of node `v` (the directed edge list row).
+    pub fn fanins(&self, v: usize) -> &[u32] {
+        &self.edge_src[self.edge_ptr[v] as usize..self.edge_ptr[v + 1] as usize]
+    }
+
+    /// Directed edges `(src, dst)` grouped by ascending destination —
+    /// for AIG-built circuits this is exactly the legacy `EdaGraph`
+    /// emission order, which keeps content fingerprints representation-
+    /// independent.
+    pub fn edges_iter(&self) -> impl Iterator<Item = (u32, u32)> + Clone + '_ {
+        (0..self.num_nodes()).flat_map(move |v| {
+            self.fanins(v).iter().map(move |&s| (s, v as u32))
+        })
+    }
+
+    /// Append the decoded feature rows of `nodes` to `out` — the
+    /// per-partition gather that replaces the whole-graph dense matrix.
+    pub fn gather_features_into(&self, nodes: &[u32], out: &mut Vec<f32>) {
+        out.reserve(nodes.len() * 4);
+        for &u in nodes {
+            out.extend_from_slice(&desc_features(self.desc[u as usize]));
+        }
+    }
+
+    /// Symmetric closure of the stored fanin edges — the aggregation
+    /// operand, built without materializing a tuple edge list.
+    pub fn symmetric_csr(&self) -> Csr {
+        Csr::symmetric_from_edge_iter(self.num_nodes(), self.edges_iter())
+    }
+
+    /// Heap bytes of the columnar store (exact content bytes; the
+    /// quantity BENCH_memory.json compares against the legacy layout).
+    pub fn resident_bytes(&self) -> usize {
+        self.desc.len()
+            + self.labels.len()
+            + self.edge_ptr.len() * std::mem::size_of::<u32>()
+            + self.edge_src.len() * std::mem::size_of::<u32>()
+    }
+
+    /// Structural validator. Checkpoint/AIGER ingestion makes malformed
+    /// graphs a real input, so out-of-range labels, descriptor kinds,
+    /// edge endpoints, and inconsistent section arithmetic are all
+    /// rejected loudly here (and by [`Self::from_source`]).
+    pub fn check(&self) -> Result<()> {
+        let n = self.num_nodes();
+        anyhow::ensure!(
+            self.num_aig_nodes <= n,
+            "num_aig_nodes {} exceeds num_nodes {n}",
+            self.num_aig_nodes
+        );
+        anyhow::ensure!(self.labels.len() == n, "label column length");
+        anyhow::ensure!(self.edge_ptr.len() == n + 1, "edge_ptr length");
+        anyhow::ensure!(
+            self.edge_ptr[0] == 0 && self.edge_ptr[n] as usize == self.edge_src.len(),
+            "edge_ptr bounds"
+        );
+        anyhow::ensure!(
+            self.edge_ptr.windows(2).all(|w| w[0] <= w[1]),
+            "edge_ptr not monotone"
+        );
+        for (u, &d) in self.desc.iter().enumerate() {
+            anyhow::ensure!(desc_kind(d) <= KIND_PO, "node {u}: invalid descriptor kind");
+        }
+        for (u, &l) in self.labels.iter().enumerate() {
+            anyhow::ensure!(
+                (l as usize) < NUM_CLASSES,
+                "node {u}: label {l} out of range (0..{NUM_CLASSES})"
+            );
+        }
+        for &s in &self.edge_src {
+            anyhow::ensure!((s as usize) < n, "edge source {s} out of range");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::source::{GraphSource, NodeChunk};
+
+    /// Minimal scripted source for exercising the ingest validator.
+    struct Scripted {
+        chunks: Vec<NodeChunk>,
+        at: usize,
+        aig_prefix: Option<usize>,
+    }
+
+    impl GraphSource for Scripted {
+        fn name(&self) -> &str {
+            "scripted"
+        }
+        fn num_nodes_hint(&self) -> Option<usize> {
+            None
+        }
+        fn aig_prefix(&self) -> Option<usize> {
+            self.aig_prefix
+        }
+        fn next_chunk(&mut self) -> Result<Option<NodeChunk>> {
+            if self.at >= self.chunks.len() {
+                return Ok(None);
+            }
+            self.at += 1;
+            Ok(Some(self.chunks[self.at - 1].clone()))
+        }
+    }
+
+    fn two_chunk_source() -> Scripted {
+        Scripted {
+            chunks: vec![
+                NodeChunk {
+                    start: 0,
+                    desc: vec![pack_desc(KIND_INPUT, false, false); 2],
+                    labels: vec![4, 4],
+                    edges: vec![],
+                },
+                NodeChunk {
+                    start: 2,
+                    desc: vec![pack_desc(KIND_AND, true, false), pack_desc(KIND_PO, true, true)],
+                    labels: vec![3, 0],
+                    edges: vec![(0, 2), (1, 2), (2, 3)],
+                },
+            ],
+            at: 0,
+            aig_prefix: Some(3),
+        }
+    }
+
+    #[test]
+    fn from_source_builds_columns() {
+        let g = CircuitGraph::from_source(two_chunk_source()).unwrap();
+        assert_eq!(g.num_nodes(), 4);
+        assert_eq!(g.num_aig_nodes(), 3);
+        assert_eq!(g.num_edges(), 3);
+        assert_eq!(g.fanins(2), &[0, 1]);
+        assert_eq!(g.fanins(3), &[2]);
+        assert_eq!(g.feature_row(2), [1.0, 1.0, 1.0, 0.0]);
+        assert_eq!(g.feature_row(3), [0.0, 1.0, 1.0, 1.0]);
+        assert_eq!(g.edges_iter().collect::<Vec<_>>(), vec![(0, 2), (1, 2), (2, 3)]);
+    }
+
+    #[test]
+    fn from_source_rejects_gaps_and_bad_edges() {
+        let mut s = two_chunk_source();
+        s.chunks[1].start = 3; // gap
+        assert!(CircuitGraph::from_source(s).is_err());
+
+        let mut s = two_chunk_source();
+        s.chunks[1].edges = vec![(0, 1)]; // dst outside the chunk
+        assert!(CircuitGraph::from_source(s).is_err());
+
+        let mut s = two_chunk_source();
+        s.chunks[1].edges = vec![(2, 3), (0, 2)]; // dst order violated
+        assert!(CircuitGraph::from_source(s).is_err());
+    }
+
+    #[test]
+    fn check_rejects_malformed_columns() {
+        let good = CircuitGraph::from_source(two_chunk_source()).unwrap();
+        good.check().unwrap();
+
+        let mut bad = good.clone();
+        bad.labels[1] = NUM_CLASSES as u8; // out-of-range label
+        assert!(bad.check().is_err());
+
+        let mut bad = good.clone();
+        bad.num_aig_nodes = bad.num_nodes() + 1; // aig prefix overruns
+        assert!(bad.check().is_err());
+
+        let mut bad = good.clone();
+        bad.edge_src[0] = 99; // dangling source
+        assert!(bad.check().is_err());
+
+        let mut bad = good;
+        bad.desc[0] = 0b11; // invalid kind
+        assert!(bad.check().is_err());
+    }
+
+    #[test]
+    fn aig_prefix_overrun_rejected_at_ingest() {
+        let mut s = two_chunk_source();
+        s.aig_prefix = Some(5);
+        assert!(CircuitGraph::from_source(s).is_err());
+    }
+
+    #[test]
+    fn desc_roundtrip_covers_all_rows() {
+        for (kind, pl, pr, want) in [
+            (KIND_INPUT, false, false, [0.0, 0.0, 0.0, 0.0]),
+            (KIND_AND, false, false, [1.0, 1.0, 0.0, 0.0]),
+            (KIND_AND, true, false, [1.0, 1.0, 1.0, 0.0]),
+            (KIND_AND, false, true, [1.0, 1.0, 0.0, 1.0]),
+            (KIND_AND, true, true, [1.0, 1.0, 1.0, 1.0]),
+            (KIND_PO, false, false, [0.0, 1.0, 0.0, 0.0]),
+            (KIND_PO, true, true, [0.0, 1.0, 1.0, 1.0]),
+        ] {
+            assert_eq!(desc_features(pack_desc(kind, pl, pr)), want);
+        }
+    }
+
+    #[test]
+    fn resident_bytes_counts_all_columns() {
+        let g = CircuitGraph::from_source(two_chunk_source()).unwrap();
+        // 4 desc + 4 labels + 5×4 ptr + 3×4 src
+        assert_eq!(g.resident_bytes(), 4 + 4 + 20 + 12);
+    }
+
+    #[test]
+    fn symmetric_csr_matches_tuple_build() {
+        let g = CircuitGraph::from_source(two_chunk_source()).unwrap();
+        let edges: Vec<(u32, u32)> = g.edges_iter().collect();
+        let want = Csr::symmetric_from_edges(g.num_nodes(), &edges);
+        assert_eq!(g.symmetric_csr(), want);
+    }
+}

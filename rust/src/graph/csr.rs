@@ -37,11 +37,27 @@ impl Csr {
     /// Build the symmetric closure: for every (s,d), both s→d and d→s.
     /// This is the adjacency the GNN aggregation uses.
     pub fn symmetric_from_edges(n: usize, edges: &[(u32, u32)]) -> Csr {
+        Self::symmetric_from_edge_iter(n, edges.iter().copied())
+    }
+
+    /// Symmetric closure from any re-iterable edge stream — lets the
+    /// columnar [`super::CircuitGraph`] build its adjacency without
+    /// materializing an 8-byte tuple per edge first.
+    pub fn symmetric_from_edge_iter(
+        n: usize,
+        edges: impl Iterator<Item = (u32, u32)> + Clone,
+    ) -> Csr {
         let doubled = edges
-            .iter()
-            .flat_map(|&(s, d)| [(s, d), (d, s)])
+            .flat_map(|(s, d)| [(s, d), (d, s)])
             .filter(|&(s, d)| s != d);
         Self::build(n, doubled)
+    }
+
+    /// Heap bytes held by the adjacency arrays (memory-accounting hook
+    /// for the streaming executor and harnesses).
+    pub fn resident_bytes(&self) -> usize {
+        self.row_ptr.len() * std::mem::size_of::<usize>()
+            + self.col_idx.len() * std::mem::size_of::<u32>()
     }
 
     fn build(n: usize, edges: impl Iterator<Item = (u32, u32)> + Clone) -> Csr {

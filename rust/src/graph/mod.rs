@@ -10,8 +10,17 @@
 //! low-degree nodes (AIG fanin ≤ 2) plus a few extremely high-degree
 //! macro rows.
 
+//! [`CircuitGraph`] is the compact columnar circuit store (packed
+//! descriptor bytes + flat CSR edge arrays) that [`GraphSource`]
+//! streaming ingestion produces — the paper-scale replacement for the
+//! dense-feature `EdaGraph` layout.
+
+pub mod circuit;
 pub mod csr;
 pub mod profile;
+pub mod source;
 
+pub use circuit::CircuitGraph;
 pub use csr::Csr;
 pub use profile::DegreeProfile;
+pub use source::{GraphSource, NodeChunk, ReplicateSource, DEFAULT_CHUNK_NODES};

@@ -1,0 +1,233 @@
+//! Streaming graph ingestion — the `GraphSource` seam.
+//!
+//! Every circuit producer (the AIG generators, the AIGER reader, the
+//! legacy `EdaGraph` adapter) emits the graph as a sequence of bounded
+//! [`NodeChunk`]s instead of handing over one monolithic object, and
+//! [`super::CircuitGraph::from_source`] folds the chunks into the compact
+//! columnar store. Ingestion peak memory is therefore
+//! `columnar store + one chunk`, never `producer + dense features +
+//! tuple edge list` all at once — the graph-construction-as-API framing
+//! the Verilog-to-PyG line of work argues for (PAPERS.md).
+//!
+//! Chunk contract (validated by `from_source`):
+//! * chunks cover node ids contiguously from 0;
+//! * `edges` are fanin edges `(src, dst)` whose `dst` lies in the chunk,
+//!   in non-decreasing `dst` order (sources may reference any node id);
+//! * `desc`/`labels` are the packed descriptor and class columns for the
+//!   chunk's nodes (see [`super::circuit`]).
+
+use super::circuit::CircuitGraph;
+use anyhow::Result;
+
+/// Default nodes-per-chunk for the in-crate sources: small enough that a
+/// chunk is noise next to the columnar store, large enough to amortize
+/// the per-chunk bookkeeping.
+pub const DEFAULT_CHUNK_NODES: usize = 8192;
+
+/// One bounded slice of a streamed circuit: nodes
+/// `start..start + desc.len()` plus the fanin edges that terminate in it.
+#[derive(Clone, Debug, Default)]
+pub struct NodeChunk {
+    /// Global id of the chunk's first node.
+    pub start: usize,
+    /// Packed node descriptors (see [`super::circuit::pack_desc`]).
+    pub desc: Vec<u8>,
+    /// Ground-truth class per node.
+    pub labels: Vec<u8>,
+    /// Fanin edges `(src, dst)` with `dst` inside this chunk, grouped by
+    /// non-decreasing `dst`.
+    pub edges: Vec<(u32, u32)>,
+}
+
+impl NodeChunk {
+    pub fn len(&self) -> usize {
+        self.desc.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.desc.is_empty()
+    }
+}
+
+/// A chunked circuit emitter. Implemented by the AIG generator frontends
+/// (`aig::{adders, mult, booth, wallace}` via `features::stream::AigSource`),
+/// the AIGER reader (`aig::aiger::source_from_aag`), and the back-compat
+/// `EdaGraph` adapter (`features::stream::EdaGraphSource`).
+pub trait GraphSource {
+    /// Circuit name (becomes `CircuitGraph::name`).
+    fn name(&self) -> &str;
+
+    /// Total nodes this source will emit, if known up front (enables
+    /// exact preallocation of the columnar store).
+    fn num_nodes_hint(&self) -> Option<usize> {
+        None
+    }
+
+    /// The `num_aig_nodes` value to stamp on the ingested graph (`None`
+    /// = every node, the convention for layouts without an AIG prefix).
+    fn aig_prefix(&self) -> Option<usize> {
+        None
+    }
+
+    /// Emit the next chunk, or `None` when the circuit is exhausted.
+    fn next_chunk(&mut self) -> Result<Option<NodeChunk>>;
+}
+
+impl<S: GraphSource + ?Sized> GraphSource for Box<S> {
+    fn name(&self) -> &str {
+        (**self).name()
+    }
+    fn num_nodes_hint(&self) -> Option<usize> {
+        (**self).num_nodes_hint()
+    }
+    fn aig_prefix(&self) -> Option<usize> {
+        (**self).aig_prefix()
+    }
+    fn next_chunk(&mut self) -> Result<Option<NodeChunk>> {
+        (**self).next_chunk()
+    }
+}
+
+/// Batch replication as a source combinator: emits `batch` disjoint
+/// copies of a base circuit (copy `c`'s node `u` becomes `c·n + u`),
+/// mirroring `EdaGraph::replicate` — the paper's "batch size 16"
+/// workloads are 16 disjoint graph copies processed together. The base
+/// is ingested once into its compact columnar form and re-emitted with
+/// offset arithmetic, so peak memory is one compact copy, not `batch`
+/// legacy graphs.
+pub struct ReplicateSource {
+    base: CircuitGraph,
+    name: String,
+    batch: usize,
+    chunk: usize,
+    /// Next global node id to emit, over `0..batch * base.num_nodes()`.
+    cursor: usize,
+}
+
+impl ReplicateSource {
+    pub fn new<S: GraphSource>(base: S, batch: usize, chunk: usize) -> Result<ReplicateSource> {
+        anyhow::ensure!(batch >= 1, "batch must be ≥ 1");
+        let base = CircuitGraph::from_source(base)?;
+        Ok(Self::from_circuit(base, batch, chunk))
+    }
+
+    pub fn from_circuit(base: CircuitGraph, batch: usize, chunk: usize) -> ReplicateSource {
+        let name = if batch == 1 {
+            base.name.clone()
+        } else {
+            format!("{}_x{batch}", base.name)
+        };
+        ReplicateSource { base, name, batch, chunk: chunk.max(1), cursor: 0 }
+    }
+}
+
+impl GraphSource for ReplicateSource {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn num_nodes_hint(&self) -> Option<usize> {
+        Some(self.base.num_nodes() * self.batch)
+    }
+
+    fn aig_prefix(&self) -> Option<usize> {
+        // per-copy layout preserved, matching EdaGraph::replicate
+        Some(self.base.num_aig_nodes() * self.batch)
+    }
+
+    fn next_chunk(&mut self) -> Result<Option<NodeChunk>> {
+        let n = self.base.num_nodes();
+        if n == 0 || self.cursor >= n * self.batch {
+            return Ok(None);
+        }
+        let copy = self.cursor / n;
+        let local = self.cursor - copy * n;
+        // never cross a copy boundary: keeps the offset math per-chunk
+        let take = self.chunk.min(n - local);
+        let off = (copy * n) as u32;
+        let mut edges = Vec::new();
+        for v in local..local + take {
+            for &s in self.base.fanins(v) {
+                edges.push((s + off, v as u32 + off));
+            }
+        }
+        let chunk = NodeChunk {
+            start: self.cursor,
+            desc: self.base.desc_slice(local, take).to_vec(),
+            labels: self.base.labels_u8()[local..local + take].to_vec(),
+            edges,
+        };
+        self.cursor += take;
+        Ok(Some(chunk))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::circuit::{pack_desc, KIND_AND, KIND_INPUT, KIND_PO};
+    use super::*;
+
+    #[derive(Default)]
+    struct Tiny {
+        done: bool,
+    }
+
+    impl GraphSource for Tiny {
+        fn name(&self) -> &str {
+            "tiny"
+        }
+        fn num_nodes_hint(&self) -> Option<usize> {
+            Some(3)
+        }
+        fn aig_prefix(&self) -> Option<usize> {
+            Some(2)
+        }
+        fn next_chunk(&mut self) -> Result<Option<NodeChunk>> {
+            // one-shot source: PI, AND(PI), PO
+            if std::mem::replace(&mut self.done, true) {
+                return Ok(None);
+            }
+            Ok(Some(NodeChunk {
+                start: 0,
+                desc: vec![
+                    pack_desc(KIND_INPUT, false, false),
+                    pack_desc(KIND_AND, false, true),
+                    pack_desc(KIND_PO, false, false),
+                ],
+                labels: vec![4, 3, 0],
+                edges: vec![(0, 1), (0, 1), (1, 2)],
+            }))
+        }
+    }
+
+    #[test]
+    fn replicate_source_offsets_copies() {
+        let base = CircuitGraph::from_source(Tiny::default()).unwrap();
+        let r = ReplicateSource::from_circuit(base.clone(), 3, 2);
+        let g = CircuitGraph::from_source(r).unwrap();
+        assert_eq!(g.num_nodes(), 9);
+        assert_eq!(g.num_aig_nodes(), 6);
+        assert_eq!(g.num_edges(), 3 * base.num_edges());
+        // copy 2's AND node reads copy 2's PI
+        assert_eq!(g.fanins(7), &[6, 6]);
+        assert_eq!(g.feature_row(7), base.feature_row(1));
+        assert_eq!(g.labels_u8()[6..9], *base.labels_u8());
+        // no edge crosses copies
+        for (s, d) in g.edges_iter() {
+            assert_eq!(s / 3, d / 3, "edge {s}->{d} crosses copies");
+        }
+    }
+
+    #[test]
+    fn replicate_batch_one_is_identity() {
+        let base = CircuitGraph::from_source(Tiny::default()).unwrap();
+        let g =
+            CircuitGraph::from_source(ReplicateSource::from_circuit(base.clone(), 1, 1)).unwrap();
+        assert_eq!(g.num_nodes(), base.num_nodes());
+        assert_eq!(g.name, base.name);
+        assert_eq!(
+            g.edges_iter().collect::<Vec<_>>(),
+            base.edges_iter().collect::<Vec<_>>()
+        );
+    }
+}

@@ -27,6 +27,12 @@ struct BenchRow {
     warm_median_s: f64,
     speedup: f64,
     warm_knodes_per_s: f64,
+    /// Out-of-core path: compact store + windowed execution (window 4).
+    stream_median_s: f64,
+    /// Peak execution-buffer bytes, streaming vs eager — the measured
+    /// out-of-core memory ratio.
+    stream_peak_bytes: usize,
+    eager_exec_bytes: usize,
 }
 
 pub fn bench_pipeline(weights: &str, quick: bool, out_path: &str) -> Result<()> {
@@ -41,8 +47,18 @@ pub fn bench_pipeline(weights: &str, quick: bool, out_path: &str) -> Result<()> 
     };
 
     let mut t = Table::new(
-        "Pipeline classify throughput — cold (prepare+plan+execute) vs plan-cache-warm",
-        &["dataset", "nodes", "parts", "cold median", "warm median", "speedup", "warm knodes/s"],
+        "Pipeline classify throughput — cold vs plan-cache-warm vs streaming (window 4)",
+        &[
+            "dataset",
+            "nodes",
+            "parts",
+            "cold median",
+            "warm median",
+            "speedup",
+            "warm knodes/s",
+            "stream median",
+            "exec mem stream/eager",
+        ],
     );
     let mut rows = Vec::new();
     for (bits, parts) in cases {
@@ -56,15 +72,35 @@ pub fn bench_pipeline(weights: &str, quick: bool, out_path: &str) -> Result<()> 
             session.classify_plan(&prepared, &plan, false).expect("cold classify")
         });
 
-        // warm: plan served from the LRU, execution stage only
+        // warm: plan served from the LRU, execution stage only (the last
+        // benched result doubles as the eager exec-memory sample)
         let prepared = PreparedGraph::new(&graph);
         let mut cache = PlanCache::default();
         cache.get_or_build(&prepared, &opts); // populate
+        let mut eager_last = None;
         let warm = bench_for(budget, || {
             let (plan, hit) = cache.get_or_build(&prepared, &opts);
             assert!(hit, "warm path must hit the plan cache");
-            session.classify_plan(&prepared, &plan, hit).expect("warm classify")
+            eager_last =
+                Some(session.classify_plan(&prepared, &plan, hit).expect("warm classify"));
         });
+        let eager_res = eager_last.expect("warm bench ran at least once");
+
+        // streaming: compact columnar store, windowed execution over a
+        // prebuilt lean plan — bounded memory is the point; the bench
+        // records the execution-stage time cost
+        let compact =
+            PreparedGraph::from_source(datasets::source(DatasetKind::Csa, bits, 4096)?)?;
+        let stream_plan = compact.plan_stream(&opts);
+        let mut stream_last = None;
+        let stream = bench_for(budget, || {
+            stream_last = Some(
+                session
+                    .classify_stream_plan(&compact, &stream_plan, 4)
+                    .expect("stream classify"),
+            );
+        });
+        let stream_res = stream_last.expect("stream bench ran at least once");
 
         let row = BenchRow {
             dataset: format!("csa{bits}"),
@@ -76,6 +112,9 @@ pub fn bench_pipeline(weights: &str, quick: bool, out_path: &str) -> Result<()> 
             warm_knodes_per_s: graph.num_nodes as f64
                 / warm.median_secs().max(1e-12)
                 / 1e3,
+            stream_median_s: stream.median_secs(),
+            stream_peak_bytes: stream_res.stats.peak_resident_bytes,
+            eager_exec_bytes: eager_res.stats.peak_resident_bytes,
         };
         t.row(vec![
             row.dataset.clone(),
@@ -85,6 +124,11 @@ pub fn bench_pipeline(weights: &str, quick: bool, out_path: &str) -> Result<()> 
             fmt_dur(warm.median),
             format!("{:.2}x", row.speedup),
             format!("{:.1}", row.warm_knodes_per_s),
+            fmt_dur(stream.median),
+            format!(
+                "{:.0}%",
+                100.0 * row.stream_peak_bytes as f64 / row.eager_exec_bytes.max(1) as f64
+            ),
         ]);
         rows.push(row);
     }
@@ -105,7 +149,9 @@ fn render_json(rows: &[BenchRow]) -> String {
         s.push_str(&format!(
             "    {{\"dataset\": \"{}\", \"nodes\": {}, \"partitions\": {}, \
              \"cold_median_s\": {:.6}, \"warm_median_s\": {:.6}, \
-             \"plan_cache_speedup\": {:.3}, \"warm_knodes_per_s\": {:.1}}}{}\n",
+             \"plan_cache_speedup\": {:.3}, \"warm_knodes_per_s\": {:.1}, \
+             \"stream_median_s\": {:.6}, \"stream_peak_bytes\": {}, \
+             \"eager_exec_bytes\": {}}}{}\n",
             r.dataset,
             r.nodes,
             r.partitions,
@@ -113,6 +159,9 @@ fn render_json(rows: &[BenchRow]) -> String {
             r.warm_median_s,
             r.speedup,
             r.warm_knodes_per_s,
+            r.stream_median_s,
+            r.stream_peak_bytes,
+            r.eager_exec_bytes,
             if i + 1 < rows.len() { "," } else { "" }
         ));
     }
@@ -220,7 +269,9 @@ fn render_train_json(rows: &[TrainBenchRow]) -> String {
 
 /// Fixed-weight 4→16→5 model for artifact-free benching (values are
 /// arbitrary but deterministic; small enough to keep activations finite).
-fn synthetic_model() -> SageModel {
+/// Shared with the memory harness, which measures footprints, not
+/// accuracy.
+pub(crate) fn synthetic_model() -> SageModel {
     let wave = |n: usize, scale: f32| -> Vec<f32> {
         (0..n).map(|i| ((i as f32 * 0.7).sin()) * scale).collect()
     };
@@ -258,10 +309,14 @@ mod tests {
             warm_median_s: 0.002,
             speedup: 5.0,
             warm_knodes_per_s: 4500.0,
+            stream_median_s: 0.012,
+            stream_peak_bytes: 50_000,
+            eager_exec_bytes: 220_000,
         }];
         let s = render_json(&rows);
         assert!(s.contains("\"dataset\": \"csa16\""));
         assert!(s.contains("\"plan_cache_speedup\": 5.000"));
+        assert!(s.contains("\"stream_peak_bytes\": 50000"));
         assert_eq!(s.matches('{').count(), s.matches('}').count());
         assert_eq!(s.matches('[').count(), s.matches(']').count());
     }

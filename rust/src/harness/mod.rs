@@ -40,6 +40,10 @@ pub fn run(which: &str, args: &mut Args) -> Result<()> {
         ),
         "fig8" => memory::fig8(quick),
         "tab2" => memory::tab2(),
+        "memory" => {
+            let out = args.get_or("out", "BENCH_memory.json");
+            memory::bench_memory(quick, &out)
+        }
         "fig9" => runtime::fig9(quick),
         "fig10" => runtime::fig10(&weights, quick),
         "bench" => {
@@ -55,7 +59,7 @@ pub fn run(which: &str, args: &mut Args) -> Result<()> {
         "ablation-features" => accuracy::ablation_features(&weights, quick),
         other => bail!(
             "unknown harness '{other}' \
-             (fig1a|fig6a..d|fig7|fig8|fig9|fig10|tab2|bench|\
+             (fig1a|fig6a..d|fig7|fig8|fig9|fig10|tab2|bench|memory|\
               ablation-partitioners|ablation-features)"
         ),
     }

@@ -29,6 +29,8 @@ fn run() -> Result<()> {
         "quick",
         "train",
         "assert-improves",
+        "stream",
+        "oracle",
     ]);
     let cmd = args.positional.first().cloned().unwrap_or_else(|| "help".into());
     match cmd.as_str() {
@@ -53,14 +55,22 @@ USAGE:
   groot gen-dataset --out DIR [--specs csa8,csa16,fpga64,...]
   groot classify --dataset csa --bits 16 [--partitions 8] [--no-regrow]
                  [--backend native|xla] [--artifacts DIR] [--weights FILE]
+                 [--batch N (disjoint graph copies)]
+                 [--stream [--window 4] [--chunk 8192]]
   groot verify   --dataset csa --bits 16 [same options as classify]
+                 [--oracle (ground-truth labels feed the algebraic stage)]
+
+  --stream ingests the circuit through a chunked GraphSource into the
+  compact columnar store and executes partitions through the backend one
+  bounded window at a time: peak execution memory ~ largest window, not
+  the whole graph. Predictions are byte-identical to the eager path.
   groot train    --dataset csa --bits 8 [--val-bits 16,32] [--epochs 200]
                  [--lr 0.01] [--hidden 64,64] [--partitions 4] [--seed 0]
                  [--threads N (SpMM engine lanes; matmuls follow GROOT_THREADS)]
                  [--out FILE] [--checkpoint-every 25] [--eval-every 10]
                  [--resume CKPT] [--assert-improves]
-  groot harness  fig1a|fig6a|fig6b|fig6c|fig6d|fig7|fig8|fig9|fig10|tab2|bench
-                 [--weights FILE] [--quick] [--train (bench)] [--out FILE (bench)]
+  groot harness  fig1a|fig6a|fig6b|fig6c|fig6d|fig7|fig8|fig9|fig10|tab2|bench|memory
+                 [--weights FILE] [--quick] [--train (bench)] [--out FILE (bench|memory)]
   groot info     --dataset csa --bits 16
 
 The paper's flow end-to-end from nothing but the circuit generators:
@@ -119,23 +129,72 @@ fn session_config(args: &mut Args) -> Result<SessionConfig> {
     })
 }
 
-fn classify(args: &mut Args) -> Result<()> {
-    let (kind, bits) = parse_dataset(args)?;
-    let cfg = session_config(args)?;
-    let backend = build_backend(args, cfg.threads)?;
-    let graph = datasets::build(kind, bits)?;
-    println!(
-        "dataset {}{}: {} nodes, {} edges; backend={}, partitions={}, regrow={}",
-        kind.name(),
-        bits,
-        graph.num_nodes,
-        graph.num_edges(),
-        backend.name(),
-        cfg.num_partitions,
-        cfg.regrow
-    );
-    let session = Session::new(backend, cfg);
-    let res = session.classify(&graph)?;
+/// The classify/verify ingestion knobs shared by both subcommands.
+struct IngestOptions {
+    stream: bool,
+    batch: usize,
+    window: usize,
+    chunk: usize,
+}
+
+fn ingest_options(args: &mut Args) -> Result<IngestOptions> {
+    Ok(IngestOptions {
+        stream: args.flag("stream"),
+        batch: args.parse_or("batch", 1usize)?,
+        window: args.parse_or("window", 4usize)?,
+        chunk: args.parse_or("chunk", groot::graph::DEFAULT_CHUNK_NODES)?,
+    })
+}
+
+/// Run classification through either ingestion path; returns the result
+/// plus the graph-shape facts verification needs. Ground-truth labels
+/// are materialized only when asked for (`verify --oracle`) — `classify`
+/// must not copy a whole-graph column just to drop it.
+fn run_classify(
+    session: &Session,
+    kind: DatasetKind,
+    bits: usize,
+    ing: &IngestOptions,
+    want_labels: bool,
+) -> Result<(groot::coordinator::ClassifyResult, usize, usize, Option<Vec<u8>>)> {
+    if ing.stream {
+        let prepared = groot::coordinator::PreparedGraph::from_source(
+            datasets::replicated_source(kind, bits, ing.batch, ing.chunk)?,
+        )?;
+        println!(
+            "dataset {}{} (batch {}): {} nodes, {} edges; compact store {:.1} B/node, \
+             streaming window {}",
+            kind.name(),
+            bits,
+            ing.batch,
+            prepared.num_nodes(),
+            prepared.num_edges(),
+            prepared.resident_bytes() as f64 / prepared.num_nodes().max(1) as f64,
+            ing.window
+        );
+        let res = session.classify_streaming(&prepared, ing.window)?;
+        let labels = want_labels.then(|| prepared.labels_u8().into_owned());
+        Ok((res, prepared.num_nodes(), prepared.num_aig_nodes(), labels))
+    } else {
+        let mut graph = datasets::build(kind, bits)?;
+        if ing.batch > 1 {
+            graph = graph.replicate(ing.batch);
+        }
+        println!(
+            "dataset {}{} (batch {}): {} nodes, {} edges; eager pipeline",
+            kind.name(),
+            bits,
+            ing.batch,
+            graph.num_nodes,
+            graph.num_edges()
+        );
+        let res = session.classify(&graph)?;
+        let labels = want_labels.then(|| graph.labels_u8());
+        Ok((res, graph.num_nodes, graph.num_aig_nodes, labels))
+    }
+}
+
+fn print_run_stats(res: &groot::coordinator::ClassifyResult) {
     println!(
         "accuracy {:.4}  (partition {:?}, regrowth {:?}, gather {:?}, infer {:?}; \
          batch of {} partitions)",
@@ -147,33 +206,63 @@ fn classify(args: &mut Args) -> Result<()> {
         res.stats.batch_size
     );
     println!(
-        "boundary nodes {}, crossing edges {}, max partition {} nodes, peak bucket {}",
+        "boundary nodes {}, crossing edges {}, max partition {} nodes, peak bucket {}, \
+         exec working set {:.2} MB",
         res.stats.total_boundary_nodes,
         res.stats.total_crossing_edges,
         res.stats.max_partition_nodes,
-        res.stats.peak_bucket_n
+        res.stats.peak_bucket_n,
+        res.stats.peak_resident_bytes as f64 / 1e6
     );
+}
+
+fn classify(args: &mut Args) -> Result<()> {
+    let (kind, bits) = parse_dataset(args)?;
+    let cfg = session_config(args)?;
+    let ing = ingest_options(args)?;
+    let backend = build_backend(args, cfg.threads)?;
+    println!(
+        "backend={}, partitions={}, regrow={}",
+        backend.name(),
+        cfg.num_partitions,
+        cfg.regrow
+    );
+    let session = Session::new(backend, cfg);
+    let (res, _, _, _) = run_classify(&session, kind, bits, &ing, false)?;
+    print_run_stats(&res);
     Ok(())
 }
 
 fn verify(args: &mut Args) -> Result<()> {
     let (kind, bits) = parse_dataset(args)?;
     let cfg = session_config(args)?;
+    let ing = ingest_options(args)?;
+    let oracle = args.flag("oracle");
     let backend = build_backend(args, cfg.threads)?;
-    let graph = datasets::build(kind, bits)?;
     let session = Session::new(backend, cfg);
-    let t0 = std::time::Instant::now();
-    let res = session.classify(&graph)?;
     let aig = match kind {
         DatasetKind::Csa => groot::aig::mult::csa_multiplier(bits),
         DatasetKind::Booth => groot::aig::booth::booth_multiplier(bits),
         DatasetKind::Wallace => groot::aig::wallace::wallace_multiplier(bits),
         _ => bail!("algebraic verification targets AIG datasets (csa|booth|wallace)"),
     };
-    let outcome = groot::verify::verify_multiplier(&aig, &graph, &res.pred)?;
+    let t0 = std::time::Instant::now();
+    let (res, num_nodes, num_aig_nodes, labels) =
+        run_classify(&session, kind, bits, &ing, oracle)?;
+    print_run_stats(&res);
+    // --oracle: the classification stage still ran above (the memory
+    // path CI caps), but the algebraic stage consumes ground-truth
+    // labels — removes model-quality variance from memory-cap jobs.
+    let pred = match &labels {
+        Some(l) => l,
+        None => &res.pred,
+    };
+    let outcome =
+        groot::verify::verify_multiplier_pred(&aig, num_nodes, num_aig_nodes, pred)?;
     println!(
-        "classification accuracy {:.4}; algebraic check: {} ({} adders used; {:?} total)",
+        "classification accuracy {:.4}{}; algebraic check: {} ({} adders used; {:?} total)",
         res.accuracy,
+        if oracle { " [oracle predictions for rewriting]" } else { "" },
         if outcome.equivalent { "EQUIVALENT ✓" } else { "NOT PROVEN ✗" },
         outcome.adders_used,
         t0.elapsed()

@@ -62,11 +62,15 @@ pub fn regrow_partitions(
     parts
         .iter()
         .enumerate()
-        .map(|(p, core)| build_partition(csr, assignment, p, core, regrow))
+        .map(|(p, core)| regrow_one(csr, assignment, p, core, regrow))
         .collect()
 }
 
-fn build_partition(
+/// Algorithm 1 for a single partition — the unit the out-of-core
+/// streaming executor re-runs per bounded window so only the window's
+/// partitions are ever materialized at once. `core` must be exactly the
+/// nodes with `assignment[u] == p`.
+pub fn regrow_one(
     csr: &Csr,
     assignment: &[u32],
     p: usize,

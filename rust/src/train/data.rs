@@ -56,12 +56,25 @@ impl Dataloader {
     /// turn the partitions into labeled batches. `partitions = 1` yields
     /// one full-graph batch per graph (no boundary).
     pub fn new(graphs: &[EdaGraph], partitions: usize, seed: u64) -> Dataloader {
+        let prepared: Vec<PreparedGraph<'_>> =
+            graphs.iter().map(PreparedGraph::new).collect();
+        Self::from_prepared(&prepared, partitions, seed)
+    }
+
+    /// Same, over already-prepared graphs — this is how streamed/compact
+    /// circuits (`PreparedGraph::from_source`) enter training without a
+    /// legacy `EdaGraph` detour: the plan gather decodes packed bytes
+    /// per partition exactly as serving does.
+    pub fn from_prepared(
+        graphs: &[PreparedGraph<'_>],
+        partitions: usize,
+        seed: u64,
+    ) -> Dataloader {
         let mut batches = Vec::new();
-        for (gi, g) in graphs.iter().enumerate() {
-            let prepared = PreparedGraph::new(g);
+        for (gi, prepared) in graphs.iter().enumerate() {
             let plan =
                 prepared.plan(&PlanOptions { partitions: partitions.max(1), regrow: true, seed });
-            let labels = g.labels_u8();
+            let labels = prepared.labels_u8();
             for part in plan.parts {
                 if part.nodes.is_empty() {
                     continue;
@@ -203,6 +216,24 @@ mod tests {
         }
         let n: usize = l.iter_indexed().count();
         assert_eq!(n, l.num_batches());
+    }
+
+    #[test]
+    fn compact_prepared_graphs_yield_identical_batches() {
+        // Training over a streamed/compact circuit must see the exact
+        // tensors the legacy path builds.
+        let g = graph();
+        let legacy = Dataloader::new(std::slice::from_ref(&g), 3, 7);
+        let compact = PreparedGraph::from_circuit(g.to_circuit().unwrap());
+        let streamed = Dataloader::from_prepared(std::slice::from_ref(&compact), 3, 7);
+        assert_eq!(legacy.num_batches(), streamed.num_batches());
+        for (a, b) in legacy.batches().iter().zip(streamed.batches()) {
+            assert_eq!(a.part_id, b.part_id);
+            assert_eq!(a.num_core, b.num_core);
+            assert_eq!(a.csr, b.csr);
+            assert_eq!(a.features, b.features);
+            assert_eq!(a.labels, b.labels);
+        }
     }
 
     #[test]

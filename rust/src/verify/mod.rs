@@ -30,15 +30,35 @@ pub fn default_max_terms(aig: &Aig) -> usize {
 /// (ids < graph.num_aig_nodes) is consulted — PO graph nodes have no
 /// substitution role.
 pub fn verify_multiplier(aig: &Aig, graph: &EdaGraph, pred: &[u8]) -> Result<Outcome> {
+    verify_multiplier_pred(aig, graph.num_nodes, graph.num_aig_nodes, pred)
+}
+
+/// Representation-independent form of [`verify_multiplier`]: takes the
+/// graph-shape facts (total node count, AIG-node prefix) instead of a
+/// legacy `EdaGraph`, so the streaming pipeline can verify straight from
+/// a compact `CircuitGraph` / `PreparedGraph` without ever materializing
+/// the dense representation.
+pub fn verify_multiplier_pred(
+    aig: &Aig,
+    num_graph_nodes: usize,
+    num_aig_nodes: usize,
+    pred: &[u8],
+) -> Result<Outcome> {
     anyhow::ensure!(
-        pred.len() == graph.num_nodes,
+        pred.len() == num_graph_nodes,
         "prediction length {} != graph nodes {}",
         pred.len(),
-        graph.num_nodes
+        num_graph_nodes
     );
     anyhow::ensure!(
-        graph.num_aig_nodes == aig.num_nodes() || graph.num_aig_nodes % aig.num_nodes() == 0,
+        num_aig_nodes == aig.num_nodes() || num_aig_nodes % aig.num_nodes() == 0,
         "graph does not correspond to this AIG"
+    );
+    anyhow::ensure!(
+        pred.len() >= aig.num_nodes(),
+        "{} predictions cannot cover the {}-node AIG",
+        pred.len(),
+        aig.num_nodes()
     );
     let aig_pred = &pred[..aig.num_nodes()];
     let plan = rewrite::plan_from_predictions(aig, aig_pred);
