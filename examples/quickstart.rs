@@ -125,5 +125,11 @@ fn main() -> anyhow::Result<()> {
     );
     anyhow::ensure!(outcome.equivalent, "verification failed: {:?}", outcome.reason);
     println!("\nquickstart OK");
+    println!(
+        "next: `cargo run --release --example serve` runs this as a concurrent \
+         service (N workers × split thread budget — see --workers / \
+         SessionConfig::workers), and `groot harness bench --serve` sweeps its \
+         throughput."
+    );
     Ok(())
 }

@@ -1,13 +1,16 @@
-//! Verification service — GROOT as a long-running server (the run-time
-//! verification deployment the paper motivates): a router thread owns the
-//! model AND the partition-plan cache, clients submit circuits with
-//! per-request [`VerifyOptions`], and each request's partition count
-//! adapts to the design size.
+//! Verification service — GROOT as a long-running concurrent server (the
+//! run-time verification deployment the paper motivates): N worker
+//! threads pull from a bounded submission queue, each owns its own
+//! backend, and all share one sharded partition-plan cache. Clients
+//! submit circuits with per-request [`VerifyOptions`]; each request's
+//! partition count adapts to the design size.
 //!
 //! The workload deliberately repeats circuits: repeat requests hit the
-//! router's plan LRU (no partitioning/re-growth/gathering) and the
-//! per-request stats show it. All of a request's partitions go through
-//! one `infer_batch` call.
+//! shared plan cache (no partitioning/re-growth/gathering — on ANY
+//! worker, warmed by whichever worker planned first) and the per-request
+//! stats show it. Within a request all partitions go through one
+//! `infer_batch` call, which fans them out across the backend's thread
+//! budget. Workers × per-worker threads stay ≤ the machine budget.
 //!
 //! Run: `make artifacts && cargo run --release --example serve`
 
@@ -19,12 +22,24 @@ use std::path::Path;
 use std::time::Instant;
 
 fn main() -> anyhow::Result<()> {
-    let server = Server::spawn(SessionConfig::default(), || -> anyhow::Result<Backend> {
-        let bundle =
-            groot::util::tensor::read_bundle(Path::new("artifacts/weights_csa8.bin"))?;
-        let model = groot::gnn::SageModel::from_bundle(&bundle)?;
-        Ok(Box::new(NativeBackend::new(model)))
-    });
+    // Split the machine budget: 4 serving workers, each backend getting
+    // an equal share of the cores for its partition lanes / SpMM threads.
+    let total_threads = groot::util::pool::default_threads();
+    let workers = total_threads.clamp(1, 4);
+    let per_worker_threads = (total_threads / workers).max(1);
+    // Cache sized to hold the whole workload's distinct keys so every
+    // repeat is a guaranteed warm hit in the printout.
+    let server = Server::spawn_with_cache(
+        SessionConfig { workers, threads: per_worker_threads, ..Default::default() },
+        32,
+        move || -> anyhow::Result<Backend> {
+            // Runs once on EACH worker thread (backends never migrate).
+            let bundle =
+                groot::util::tensor::read_bundle(Path::new("artifacts/weights_csa8.bin"))?;
+            let model = groot::gnn::SageModel::from_bundle(&bundle)?;
+            Ok(Box::new(NativeBackend::with_threads(model, per_worker_threads)))
+        },
+    );
     let handle = server.handle();
 
     // Mixed families and widths, with repeats: a verification service
@@ -43,10 +58,14 @@ fn main() -> anyhow::Result<()> {
         (DatasetKind::Wallace, 32),
     ];
 
-    println!("== GROOT verification service: {} requests ==\n", workload.len());
+    println!(
+        "== GROOT verification service: {} requests, {workers} workers × \
+         {per_worker_threads} threads ==\n",
+        workload.len()
+    );
     let t_all = Instant::now();
-    // submit everything up front (the router drains the queue in order,
-    // like a single-accelerator deployment would)
+    // submit everything up front: the bounded queue feeds all workers at
+    // once, so independent circuits verify concurrently
     let mut pending = Vec::new();
     for (kind, bits) in &workload {
         let graph = datasets::build(*kind, *bits)?;
@@ -79,12 +98,16 @@ fn main() -> anyhow::Result<()> {
         );
     }
     let wall = t_all.elapsed();
+    let (hits, misses) = server.cache_stats();
     println!(
-        "\nthroughput: {} requests / {} = {:.1} knodes/s classified; {} plan-cache hits",
+        "\nthroughput: {} requests / {} = {:.1} knodes/s classified; \
+         {} plan-cache hits ({} hits / {} misses server-wide)",
         workload.len(),
         groot::util::timer::fmt_dur(wall),
         total_nodes as f64 / wall.as_secs_f64() / 1e3,
-        cache_hits
+        cache_hits,
+        hits,
+        misses
     );
     // Explicit deterministic shutdown even though `handle` is still alive.
     server.shutdown();

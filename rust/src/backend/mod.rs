@@ -82,29 +82,79 @@ pub struct PartitionLogits {
 
 /// A pluggable inference executor for re-grown partitions.
 ///
-/// Implementations are used from a single thread at a time (the
-/// coordinator session or the server's router thread own them), so they
-/// may keep interior scratch state; they are not required to be `Send`
-/// (the PJRT client is `Rc`-based).
-pub trait InferenceBackend {
+/// `Send + Sync`: the concurrent runtime shares backends across threads
+/// — the serving workers each own one (built by a factory on their own
+/// thread), and the parallel batch path runs independent partitions
+/// against `&self` from several lanes at once. Interior scratch state is
+/// fine, but it must be pooled or locked, not exclusively owned
+/// (`NativeBackend` keeps a checkout/return pool of scratch arenas; the
+/// vendored PJRT stub's types are all plain data). An environment whose
+/// real PJRT client is `Rc`-based would wrap it behind a thread-confined
+/// proxy rather than weakening this seam.
+pub trait InferenceBackend: Send + Sync {
     fn name(&self) -> &'static str;
 
     /// Output classes per node.
     fn num_classes(&self) -> usize;
 
-    /// Run the GNN on one partition; returns per-node logits.
+    /// Run the GNN on one partition; returns per-node logits. Must be
+    /// safe to call from several threads at once (`&self`).
     fn infer(&self, part: PartitionInput<'_>) -> Result<PartitionLogits>;
+
+    /// Total threads this backend may use at once — what the default
+    /// [`Self::infer_batch`] splits into partition lanes. Defaults to
+    /// the process-wide thread count; backends deployed several-to-a-
+    /// machine (one per serving worker) override this with their share
+    /// so workers × lanes never multiplies past the hardware
+    /// ([`NativeBackend`] returns its constructor budget).
+    fn thread_budget(&self) -> usize {
+        crate::util::pool::default_threads()
+    }
 
     /// Batch entry point — the call the coordinator's execution stage
     /// makes: ALL of a [`crate::coordinator::PartitionPlan`]'s partitions
     /// arrive in one call, in plan order, and outputs must come back in
-    /// the same order. The default simply streams them through
-    /// [`Self::infer`] (the paper's single-device model); real backends
-    /// override to amortize — the native path holds its scratch arena
-    /// across the batch, the PJRT path groups partitions by shape bucket.
+    /// the same order. Partitions are independent by construction
+    /// (re-growth already gave each one every feature row it reads), so
+    /// the default runs them CONCURRENTLY through [`Self::infer`],
+    /// [`Self::thread_budget`] lanes at a time, preserving output order
+    /// — see [`infer_batch_parallel`]. The default assumes `infer` is
+    /// internally (near-)serial: an implementation that fans out its own
+    /// threads per `infer` call MUST override this method (or bound
+    /// itself the way the native backend's lane-permit semaphore does),
+    /// or lanes × internal threads will oversubscribe. Backends here
+    /// override to amortize further: the native path splits its thread
+    /// budget between partition lanes and SpMM threads, the PJRT path
+    /// groups partitions by shape bucket.
     fn infer_batch(&self, parts: &[PartitionInput<'_>]) -> Result<Vec<PartitionLogits>> {
-        parts.iter().map(|p| self.infer(*p)).collect()
+        let (lanes, _) = crate::util::pool::split_threads(self.thread_budget(), parts.len());
+        infer_batch_parallel(self, parts, lanes)
     }
+}
+
+/// Run independent [`PartitionInput`]s concurrently through
+/// `backend.infer`, `lanes` at a time, returning outputs in submission
+/// order (the stitch contract). The first error wins; `lanes <= 1` (or a
+/// batch of one) degenerates to the sequential stream-through.
+///
+/// Correctness note: per-partition inference must not depend on which
+/// lane runs it — true for every backend here (and pinned by the
+/// parity tests across worker counts).
+pub fn infer_batch_parallel<B>(
+    backend: &B,
+    parts: &[PartitionInput<'_>],
+    lanes: usize,
+) -> Result<Vec<PartitionLogits>>
+where
+    B: InferenceBackend + ?Sized,
+{
+    let lanes = lanes.max(1).min(parts.len().max(1));
+    if lanes <= 1 || parts.len() <= 1 {
+        return parts.iter().map(|p| backend.infer(*p)).collect();
+    }
+    crate::util::pool::parallel_map(lanes, parts.len(), |i| backend.infer(parts[i]))
+        .into_iter()
+        .collect()
 }
 
 /// Build a backend from its CLI name.

@@ -3,41 +3,188 @@
 //! CSR. No artifacts, no device runtime; also serves as the GAMORA-like
 //! full-graph comparator in the Fig. 10 harness.
 //!
-//! Steady-state inference is allocation-free: a persistent
-//! [`ForwardScratch`] arena ping-pongs activations between two reusable
-//! buffers (see [`SageModel::forward_with`]) and the default
-//! [`GrootSpmm`] engine caches its execution plan and HD scratch per
-//! graph. The only per-call allocation is the returned logits vector.
+//! Concurrency model: the backend owns a checkout/return pool of
+//! **lanes** — (SpMM engine, [`ForwardScratch`] arena) pairs. Every
+//! inference call checks a lane out, runs the forward pass in it, and
+//! returns it; the pool grows on demand and never shrinks, so each
+//! lane's arena and the GROOT engine's cached plan stay warm. Checkouts
+//! are gated by a thread-budget SEMAPHORE: a lane running `inner`
+//! threads holds `inner` permits out of the backend's budget, so the
+//! total parallelism across every concurrently live lane — one
+//! `infer_batch`'s split ([`split_threads`]: 8 threads over an
+//! 8-partition plan run 8 single-threaded lanes, over a 2-partition
+//! plan 2 four-threaded lanes, never `8 × 8`), several concurrent
+//! batches, or independent `infer` callers — never exceeds the budget;
+//! excess callers wait their turn.
+//!
+//! Steady-state inference stays allocation-free per lane (the arena
+//! ping-pongs activations, the GROOT engine caches its plan + HD
+//! scratch); the only per-call allocation is the returned logits vector.
 
 use super::{InferenceBackend, PartitionInput, PartitionLogits};
 use crate::gnn::{ForwardScratch, SageModel};
 use crate::spmm::{GrootSpmm, SpmmEngine};
+use crate::util::pool::{parallel_map, split_threads};
 use anyhow::Result;
-use std::sync::Mutex;
+use std::sync::{Condvar, Mutex};
+
+/// One execution lane: an engine plus its scratch arena. Checked out by
+/// exactly one thread at a time, so neither needs internal locking
+/// beyond what the engine already has. `permits` records how many
+/// thread-budget permits this checkout holds (returned by `put_back`).
+struct Lane {
+    engine: Box<dyn SpmmEngine>,
+    scratch: ForwardScratch,
+    permits: usize,
+}
+
+struct PoolInner {
+    free: Vec<Lane>,
+    /// Thread-budget permits not currently held by a checked-out lane.
+    /// A checkout for `inner` threads consumes `inner` permits, so the
+    /// SUM of thread parallelism across all concurrently live lanes —
+    /// whether they came from one `infer_batch` split or from many
+    /// independent `infer` callers — never exceeds the backend budget.
+    available: usize,
+}
+
+/// Checkout/return pool of [`Lane`]s, gated by a thread-budget
+/// semaphore. Lanes are grow-only (minted up to at most `budget`, since
+/// each holds ≥ 1 permit) and keep their arenas and SpMM plan caches
+/// warm across checkouts.
+struct LanePool {
+    inner: Mutex<PoolInner>,
+    returned: Condvar,
+    /// Total permits (the backend's thread budget).
+    budget: usize,
+    /// `true` — mint a fresh GROOT lane when none is free (the standard
+    /// path). `false` — the caller supplied ONE specific engine
+    /// (`with_engine`, the kernel-comparison path): checkouts beyond it
+    /// wait for it to come back, preserving exactly-that-engine
+    /// semantics.
+    grow: bool,
+}
+
+impl LanePool {
+    fn new(budget: usize, grow: bool, seed_lanes: Vec<Lane>) -> LanePool {
+        LanePool {
+            inner: Mutex::new(PoolInner { free: seed_lanes, available: budget.max(1) }),
+            returned: Condvar::new(),
+            budget: budget.max(1),
+            grow,
+        }
+    }
+
+    /// Acquire a lane holding `inner_threads` permits, blocking while
+    /// the budget (or, for a fixed pool, the lone engine) is exhausted.
+    /// The returned guard gives the lane back — permits included — on
+    /// drop, so a panic mid-forward cannot leak permits and wedge every
+    /// later checkout.
+    fn checkout(&self, inner_threads: usize) -> LaneGuard<'_> {
+        let want = inner_threads.clamp(1, self.budget);
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if g.available >= want {
+                if let Some(mut lane) = g.free.pop() {
+                    g.available -= want;
+                    drop(g);
+                    if self.grow {
+                        // Re-budget a reused minted lane to the current
+                        // split. A fixed caller-supplied engine keeps ITS
+                        // configured thread count — it is the measurement
+                        // subject.
+                        lane.engine.set_threads(want);
+                    }
+                    lane.permits = want;
+                    return LaneGuard { pool: self, lane: Some(lane) };
+                }
+                if self.grow {
+                    g.available -= want;
+                    drop(g);
+                    let lane = Lane {
+                        engine: Box::new(GrootSpmm::new(want)),
+                        scratch: ForwardScratch::new(),
+                        permits: want,
+                    };
+                    return LaneGuard { pool: self, lane: Some(lane) };
+                }
+            }
+            g = self.returned.wait(g).unwrap();
+        }
+    }
+
+    fn put_back(&self, lane: Lane) {
+        let mut g = self.inner.lock().unwrap();
+        g.available += lane.permits;
+        g.free.push(lane);
+        drop(g);
+        // notify_all: waiters may need different permit amounts.
+        self.returned.notify_all();
+    }
+}
+
+/// RAII checkout: returns the lane (and its permits) to the pool on
+/// drop — including unwinds, so a panicking kernel can't strand the
+/// thread budget.
+struct LaneGuard<'a> {
+    pool: &'a LanePool,
+    lane: Option<Lane>,
+}
+
+impl LaneGuard<'_> {
+    fn lane_mut(&mut self) -> &mut Lane {
+        self.lane.as_mut().expect("lane present until drop")
+    }
+}
+
+impl Drop for LaneGuard<'_> {
+    fn drop(&mut self) {
+        if let Some(lane) = self.lane.take() {
+            self.pool.put_back(lane);
+        }
+    }
+}
 
 pub struct NativeBackend {
     model: SageModel,
-    engine: Box<dyn SpmmEngine>,
-    /// Reused across calls; behind a Mutex only because `infer` takes
-    /// `&self` — callers are single-threaded, so the lock is uncontended.
-    scratch: Mutex<ForwardScratch>,
+    /// Total thread budget this backend may use at once, split between
+    /// partition lanes and each lane's SpMM/matmul threads.
+    budget: usize,
+    lanes: LanePool,
+    engine_name: &'static str,
 }
 
 impl NativeBackend {
-    /// Default engine: the paper's GROOT SpMM with the default thread
-    /// budget.
+    /// Default engine: the paper's GROOT SpMM with the process-default
+    /// thread budget.
     pub fn new(model: SageModel) -> NativeBackend {
         Self::with_threads(model, crate::util::pool::default_threads())
     }
 
+    /// GROOT-engine backend with an explicit total thread budget. Lanes
+    /// are minted on demand; a single `infer` gets the whole budget as
+    /// SpMM/matmul threads, `infer_batch` splits it across partitions.
     pub fn with_threads(model: SageModel, threads: usize) -> NativeBackend {
-        Self::with_engine(model, Box::new(GrootSpmm::new(threads)))
+        let budget = threads.max(1);
+        NativeBackend {
+            model,
+            budget,
+            lanes: LanePool::new(budget, true, Vec::new()),
+            engine_name: GrootSpmm::new(1).name(),
+        }
     }
 
-    /// Run the model on an arbitrary SpMM engine (the Fig. 9 comparison
-    /// inside a real model workload).
+    /// Run the model on one specific SpMM engine (the Fig. 9 comparison
+    /// inside a real model workload). Single-lane: concurrent calls
+    /// serialize on that engine, and `infer_batch` stays sequential —
+    /// the measurement isolates the KERNEL, not the outer runtime. The
+    /// engine keeps its own configured thread count; dense matmuls use
+    /// the process-default budget (as the pre-pool backend did).
     pub fn with_engine(model: SageModel, engine: Box<dyn SpmmEngine>) -> NativeBackend {
-        NativeBackend { model, engine, scratch: Mutex::new(ForwardScratch::new()) }
+        let engine_name = engine.name();
+        let budget = crate::util::pool::default_threads();
+        let seed = vec![Lane { engine, scratch: ForwardScratch::new(), permits: 0 }];
+        NativeBackend { model, budget, lanes: LanePool::new(budget, false, seed), engine_name }
     }
 
     pub fn model(&self) -> &SageModel {
@@ -45,7 +192,27 @@ impl NativeBackend {
     }
 
     pub fn engine_name(&self) -> &'static str {
-        self.engine.name()
+        self.engine_name
+    }
+
+    /// Forward one partition inside a checked-out lane.
+    fn infer_in_lane(
+        &self,
+        part: PartitionInput<'_>,
+        lane: &mut Lane,
+        threads: usize,
+    ) -> PartitionLogits {
+        let logits = self
+            .model
+            .forward_with_threads(
+                part.csr,
+                part.features,
+                lane.engine.as_ref(),
+                &mut lane.scratch,
+                threads,
+            )
+            .to_vec();
+        PartitionLogits { logits, bucket_rows: part.csr.num_nodes() }
     }
 }
 
@@ -58,36 +225,48 @@ impl InferenceBackend for NativeBackend {
         self.model.num_classes()
     }
 
-    fn infer(&self, part: PartitionInput<'_>) -> Result<PartitionLogits> {
-        let n = part.csr.num_nodes();
-        part.validate(self.model.input_dim())?;
-        let mut scratch = self.scratch.lock().unwrap();
-        let logits =
-            self.model
-                .forward_with(part.csr, part.features, self.engine.as_ref(), &mut scratch);
-        Ok(PartitionLogits { logits: logits.to_vec(), bucket_rows: n })
+    /// The constructor budget — NOT the process default: several of
+    /// these run side by side under the serving workers, each holding
+    /// its own share.
+    fn thread_budget(&self) -> usize {
+        self.budget
     }
 
-    /// Batch override: validate all partitions up front, then run the
-    /// whole plan under a single scratch acquisition — the arena stays
-    /// warm at the batch's widest partition instead of being re-locked
-    /// (and on first use re-grown) per partition.
+    fn infer(&self, part: PartitionInput<'_>) -> Result<PartitionLogits> {
+        part.validate(self.model.input_dim())?;
+        let mut guard = self.lanes.checkout(self.budget);
+        Ok(self.infer_in_lane(part, guard.lane_mut(), self.budget))
+    }
+
+    /// Batch override: validate all partitions up front, then split the
+    /// thread budget into `outer` concurrent partition lanes × `inner`
+    /// SpMM/matmul threads each, and run independent partitions in
+    /// parallel — output order preserved, and bytes identical to the
+    /// sequential path (each partition's forward is self-contained and
+    /// thread-count-invariant). A budget of 1 keeps the old behavior:
+    /// the whole plan streams through one warm lane.
     fn infer_batch(&self, parts: &[PartitionInput<'_>]) -> Result<Vec<PartitionLogits>> {
         for p in parts {
             p.validate(self.model.input_dim())?;
         }
-        let mut scratch = self.scratch.lock().unwrap();
-        let mut out = Vec::with_capacity(parts.len());
-        for p in parts {
-            let logits =
-                self.model
-                    .forward_with(p.csr, p.features, self.engine.as_ref(), &mut scratch);
-            out.push(PartitionLogits {
-                logits: logits.to_vec(),
-                bucket_rows: p.csr.num_nodes(),
-            });
+        // A fixed single-engine backend never fans out: the lone lane IS
+        // the measurement subject, so the batch streams through it.
+        let (outer, inner) = if self.lanes.grow {
+            split_threads(self.budget, parts.len())
+        } else {
+            (1, self.budget)
+        };
+        if outer <= 1 || parts.len() <= 1 {
+            let mut guard = self.lanes.checkout(self.budget);
+            return Ok(parts
+                .iter()
+                .map(|p| self.infer_in_lane(*p, guard.lane_mut(), self.budget))
+                .collect());
         }
-        Ok(out)
+        Ok(parallel_map(outer, parts.len(), |i| {
+            let mut guard = self.lanes.checkout(inner);
+            self.infer_in_lane(parts[i], guard.lane_mut(), inner)
+        }))
     }
 }
 
@@ -130,5 +309,73 @@ mod tests {
         assert!(backend.infer(bad_dim).is_err());
         let bad_len = PartitionInput { csr: &csr, features: &[0.0; 6], feature_dim: 2 };
         assert!(backend.infer(bad_len).is_err());
+    }
+
+    /// A batch of distinct partitions through every budget must produce
+    /// the same bytes as budget-1 sequential execution — the invariant
+    /// the whole concurrent runtime leans on.
+    #[test]
+    fn parallel_batch_is_byte_identical_to_sequential() {
+        let graphs: Vec<Csr> = vec![
+            Csr::symmetric_from_edges(4, &[(0, 1), (1, 2), (2, 3)]),
+            Csr::symmetric_from_edges(3, &[(0, 1), (1, 2), (0, 2)]),
+            Csr::symmetric_from_edges(6, &[(0, 1), (2, 3), (4, 5), (1, 4)]),
+            Csr::symmetric_from_edges(5, &[(0, 4), (1, 3)]),
+        ];
+        let feats: Vec<Vec<f32>> = graphs
+            .iter()
+            .enumerate()
+            .map(|(gi, g)| {
+                (0..g.num_nodes() * 2)
+                    .map(|i| ((i + gi * 7) as f32 * 0.37).sin())
+                    .collect()
+            })
+            .collect();
+        let parts: Vec<PartitionInput<'_>> = graphs
+            .iter()
+            .zip(&feats)
+            .map(|(csr, features)| PartitionInput { csr, features, feature_dim: 2 })
+            .collect();
+        let sequential = NativeBackend::with_threads(model(), 1);
+        let want = sequential.infer_batch(&parts).unwrap();
+        for budget in [2usize, 3, 4, 8] {
+            let concurrent = NativeBackend::with_threads(model(), budget);
+            // run twice: cold lanes, then warm reused lanes
+            for round in 0..2 {
+                let got = concurrent.infer_batch(&parts).unwrap();
+                assert_eq!(got.len(), want.len());
+                for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                    assert_eq!(
+                        g.logits, w.logits,
+                        "budget {budget} round {round} partition {i} diverged"
+                    );
+                    assert_eq!(g.bucket_rows, w.bucket_rows);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn concurrent_infer_calls_share_the_lane_pool() {
+        // Many threads hammering `infer` on ONE backend: every result
+        // must match the single-threaded answer (lanes isolate scratch).
+        let csr = Csr::symmetric_from_edges(5, &[(0, 1), (1, 2), (2, 3), (3, 4)]);
+        let x: Vec<f32> = (0..10).map(|i| (i as f32 * 0.21).cos()).collect();
+        let backend = NativeBackend::with_threads(model(), 4);
+        let want = backend
+            .infer(PartitionInput { csr: &csr, features: &x, feature_dim: 2 })
+            .unwrap();
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                s.spawn(|| {
+                    for _ in 0..5 {
+                        let got = backend
+                            .infer(PartitionInput { csr: &csr, features: &x, feature_dim: 2 })
+                            .unwrap();
+                        assert_eq!(got.logits, want.logits);
+                    }
+                });
+            }
+        });
     }
 }

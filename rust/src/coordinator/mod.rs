@@ -13,17 +13,21 @@
 //! thin eager composition kept for callers that don't reuse anything.
 //! The coordinator never sees a device: partitions go through
 //! [`crate::backend::InferenceBackend::infer_batch`], which packs/pads
-//! however its executor needs. Execution stays on the session thread
-//! (the `xla` crate's client is `Rc`-based and not `Send`), matching the
-//! paper's single-GPU model: one device, partitions streamed through it.
+//! (and, since backends are `Send + Sync`, fans independent partitions
+//! out across its thread budget) however its executor needs. The
+//! serving layer ([`server`]) stacks request-level concurrency on top:
+//! N workers over a bounded queue, one backend each, one shared
+//! [`ShardedPlanCache`] — with predictions byte-identical to this
+//! single-threaded session path at every concurrency level.
 
 pub mod pipeline;
 pub mod server;
 
 pub use pipeline::{
-    execute_plan, execute_plan_streaming, ExecStats, PartitionPlan, PlanCache,
-    PlannedPartition, PlanOptions, PlanStats, PreparedGraph, StreamPlan, StreamStats,
-    DEFAULT_PLAN_CACHE_CAPACITY,
+    execute_plan, execute_plan_streaming, execute_plan_streaming_overlapped, ExecStats,
+    PartitionPlan, PlanCache, PlannedPartition, PlanOptions, PlanStats, PreparedGraph,
+    ShardedPlanCache, StreamPlan, StreamStats, DEFAULT_PLAN_CACHE_CAPACITY,
+    DEFAULT_PLAN_CACHE_SHARDS,
 };
 
 use crate::backend::{InferenceBackend, NativeBackend};
@@ -41,8 +45,14 @@ pub struct SessionConfig {
     pub regrow: bool,
     /// Partitioner seed.
     pub seed: u64,
-    /// Threads for packing / native inference.
+    /// Per-backend thread budget (partition lanes × SpMM/matmul threads
+    /// share it — see [`crate::util::pool::split_threads`]). Explicit
+    /// values override the process-wide `GROOT_THREADS` default.
     pub threads: usize,
+    /// Serving worker threads ([`server::Server`]); ignored by a plain
+    /// [`Session`]. Deployments splitting a machine budget typically set
+    /// `workers × threads ≈ cores`.
+    pub workers: usize,
 }
 
 impl Default for SessionConfig {
@@ -52,6 +62,7 @@ impl Default for SessionConfig {
             regrow: true,
             seed: 0,
             threads: crate::util::pool::default_threads(),
+            workers: 1,
         }
     }
 }
@@ -124,7 +135,7 @@ impl Session {
     /// Thin wrapper: prepare → plan → [`classify_plan`](Self::classify_plan).
     /// Callers that verify the same circuit repeatedly should hold a
     /// [`PreparedGraph`] and a [`PlanCache`] instead (or go through the
-    /// serving router, which does).
+    /// serving workers, which share a [`ShardedPlanCache`]).
     pub fn classify(&self, graph: &EdaGraph) -> Result<ClassifyResult> {
         self.classify_with(graph, &self.config)
     }
@@ -206,6 +217,19 @@ impl Session {
         self.classify_stream_plan(prepared, &plan, window)
     }
 
+    /// Out-of-core classification with gather/infer overlap: window W+1
+    /// materializes on a second thread while W infers
+    /// ([`execute_plan_streaming_overlapped`]). Same predictions, better
+    /// wall time, TWO windows of peak memory instead of one.
+    pub fn classify_streaming_overlapped(
+        &self,
+        prepared: &PreparedGraph<'_>,
+        window: usize,
+    ) -> Result<ClassifyResult> {
+        let plan = prepared.plan_stream(&PlanOptions::from_config(&self.config));
+        self.classify_stream_plan_with(prepared, &plan, window, true)
+    }
+
     /// Execute a pre-built [`StreamPlan`] (same staleness guard as
     /// [`Self::classify_plan`], enforced by the executor).
     pub fn classify_stream_plan(
@@ -214,8 +238,22 @@ impl Session {
         plan: &StreamPlan,
         window: usize,
     ) -> Result<ClassifyResult> {
-        let (pred, exec) =
-            execute_plan_streaming(self.backend.as_ref(), prepared, plan, window)?;
+        self.classify_stream_plan_with(prepared, plan, window, false)
+    }
+
+    /// [`Self::classify_stream_plan`] with an explicit overlap choice.
+    pub fn classify_stream_plan_with(
+        &self,
+        prepared: &PreparedGraph<'_>,
+        plan: &StreamPlan,
+        window: usize,
+        overlap: bool,
+    ) -> Result<ClassifyResult> {
+        let (pred, exec) = if overlap {
+            execute_plan_streaming_overlapped(self.backend.as_ref(), prepared, plan, window)?
+        } else {
+            execute_plan_streaming(self.backend.as_ref(), prepared, plan, window)?
+        };
         let stats = RunStats {
             num_partitions: plan.num_partitions(),
             regrown: plan.options.regrow,
@@ -367,6 +405,30 @@ mod tests {
                     "single-partition window should be far below the full plan"
                 );
             }
+        }
+    }
+
+    #[test]
+    fn overlapped_streaming_matches_sequential_streaming() {
+        let g = csa_multiplier(6);
+        let eg = crate::features::EdaGraph::from_aig(&g);
+        let cfg = SessionConfig { num_partitions: 5, regrow: true, ..Default::default() };
+        let session = Session::native(type_bit_model(), cfg);
+        let prepared = PreparedGraph::new(&eg);
+        for window in [1usize, 2, 16] {
+            let seq = session.classify_streaming(&prepared, window).unwrap();
+            let ovl = session.classify_streaming_overlapped(&prepared, window).unwrap();
+            assert_eq!(ovl.pred, seq.pred, "window {window}: overlap changed predictions");
+            assert_eq!(ovl.accuracy, seq.accuracy);
+            // the overlapped executor holds up to two windows: its honest
+            // accounting is ≥ the sequential single-window peak and ≤ 2×
+            assert!(ovl.stats.peak_resident_bytes >= seq.stats.peak_resident_bytes);
+            assert!(
+                ovl.stats.peak_resident_bytes <= 2 * seq.stats.peak_resident_bytes,
+                "window {window}: {} > 2×{}",
+                ovl.stats.peak_resident_bytes,
+                seq.stats.peak_resident_bytes
+            );
         }
     }
 

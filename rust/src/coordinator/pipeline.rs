@@ -29,8 +29,8 @@
 //! `PartitionPlan` is fully owned (no borrows into the source graph), so
 //! plans are cacheable: [`PlanCache`] is a small LRU keyed by
 //! `(fingerprint, PlanOptions)` — a warm hit skips partitioning,
-//! re-growth, and feature gathering entirely. The serving router
-//! ([`super::server`]) owns one cache per backend; `Session::classify`
+//! re-growth, and feature gathering entirely. The serving workers
+//! ([`super::server`]) share one [`ShardedPlanCache`]; `Session::classify`
 //! remains as the thin eager composition of the three stages.
 //!
 //! The fingerprint is representation-independent: a circuit ingested
@@ -45,8 +45,8 @@ use crate::graph::{CircuitGraph, Csr, GraphSource};
 use crate::partition::{partition_kway, Partitioning};
 use crate::regrowth::{regrow_one, regrow_partitions, RegrownPartition, RegrowthStats};
 use anyhow::Result;
-use std::cell::OnceCell;
 use std::sync::Arc;
+use std::sync::OnceLock;
 use std::time::{Duration, Instant};
 
 /// The per-request knobs a plan depends on. Everything else in
@@ -96,11 +96,15 @@ enum Repr<'g> {
 /// fallback the streaming execution path never touches.
 pub struct PreparedGraph<'g> {
     repr: Repr<'g>,
-    fingerprint: OnceCell<u64>,
-    csr: OnceCell<Csr>,
+    // OnceLock (not cell::OnceCell): prepared graphs are shared across
+    // threads — the overlapped streaming executor gathers window W+1 on
+    // a second thread while W infers — so lazy materialization must be
+    // thread-safe.
+    fingerprint: OnceLock<u64>,
+    csr: OnceLock<Csr>,
     /// Compact-representation dense fallback only (legacy borrows the
     /// source rows directly).
-    dense: OnceCell<Vec<f32>>,
+    dense: OnceLock<Vec<f32>>,
 }
 
 impl PreparedGraph<'static> {
@@ -115,9 +119,9 @@ impl PreparedGraph<'static> {
     pub fn from_circuit(circuit: CircuitGraph) -> PreparedGraph<'static> {
         PreparedGraph {
             repr: Repr::Compact(circuit),
-            fingerprint: OnceCell::new(),
-            csr: OnceCell::new(),
-            dense: OnceCell::new(),
+            fingerprint: OnceLock::new(),
+            csr: OnceLock::new(),
+            dense: OnceLock::new(),
         }
     }
 }
@@ -126,9 +130,9 @@ impl<'g> PreparedGraph<'g> {
     pub fn new(graph: &'g EdaGraph) -> PreparedGraph<'g> {
         PreparedGraph {
             repr: Repr::Legacy(graph),
-            fingerprint: OnceCell::new(),
-            csr: OnceCell::new(),
-            dense: OnceCell::new(),
+            fingerprint: OnceLock::new(),
+            csr: OnceLock::new(),
+            dense: OnceLock::new(),
         }
     }
 
@@ -604,6 +608,38 @@ pub fn execute_plan_streaming(
     plan: &StreamPlan,
     window: usize,
 ) -> Result<(Vec<u8>, StreamStats)> {
+    run_streaming(backend, prepared, plan, window, false)
+}
+
+/// [`execute_plan_streaming`] with gather/infer overlap: window W+1 is
+/// re-grown and gathered on a second thread ([`parallel_join`]) while
+/// window W runs `infer_batch` — the outer-pipeline analogue of the
+/// paper's kernel-level latency hiding. Predictions stay byte-identical
+/// (the work per window is unchanged, only its schedule moves); the
+/// memory bound doubles to TWO live windows, which
+/// `StreamStats::peak_resident_bytes` reports honestly — memory-capped
+/// deployments keep the sequential executor.
+pub fn execute_plan_streaming_overlapped(
+    backend: &dyn InferenceBackend,
+    prepared: &PreparedGraph<'_>,
+    plan: &StreamPlan,
+    window: usize,
+) -> Result<(Vec<u8>, StreamStats)> {
+    run_streaming(backend, prepared, plan, window, true)
+}
+
+/// One materialized streaming window: re-grown partitions with their
+/// local CSRs and gathered feature buffers, plus the regrow/gather time
+/// spent building it.
+type StreamWindow = (Vec<(RegrownPartition, Csr, Vec<f32>)>, Duration, Duration);
+
+fn run_streaming(
+    backend: &dyn InferenceBackend,
+    prepared: &PreparedGraph<'_>,
+    plan: &StreamPlan,
+    window: usize,
+    overlap: bool,
+) -> Result<(Vec<u8>, StreamStats)> {
     anyhow::ensure!(
         plan.fingerprint == prepared.fingerprint(),
         "stream plan fingerprint {:016x} does not match the graph's {:016x}",
@@ -624,12 +660,17 @@ pub fn execute_plan_streaming(
 
     let live: Vec<usize> =
         (0..plan.num_partitions()).filter(|&p| plan.core_counts[p] > 0).collect();
-    for ids in live.chunks(window) {
-        // window-local buffers: everything below (including the inverted
-        // core lists) dies at the end of this iteration — that bound IS
-        // the memory claim
+    let chunks: Vec<&[usize]> = live.chunks(window).collect();
+
+    // Materialize one window: invert its core lists, re-grow (Algorithm
+    // 1), build local CSRs, gather features. Pure function of the shared
+    // plan/prepared state, so the overlapped mode may run it on a second
+    // thread while the previous window infers.
+    let materialize = |ids: &[usize]| -> StreamWindow {
         let window_cores = plan.window_cores(ids);
         let mut parts: Vec<(RegrownPartition, Csr, Vec<f32>)> = Vec::with_capacity(ids.len());
+        let mut regrow_time = Duration::ZERO;
+        let mut gather_time = Duration::ZERO;
         for (wi, &p) in ids.iter().enumerate() {
             let t0 = Instant::now();
             let part = regrow_one(
@@ -639,14 +680,38 @@ pub fn execute_plan_streaming(
                 &window_cores[wi],
                 plan.options.regrow,
             );
-            stats.regrowth_time += t0.elapsed();
+            regrow_time += t0.elapsed();
             let t1 = Instant::now();
             let local = part.csr();
             let mut features = Vec::new();
             prepared.gather_features_into(&part.nodes, &mut features);
-            stats.gather_time += t1.elapsed();
+            gather_time += t1.elapsed();
             parts.push((part, local, features));
         }
+        (parts, regrow_time, gather_time)
+    };
+
+    // Overlapped mode pipelines windows through `pending`; sequential
+    // mode materializes each window HERE, at the top of its own
+    // iteration, strictly after the previous window's buffers dropped —
+    // one live window is the sequential executor's memory contract
+    // (the memcap CI jobs run under hard caps sized to it).
+    let mut pending: Option<StreamWindow> = if overlap {
+        chunks.first().copied().map(&materialize)
+    } else {
+        None
+    };
+    for (ci, ids) in chunks.iter().enumerate() {
+        // window-local buffers: everything below dies when this window's
+        // iteration (sequential) or the NEXT one (overlapped: the
+        // prefetched window lives alongside) finishes — that bound IS
+        // the memory claim, and `resident` below accounts it
+        let (parts, regrow_time, gather_time) = match pending.take() {
+            Some(window) => window,
+            None => materialize(*ids),
+        };
+        stats.regrowth_time += regrow_time;
+        stats.gather_time += gather_time;
         let inputs: Vec<PartitionInput<'_>> = parts
             .iter()
             .map(|(_, local, features)| PartitionInput {
@@ -657,11 +722,47 @@ pub fn execute_plan_streaming(
             .collect();
         let resident: usize =
             inputs.iter().map(|i| partition_exec_bytes(i, classes)).sum();
-        stats.peak_resident_bytes = stats.peak_resident_bytes.max(resident);
 
-        let t2 = Instant::now();
-        let outs = backend.infer_batch(&inputs)?;
-        stats.infer_time += t2.elapsed();
+        let next_ids: Option<&[usize]> = chunks.get(ci + 1).copied();
+        let infer = || {
+            let t = Instant::now();
+            backend.infer_batch(&inputs).map(|outs| (outs, t.elapsed()))
+        };
+        let (infer_res, next) = if overlap {
+            crate::util::pool::parallel_join(infer, || next_ids.map(&materialize))
+        } else {
+            // sequential: the next window is NOT built here — doing so
+            // would hold two windows live and break the memory bound
+            (infer(), None)
+        };
+        pending = next;
+
+        // Overlapped mode holds the freshly prefetched window alongside
+        // the one that just inferred — count both, honestly.
+        let prefetched: usize = if overlap {
+            pending
+                .as_ref()
+                .map(|(next_parts, _, _)| {
+                    next_parts
+                        .iter()
+                        .map(|(_, local, features)| {
+                            let input = PartitionInput {
+                                csr: local,
+                                features,
+                                feature_dim: GROOT_FEATURE_DIM,
+                            };
+                            partition_exec_bytes(&input, classes)
+                        })
+                        .sum()
+                })
+                .unwrap_or(0)
+        } else {
+            0
+        };
+        stats.peak_resident_bytes = stats.peak_resident_bytes.max(resident + prefetched);
+
+        let (outs, infer_time) = infer_res?;
+        stats.infer_time += infer_time;
         anyhow::ensure!(
             outs.len() == inputs.len(),
             "backend returned {} outputs for a window of {}",
@@ -693,8 +794,9 @@ struct PlanKey {
 
 /// A small LRU of `Arc<PartitionPlan>` keyed by `(graph fingerprint,
 /// PlanOptions)`. A hit skips partitioning, re-growth, and feature
-/// gathering entirely; the serving router owns one of these so every
-/// repeat request on the same circuit is plan-free.
+/// gathering entirely; single-threaded callers own one of these so every
+/// repeat request on the same circuit is plan-free (the multi-worker
+/// server shares a [`ShardedPlanCache`] instead).
 ///
 /// Entries are kept most-recently-used last; inserting at capacity
 /// evicts the least-recently-used entry.
@@ -706,7 +808,7 @@ pub struct PlanCache {
     misses: u64,
 }
 
-/// Default router plan-cache capacity (plans for a handful of distinct
+/// Default serving plan-cache capacity (plans for a handful of distinct
 /// circuits × option sets; each entry holds one graph's partition data).
 pub const DEFAULT_PLAN_CACHE_CAPACITY: usize = 16;
 
@@ -741,6 +843,16 @@ impl PlanCache {
         self.misses
     }
 
+    /// Non-mutating lookup: no recency refresh, no counter updates. The
+    /// sharded cache's read-locked fast path uses this; single-threaded
+    /// callers should prefer [`Self::get`].
+    pub fn peek(&self, fingerprint: u64, opts: &PlanOptions) -> Option<Arc<PartitionPlan>> {
+        self.entries
+            .iter()
+            .find(|(k, _)| k.fingerprint == fingerprint && &k.options == opts)
+            .map(|(_, plan)| plan.clone())
+    }
+
     /// Look up a plan, refreshing its recency on a hit.
     pub fn get(&mut self, fingerprint: u64, opts: &PlanOptions) -> Option<Arc<PartitionPlan>> {
         match self
@@ -773,7 +885,7 @@ impl PlanCache {
         self.entries.push((key, plan));
     }
 
-    /// The staged lookup the router runs per request: returns the cached
+    /// The staged per-request lookup: returns the cached
     /// plan (hit = `true`) or builds, caches, and returns a fresh one.
     pub fn get_or_build(
         &mut self,
@@ -785,6 +897,116 @@ impl PlanCache {
         }
         let plan = Arc::new(prepared.plan(opts));
         self.insert(plan.clone());
+        (plan, false)
+    }
+}
+
+/// Concurrent plan cache: [`PlanCache`] shards behind `RwLock`s, shared
+/// by every serving worker (`Arc<ShardedPlanCache>`). A plan's shard is
+/// chosen by hashing the FULL key — (fingerprint, options) — so one
+/// circuit's different option sets spread across shards instead of
+/// fighting over one shard's capacity; lock contention is then mostly
+/// (not only: keys can share a shard) between requests for the same key
+/// — exactly the requests that hit.
+///
+/// Single-flight guarantee: a miss builds the plan **while holding the
+/// shard's write lock**, so N concurrent requests for one (fingerprint,
+/// options) build it exactly once — the other N−1 block on the lock,
+/// re-check, and hit. The deliberate cost: a cold build holds its
+/// shard's write lock, so OTHER keys hashing to that shard (including
+/// their read-path hits) stall behind it for the build's duration.
+/// Sharding keeps the blast radius at ~1/shards; workloads dominated by
+/// huge cold builds beside hot small circuits would want a per-key
+/// in-flight marker with the build outside the lock instead.
+///
+/// Every lookup takes the shard's WRITE lock: hits must refresh LRU
+/// recency, or a constantly-hot key would age out in insertion order
+/// while cold keys churn past it (FIFO masquerading as LRU, evicting
+/// precisely the hottest plan). The lock is held for a Vec scan + Arc
+/// clone on hits — nanoseconds next to the inference each request then
+/// performs — so exact LRU is cheap; the read half of the `RwLock`
+/// serves introspection ([`Self::len`], [`PlanCache::peek`]) without
+/// queueing behind builds. Hit/miss counters are shard-independent
+/// atomics.
+pub struct ShardedPlanCache {
+    shards: Vec<std::sync::RwLock<PlanCache>>,
+    hits: std::sync::atomic::AtomicU64,
+    misses: std::sync::atomic::AtomicU64,
+}
+
+/// Default shard count for the serving cache. Few enough that
+/// `capacity / shards` entries per shard still hold a realistic working
+/// set of keys per shard; single-flight blocking only ever affects keys
+/// that hash together.
+pub const DEFAULT_PLAN_CACHE_SHARDS: usize = 4;
+
+impl ShardedPlanCache {
+    /// `capacity` total entries spread over [`DEFAULT_PLAN_CACHE_SHARDS`]
+    /// shards (each shard holds at least one).
+    pub fn new(capacity: usize) -> ShardedPlanCache {
+        Self::with_shards(DEFAULT_PLAN_CACHE_SHARDS, capacity)
+    }
+
+    pub fn with_shards(shards: usize, capacity: usize) -> ShardedPlanCache {
+        let shards = shards.max(1);
+        let per_shard = capacity.div_ceil(shards).max(1);
+        ShardedPlanCache {
+            shards: (0..shards)
+                .map(|_| std::sync::RwLock::new(PlanCache::new(per_shard)))
+                .collect(),
+            hits: std::sync::atomic::AtomicU64::new(0),
+            misses: std::sync::atomic::AtomicU64::new(0),
+        }
+    }
+
+    fn shard(&self, fingerprint: u64, opts: &PlanOptions) -> &std::sync::RwLock<PlanCache> {
+        use std::hash::{Hash, Hasher};
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        fingerprint.hash(&mut h);
+        opts.hash(&mut h);
+        &self.shards[(h.finish() % self.shards.len() as u64) as usize]
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(std::sync::atomic::Ordering::SeqCst)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(std::sync::atomic::Ordering::SeqCst)
+    }
+
+    /// Cached entries across all shards.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.read().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The concurrent counterpart of [`PlanCache::get_or_build`]: returns
+    /// the cached plan (hit = `true`) or builds, caches, and returns a
+    /// fresh one — at most one build per key across all threads while
+    /// the key stays resident (an LRU-evicted key rebuilds, once, when
+    /// it next appears).
+    pub fn get_or_build(
+        &self,
+        prepared: &PreparedGraph<'_>,
+        opts: &PlanOptions,
+    ) -> (Arc<PartitionPlan>, bool) {
+        use std::sync::atomic::Ordering;
+        let fp = prepared.fingerprint();
+        let shard = self.shard(fp, opts);
+        let mut guard = shard.write().unwrap();
+        // Under the write lock so hits refresh recency (exact LRU) and a
+        // concurrent miss for the same key can never build twice.
+        if let Some(plan) = guard.get(fp, opts) {
+            self.hits.fetch_add(1, Ordering::SeqCst);
+            return (plan, true);
+        }
+        self.misses.fetch_add(1, Ordering::SeqCst);
+        let plan = Arc::new(prepared.plan(opts));
+        guard.insert(plan.clone());
         (plan, false)
     }
 }
@@ -954,6 +1176,50 @@ mod tests {
         assert!(cache.get(p.fingerprint(), &o1).is_none(), "o1 must be evicted");
         assert!(cache.get(p.fingerprint(), &o2).is_some());
         assert!(cache.get(p.fingerprint(), &o3).is_some());
+    }
+
+    #[test]
+    fn sharded_cache_builds_each_key_exactly_once_under_contention() {
+        let g = graph();
+        let cache = ShardedPlanCache::new(32);
+        let options: Vec<PlanOptions> = (1..=3usize)
+            .map(|partitions| PlanOptions { partitions, regrow: true, seed: 0 })
+            .collect();
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                s.spawn(|| {
+                    let p = PreparedGraph::new(&g);
+                    for opts in &options {
+                        let (plan, _) = cache.get_or_build(&p, opts);
+                        assert_eq!(plan.num_partitions(), opts.partitions);
+                    }
+                });
+            }
+        });
+        // 8 threads × 3 keys: exactly 3 builds ever, 21 hits.
+        assert_eq!(cache.misses(), 3, "a concurrent miss built a duplicate plan");
+        assert_eq!(cache.hits(), 8 * 3 - 3);
+        assert_eq!(cache.len(), 3);
+    }
+
+    #[test]
+    fn sharded_cache_results_match_unsharded() {
+        let g = graph();
+        let p = PreparedGraph::new(&g);
+        let sharded = ShardedPlanCache::with_shards(4, 8);
+        let mut plain = PlanCache::new(8);
+        let opts = PlanOptions { partitions: 4, regrow: true, seed: 3 };
+        let (a, hit_a) = sharded.get_or_build(&p, &opts);
+        let (b, hit_b) = plain.get_or_build(&p, &opts);
+        assert!(!hit_a && !hit_b);
+        assert_eq!(a.fingerprint, b.fingerprint);
+        assert_eq!(a.parts.len(), b.parts.len());
+        for (pa, pb) in a.parts.iter().zip(&b.parts) {
+            assert_eq!(pa.nodes, pb.nodes);
+            assert_eq!(pa.features, pb.features);
+        }
+        let (_, hit) = sharded.get_or_build(&p, &opts);
+        assert!(hit, "second sharded lookup must hit");
     }
 
     #[test]

@@ -1,27 +1,49 @@
-//! Verification service — the staged pipeline behind a request channel.
+//! Verification service — the staged pipeline behind a multi-worker
+//! request queue.
 //!
 //! The paper frames GROOT as a run-time verification system; this module
 //! provides the serving shape: callers submit circuits with per-request
-//! [`VerifyOptions`], a router thread owns the (non-`Send`) backend *and
-//! the plan cache*, and answers on per-request channels. For every
-//! request the router prepares the graph, looks its
-//! [`PartitionPlan`](super::PartitionPlan) up in an LRU keyed by
-//! `(content fingerprint, PlanOptions)` — so repeat verifications of the
-//! same circuit skip partitioning/re-growth/gathering entirely — and
-//! submits all partitions through one `infer_batch` call.
-//! [`RunStats::plan_cache_hit`](super::RunStats) and
-//! [`RunStats::batch_size`](super::RunStats) expose both effects per
-//! response.
+//! [`VerifyOptions`], **N worker threads** (config `workers`) pull from a
+//! bounded submission queue, and answers go back on per-request channels.
 //!
-//! Shutdown is an explicit sentinel message: dropping (or
-//! [`Server::shutdown`]-ing) the server wakes the router even while
-//! user-cloned [`ServerHandle`]s keep the request channel open, so
-//! `join()` terminates deterministically. Used by `examples/serve.rs`.
+//! ```text
+//!            try_submit ──► TrySubmit::Busy  when the bounded queue is full
+//! clients ──► submit ─────► [ bounded queue ] ──► worker 0 (backend 0)
+//!                                            ├──► worker 1 (backend 1)
+//!                                            └──► worker N (backend N)
+//!                               shared Arc<ShardedPlanCache> (RwLock shards)
+//! ```
+//!
+//! * Each worker builds its OWN backend on its own thread via the
+//!   [`BackendFactory`] — backends never cross threads, and a worker's
+//!   scratch/lane pool stays thread-local-warm.
+//! * The **plan cache is shared** ([`ShardedPlanCache`]): any worker's
+//!   cold plan warms every other worker, and concurrent requests for one
+//!   (fingerprint, options) build the plan exactly once (single-flight
+//!   under the shard's write lock).
+//! * The queue is **bounded**: [`ServerHandle::submit`] blocks when the
+//!   server is saturated (back-pressure propagates to the producer), and
+//!   [`ServerHandle::try_submit`] returns [`TrySubmit::Busy`] with the
+//!   request handed back, for callers that would rather shed load.
+//! * Responses are **byte-identical** to a sequential
+//!   [`Session::classify`] run regardless of worker count: stitch order
+//!   is fixed by partition index and every kernel's reduction order is
+//!   thread-count-invariant (pinned by rust/tests/concurrent_serving.rs).
+//!
+//! Shutdown preserves the PR-2 sentinel semantics in flag form: closing
+//! the queue (NOT dropping the channel — user-cloned [`ServerHandle`]s
+//! keep that alive indefinitely) wakes every worker; requests already
+//! queued are drained and answered, later submissions fail with "server
+//! stopped", and `join()` terminates deterministically.
 
-use super::{Backend, ClassifyResult, PlanCache, PlanOptions, PreparedGraph, Session, SessionConfig};
+use super::{
+    Backend, ClassifyResult, PlanOptions, PreparedGraph, Session, SessionConfig,
+    ShardedPlanCache,
+};
 use crate::features::EdaGraph;
 use anyhow::Result;
-use std::sync::mpsc;
+use std::collections::VecDeque;
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
 /// Per-request plan options; `None` fields inherit the server's base
@@ -56,20 +78,151 @@ pub struct Request {
     pub reply: mpsc::Sender<Result<ClassifyResult>>,
 }
 
-/// Router mailbox: work, or the explicit shutdown sentinel the owning
-/// [`Server`] sends on drop (closing the channel alone is not enough —
-/// cloned handles keep it open).
-enum Msg {
-    Verify(Box<Request>),
-    Shutdown,
+/// Outcome of a non-blocking submission attempt.
+pub enum TrySubmit {
+    /// Queued; await the result on the receiver.
+    Accepted(mpsc::Receiver<Result<ClassifyResult>>),
+    /// The bounded queue is full — back-pressure. The request is handed
+    /// back untouched so the caller can retry, redirect, or shed it.
+    Busy { graph: EdaGraph, options: VerifyOptions },
 }
 
-/// Handle for submitting requests to a running server. Cloneable and
-/// `Send`; outliving the `Server` is safe (submissions then fail with
-/// "server stopped").
+/// Builds one backend per worker, ON that worker's thread (weights load,
+/// artifact mmaps, engine pools — none of it crosses threads). Called
+/// `workers` times; every invocation must produce an equivalent backend,
+/// or cross-worker responses would diverge.
+pub type BackendFactory = dyn Fn() -> Result<Backend> + Send + Sync;
+
+/// Bounded MPMC submission queue. `open: false` + empty is the worker
+/// exit condition; closing never discards queued requests.
+struct SubmitQueue {
+    inner: Mutex<QueueInner>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    capacity: usize,
+}
+
+struct QueueInner {
+    q: VecDeque<Box<Request>>,
+    open: bool,
+}
+
+impl SubmitQueue {
+    fn new(capacity: usize) -> SubmitQueue {
+        SubmitQueue {
+            inner: Mutex::new(QueueInner { q: VecDeque::new(), open: true }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            capacity: capacity.max(1),
+        }
+    }
+
+    /// Block until there is room (back-pressure), then enqueue.
+    /// `Err` hands the request back when the server has stopped.
+    fn push_blocking(&self, req: Box<Request>) -> std::result::Result<(), Box<Request>> {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if !inner.open {
+                return Err(req);
+            }
+            if inner.q.len() < self.capacity {
+                inner.q.push_back(req);
+                drop(inner);
+                self.not_empty.notify_one();
+                return Ok(());
+            }
+            inner = self.not_full.wait(inner).unwrap();
+        }
+    }
+
+    /// Non-blocking enqueue: `Ok(None)` on success, `Ok(Some(req))` when
+    /// full (request handed back), `Err(req)` when stopped.
+    #[allow(clippy::type_complexity)]
+    fn try_push(
+        &self,
+        req: Box<Request>,
+    ) -> std::result::Result<Option<Box<Request>>, Box<Request>> {
+        let mut inner = self.inner.lock().unwrap();
+        if !inner.open {
+            return Err(req);
+        }
+        if inner.q.len() >= self.capacity {
+            return Ok(Some(req));
+        }
+        inner.q.push_back(req);
+        drop(inner);
+        self.not_empty.notify_one();
+        Ok(None)
+    }
+
+    /// Dequeue, blocking while the queue is open and empty; `None` once
+    /// it is closed AND drained — the worker exit signal.
+    fn pop(&self) -> Option<Box<Request>> {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if let Some(req) = inner.q.pop_front() {
+                drop(inner);
+                self.not_full.notify_one();
+                return Some(req);
+            }
+            if !inner.open {
+                return None;
+            }
+            inner = self.not_empty.wait(inner).unwrap();
+        }
+    }
+
+    /// Stop accepting; wake everyone (workers drain, producers error).
+    fn close(&self) {
+        self.inner.lock().unwrap().open = false;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    /// Last-resort close: stop accepting AND drop everything still
+    /// queued. Dropping a request disconnects its reply channel, so
+    /// blocked callers get "server dropped reply" instead of hanging on
+    /// a queue no live worker will ever drain again.
+    fn fail_pending(&self) {
+        let dropped: Vec<Box<Request>> = {
+            let mut inner = self.inner.lock().unwrap();
+            inner.open = false;
+            inner.q.drain(..).collect()
+        };
+        drop(dropped);
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+}
+
+/// Armed for the duration of a worker thread: if the thread dies by
+/// PANIC (a kernel assert on a malformed graph, a poisoned lock) and it
+/// was the last live worker, the queue is closed and drained so pending
+/// and future clients error out — the single-router design got this for
+/// free from channel closure, and the multi-worker runtime must not
+/// regress it into an eternal hang. Disarmed (`mem::forget`) on normal
+/// exit paths, which have their own accounting.
+struct WorkerDeathGuard<'a> {
+    queue: &'a SubmitQueue,
+    live: &'a std::sync::atomic::AtomicUsize,
+}
+
+impl Drop for WorkerDeathGuard<'_> {
+    fn drop(&mut self) {
+        if std::thread::panicking()
+            && self.live.fetch_sub(1, std::sync::atomic::Ordering::SeqCst) == 1
+        {
+            self.queue.fail_pending();
+        }
+    }
+}
+
+/// Handle for submitting requests to a running server. Cheap-clone
+/// (`Arc` internally) and `Send`; outliving the `Server` is safe
+/// (submissions then fail with "server stopped").
 #[derive(Clone)]
 pub struct ServerHandle {
-    tx: mpsc::Sender<Msg>,
+    queue: Arc<SubmitQueue>,
 }
 
 impl ServerHandle {
@@ -83,34 +236,50 @@ impl ServerHandle {
         rx.recv().map_err(|_| anyhow::anyhow!("server dropped reply"))?
     }
 
-    /// Submit without waiting; returns the reply receiver.
+    /// Submit without waiting for the RESULT; returns the reply receiver.
+    /// Blocks while the bounded queue is full (back-pressure) — use
+    /// [`Self::try_submit`] to shed load instead.
     pub fn submit(
         &self,
         graph: EdaGraph,
         options: VerifyOptions,
     ) -> Result<mpsc::Receiver<Result<ClassifyResult>>> {
         let (reply, rx) = mpsc::channel();
-        self.tx
-            .send(Msg::Verify(Box::new(Request { graph, options, reply })))
+        self.queue
+            .push_blocking(Box::new(Request { graph, options, reply }))
             .map_err(|_| anyhow::anyhow!("server stopped"))?;
         Ok(rx)
     }
+
+    /// Non-blocking submit: [`TrySubmit::Busy`] (request handed back)
+    /// when the bounded queue is full, `Err` when the server stopped.
+    pub fn try_submit(&self, graph: EdaGraph, options: VerifyOptions) -> Result<TrySubmit> {
+        let (reply, rx) = mpsc::channel();
+        match self.queue.try_push(Box::new(Request { graph, options, reply })) {
+            Ok(None) => Ok(TrySubmit::Accepted(rx)),
+            Ok(Some(req)) => {
+                let req = *req;
+                Ok(TrySubmit::Busy { graph: req.graph, options: req.options })
+            }
+            Err(_) => Err(anyhow::anyhow!("server stopped")),
+        }
+    }
 }
 
-/// The running server; shuts its router down (sentinel + join) on drop.
+/// The running server; closes the queue and joins every worker on drop.
 pub struct Server {
     handle: ServerHandle,
-    join: Option<JoinHandle<()>>,
+    cache: Arc<ShardedPlanCache>,
+    workers: Vec<JoinHandle<()>>,
 }
 
 impl Server {
-    /// Spawn the router thread with the default plan-cache capacity.
-    /// `make_backend` runs *on* the router thread because backends need
-    /// not be `Send` (PJRT clients are `Rc`-based); only the constructor
-    /// closure crosses threads.
+    /// Spawn `config.workers` worker threads with the default plan-cache
+    /// and queue capacities. `make_backend` runs once *on each worker
+    /// thread*; see [`BackendFactory`].
     pub fn spawn<F>(config: SessionConfig, make_backend: F) -> Server
     where
-        F: FnOnce() -> Result<Backend> + Send + 'static,
+        F: Fn() -> Result<Backend> + Send + Sync + 'static,
     {
         Self::spawn_with_cache(config, super::DEFAULT_PLAN_CACHE_CAPACITY, make_backend)
     }
@@ -128,69 +297,76 @@ impl Server {
         make_backend: F,
     ) -> Server
     where
-        F: FnOnce() -> Result<Backend> + Send + 'static,
+        F: Fn() -> Result<Backend> + Send + Sync + 'static,
     {
-        let (tx, rx) = mpsc::channel::<Msg>();
-        let join = std::thread::Builder::new()
-            .name("groot-router".into())
-            .spawn(move || {
-                let backend = match make_backend() {
-                    Ok(b) => b,
-                    Err(e) => {
-                        // Answer requests with the construction error
-                        // until shutdown.
-                        for msg in rx.iter() {
-                            match msg {
-                                Msg::Verify(req) => {
-                                    let _ = req.reply.send(Err(anyhow::anyhow!(
-                                        "backend init failed: {e:#}"
-                                    )));
-                                }
-                                Msg::Shutdown => return,
-                            }
-                        }
-                        return;
-                    }
-                };
-                let session = Session::new(backend, config);
-                let mut plans = PlanCache::new(plan_cache_capacity);
-                for msg in rx.iter() {
-                    let req = match msg {
-                        Msg::Verify(req) => req,
-                        Msg::Shutdown => break,
-                    };
-                    let opts = req.options.resolve(&session.config);
-                    // Preparation is cheap (content hash); the CSR and
-                    // feature matrix only materialize on a cache miss,
-                    // inside plan().
-                    let prepared = PreparedGraph::new(&req.graph);
-                    let (plan, hit) = plans.get_or_build(&prepared, &opts);
-                    let out = session.classify_plan(&prepared, &plan, hit);
-                    let _ = req.reply.send(out);
-                }
+        // Default queue bound: deep enough to keep every worker busy
+        // with headroom, small enough that latency (and memory: queued
+        // requests own their graphs) stays bounded under overload.
+        let queue_capacity = (config.workers.max(1) * 8).max(32);
+        Self::spawn_with_queue(config, plan_cache_capacity, queue_capacity, make_backend)
+    }
+
+    /// Fully explicit spawn: plan-cache entries AND submission-queue
+    /// bound (both clamped to ≥ 1).
+    pub fn spawn_with_queue<F>(
+        config: SessionConfig,
+        plan_cache_capacity: usize,
+        queue_capacity: usize,
+        make_backend: F,
+    ) -> Server
+    where
+        F: Fn() -> Result<Backend> + Send + Sync + 'static,
+    {
+        let queue = Arc::new(SubmitQueue::new(queue_capacity));
+        let cache = Arc::new(ShardedPlanCache::new(plan_cache_capacity.max(1)));
+        let make_backend: Arc<BackendFactory> = Arc::new(make_backend);
+        let worker_count = config.workers.max(1);
+        let live = Arc::new(std::sync::atomic::AtomicUsize::new(worker_count));
+        let workers = (0..worker_count)
+            .map(|i| {
+                let queue = Arc::clone(&queue);
+                let cache = Arc::clone(&cache);
+                let make_backend = Arc::clone(&make_backend);
+                let live = Arc::clone(&live);
+                let config = config.clone();
+                std::thread::Builder::new()
+                    .name(format!("groot-serve-{i}"))
+                    .spawn(move || {
+                        let guard = WorkerDeathGuard { queue: &*queue, live: &*live };
+                        worker_loop(&queue, &cache, &config, &*make_backend, &live);
+                        std::mem::forget(guard); // normal exit: not a death
+                    })
+                    .expect("spawn serving worker")
             })
-            .expect("spawn router");
-        Server { handle: ServerHandle { tx }, join: Some(join) }
+            .collect();
+        Server { handle: ServerHandle { queue }, cache, workers }
     }
 
     pub fn handle(&self) -> ServerHandle {
         self.handle.clone()
     }
 
-    /// Explicit deterministic shutdown: in-flight requests already queued
-    /// ahead of the sentinel are answered; later submissions fail.
-    /// (Dropping the server does the same.)
+    /// Shared plan-cache counters: (hits, misses) across all workers.
+    /// The single-flight guarantee makes `misses` exactly the number of
+    /// distinct (circuit, options) keys ever planned.
+    pub fn cache_stats(&self) -> (u64, u64) {
+        (self.cache.hits(), self.cache.misses())
+    }
+
+    /// Explicit deterministic shutdown: requests already queued are
+    /// drained and answered; later submissions fail. (Dropping the
+    /// server does the same.)
     pub fn shutdown(mut self) {
         self.shutdown_inner();
     }
 
     fn shutdown_inner(&mut self) {
-        // The sentinel — NOT channel closure — stops the router: cloned
-        // user handles may keep the channel alive indefinitely, which
-        // used to deadlock this join.
-        let _ = self.handle.tx.send(Msg::Shutdown);
-        if let Some(j) = self.join.take() {
-            let _ = j.join();
+        // The closed FLAG — not channel closure — stops the workers:
+        // cloned user handles may keep the queue allocation alive
+        // indefinitely, which must never block this join.
+        self.handle.queue.close();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
         }
     }
 }
@@ -198,6 +374,45 @@ impl Server {
 impl Drop for Server {
     fn drop(&mut self) {
         self.shutdown_inner();
+    }
+}
+
+fn worker_loop(
+    queue: &SubmitQueue,
+    cache: &ShardedPlanCache,
+    config: &SessionConfig,
+    make_backend: &BackendFactory,
+    live: &std::sync::atomic::AtomicUsize,
+) {
+    use std::sync::atomic::Ordering;
+    let backend = match make_backend() {
+        Ok(b) => b,
+        Err(e) => {
+            // A partially-failed fleet must not race healthy workers and
+            // error a random subset of requests: a failed worker steps
+            // aside quietly — UNLESS it is the last live one, in which
+            // case it stays to answer everything with the construction
+            // error rather than letting submissions hang forever.
+            if live.fetch_sub(1, Ordering::SeqCst) > 1 {
+                return;
+            }
+            while let Some(req) = queue.pop() {
+                let _ = req
+                    .reply
+                    .send(Err(anyhow::anyhow!("backend init failed: {e:#}")));
+            }
+            return;
+        }
+    };
+    let session = Session::new(backend, config.clone());
+    while let Some(req) = queue.pop() {
+        let opts = req.options.resolve(&session.config);
+        // Preparation is cheap (content hash); the CSR and feature
+        // matrix only materialize on a cache miss, inside plan().
+        let prepared = PreparedGraph::new(&req.graph);
+        let (plan, hit) = cache.get_or_build(&prepared, &opts);
+        let out = session.classify_plan(&prepared, &plan, hit);
+        let _ = req.reply.send(out);
     }
 }
 
@@ -266,12 +481,30 @@ mod tests {
         // different options on the same circuit: a different plan
         let other = h.verify_blocking(eg, VerifyOptions::partitions(2)).unwrap();
         assert!(!other.stats.plan_cache_hit);
+        assert_eq!(server.cache_stats(), (1, 2), "(hits, misses)");
+    }
+
+    #[test]
+    fn multi_worker_server_answers_everything() {
+        let server = Server::spawn(
+            SessionConfig { workers: 4, threads: 1, ..Default::default() },
+            dummy_backend,
+        );
+        let h = server.handle();
+        let eg = crate::features::EdaGraph::from_aig(&crate::aig::mult::csa_multiplier(4));
+        let pending: Vec<_> = (0..16)
+            .map(|i| h.submit(eg.clone(), VerifyOptions::partitions(1 + i % 4)).unwrap())
+            .collect();
+        for (i, rx) in pending.into_iter().enumerate() {
+            let r = rx.recv().unwrap().unwrap();
+            assert_eq!(r.pred.len(), eg.num_nodes, "request {i}");
+        }
     }
 
     #[test]
     fn dropping_server_with_live_handle_clone_terminates() {
-        // Regression: `Server::drop` used to wait for the request channel
-        // to close, which never happens while a cloned handle is alive.
+        // Regression (PR 2): shutdown must not wait for the request
+        // channel/queue to be released — a cloned handle keeps it alive.
         let server = Server::spawn(SessionConfig::default(), dummy_backend);
         let clone = server.handle();
         let (done_tx, done_rx) = mpsc::channel();
@@ -294,6 +527,125 @@ mod tests {
         let h = server.handle();
         server.shutdown();
         let eg = crate::features::EdaGraph::from_aig(&crate::aig::mult::csa_multiplier(3));
-        assert!(h.verify_blocking(eg, VerifyOptions::default()).is_err());
+        assert!(h.verify_blocking(eg.clone(), VerifyOptions::default()).is_err());
+        match h.try_submit(eg, VerifyOptions::default()) {
+            Err(e) => assert!(e.to_string().contains("server stopped"), "{e:#}"),
+            Ok(_) => panic!("try_submit accepted after shutdown"),
+        }
+    }
+
+    #[test]
+    fn partially_failed_worker_fleet_serves_from_healthy_workers() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        // 3 workers, the first two factory calls fail: the failed
+        // workers must step aside, and every request must succeed via
+        // the healthy worker — no nondeterministic error subset.
+        let calls = Arc::new(AtomicUsize::new(0));
+        let calls_f = Arc::clone(&calls);
+        let server = Server::spawn(
+            SessionConfig { workers: 3, threads: 1, ..Default::default() },
+            move || {
+                if calls_f.fetch_add(1, Ordering::SeqCst) < 2 {
+                    anyhow::bail!("synthetic init failure");
+                }
+                dummy_backend()
+            },
+        );
+        let h = server.handle();
+        let eg = crate::features::EdaGraph::from_aig(&crate::aig::mult::csa_multiplier(4));
+        for _ in 0..6 {
+            let r = h.verify_blocking(eg.clone(), VerifyOptions::partitions(2));
+            assert!(r.is_ok(), "healthy worker must absorb the whole load: {r:?}");
+        }
+        server.shutdown();
+        assert_eq!(calls.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn fully_failed_worker_fleet_answers_errors_instead_of_hanging() {
+        let server = Server::spawn(
+            SessionConfig { workers: 3, threads: 1, ..Default::default() },
+            || anyhow::bail!("no backend today"),
+        );
+        let h = server.handle();
+        let eg = crate::features::EdaGraph::from_aig(&crate::aig::mult::csa_multiplier(3));
+        let err = h.verify_blocking(eg, VerifyOptions::default()).unwrap_err();
+        assert!(err.to_string().contains("backend init failed"), "{err:#}");
+    }
+
+    /// Backend whose inference always panics — stands in for a kernel
+    /// assert tripping on a request the shape validation admitted.
+    struct PanickingBackend;
+
+    impl crate::backend::InferenceBackend for PanickingBackend {
+        fn name(&self) -> &'static str {
+            "panicking"
+        }
+        fn num_classes(&self) -> usize {
+            5
+        }
+        fn infer(
+            &self,
+            _part: crate::backend::PartitionInput<'_>,
+        ) -> Result<crate::backend::PartitionLogits> {
+            panic!("synthetic kernel panic");
+        }
+        fn infer_batch(
+            &self,
+            _parts: &[crate::backend::PartitionInput<'_>],
+        ) -> Result<Vec<crate::backend::PartitionLogits>> {
+            panic!("synthetic kernel panic");
+        }
+    }
+
+    #[test]
+    fn worker_panic_fails_clients_instead_of_hanging_them() {
+        // Single worker dies mid-request: the triggering caller must get
+        // an error (its reply channel disconnects during unwind), and
+        // the dead fleet must fail later submissions rather than queue
+        // them for a drain that will never come.
+        let server = Server::spawn(
+            SessionConfig { workers: 1, threads: 1, ..Default::default() },
+            || Ok(Box::new(PanickingBackend) as Backend),
+        );
+        let h = server.handle();
+        let eg = crate::features::EdaGraph::from_aig(&crate::aig::mult::csa_multiplier(3));
+        let err = h
+            .verify_blocking(eg.clone(), VerifyOptions::default())
+            .expect_err("a panicked worker must not produce an answer");
+        assert!(err.to_string().contains("dropped reply"), "{err:#}");
+        // Give the death guard a moment to close the queue, then later
+        // submissions must error instead of queueing into the void.
+        let deadline = std::time::Instant::now() + Duration::from_secs(30);
+        loop {
+            match h.submit(eg.clone(), VerifyOptions::default()) {
+                Err(_) => break, // "server stopped" — guard fired
+                Ok(rx) => {
+                    // Raced ahead of the guard: the queued request must
+                    // still be failed by fail_pending, not stranded.
+                    assert!(
+                        rx.recv_timeout(Duration::from_secs(30)).is_err(),
+                        "request queued after a fleet-wide death was silently kept"
+                    );
+                }
+            }
+            assert!(std::time::Instant::now() < deadline, "death guard never closed the queue");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+    }
+
+    #[test]
+    fn requests_queued_before_shutdown_are_answered() {
+        let server = Server::spawn(SessionConfig::default(), dummy_backend);
+        let h = server.handle();
+        let eg = crate::features::EdaGraph::from_aig(&crate::aig::mult::csa_multiplier(4));
+        let pending: Vec<_> = (0..6)
+            .map(|_| h.submit(eg.clone(), VerifyOptions::partitions(2)).unwrap())
+            .collect();
+        server.shutdown(); // drains, answers, then joins
+        for rx in pending {
+            let r = rx.recv().expect("queued request dropped").unwrap();
+            assert_eq!(r.pred.len(), eg.num_nodes);
+        }
     }
 }

@@ -138,13 +138,35 @@ impl SageModel {
     /// aggregates into the scratch `agg` buffer and writes activations
     /// into the opposite ping-pong buffer — no per-layer allocation. The
     /// returned slice (the logits, [n × num_classes]) borrows the scratch
-    /// and is valid until the next pass.
+    /// and is valid until the next pass. Dense matmuls run on the
+    /// process-default thread count; lanes that share a split thread
+    /// budget (see [`crate::util::pool::split_threads`]) call
+    /// [`Self::forward_with_threads`] instead.
     pub fn forward_with<'s>(
         &self,
         csr: &Csr,
         features: &[f32],
         engine: &dyn SpmmEngine,
         scratch: &'s mut ForwardScratch,
+    ) -> &'s [f32] {
+        self.forward_with_threads(csr, features, engine, scratch, {
+            use crate::util::pool::default_threads;
+            default_threads()
+        })
+    }
+
+    /// [`Self::forward_with`] with an explicit dense-matmul thread count,
+    /// so per-backend budgets are honored instead of the process-wide
+    /// `GROOT_THREADS` default. Thread count never changes the numbers:
+    /// each output row is accumulated by exactly one thread in a fixed
+    /// order, so results are byte-identical for every `threads` value.
+    pub fn forward_with_threads<'s>(
+        &self,
+        csr: &Csr,
+        features: &[f32],
+        engine: &dyn SpmmEngine,
+        scratch: &'s mut ForwardScratch,
+        threads: usize,
     ) -> &'s [f32] {
         let n = csr.num_nodes();
         let mut dim = self.input_dim();
@@ -156,8 +178,16 @@ impl SageModel {
             engine.spmm_mean_into(csr, h, dim, &mut scratch.agg[..n * dim]);
             let out = &mut scratch.pong[..n * layer.dout];
             out.fill(0.0);
-            matmul_add(h, &layer.w_self, out, n, dim, layer.dout);
-            matmul_add(&scratch.agg[..n * dim], &layer.w_neigh, out, n, dim, layer.dout);
+            matmul_add_with(threads, h, &layer.w_self, out, n, dim, layer.dout);
+            matmul_add_with(
+                threads,
+                &scratch.agg[..n * dim],
+                &layer.w_neigh,
+                out,
+                n,
+                dim,
+                layer.dout,
+            );
             for row in out.chunks_exact_mut(layer.dout) {
                 for (d, v) in row.iter_mut().enumerate() {
                     *v += layer.bias[d];
@@ -184,14 +214,30 @@ impl SageModel {
     }
 }
 
-/// out += a[n×k] · b[k×m] (row-major), parallel over rows.
+/// out += a[n×k] · b[k×m] (row-major), parallel over rows with the
+/// process-default thread count ([`matmul_add_with`] takes an explicit
+/// one).
 pub fn matmul_add(a: &[f32], b: &[f32], out: &mut [f32], n: usize, k: usize, m: usize) {
-    use crate::util::pool::{default_threads, parallel_for_static, SendPtr};
+    matmul_add_with(crate::util::pool::default_threads(), a, b, out, n, k, m)
+}
+
+/// [`matmul_add`] with an explicit thread count (per-row accumulation
+/// order is fixed, so every thread count produces identical bytes).
+pub fn matmul_add_with(
+    threads: usize,
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    n: usize,
+    k: usize,
+    m: usize,
+) {
+    use crate::util::pool::{parallel_for_static, SendPtr};
     assert_eq!(a.len(), n * k);
     assert_eq!(b.len(), k * m);
     assert_eq!(out.len(), n * m);
     let ptr = SendPtr(out.as_mut_ptr());
-    parallel_for_static(default_threads(), n, |_, s, e| {
+    parallel_for_static(threads, n, |_, s, e| {
         let ptr = &ptr;
         for u in s..e {
             // SAFETY: disjoint row ranges per thread.
@@ -394,6 +440,32 @@ mod tests {
         // same three backing allocations — no reallocation happened
         assert_eq!(p1, p2, "logits buffer not stable across warm passes");
         assert_eq!(bufs1, scratch.buffer_ptrs(), "scratch arena reallocated");
+    }
+
+    #[test]
+    fn forward_is_byte_identical_across_thread_counts() {
+        // The concurrent runtime's hard invariant: matmul rows accumulate
+        // in a fixed order regardless of how many threads split them.
+        let model = SageModel {
+            layers: vec![SageLayer {
+                din: 2,
+                dout: 4,
+                w_self: (0..8).map(|i| (i as f32 * 0.3).sin()).collect(),
+                w_neigh: (0..8).map(|i| (i as f32 * 0.7).cos()).collect(),
+                bias: vec![0.1, -0.1, 0.2, -0.2],
+            }],
+        };
+        let edges: Vec<(u32, u32)> = (0..63u32).map(|v| (v, v + 1)).collect();
+        let csr = Csr::symmetric_from_edges(64, &edges);
+        let x: Vec<f32> = (0..64 * 2).map(|i| (i as f32 * 0.11).sin()).collect();
+        let engine = CsrRowParallel::new(1);
+        let mut scratch = ForwardScratch::new();
+        let want = model.forward_with_threads(&csr, &x, &engine, &mut scratch, 1).to_vec();
+        for threads in [2usize, 3, 8] {
+            let mut s = ForwardScratch::new();
+            let got = model.forward_with_threads(&csr, &x, &engine, &mut s, threads);
+            assert_eq!(got, &want[..], "threads={threads} changed the bytes");
+        }
     }
 
     #[test]

@@ -6,17 +6,24 @@
 //! repeat server request pays), and writes the rows to
 //! `BENCH_pipeline.json` so successive PRs can track the trajectory.
 //!
+//! `--serve` instead sweeps the CONCURRENT serving runtime: in-flight
+//! clients × worker threads at one fixed total thread budget (workers
+//! share it: per-worker backend budget = total / workers, so a 1-worker
+//! row is the single-router baseline at EQUAL hardware), writing
+//! BENCH_serve.json with throughput and p50/p95 latency.
+//!
 //! Works with or without trained artifacts: if the weights bundle is
 //! missing, a fixed synthetic two-layer model is used — the bench times
 //! the pipeline, not the accuracy.
 
 use super::Table;
+use crate::coordinator::server::{Server, VerifyOptions};
 use crate::coordinator::{PlanCache, PlanOptions, PreparedGraph, Session, SessionConfig};
 use crate::datasets::{self, DatasetKind};
 use crate::gnn::{SageLayer, SageModel};
 use crate::util::timer::{bench_for, fmt_dur};
 use anyhow::{Context, Result};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// One measured row, serialized into BENCH_pipeline.json.
 struct BenchRow {
@@ -162,6 +169,198 @@ fn render_json(rows: &[BenchRow]) -> String {
             r.stream_median_s,
             r.stream_peak_bytes,
             r.eager_exec_bytes,
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
+/// One measured serving row, serialized into BENCH_serve.json.
+struct ServeBenchRow {
+    dataset: String,
+    nodes: usize,
+    partitions: usize,
+    workers: usize,
+    clients: usize,
+    total_threads: usize,
+    requests: usize,
+    throughput_rps: f64,
+    knodes_per_s: f64,
+    p50_ms: f64,
+    p95_ms: f64,
+}
+
+/// `groot harness bench --serve` — the serving concurrency sweep:
+/// 1/2/4/8 in-flight clients × worker counts, all at ONE total thread
+/// budget (per-worker backend budget = total / workers). The workers=1
+/// row is the old single-router shape, so each column's speedup over it
+/// is the multi-worker win at equal hardware. Requests repeat the same
+/// circuit (the run-time verification loop), so after one warm-up the
+/// sweep measures the steady plan-cache-warm serving path.
+pub fn bench_serve(
+    weights: &str,
+    quick: bool,
+    out_path: &str,
+    max_workers: Option<usize>,
+) -> Result<()> {
+    let model = super::native_model(weights).unwrap_or_else(|_| synthetic_model());
+    let (bits, partitions) = if quick { (16usize, 8usize) } else { (64, 8) };
+    let graph = datasets::build(DatasetKind::Csa, bits)?;
+    let total_threads = crate::util::pool::default_threads().max(4);
+    // `--workers N` pins the sweep to {1, N} (baseline + requested);
+    // otherwise sweep the default ladder.
+    let worker_counts: Vec<usize> = match max_workers {
+        Some(w) if w > 1 => vec![1, w],
+        Some(_) => vec![1],
+        None if quick => vec![1, 2],
+        None => vec![1, 2, 4],
+    };
+    let client_counts: &[usize] = if quick { &[1, 4] } else { &[1, 2, 4, 8] };
+    let per_client = if quick { 6 } else { 25 };
+
+    let mut t = Table::new(
+        format!(
+            "Serving concurrency sweep — csa{bits}, {partitions} partitions, \
+             total thread budget {total_threads}"
+        ),
+        &["workers", "clients", "reqs", "throughput req/s", "knodes/s", "p50", "p95"],
+    );
+    let mut rows = Vec::new();
+    for &workers in &worker_counts {
+        let per_worker_threads = (total_threads / workers).max(1);
+        let model = model.clone();
+        let server = Server::spawn(
+            SessionConfig {
+                num_partitions: partitions,
+                threads: per_worker_threads,
+                workers,
+                ..Default::default()
+            },
+            move || -> Result<crate::coordinator::Backend> {
+                Ok(Box::new(crate::backend::NativeBackend::with_threads(
+                    model.clone(),
+                    per_worker_threads,
+                )))
+            },
+        );
+        let handle = server.handle();
+        // one warm-up request builds the shared plan (single-flight)
+        handle.verify_blocking(graph.clone(), VerifyOptions::default())?;
+
+        for &clients in client_counts {
+            let requests = clients * per_client;
+            // Closed-loop clients run as jobs on the work-stealing
+            // ThreadPool (one worker per client): the pool IS part of
+            // the runtime under test, and each client keeps exactly one
+            // request in flight.
+            let pool = crate::util::pool::ThreadPool::new(clients);
+            let (lat_tx, lat_rx) = std::sync::mpsc::channel::<Vec<f64>>();
+            let wall_start = Instant::now();
+            for _ in 0..clients {
+                let handle = handle.clone();
+                let graph = graph.clone();
+                let lat_tx = lat_tx.clone();
+                pool.execute(move || {
+                    let mut lat = Vec::with_capacity(per_client);
+                    for _ in 0..per_client {
+                        let t0 = Instant::now();
+                        let res = handle
+                            .verify_blocking(graph.clone(), VerifyOptions::default())
+                            .expect("serve bench request failed");
+                        lat.push(t0.elapsed().as_secs_f64() * 1e3);
+                        assert_eq!(res.pred.len(), graph.num_nodes);
+                    }
+                    let _ = lat_tx.send(lat);
+                })
+                .expect("client pool closed early");
+            }
+            drop(lat_tx);
+            // iter() ends once every client job finished and dropped its
+            // sender — that instant is the sweep's wall-clock endpoint.
+            let mut latencies: Vec<f64> = lat_rx.iter().flatten().collect();
+            let wall = wall_start.elapsed().as_secs_f64().max(1e-9);
+            drop(pool); // shutdown + join the client workers
+            latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let pct = |p: f64| -> f64 {
+                let idx = ((latencies.len() as f64 - 1.0) * p).round() as usize;
+                latencies[idx]
+            };
+            let row = ServeBenchRow {
+                dataset: format!("csa{bits}"),
+                nodes: graph.num_nodes,
+                partitions,
+                workers,
+                clients,
+                total_threads,
+                requests,
+                throughput_rps: requests as f64 / wall,
+                knodes_per_s: (requests * graph.num_nodes) as f64 / wall / 1e3,
+                p50_ms: pct(0.50),
+                p95_ms: pct(0.95),
+            };
+            t.row(vec![
+                row.workers.to_string(),
+                row.clients.to_string(),
+                row.requests.to_string(),
+                format!("{:.1}", row.throughput_rps),
+                format!("{:.1}", row.knodes_per_s),
+                format!("{:.2} ms", row.p50_ms),
+                format!("{:.2} ms", row.p95_ms),
+            ]);
+            rows.push(row);
+        }
+        server.shutdown();
+    }
+    t.print();
+
+    // headline: best multi-worker throughput over the 1-worker baseline
+    // at the SAME client load (equal total thread budget by construction)
+    let speedup_at = |clients: usize| -> Option<f64> {
+        let base = rows
+            .iter()
+            .find(|r| r.workers == 1 && r.clients == clients)?
+            .throughput_rps;
+        let best = rows
+            .iter()
+            .filter(|r| r.clients == clients && r.workers > 1)
+            .map(|r| r.throughput_rps)
+            .fold(f64::NAN, f64::max);
+        (base > 0.0 && best.is_finite()).then_some(best / base)
+    };
+    if let Some(s) = speedup_at(*client_counts.last().unwrap()) {
+        println!(
+            "\nmulti-worker speedup at {} clients (equal {total_threads}-thread budget): {s:.2}x",
+            client_counts.last().unwrap()
+        );
+    }
+
+    std::fs::write(out_path, render_serve_json(&rows))
+        .with_context(|| format!("write {out_path}"))?;
+    println!("wrote {out_path}");
+    Ok(())
+}
+
+fn render_serve_json(rows: &[ServeBenchRow]) -> String {
+    let mut s = String::from("{\n  \"bench\": \"serve_concurrency\",\n");
+    s.push_str("  \"unit\": \"requests/second; latency ms\",\n  \"results\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"dataset\": \"{}\", \"nodes\": {}, \"partitions\": {}, \
+             \"workers\": {}, \"clients\": {}, \"total_threads\": {}, \
+             \"requests\": {}, \"throughput_rps\": {:.3}, \
+             \"knodes_per_s\": {:.1}, \"p50_ms\": {:.3}, \"p95_ms\": {:.3}}}{}\n",
+            r.dataset,
+            r.nodes,
+            r.partitions,
+            r.workers,
+            r.clients,
+            r.total_threads,
+            r.requests,
+            r.throughput_rps,
+            r.knodes_per_s,
+            r.p50_ms,
+            r.p95_ms,
             if i + 1 < rows.len() { "," } else { "" }
         ));
     }
@@ -317,6 +516,29 @@ mod tests {
         assert!(s.contains("\"dataset\": \"csa16\""));
         assert!(s.contains("\"plan_cache_speedup\": 5.000"));
         assert!(s.contains("\"stream_peak_bytes\": 50000"));
+        assert_eq!(s.matches('{').count(), s.matches('}').count());
+        assert_eq!(s.matches('[').count(), s.matches(']').count());
+    }
+
+    #[test]
+    fn serve_json_is_well_formed_ish() {
+        let rows = vec![ServeBenchRow {
+            dataset: "csa64".into(),
+            nodes: 37000,
+            partitions: 8,
+            workers: 4,
+            clients: 8,
+            total_threads: 4,
+            requests: 200,
+            throughput_rps: 123.4,
+            knodes_per_s: 4565.8,
+            p50_ms: 7.5,
+            p95_ms: 12.25,
+        }];
+        let s = render_serve_json(&rows);
+        assert!(s.contains("\"bench\": \"serve_concurrency\""));
+        assert!(s.contains("\"workers\": 4"));
+        assert!(s.contains("\"p95_ms\": 12.250"));
         assert_eq!(s.matches('{').count(), s.matches('}').count());
         assert_eq!(s.matches('[').count(), s.matches(']').count());
     }

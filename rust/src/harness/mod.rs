@@ -50,6 +50,10 @@ pub fn run(which: &str, args: &mut Args) -> Result<()> {
             if args.flag("train") {
                 let out = args.get_or("out", "BENCH_train.json");
                 bench::bench_train(quick, &out)
+            } else if args.flag("serve") {
+                let out = args.get_or("out", "BENCH_serve.json");
+                let workers = args.parse_or("workers", 0usize)?;
+                bench::bench_serve(&weights, quick, &out, (workers > 0).then_some(workers))
             } else {
                 let out = args.get_or("out", "BENCH_pipeline.json");
                 bench::bench_pipeline(&weights, quick, &out)

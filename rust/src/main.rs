@@ -28,8 +28,10 @@ fn run() -> Result<()> {
         "gamora-features",
         "quick",
         "train",
+        "serve",
         "assert-improves",
         "stream",
+        "prefetch",
         "oracle",
     ]);
     let cmd = args.positional.first().cloned().unwrap_or_else(|| "help".into());
@@ -55,8 +57,9 @@ USAGE:
   groot gen-dataset --out DIR [--specs csa8,csa16,fpga64,...]
   groot classify --dataset csa --bits 16 [--partitions 8] [--no-regrow]
                  [--backend native|xla] [--artifacts DIR] [--weights FILE]
+                 [--threads N (per-backend budget: partition lanes × SpMM)]
                  [--batch N (disjoint graph copies)]
-                 [--stream [--window 4] [--chunk 8192]]
+                 [--stream [--window 4] [--chunk 8192] [--prefetch]]
   groot verify   --dataset csa --bits 16 [same options as classify]
                  [--oracle (ground-truth labels feed the algebraic stage)]
 
@@ -64,6 +67,8 @@ USAGE:
   compact columnar store and executes partitions through the backend one
   bounded window at a time: peak execution memory ~ largest window, not
   the whole graph. Predictions are byte-identical to the eager path.
+  --prefetch overlaps the next window's gather with the current window's
+  inference (2 live windows: faster, but double the windowed memory).
   groot train    --dataset csa --bits 8 [--val-bits 16,32] [--epochs 200]
                  [--lr 0.01] [--hidden 64,64] [--partitions 4] [--seed 0]
                  [--threads N (SpMM engine lanes; matmuls follow GROOT_THREADS)]
@@ -71,7 +76,17 @@ USAGE:
                  [--resume CKPT] [--assert-improves]
   groot harness  fig1a|fig6a|fig6b|fig6c|fig6d|fig7|fig8|fig9|fig10|tab2|bench|memory
                  [--weights FILE] [--quick] [--train (bench)] [--out FILE (bench|memory)]
+                 [--serve (bench: concurrency sweep — in-flight clients ×
+                  worker counts at a fixed total thread budget; --workers N
+                  pins the sweep to 1 and N; writes BENCH_serve.json with
+                  throughput + p50/p95)]
   groot info     --dataset csa --bits 16
+
+Serving: worker count lives in SessionConfig.workers (the `--workers`
+option feeds it; consumed today by `harness bench --serve`, the serve
+example, and library `Server::spawn` users — plain classify/verify runs
+ignore it). Each worker owns a backend, all share one plan cache. Keep
+workers × --threads ≤ cores — the runtime splits, never multiplies.
 
 The paper's flow end-to-end from nothing but the circuit generators:
   groot train --dataset csa --bits 8 --seed 1        # writes artifacts/ckpt_csa8.bin
@@ -126,6 +141,7 @@ fn session_config(args: &mut Args) -> Result<SessionConfig> {
         regrow: !args.flag("no-regrow"),
         seed: args.parse_or("seed", 0u64)?,
         threads: args.parse_or("threads", groot::util::pool::default_threads())?,
+        workers: args.parse_or("workers", 1usize)?,
     })
 }
 
@@ -135,6 +151,10 @@ struct IngestOptions {
     batch: usize,
     window: usize,
     chunk: usize,
+    /// Gather window W+1 on a second thread while W infers: better wall
+    /// time, ~2× the windowed working set (so NOT the default under
+    /// memory caps).
+    prefetch: bool,
 }
 
 fn ingest_options(args: &mut Args) -> Result<IngestOptions> {
@@ -143,6 +163,7 @@ fn ingest_options(args: &mut Args) -> Result<IngestOptions> {
         batch: args.parse_or("batch", 1usize)?,
         window: args.parse_or("window", 4usize)?,
         chunk: args.parse_or("chunk", groot::graph::DEFAULT_CHUNK_NODES)?,
+        prefetch: args.flag("prefetch"),
     })
 }
 
@@ -163,16 +184,21 @@ fn run_classify(
         )?;
         println!(
             "dataset {}{} (batch {}): {} nodes, {} edges; compact store {:.1} B/node, \
-             streaming window {}",
+             streaming window {}{}",
             kind.name(),
             bits,
             ing.batch,
             prepared.num_nodes(),
             prepared.num_edges(),
             prepared.resident_bytes() as f64 / prepared.num_nodes().max(1) as f64,
-            ing.window
+            ing.window,
+            if ing.prefetch { " (prefetch overlap)" } else { "" }
         );
-        let res = session.classify_streaming(&prepared, ing.window)?;
+        let res = if ing.prefetch {
+            session.classify_streaming_overlapped(&prepared, ing.window)?
+        } else {
+            session.classify_streaming(&prepared, ing.window)?
+        };
         let labels = want_labels.then(|| prepared.labels_u8().into_owned());
         Ok((res, prepared.num_nodes(), prepared.num_aig_nodes(), labels))
     } else {

@@ -21,6 +21,11 @@ impl SpmmEngine for CsrRowParallel {
         "cusparse-like"
     }
 
+    fn set_threads(&mut self, threads: usize) {
+        // rows are computed whole, so thread count never changes bytes
+        self.threads = threads.max(1);
+    }
+
     fn worker_loads(&self, csr: &Csr, workers: usize) -> Vec<u64> {
         // static even split BY ROW COUNT — blind to degree skew
         let n = csr.num_nodes();
@@ -174,6 +179,15 @@ impl SpmmEngine for MergePathSpmm {
         "mergepath-spmm"
     }
 
+    fn set_threads(&mut self, threads: usize) {
+        // NOTE: the nnz split depends on the thread count, so boundary
+        // rows may round differently across budgets — this engine is a
+        // comparison baseline, not a serving engine (the parity-pinned
+        // GROOT engine computes every partial from a thread-count-
+        // independent plan).
+        self.threads = threads.max(1);
+    }
+
     fn worker_loads(&self, csr: &Csr, workers: usize) -> Vec<u64> {
         // nonzeros split exactly evenly — balanced by construction
         let nnz = csr.num_entries() as u64;
@@ -249,6 +263,11 @@ impl GnnAdvisorLike {
 impl SpmmEngine for GnnAdvisorLike {
     fn name(&self) -> &'static str {
         "gnnadvisor-like"
+    }
+
+    fn set_threads(&mut self, threads: usize) {
+        // rows stay whole inside nnz-budgeted tasks: bytes are invariant
+        self.threads = threads.max(1);
     }
 
     fn worker_loads(&self, csr: &Csr, workers: usize) -> Vec<u64> {

@@ -157,6 +157,17 @@ impl SpmmEngine for GrootSpmm {
         "groot-gpu"
     }
 
+    fn set_threads(&mut self, threads: usize) {
+        // The cached plan (HD chunks, LD tasks) is a function of the
+        // CONFIG and the graph, never of the thread count, and every
+        // partial reduces in fixed slot order — so re-budgeting a pooled
+        // engine's lanes changes wall time only, never bytes. The config
+        // (incl. ld_degree_sort) is deliberately left as constructed:
+        // flipping it would invalidate a valid cached plan for no
+        // correctness gain.
+        self.threads = threads.max(1);
+    }
+
     fn worker_loads(&self, csr: &Csr, workers: usize) -> Vec<u64> {
         // LD: degree-sorted nnz-budgeted tasks; HD: every wide row split
         // into hd_chunk-sized pieces — no single task exceeds hd_chunk,

@@ -23,9 +23,23 @@ pub use groot::GrootSpmm;
 
 use crate::graph::Csr;
 
-/// A pluggable SpMM strategy.
-pub trait SpmmEngine: Sync {
+/// A pluggable SpMM strategy. `Send + Sync` so engines can live inside
+/// the concurrent backends (`NativeBackend`'s lane pool hands engines
+/// across partition lanes); every engine here is plain data plus at most
+/// a `Mutex` around its cached plan.
+pub trait SpmmEngine: Send + Sync {
     fn name(&self) -> &'static str;
+
+    /// Re-budget this engine's internal parallelism (thread lanes). The
+    /// lane pool calls this when a checked-out engine's previous budget
+    /// differs from the current `split_threads` split, so outer
+    /// (partition) × inner (SpMM) parallelism never oversubscribes.
+    /// Engines with no internal parallelism may ignore it (default
+    /// no-op). Serving engines must keep results thread-count-INVARIANT
+    /// (the GROOT engine does: its plan and reduction orders never
+    /// depend on the count); comparison baselines that split rows by
+    /// thread count (MergePath) note their last-ulp caveat locally.
+    fn set_threads(&mut self, _threads: usize) {}
 
     /// y = D⁻¹ A x written into caller-owned `out` (row-major [n × dim],
     /// `out.len() == n·dim`). Every element of `out` is overwritten

@@ -1,22 +1,107 @@
-//! Hand-rolled thread pool with a `parallel_for` primitive.
+//! Hand-rolled thread pool with work stealing and data-parallel loops.
 //!
 //! rayon is not available in this offline environment, so the SpMM engines
-//! (`crate::spmm`) and the coordinator run on this pool instead. The design
-//! mirrors what the paper's CUDA kernels need from the host side: static
-//! work partitioning (chunked ranges) plus a work-stealing-free dynamic mode
-//! (atomic chunk counter) for skewed workloads.
+//! (`crate::spmm`), the backends, and the coordinator run on this module
+//! instead. Three layers:
+//!
+//! * [`ThreadPool`] — a fixed set of workers, each with its OWN job deque;
+//!   submissions round-robin across the deques and idle workers steal a
+//!   chunk (half) of a victim's queue instead of contending on one shared
+//!   `Mutex<Receiver>`. This is the host-side analogue of the paper's
+//!   dynamic workload dispatch: queues stay local until imbalance appears.
+//! * scoped loops — [`parallel_for_static`] (contiguous ranges, the HD-row
+//!   static split), [`parallel_for_dynamic`] (atomic chunk counter for
+//!   skewed work), [`parallel_map`] (per-index results, no `Default +
+//!   Clone` bound), and [`parallel_join`] (run two closures concurrently,
+//!   the primitive the streaming executor overlaps gather/infer with).
+//! * budget splitting — [`split_threads`] divides one thread budget
+//!   between outer task lanes and the inner parallelism each lane gets,
+//!   so inter-partition and intra-SpMM parallelism share cores instead of
+//!   oversubscribing (`P partition lanes × T SpMM threads ≤ budget`).
 
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
-/// A fixed-size thread pool. Jobs are closures; `scope`-style helpers below
-/// provide data-parallel loops over index ranges.
+/// Error returned by [`ThreadPool::execute`] once the pool has shut down
+/// (explicitly or because it is mid-drop).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolClosed;
+
+impl std::fmt::Display for PoolClosed {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "thread pool is shut down")
+    }
+}
+
+impl std::error::Error for PoolClosed {}
+
+struct PoolShared {
+    /// One deque per worker: the owner pops from the front, thieves
+    /// drain the oldest half in one go. Separate locks keep submissions
+    /// and local pops off each other's cache lines; the old single
+    /// `Mutex<Receiver>` serialized every dequeue through one lock.
+    queues: Vec<Mutex<VecDeque<Job>>>,
+    /// Open flag, doubling as the sleep/wake lock: every submission
+    /// pushes UNDER this lock before notifying, and an idle worker
+    /// re-scans the queues while holding it before waiting — so a job
+    /// enqueued between a worker's scan and its `wait` is impossible
+    /// (the submitter blocks on the lock until the worker is parked).
+    open: Mutex<bool>,
+    idle: Condvar,
+}
+
+impl PoolShared {
+    fn any_queued(&self) -> bool {
+        self.queues.iter().any(|q| !q.lock().unwrap().is_empty())
+    }
+
+    /// Pop from `me`'s own queue, else steal up to half of the FIRST
+    /// non-empty victim in ring order from `me` (chunk stealing: one
+    /// lock round-trip amortizes over several jobs; the leftovers land
+    /// in `me`'s queue for local pops). Ring order — not fullest-first —
+    /// keeps the scan at one lock per victim; round-robin submission
+    /// keeps queue depths close enough that victim choice matters
+    /// little.
+    fn pop_or_steal(&self, me: usize) -> Option<Job> {
+        if let Some(job) = self.queues[me].lock().unwrap().pop_front() {
+            return Some(job);
+        }
+        let k = self.queues.len();
+        for off in 1..k {
+            let victim = (me + off) % k;
+            let mut grabbed: Vec<Job> = {
+                let mut vq = self.queues[victim].lock().unwrap();
+                let take = vq.len().div_ceil(2);
+                if take == 0 {
+                    continue;
+                }
+                // Steal the OLDEST half from the front: the victim keeps
+                // its most recently pushed (cache-warm) work.
+                vq.drain(..take).collect()
+            }; // victim lock released before touching our own queue
+            let first = grabbed.remove(0);
+            if !grabbed.is_empty() {
+                let mut mine = self.queues[me].lock().unwrap();
+                mine.extend(grabbed);
+            }
+            return Some(first);
+        }
+        None
+    }
+}
+
+/// A fixed-size work-stealing thread pool. Jobs are closures; the scoped
+/// helpers below provide data-parallel loops over index ranges without
+/// going through the pool at all.
 pub struct ThreadPool {
     workers: Vec<thread::JoinHandle<()>>,
-    tx: Option<mpsc::Sender<Job>>,
+    shared: Arc<PoolShared>,
+    /// Round-robin submission cursor.
+    next: AtomicUsize,
     size: usize,
 }
 
@@ -24,27 +109,26 @@ impl ThreadPool {
     /// Create a pool with `size` workers (min 1).
     pub fn new(size: usize) -> Self {
         let size = size.max(1);
-        let (tx, rx) = mpsc::channel::<Job>();
-        let rx = Arc::new(Mutex::new(rx));
+        let shared = Arc::new(PoolShared {
+            queues: (0..size).map(|_| Mutex::new(VecDeque::new())).collect(),
+            open: Mutex::new(true),
+            idle: Condvar::new(),
+        });
         let workers = (0..size)
             .map(|i| {
-                let rx = Arc::clone(&rx);
+                let shared = Arc::clone(&shared);
                 thread::Builder::new()
                     .name(format!("groot-pool-{i}"))
-                    .spawn(move || loop {
-                        let job = { rx.lock().unwrap().recv() };
-                        match job {
-                            Ok(job) => job(),
-                            Err(_) => break,
-                        }
-                    })
+                    .spawn(move || worker_loop(&shared, i))
                     .expect("spawn pool worker")
             })
             .collect();
-        ThreadPool { workers, tx: Some(tx), size }
+        ThreadPool { workers, shared, next: AtomicUsize::new(0), size }
     }
 
-    /// Pool sized to the number of available CPUs.
+    /// Pool sized to the process-default thread count (respects
+    /// `GROOT_THREADS`); explicit sizes always override — see
+    /// [`default_threads`].
     pub fn with_default_size() -> Self {
         Self::new(default_threads())
     }
@@ -53,24 +137,72 @@ impl ThreadPool {
         self.size
     }
 
-    /// Submit a fire-and-forget job.
-    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
-        self.tx.as_ref().unwrap().send(Box::new(f)).expect("pool send");
+    /// Submit a fire-and-forget job onto the next queue (round-robin).
+    /// Fails with [`PoolClosed`] after [`Self::shutdown`] instead of
+    /// panicking on a dead channel.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) -> Result<(), PoolClosed> {
+        let slot = self.next.fetch_add(1, Ordering::Relaxed) % self.size;
+        // Lock order is open → queue everywhere (the idle scan does the
+        // same), so holding `open` across the push cannot deadlock, and
+        // it makes the enqueue atomic with the wakeup protocol.
+        let open = self.shared.open.lock().unwrap();
+        if !*open {
+            return Err(PoolClosed);
+        }
+        self.shared.queues[slot].lock().unwrap().push_back(Box::new(f));
+        drop(open);
+        self.shared.idle.notify_one();
+        Ok(())
+    }
+
+    /// Stop accepting new jobs. Already-queued jobs still run; workers
+    /// exit once every queue is drained. Idempotent; `drop` calls this
+    /// and then joins the workers.
+    pub fn shutdown(&self) {
+        *self.shared.open.lock().unwrap() = false;
+        self.shared.idle.notify_all();
     }
 }
 
 impl Drop for ThreadPool {
     fn drop(&mut self) {
-        drop(self.tx.take());
+        self.shutdown();
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
     }
 }
 
-/// Number of worker threads to default to (respects GROOT_THREADS).
-/// Resolved once per process and cached: this sits on the per-layer hot
-/// path (`matmul_add`), and `env::var` allocates its value on every call.
+fn worker_loop(shared: &PoolShared, me: usize) {
+    loop {
+        if let Some(job) = shared.pop_or_steal(me) {
+            job();
+            continue;
+        }
+        let mut open = shared.open.lock().unwrap();
+        loop {
+            // Re-check under the open lock: submissions push under this
+            // same lock before notifying, so a job enqueued between our
+            // scan and this wait cannot be missed.
+            if shared.any_queued() {
+                break;
+            }
+            if !*open {
+                return;
+            }
+            open = shared.idle.wait(open).unwrap();
+        }
+    }
+}
+
+/// Number of worker threads the PROCESS defaults to (respects
+/// `GROOT_THREADS`). Resolved once and cached: this sits on per-layer hot
+/// paths, and `env::var` allocates its value on every call. The cache
+/// makes the env var a process-wide default ONLY — code that needs a
+/// different width in the same process (per-backend budgets, the serve
+/// sweep, tests) passes an explicit count to `ThreadPool::new`,
+/// `SessionConfig::threads`, or the `*_with`/`*_threads` kernel variants
+/// instead of re-exporting the env var.
 pub fn default_threads() -> usize {
     static DEFAULT: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
     *DEFAULT.get_or_init(|| {
@@ -80,6 +212,39 @@ pub fn default_threads() -> usize {
             }
         }
         thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+    })
+}
+
+/// Split a total thread `budget` between `tasks` independent outer lanes:
+/// returns `(outer, inner)` with `outer × inner ≤ budget` — `outer`
+/// lanes run concurrently and each gets `inner` threads of nested
+/// parallelism. This is how inter-partition and intra-SpMM parallelism
+/// share one budget instead of multiplying (8 partitions × 8-thread SpMM
+/// on 8 cores would oversubscribe 8×; `split_threads(8, 8) == (8, 1)`).
+pub fn split_threads(budget: usize, tasks: usize) -> (usize, usize) {
+    let budget = budget.max(1);
+    let outer = budget.min(tasks.max(1));
+    (outer, (budget / outer).max(1))
+}
+
+/// Run two closures, potentially in parallel (`b` on a scoped thread,
+/// `a` inline), and return both results. Panics in either closure
+/// propagate. This is the overlap primitive `execute_plan_streaming`
+/// uses to gather window W+1 while window W infers.
+pub fn parallel_join<A, B, RA, RB>(a: A, b: B) -> (RA, RB)
+where
+    A: FnOnce() -> RA + Send,
+    B: FnOnce() -> RB + Send,
+    RA: Send,
+    RB: Send,
+{
+    thread::scope(|s| {
+        let hb = s.spawn(b);
+        let ra = a();
+        match hb.join() {
+            Ok(rb) => (ra, rb),
+            Err(payload) => std::panic::resume_unwind(payload),
+        }
     })
 }
 
@@ -140,26 +305,38 @@ where
     });
 }
 
-/// Run `f(i)` for every i in 0..n, writing results into a returned Vec.
-/// Convenience wrapper over `parallel_for_static` for map-style workloads.
+/// Run `f(i)` for every i in 0..n, writing results into a returned Vec in
+/// index order. Results are written via `MaybeUninit` into disjoint
+/// slots, so `T` needs neither `Default` nor `Clone` — `Result<_, _>`
+/// maps (the parallel `infer_batch` path) work directly.
+///
+/// If `f` panics the panic propagates out of the scope; already-written
+/// results are leaked (never dropped), which is safe — just not tidy —
+/// and only reachable on a panicking path.
 pub fn parallel_map<T, F>(nthreads: usize, n: usize, f: F) -> Vec<T>
 where
-    T: Default + Clone + Send,
+    T: Send,
     F: Fn(usize) -> T + Sync,
 {
-    let mut out = vec![T::default(); n];
+    let mut out: Vec<std::mem::MaybeUninit<T>> =
+        (0..n).map(|_| std::mem::MaybeUninit::uninit()).collect();
     {
         let slots = SendPtr(out.as_mut_ptr());
         parallel_for_static(nthreads, n, |_, s, e| {
             let slots = &slots;
             for i in s..e {
-                // SAFETY: each index i is written by exactly one thread
-                // (ranges are disjoint) and `out` outlives the scope.
-                unsafe { *slots.0.add(i) = f(i) };
+                // SAFETY: static ranges are disjoint and cover 0..n, so
+                // each slot is written exactly once; `out` outlives the
+                // scope.
+                unsafe { (*slots.0.add(i)).write(f(i)) };
             }
         });
     }
-    out
+    // SAFETY: every slot 0..n was initialized above (parallel_for_static
+    // covers the full range even in its inline nthreads<=1 form).
+    // Vec<MaybeUninit<T>> and Vec<T> have identical layout.
+    let mut out = std::mem::ManuallyDrop::new(out);
+    unsafe { Vec::from_raw_parts(out.as_mut_ptr().cast::<T>(), out.len(), out.capacity()) }
 }
 
 /// Shareable raw pointer for disjoint-range writes from scoped threads.
@@ -170,7 +347,10 @@ unsafe impl<T> Sync for SendPtr<T> {}
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::collections::HashSet;
     use std::sync::atomic::AtomicU64;
+    use std::sync::mpsc;
+    use std::time::Duration;
 
     #[test]
     fn pool_runs_jobs() {
@@ -180,10 +360,94 @@ mod tests {
             let c = Arc::clone(&counter);
             pool.execute(move || {
                 c.fetch_add(1, Ordering::SeqCst);
-            });
+            })
+            .unwrap();
         }
-        drop(pool); // joins
+        drop(pool); // joins after draining
         assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn execute_after_shutdown_errors_instead_of_panicking() {
+        let pool = ThreadPool::new(2);
+        pool.execute(|| {}).unwrap();
+        pool.shutdown();
+        assert_eq!(pool.execute(|| {}).unwrap_err(), PoolClosed);
+        // shutdown is idempotent and drop still joins cleanly
+        pool.shutdown();
+    }
+
+    #[test]
+    fn queued_jobs_drain_on_shutdown() {
+        let counter = Arc::new(AtomicU64::new(0));
+        let pool = ThreadPool::new(2);
+        for _ in 0..50 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                std::thread::sleep(Duration::from_micros(200));
+                c.fetch_add(1, Ordering::SeqCst);
+            })
+            .unwrap();
+        }
+        drop(pool); // shutdown + join must run everything already queued
+        assert_eq!(counter.load(Ordering::SeqCst), 50);
+    }
+
+    #[test]
+    fn idle_workers_steal_queued_work() {
+        // Round-robin spreads submissions, but slow jobs pile up behind a
+        // long-running one; with per-worker queues + stealing, more than
+        // one thread must end up executing jobs.
+        let pool = ThreadPool::new(4);
+        let seen: Arc<Mutex<HashSet<thread::ThreadId>>> =
+            Arc::new(Mutex::new(HashSet::new()));
+        for _ in 0..64 {
+            let seen = Arc::clone(&seen);
+            pool.execute(move || {
+                seen.lock().unwrap().insert(thread::current().id());
+                thread::sleep(Duration::from_millis(1));
+            })
+            .unwrap();
+        }
+        drop(pool);
+        assert!(
+            seen.lock().unwrap().len() >= 2,
+            "64 sleeping jobs were all run by one worker — stealing is dead"
+        );
+    }
+
+    #[test]
+    fn parallel_join_runs_both_and_returns_in_order() {
+        let (ra, rb) = parallel_join(|| 1 + 1, || "b");
+        assert_eq!((ra, rb), (2, "b"));
+    }
+
+    #[test]
+    fn parallel_join_is_actually_concurrent() {
+        // `a` blocks until `b` signals: sequential execution of a-then-b
+        // would deadlock, so completing within the timeout proves overlap.
+        let (tx, rx) = mpsc::channel();
+        let (ra, _) = parallel_join(
+            move || rx.recv_timeout(Duration::from_secs(30)).expect("b never ran concurrently"),
+            move || tx.send(42usize).unwrap(),
+        );
+        assert_eq!(ra, 42);
+    }
+
+    #[test]
+    fn split_threads_never_oversubscribes() {
+        for budget in 1..=16usize {
+            for tasks in 1..=20usize {
+                let (outer, inner) = split_threads(budget, tasks);
+                assert!(outer * inner <= budget.max(1), "{budget} {tasks}");
+                assert!(outer >= 1 && inner >= 1);
+                assert!(outer <= tasks.max(1));
+            }
+        }
+        assert_eq!(split_threads(8, 8), (8, 1));
+        assert_eq!(split_threads(8, 2), (2, 4));
+        assert_eq!(split_threads(4, 100), (4, 1));
+        assert_eq!(split_threads(0, 5), (1, 1));
     }
 
     #[test]
@@ -219,9 +483,40 @@ mod tests {
     }
 
     #[test]
+    fn parallel_map_supports_non_default_non_clone_types() {
+        // Results that are neither Default nor Clone (anyhow::Result of a
+        // non-Clone payload is the real consumer).
+        struct NoDefault(usize);
+        let out = parallel_map(3, 100, NoDefault);
+        assert!(out.iter().enumerate().all(|(i, v)| v.0 == i));
+
+        let out: Vec<Result<String, std::io::Error>> =
+            parallel_map(4, 20, |i| Ok(format!("v{i}")));
+        let collected: Result<Vec<String>, _> = out.into_iter().collect();
+        assert_eq!(collected.unwrap()[7], "v7");
+    }
+
+    #[test]
+    fn parallel_map_drops_results_exactly_once() {
+        static DROPS: AtomicUsize = AtomicUsize::new(0);
+        struct CountsDrops;
+        impl Drop for CountsDrops {
+            fn drop(&mut self) {
+                DROPS.fetch_add(1, Ordering::SeqCst);
+            }
+        }
+        let out = parallel_map(4, 37, |_| CountsDrops);
+        assert_eq!(DROPS.load(Ordering::SeqCst), 0, "no drops while alive");
+        drop(out);
+        assert_eq!(DROPS.load(Ordering::SeqCst), 37, "each result dropped once");
+    }
+
+    #[test]
     fn edge_cases_empty_and_single() {
         parallel_for_static(4, 0, |_, s, e| assert_eq!(s, e));
         let out = parallel_map(4, 1, |i| i + 1);
         assert_eq!(out, vec![1]);
+        let empty: Vec<usize> = parallel_map(4, 0, |i| i);
+        assert!(empty.is_empty());
     }
 }

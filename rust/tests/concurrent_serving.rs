@@ -1,0 +1,328 @@
+//! Concurrent serving runtime tests: N client threads × mixed options
+//! against the multi-worker server must produce responses byte-identical
+//! to sequential `Session::classify` runs; the shared plan cache must
+//! build each (circuit, options) plan exactly once under contention; the
+//! bounded queue must shed load through `try_submit`; and the parallel
+//! inter-partition execution path must be byte-identical across thread
+//! budgets and worker counts (family × partitions × regrow × seed ×
+//! workers).
+
+use groot::backend::{InferenceBackend, NativeBackend, PartitionInput, PartitionLogits};
+use groot::coordinator::server::{Server, TrySubmit, VerifyOptions};
+use groot::coordinator::{Backend, Session, SessionConfig};
+use groot::datasets::{self, DatasetKind};
+use groot::features::EdaGraph;
+use groot::gnn::{SageLayer, SageModel};
+use std::collections::HashMap;
+use std::sync::{mpsc, Mutex};
+use std::time::Duration;
+
+/// Deterministic 4→16→5 model with REAL aggregation (nonzero w_neigh):
+/// predictions depend on partitioning + re-growth, so byte-parity across
+/// workers/threads is a meaningful check, not a vacuous one.
+fn aggregating_model() -> SageModel {
+    let wave = |n: usize, scale: f32| -> Vec<f32> {
+        (0..n).map(|i| ((i as f32 * 0.7).sin()) * scale).collect()
+    };
+    SageModel {
+        layers: vec![
+            SageLayer {
+                din: 4,
+                dout: 16,
+                w_self: wave(4 * 16, 0.3),
+                w_neigh: wave(4 * 16, 0.2),
+                bias: wave(16, 0.1),
+            },
+            SageLayer {
+                din: 16,
+                dout: 5,
+                w_self: wave(16 * 5, 0.3),
+                w_neigh: wave(16 * 5, 0.2),
+                bias: wave(5, 0.1),
+            },
+        ],
+    }
+}
+
+fn native_factory(threads: usize) -> impl Fn() -> anyhow::Result<Backend> + Send + Sync {
+    move || Ok(Box::new(NativeBackend::with_threads(aggregating_model(), threads)) as Backend)
+}
+
+/// Sequential ground truth for one (graph, options) pair: a fresh
+/// single-threaded session, the monolithic classify path.
+fn sequential_pred(graph: &EdaGraph, opts: &VerifyOptions) -> Vec<u8> {
+    let base = SessionConfig { threads: 1, ..Default::default() };
+    let resolved = opts.resolve(&base);
+    let session = Session::native(
+        aggregating_model(),
+        SessionConfig {
+            num_partitions: resolved.partitions,
+            regrow: resolved.regrow,
+            seed: resolved.seed,
+            threads: 1,
+            workers: 1,
+        },
+    );
+    session.classify(graph).unwrap().pred
+}
+
+#[test]
+fn stress_mixed_options_byte_identical_to_sequential() {
+    let graph = datasets::build(DatasetKind::Csa, 8).unwrap();
+    let combos: Vec<VerifyOptions> = {
+        let mut v = Vec::new();
+        for partitions in [2usize, 4, 8] {
+            for seed in [0u64, 7] {
+                for regrow in [true, false] {
+                    v.push(VerifyOptions {
+                        partitions: Some(partitions),
+                        regrow: Some(regrow),
+                        seed: Some(seed),
+                    });
+                }
+            }
+        }
+        v
+    };
+    let expected: Vec<Vec<u8>> =
+        combos.iter().map(|o| sequential_pred(&graph, o)).collect();
+
+    // 4 workers × 2-thread backends: both concurrency axes live at once.
+    // Cache sized so no shard can evict (the miss-count assertion below
+    // must count BUILDS, not capacity churn).
+    let server = Server::spawn_with_cache(
+        SessionConfig { workers: 4, threads: 2, ..Default::default() },
+        64,
+        native_factory(2),
+    );
+    let handle = server.handle();
+    std::thread::scope(|s| {
+        for client in 0..4usize {
+            let handle = handle.clone();
+            let combos = &combos;
+            let expected = &expected;
+            let graph = &graph;
+            s.spawn(move || {
+                // every client walks the whole matrix from a different
+                // offset, so identical keys collide across threads
+                for round in 0..2 {
+                    for k in 0..combos.len() {
+                        let i = (k + client * 5 + round) % combos.len();
+                        let res = handle
+                            .verify_blocking(graph.clone(), combos[i].clone())
+                            .expect("server response");
+                        assert_eq!(
+                            res.pred, expected[i],
+                            "client {client} round {round} combo {i}: \
+                             served prediction diverged from sequential classify"
+                        );
+                    }
+                }
+            });
+        }
+    });
+    let (hits, misses) = server.cache_stats();
+    assert_eq!(
+        misses,
+        combos.len() as u64,
+        "every (fingerprint, options) key must be planned exactly once"
+    );
+    assert_eq!(hits + misses, (4 * 2 * combos.len()) as u64);
+    server.shutdown();
+}
+
+#[test]
+fn concurrent_hits_on_one_fingerprint_build_the_plan_once() {
+    let graph = datasets::build(DatasetKind::Csa, 8).unwrap();
+    let server = Server::spawn(
+        SessionConfig { workers: 4, threads: 1, ..Default::default() },
+        native_factory(1),
+    );
+    let handle = server.handle();
+    let opts = VerifyOptions::partitions(4);
+    let results: Vec<_> = std::thread::scope(|s| {
+        let joins: Vec<_> = (0..8)
+            .map(|_| {
+                let handle = handle.clone();
+                let graph = graph.clone();
+                let opts = opts.clone();
+                s.spawn(move || handle.verify_blocking(graph, opts).unwrap())
+            })
+            .collect();
+        joins.into_iter().map(|j| j.join().unwrap()).collect()
+    });
+    let (hits, misses) = server.cache_stats();
+    assert_eq!(misses, 1, "single-flight: one build for 8 concurrent identical requests");
+    assert_eq!(hits, 7);
+    let cold_runs = results.iter().filter(|r| !r.stats.plan_cache_hit).count();
+    assert_eq!(cold_runs, 1, "exactly one response did the planning work");
+    for r in &results[1..] {
+        assert_eq!(r.pred, results[0].pred, "responses diverged across workers");
+    }
+    server.shutdown();
+}
+
+#[test]
+fn parity_across_worker_counts_families_and_options() {
+    let mut expected: HashMap<(usize, usize, bool, u64), Vec<u8>> = HashMap::new();
+    let graphs: Vec<EdaGraph> = [DatasetKind::Csa, DatasetKind::Booth]
+        .iter()
+        .map(|&k| datasets::build(k, 6).unwrap())
+        .collect();
+    for workers in [1usize, 2, 4] {
+        let server = Server::spawn(
+            SessionConfig { workers, threads: 1, ..Default::default() },
+            native_factory(1),
+        );
+        let handle = server.handle();
+        for (gi, graph) in graphs.iter().enumerate() {
+            for partitions in [1usize, 5] {
+                for regrow in [true, false] {
+                    for seed in [0u64, 3] {
+                        let opts = VerifyOptions {
+                            partitions: Some(partitions),
+                            regrow: Some(regrow),
+                            seed: Some(seed),
+                        };
+                        let res =
+                            handle.verify_blocking(graph.clone(), opts.clone()).unwrap();
+                        let key = (gi, partitions, regrow, seed);
+                        match expected.get(&key) {
+                            None => {
+                                // pin against the sequential path once
+                                assert_eq!(
+                                    res.pred,
+                                    sequential_pred(graph, &opts),
+                                    "workers={workers} {key:?} vs sequential"
+                                );
+                                expected.insert(key, res.pred);
+                            }
+                            Some(want) => assert_eq!(
+                                &res.pred, want,
+                                "workers={workers} {key:?} changed the bytes"
+                            ),
+                        }
+                    }
+                }
+            }
+        }
+        server.shutdown();
+    }
+}
+
+#[test]
+fn whole_pipeline_parity_across_thread_budgets() {
+    // The eager path end-to-end (plan → parallel infer_batch → stitch)
+    // through growing backend budgets: bytes must never move.
+    let graph = datasets::build(DatasetKind::Wallace, 8).unwrap();
+    let cfg = |threads: usize| SessionConfig {
+        num_partitions: 6,
+        threads,
+        ..Default::default()
+    };
+    let want = Session::native(aggregating_model(), cfg(1)).classify(&graph).unwrap();
+    for threads in [2usize, 4, 8] {
+        let got = Session::native(aggregating_model(), cfg(threads)).classify(&graph).unwrap();
+        assert_eq!(got.pred, want.pred, "threads={threads}");
+        assert_eq!(got.accuracy, want.accuracy);
+    }
+}
+
+/// Backend that blocks inside `infer_batch` until released — makes queue
+/// saturation deterministic for the back-pressure test.
+struct GateBackend {
+    inner: NativeBackend,
+    started: Mutex<mpsc::Sender<()>>,
+    release: Mutex<mpsc::Receiver<()>>,
+}
+
+impl InferenceBackend for GateBackend {
+    fn name(&self) -> &'static str {
+        "gate"
+    }
+    fn num_classes(&self) -> usize {
+        self.inner.num_classes()
+    }
+    fn infer(&self, part: PartitionInput<'_>) -> anyhow::Result<PartitionLogits> {
+        self.inner.infer(part)
+    }
+    fn infer_batch(
+        &self,
+        parts: &[PartitionInput<'_>],
+    ) -> anyhow::Result<Vec<PartitionLogits>> {
+        let _ = self.started.lock().unwrap().send(());
+        self.release
+            .lock()
+            .unwrap()
+            .recv_timeout(Duration::from_secs(60))
+            .expect("gate never released");
+        self.inner.infer_batch(parts)
+    }
+}
+
+#[test]
+fn try_submit_sheds_load_when_the_bounded_queue_is_full() {
+    let (started_tx, started_rx) = mpsc::channel::<()>();
+    let (release_tx, release_rx) = mpsc::channel::<()>();
+    // The factory is `Fn` but workers=1 calls it once; a second call
+    // (which would split the gate) fails loudly instead of silently.
+    let slots = Mutex::new(Some((started_tx, release_rx)));
+    let server = Server::spawn_with_queue(
+        SessionConfig { workers: 1, threads: 1, ..Default::default() },
+        4, // plan-cache entries
+        2, // submission-queue bound
+        move || {
+            let (stx, rrx) =
+                slots.lock().unwrap().take().expect("gate factory called more than once");
+            Ok(Box::new(GateBackend {
+                inner: NativeBackend::with_threads(aggregating_model(), 1),
+                started: Mutex::new(stx),
+                release: Mutex::new(rrx),
+            }) as Backend)
+        },
+    );
+    let handle = server.handle();
+    let graph = datasets::build(DatasetKind::Csa, 6).unwrap();
+    let opts = VerifyOptions::partitions(2);
+
+    // A is in flight (gate-blocked inside infer_batch)…
+    let rx_a = handle.submit(graph.clone(), opts.clone()).unwrap();
+    started_rx
+        .recv_timeout(Duration::from_secs(60))
+        .expect("worker never started on request A");
+    // …B and C fill the bound-2 queue…
+    let rx_b = handle.submit(graph.clone(), opts.clone()).unwrap();
+    let rx_c = handle.submit(graph.clone(), opts.clone()).unwrap();
+    // …so the next non-blocking submit must report back-pressure and
+    // hand the request back.
+    match handle.try_submit(graph.clone(), opts.clone()).unwrap() {
+        TrySubmit::Busy { graph: returned, .. } => {
+            assert_eq!(returned.num_nodes, graph.num_nodes, "request not handed back intact")
+        }
+        TrySubmit::Accepted(_) => panic!("queue of bound 2 accepted a 3rd queued request"),
+    }
+
+    // Release A, B, C; everything queued before saturation completes.
+    for _ in 0..3 {
+        release_tx.send(()).unwrap();
+    }
+    for rx in [rx_a, rx_b, rx_c] {
+        let res = rx
+            .recv_timeout(Duration::from_secs(60))
+            .expect("gated request never answered")
+            .unwrap();
+        assert_eq!(res.pred.len(), graph.num_nodes);
+    }
+
+    // With the queue drained, try_submit accepts again.
+    match handle.try_submit(graph.clone(), opts).unwrap() {
+        TrySubmit::Accepted(rx) => {
+            release_tx.send(()).unwrap();
+            let res =
+                rx.recv_timeout(Duration::from_secs(60)).expect("post-drain request").unwrap();
+            assert_eq!(res.pred.len(), graph.num_nodes);
+        }
+        TrySubmit::Busy { .. } => panic!("drained queue still reports Busy"),
+    }
+    server.shutdown();
+}

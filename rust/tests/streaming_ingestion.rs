@@ -39,7 +39,7 @@ fn aggregating_model() -> SageModel {
 fn session(partitions: usize, regrow: bool, seed: u64) -> Session {
     Session::native(
         aggregating_model(),
-        SessionConfig { num_partitions: partitions, regrow, seed, threads: 1 },
+        SessionConfig { num_partitions: partitions, regrow, seed, threads: 1, workers: 1 },
     )
 }
 
