@@ -48,7 +48,7 @@ fn main() -> anyhow::Result<()> {
     let mut best_pred: Option<Vec<u8>> = None;
     for parts in [1usize, 2, 4, 8, 16, 32, 64] {
         let plan =
-            prepared.plan(&PlanOptions { partitions: parts, regrow: true, seed: 0 });
+            prepared.plan(&PlanOptions { partitions: parts, ..Default::default() });
         let res = session.classify_plan(&prepared, &plan, false)?;
         let peak = res.stats.max_partition_nodes.max(graph.num_nodes / parts.max(1));
         println!(

@@ -62,7 +62,7 @@ fn main() -> anyhow::Result<()> {
         prepared.fingerprint(),
         prepared.csr().num_entries()
     );
-    let plan = prepared.plan(&PlanOptions { partitions: 4, regrow: true, seed: 0 });
+    let plan = prepared.plan(&PlanOptions { partitions: 4, ..Default::default() });
     println!(
         "plan: {} partitions, {} boundary nodes re-grown, peak partition {} nodes",
         plan.num_partitions(),

@@ -171,12 +171,41 @@ pub fn backend_by_name(
     max_bucket: usize,
     threads: usize,
 ) -> Result<Box<dyn InferenceBackend>> {
+    backend_by_name_precise(
+        name,
+        bundle,
+        artifacts_dir,
+        max_bucket,
+        threads,
+        crate::gnn::Precision::F32,
+    )
+}
+
+/// [`backend_by_name`] with an inference precision. `Int8` quantizes the
+/// native backend's weights at load (per-output-channel symmetric, fused
+/// dequant — see [`crate::gnn::quant`]); the xla path has no quantized
+/// artifacts, so any non-f32 request for it is an explicit error rather
+/// than a silent fallback.
+pub fn backend_by_name_precise(
+    name: &str,
+    bundle: &Bundle,
+    artifacts_dir: &Path,
+    max_bucket: usize,
+    threads: usize,
+    precision: crate::gnn::Precision,
+) -> Result<Box<dyn InferenceBackend>> {
     match name {
         "native" => {
             let model = crate::gnn::SageModel::from_bundle(bundle)?;
-            Ok(Box::new(NativeBackend::with_threads(model, threads)))
+            Ok(Box::new(NativeBackend::with_precision(model, threads, precision)))
         }
-        "xla" | "pjrt" => build_xla(bundle, artifacts_dir, max_bucket),
+        "xla" | "pjrt" => {
+            anyhow::ensure!(
+                precision == crate::gnn::Precision::F32,
+                "--precision {precision} is only supported by the native backend"
+            );
+            build_xla(bundle, artifacts_dir, max_bucket)
+        }
         other => anyhow::bail!("unknown backend '{other}' (native|xla)"),
     }
 }
@@ -223,6 +252,33 @@ mod tests {
             backend_by_name("native", &b, Path::new("artifacts"), usize::MAX, 1).unwrap();
         assert_eq!(backend.name(), "native");
         assert_eq!(backend.num_classes(), 5);
+    }
+
+    #[test]
+    fn backend_by_name_precise_handles_int8() {
+        let b = bundle_1layer();
+        let backend = backend_by_name_precise(
+            "native",
+            &b,
+            Path::new("artifacts"),
+            usize::MAX,
+            1,
+            crate::gnn::Precision::Int8,
+        )
+        .unwrap();
+        assert_eq!(backend.name(), "native");
+        assert_eq!(backend.num_classes(), 5);
+        // the xla path has no quantized artifacts: explicit error
+        let err = backend_by_name_precise(
+            "xla",
+            &b,
+            Path::new("artifacts"),
+            usize::MAX,
+            1,
+            crate::gnn::Precision::Int8,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("native backend"), "{err:#}");
     }
 
     #[test]

@@ -22,7 +22,7 @@
 //! scratch); the only per-call allocation is the returned logits vector.
 
 use super::{InferenceBackend, PartitionInput, PartitionLogits};
-use crate::gnn::{ForwardScratch, SageModel};
+use crate::gnn::{ForwardScratch, Precision, QuantizedSage, SageModel};
 use crate::spmm::{GrootSpmm, SpmmEngine};
 use crate::util::pool::{parallel_map, split_threads};
 use anyhow::Result;
@@ -113,6 +113,45 @@ impl LanePool {
         }
     }
 
+    /// Acquire `count` lanes ATOMICALLY, each holding `inner_threads`
+    /// permits — the fused-batch path needs one lane per partition held
+    /// simultaneously, and acquiring them one `checkout` at a time can
+    /// deadlock when two concurrent batches each grab half the budget and
+    /// wait forever for the rest. Only valid on a growing pool (the
+    /// fixed single-engine pool never fans out). The caller guarantees
+    /// `count × inner_threads ≤ budget`.
+    fn checkout_many(&self, count: usize, inner_threads: usize) -> Vec<LaneGuard<'_>> {
+        debug_assert!(self.grow);
+        let want = inner_threads.clamp(1, self.budget);
+        let total = want * count;
+        debug_assert!(total <= self.budget);
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if g.available >= total {
+                g.available -= total;
+                let reuse = count.min(g.free.len());
+                let lanes: Vec<Lane> = g.free.drain(g.free.len() - reuse..).collect();
+                drop(g);
+                let mut guards = Vec::with_capacity(count);
+                for mut lane in lanes {
+                    lane.engine.set_threads(want);
+                    lane.permits = want;
+                    guards.push(LaneGuard { pool: self, lane: Some(lane) });
+                }
+                while guards.len() < count {
+                    let lane = Lane {
+                        engine: Box::new(GrootSpmm::new(want)),
+                        scratch: ForwardScratch::new(),
+                        permits: want,
+                    };
+                    guards.push(LaneGuard { pool: self, lane: Some(lane) });
+                }
+                return guards;
+            }
+            g = self.returned.wait(g).unwrap();
+        }
+    }
+
     fn put_back(&self, lane: Lane) {
         let mut g = self.inner.lock().unwrap();
         g.available += lane.permits;
@@ -135,6 +174,12 @@ impl LaneGuard<'_> {
     fn lane_mut(&mut self) -> &mut Lane {
         self.lane.as_mut().expect("lane present until drop")
     }
+
+    /// Shared view — lets the fused path collect `&dyn SpmmEngine`s from
+    /// several concurrently held guards.
+    fn lane_ref(&self) -> &Lane {
+        self.lane.as_ref().expect("lane present until drop")
+    }
 }
 
 impl Drop for LaneGuard<'_> {
@@ -147,11 +192,21 @@ impl Drop for LaneGuard<'_> {
 
 pub struct NativeBackend {
     model: SageModel,
+    /// int8 twin of `model` when the backend was built with
+    /// `Precision::Int8`; every forward then runs the quantized path.
+    quant: Option<QuantizedSage>,
     /// Total thread budget this backend may use at once, split between
     /// partition lanes and each lane's SpMM/matmul threads.
     budget: usize,
     lanes: LanePool,
     engine_name: &'static str,
+    /// Bucketed batched GEMM for `infer_batch` when one lane per
+    /// partition fits the budget (on by default; `set_fused(false)` is
+    /// the bench harness's A/B switch).
+    fused: bool,
+    /// Scratch arenas for fused batches, pooled so warm batches reuse the
+    /// stacked buffers (one arena per concurrently running fused batch).
+    fused_scratch: Mutex<Vec<ForwardScratch>>,
 }
 
 impl NativeBackend {
@@ -165,12 +220,27 @@ impl NativeBackend {
     /// are minted on demand; a single `infer` gets the whole budget as
     /// SpMM/matmul threads, `infer_batch` splits it across partitions.
     pub fn with_threads(model: SageModel, threads: usize) -> NativeBackend {
+        Self::with_precision(model, threads, Precision::F32)
+    }
+
+    /// [`Self::with_threads`] with an inference precision: `Int8`
+    /// quantizes the weights once here (per-output-channel symmetric; see
+    /// [`crate::gnn::quant`]) and every forward runs the fused-dequant
+    /// int8 GEMMs.
+    pub fn with_precision(model: SageModel, threads: usize, precision: Precision) -> NativeBackend {
         let budget = threads.max(1);
+        let quant = match precision {
+            Precision::F32 => None,
+            Precision::Int8 => Some(QuantizedSage::from_model(&model)),
+        };
         NativeBackend {
             model,
+            quant,
             budget,
             lanes: LanePool::new(budget, true, Vec::new()),
             engine_name: GrootSpmm::new(1).name(),
+            fused: true,
+            fused_scratch: Mutex::new(Vec::new()),
         }
     }
 
@@ -184,7 +254,15 @@ impl NativeBackend {
         let engine_name = engine.name();
         let budget = crate::util::pool::default_threads();
         let seed = vec![Lane { engine, scratch: ForwardScratch::new(), permits: 0 }];
-        NativeBackend { model, budget, lanes: LanePool::new(budget, false, seed), engine_name }
+        NativeBackend {
+            model,
+            quant: None,
+            budget,
+            lanes: LanePool::new(budget, false, seed),
+            engine_name,
+            fused: false,
+            fused_scratch: Mutex::new(Vec::new()),
+        }
     }
 
     pub fn model(&self) -> &SageModel {
@@ -195,23 +273,51 @@ impl NativeBackend {
         self.engine_name
     }
 
-    /// Forward one partition inside a checked-out lane.
+    /// The precision this backend serves at.
+    pub fn precision(&self) -> Precision {
+        if self.quant.is_some() {
+            Precision::Int8
+        } else {
+            Precision::F32
+        }
+    }
+
+    /// Enable/disable the bucketed batched GEMM in `infer_batch`. On by
+    /// default (for growing pools); the bench harness flips it off to
+    /// measure the per-partition baseline at the same thread budget.
+    pub fn set_fused(&mut self, on: bool) {
+        self.fused = on;
+    }
+
+    /// Forward one partition inside a checked-out lane, at the backend's
+    /// precision.
     fn infer_in_lane(
         &self,
         part: PartitionInput<'_>,
         lane: &mut Lane,
         threads: usize,
     ) -> PartitionLogits {
-        let logits = self
-            .model
-            .forward_with_threads(
-                part.csr,
-                part.features,
-                lane.engine.as_ref(),
-                &mut lane.scratch,
-                threads,
-            )
-            .to_vec();
+        let logits = match &self.quant {
+            Some(q) => q
+                .forward_with_threads(
+                    part.csr,
+                    part.features,
+                    lane.engine.as_ref(),
+                    &mut lane.scratch,
+                    threads,
+                )
+                .to_vec(),
+            None => self
+                .model
+                .forward_with_threads(
+                    part.csr,
+                    part.features,
+                    lane.engine.as_ref(),
+                    &mut lane.scratch,
+                    threads,
+                )
+                .to_vec(),
+        };
         PartitionLogits { logits, bucket_rows: part.csr.num_nodes() }
     }
 }
@@ -256,6 +362,37 @@ impl InferenceBackend for NativeBackend {
         } else {
             (1, self.budget)
         };
+        // Bucketed batched GEMM: when one lane per partition fits the
+        // budget, stack every partition's rows (the model fixes all layer
+        // dims, so same-model partitions are one shape bucket) and run
+        // ONE dense GEMM pair per layer at the full budget instead of P
+        // small matmuls. Byte-identical to the per-partition path (see
+        // `forward_batch_fused`). The int8 path keeps per-partition
+        // execution: its GEMM is epilogue-fused with dequant and has no
+        // stacked variant (yet) — correctness first.
+        if self.fused
+            && self.lanes.grow
+            && self.quant.is_none()
+            && parts.len() > 1
+            && outer == parts.len()
+        {
+            let guards = self.lanes.checkout_many(parts.len(), inner);
+            let engines: Vec<&dyn SpmmEngine> =
+                guards.iter().map(|g| g.lane_ref().engine.as_ref()).collect();
+            let inputs: Vec<(&crate::graph::Csr, &[f32])> =
+                parts.iter().map(|p| (p.csr, p.features)).collect();
+            let mut scratch = self.fused_scratch.lock().unwrap().pop().unwrap_or_default();
+            let logits =
+                self.model.forward_batch_fused(&inputs, &engines, &mut scratch, self.budget);
+            self.fused_scratch.lock().unwrap().push(scratch);
+            drop(engines);
+            drop(guards);
+            return Ok(logits
+                .into_iter()
+                .zip(parts)
+                .map(|(logits, p)| PartitionLogits { logits, bucket_rows: p.csr.num_nodes() })
+                .collect());
+        }
         if outer <= 1 || parts.len() <= 1 {
             let mut guard = self.lanes.checkout(self.budget);
             return Ok(parts
@@ -352,6 +489,102 @@ mod tests {
                     assert_eq!(g.bucket_rows, w.bucket_rows);
                 }
             }
+        }
+    }
+
+    fn batch_parts() -> (Vec<Csr>, Vec<Vec<f32>>) {
+        let graphs: Vec<Csr> = vec![
+            Csr::symmetric_from_edges(4, &[(0, 1), (1, 2), (2, 3)]),
+            Csr::symmetric_from_edges(3, &[(0, 1), (1, 2), (0, 2)]),
+            Csr::symmetric_from_edges(6, &[(0, 1), (2, 3), (4, 5), (1, 4)]),
+            Csr::symmetric_from_edges(5, &[(0, 4), (1, 3)]),
+        ];
+        let feats: Vec<Vec<f32>> = graphs
+            .iter()
+            .enumerate()
+            .map(|(gi, g)| {
+                (0..g.num_nodes() * 2)
+                    .map(|i| ((i + gi * 7) as f32 * 0.37).sin())
+                    .collect()
+            })
+            .collect();
+        (graphs, feats)
+    }
+
+    /// The bucketed batched GEMM path (budget ≥ partitions, fused on —
+    /// the default) must be byte-identical to the per-partition path at
+    /// the same budget AND to sequential budget-1 execution.
+    #[test]
+    fn fused_batch_is_byte_identical_to_per_partition() {
+        let (graphs, feats) = batch_parts();
+        let parts: Vec<PartitionInput<'_>> = graphs
+            .iter()
+            .zip(&feats)
+            .map(|(csr, features)| PartitionInput { csr, features, feature_dim: 2 })
+            .collect();
+        let sequential = NativeBackend::with_threads(model(), 1);
+        let want = sequential.infer_batch(&parts).unwrap();
+        for budget in [4usize, 8] {
+            let mut fused = NativeBackend::with_threads(model(), budget);
+            let mut legacy = NativeBackend::with_threads(model(), budget);
+            legacy.set_fused(false);
+            // fused engages: budget ≥ 4 partitions ⇒ one lane each
+            for round in 0..2 {
+                let got_f = fused.infer_batch(&parts).unwrap();
+                let got_l = legacy.infer_batch(&parts).unwrap();
+                for (i, ((f, l), w)) in got_f.iter().zip(&got_l).zip(&want).enumerate() {
+                    assert_eq!(
+                        f.logits, w.logits,
+                        "fused budget {budget} round {round} partition {i} diverged"
+                    );
+                    assert_eq!(l.logits, w.logits, "legacy path diverged");
+                    assert_eq!(f.bucket_rows, w.bucket_rows);
+                }
+            }
+            // toggling back restores the fused path
+            fused.set_fused(true);
+            let again = fused.infer_batch(&parts).unwrap();
+            assert_eq!(again.len(), want.len());
+        }
+    }
+
+    /// int8 serving: deterministic across budgets/rounds (the argmax
+    /// parity vs f32 over the generator zoo lives in `kernel_parity`).
+    #[test]
+    fn int8_batch_is_byte_identical_across_budgets() {
+        use crate::gnn::Precision;
+        let (graphs, feats) = batch_parts();
+        let parts: Vec<PartitionInput<'_>> = graphs
+            .iter()
+            .zip(&feats)
+            .map(|(csr, features)| PartitionInput { csr, features, feature_dim: 2 })
+            .collect();
+        let sequential = NativeBackend::with_precision(model(), 1, Precision::Int8);
+        assert_eq!(sequential.precision(), Precision::Int8);
+        let want = sequential.infer_batch(&parts).unwrap();
+        for budget in [2usize, 4, 8] {
+            let concurrent = NativeBackend::with_precision(model(), budget, Precision::Int8);
+            for round in 0..2 {
+                let got = concurrent.infer_batch(&parts).unwrap();
+                for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                    assert_eq!(
+                        g.logits, w.logits,
+                        "int8 budget {budget} round {round} partition {i} diverged"
+                    );
+                }
+            }
+        }
+        // and the f32 backend differs from int8 only within quant error
+        let f32b = NativeBackend::with_threads(model(), 1);
+        let base = f32b.infer_batch(&parts).unwrap();
+        for (q, f) in want.iter().zip(&base) {
+            let err = q
+                .logits
+                .iter()
+                .zip(&f.logits)
+                .map(|(&a, &b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            assert!(err < 0.1, "int8 drifted {err} from f32");
         }
     }
 

@@ -53,6 +53,15 @@ pub struct SessionConfig {
     /// [`Session`]. Deployments splitting a machine budget typically set
     /// `workers × threads ≈ cores`.
     pub workers: usize,
+    /// Inference precision for the native backend (`--precision`):
+    /// f32 (byte-exact reference) or int8 weights with fused dequant.
+    pub precision: crate::gnn::Precision,
+    /// HD/LD degree cutoff used for the plan-stats row-split report
+    /// (`--hd-threshold`; default 512 or the `GROOT_HD_THRESHOLD` env).
+    /// The GROOT SpMM engines minted inside backend lane pools read the
+    /// same default, so set the env — not just this field — to move the
+    /// engine's split; see [`crate::spmm::default_hd_threshold`].
+    pub hd_threshold: usize,
 }
 
 impl Default for SessionConfig {
@@ -63,6 +72,8 @@ impl Default for SessionConfig {
             seed: 0,
             threads: crate::util::pool::default_threads(),
             workers: 1,
+            precision: crate::gnn::Precision::F32,
+            hd_threshold: crate::spmm::default_hd_threshold(),
         }
     }
 }
@@ -126,7 +137,7 @@ impl Session {
     /// engine sized to `config.threads`) — the path every environment can
     /// run, artifacts or not.
     pub fn native(model: SageModel, config: SessionConfig) -> Session {
-        let backend = NativeBackend::with_threads(model, config.threads);
+        let backend = NativeBackend::with_precision(model, config.threads, config.precision);
         Session::new(Box::new(backend), config)
     }
 

@@ -60,18 +60,33 @@ pub struct PlanOptions {
     pub regrow: bool,
     /// Partitioner seed.
     pub seed: u64,
+    /// HD/LD degree threshold: rows with degree ≥ this take the GROOT
+    /// engine's HD path, and [`PlanStats`] reports the resulting row
+    /// split (so the bench harness can correlate threshold with
+    /// throughput). Default 512 or the `GROOT_HD_THRESHOLD` env.
+    pub hd_threshold: usize,
 }
 
 impl Default for PlanOptions {
     fn default() -> Self {
-        PlanOptions { partitions: 1, regrow: true, seed: 0 }
+        PlanOptions {
+            partitions: 1,
+            regrow: true,
+            seed: 0,
+            hd_threshold: crate::spmm::default_hd_threshold(),
+        }
     }
 }
 
 impl PlanOptions {
     /// The plan-relevant subset of a session config.
     pub fn from_config(cfg: &SessionConfig) -> PlanOptions {
-        PlanOptions { partitions: cfg.num_partitions, regrow: cfg.regrow, seed: cfg.seed }
+        PlanOptions {
+            partitions: cfg.num_partitions,
+            regrow: cfg.regrow,
+            seed: cfg.seed,
+            hd_threshold: cfg.hd_threshold,
+        }
     }
 }
 
@@ -280,11 +295,25 @@ impl<'g> PreparedGraph<'g> {
         let parts = regrow_partitions(graph_csr, &partitioning, opts.regrow);
         let regrowth_time = t1.elapsed();
         let regrowth = crate::regrowth::stats(&parts);
+        // HD/LD row split at the configured threshold — one O(n) scan of
+        // the degree array, reported by `plan_stats` too so the memory
+        // harnesses and bench sweeps see it without building partitions.
+        let (mut hd_rows, mut ld_rows) = (0usize, 0usize);
+        for u in 0..graph_csr.num_nodes() {
+            let d = graph_csr.degree(u);
+            if d >= opts.hd_threshold.max(1) {
+                hd_rows += 1;
+            } else if d > 0 {
+                ld_rows += 1;
+            }
+        }
         let stats = PlanStats {
             partition_time,
             regrowth_time,
             gather_time: Duration::ZERO,
             regrowth,
+            hd_rows,
+            ld_rows,
         };
         (parts, stats)
     }
@@ -405,6 +434,11 @@ pub struct PlanStats {
     /// Per-partition local-CSR build + feature gather.
     pub gather_time: Duration,
     pub regrowth: RegrowthStats,
+    /// Rows with degree ≥ `PlanOptions::hd_threshold` (the GROOT HD
+    /// path) / positive-degree rows below it. Isolated nodes count as
+    /// neither, so `hd_rows + ld_rows ≤ n`.
+    pub hd_rows: usize,
+    pub ld_rows: usize,
 }
 
 /// Stage-2 output: a reusable, backend-independent execution plan.
@@ -1122,7 +1156,7 @@ mod tests {
     fn plan_partitions_cover_all_nodes_exactly_once() {
         let g = graph();
         let p = PreparedGraph::new(&g);
-        let plan = p.plan(&PlanOptions { partitions: 4, regrow: true, seed: 0 });
+        let plan = p.plan(&PlanOptions { partitions: 4, ..PlanOptions::default() });
         assert_eq!(plan.num_partitions(), 4);
         let mut seen = vec![0usize; g.num_nodes];
         for part in &plan.parts {
@@ -1139,7 +1173,7 @@ mod tests {
     fn stream_plan_is_lean_and_covers_all_nodes() {
         let g = graph();
         let p = PreparedGraph::new(&g);
-        let opts = PlanOptions { partitions: 4, regrow: true, seed: 0 };
+        let opts = PlanOptions { partitions: 4, ..PlanOptions::default() };
         let sp = p.plan_stream(&opts);
         assert_eq!(sp.num_partitions(), 4);
         let total: usize = sp.core_counts.iter().sum();
@@ -1160,9 +1194,9 @@ mod tests {
         let g = graph();
         let p = PreparedGraph::new(&g);
         let mut cache = PlanCache::new(2);
-        let o1 = PlanOptions { partitions: 1, regrow: true, seed: 0 };
-        let o2 = PlanOptions { partitions: 2, regrow: true, seed: 0 };
-        let o3 = PlanOptions { partitions: 3, regrow: true, seed: 0 };
+        let o1 = PlanOptions { partitions: 1, ..PlanOptions::default() };
+        let o2 = PlanOptions { partitions: 2, ..PlanOptions::default() };
+        let o3 = PlanOptions { partitions: 3, ..PlanOptions::default() };
 
         let (_, hit) = cache.get_or_build(&p, &o1);
         assert!(!hit);
@@ -1183,7 +1217,7 @@ mod tests {
         let g = graph();
         let cache = ShardedPlanCache::new(32);
         let options: Vec<PlanOptions> = (1..=3usize)
-            .map(|partitions| PlanOptions { partitions, regrow: true, seed: 0 })
+            .map(|partitions| PlanOptions { partitions, ..PlanOptions::default() })
             .collect();
         std::thread::scope(|s| {
             for _ in 0..8 {
@@ -1208,7 +1242,7 @@ mod tests {
         let p = PreparedGraph::new(&g);
         let sharded = ShardedPlanCache::with_shards(4, 8);
         let mut plain = PlanCache::new(8);
-        let opts = PlanOptions { partitions: 4, regrow: true, seed: 3 };
+        let opts = PlanOptions { partitions: 4, seed: 3, ..PlanOptions::default() };
         let (a, hit_a) = sharded.get_or_build(&p, &opts);
         let (b, hit_b) = plain.get_or_build(&p, &opts);
         assert!(!hit_a && !hit_b);
@@ -1227,7 +1261,7 @@ mod tests {
         let g = graph();
         let p = PreparedGraph::new(&g);
         let mut cache = PlanCache::default();
-        let o = PlanOptions { partitions: 2, regrow: true, seed: 0 };
+        let o = PlanOptions { partitions: 2, ..PlanOptions::default() };
         cache.get_or_build(&p, &o);
         assert!(cache
             .get(p.fingerprint(), &PlanOptions { seed: 1, ..o.clone() })

@@ -67,6 +67,7 @@ impl VerifyOptions {
             partitions: self.partitions.unwrap_or(base.num_partitions),
             regrow: self.regrow.unwrap_or(base.regrow),
             seed: self.seed.unwrap_or(base.seed),
+            hd_threshold: base.hd_threshold,
         }
     }
 }

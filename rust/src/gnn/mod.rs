@@ -13,6 +13,9 @@ use crate::spmm::SpmmEngine;
 use crate::util::tensor::Bundle;
 use anyhow::{Context, Result};
 
+pub mod quant;
+pub use quant::{Precision, QuantizedSage};
+
 /// One GraphSAGE layer's parameters (row-major [din × dout] weights).
 #[derive(Clone, Debug)]
 pub struct SageLayer {
@@ -173,33 +176,20 @@ impl SageModel {
         assert_eq!(features.len(), n * dim);
         scratch.reserve_len(n * self.max_width());
         scratch.ping[..n * dim].copy_from_slice(features);
+        let nlayers = self.layers.len();
         for (li, layer) in self.layers.iter().enumerate() {
             let h = &scratch.ping[..n * dim];
             engine.spmm_mean_into(csr, h, dim, &mut scratch.agg[..n * dim]);
-            let out = &mut scratch.pong[..n * layer.dout];
-            out.fill(0.0);
-            matmul_add_with(threads, h, &layer.w_self, out, n, dim, layer.dout);
-            matmul_add_with(
+            dense_sage_layer(
                 threads,
+                layer,
+                h,
                 &scratch.agg[..n * dim],
-                &layer.w_neigh,
-                out,
+                &mut scratch.pong[..n * layer.dout],
                 n,
                 dim,
-                layer.dout,
+                li + 1 == nlayers,
             );
-            for row in out.chunks_exact_mut(layer.dout) {
-                for (d, v) in row.iter_mut().enumerate() {
-                    *v += layer.bias[d];
-                }
-            }
-            if li + 1 < self.layers.len() {
-                for v in out.iter_mut() {
-                    if *v < 0.0 {
-                        *v = 0.0;
-                    }
-                }
-            }
             // ping-pong: this layer's output becomes the next layer's input
             std::mem::swap(&mut scratch.ping, &mut scratch.pong);
             dim = layer.dout;
@@ -207,10 +197,119 @@ impl SageModel {
         &scratch.ping[..n * dim]
     }
 
+    /// Bucketed batched forward over several partitions that share this
+    /// model (and therefore every layer dimension): activations are
+    /// stacked row-wise into ONE arena, the per-partition SpMMs run
+    /// concurrently (one engine/lane per partition) into disjoint slices
+    /// of the stacked aggregation buffer, and each layer's dense work is a
+    /// single `[Σn × dim]` GEMM pair at the full `threads` budget instead
+    /// of P independent small matmuls.
+    ///
+    /// Byte-identical to running [`Self::forward_with_threads`] per
+    /// partition: every output row is still accumulated by exactly one
+    /// thread in the same order (rows are independent in the dense
+    /// kernels, and each partition's SpMM sees exactly its own contiguous
+    /// activation slice).
+    pub fn forward_batch_fused(
+        &self,
+        parts: &[(&Csr, &[f32])],
+        engines: &[&dyn SpmmEngine],
+        scratch: &mut ForwardScratch,
+        threads: usize,
+    ) -> Vec<Vec<f32>> {
+        use crate::util::pool::{parallel_map, SendPtr};
+        assert_eq!(parts.len(), engines.len());
+        let rows: Vec<usize> = parts.iter().map(|(c, _)| c.num_nodes()).collect();
+        let row_off: Vec<usize> = rows
+            .iter()
+            .scan(0usize, |acc, &n| {
+                let o = *acc;
+                *acc += n;
+                Some(o)
+            })
+            .collect();
+        let total: usize = rows.iter().sum();
+        let mut dim = self.input_dim();
+        scratch.reserve_len(total * self.max_width());
+        for (i, (csr, feats)) in parts.iter().enumerate() {
+            assert_eq!(feats.len(), csr.num_nodes() * dim, "partition {i}: feature len");
+            scratch.ping[row_off[i] * dim..(row_off[i] + rows[i]) * dim].copy_from_slice(feats);
+        }
+        let nlayers = self.layers.len();
+        for (li, layer) in self.layers.iter().enumerate() {
+            let ForwardScratch { ping, pong, agg } = &mut *scratch;
+            let h = &ping[..total * dim];
+            // One lane per partition; slices of `agg` are disjoint by
+            // construction of `row_off`.
+            let aptr = SendPtr(agg.as_mut_ptr());
+            parallel_map(parts.len(), parts.len(), |i| {
+                let aptr = &aptr;
+                // SAFETY: partition i's stacked rows are disjoint from
+                // every other partition's.
+                let arow = unsafe {
+                    std::slice::from_raw_parts_mut(aptr.0.add(row_off[i] * dim), rows[i] * dim)
+                };
+                engines[i].spmm_mean_into(
+                    parts[i].0,
+                    &h[row_off[i] * dim..(row_off[i] + rows[i]) * dim],
+                    dim,
+                    arow,
+                );
+            });
+            dense_sage_layer(
+                threads,
+                layer,
+                h,
+                &agg[..total * dim],
+                &mut pong[..total * layer.dout],
+                total,
+                dim,
+                li + 1 == nlayers,
+            );
+            std::mem::swap(&mut scratch.ping, &mut scratch.pong);
+            dim = layer.dout;
+        }
+        (0..parts.len())
+            .map(|i| scratch.ping[row_off[i] * dim..(row_off[i] + rows[i]) * dim].to_vec())
+            .collect()
+    }
+
     /// Argmax class per node from a forward pass.
     pub fn predict(&self, csr: &Csr, features: &[f32], engine: &dyn SpmmEngine) -> Vec<u8> {
         let logits = self.forward(csr, features, engine);
         argmax_rows(&logits, self.num_classes())
+    }
+}
+
+/// The dense half of one SAGE layer over pre-aggregated inputs:
+/// `out = act(h·W_self + agg·W_neigh + b)` with ReLU unless `last`.
+/// Shared verbatim by the per-partition forward and the fused batched
+/// forward so the two paths cannot drift numerically.
+#[allow(clippy::too_many_arguments)]
+fn dense_sage_layer(
+    threads: usize,
+    layer: &SageLayer,
+    h: &[f32],
+    agg: &[f32],
+    out: &mut [f32],
+    n: usize,
+    dim: usize,
+    last: bool,
+) {
+    out.fill(0.0);
+    matmul_add_with(threads, h, &layer.w_self, out, n, dim, layer.dout);
+    matmul_add_with(threads, agg, &layer.w_neigh, out, n, dim, layer.dout);
+    for row in out.chunks_exact_mut(layer.dout) {
+        for (d, v) in row.iter_mut().enumerate() {
+            *v += layer.bias[d];
+        }
+    }
+    if !last {
+        for v in out.iter_mut() {
+            if *v < 0.0 {
+                *v = 0.0;
+            }
+        }
     }
 }
 
@@ -242,15 +341,11 @@ pub fn matmul_add_with(
         for u in s..e {
             // SAFETY: disjoint row ranges per thread.
             let orow = unsafe { std::slice::from_raw_parts_mut(ptr.0.add(u * m), m) };
-            let arow = &a[u * k..(u + 1) * k];
-            for (kk, &av) in arow.iter().enumerate() {
-                if av != 0.0 {
-                    let brow = &b[kk * m..(kk + 1) * m];
-                    for d in 0..m {
-                        orow[d] += av * brow[d];
-                    }
-                }
-            }
+            // Register-blocked micro-kernel (AVX2 when available, hoisted
+            // slice-iterating scalar otherwise); zero activations are
+            // skipped either way, and the per-element accumulation order
+            // over k is fixed — bytes never depend on the dispatch choice.
+            crate::util::simd::matmul_row_add(&a[u * k..(u + 1) * k], b, m, orow);
         }
     });
 }
@@ -466,6 +561,66 @@ mod tests {
             let got = model.forward_with_threads(&csr, &x, &engine, &mut s, threads);
             assert_eq!(got, &want[..], "threads={threads} changed the bytes");
         }
+    }
+
+    #[test]
+    fn forward_batch_fused_matches_per_partition() {
+        // Three ragged partitions through the stacked fused path must be
+        // byte-identical to three independent forward passes.
+        let model = SageModel {
+            layers: vec![
+                SageLayer {
+                    din: 2,
+                    dout: 3,
+                    w_self: vec![0.5, -0.25, 1.0, 0.75, 0.1, -0.6],
+                    w_neigh: vec![-0.3, 0.2, 0.4, 0.9, -0.8, 0.05],
+                    bias: vec![0.1, -0.2, 0.3],
+                },
+                SageLayer {
+                    din: 3,
+                    dout: 2,
+                    w_self: vec![1.0, 0.0, 0.0, 1.0, 0.5, -0.5],
+                    w_neigh: vec![0.2, 0.2, -0.1, 0.3, 0.0, 0.7],
+                    bias: vec![0.0, 0.25],
+                },
+            ],
+        };
+        let sizes = [5usize, 1, 9];
+        let csrs: Vec<Csr> = sizes
+            .iter()
+            .map(|&n| {
+                let edges: Vec<(u32, u32)> =
+                    (0..n.saturating_sub(1) as u32).map(|v| (v, v + 1)).collect();
+                Csr::symmetric_from_edges(n, &edges)
+            })
+            .collect();
+        let feats: Vec<Vec<f32>> = sizes
+            .iter()
+            .map(|&n| (0..n * 2).map(|i| (i as f32 * 0.37).sin()).collect())
+            .collect();
+        let engines: Vec<CsrRowParallel> =
+            (0..sizes.len()).map(|_| CsrRowParallel::new(1)).collect();
+
+        let want: Vec<Vec<f32>> = csrs
+            .iter()
+            .zip(&feats)
+            .zip(&engines)
+            .map(|((c, f), e)| {
+                let mut s = ForwardScratch::new();
+                model.forward_with_threads(c, f, e, &mut s, 2).to_vec()
+            })
+            .collect();
+
+        let parts: Vec<(&Csr, &[f32])> =
+            csrs.iter().zip(&feats).map(|(c, f)| (c, f.as_slice())).collect();
+        let engine_refs: Vec<&dyn crate::spmm::SpmmEngine> =
+            engines.iter().map(|e| e as &dyn crate::spmm::SpmmEngine).collect();
+        let mut scratch = ForwardScratch::new();
+        let got = model.forward_batch_fused(&parts, &engine_refs, &mut scratch, 2);
+        assert_eq!(got, want, "fused batched forward diverges");
+        // warm second pass reuses the arena and stays identical
+        let got2 = model.forward_batch_fused(&parts, &engine_refs, &mut scratch, 3);
+        assert_eq!(got2, want, "warm fused pass diverges");
     }
 
     #[test]

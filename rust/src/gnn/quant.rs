@@ -1,0 +1,326 @@
+//! int8-weight / f32-activation quantized GraphSAGE inference.
+//!
+//! The task-aligned-GNN analysis (Kim, PAPERS.md) observes that EDA
+//! node-classification heads have wide decision margins, so weight-only
+//! low-precision inference should cost ~nothing in accuracy. The scheme
+//! here is per-output-channel symmetric int8:
+//!
+//! * at bundle load, each weight column j gets a scale
+//!   `s[j] = max_k |W[k][j]| / 127` (1.0 for an all-zero column) and the
+//!   stored weights become `q = round(W / s)` clamped to `[-127, 127]`;
+//! * the GEMM accumulates `Σ_k a[k] · (q[k][j] as f32)` in f32 — i8→f32
+//!   conversion is exact and the sum of ≤64 terms of magnitude ≤127·|a|
+//!   stays well inside f32's exact-integer-scaled range;
+//! * the dequant multiply `acc[j] · s[j]` is fused into the GEMM epilogue
+//!   together with the `out +=` accumulate — activations never exist in
+//!   int8, so aggregation (SpMM) is byte-identical to the f32 path.
+//!
+//! Determinism contract: the int8 path is *not* byte-identical to f32
+//! inference (weights moved), but it IS byte-deterministic — thread count
+//! and SIMD dispatch never change its output, by the same fixed-order
+//! argument as the f32 kernels. The serving-level guarantee is argmax
+//! parity: zero prediction flips across the generator zoo (pinned by the
+//! `kernel_parity` suite).
+
+use super::{ForwardScratch, SageModel};
+use crate::graph::Csr;
+use crate::spmm::SpmmEngine;
+use crate::util::pool::{parallel_for_static, SendPtr};
+use crate::util::simd;
+
+/// Inference precision knob (`SessionConfig::precision`, CLI
+/// `--precision {f32,int8}`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Precision {
+    #[default]
+    F32,
+    Int8,
+}
+
+impl std::str::FromStr for Precision {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> anyhow::Result<Precision> {
+        match s {
+            "f32" => Ok(Precision::F32),
+            "int8" => Ok(Precision::Int8),
+            other => anyhow::bail!("unknown precision '{other}' (expected f32 or int8)"),
+        }
+    }
+}
+
+impl std::fmt::Display for Precision {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Precision::F32 => "f32",
+            Precision::Int8 => "int8",
+        })
+    }
+}
+
+/// One layer's quantized parameters. Weights row-major `[din × dout]`
+/// like [`super::SageLayer`]; scales and bias per output channel.
+#[derive(Clone, Debug)]
+pub struct QuantLayer {
+    pub din: usize,
+    pub dout: usize,
+    pub w_self_q: Vec<i8>,
+    pub w_neigh_q: Vec<i8>,
+    pub scale_self: Vec<f32>,
+    pub scale_neigh: Vec<f32>,
+    pub bias: Vec<f32>,
+}
+
+/// Whole quantized model, derived from a loaded [`SageModel`].
+#[derive(Clone, Debug)]
+pub struct QuantizedSage {
+    pub layers: Vec<QuantLayer>,
+}
+
+/// Per-output-channel symmetric quantization of one row-major `[k × m]`
+/// weight matrix: returns `(q, scales)` with `scales.len() == m`.
+fn quantize_per_channel(w: &[f32], k: usize, m: usize) -> (Vec<i8>, Vec<f32>) {
+    assert_eq!(w.len(), k * m);
+    let mut scales = vec![0.0f32; m];
+    for row in w.chunks_exact(m) {
+        for (s, &v) in scales.iter_mut().zip(row) {
+            *s = s.max(v.abs());
+        }
+    }
+    for s in scales.iter_mut() {
+        // all-zero column: any scale works, 1.0 keeps dequant finite
+        *s = if *s > 0.0 { *s / 127.0 } else { 1.0 };
+    }
+    let q = w
+        .chunks_exact(m)
+        .flat_map(|row| {
+            row.iter()
+                .zip(&scales)
+                .map(|(&v, &s)| (v / s).round().clamp(-127.0, 127.0) as i8)
+        })
+        .collect();
+    (q, scales)
+}
+
+impl QuantizedSage {
+    /// Quantize a loaded f32 model (done once, at backend construction).
+    pub fn from_model(model: &SageModel) -> QuantizedSage {
+        let layers = model
+            .layers
+            .iter()
+            .map(|l| {
+                let (w_self_q, scale_self) = quantize_per_channel(&l.w_self, l.din, l.dout);
+                let (w_neigh_q, scale_neigh) = quantize_per_channel(&l.w_neigh, l.din, l.dout);
+                QuantLayer {
+                    din: l.din,
+                    dout: l.dout,
+                    w_self_q,
+                    w_neigh_q,
+                    scale_self,
+                    scale_neigh,
+                    bias: l.bias.clone(),
+                }
+            })
+            .collect();
+        QuantizedSage { layers }
+    }
+
+    pub fn input_dim(&self) -> usize {
+        self.layers[0].din
+    }
+
+    pub fn num_classes(&self) -> usize {
+        self.layers.last().unwrap().dout
+    }
+
+    pub fn max_width(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| l.dout)
+            .max()
+            .unwrap_or(0)
+            .max(self.input_dim())
+    }
+
+    /// Quantized forward pass — the shape-for-shape twin of
+    /// [`SageModel::forward_with_threads`] with the dense matmuls swapped
+    /// for [`matmul_add_q`] (int8 weights, fused dequant epilogue).
+    /// Aggregation runs the same f32 SpMM engines.
+    pub fn forward_with_threads<'s>(
+        &self,
+        csr: &Csr,
+        features: &[f32],
+        engine: &dyn SpmmEngine,
+        scratch: &'s mut ForwardScratch,
+        threads: usize,
+    ) -> &'s [f32] {
+        let n = csr.num_nodes();
+        let mut dim = self.input_dim();
+        assert_eq!(features.len(), n * dim);
+        scratch.reserve_len(n * self.max_width());
+        scratch.ping[..n * dim].copy_from_slice(features);
+        let nlayers = self.layers.len();
+        for (li, layer) in self.layers.iter().enumerate() {
+            let h = &scratch.ping[..n * dim];
+            engine.spmm_mean_into(csr, h, dim, &mut scratch.agg[..n * dim]);
+            let out = &mut scratch.pong[..n * layer.dout];
+            out.fill(0.0);
+            matmul_add_q(threads, h, &layer.w_self_q, &layer.scale_self, out, n, dim, layer.dout);
+            matmul_add_q(
+                threads,
+                &scratch.agg[..n * dim],
+                &layer.w_neigh_q,
+                &layer.scale_neigh,
+                out,
+                n,
+                dim,
+                layer.dout,
+            );
+            for row in out.chunks_exact_mut(layer.dout) {
+                for (d, v) in row.iter_mut().enumerate() {
+                    *v += layer.bias[d];
+                }
+            }
+            if li + 1 < nlayers {
+                for v in out.iter_mut() {
+                    if *v < 0.0 {
+                        *v = 0.0;
+                    }
+                }
+            }
+            std::mem::swap(&mut scratch.ping, &mut scratch.pong);
+            dim = layer.dout;
+        }
+        &scratch.ping[..n * dim]
+    }
+}
+
+/// `out += dequant(a[n×k] · q[k×m])`: int8-weight GEMM with the
+/// per-channel dequant (`· scales[j]`) fused into the accumulate
+/// epilogue. Row-parallel like [`super::matmul_add_with`]; each thread
+/// reuses one `m`-float accumulator across its rows, so the steady state
+/// allocates one small buffer per thread per call.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_add_q(
+    threads: usize,
+    a: &[f32],
+    q: &[i8],
+    scales: &[f32],
+    out: &mut [f32],
+    n: usize,
+    k: usize,
+    m: usize,
+) {
+    assert_eq!(a.len(), n * k);
+    assert_eq!(q.len(), k * m);
+    assert_eq!(scales.len(), m);
+    assert_eq!(out.len(), n * m);
+    let ptr = SendPtr(out.as_mut_ptr());
+    parallel_for_static(threads, n, |_, s, e| {
+        let ptr = &ptr;
+        let mut acc = vec![0.0f32; m];
+        for u in s..e {
+            acc.fill(0.0);
+            simd::matmul_row_add_q(&a[u * k..(u + 1) * k], q, m, &mut acc);
+            // SAFETY: disjoint row ranges per thread.
+            let orow = unsafe { std::slice::from_raw_parts_mut(ptr.0.add(u * m), m) };
+            for ((o, &v), &sc) in orow.iter_mut().zip(&acc).zip(scales) {
+                *o += v * sc;
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spmm::CsrRowParallel;
+
+    fn wave_model() -> SageModel {
+        use super::super::SageLayer;
+        let wave = |n: usize, scale: f32| -> Vec<f32> {
+            (0..n).map(|i| ((i as f32 * 0.7).sin()) * scale).collect()
+        };
+        SageModel {
+            layers: vec![
+                SageLayer {
+                    din: 4,
+                    dout: 16,
+                    w_self: wave(64, 0.5),
+                    w_neigh: wave(64, 0.3),
+                    bias: wave(16, 0.1),
+                },
+                SageLayer {
+                    din: 16,
+                    dout: 5,
+                    w_self: wave(80, 0.4),
+                    w_neigh: wave(80, 0.2),
+                    bias: wave(5, 0.05),
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn quantize_error_bounded_by_half_scale() {
+        let m = wave_model();
+        for l in &m.layers {
+            let (q, s) = quantize_per_channel(&l.w_self, l.din, l.dout);
+            for (kk, row) in l.w_self.chunks_exact(l.dout).enumerate() {
+                for (j, &v) in row.iter().enumerate() {
+                    let deq = q[kk * l.dout + j] as f32 * s[j];
+                    assert!(
+                        (v - deq).abs() <= s[j] * 0.5 + 1e-7,
+                        "layer col {j}: {v} vs {deq} (scale {})",
+                        s[j]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zero_column_gets_unit_scale_and_zero_codes() {
+        let w = vec![0.0f32, 1.0, 0.0, -2.0]; // [2×2], col 0 all zero
+        let (q, s) = quantize_per_channel(&w, 2, 2);
+        assert_eq!(s[0], 1.0);
+        assert_eq!(q[0], 0);
+        assert_eq!(q[2], 0);
+        assert_eq!(q[3], -127);
+    }
+
+    #[test]
+    fn int8_forward_tracks_f32_and_is_thread_invariant() {
+        let model = wave_model();
+        let qmodel = QuantizedSage::from_model(&model);
+        let edges: Vec<(u32, u32)> = (0..63u32).map(|v| (v, v + 1)).collect();
+        let csr = Csr::symmetric_from_edges(64, &edges);
+        let x: Vec<f32> = (0..64 * 4).map(|i| (i as f32 * 0.13).sin()).collect();
+        let engine = CsrRowParallel::new(1);
+        let mut s_f = ForwardScratch::new();
+        let f = model
+            .forward_with_threads(&csr, &x, &engine, &mut s_f, 1)
+            .to_vec();
+        let mut s_q = ForwardScratch::new();
+        let q = qmodel
+            .forward_with_threads(&csr, &x, &engine, &mut s_q, 1)
+            .to_vec();
+        let err = f
+            .iter()
+            .zip(&q)
+            .map(|(&a, &b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(err < 0.05, "quantization error too large: {err}");
+        // argmax parity on this model/graph (the zoo matrix runs in the
+        // kernel_parity integration suite)
+        assert_eq!(
+            super::super::argmax_rows(&f, 5),
+            super::super::argmax_rows(&q, 5)
+        );
+        for threads in [2usize, 3, 8] {
+            let mut s = ForwardScratch::new();
+            let got = qmodel.forward_with_threads(&csr, &x, &engine, &mut s, threads);
+            assert_eq!(got, &q[..], "threads={threads} changed int8 bytes");
+        }
+    }
+}

@@ -63,7 +63,7 @@ pub fn fig6(weights: &str, kind: DatasetKind, batch: usize, quick: bool) -> Resu
             let mut acc = [0.0f64; 2];
             for (i, regrow) in [false, true].into_iter().enumerate() {
                 let plan =
-                    prepared.plan(&PlanOptions { partitions: parts, regrow, seed: 0 });
+                    prepared.plan(&PlanOptions { partitions: parts, regrow, ..Default::default() });
                 acc[i] = session.classify_plan(&prepared, &plan, false)?.accuracy;
             }
             t.row(vec![

@@ -70,7 +70,7 @@ pub fn bench_pipeline(weights: &str, quick: bool, out_path: &str) -> Result<()> 
     let mut rows = Vec::new();
     for (bits, parts) in cases {
         let graph = datasets::build(DatasetKind::Csa, bits)?;
-        let opts = PlanOptions { partitions: parts, regrow: true, seed: 0 };
+        let opts = PlanOptions { partitions: parts, ..Default::default() };
 
         // cold: the full request path with nothing reusable
         let cold = bench_for(budget, || {
@@ -466,6 +466,246 @@ fn render_train_json(rows: &[TrainBenchRow]) -> String {
     s
 }
 
+/// One SpMM engine's SIMD-vs-scalar measurement, serialized into
+/// BENCH_kernels.json.
+struct KernelRow {
+    engine: &'static str,
+    scalar_median_s: f64,
+    simd_median_s: f64,
+    speedup: f64,
+}
+
+/// A paired A/B timing (scalar-vs-SIMD matmul, f32-vs-int8 forward,
+/// unfused-vs-fused batch) for the kernels report.
+struct PairRow {
+    name: &'static str,
+    base_median_s: f64,
+    fast_median_s: f64,
+    speedup: f64,
+}
+
+/// `groot harness bench --kernels` — the kernel microbench:
+///
+/// * per-SpMM-engine forward aggregation (dim 64) under
+///   `simd::force_scalar(true)` vs the dispatched SIMD path — the two
+///   produce byte-identical output (see `rust/tests/kernel_parity.rs`),
+///   so the ratio is pure kernel speedup;
+/// * `matmul_add` scalar vs SIMD on the dense-layer GEMM shape;
+/// * full native forward at f32 vs int8 weights (per-channel symmetric);
+/// * `infer_batch` with the fused stacked GEMM vs per-partition matmuls
+///   at the SAME thread budget.
+///
+/// Writes BENCH_kernels.json; `assert_speedup` (CI: 1.5) fails the run
+/// if the best per-engine SpMM speedup lands below it — skipped when the
+/// dispatch ladder resolved to scalar (no SIMD on this host, nothing to
+/// assert).
+pub fn bench_kernels(
+    weights: &str,
+    quick: bool,
+    out_path: &str,
+    assert_speedup: Option<f64>,
+) -> Result<()> {
+    use crate::backend::{InferenceBackend, NativeBackend, PartitionInput};
+    use crate::features::GROOT_FEATURE_DIM;
+    use crate::gnn::{matmul_add_with, Precision};
+    use crate::util::simd;
+
+    let bits = if quick { 16 } else { 64 };
+    let budget = Duration::from_millis(if quick { 150 } else { 600 });
+    let threads = crate::util::pool::default_threads();
+
+    let graph = datasets::build(DatasetKind::Csa, bits)?;
+    let prepared = PreparedGraph::new(&graph);
+    let csr = prepared.csr();
+    let n = csr.num_nodes();
+    let plan_stats = prepared.plan_stats(&PlanOptions::default());
+
+    println!(
+        "kernel bench: csa{bits} ({n} nodes, hd/ld rows {}/{}), simd={}, threads={threads}",
+        plan_stats.hd_rows,
+        plan_stats.ld_rows,
+        simd::active()
+    );
+
+    // --- SpMM forward, dim 64, per engine, scalar vs dispatched SIMD ---
+    let dim = 64usize;
+    let x: Vec<f32> = (0..n * dim).map(|i| ((i as f32) * 0.37).sin()).collect();
+    let mut out = vec![0.0f32; n * dim];
+    let mut spmm_rows = Vec::new();
+    for engine in crate::spmm::all_engines(threads) {
+        simd::force_scalar(true);
+        let scalar = bench_for(budget, || engine.spmm_mean_into(csr, &x, dim, &mut out));
+        simd::force_scalar(false);
+        let fast = bench_for(budget, || engine.spmm_mean_into(csr, &x, dim, &mut out));
+        spmm_rows.push(KernelRow {
+            engine: engine.name(),
+            scalar_median_s: scalar.median_secs(),
+            simd_median_s: fast.median_secs(),
+            speedup: scalar.median_secs() / fast.median_secs().max(1e-12),
+        });
+    }
+
+    // --- dense GEMM (matmul_add), the SAGE layer shape n×64 · 64×64 ---
+    let k = 64usize;
+    let m = 64usize;
+    let a: Vec<f32> = (0..n * k).map(|i| ((i as f32) * 0.11).cos()).collect();
+    let b: Vec<f32> = (0..k * m).map(|i| ((i as f32) * 0.23).sin() * 0.1).collect();
+    let mut gout = vec![0.0f32; n * m];
+    simd::force_scalar(true);
+    let mm_scalar = bench_for(budget, || {
+        gout.fill(0.0);
+        matmul_add_with(threads, &a, &b, &mut gout, n, k, m);
+    });
+    simd::force_scalar(false);
+    let mm_fast = bench_for(budget, || {
+        gout.fill(0.0);
+        matmul_add_with(threads, &a, &b, &mut gout, n, k, m);
+    });
+    let matmul = PairRow {
+        name: "matmul_add",
+        base_median_s: mm_scalar.median_secs(),
+        fast_median_s: mm_fast.median_secs(),
+        speedup: mm_scalar.median_secs() / mm_fast.median_secs().max(1e-12),
+    };
+
+    // --- f32 vs int8 full forward through the native backend ---
+    let model = super::native_model(weights).unwrap_or_else(|_| synthetic_model());
+    let part = PartitionInput {
+        csr,
+        features: prepared.features(),
+        feature_dim: GROOT_FEATURE_DIM,
+    };
+    let f32_backend = NativeBackend::with_precision(model.clone(), threads, Precision::F32);
+    let int8_backend = NativeBackend::with_precision(model.clone(), threads, Precision::Int8);
+    let f32_t = bench_for(budget, || f32_backend.infer(part).expect("f32 infer"));
+    let int8_t = bench_for(budget, || int8_backend.infer(part).expect("int8 infer"));
+    let int8 = PairRow {
+        name: "int8_forward",
+        base_median_s: f32_t.median_secs(),
+        fast_median_s: int8_t.median_secs(),
+        speedup: f32_t.median_secs() / int8_t.median_secs().max(1e-12),
+    };
+
+    // --- fused stacked GEMM vs per-partition infer_batch, equal budget ---
+    let parts = 4usize;
+    let batch: Vec<PartitionInput<'_>> = (0..parts).map(|_| part).collect();
+    let batch_budget = threads.max(parts);
+    let fused_backend =
+        NativeBackend::with_precision(model.clone(), batch_budget, Precision::F32);
+    let mut unfused_backend =
+        NativeBackend::with_precision(model, batch_budget, Precision::F32);
+    unfused_backend.set_fused(false);
+    let unfused_t =
+        bench_for(budget, || unfused_backend.infer_batch(&batch).expect("unfused batch"));
+    let fused_t =
+        bench_for(budget, || fused_backend.infer_batch(&batch).expect("fused batch"));
+    let fused = PairRow {
+        name: "fused_batch",
+        base_median_s: unfused_t.median_secs(),
+        fast_median_s: fused_t.median_secs(),
+        speedup: unfused_t.median_secs() / fused_t.median_secs().max(1e-12),
+    };
+
+    let mut t = Table::new(
+        "Kernel microbench — scalar vs SIMD / f32 vs int8 / per-part vs fused",
+        &["kernel", "baseline median", "fast median", "speedup"],
+    );
+    for r in &spmm_rows {
+        t.row(vec![
+            format!("spmm {}", r.engine),
+            format!("{:.3}ms", r.scalar_median_s * 1e3),
+            format!("{:.3}ms", r.simd_median_s * 1e3),
+            format!("{:.2}x", r.speedup),
+        ]);
+    }
+    for p in [&matmul, &int8, &fused] {
+        t.row(vec![
+            p.name.to_string(),
+            format!("{:.3}ms", p.base_median_s * 1e3),
+            format!("{:.3}ms", p.fast_median_s * 1e3),
+            format!("{:.2}x", p.speedup),
+        ]);
+    }
+    t.print();
+
+    std::fs::write(
+        out_path,
+        render_kernels_json(
+            bits,
+            n,
+            plan_stats.hd_rows,
+            plan_stats.ld_rows,
+            simd::active(),
+            &spmm_rows,
+            &[&matmul, &int8, &fused],
+        ),
+    )
+    .with_context(|| format!("write {out_path}"))?;
+    println!("\nwrote {out_path}");
+
+    if let Some(min) = assert_speedup {
+        if simd::active() == "scalar" {
+            println!("--assert-simd-speedup skipped: dispatch resolved to scalar on this host");
+        } else {
+            let best = spmm_rows.iter().map(|r| r.speedup).fold(0.0f64, f64::max);
+            anyhow::ensure!(
+                best >= min,
+                "best SpMM SIMD speedup {best:.2}x below required {min:.2}x \
+                 (simd={})",
+                simd::active()
+            );
+            println!("SIMD speedup assertion passed: best {best:.2}x >= {min:.2}x");
+        }
+    }
+    Ok(())
+}
+
+/// Hand-rolled JSON for BENCH_kernels.json: stable key order, one object
+/// per SpMM engine plus the paired A/B rows.
+#[allow(clippy::too_many_arguments)]
+fn render_kernels_json(
+    bits: usize,
+    nodes: usize,
+    hd_rows: usize,
+    ld_rows: usize,
+    simd_level: &str,
+    spmm: &[KernelRow],
+    pairs: &[&PairRow],
+) -> String {
+    let mut s = String::from("{\n  \"bench\": \"kernels\",\n");
+    s.push_str(&format!(
+        "  \"dataset\": \"csa{bits}\", \"nodes\": {nodes}, \
+         \"hd_rows\": {hd_rows}, \"ld_rows\": {ld_rows}, \
+         \"simd\": \"{simd_level}\",\n"
+    ));
+    s.push_str("  \"spmm\": [\n");
+    for (i, r) in spmm.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"engine\": \"{}\", \"scalar_median_s\": {:.6}, \
+             \"simd_median_s\": {:.6}, \"speedup\": {:.3}}}{}\n",
+            r.engine,
+            r.scalar_median_s,
+            r.simd_median_s,
+            r.speedup,
+            if i + 1 < spmm.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ],\n  \"pairs\": [\n");
+    for (i, p) in pairs.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"name\": \"{}\", \"base_median_s\": {:.6}, \
+             \"fast_median_s\": {:.6}, \"speedup\": {:.3}}}{}\n",
+            p.name,
+            p.base_median_s,
+            p.fast_median_s,
+            p.speedup,
+            if i + 1 < pairs.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
 /// Fixed-weight 4→16→5 model for artifact-free benching (values are
 /// arbitrary but deterministic; small enough to keep activations finite).
 /// Shared with the memory harness, which measures footprints, not
@@ -539,6 +779,30 @@ mod tests {
         assert!(s.contains("\"bench\": \"serve_concurrency\""));
         assert!(s.contains("\"workers\": 4"));
         assert!(s.contains("\"p95_ms\": 12.250"));
+        assert_eq!(s.matches('{').count(), s.matches('}').count());
+        assert_eq!(s.matches('[').count(), s.matches(']').count());
+    }
+
+    #[test]
+    fn kernels_json_is_well_formed_ish() {
+        let spmm = vec![KernelRow {
+            engine: "groot",
+            scalar_median_s: 0.004,
+            simd_median_s: 0.002,
+            speedup: 2.0,
+        }];
+        let pair = PairRow {
+            name: "matmul_add",
+            base_median_s: 0.01,
+            fast_median_s: 0.004,
+            speedup: 2.5,
+        };
+        let s = render_kernels_json(64, 37000, 12, 34000, "avx2", &spmm, &[&pair]);
+        assert!(s.contains("\"bench\": \"kernels\""));
+        assert!(s.contains("\"simd\": \"avx2\""));
+        assert!(s.contains("\"hd_rows\": 12"));
+        assert!(s.contains("\"engine\": \"groot\""));
+        assert!(s.contains("\"speedup\": 2.500"));
         assert_eq!(s.matches('{').count(), s.matches('}').count());
         assert_eq!(s.matches('[').count(), s.matches(']').count());
     }

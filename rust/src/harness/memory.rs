@@ -84,7 +84,7 @@ pub fn fig8(quick: bool) -> Result<()> {
         let prepared = PreparedGraph::new(&graph);
         for parts in [1usize, 2, 4, 8, 16, 32, 64] {
             let s = prepared
-                .plan_stats(&PlanOptions { partitions: parts, regrow: true, seed: 1 })
+                .plan_stats(&PlanOptions { partitions: parts, seed: 1, ..Default::default() })
                 .regrowth;
             let mb = marginal(s.max_partition_nodes);
             t.row(vec![
@@ -260,7 +260,7 @@ pub fn tab2() -> Result<()> {
     let mut phi = Vec::new();
     for &p in &parts_list {
         let s = prepared
-            .plan_stats(&PlanOptions { partitions: p, regrow: true, seed: 1 })
+            .plan_stats(&PlanOptions { partitions: p, seed: 1, ..Default::default() })
             .regrowth;
         let per = probe.num_nodes as f64 / p as f64;
         phi.push((s.max_partition_nodes as f64 / per) - 1.0);

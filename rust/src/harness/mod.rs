@@ -54,6 +54,10 @@ pub fn run(which: &str, args: &mut Args) -> Result<()> {
                 let out = args.get_or("out", "BENCH_serve.json");
                 let workers = args.parse_or("workers", 0usize)?;
                 bench::bench_serve(&weights, quick, &out, (workers > 0).then_some(workers))
+            } else if args.flag("kernels") {
+                let out = args.get_or("out", "BENCH_kernels.json");
+                let min = args.parse_or("assert-simd-speedup", 0.0f64)?;
+                bench::bench_kernels(&weights, quick, &out, (min > 0.0).then_some(min))
             } else {
                 let out = args.get_or("out", "BENCH_pipeline.json");
                 bench::bench_pipeline(&weights, quick, &out)

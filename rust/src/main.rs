@@ -33,6 +33,7 @@ fn run() -> Result<()> {
         "stream",
         "prefetch",
         "oracle",
+        "kernels",
     ]);
     let cmd = args.positional.first().cloned().unwrap_or_else(|| "help".into());
     match cmd.as_str() {
@@ -59,6 +60,10 @@ USAGE:
                  [--backend native|xla] [--artifacts DIR] [--weights FILE]
                  [--threads N (per-backend budget: partition lanes × SpMM)]
                  [--batch N (disjoint graph copies)]
+                 [--precision f32|int8 (native backend; int8 = per-channel
+                  symmetric weight quantization, f32 activations)]
+                 [--hd-threshold N (HD/LD degree cutoff for the GROOT SpMM
+                  engine; default 512 or GROOT_HD_THRESHOLD)]
                  [--stream [--window 4] [--chunk 8192] [--prefetch]]
   groot verify   --dataset csa --bits 16 [same options as classify]
                  [--oracle (ground-truth labels feed the algebraic stage)]
@@ -80,6 +85,10 @@ USAGE:
                   worker counts at a fixed total thread budget; --workers N
                   pins the sweep to 1 and N; writes BENCH_serve.json with
                   throughput + p50/p95)]
+                 [--kernels (bench: SpMM/GEMM kernel microbench — per-engine
+                  SIMD-vs-scalar speedup, int8-vs-f32 forward, fused batched
+                  GEMM; writes BENCH_kernels.json;
+                  --assert-simd-speedup X fails below X× when SIMD is active)]
   groot info     --dataset csa --bits 16
 
 Serving: worker count lives in SessionConfig.workers (the `--workers`
@@ -132,7 +141,15 @@ fn build_backend(args: &mut Args, threads: usize) -> Result<Backend> {
         .with_context(|| format!("load weights {}", weights_path.display()))?;
     let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
     let max_bucket = args.parse_or("max-bucket", usize::MAX)?;
-    groot::backend::backend_by_name(&backend, &bundle, &artifacts, max_bucket, threads)
+    let precision: groot::gnn::Precision = args.parse_or("precision", Default::default())?;
+    groot::backend::backend_by_name_precise(
+        &backend,
+        &bundle,
+        &artifacts,
+        max_bucket,
+        threads,
+        precision,
+    )
 }
 
 fn session_config(args: &mut Args) -> Result<SessionConfig> {
@@ -142,6 +159,8 @@ fn session_config(args: &mut Args) -> Result<SessionConfig> {
         seed: args.parse_or("seed", 0u64)?,
         threads: args.parse_or("threads", groot::util::pool::default_threads())?,
         workers: args.parse_or("workers", 1usize)?,
+        precision: args.parse_or("precision", Default::default())?,
+        hd_threshold: args.parse_or("hd-threshold", groot::spmm::default_hd_threshold())?,
     })
 }
 

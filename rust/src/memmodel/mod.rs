@@ -96,7 +96,7 @@ pub fn measured_peak_partition(
     seed: u64,
 ) -> crate::regrowth::RegrowthStats {
     PreparedGraph::new(graph)
-        .plan_stats(&PlanOptions { partitions, regrow, seed })
+        .plan_stats(&PlanOptions { partitions, regrow, seed, ..Default::default() })
         .regrowth
 }
 

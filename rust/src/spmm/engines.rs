@@ -4,6 +4,7 @@
 use super::SpmmEngine;
 use crate::graph::Csr;
 use crate::util::pool::{parallel_for_dynamic, parallel_for_static, SendPtr};
+use crate::util::simd;
 
 /// cuSPARSE-style: contiguous row ranges split evenly *by row count*.
 pub struct CsrRowParallel {
@@ -223,18 +224,10 @@ fn range_kernel(
     backward: bool,
 ) {
     if backward {
-        weighted_accumulate(csr, x, dim, &csr.col_idx[lo..hi], orow);
+        simd::gather_weighted(x, dim, &csr.col_idx[lo..hi], &csr.row_ptr, orow);
     } else {
-        for &v in &csr.col_idx[lo..hi] {
-            let xrow = &x[v as usize * dim..(v as usize + 1) * dim];
-            for d in 0..dim {
-                orow[d] += xrow[d];
-            }
-        }
-        let inv = 1.0 / csr.degree(u) as f32;
-        for o in orow.iter_mut() {
-            *o *= inv;
-        }
+        simd::gather_sum(x, dim, &csr.col_idx[lo..hi], orow);
+        simd::scale_assign(orow, 1.0 / csr.degree(u) as f32);
     }
 }
 
@@ -345,127 +338,30 @@ impl GnnAdvisorLike {
     }
 }
 
-/// Shared per-row mean kernel. Dispatches to a const-dim specialization
-/// for the model's dims so the accumulator lives in SIMD registers
-/// instead of bouncing through the output row per neighbor (§Perf: +35%
-/// on booth128/dim32).
+/// Shared per-row mean kernel: gather + mean scale into a pre-zeroed
+/// output row. The inner loops live in [`simd`]: AVX2 when the host has
+/// it, a const-dim-specialized scalar form otherwise — both byte-identical
+/// (the accumulation order per output element is the neighbor order either
+/// way; see the determinism contract in [`simd`]'s module docs).
 #[inline]
 pub(crate) fn row_mean(csr: &Csr, x: &[f32], dim: usize, u: usize, orow: &mut [f32]) {
-    match dim {
-        4 => row_mean_const::<4>(csr, x, u, orow),
-        8 => row_mean_const::<8>(csr, x, u, orow),
-        16 => row_mean_const::<16>(csr, x, u, orow),
-        32 => row_mean_const::<32>(csr, x, u, orow),
-        64 => row_mean_const::<64>(csr, x, u, orow),
-        _ => row_mean_dyn(csr, x, dim, u, orow),
-    }
-}
-
-#[inline]
-fn row_mean_const<const DIM: usize>(csr: &Csr, x: &[f32], u: usize, orow: &mut [f32]) {
     let nbs = csr.neighbors(u);
     if nbs.is_empty() {
         return;
     }
-    let mut acc = [0.0f32; DIM];
-    // NOTE §Perf: a software-prefetch variant (_mm_prefetch of the k+4th
-    // neighbor row) was tried and REVERTED — AIG rows are short (deg 2–5)
-    // so the prefetch rarely fired but its branch + enumerate bookkeeping
-    // de-vectorized the loop (3x slower on this VM).
-    for &v in nbs {
-        let xrow: &[f32; DIM] = x[v as usize * DIM..(v as usize + 1) * DIM]
-            .try_into()
-            .unwrap();
-        for d in 0..DIM {
-            acc[d] += xrow[d];
-        }
-    }
-    let inv = 1.0 / nbs.len() as f32;
-    for d in 0..DIM {
-        orow[d] = acc[d] * inv;
-    }
+    simd::gather_sum(x, dim, nbs, orow);
+    simd::scale_assign(orow, 1.0 / nbs.len() as f32);
 }
 
 /// Shared per-row *backward* kernel: `orow = Σ_{u ∈ N(v)} x[u] / deg(u)`
 /// — one row of the transpose-mean SpMM. On the symmetric adjacencies the
 /// model runs on, every neighbor u has deg(u) ≥ 1 (it neighbors v back);
-/// the guard below only fires on hand-built non-symmetric CSRs, where a
-/// zero-out-degree column contributes nothing. Const-dim dispatch mirrors
-/// [`row_mean`] so the accumulator stays in registers.
+/// the deg==0 guard inside [`simd::gather_weighted`] only fires on
+/// hand-built non-symmetric CSRs, where a zero-out-degree column
+/// contributes nothing.
 #[inline]
 pub(crate) fn row_backward(csr: &Csr, x: &[f32], dim: usize, v: usize, orow: &mut [f32]) {
-    match dim {
-        4 => row_backward_const::<4>(csr, x, v, orow),
-        8 => row_backward_const::<8>(csr, x, v, orow),
-        16 => row_backward_const::<16>(csr, x, v, orow),
-        32 => row_backward_const::<32>(csr, x, v, orow),
-        64 => row_backward_const::<64>(csr, x, v, orow),
-        _ => row_backward_dyn(csr, x, dim, v, orow),
-    }
-}
-
-#[inline]
-fn row_backward_const<const DIM: usize>(csr: &Csr, x: &[f32], v: usize, orow: &mut [f32]) {
-    let nbs = csr.neighbors(v);
-    let mut acc = [0.0f32; DIM];
-    for &u in nbs {
-        let deg = csr.degree(u as usize);
-        if deg == 0 {
-            continue;
-        }
-        let w = 1.0 / deg as f32;
-        let xrow: &[f32; DIM] = x[u as usize * DIM..(u as usize + 1) * DIM]
-            .try_into()
-            .unwrap();
-        for d in 0..DIM {
-            acc[d] += xrow[d] * w;
-        }
-    }
-    orow[..DIM].copy_from_slice(&acc);
-}
-
-#[inline]
-fn row_backward_dyn(csr: &Csr, x: &[f32], dim: usize, v: usize, orow: &mut [f32]) {
-    // one gather rule for every engine: see weighted_accumulate
-    weighted_accumulate(csr, x, dim, csr.neighbors(v), orow);
-}
-
-/// Column-degree-weighted gather over an explicit entry slice — the one
-/// copy of the backward gather rule (deg==0 guard, 1/deg weighting):
-/// [`row_backward`]'s dynamic path runs it over a whole row, MergePath
-/// over nonzero sub-ranges (partial rows accumulate into a carry buffer,
-/// full rows straight into the output row).
-#[inline]
-fn weighted_accumulate(csr: &Csr, x: &[f32], dim: usize, cols: &[u32], orow: &mut [f32]) {
-    for &u in cols {
-        let deg = csr.degree(u as usize);
-        if deg == 0 {
-            continue;
-        }
-        let w = 1.0 / deg as f32;
-        let xrow = &x[u as usize * dim..(u as usize + 1) * dim];
-        for d in 0..dim {
-            orow[d] += xrow[d] * w;
-        }
-    }
-}
-
-#[inline]
-fn row_mean_dyn(csr: &Csr, x: &[f32], dim: usize, u: usize, orow: &mut [f32]) {
-    let nbs = csr.neighbors(u);
-    if nbs.is_empty() {
-        return;
-    }
-    for &v in nbs {
-        let xrow = &x[v as usize * dim..(v as usize + 1) * dim];
-        for d in 0..dim {
-            orow[d] += xrow[d];
-        }
-    }
-    let inv = 1.0 / nbs.len() as f32;
-    for o in orow.iter_mut() {
-        *o *= inv;
-    }
+    simd::gather_weighted(x, dim, csr.neighbors(v), &csr.row_ptr, orow);
 }
 
 #[cfg(test)]

@@ -22,7 +22,22 @@
 use super::SpmmEngine;
 use crate::graph::{Csr, DegreeProfile};
 use crate::util::pool::{parallel_for_dynamic, parallel_for_static, SendPtr};
-use std::sync::Mutex;
+use crate::util::simd;
+use std::sync::{Mutex, OnceLock};
+
+/// Default HD/LD degree threshold: the `GROOT_HD_THRESHOLD` env override
+/// when set to a positive integer, otherwise the paper's
+/// [`crate::graph::profile::HD_THRESHOLD`] (512). Read once per process.
+pub fn default_hd_threshold() -> usize {
+    static CACHE: OnceLock<usize> = OnceLock::new();
+    *CACHE.get_or_init(|| {
+        std::env::var("GROOT_HD_THRESHOLD")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&v| v > 0)
+            .unwrap_or(crate::graph::profile::HD_THRESHOLD)
+    })
+}
 
 /// Tunables (paper defaults; ablations sweep these).
 #[derive(Clone, Copy, Debug)]
@@ -85,7 +100,24 @@ impl GrootSpmm {
     pub fn new(threads: usize) -> Self {
         Self::with_config(
             threads,
-            GrootConfig { ld_degree_sort: threads > 1, ..GrootConfig::default() },
+            GrootConfig {
+                hd_threshold: default_hd_threshold(),
+                ld_degree_sort: threads > 1,
+                ..GrootConfig::default()
+            },
+        )
+    }
+
+    /// Default config with an explicit HD/LD threshold — the bench
+    /// harness's threshold sweep hook.
+    pub fn with_threshold(threads: usize, hd_threshold: usize) -> Self {
+        Self::with_config(
+            threads,
+            GrootConfig {
+                hd_threshold: hd_threshold.max(1),
+                ld_degree_sort: threads > 1,
+                ..GrootConfig::default()
+            },
         )
     }
 
@@ -270,22 +302,11 @@ impl GrootSpmm {
                     let base = csr.row_ptr[u as usize];
                     let srow =
                         unsafe { std::slice::from_raw_parts_mut(sptr.0.add(slot * dim), dim) };
-                    for &v in &csr.col_idx[base + c0..base + c1] {
-                        let xrow = &x[v as usize * dim..(v as usize + 1) * dim];
-                        if backward {
-                            let cdeg = csr.degree(v as usize);
-                            if cdeg == 0 {
-                                continue;
-                            }
-                            let w = 1.0 / cdeg as f32;
-                            for d in 0..dim {
-                                srow[d] += xrow[d] * w;
-                            }
-                        } else {
-                            for d in 0..dim {
-                                srow[d] += xrow[d];
-                            }
-                        }
+                    let cols = &csr.col_idx[base + c0..base + c1];
+                    if backward {
+                        simd::gather_weighted(x, dim, cols, &csr.row_ptr, srow);
+                    } else {
+                        simd::gather_sum(x, dim, cols, srow);
                     }
                 }
             });
@@ -297,19 +318,13 @@ impl GrootSpmm {
                 for r in rs..re {
                     let (u, slot0, count) = hd_reduce[r];
                     let u = u as usize;
-                    let deg = csr.degree(u);
-                    let inv = 1.0 / deg as f32;
                     let orow =
                         unsafe { std::slice::from_raw_parts_mut(ptr.0.add(u * dim), dim) };
                     for s in slot0..slot0 + count {
-                        for d in 0..dim {
-                            orow[d] += scratch[s * dim + d];
-                        }
+                        simd::add_assign(orow, &scratch[s * dim..(s + 1) * dim]);
                     }
                     if !backward {
-                        for o in orow.iter_mut() {
-                            *o *= inv;
-                        }
+                        simd::scale_assign(orow, 1.0 / csr.degree(u) as f32);
                     }
                 }
             });

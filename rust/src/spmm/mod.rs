@@ -19,7 +19,7 @@ pub mod engines;
 pub mod groot;
 
 pub use engines::{CsrRowParallel, GnnAdvisorLike, MergePathSpmm};
-pub use groot::GrootSpmm;
+pub use groot::{default_hd_threshold, GrootSpmm};
 
 use crate::graph::Csr;
 

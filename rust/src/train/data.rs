@@ -72,8 +72,11 @@ impl Dataloader {
     ) -> Dataloader {
         let mut batches = Vec::new();
         for (gi, prepared) in graphs.iter().enumerate() {
-            let plan =
-                prepared.plan(&PlanOptions { partitions: partitions.max(1), regrow: true, seed });
+            let plan = prepared.plan(&PlanOptions {
+                partitions: partitions.max(1),
+                seed,
+                ..Default::default()
+            });
             let labels = prepared.labels_u8();
             for part in plan.parts {
                 if part.nodes.is_empty() {
@@ -166,7 +169,7 @@ mod tests {
         // inference plan executes.
         let g = graph();
         let prepared = PreparedGraph::new(&g);
-        let plan = prepared.plan(&PlanOptions { partitions: 3, regrow: true, seed: 7 });
+        let plan = prepared.plan(&PlanOptions { partitions: 3, seed: 7, ..Default::default() });
         let loader = Dataloader::new(std::slice::from_ref(&g), 3, 7);
         let live: Vec<_> = plan.parts.iter().filter(|p| !p.nodes.is_empty()).collect();
         assert_eq!(loader.num_batches(), live.len());

@@ -9,5 +9,6 @@ pub mod cli;
 pub mod pool;
 pub mod prop;
 pub mod rng;
+pub mod simd;
 pub mod tensor;
 pub mod timer;

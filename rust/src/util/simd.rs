@@ -1,0 +1,683 @@
+//! Runtime-dispatched SIMD kernels for the SpMM / GEMM hot loops.
+//!
+//! Every primitive here exists in two byte-identical implementations: a
+//! portable scalar form (the reference, always compiled) and an AVX2 form
+//! (x86_64 only, selected at runtime via `is_x86_feature_detected!`). The
+//! dispatch ladder is
+//!
+//! ```text
+//! GROOT_SIMD=scalar env / force_scalar(true)  →  scalar
+//! x86_64 with AVX2 detected                   →  avx2
+//! anything else                               →  scalar
+//! ```
+//!
+//! **Determinism contract.** The AVX2 kernels are bit-for-bit identical to
+//! the scalar reference, not merely close. Two rules make this hold:
+//!
+//! 1. *No FMA.* `mul` then `add` round separately in the scalar code, so
+//!    the vector code uses `_mm256_add_ps(acc, _mm256_mul_ps(..))` — never
+//!    `_mm256_fmadd_ps`, which rounds once and drifts.
+//! 2. *Fixed accumulation order.* Vector lanes span the feature dimension
+//!    (`d` / output column `j`); the reduction order per output element —
+//!    over neighbors / over `k` — is exactly the scalar loop order. Lanes
+//!    never sum across the reduction axis, so no re-association happens.
+//!
+//! The scalar twins are `pub` so parity tests and the bench harness can
+//! pin the dispatched output against them; [`force_scalar`] flips the
+//! whole process to the scalar path for same-binary A/B timing.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+/// 0 = auto (detect), 1 = forced scalar.
+static FORCE: AtomicU8 = AtomicU8::new(0);
+static ENV_INIT: OnceLock<()> = OnceLock::new();
+
+fn env_init() {
+    ENV_INIT.get_or_init(|| {
+        if std::env::var("GROOT_SIMD").as_deref() == Ok("scalar") {
+            FORCE.store(1, Ordering::Relaxed);
+        }
+    });
+}
+
+/// Force (or un-force) the scalar path process-wide. Used by the bench
+/// harness and parity tests to time/compare both implementations in one
+/// process; overrides the `GROOT_SIMD` env once called.
+pub fn force_scalar(on: bool) {
+    env_init();
+    FORCE.store(u8::from(on), Ordering::Relaxed);
+}
+
+#[cfg(target_arch = "x86_64")]
+fn avx2_available() -> bool {
+    static DETECT: OnceLock<bool> = OnceLock::new();
+    *DETECT.get_or_init(|| std::is_x86_feature_detected!("avx2"))
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn avx2_available() -> bool {
+    false
+}
+
+#[inline]
+fn use_avx2() -> bool {
+    env_init();
+    FORCE.load(Ordering::Relaxed) == 0 && avx2_available()
+}
+
+/// The instruction set the dispatcher would pick right now
+/// (`"avx2"` or `"scalar"`). Reported by `plan_stats` consumers and
+/// BENCH_kernels.json so a scalar-only run is visible in artifacts.
+pub fn active() -> &'static str {
+    if use_avx2() {
+        "avx2"
+    } else {
+        "scalar"
+    }
+}
+
+// ---------------------------------------------------------------------------
+// gather_sum: orow[d] += Σ_{c ∈ cols} x[c*dim + d]
+// ---------------------------------------------------------------------------
+
+/// Unweighted neighbor gather: accumulate each column's feature row into
+/// `orow`, in `cols` order. The forward-SpMM inner loop (mean scale is
+/// applied afterwards by [`scale_assign`]).
+#[inline]
+pub fn gather_sum(x: &[f32], dim: usize, cols: &[u32], orow: &mut [f32]) {
+    debug_assert_eq!(orow.len(), dim);
+    #[cfg(target_arch = "x86_64")]
+    if use_avx2() {
+        // SAFETY: AVX2 support was just detected at runtime.
+        unsafe { gather_sum_avx2(x, dim, cols, orow) };
+        return;
+    }
+    gather_sum_scalar(x, dim, cols, orow);
+}
+
+/// Scalar reference for [`gather_sum`]. Const-dim specializations for the
+/// model's dims keep the accumulator in registers instead of bouncing
+/// through the output row per neighbor (§Perf: +35% on booth128/dim32 —
+/// predates the AVX2 path but still carries the portable fallback).
+#[inline]
+pub fn gather_sum_scalar(x: &[f32], dim: usize, cols: &[u32], orow: &mut [f32]) {
+    match dim {
+        4 => gather_sum_const::<4>(x, cols, orow),
+        8 => gather_sum_const::<8>(x, cols, orow),
+        16 => gather_sum_const::<16>(x, cols, orow),
+        32 => gather_sum_const::<32>(x, cols, orow),
+        64 => gather_sum_const::<64>(x, cols, orow),
+        _ => {
+            for &c in cols {
+                let xrow = &x[c as usize * dim..(c as usize + 1) * dim];
+                for (o, &v) in orow.iter_mut().zip(xrow) {
+                    *o += v;
+                }
+            }
+        }
+    }
+}
+
+#[inline]
+fn gather_sum_const<const DIM: usize>(x: &[f32], cols: &[u32], orow: &mut [f32]) {
+    let mut acc: [f32; DIM] = orow[..DIM].try_into().unwrap();
+    // NOTE §Perf: a software-prefetch variant (_mm_prefetch of the k+4th
+    // neighbor row) was tried and REVERTED — AIG rows are short (deg 2–5)
+    // so the prefetch rarely fired but its branch + enumerate bookkeeping
+    // de-vectorized the loop (3x slower on this VM).
+    for &c in cols {
+        let xrow: &[f32; DIM] = x[c as usize * DIM..(c as usize + 1) * DIM]
+            .try_into()
+            .unwrap();
+        for d in 0..DIM {
+            acc[d] += xrow[d];
+        }
+    }
+    orow[..DIM].copy_from_slice(&acc);
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn gather_sum_avx2(x: &[f32], dim: usize, cols: &[u32], orow: &mut [f32]) {
+    use std::arch::x86_64::*;
+    let xp = x.as_ptr();
+    let op = orow.as_mut_ptr();
+    let mut d = 0usize;
+    // 16-wide: two ymm accumulators stay in registers across the whole
+    // neighbor loop — the HD-row payoff (one pass over cols per 16 lanes).
+    while d + 16 <= dim {
+        let mut a0 = _mm256_loadu_ps(op.add(d));
+        let mut a1 = _mm256_loadu_ps(op.add(d + 8));
+        for &c in cols {
+            let p = xp.add(c as usize * dim + d);
+            a0 = _mm256_add_ps(a0, _mm256_loadu_ps(p));
+            a1 = _mm256_add_ps(a1, _mm256_loadu_ps(p.add(8)));
+        }
+        _mm256_storeu_ps(op.add(d), a0);
+        _mm256_storeu_ps(op.add(d + 8), a1);
+        d += 16;
+    }
+    while d + 8 <= dim {
+        let mut a0 = _mm256_loadu_ps(op.add(d));
+        for &c in cols {
+            a0 = _mm256_add_ps(a0, _mm256_loadu_ps(xp.add(c as usize * dim + d)));
+        }
+        _mm256_storeu_ps(op.add(d), a0);
+        d += 8;
+    }
+    while d < dim {
+        let mut acc = *op.add(d);
+        for &c in cols {
+            acc += *xp.add(c as usize * dim + d);
+        }
+        *op.add(d) = acc;
+        d += 1;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// gather_weighted: orow[d] += Σ_{c ∈ cols, deg(c)>0} x[c*dim+d] / deg(c)
+// ---------------------------------------------------------------------------
+
+/// Column-degree-weighted gather — the backward-SpMM inner loop. Degrees
+/// come from `row_ptr` (`deg(c) = row_ptr[c+1] - row_ptr[c]`); zero-degree
+/// columns contribute nothing (same guard as the scalar engines).
+#[inline]
+pub fn gather_weighted(x: &[f32], dim: usize, cols: &[u32], row_ptr: &[usize], orow: &mut [f32]) {
+    debug_assert_eq!(orow.len(), dim);
+    #[cfg(target_arch = "x86_64")]
+    if use_avx2() {
+        // SAFETY: AVX2 support was just detected at runtime.
+        unsafe { gather_weighted_avx2(x, dim, cols, row_ptr, orow) };
+        return;
+    }
+    gather_weighted_scalar(x, dim, cols, row_ptr, orow);
+}
+
+/// Scalar reference for [`gather_weighted`], const-dim specialized like
+/// [`gather_sum_scalar`].
+#[inline]
+pub fn gather_weighted_scalar(
+    x: &[f32],
+    dim: usize,
+    cols: &[u32],
+    row_ptr: &[usize],
+    orow: &mut [f32],
+) {
+    match dim {
+        4 => gather_weighted_const::<4>(x, cols, row_ptr, orow),
+        8 => gather_weighted_const::<8>(x, cols, row_ptr, orow),
+        16 => gather_weighted_const::<16>(x, cols, row_ptr, orow),
+        32 => gather_weighted_const::<32>(x, cols, row_ptr, orow),
+        64 => gather_weighted_const::<64>(x, cols, row_ptr, orow),
+        _ => {
+            for &c in cols {
+                let c = c as usize;
+                let deg = row_ptr[c + 1] - row_ptr[c];
+                if deg == 0 {
+                    continue;
+                }
+                let w = 1.0 / deg as f32;
+                let xrow = &x[c * dim..(c + 1) * dim];
+                for (o, &v) in orow.iter_mut().zip(xrow) {
+                    *o += v * w;
+                }
+            }
+        }
+    }
+}
+
+#[inline]
+fn gather_weighted_const<const DIM: usize>(
+    x: &[f32],
+    cols: &[u32],
+    row_ptr: &[usize],
+    orow: &mut [f32],
+) {
+    let mut acc: [f32; DIM] = orow[..DIM].try_into().unwrap();
+    for &c in cols {
+        let c = c as usize;
+        let deg = row_ptr[c + 1] - row_ptr[c];
+        if deg == 0 {
+            continue;
+        }
+        let w = 1.0 / deg as f32;
+        let xrow: &[f32; DIM] = x[c * DIM..(c + 1) * DIM].try_into().unwrap();
+        for d in 0..DIM {
+            acc[d] += xrow[d] * w;
+        }
+    }
+    orow[..DIM].copy_from_slice(&acc);
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn gather_weighted_avx2(
+    x: &[f32],
+    dim: usize,
+    cols: &[u32],
+    row_ptr: &[usize],
+    orow: &mut [f32],
+) {
+    use std::arch::x86_64::*;
+    let xp = x.as_ptr();
+    let op = orow.as_mut_ptr();
+    let mut d = 0usize;
+    while d + 16 <= dim {
+        let mut a0 = _mm256_loadu_ps(op.add(d));
+        let mut a1 = _mm256_loadu_ps(op.add(d + 8));
+        for &c in cols {
+            let c = c as usize;
+            let deg = row_ptr[c + 1] - row_ptr[c];
+            if deg == 0 {
+                continue;
+            }
+            let w = _mm256_set1_ps(1.0 / deg as f32);
+            let p = xp.add(c * dim + d);
+            a0 = _mm256_add_ps(a0, _mm256_mul_ps(_mm256_loadu_ps(p), w));
+            a1 = _mm256_add_ps(a1, _mm256_mul_ps(_mm256_loadu_ps(p.add(8)), w));
+        }
+        _mm256_storeu_ps(op.add(d), a0);
+        _mm256_storeu_ps(op.add(d + 8), a1);
+        d += 16;
+    }
+    while d + 8 <= dim {
+        let mut a0 = _mm256_loadu_ps(op.add(d));
+        for &c in cols {
+            let c = c as usize;
+            let deg = row_ptr[c + 1] - row_ptr[c];
+            if deg == 0 {
+                continue;
+            }
+            let w = _mm256_set1_ps(1.0 / deg as f32);
+            a0 = _mm256_add_ps(a0, _mm256_mul_ps(_mm256_loadu_ps(xp.add(c * dim + d)), w));
+        }
+        _mm256_storeu_ps(op.add(d), a0);
+        d += 8;
+    }
+    while d < dim {
+        let mut acc = *op.add(d);
+        for &c in cols {
+            let c = c as usize;
+            let deg = row_ptr[c + 1] - row_ptr[c];
+            if deg == 0 {
+                continue;
+            }
+            acc += *xp.add(c * dim + d) * (1.0 / deg as f32);
+        }
+        *op.add(d) = acc;
+        d += 1;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// scale_assign / add_assign
+// ---------------------------------------------------------------------------
+
+/// `v[i] *= s` — the mean scale applied after [`gather_sum`].
+#[inline]
+pub fn scale_assign(v: &mut [f32], s: f32) {
+    #[cfg(target_arch = "x86_64")]
+    if use_avx2() {
+        // SAFETY: AVX2 support was just detected at runtime.
+        unsafe { scale_assign_avx2(v, s) };
+        return;
+    }
+    for o in v.iter_mut() {
+        *o *= s;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn scale_assign_avx2(v: &mut [f32], s: f32) {
+    use std::arch::x86_64::*;
+    let sv = _mm256_set1_ps(s);
+    let p = v.as_mut_ptr();
+    let mut i = 0usize;
+    while i + 8 <= v.len() {
+        _mm256_storeu_ps(p.add(i), _mm256_mul_ps(_mm256_loadu_ps(p.add(i)), sv));
+        i += 8;
+    }
+    while i < v.len() {
+        *p.add(i) *= s;
+        i += 1;
+    }
+}
+
+/// `acc[i] += x[i]` — the HD scratch-slot reduction in the GROOT engine.
+#[inline]
+pub fn add_assign(acc: &mut [f32], x: &[f32]) {
+    debug_assert_eq!(acc.len(), x.len());
+    #[cfg(target_arch = "x86_64")]
+    if use_avx2() {
+        // SAFETY: AVX2 support was just detected at runtime.
+        unsafe { add_assign_avx2(acc, x) };
+        return;
+    }
+    for (o, &v) in acc.iter_mut().zip(x) {
+        *o += v;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn add_assign_avx2(acc: &mut [f32], x: &[f32]) {
+    use std::arch::x86_64::*;
+    let ap = acc.as_mut_ptr();
+    let xp = x.as_ptr();
+    let mut i = 0usize;
+    while i + 8 <= acc.len() {
+        _mm256_storeu_ps(
+            ap.add(i),
+            _mm256_add_ps(_mm256_loadu_ps(ap.add(i)), _mm256_loadu_ps(xp.add(i))),
+        );
+        i += 8;
+    }
+    while i < acc.len() {
+        *ap.add(i) += *xp.add(i);
+        i += 1;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// matmul_row_add: orow[j] += Σ_k arow[k] * b[k*m + j]
+// ---------------------------------------------------------------------------
+
+/// One output row of a dense GEMM accumulate: `orow += arow · b` with `b`
+/// row-major `[k × m]`. The register-blocked micro-kernel: the output row
+/// is tiled 16 floats wide, each tile held in two ymm accumulators across
+/// the whole `k` loop with `arow[k]` broadcast. Zero activations are
+/// skipped in both forms — load-bearing for ReLU sparsity *and* for the
+/// non-finite semantics (`0 * inf` never materializes, same as scalar).
+#[inline]
+pub fn matmul_row_add(arow: &[f32], b: &[f32], m: usize, orow: &mut [f32]) {
+    debug_assert_eq!(b.len(), arow.len() * m);
+    debug_assert_eq!(orow.len(), m);
+    #[cfg(target_arch = "x86_64")]
+    if use_avx2() {
+        // SAFETY: AVX2 support was just detected at runtime.
+        unsafe { matmul_row_add_avx2(arow, b, m, orow) };
+        return;
+    }
+    matmul_row_add_scalar(arow, b, m, orow);
+}
+
+/// Scalar reference for [`matmul_row_add`]: `b` row offsets hoisted via
+/// `chunks_exact`, inner loop over zipped slices so bounds checks drop.
+#[inline]
+pub fn matmul_row_add_scalar(arow: &[f32], b: &[f32], m: usize, orow: &mut [f32]) {
+    for (&av, brow) in arow.iter().zip(b.chunks_exact(m)) {
+        if av != 0.0 {
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn matmul_row_add_avx2(arow: &[f32], b: &[f32], m: usize, orow: &mut [f32]) {
+    use std::arch::x86_64::*;
+    let bp = b.as_ptr();
+    let op = orow.as_mut_ptr();
+    let mut j = 0usize;
+    while j + 16 <= m {
+        let mut a0 = _mm256_loadu_ps(op.add(j));
+        let mut a1 = _mm256_loadu_ps(op.add(j + 8));
+        for (kk, &av) in arow.iter().enumerate() {
+            if av != 0.0 {
+                let bv = _mm256_set1_ps(av);
+                let p = bp.add(kk * m + j);
+                a0 = _mm256_add_ps(a0, _mm256_mul_ps(_mm256_loadu_ps(p), bv));
+                a1 = _mm256_add_ps(a1, _mm256_mul_ps(_mm256_loadu_ps(p.add(8)), bv));
+            }
+        }
+        _mm256_storeu_ps(op.add(j), a0);
+        _mm256_storeu_ps(op.add(j + 8), a1);
+        j += 16;
+    }
+    while j + 8 <= m {
+        let mut a0 = _mm256_loadu_ps(op.add(j));
+        for (kk, &av) in arow.iter().enumerate() {
+            if av != 0.0 {
+                a0 = _mm256_add_ps(
+                    a0,
+                    _mm256_mul_ps(_mm256_loadu_ps(bp.add(kk * m + j)), _mm256_set1_ps(av)),
+                );
+            }
+        }
+        _mm256_storeu_ps(op.add(j), a0);
+        j += 8;
+    }
+    while j < m {
+        let mut acc = *op.add(j);
+        for (kk, &av) in arow.iter().enumerate() {
+            if av != 0.0 {
+                acc += av * *bp.add(kk * m + j);
+            }
+        }
+        *op.add(j) = acc;
+        j += 1;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// matmul_row_add_q: int8-weight / f32-activation variant
+// ---------------------------------------------------------------------------
+
+/// Quantized twin of [`matmul_row_add`]: `acc[j] += Σ_k arow[k] *
+/// (bq[k*m+j] as f32)`. Weights are per-output-channel symmetric int8;
+/// the caller applies the channel scales in the epilogue (fused dequant),
+/// so this kernel accumulates in the integer-exact f32 domain. i8→f32
+/// conversion is exact, mul/add order matches the scalar twin — the int8
+/// path is byte-deterministic across dispatch choices too.
+#[inline]
+pub fn matmul_row_add_q(arow: &[f32], bq: &[i8], m: usize, acc: &mut [f32]) {
+    debug_assert_eq!(bq.len(), arow.len() * m);
+    debug_assert_eq!(acc.len(), m);
+    #[cfg(target_arch = "x86_64")]
+    if use_avx2() {
+        // SAFETY: AVX2 support was just detected at runtime.
+        unsafe { matmul_row_add_q_avx2(arow, bq, m, acc) };
+        return;
+    }
+    matmul_row_add_q_scalar(arow, bq, m, acc);
+}
+
+/// Scalar reference for [`matmul_row_add_q`].
+#[inline]
+pub fn matmul_row_add_q_scalar(arow: &[f32], bq: &[i8], m: usize, acc: &mut [f32]) {
+    for (&av, brow) in arow.iter().zip(bq.chunks_exact(m)) {
+        if av != 0.0 {
+            for (o, &bv) in acc.iter_mut().zip(brow) {
+                *o += av * bv as f32;
+            }
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn matmul_row_add_q_avx2(arow: &[f32], bq: &[i8], m: usize, acc: &mut [f32]) {
+    use std::arch::x86_64::*;
+    /// 8 consecutive i8 → 8 f32 lanes (sign-extended; conversion exact).
+    #[inline]
+    unsafe fn cvt8(p: *const i8) -> __m256 {
+        let bytes = _mm_loadl_epi64(p.cast());
+        _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(bytes))
+    }
+    let bp = bq.as_ptr();
+    let op = acc.as_mut_ptr();
+    let mut j = 0usize;
+    while j + 16 <= m {
+        let mut a0 = _mm256_loadu_ps(op.add(j));
+        let mut a1 = _mm256_loadu_ps(op.add(j + 8));
+        for (kk, &av) in arow.iter().enumerate() {
+            if av != 0.0 {
+                let bv = _mm256_set1_ps(av);
+                let p = bp.add(kk * m + j);
+                a0 = _mm256_add_ps(a0, _mm256_mul_ps(cvt8(p), bv));
+                a1 = _mm256_add_ps(a1, _mm256_mul_ps(cvt8(p.add(8)), bv));
+            }
+        }
+        _mm256_storeu_ps(op.add(j), a0);
+        _mm256_storeu_ps(op.add(j + 8), a1);
+        j += 16;
+    }
+    while j + 8 <= m {
+        let mut a0 = _mm256_loadu_ps(op.add(j));
+        for (kk, &av) in arow.iter().enumerate() {
+            if av != 0.0 {
+                a0 = _mm256_add_ps(
+                    a0,
+                    _mm256_mul_ps(cvt8(bp.add(kk * m + j)), _mm256_set1_ps(av)),
+                );
+            }
+        }
+        _mm256_storeu_ps(op.add(j), a0);
+        j += 8;
+    }
+    while j < m {
+        let mut s = *op.add(j);
+        for (kk, &av) in arow.iter().enumerate() {
+            if av != 0.0 {
+                s += av * *bp.add(kk * m + j) as f32;
+            }
+        }
+        *op.add(j) = s;
+        j += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.f32() * 2.0 - 1.0).collect()
+    }
+
+    /// Run the AVX2 kernel directly (when the host has it) and compare
+    /// bytes with the scalar twin — no global force toggling, so these
+    /// tests are safe under the parallel test runner.
+    #[test]
+    fn gather_sum_simd_matches_scalar_bytes() {
+        let mut rng = Rng::new(11);
+        for &dim in &[1usize, 2, 3, 4, 5, 7, 8, 15, 16, 17, 31, 33, 64] {
+            let n = 37;
+            let x = rand_vec(&mut rng, n * dim);
+            let cols: Vec<u32> = (0..25).map(|_| rng.below(n) as u32).collect();
+            let mut a = rand_vec(&mut rng, dim);
+            let mut b = a.clone();
+            gather_sum_scalar(&x, dim, &cols, &mut a);
+            #[cfg(target_arch = "x86_64")]
+            if avx2_available() {
+                unsafe { gather_sum_avx2(&x, dim, &cols, &mut b) };
+                assert_eq!(a, b, "dim {dim}");
+                continue;
+            }
+            gather_sum(&x, dim, &cols, &mut b);
+            assert_eq!(a, b, "dim {dim}");
+        }
+    }
+
+    #[test]
+    fn gather_weighted_simd_matches_scalar_bytes() {
+        let mut rng = Rng::new(13);
+        for &dim in &[1usize, 3, 5, 8, 16, 19, 64] {
+            let n = 29;
+            // row_ptr with some zero-degree rows
+            let mut row_ptr = vec![0usize; n + 1];
+            for i in 0..n {
+                let deg = if rng.below(4) == 0 { 0 } else { rng.range(1, 6) };
+                row_ptr[i + 1] = row_ptr[i] + deg;
+            }
+            let x = rand_vec(&mut rng, n * dim);
+            let cols: Vec<u32> = (0..40).map(|_| rng.below(n) as u32).collect();
+            let mut a = rand_vec(&mut rng, dim);
+            let mut b = a.clone();
+            gather_weighted_scalar(&x, dim, &cols, &row_ptr, &mut a);
+            #[cfg(target_arch = "x86_64")]
+            if avx2_available() {
+                unsafe { gather_weighted_avx2(&x, dim, &cols, &row_ptr, &mut b) };
+                assert_eq!(a, b, "dim {dim}");
+                continue;
+            }
+            gather_weighted(&x, dim, &cols, &row_ptr, &mut b);
+            assert_eq!(a, b, "dim {dim}");
+        }
+    }
+
+    #[test]
+    fn matmul_row_add_simd_matches_scalar_bytes() {
+        let mut rng = Rng::new(17);
+        for &(k, m) in &[(1usize, 1usize), (3, 5), (4, 16), (16, 5), (16, 64), (7, 23), (64, 17)] {
+            let mut arow = rand_vec(&mut rng, k);
+            arow[rng.below(k)] = 0.0; // exercise the skip
+            let b = rand_vec(&mut rng, k * m);
+            let mut oa = rand_vec(&mut rng, m);
+            let mut ob = oa.clone();
+            matmul_row_add_scalar(&arow, &b, m, &mut oa);
+            #[cfg(target_arch = "x86_64")]
+            if avx2_available() {
+                unsafe { matmul_row_add_avx2(&arow, &b, m, &mut ob) };
+                assert_eq!(oa, ob, "k {k} m {m}");
+                continue;
+            }
+            matmul_row_add(&arow, &b, m, &mut ob);
+            assert_eq!(oa, ob, "k {k} m {m}");
+        }
+    }
+
+    #[test]
+    fn matmul_row_add_q_simd_matches_scalar_bytes() {
+        let mut rng = Rng::new(19);
+        for &(k, m) in &[(1usize, 1usize), (4, 16), (16, 5), (16, 64), (9, 21)] {
+            let arow = rand_vec(&mut rng, k);
+            let bq: Vec<i8> = (0..k * m).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+            let mut oa = vec![0.0f32; m];
+            let mut ob = vec![0.0f32; m];
+            matmul_row_add_q_scalar(&arow, &bq, m, &mut oa);
+            #[cfg(target_arch = "x86_64")]
+            if avx2_available() {
+                unsafe { matmul_row_add_q_avx2(&arow, &bq, m, &mut ob) };
+                assert_eq!(oa, ob, "k {k} m {m}");
+                continue;
+            }
+            matmul_row_add_q(&arow, &bq, m, &mut ob);
+            assert_eq!(oa, ob, "k {k} m {m}");
+        }
+    }
+
+    #[test]
+    fn scale_and_add_assign_simd_match_scalar_bytes() {
+        let mut rng = Rng::new(23);
+        for &n in &[1usize, 7, 8, 9, 16, 33] {
+            let x = rand_vec(&mut rng, n);
+            let mut a = rand_vec(&mut rng, n);
+            let mut b = a.clone();
+            let mut a2 = a.clone();
+            let mut b2 = a.clone();
+            for (o, &v) in a.iter_mut().zip(&x) {
+                *o += v;
+            }
+            add_assign(&mut b, &x);
+            // add_assign may dispatch either way; both must equal scalar
+            assert_eq!(a, b, "add n {n}");
+            for o in a2.iter_mut() {
+                *o *= 0.37;
+            }
+            scale_assign(&mut b2, 0.37);
+            assert_eq!(a2, b2, "scale n {n}");
+        }
+    }
+
+    #[test]
+    fn active_reports_a_known_level() {
+        assert!(matches!(active(), "avx2" | "scalar"));
+    }
+}

@@ -61,6 +61,7 @@ fn sequential_pred(graph: &EdaGraph, opts: &VerifyOptions) -> Vec<u8> {
             seed: resolved.seed,
             threads: 1,
             workers: 1,
+            ..Default::default()
         },
     );
     session.classify(graph).unwrap().pred

@@ -1,0 +1,190 @@
+//! Kernel determinism contracts, end to end through the public API:
+//!
+//! 1. The SIMD dispatch ladder is BYTE-IDENTICAL to the scalar kernels
+//!    for every SpMM engine, forward and backward, across ragged shapes
+//!    (tiny dims, the 8/16-lane widths, odd remainders past them). The
+//!    f32 kernels use no FMA and keep scalar reduction order, so this is
+//!    exact equality of bit patterns, not a tolerance check.
+//! 2. int8 weight quantization (per-output-channel symmetric) never
+//!    flips a node's argmax class against the f32 path on the generator
+//!    zoo (csa/booth/wallace at 8/16/32 bits) — the serving guarantee
+//!    behind `--precision int8`.
+//!
+//! `simd::force_scalar` is process-global, so every test that toggles it
+//! serializes behind one mutex and restores auto-dispatch before
+//! releasing it.
+
+use groot::backend::{InferenceBackend, NativeBackend, PartitionInput};
+use groot::coordinator::PreparedGraph;
+use groot::datasets::{self, DatasetKind};
+use groot::features::GROOT_FEATURE_DIM;
+use groot::gnn::{Precision, SageLayer, SageModel};
+use groot::graph::Csr;
+use groot::spmm::{all_engines, GrootSpmm, SpmmEngine};
+use groot::util::rng::Rng;
+use groot::util::simd;
+use std::sync::Mutex;
+
+static SIMD_LOCK: Mutex<()> = Mutex::new(());
+
+/// Random sparse graph with one hub node so degree-skewed paths (HD
+/// chunking, carry merges) see real work even at small n.
+fn random_graph(n: usize, avg_deg: usize, seed: u64) -> Csr {
+    let mut rng = Rng::new(seed);
+    let mut edges = Vec::new();
+    for u in 0..n {
+        for _ in 0..avg_deg {
+            let v = rng.below(n);
+            if v != u {
+                edges.push((u as u32, v as u32));
+            }
+        }
+    }
+    if n > 4 {
+        for v in 1..n {
+            edges.push((0, v as u32));
+        }
+    }
+    Csr::symmetric_from_edges(n, &edges)
+}
+
+fn random_x(n: usize, dim: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..n * dim).map(|_| rng.f32() * 2.0 - 1.0).collect()
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|f| f.to_bits()).collect()
+}
+
+#[test]
+fn simd_spmm_byte_identical_to_scalar_for_every_engine() {
+    let _guard = SIMD_LOCK.lock().unwrap();
+    // n and dim sweep tiny shapes, the vector widths, and odd remainders
+    // past the 16- and 8-lane blocks.
+    let dims = [1usize, 2, 3, 4, 5, 7, 8, 9, 15, 16, 17, 31, 33, 64];
+    let ns = [1usize, 2, 3, 4, 17, 64, 193];
+    for &n in &ns {
+        let csr = random_graph(n, 3, 0xC0FFEE ^ n as u64);
+        for &dim in &dims {
+            let x = random_x(n, dim, 42 + (n * 1000 + dim) as u64);
+            // the stock engines at their default thresholds, plus a
+            // GROOT engine with hd_threshold=4 so the hub row actually
+            // takes the HD chunk/reduce path at these sizes
+            let mut engines: Vec<Box<dyn SpmmEngine>> = all_engines(3);
+            engines.push(Box::new(GrootSpmm::with_threshold(3, 4)));
+            for engine in &engines {
+                let mut scalar_f = vec![0.0f32; n * dim];
+                let mut scalar_b = vec![0.0f32; n * dim];
+                simd::force_scalar(true);
+                engine.spmm_mean_into(&csr, &x, dim, &mut scalar_f);
+                engine.spmm_mean_backward_into(&csr, &x, dim, &mut scalar_b);
+                let mut simd_f = vec![0.0f32; n * dim];
+                let mut simd_b = vec![0.0f32; n * dim];
+                simd::force_scalar(false);
+                engine.spmm_mean_into(&csr, &x, dim, &mut simd_f);
+                engine.spmm_mean_backward_into(&csr, &x, dim, &mut simd_b);
+                assert_eq!(
+                    bits(&scalar_f),
+                    bits(&simd_f),
+                    "forward bytes diverged: engine={} n={n} dim={dim} (simd={})",
+                    engine.name(),
+                    simd::active()
+                );
+                assert_eq!(
+                    bits(&scalar_b),
+                    bits(&simd_b),
+                    "backward bytes diverged: engine={} n={n} dim={dim} (simd={})",
+                    engine.name(),
+                    simd::active()
+                );
+            }
+        }
+    }
+    simd::force_scalar(false);
+}
+
+/// The matmul micro-kernel through the public `gnn::matmul_add` entry,
+/// scalar vs dispatched, on ragged (n, k, m) shapes.
+#[test]
+fn simd_matmul_add_byte_identical_to_scalar() {
+    let _guard = SIMD_LOCK.lock().unwrap();
+    for &(n, k, m) in &[(1usize, 1usize, 1usize), (3, 5, 7), (17, 16, 64), (9, 64, 33)] {
+        let a = random_x(n, k, 7 + (n * 100 + m) as u64);
+        let b = random_x(k, m, 11 + k as u64);
+        let mut scalar = random_x(n, m, 13); // nonzero start: exercises +=
+        let mut fast = scalar.clone();
+        simd::force_scalar(true);
+        groot::gnn::matmul_add(&a, &b, &mut scalar, n, k, m);
+        simd::force_scalar(false);
+        groot::gnn::matmul_add(&a, &b, &mut fast, n, k, m);
+        assert_eq!(bits(&scalar), bits(&fast), "matmul n={n} k={k} m={m}");
+    }
+    simd::force_scalar(false);
+}
+
+/// Deterministic 4→16→5 model with well-separated class logits (same
+/// wave-weight family the harness benches use).
+fn parity_model() -> SageModel {
+    let wave = |n: usize, scale: f32| -> Vec<f32> {
+        (0..n).map(|i| ((i as f32 * 0.7).sin()) * scale).collect()
+    };
+    SageModel {
+        layers: vec![
+            SageLayer {
+                din: 4,
+                dout: 16,
+                w_self: wave(4 * 16, 0.3),
+                w_neigh: wave(4 * 16, 0.2),
+                bias: wave(16, 0.1),
+            },
+            SageLayer {
+                din: 16,
+                dout: 5,
+                w_self: wave(16 * 5, 0.3),
+                w_neigh: wave(16 * 5, 0.2),
+                bias: wave(5, 0.1),
+            },
+        ],
+    }
+}
+
+#[test]
+fn int8_never_flips_argmax_across_generator_zoo() {
+    let model = parity_model();
+    let classes = model.layers.last().unwrap().dout;
+    let argmax = |row: &[f32]| {
+        row.iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0
+    };
+    for kind in [DatasetKind::Csa, DatasetKind::Booth, DatasetKind::Wallace] {
+        for bits in [8usize, 16, 32] {
+            let graph = datasets::build(kind, bits).unwrap();
+            let prepared = PreparedGraph::new(&graph);
+            let part = PartitionInput {
+                csr: prepared.csr(),
+                features: prepared.features(),
+                feature_dim: GROOT_FEATURE_DIM,
+            };
+            let f32_backend = NativeBackend::with_precision(model.clone(), 2, Precision::F32);
+            let int8_backend =
+                NativeBackend::with_precision(model.clone(), 2, Precision::Int8);
+            let lf = f32_backend.infer(part).unwrap().logits;
+            let li = int8_backend.infer(part).unwrap().logits;
+            assert_eq!(lf.len(), li.len());
+            let flips = lf
+                .chunks_exact(classes)
+                .zip(li.chunks_exact(classes))
+                .filter(|(rf, ri)| argmax(rf) != argmax(ri))
+                .count();
+            assert_eq!(
+                flips, 0,
+                "{kind:?} {bits}-bit: int8 flipped {flips}/{} argmax rows",
+                lf.len() / classes
+            );
+        }
+    }
+}

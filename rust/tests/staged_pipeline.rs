@@ -103,7 +103,7 @@ fn cached_plans_classify_byte_identically_to_cold_plans() {
         for partitions in [1usize, 3, 8] {
             for seed in [0u64, 7] {
                 for regrow in [false, true] {
-                    let opts = PlanOptions { partitions, regrow, seed };
+                    let opts = PlanOptions { partitions, regrow, seed, ..Default::default() };
                     let (plan, hit) = cache.get_or_build(&prepared, &opts);
                     assert!(!hit, "first build of {opts:?} must be cold");
                     let cold = session.classify_plan(&prepared, &plan, hit).unwrap();
@@ -134,14 +134,14 @@ fn plan_cache_evicts_at_capacity() {
     for partitions in 1..=5usize {
         cache.get_or_build(
             &prepared,
-            &PlanOptions { partitions, regrow: true, seed: 0 },
+            &PlanOptions { partitions, ..Default::default() },
         );
     }
     assert_eq!(cache.len(), 3, "LRU must hold exactly its capacity");
     // oldest two evicted, newest three present
     for (partitions, want_hit) in [(1usize, false), (2, false), (3, true), (4, true), (5, true)] {
         let got = cache
-            .get(prepared.fingerprint(), &PlanOptions { partitions, regrow: true, seed: 0 })
+            .get(prepared.fingerprint(), &PlanOptions { partitions, ..Default::default() })
             .is_some();
         assert_eq!(got, want_hit, "partitions={partitions}");
     }

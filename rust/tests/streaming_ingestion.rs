@@ -39,7 +39,14 @@ fn aggregating_model() -> SageModel {
 fn session(partitions: usize, regrow: bool, seed: u64) -> Session {
     Session::native(
         aggregating_model(),
-        SessionConfig { num_partitions: partitions, regrow, seed, threads: 1, workers: 1 },
+        SessionConfig {
+            num_partitions: partitions,
+            regrow,
+            seed,
+            threads: 1,
+            workers: 1,
+            ..Default::default()
+        },
     )
 }
 
@@ -183,7 +190,7 @@ fn stream_plan_rejects_mismatched_graph() {
         PreparedGraph::from_source(datasets::source(DatasetKind::Csa, 6, 64).unwrap()).unwrap();
     let other =
         PreparedGraph::from_source(datasets::source(DatasetKind::Csa, 7, 64).unwrap()).unwrap();
-    let plan = compact.plan_stream(&PlanOptions { partitions: 2, regrow: true, seed: 0 });
+    let plan = compact.plan_stream(&PlanOptions { partitions: 2, ..Default::default() });
     let s = session(2, true, 0);
     let err = s.classify_stream_plan(&other, &plan, 2).unwrap_err();
     assert!(err.to_string().contains("fingerprint"), "{err:#}");
