@@ -1,0 +1,73 @@
+//! Network serving quickstart — the `groot serve` / `groot client` pair
+//! as a library: bind a [`NetDaemon`] on a Unix socket, connect a
+//! [`GrootClient`], classify the same design twice (cold plan build,
+//! then plan-cache-warm), and read the daemon's observability snapshot.
+//!
+//! The same wire protocol backs `groot serve --listen unix:/path` +
+//! `groot client classify --connect unix:/path`; this example is the
+//! in-process equivalent with no artifacts required (synthetic weights).
+//!
+//! Run: `cargo run --release --example net_quickstart`
+
+use groot::backend::NativeBackend;
+use groot::coordinator::server::{Server, VerifyOptions};
+use groot::coordinator::{Backend, SessionConfig};
+use groot::datasets::{self, DatasetKind};
+use groot::gnn::{SageLayer, SageModel};
+use groot::net::{BindAddr, GrootClient, NetConfig, NetDaemon, Reply};
+
+/// Tiny deterministic 4→8→5 model so the example runs without trained
+/// artifacts (it demonstrates the transport, not the accuracy).
+fn tiny_model() -> SageModel {
+    let wave = |n: usize| -> Vec<f32> {
+        (0..n).map(|i| ((i as f32 * 0.9).sin()) * 0.25).collect()
+    };
+    SageModel {
+        layers: vec![
+            SageLayer { din: 4, dout: 8, w_self: wave(32), w_neigh: wave(32), bias: wave(8) },
+            SageLayer { din: 8, dout: 5, w_self: wave(40), w_neigh: wave(40), bias: wave(5) },
+        ],
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    // 2 serving workers, each with a single-threaded backend.
+    let server = Server::spawn(
+        SessionConfig { workers: 2, threads: 1, ..Default::default() },
+        || -> anyhow::Result<Backend> {
+            Ok(Box::new(NativeBackend::with_threads(tiny_model(), 1)))
+        },
+    );
+    let sock = std::env::temp_dir().join(format!("groot_net_qs_{}.sock", std::process::id()));
+    let daemon = NetDaemon::bind(&BindAddr::Unix(sock.clone()), server, NetConfig::default())?;
+    println!("daemon listening on {}", daemon.bound());
+
+    let mut client = GrootClient::connect(&BindAddr::Unix(sock))?;
+    let circuit = datasets::build(DatasetKind::Csa, 16)?.to_circuit()?;
+    let opts = VerifyOptions::partitions(8);
+
+    for round in ["cold", "warm"] {
+        match client.classify_circuit(&circuit, &opts)? {
+            Reply::Result(res) => println!(
+                "{round}: {} nodes, {} partitions, accuracy {:.4}, plan {}",
+                res.pred.len(),
+                res.stats.num_partitions,
+                res.accuracy,
+                if res.stats.plan_cache_hit { "cache-warm" } else { "built" }
+            ),
+            Reply::Busy => println!("{round}: daemon busy (bounded queue full), try again"),
+        }
+    }
+
+    let stats = client.stats()?;
+    println!(
+        "served {} requests across {} workers; plan cache {} hits / {} misses; p95 {:.2} ms",
+        stats.requests_served,
+        stats.workers,
+        stats.plan_cache_hits,
+        stats.plan_cache_misses,
+        stats.p95_ms
+    );
+    daemon.shutdown();
+    Ok(())
+}

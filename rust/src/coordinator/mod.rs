@@ -21,6 +21,7 @@
 //! single-threaded session path at every concurrency level.
 
 pub mod pipeline;
+pub mod planstore;
 pub mod server;
 
 pub use pipeline::{
@@ -29,6 +30,7 @@ pub use pipeline::{
     ShardedPlanCache, StreamPlan, StreamStats, DEFAULT_PLAN_CACHE_CAPACITY,
     DEFAULT_PLAN_CACHE_SHARDS,
 };
+pub use planstore::PlanStore;
 
 use crate::backend::{InferenceBackend, NativeBackend};
 use crate::features::EdaGraph;

@@ -94,10 +94,13 @@ impl PlanOptions {
 enum Repr<'g> {
     /// Borrowed legacy graph: dense `[f32; 4]` rows + tuple edge list.
     Legacy(&'g EdaGraph),
-    /// Owned compact columnar store from streaming ingestion: packed
+    /// Compact columnar store from streaming ingestion: packed
     /// descriptor bytes + flat CSR edge arrays; feature rows are decoded
-    /// on gather, never held whole-graph.
-    Compact(CircuitGraph),
+    /// on gather, never held whole-graph. `Cow` so the serving workers
+    /// can prepare a queued request's circuit by reference
+    /// ([`PreparedGraph::from_circuit_ref`]) while ingestion hands over
+    /// owned stores ([`PreparedGraph::from_circuit`]).
+    Compact(std::borrow::Cow<'g, CircuitGraph>),
 }
 
 /// Stage 1: a graph made inference-ready, over either representation.
@@ -133,7 +136,21 @@ impl PreparedGraph<'static> {
     /// Wrap an already-ingested compact circuit.
     pub fn from_circuit(circuit: CircuitGraph) -> PreparedGraph<'static> {
         PreparedGraph {
-            repr: Repr::Compact(circuit),
+            repr: Repr::Compact(std::borrow::Cow::Owned(circuit)),
+            fingerprint: OnceLock::new(),
+            csr: OnceLock::new(),
+            dense: OnceLock::new(),
+        }
+    }
+}
+
+impl<'g> PreparedGraph<'g> {
+    /// Wrap a borrowed compact circuit — the serving-worker entry point:
+    /// a queued request owns its `CircuitGraph`, and preparation must
+    /// not clone a 134M-node column store just to hash and plan it.
+    pub fn from_circuit_ref(circuit: &'g CircuitGraph) -> PreparedGraph<'g> {
+        PreparedGraph {
+            repr: Repr::Compact(std::borrow::Cow::Borrowed(circuit)),
             fingerprint: OnceLock::new(),
             csr: OnceLock::new(),
             dense: OnceLock::new(),
@@ -189,11 +206,11 @@ impl<'g> PreparedGraph<'g> {
         }
     }
 
-    /// The compact columnar store, when this prepared graph owns one.
+    /// The compact columnar store, when this prepared graph holds one.
     pub fn circuit(&self) -> Option<&CircuitGraph> {
         match &self.repr {
             Repr::Legacy(_) => None,
-            Repr::Compact(c) => Some(c),
+            Repr::Compact(c) => Some(&**c),
         }
     }
 
@@ -966,6 +983,13 @@ pub struct ShardedPlanCache {
     shards: Vec<std::sync::RwLock<PlanCache>>,
     hits: std::sync::atomic::AtomicU64,
     misses: std::sync::atomic::AtomicU64,
+    /// Optional persistent tier ([`PlanStore`]): an in-memory miss falls
+    /// back to disk before building, and a fresh build is written back —
+    /// the restart path that makes a known design's first request
+    /// plan-free (zero partitioner invocations) on a new process.
+    store: Option<super::planstore::PlanStore>,
+    /// In-memory misses that the persistent tier answered.
+    disk_hits: std::sync::atomic::AtomicU64,
 }
 
 /// Default shard count for the serving cache. Few enough that
@@ -990,7 +1014,32 @@ impl ShardedPlanCache {
                 .collect(),
             hits: std::sync::atomic::AtomicU64::new(0),
             misses: std::sync::atomic::AtomicU64::new(0),
+            store: None,
+            disk_hits: std::sync::atomic::AtomicU64::new(0),
         }
+    }
+
+    /// [`Self::with_shards`] plus a persistent [`PlanStore`] tier:
+    /// in-memory miss → disk load (validated, quarantine-on-corruption)
+    /// → build + write-back.
+    pub fn with_store(
+        shards: usize,
+        capacity: usize,
+        store: super::planstore::PlanStore,
+    ) -> ShardedPlanCache {
+        let mut cache = Self::with_shards(shards, capacity);
+        cache.store = Some(store);
+        cache
+    }
+
+    /// The persistent tier, when one is attached.
+    pub fn store(&self) -> Option<&super::planstore::PlanStore> {
+        self.store.as_ref()
+    }
+
+    /// In-memory misses answered by the persistent tier.
+    pub fn disk_hits(&self) -> u64 {
+        self.disk_hits.load(std::sync::atomic::Ordering::SeqCst)
     }
 
     fn shard(&self, fingerprint: u64, opts: &PlanOptions) -> &std::sync::RwLock<PlanCache> {
@@ -1039,8 +1088,25 @@ impl ShardedPlanCache {
             return (plan, true);
         }
         self.misses.fetch_add(1, Ordering::SeqCst);
+        // Persistent tier: a validated disk load skips partitioning,
+        // re-growth, and gathering exactly like a memory hit (the
+        // reported `plan_cache_hit` says so), still under the shard's
+        // write lock so concurrent misses load once.
+        if let Some(store) = &self.store {
+            if let Some(plan) = store.load(fp, opts) {
+                let plan = Arc::new(plan);
+                guard.insert(plan.clone());
+                self.disk_hits.fetch_add(1, Ordering::SeqCst);
+                return (plan, true);
+            }
+        }
         let plan = Arc::new(prepared.plan(opts));
         guard.insert(plan.clone());
+        if let Some(store) = &self.store {
+            // Best-effort write-back: a full disk must not fail the
+            // request the plan was just built for.
+            let _ = store.save(&plan);
+        }
         (plan, false)
     }
 }

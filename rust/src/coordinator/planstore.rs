@@ -1,0 +1,563 @@
+//! Persistent plan store — the disk tier under [`super::ShardedPlanCache`].
+//!
+//! A [`crate::coordinator::PartitionPlan`] is fully owned (node lists,
+//! local CSRs, gathered feature buffers), which makes it serializable as
+//! well as cacheable. The store writes one file per `(graph fingerprint,
+//! PlanOptions)` key under a `--plan-dir`, so a RESTARTED server answers
+//! its first request for a known design from disk with **zero**
+//! partitioner invocations (pinned by `rust/tests/net_serving.rs`
+//! against [`crate::partition::kway_invocations`]).
+//!
+//! Trust model — a store file is never taken at its word:
+//! * **format-versioned**: magic `"GPLN"` + version; an unknown version
+//!   is quarantined, not "best-effort parsed".
+//! * **checksummed**: FNV-1a over the entire payload; bit rot and
+//!   truncation fail closed.
+//! * **key-checked**: the payload re-states fingerprint + options; a
+//!   renamed or mis-keyed file cannot impersonate another design.
+//! * **structurally validated**: node ids, CSR shape, feature-buffer
+//!   arithmetic, and core-cover counts are re-checked on load — exactly
+//!   the invariants `execute_plan` would otherwise trip over.
+//!
+//! Any failure **quarantines** the file (rename to `*.quarantined-N`) and
+//! reports a miss; the caller rebuilds and writes back a fresh copy.
+//! Writes are write-temp-then-rename, so a crash mid-write leaves a
+//! stale temp file, never a torn store entry.
+
+use super::pipeline::{PlanStats, PlannedPartition};
+use super::{PartitionPlan, PlanOptions};
+use crate::features::GROOT_FEATURE_DIM;
+use crate::graph::Csr;
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Store file magic + format version. Bump the version on ANY layout
+/// change: old files then quarantine and rebuild instead of misparsing.
+pub const STORE_MAGIC: [u8; 4] = *b"GPLN";
+pub const STORE_VERSION: u16 = 1;
+
+/// Fixed-size file header: magic, version, reserved pad, payload
+/// checksum, payload length.
+const HEADER_LEN: usize = 4 + 2 + 2 + 8 + 8;
+
+/// Fingerprint+options-keyed persistent plan files under one directory.
+/// `Sync` (path + atomic counters only), shared by all serving workers
+/// through the [`super::ShardedPlanCache`] that owns it.
+pub struct PlanStore {
+    dir: PathBuf,
+    loads: AtomicU64,
+    writes: AtomicU64,
+    quarantined: AtomicU64,
+}
+
+impl PlanStore {
+    /// Open (creating if needed) a plan directory.
+    pub fn open(dir: impl Into<PathBuf>) -> Result<PlanStore> {
+        let dir = dir.into();
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("create plan dir {}", dir.display()))?;
+        Ok(PlanStore {
+            dir,
+            loads: AtomicU64::new(0),
+            writes: AtomicU64::new(0),
+            quarantined: AtomicU64::new(0),
+        })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Successful (fully validated) disk loads.
+    pub fn loads(&self) -> u64 {
+        self.loads.load(Ordering::SeqCst)
+    }
+
+    /// Plan files written.
+    pub fn writes(&self) -> u64 {
+        self.writes.load(Ordering::SeqCst)
+    }
+
+    /// Files rejected by validation and renamed aside.
+    pub fn quarantined(&self) -> u64 {
+        self.quarantined.load(Ordering::SeqCst)
+    }
+
+    /// The store path of a key. Options are folded into the file name by
+    /// hash (the payload re-states them exactly, so a hash collision is
+    /// caught at load time, not trusted).
+    pub fn path_for(&self, fingerprint: u64, opts: &PlanOptions) -> PathBuf {
+        self.dir.join(format!(
+            "plan-{fingerprint:016x}-{:016x}.v{STORE_VERSION}.gpln",
+            options_hash(opts)
+        ))
+    }
+
+    /// Load and validate the plan for a key. `None` means "not stored"
+    /// OR "stored but untrustworthy" — the latter also renames the file
+    /// to `*.quarantined-N` so the rebuilt plan's write-back replaces it
+    /// and the bad bytes stay on disk for postmortems.
+    pub fn load(&self, fingerprint: u64, opts: &PlanOptions) -> Option<PartitionPlan> {
+        let path = self.path_for(fingerprint, opts);
+        let bytes = match std::fs::read(&path) {
+            Ok(b) => b,
+            Err(_) => return None,
+        };
+        match decode_plan(&bytes, fingerprint, opts) {
+            Ok(plan) => {
+                self.loads.fetch_add(1, Ordering::SeqCst);
+                Some(plan)
+            }
+            Err(_) => {
+                let n = self.quarantined.fetch_add(1, Ordering::SeqCst);
+                let aside = path.with_extension(format!("quarantined-{n}"));
+                let _ = std::fs::rename(&path, aside);
+                None
+            }
+        }
+    }
+
+    /// Serialize a plan to its key's file: write `*.tmp-<pid>`, then
+    /// rename into place (atomic on POSIX), so concurrent writers and
+    /// crashes can only ever race whole files.
+    pub fn save(&self, plan: &PartitionPlan) -> Result<()> {
+        let bytes = encode_plan(plan);
+        let path = self.path_for(plan.fingerprint, &plan.options);
+        let tmp = path.with_extension(format!("tmp-{}", std::process::id()));
+        std::fs::write(&tmp, &bytes)
+            .with_context(|| format!("write plan temp {}", tmp.display()))?;
+        std::fs::rename(&tmp, &path)
+            .with_context(|| format!("rename plan into {}", path.display()))?;
+        self.writes.fetch_add(1, Ordering::SeqCst);
+        Ok(())
+    }
+}
+
+/// FNV-1a over the options fields — the file-name key component.
+fn options_hash(opts: &PlanOptions) -> u64 {
+    let mut h = Fnv::new();
+    h.eat(opts.partitions as u64);
+    h.eat(opts.regrow as u64);
+    h.eat(opts.seed);
+    h.eat(opts.hd_threshold as u64);
+    h.finish()
+}
+
+/// Word-wise FNV-1a, shared by the file-name key and the payload
+/// checksum (byte stream padded into words).
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Fnv {
+        Fnv(0xcbf2_9ce4_8422_2325)
+    }
+
+    fn eat(&mut self, word: u64) {
+        self.0 ^= word;
+        self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+
+    fn eat_bytes(&mut self, bytes: &[u8]) {
+        for chunk in bytes.chunks(8) {
+            let mut w = [0u8; 8];
+            w[..chunk.len()].copy_from_slice(chunk);
+            self.eat(u64::from_le_bytes(w));
+        }
+        self.eat(bytes.len() as u64);
+    }
+
+    fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+fn checksum(payload: &[u8]) -> u64 {
+    let mut h = Fnv::new();
+    h.eat_bytes(payload);
+    h.finish()
+}
+
+// ---- encoding -------------------------------------------------------------
+
+fn put_u64(b: &mut Vec<u8>, v: u64) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32_slice(b: &mut Vec<u8>, vs: &[u32]) {
+    put_u64(b, vs.len() as u64);
+    for &v in vs {
+        b.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Serialize: header (magic | version | reserved | checksum | payload
+/// length) + payload. Payload layout (all little-endian u64 unless
+/// noted):
+///
+/// ```text
+/// fingerprint | num_nodes |
+/// partitions | regrow u8 | seed | hd_threshold |
+/// partition_ns | regrowth_ns | gather_ns |
+/// core_nodes | boundary_nodes | internal_edges | crossing_edges | max_part |
+/// hd_rows | ld_rows |
+/// num_parts | per part:
+///   part_id | num_core |
+///   nodes     (count | u32 × count)
+///   row_ptr   (count | u64 × count)
+///   col_idx   (count | u32 × count)
+///   features  (count | f32-bits u32 × count)
+/// ```
+fn encode_plan(plan: &PartitionPlan) -> Vec<u8> {
+    let mut p = Vec::new();
+    put_u64(&mut p, plan.fingerprint);
+    put_u64(&mut p, plan.num_nodes as u64);
+    put_u64(&mut p, plan.options.partitions as u64);
+    p.push(plan.options.regrow as u8);
+    put_u64(&mut p, plan.options.seed);
+    put_u64(&mut p, plan.options.hd_threshold as u64);
+    put_u64(&mut p, plan.stats.partition_time.as_nanos() as u64);
+    put_u64(&mut p, plan.stats.regrowth_time.as_nanos() as u64);
+    put_u64(&mut p, plan.stats.gather_time.as_nanos() as u64);
+    put_u64(&mut p, plan.stats.regrowth.total_core_nodes as u64);
+    put_u64(&mut p, plan.stats.regrowth.total_boundary_nodes as u64);
+    put_u64(&mut p, plan.stats.regrowth.total_internal_edges as u64);
+    put_u64(&mut p, plan.stats.regrowth.total_crossing_edges as u64);
+    put_u64(&mut p, plan.stats.regrowth.max_partition_nodes as u64);
+    put_u64(&mut p, plan.stats.hd_rows as u64);
+    put_u64(&mut p, plan.stats.ld_rows as u64);
+    put_u64(&mut p, plan.parts.len() as u64);
+    for part in &plan.parts {
+        put_u64(&mut p, part.part_id as u64);
+        put_u64(&mut p, part.num_core as u64);
+        put_u32_slice(&mut p, &part.nodes);
+        put_u64(&mut p, part.csr.row_ptr.len() as u64);
+        for &r in &part.csr.row_ptr {
+            put_u64(&mut p, r as u64);
+        }
+        put_u32_slice(&mut p, &part.csr.col_idx);
+        put_u64(&mut p, part.features.len() as u64);
+        for &f in &part.features {
+            p.extend_from_slice(&f.to_bits().to_le_bytes());
+        }
+    }
+
+    let mut out = Vec::with_capacity(HEADER_LEN + p.len());
+    out.extend_from_slice(&STORE_MAGIC);
+    out.extend_from_slice(&STORE_VERSION.to_le_bytes());
+    out.extend_from_slice(&[0u8; 2]); // reserved
+    put_u64(&mut out, checksum(&p));
+    put_u64(&mut out, p.len() as u64);
+    out.extend_from_slice(&p);
+    out
+}
+
+// ---- decoding -------------------------------------------------------------
+
+/// Bounds-checked little-endian reader over the payload.
+struct Rd<'a> {
+    buf: &'a [u8],
+    at: usize,
+}
+
+impl<'a> Rd<'a> {
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8]> {
+        anyhow::ensure!(
+            self.buf.len() - self.at >= n,
+            "plan store: truncated {what} (need {n} bytes at offset {}, have {})",
+            self.at,
+            self.buf.len() - self.at
+        );
+        let out = &self.buf[self.at..self.at + n];
+        self.at += n;
+        Ok(out)
+    }
+
+    fn u8(&mut self, what: &str) -> Result<u8> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    fn u64(&mut self, what: &str) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8, what)?.try_into().unwrap()))
+    }
+
+    /// Length-prefixed count, sanity-bounded against the remaining
+    /// buffer so a corrupt count cannot drive a huge allocation.
+    fn count(&mut self, elem_bytes: usize, what: &str) -> Result<usize> {
+        let n = self.u64(what)?;
+        anyhow::ensure!(
+            (n as usize).checked_mul(elem_bytes).is_some_and(|b| b <= self.buf.len() - self.at),
+            "plan store: {what} count {n} exceeds remaining payload"
+        );
+        Ok(n as usize)
+    }
+
+    fn u32_vec(&mut self, what: &str) -> Result<Vec<u32>> {
+        let n = self.count(4, what)?;
+        Ok(self
+            .take(n * 4, what)?
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+}
+
+fn decode_plan(bytes: &[u8], fingerprint: u64, opts: &PlanOptions) -> Result<PartitionPlan> {
+    anyhow::ensure!(bytes.len() >= HEADER_LEN, "plan store: short header");
+    anyhow::ensure!(bytes[..4] == STORE_MAGIC, "plan store: bad magic");
+    let version = u16::from_le_bytes(bytes[4..6].try_into().unwrap());
+    anyhow::ensure!(
+        version == STORE_VERSION,
+        "plan store: version {version} (want {STORE_VERSION})"
+    );
+    let want_sum = u64::from_le_bytes(bytes[8..16].try_into().unwrap());
+    let payload_len = u64::from_le_bytes(bytes[16..24].try_into().unwrap());
+    let payload = &bytes[HEADER_LEN..];
+    anyhow::ensure!(
+        payload.len() as u64 == payload_len,
+        "plan store: payload length mismatch ({} on disk, header says {payload_len})",
+        payload.len()
+    );
+    anyhow::ensure!(checksum(payload) == want_sum, "plan store: checksum mismatch");
+
+    let mut r = Rd { buf: payload, at: 0 };
+    let stored_fp = r.u64("fingerprint")?;
+    let num_nodes = r.u64("num_nodes")? as usize;
+    let options = PlanOptions {
+        partitions: r.u64("partitions")? as usize,
+        regrow: r.u8("regrow")? != 0,
+        seed: r.u64("seed")?,
+        hd_threshold: r.u64("hd_threshold")? as usize,
+    };
+    // Key check: the file content must name the key it was looked up
+    // under. (The file name already encodes both, but names are cheap to
+    // forge or mangle; the payload is what the checksum covers.)
+    anyhow::ensure!(
+        stored_fp == fingerprint && &options == opts,
+        "plan store: stored key (fp {stored_fp:016x}, {options:?}) \
+         does not match requested (fp {fingerprint:016x}, {opts:?})"
+    );
+    let stats = PlanStats {
+        partition_time: Duration::from_nanos(r.u64("partition_ns")?),
+        regrowth_time: Duration::from_nanos(r.u64("regrowth_ns")?),
+        gather_time: Duration::from_nanos(r.u64("gather_ns")?),
+        regrowth: crate::regrowth::RegrowthStats {
+            total_core_nodes: r.u64("core_nodes")? as usize,
+            total_boundary_nodes: r.u64("boundary_nodes")? as usize,
+            total_internal_edges: r.u64("internal_edges")? as usize,
+            total_crossing_edges: r.u64("crossing_edges")? as usize,
+            max_partition_nodes: r.u64("max_part")? as usize,
+        },
+        hd_rows: r.u64("hd_rows")? as usize,
+        ld_rows: r.u64("ld_rows")? as usize,
+    };
+
+    let num_parts = r.count(16, "partition")?;
+    let mut parts = Vec::with_capacity(num_parts);
+    let mut core_total = 0usize;
+    for i in 0..num_parts {
+        let part_id = r.u64("part_id")? as usize;
+        let num_core = r.u64("num_core")? as usize;
+        let nodes = r.u32_vec("nodes")?;
+        let row_ptr_len = r.count(8, "row_ptr")?;
+        let row_ptr: Vec<usize> = r
+            .take(row_ptr_len * 8, "row_ptr")?
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().unwrap()) as usize)
+            .collect();
+        let col_idx = r.u32_vec("col_idx")?;
+        let feat_len = r.count(4, "features")?;
+        let features: Vec<f32> = r
+            .take(feat_len * 4, "features")?
+            .chunks_exact(4)
+            .map(|c| f32::from_bits(u32::from_le_bytes(c.try_into().unwrap())))
+            .collect();
+
+        // Structural validation — the execute_plan invariants, checked
+        // here so a tampered file errors at load, not mid-inference.
+        anyhow::ensure!(num_core <= nodes.len(), "partition {i}: core count overruns nodes");
+        anyhow::ensure!(
+            nodes.iter().all(|&u| (u as usize) < num_nodes),
+            "partition {i}: node id out of range"
+        );
+        anyhow::ensure!(
+            row_ptr.len() == nodes.len() + 1
+                && row_ptr.first() == Some(&0)
+                && row_ptr.last() == Some(&col_idx.len())
+                && row_ptr.windows(2).all(|w| w[0] <= w[1]),
+            "partition {i}: malformed local CSR row pointers"
+        );
+        anyhow::ensure!(
+            col_idx.iter().all(|&v| (v as usize) < nodes.len()),
+            "partition {i}: local CSR column out of range"
+        );
+        anyhow::ensure!(
+            features.len() == nodes.len() * GROOT_FEATURE_DIM,
+            "partition {i}: feature buffer is {} floats for {} nodes",
+            features.len(),
+            nodes.len()
+        );
+        core_total += num_core;
+        parts.push(PlannedPartition {
+            part_id,
+            nodes,
+            num_core,
+            csr: Csr { row_ptr, col_idx },
+            features,
+        });
+    }
+    anyhow::ensure!(r.at == payload.len(), "plan store: trailing bytes after last partition");
+    anyhow::ensure!(
+        core_total == num_nodes,
+        "plan store: core cover {core_total} != {num_nodes} nodes"
+    );
+    Ok(PartitionPlan { fingerprint: stored_fp, options, num_nodes, parts, stats })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::PreparedGraph;
+    use crate::features::EdaGraph;
+
+    fn temp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("groot-planstore-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn small_plan() -> PartitionPlan {
+        let eg = EdaGraph::from_aig(&crate::aig::mult::csa_multiplier(4));
+        let p = PreparedGraph::new(&eg);
+        p.plan(&PlanOptions { partitions: 3, seed: 7, ..PlanOptions::default() })
+    }
+
+    fn assert_plans_equal(a: &PartitionPlan, b: &PartitionPlan) {
+        assert_eq!(a.fingerprint, b.fingerprint);
+        assert_eq!(a.options, b.options);
+        assert_eq!(a.num_nodes, b.num_nodes);
+        assert_eq!(a.parts.len(), b.parts.len());
+        for (pa, pb) in a.parts.iter().zip(&b.parts) {
+            assert_eq!(pa.part_id, pb.part_id);
+            assert_eq!(pa.num_core, pb.num_core);
+            assert_eq!(pa.nodes, pb.nodes);
+            assert_eq!(pa.csr, pb.csr);
+            assert_eq!(pa.features, pb.features);
+        }
+    }
+
+    #[test]
+    fn save_load_roundtrip_is_lossless() {
+        let dir = temp_dir("roundtrip");
+        let store = PlanStore::open(&dir).unwrap();
+        let plan = small_plan();
+        store.save(&plan).unwrap();
+        let loaded = store
+            .load(plan.fingerprint, &plan.options)
+            .expect("saved plan must load");
+        assert_plans_equal(&plan, &loaded);
+        assert_eq!((store.writes(), store.loads(), store.quarantined()), (1, 1, 0));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_and_mismatched_keys_miss() {
+        let dir = temp_dir("misses");
+        let store = PlanStore::open(&dir).unwrap();
+        let plan = small_plan();
+        assert!(store.load(plan.fingerprint, &plan.options).is_none());
+        store.save(&plan).unwrap();
+        // other options: different file, clean miss
+        let other = PlanOptions { partitions: 5, ..plan.options.clone() };
+        assert!(store.load(plan.fingerprint, &other).is_none());
+        // other fingerprint: different file, clean miss
+        assert!(store.load(plan.fingerprint ^ 1, &plan.options).is_none());
+        assert_eq!(store.quarantined(), 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_truncated_and_mismatched_files_quarantine() {
+        let dir = temp_dir("quarantine");
+        let store = PlanStore::open(&dir).unwrap();
+        let plan = small_plan();
+        let path = store.path_for(plan.fingerprint, &plan.options);
+
+        // bit flip in the payload body → checksum rejects
+        store.save(&plan).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x40;
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(store.load(plan.fingerprint, &plan.options).is_none());
+        assert!(!path.exists(), "corrupt file must be renamed aside");
+        assert_eq!(store.quarantined(), 1);
+
+        // truncation → length/checksum rejects
+        store.save(&plan).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 9]).unwrap();
+        assert!(store.load(plan.fingerprint, &plan.options).is_none());
+        assert_eq!(store.quarantined(), 2);
+
+        // version mismatch → rejected before any parsing
+        store.save(&plan).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[4] = 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(store.load(plan.fingerprint, &plan.options).is_none());
+        assert_eq!(store.quarantined(), 3);
+
+        // a file stored under the WRONG key (copied/renamed) is caught by
+        // the payload key check even though name + checksum pass
+        store.save(&plan).unwrap();
+        let other = PlanOptions { seed: 99, ..plan.options.clone() };
+        std::fs::copy(&path, store.path_for(plan.fingerprint, &other)).unwrap();
+        assert!(store.load(plan.fingerprint, &other).is_none());
+        assert_eq!(store.quarantined(), 4);
+
+        // after all that, a fresh save works and loads
+        store.save(&plan).unwrap();
+        let loaded = store.load(plan.fingerprint, &plan.options).unwrap();
+        assert_plans_equal(&plan, &loaded);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn sharded_cache_falls_back_to_store_and_writes_back() {
+        use crate::coordinator::ShardedPlanCache;
+        let dir = temp_dir("cache-tier");
+        let eg = EdaGraph::from_aig(&crate::aig::mult::csa_multiplier(4));
+        let opts = PlanOptions { partitions: 3, ..PlanOptions::default() };
+
+        // first process: build + write-back
+        let built = {
+            let cache =
+                ShardedPlanCache::with_store(2, 8, PlanStore::open(&dir).unwrap());
+            let p = PreparedGraph::new(&eg);
+            let (plan, hit) = cache.get_or_build(&p, &opts);
+            assert!(!hit);
+            assert_eq!(cache.store().unwrap().writes(), 1);
+            assert_eq!(cache.disk_hits(), 0);
+            (*plan).clone()
+        };
+
+        // "restarted" process: cold memory, warm disk → reported as hit
+        // (The zero-partitioner-invocation contract is pinned by the
+        // serialized integration tests in rust/tests/net_serving.rs —
+        // the global counter is racy under this binary's parallel tests.)
+        let cache = ShardedPlanCache::with_store(2, 8, PlanStore::open(&dir).unwrap());
+        let p = PreparedGraph::new(&eg);
+        let (plan, hit) = cache.get_or_build(&p, &opts);
+        assert!(hit, "disk tier must report a cache hit");
+        assert_eq!(cache.disk_hits(), 1);
+        assert_plans_equal(&built, &plan);
+        // and the NEXT lookup is a pure memory hit
+        let (_, hit) = cache.get_or_build(&p, &opts);
+        assert!(hit);
+        assert_eq!(cache.disk_hits(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -41,8 +41,10 @@ use super::{
     ShardedPlanCache,
 };
 use crate::features::EdaGraph;
+use crate::graph::CircuitGraph;
 use anyhow::Result;
 use std::collections::VecDeque;
+use std::sync::atomic::AtomicU64;
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
@@ -72,9 +74,57 @@ impl VerifyOptions {
     }
 }
 
+/// Either circuit representation, submitted as-is: legacy dense
+/// [`EdaGraph`]s from in-process callers, compact columnar
+/// [`CircuitGraph`]s from streaming ingestion and the network daemon
+/// (whose wire payloads decode straight into the columnar form). The
+/// worker prepares both through the same staged pipeline, and
+/// fingerprints are representation-independent, so either form of one
+/// circuit shares one plan-cache entry.
+pub enum RequestGraph {
+    Eda(EdaGraph),
+    Circuit(CircuitGraph),
+}
+
+impl RequestGraph {
+    pub fn num_nodes(&self) -> usize {
+        match self {
+            RequestGraph::Eda(g) => g.num_nodes,
+            RequestGraph::Circuit(c) => c.num_nodes(),
+        }
+    }
+
+    pub fn name(&self) -> &str {
+        match self {
+            RequestGraph::Eda(g) => &g.name,
+            RequestGraph::Circuit(c) => &c.name,
+        }
+    }
+
+    /// Borrowing preparation — no column store is cloned to plan it.
+    fn prepare(&self) -> PreparedGraph<'_> {
+        match self {
+            RequestGraph::Eda(g) => PreparedGraph::new(g),
+            RequestGraph::Circuit(c) => PreparedGraph::from_circuit_ref(c),
+        }
+    }
+}
+
+impl From<EdaGraph> for RequestGraph {
+    fn from(g: EdaGraph) -> RequestGraph {
+        RequestGraph::Eda(g)
+    }
+}
+
+impl From<CircuitGraph> for RequestGraph {
+    fn from(c: CircuitGraph) -> RequestGraph {
+        RequestGraph::Circuit(c)
+    }
+}
+
 /// A verification request: graph + per-request plan options.
 pub struct Request {
-    pub graph: EdaGraph,
+    pub graph: RequestGraph,
     pub options: VerifyOptions,
     pub reply: mpsc::Sender<Result<ClassifyResult>>,
 }
@@ -84,8 +134,9 @@ pub enum TrySubmit {
     /// Queued; await the result on the receiver.
     Accepted(mpsc::Receiver<Result<ClassifyResult>>),
     /// The bounded queue is full — back-pressure. The request is handed
-    /// back untouched so the caller can retry, redirect, or shed it.
-    Busy { graph: EdaGraph, options: VerifyOptions },
+    /// back untouched so the caller can retry, redirect, or shed it
+    /// (the network daemon maps this to a BUSY wire reply).
+    Busy { graph: RequestGraph, options: VerifyOptions },
 }
 
 /// Builds one backend per worker, ON that worker's thread (weights load,
@@ -173,6 +224,12 @@ impl SubmitQueue {
         }
     }
 
+    /// Requests currently queued (waiting for a worker) — the STATS
+    /// observability number; instantaneous, not a synchronization point.
+    fn depth(&self) -> usize {
+        self.inner.lock().unwrap().q.len()
+    }
+
     /// Stop accepting; wake everyone (workers drain, producers error).
     fn close(&self) {
         self.inner.lock().unwrap().open = false;
@@ -230,7 +287,7 @@ impl ServerHandle {
     /// Submit and wait (convenience for examples/tests).
     pub fn verify_blocking(
         &self,
-        graph: EdaGraph,
+        graph: impl Into<RequestGraph>,
         options: VerifyOptions,
     ) -> Result<ClassifyResult> {
         let rx = self.submit(graph, options)?;
@@ -242,21 +299,25 @@ impl ServerHandle {
     /// [`Self::try_submit`] to shed load instead.
     pub fn submit(
         &self,
-        graph: EdaGraph,
+        graph: impl Into<RequestGraph>,
         options: VerifyOptions,
     ) -> Result<mpsc::Receiver<Result<ClassifyResult>>> {
         let (reply, rx) = mpsc::channel();
         self.queue
-            .push_blocking(Box::new(Request { graph, options, reply }))
+            .push_blocking(Box::new(Request { graph: graph.into(), options, reply }))
             .map_err(|_| anyhow::anyhow!("server stopped"))?;
         Ok(rx)
     }
 
     /// Non-blocking submit: [`TrySubmit::Busy`] (request handed back)
     /// when the bounded queue is full, `Err` when the server stopped.
-    pub fn try_submit(&self, graph: EdaGraph, options: VerifyOptions) -> Result<TrySubmit> {
+    pub fn try_submit(
+        &self,
+        graph: impl Into<RequestGraph>,
+        options: VerifyOptions,
+    ) -> Result<TrySubmit> {
         let (reply, rx) = mpsc::channel();
-        match self.queue.try_push(Box::new(Request { graph, options, reply })) {
+        match self.queue.try_push(Box::new(Request { graph: graph.into(), options, reply })) {
             Ok(None) => Ok(TrySubmit::Accepted(rx)),
             Ok(Some(req)) => {
                 let req = *req;
@@ -265,12 +326,37 @@ impl ServerHandle {
             Err(_) => Err(anyhow::anyhow!("server stopped")),
         }
     }
+
+    /// Requests currently queued (instantaneous).
+    pub fn queue_depth(&self) -> usize {
+        self.queue.depth()
+    }
+}
+
+/// A consistent observability snapshot of a running server — what the
+/// network daemon's STATS reply is built from.
+#[derive(Clone, Debug, Default)]
+pub struct ServerStats {
+    /// Requests queued but not yet claimed by a worker.
+    pub queue_depth: usize,
+    /// Worker threads spawned.
+    pub workers: usize,
+    /// Requests answered by each worker (index = spawn order). A healthy
+    /// fleet spreads load; a worker that failed backend init stays at 0.
+    pub per_worker_requests: Vec<u64>,
+    pub plan_cache_hits: u64,
+    pub plan_cache_misses: u64,
+    /// In-memory misses answered by the persistent plan store.
+    pub plan_disk_hits: u64,
+    pub plan_store_writes: u64,
+    pub plan_store_quarantined: u64,
 }
 
 /// The running server; closes the queue and joins every worker on drop.
 pub struct Server {
     handle: ServerHandle,
     cache: Arc<ShardedPlanCache>,
+    worker_counts: Arc<Vec<AtomicU64>>,
     workers: Vec<JoinHandle<()>>,
 }
 
@@ -318,29 +404,52 @@ impl Server {
     where
         F: Fn() -> Result<Backend> + Send + Sync + 'static,
     {
+        Self::spawn_on_cache(
+            config,
+            Arc::new(ShardedPlanCache::new(plan_cache_capacity.max(1))),
+            queue_capacity,
+            make_backend,
+        )
+    }
+
+    /// Spawn against a caller-built plan cache — the entry point for a
+    /// cache with a persistent [`super::PlanStore`] tier attached
+    /// ([`ShardedPlanCache::with_store`]), which is how `groot serve
+    /// --plan-dir` gets its zero-cold-start restarts.
+    pub fn spawn_on_cache<F>(
+        config: SessionConfig,
+        cache: Arc<ShardedPlanCache>,
+        queue_capacity: usize,
+        make_backend: F,
+    ) -> Server
+    where
+        F: Fn() -> Result<Backend> + Send + Sync + 'static,
+    {
         let queue = Arc::new(SubmitQueue::new(queue_capacity));
-        let cache = Arc::new(ShardedPlanCache::new(plan_cache_capacity.max(1)));
         let make_backend: Arc<BackendFactory> = Arc::new(make_backend);
         let worker_count = config.workers.max(1);
         let live = Arc::new(std::sync::atomic::AtomicUsize::new(worker_count));
+        let worker_counts: Arc<Vec<AtomicU64>> =
+            Arc::new((0..worker_count).map(|_| AtomicU64::new(0)).collect());
         let workers = (0..worker_count)
             .map(|i| {
                 let queue = Arc::clone(&queue);
                 let cache = Arc::clone(&cache);
                 let make_backend = Arc::clone(&make_backend);
                 let live = Arc::clone(&live);
+                let counts = Arc::clone(&worker_counts);
                 let config = config.clone();
                 std::thread::Builder::new()
                     .name(format!("groot-serve-{i}"))
                     .spawn(move || {
                         let guard = WorkerDeathGuard { queue: &*queue, live: &*live };
-                        worker_loop(&queue, &cache, &config, &*make_backend, &live);
+                        worker_loop(&queue, &cache, &config, &*make_backend, &live, &counts[i]);
                         std::mem::forget(guard); // normal exit: not a death
                     })
                     .expect("spawn serving worker")
             })
             .collect();
-        Server { handle: ServerHandle { queue }, cache, workers }
+        Server { handle: ServerHandle { queue }, cache, worker_counts, workers }
     }
 
     pub fn handle(&self) -> ServerHandle {
@@ -352,6 +461,28 @@ impl Server {
     /// distinct (circuit, options) keys ever planned.
     pub fn cache_stats(&self) -> (u64, u64) {
         (self.cache.hits(), self.cache.misses())
+    }
+
+    /// Observability snapshot (queue depth, per-worker request counts,
+    /// plan-cache and plan-store counters). Each number is individually
+    /// atomic; the snapshot as a whole is not a barrier.
+    pub fn stats(&self) -> ServerStats {
+        use std::sync::atomic::Ordering;
+        let store = self.cache.store();
+        ServerStats {
+            queue_depth: self.handle.queue.depth(),
+            workers: self.workers.len(),
+            per_worker_requests: self
+                .worker_counts
+                .iter()
+                .map(|c| c.load(Ordering::SeqCst))
+                .collect(),
+            plan_cache_hits: self.cache.hits(),
+            plan_cache_misses: self.cache.misses(),
+            plan_disk_hits: self.cache.disk_hits(),
+            plan_store_writes: store.map_or(0, |s| s.writes()),
+            plan_store_quarantined: store.map_or(0, |s| s.quarantined()),
+        }
     }
 
     /// Explicit deterministic shutdown: requests already queued are
@@ -384,6 +515,7 @@ fn worker_loop(
     config: &SessionConfig,
     make_backend: &BackendFactory,
     live: &std::sync::atomic::AtomicUsize,
+    served: &AtomicU64,
 ) {
     use std::sync::atomic::Ordering;
     let backend = match make_backend() {
@@ -410,9 +542,10 @@ fn worker_loop(
         let opts = req.options.resolve(&session.config);
         // Preparation is cheap (content hash); the CSR and feature
         // matrix only materialize on a cache miss, inside plan().
-        let prepared = PreparedGraph::new(&req.graph);
+        let prepared = req.graph.prepare();
         let (plan, hit) = cache.get_or_build(&prepared, &opts);
         let out = session.classify_plan(&prepared, &plan, hit);
+        served.fetch_add(1, Ordering::SeqCst);
         let _ = req.reply.send(out);
     }
 }

@@ -35,6 +35,10 @@ pub const KIND_PO: u8 = 2;
 const INV_L: u8 = 1 << 2;
 const INV_R: u8 = 1 << 3;
 
+/// Magic + format version of [`CircuitGraph::to_bytes`].
+pub const BYTES_MAGIC: [u8; 4] = *b"GRCG";
+pub const BYTES_VERSION: u16 = 1;
+
 /// Pack (kind, left/right fanin polarity) into one descriptor byte.
 /// PO nodes store their driver polarity in BOTH bits, mirroring the
 /// `[0, 1, inv, inv]` feature row of the legacy encoding.
@@ -215,6 +219,115 @@ impl CircuitGraph {
             + self.edge_src.len() * std::mem::size_of::<u32>()
     }
 
+    /// Canonical byte encoding of the columnar store — the compact wire
+    /// payload of the network protocol (`net::wire`). Layout (all
+    /// little-endian):
+    ///
+    /// ```text
+    /// magic "GRCG" | version u16 | name_len u16 | name utf-8 |
+    /// num_nodes u64 | num_aig_nodes u64 | num_edges u64 |
+    /// desc  u8 × n | labels u8 × n | edge_ptr u32 × (n+1) | edge_src u32 × m
+    /// ```
+    ///
+    /// Names longer than `u16::MAX` bytes are truncated (the name is
+    /// display-only; fingerprints hash content, not names).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let n = self.num_nodes();
+        let m = self.num_edges();
+        let name_bytes = self.name.as_bytes();
+        let mut name_len = name_bytes.len().min(u16::MAX as usize);
+        while !self.name.is_char_boundary(name_len) {
+            name_len -= 1;
+        }
+        let mut b = Vec::with_capacity(8 + name_len + 24 + 2 * n + (n + 1) * 4 + m * 4);
+        b.extend_from_slice(&BYTES_MAGIC);
+        b.extend_from_slice(&BYTES_VERSION.to_le_bytes());
+        b.extend_from_slice(&(name_len as u16).to_le_bytes());
+        b.extend_from_slice(&name_bytes[..name_len]);
+        b.extend_from_slice(&(n as u64).to_le_bytes());
+        b.extend_from_slice(&(self.num_aig_nodes as u64).to_le_bytes());
+        b.extend_from_slice(&(m as u64).to_le_bytes());
+        b.extend_from_slice(&self.desc);
+        b.extend_from_slice(&self.labels);
+        for &p in &self.edge_ptr {
+            b.extend_from_slice(&p.to_le_bytes());
+        }
+        for &s in &self.edge_src {
+            b.extend_from_slice(&s.to_le_bytes());
+        }
+        b
+    }
+
+    /// Decode [`Self::to_bytes`] output. Section lengths are validated
+    /// against the buffer BEFORE any column is allocated (a malformed
+    /// header must not drive a huge allocation), and the reassembled
+    /// graph passes through [`Self::check`] — a decoded graph is exactly
+    /// as trusted as an ingested one.
+    pub fn from_bytes(buf: &[u8]) -> Result<CircuitGraph> {
+        fn take<'a>(buf: &'a [u8], at: &mut usize, n: usize, what: &str) -> Result<&'a [u8]> {
+            anyhow::ensure!(
+                buf.len() - *at >= n,
+                "circuit bytes: truncated {what} (need {n} bytes at offset {at}, have {})",
+                buf.len() - *at
+            );
+            let out = &buf[*at..*at + n];
+            *at += n;
+            Ok(out)
+        }
+        fn take_u64(buf: &[u8], at: &mut usize, what: &str) -> Result<u64> {
+            let b = take(buf, at, 8, what)?;
+            Ok(u64::from_le_bytes(b.try_into().unwrap()))
+        }
+        let mut at = 0usize;
+        let magic = take(buf, &mut at, 4, "magic")?;
+        anyhow::ensure!(magic == BYTES_MAGIC, "circuit bytes: bad magic {magic:02x?}");
+        let version = u16::from_le_bytes(take(buf, &mut at, 2, "version")?.try_into().unwrap());
+        anyhow::ensure!(
+            version == BYTES_VERSION,
+            "circuit bytes: unsupported version {version} (want {BYTES_VERSION})"
+        );
+        let name_len =
+            u16::from_le_bytes(take(buf, &mut at, 2, "name length")?.try_into().unwrap()) as usize;
+        let name = std::str::from_utf8(take(buf, &mut at, name_len, "name")?)
+            .map_err(|_| anyhow::anyhow!("circuit bytes: name is not utf-8"))?
+            .to_string();
+        let n64 = take_u64(buf, &mut at, "num_nodes")?;
+        let aig64 = take_u64(buf, &mut at, "num_aig_nodes")?;
+        let m64 = take_u64(buf, &mut at, "num_edges")?;
+        anyhow::ensure!(
+            n64 <= u32::MAX as u64 && m64 <= u32::MAX as u64 && aig64 <= n64,
+            "circuit bytes: header counts out of range (n={n64} aig={aig64} m={m64})"
+        );
+        let (n, m) = (n64 as usize, m64 as usize);
+        let need = 2 * n + (n + 1) * 4 + m * 4;
+        anyhow::ensure!(
+            buf.len() - at == need,
+            "circuit bytes: payload length mismatch (header implies {need} column bytes, have {})",
+            buf.len() - at
+        );
+        let desc = take(buf, &mut at, n, "desc column")?.to_vec();
+        let labels = take(buf, &mut at, n, "label column")?.to_vec();
+        let edge_ptr: Vec<u32> = take(buf, &mut at, (n + 1) * 4, "edge_ptr column")?
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        let edge_src: Vec<u32> = take(buf, &mut at, m * 4, "edge_src column")?
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        let g = CircuitGraph {
+            name,
+            num_aig_nodes: aig64 as usize,
+            desc,
+            labels,
+            edge_ptr,
+            edge_src,
+        };
+        g.check()
+            .map_err(|e| anyhow::anyhow!("circuit bytes: decoded graph failed validation: {e:#}"))?;
+        Ok(g)
+    }
+
     /// Structural validator. Checkpoint/AIGER ingestion makes malformed
     /// graphs a real input, so out-of-range labels, descriptor kinds,
     /// edge endpoints, and inconsistent section arithmetic are all
@@ -381,6 +494,47 @@ mod tests {
         let g = CircuitGraph::from_source(two_chunk_source()).unwrap();
         // 4 desc + 4 labels + 5×4 ptr + 3×4 src
         assert_eq!(g.resident_bytes(), 4 + 4 + 20 + 12);
+    }
+
+    #[test]
+    fn bytes_roundtrip_is_lossless() {
+        let g = CircuitGraph::from_source(two_chunk_source()).unwrap();
+        let back = CircuitGraph::from_bytes(&g.to_bytes()).unwrap();
+        assert_eq!(back.name, g.name);
+        assert_eq!(back.num_nodes(), g.num_nodes());
+        assert_eq!(back.num_aig_nodes(), g.num_aig_nodes());
+        assert_eq!(back.num_edges(), g.num_edges());
+        assert_eq!(back.labels_u8(), g.labels_u8());
+        for v in 0..g.num_nodes() {
+            assert_eq!(back.desc(v), g.desc(v));
+            assert_eq!(back.fanins(v), g.fanins(v));
+        }
+    }
+
+    #[test]
+    fn from_bytes_rejects_malformed_buffers() {
+        let bytes = CircuitGraph::from_source(two_chunk_source()).unwrap().to_bytes();
+        // bad magic
+        let mut b = bytes.clone();
+        b[0] = b'X';
+        assert!(CircuitGraph::from_bytes(&b).unwrap_err().to_string().contains("magic"));
+        // unknown version
+        let mut b = bytes.clone();
+        b[4] = 99;
+        assert!(CircuitGraph::from_bytes(&b).unwrap_err().to_string().contains("version"));
+        // truncation at every prefix must error, never panic
+        for cut in 0..bytes.len() {
+            assert!(CircuitGraph::from_bytes(&bytes[..cut]).is_err(), "cut at {cut}");
+        }
+        // trailing junk
+        let mut b = bytes.clone();
+        b.push(0);
+        assert!(CircuitGraph::from_bytes(&b).is_err());
+        // content corruption that only check() can see: out-of-range label
+        let mut b = bytes.clone();
+        let labels_at = b.len() - (5 * 4 + 3 * 4) - 4; // first byte of the label column
+        b[labels_at] = NUM_CLASSES as u8;
+        assert!(CircuitGraph::from_bytes(&b).is_err());
     }
 
     #[test]

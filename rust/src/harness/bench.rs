@@ -9,8 +9,11 @@
 //! `--serve` instead sweeps the CONCURRENT serving runtime: in-flight
 //! clients × worker threads at one fixed total thread budget (workers
 //! share it: per-worker backend budget = total / workers, so a 1-worker
-//! row is the single-router baseline at EQUAL hardware), writing
-//! BENCH_serve.json with throughput and p50/p95 latency.
+//! row is the single-router baseline at EQUAL hardware), each shape
+//! measured over BOTH transports — `in-process` (ServerHandle straight
+//! into the queue) and `socket` (wire protocol through `NetDaemon` over
+//! a Unix socket) — writing BENCH_serve.json with throughput and
+//! p50/p95/p99 latency per transport.
 //!
 //! Works with or without trained artifacts: if the weights bundle is
 //! missing, a fixed synthetic two-layer model is used — the bench times
@@ -21,6 +24,7 @@ use crate::coordinator::server::{Server, VerifyOptions};
 use crate::coordinator::{PlanCache, PlanOptions, PreparedGraph, Session, SessionConfig};
 use crate::datasets::{self, DatasetKind};
 use crate::gnn::{SageLayer, SageModel};
+use crate::net::{BindAddr, GrootClient, NetConfig, NetDaemon, Reply};
 use crate::util::timer::{bench_for, fmt_dur};
 use anyhow::{Context, Result};
 use std::time::{Duration, Instant};
@@ -181,6 +185,10 @@ struct ServeBenchRow {
     dataset: String,
     nodes: usize,
     partitions: usize,
+    /// `in-process` (ServerHandle straight into the queue) or `socket`
+    /// (wire protocol over a Unix socket through `NetDaemon`) — the
+    /// delta between the two at equal shape is the transport overhead.
+    transport: &'static str,
     workers: usize,
     clients: usize,
     total_threads: usize,
@@ -189,6 +197,7 @@ struct ServeBenchRow {
     knodes_per_s: f64,
     p50_ms: f64,
     p95_ms: f64,
+    p99_ms: f64,
 }
 
 /// `groot harness bench --serve` — the serving concurrency sweep:
@@ -224,30 +233,68 @@ pub fn bench_serve(
             "Serving concurrency sweep — csa{bits}, {partitions} partitions, \
              total thread budget {total_threads}"
         ),
-        &["workers", "clients", "reqs", "throughput req/s", "knodes/s", "p50", "p95"],
+        &[
+            "transport", "workers", "clients", "reqs", "throughput req/s", "knodes/s",
+            "p50", "p95", "p99",
+        ],
     );
-    let mut rows = Vec::new();
+    // Sorted client latencies → one finished bench row.
+    let make_row = |transport: &'static str,
+                    workers: usize,
+                    clients: usize,
+                    requests: usize,
+                    wall: f64,
+                    latencies: &[f64]|
+     -> ServeBenchRow {
+        let pct = |p: f64| -> f64 {
+            let idx = ((latencies.len() as f64 - 1.0) * p).round() as usize;
+            latencies[idx]
+        };
+        ServeBenchRow {
+            dataset: format!("csa{bits}"),
+            nodes: graph.num_nodes,
+            partitions,
+            transport,
+            workers,
+            clients,
+            total_threads,
+            requests,
+            throughput_rps: requests as f64 / wall,
+            knodes_per_s: (requests * graph.num_nodes) as f64 / wall / 1e3,
+            p50_ms: pct(0.50),
+            p95_ms: pct(0.95),
+            p99_ms: pct(0.99),
+        }
+    };
+    // Pre-encoded wire payload for the socket arm: the encode cost is
+    // paid once, so the socket rows measure transport + serving, not
+    // client-side serialization.
+    let circuit_bytes = std::sync::Arc::new(graph.to_circuit()?.to_bytes());
+    let mut rows: Vec<ServeBenchRow> = Vec::new();
     for &workers in &worker_counts {
         let per_worker_threads = (total_threads / workers).max(1);
-        let model = model.clone();
-        let server = Server::spawn(
-            SessionConfig {
-                num_partitions: partitions,
-                threads: per_worker_threads,
-                workers,
-                ..Default::default()
-            },
-            move || -> Result<crate::coordinator::Backend> {
-                Ok(Box::new(crate::backend::NativeBackend::with_threads(
-                    model.clone(),
-                    per_worker_threads,
-                )))
-            },
-        );
+        let spawn_server = |model: crate::gnn::SageModel| -> Server {
+            Server::spawn(
+                SessionConfig {
+                    num_partitions: partitions,
+                    threads: per_worker_threads,
+                    workers,
+                    ..Default::default()
+                },
+                move || -> Result<crate::coordinator::Backend> {
+                    Ok(Box::new(crate::backend::NativeBackend::with_threads(
+                        model.clone(),
+                        per_worker_threads,
+                    )))
+                },
+            )
+        };
+
+        // ---- transport: in-process (ServerHandle into the queue) ----
+        let server = spawn_server(model.clone());
         let handle = server.handle();
         // one warm-up request builds the shared plan (single-flight)
         handle.verify_blocking(graph.clone(), VerifyOptions::default())?;
-
         for &clients in client_counts {
             let requests = clients * per_client;
             // Closed-loop clients run as jobs on the work-stealing
@@ -282,35 +329,82 @@ pub fn bench_serve(
             let wall = wall_start.elapsed().as_secs_f64().max(1e-9);
             drop(pool); // shutdown + join the client workers
             latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
-            let pct = |p: f64| -> f64 {
-                let idx = ((latencies.len() as f64 - 1.0) * p).round() as usize;
-                latencies[idx]
-            };
-            let row = ServeBenchRow {
-                dataset: format!("csa{bits}"),
-                nodes: graph.num_nodes,
-                partitions,
-                workers,
-                clients,
-                total_threads,
-                requests,
-                throughput_rps: requests as f64 / wall,
-                knodes_per_s: (requests * graph.num_nodes) as f64 / wall / 1e3,
-                p50_ms: pct(0.50),
-                p95_ms: pct(0.95),
-            };
-            t.row(vec![
-                row.workers.to_string(),
-                row.clients.to_string(),
-                row.requests.to_string(),
-                format!("{:.1}", row.throughput_rps),
-                format!("{:.1}", row.knodes_per_s),
-                format!("{:.2} ms", row.p50_ms),
-                format!("{:.2} ms", row.p95_ms),
-            ]);
-            rows.push(row);
+            rows.push(make_row("in-process", workers, clients, requests, wall, &latencies));
         }
         server.shutdown();
+
+        // ---- transport: socket (wire protocol over a Unix socket) ----
+        let sock = std::env::temp_dir()
+            .join(format!("groot_bench_serve_{}_{workers}.sock", std::process::id()));
+        let daemon = NetDaemon::bind(
+            &BindAddr::Unix(sock.clone()),
+            spawn_server(model.clone()),
+            NetConfig::default(),
+        )?;
+        let addr = BindAddr::Unix(sock);
+        {
+            let mut warm = GrootClient::connect(&addr)?;
+            match warm.classify_circuit_bytes(&circuit_bytes, &VerifyOptions::default())? {
+                Reply::Result(r) => assert_eq!(r.pred.len(), graph.num_nodes),
+                Reply::Busy => anyhow::bail!("serve bench warm-up got BUSY"),
+            }
+        }
+        for &clients in client_counts {
+            let requests = clients * per_client;
+            let pool = crate::util::pool::ThreadPool::new(clients);
+            let (lat_tx, lat_rx) = std::sync::mpsc::channel::<Vec<f64>>();
+            let wall_start = Instant::now();
+            for _ in 0..clients {
+                let addr = addr.clone();
+                let bytes = std::sync::Arc::clone(&circuit_bytes);
+                let lat_tx = lat_tx.clone();
+                let nodes = graph.num_nodes;
+                pool.execute(move || {
+                    let mut client =
+                        GrootClient::connect(&addr).expect("serve bench socket connect");
+                    let mut lat = Vec::with_capacity(per_client);
+                    for _ in 0..per_client {
+                        let t0 = Instant::now();
+                        loop {
+                            match client
+                                .classify_circuit_bytes(&bytes, &VerifyOptions::default())
+                                .expect("serve bench socket request failed")
+                            {
+                                Reply::Result(res) => {
+                                    assert_eq!(res.pred.len(), nodes);
+                                    break;
+                                }
+                                // bounded queue full: honest retry loop
+                                Reply::Busy => std::thread::yield_now(),
+                            }
+                        }
+                        lat.push(t0.elapsed().as_secs_f64() * 1e3);
+                    }
+                    let _ = lat_tx.send(lat);
+                })
+                .expect("client pool closed early");
+            }
+            drop(lat_tx);
+            let mut latencies: Vec<f64> = lat_rx.iter().flatten().collect();
+            let wall = wall_start.elapsed().as_secs_f64().max(1e-9);
+            drop(pool);
+            latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            rows.push(make_row("socket", workers, clients, requests, wall, &latencies));
+        }
+        daemon.shutdown();
+    }
+    for row in &rows {
+        t.row(vec![
+            row.transport.to_string(),
+            row.workers.to_string(),
+            row.clients.to_string(),
+            row.requests.to_string(),
+            format!("{:.1}", row.throughput_rps),
+            format!("{:.1}", row.knodes_per_s),
+            format!("{:.2} ms", row.p50_ms),
+            format!("{:.2} ms", row.p95_ms),
+            format!("{:.2} ms", row.p99_ms),
+        ]);
     }
     t.print();
 
@@ -319,11 +413,11 @@ pub fn bench_serve(
     let speedup_at = |clients: usize| -> Option<f64> {
         let base = rows
             .iter()
-            .find(|r| r.workers == 1 && r.clients == clients)?
+            .find(|r| r.transport == "in-process" && r.workers == 1 && r.clients == clients)?
             .throughput_rps;
         let best = rows
             .iter()
-            .filter(|r| r.clients == clients && r.workers > 1)
+            .filter(|r| r.transport == "in-process" && r.clients == clients && r.workers > 1)
             .map(|r| r.throughput_rps)
             .fold(f64::NAN, f64::max);
         (base > 0.0 && best.is_finite()).then_some(best / base)
@@ -347,12 +441,15 @@ fn render_serve_json(rows: &[ServeBenchRow]) -> String {
     for (i, r) in rows.iter().enumerate() {
         s.push_str(&format!(
             "    {{\"dataset\": \"{}\", \"nodes\": {}, \"partitions\": {}, \
+             \"transport\": \"{}\", \
              \"workers\": {}, \"clients\": {}, \"total_threads\": {}, \
              \"requests\": {}, \"throughput_rps\": {:.3}, \
-             \"knodes_per_s\": {:.1}, \"p50_ms\": {:.3}, \"p95_ms\": {:.3}}}{}\n",
+             \"knodes_per_s\": {:.1}, \"p50_ms\": {:.3}, \"p95_ms\": {:.3}, \
+             \"p99_ms\": {:.3}}}{}\n",
             r.dataset,
             r.nodes,
             r.partitions,
+            r.transport,
             r.workers,
             r.clients,
             r.total_threads,
@@ -361,6 +458,7 @@ fn render_serve_json(rows: &[ServeBenchRow]) -> String {
             r.knodes_per_s,
             r.p50_ms,
             r.p95_ms,
+            r.p99_ms,
             if i + 1 < rows.len() { "," } else { "" }
         ));
     }
@@ -766,6 +864,7 @@ mod tests {
             dataset: "csa64".into(),
             nodes: 37000,
             partitions: 8,
+            transport: "socket",
             workers: 4,
             clients: 8,
             total_threads: 4,
@@ -774,11 +873,14 @@ mod tests {
             knodes_per_s: 4565.8,
             p50_ms: 7.5,
             p95_ms: 12.25,
+            p99_ms: 14.5,
         }];
         let s = render_serve_json(&rows);
         assert!(s.contains("\"bench\": \"serve_concurrency\""));
         assert!(s.contains("\"workers\": 4"));
+        assert!(s.contains("\"transport\": \"socket\""));
         assert!(s.contains("\"p95_ms\": 12.250"));
+        assert!(s.contains("\"p99_ms\": 14.500"));
         assert_eq!(s.matches('{').count(), s.matches('}').count());
         assert_eq!(s.matches('[').count(), s.matches(']').count());
     }

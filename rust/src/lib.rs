@@ -14,6 +14,7 @@ pub mod harness;
 pub mod labels;
 pub mod mapping;
 pub mod memmodel;
+pub mod net;
 pub mod partition;
 pub mod regrowth;
 pub mod runtime;

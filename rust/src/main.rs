@@ -34,6 +34,8 @@ fn run() -> Result<()> {
         "prefetch",
         "oracle",
         "kernels",
+        "expect-cache-hit",
+        "expect-cache-miss",
     ]);
     let cmd = args.positional.first().cloned().unwrap_or_else(|| "help".into());
     match cmd.as_str() {
@@ -42,6 +44,8 @@ fn run() -> Result<()> {
         "verify" => verify(&mut args),
         "train" => train_cmd(&mut args),
         "harness" => harness(&mut args),
+        "serve" => serve_cmd(&mut args),
+        "client" => client_cmd(&mut args),
         "info" => info(&mut args),
         "help" | "--help" | "-h" => {
             print!("{}", HELP);
@@ -89,13 +93,28 @@ USAGE:
                   SIMD-vs-scalar speedup, int8-vs-f32 forward, fused batched
                   GEMM; writes BENCH_kernels.json;
                   --assert-simd-speedup X fails below X× when SIMD is active)]
+  groot serve    --listen ADDR (host:port or unix:/path.sock)
+                 [--workers N] [--threads N] [--weights FILE]
+                 [--plan-dir DIR (persistent plan store: plans survive
+                  restarts — a restarted daemon answers repeat designs
+                  without re-partitioning)]
+                 [--plan-cache N (in-memory entries)] [--queue N]
+                 [--max-frame-mb N (reject larger request frames)]
+  groot client   classify|verify|stats|fuzz --connect ADDR
+                 [--dataset csa --bits 16 | --aag FILE]
+                 [--partitions N] [--seed S] [--no-regrow]
+                 [--pred-out FILE (raw predicted-class bytes)]
+                 [--expect-cache-hit | --expect-cache-miss (assert the
+                  server's plan_cache_hit flag — CI warm-start checks)]
   groot info     --dataset csa --bits 16
 
 Serving: worker count lives in SessionConfig.workers (the `--workers`
-option feeds it; consumed today by `harness bench --serve`, the serve
-example, and library `Server::spawn` users — plain classify/verify runs
-ignore it). Each worker owns a backend, all share one plan cache. Keep
-workers × --threads ≤ cores — the runtime splits, never multiplies.
+option feeds it; consumed by `groot serve`, `harness bench --serve`, the
+serve example, and library `Server::spawn` users — plain classify/verify
+runs ignore it). Each worker owns a backend, all share one plan cache.
+Keep workers × --threads ≤ cores — the runtime splits, never multiplies.
+`groot serve` drains on SIGTERM: the listener closes first, in-flight
+and queued requests are answered, then workers join.
 
 The paper's flow end-to-end from nothing but the circuit generators:
   groot train --dataset csa --bits 8 --seed 1        # writes artifacts/ckpt_csa8.bin
@@ -275,6 +294,11 @@ fn classify(args: &mut Args) -> Result<()> {
     let session = Session::new(backend, cfg);
     let (res, _, _, _) = run_classify(&session, kind, bits, &ing, false)?;
     print_run_stats(&res);
+    if let Some(path) = args.get("pred-out") {
+        std::fs::write(&path, &res.pred)
+            .with_context(|| format!("write predictions to {path}"))?;
+        println!("wrote {} prediction bytes -> {path}", res.pred.len());
+    }
     Ok(())
 }
 
@@ -444,6 +468,251 @@ fn train_cmd(args: &mut Args) -> Result<()> {
         kind.stem(bits)
     );
     Ok(())
+}
+
+/// `groot serve` — the socket daemon: multi-worker serving runtime
+/// behind the wire protocol, with an optional persistent plan store.
+fn serve_cmd(args: &mut Args) -> Result<()> {
+    use groot::coordinator::{PlanStore, ShardedPlanCache};
+    use groot::coordinator::server::Server;
+    use groot::net::{BindAddr, NetConfig, NetDaemon};
+
+    let listen = args
+        .get("listen")
+        .context("serve needs --listen host:port or --listen unix:/path.sock")?;
+    let addr = BindAddr::parse(&listen)?;
+    let cfg = session_config(args)?;
+    let plan_cache = args.parse_or(
+        "plan-cache",
+        groot::coordinator::DEFAULT_PLAN_CACHE_CAPACITY,
+    )?;
+    let queue = args.parse_or("queue", (cfg.workers.max(1) * 8).max(32))?;
+    let max_frame_mb: u32 = args.parse_or("max-frame-mb", 64u32)?;
+
+    let cache = match args.get("plan-dir") {
+        Some(dir) => {
+            let store = PlanStore::open(&dir)?;
+            println!("plan store: {} (plans persist across restarts)", store.dir().display());
+            std::sync::Arc::new(ShardedPlanCache::with_store(
+                groot::coordinator::DEFAULT_PLAN_CACHE_SHARDS,
+                plan_cache,
+                store,
+            ))
+        }
+        None => std::sync::Arc::new(ShardedPlanCache::new(plan_cache)),
+    };
+
+    // The backend factory runs once per worker, ON that worker's thread.
+    let backend_name = args.get_or("backend", "native");
+    let weights_path = PathBuf::from(args.get_or("weights", "artifacts/weights_csa8.bin"));
+    let bundle = groot::util::tensor::read_bundle(&weights_path)
+        .with_context(|| format!("load weights {}", weights_path.display()))?;
+    let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let max_bucket = args.parse_or("max-bucket", usize::MAX)?;
+    let threads = cfg.threads;
+    let precision = cfg.precision;
+    let factory = move || {
+        groot::backend::backend_by_name_precise(
+            &backend_name,
+            &bundle,
+            &artifacts,
+            max_bucket,
+            threads,
+            precision,
+        )
+    };
+
+    let workers = cfg.workers.max(1);
+    let server = Server::spawn_on_cache(cfg, cache, queue, factory);
+    groot::net::install_sigterm_handler();
+    let net_cfg = NetConfig {
+        max_frame: max_frame_mb.saturating_mul(1024 * 1024),
+        watch_sigterm: true,
+        ..Default::default()
+    };
+    let daemon = NetDaemon::bind(&addr, server, net_cfg)?;
+    println!(
+        "groot serve: listening on {} ({} workers × {} threads, queue {}, plan cache {})",
+        daemon.bound(),
+        workers,
+        threads,
+        queue,
+        plan_cache
+    );
+    println!("SIGTERM drains: listener closes, in-flight requests answered, workers join");
+    daemon.join();
+    println!("groot serve: drained and stopped");
+    Ok(())
+}
+
+/// The client side of a classify request: resolve the circuit payload
+/// (generated dataset → compact circuit bytes, or an `.aag` file sent as
+/// text) and per-request options from the CLI.
+fn client_request(
+    args: &mut Args,
+) -> Result<(groot::net::wire::GraphPayload, groot::coordinator::server::VerifyOptions)> {
+    use groot::net::wire::GraphPayload;
+    let payload = match args.get("aag") {
+        Some(path) => GraphPayload::AagText(
+            std::fs::read_to_string(&path).with_context(|| format!("read {path}"))?,
+        ),
+        None => {
+            let (kind, bits) = parse_dataset(args)?;
+            let graph = datasets::build(kind, bits)?;
+            GraphPayload::CircuitBytes(graph.to_circuit()?.to_bytes())
+        }
+    };
+    let options = groot::coordinator::server::VerifyOptions {
+        partitions: args.parse_or("partitions", 0usize).map(|p| (p > 0).then_some(p))?,
+        regrow: args.flag("no-regrow").then_some(false),
+        seed: args.get("seed").map(|s| s.parse::<u64>()).transpose()?,
+    };
+    Ok((payload, options))
+}
+
+/// `groot client` — classify/verify/stats/fuzz against a running daemon.
+fn client_cmd(args: &mut Args) -> Result<()> {
+    use groot::net::wire;
+    use groot::net::{GrootClient, Reply};
+
+    let sub = args
+        .positional
+        .get(1)
+        .cloned()
+        .context("client needs a subcommand: classify | verify | stats | fuzz")?;
+    let connect = args.get("connect").context("client needs --connect ADDR")?;
+
+    match sub.as_str() {
+        "stats" => {
+            let mut client = GrootClient::connect_str(&connect)?;
+            let s = client.stats()?;
+            println!("queue depth      {}", s.queue_depth);
+            println!("workers          {} (requests: {:?})", s.workers, s.per_worker_requests);
+            println!(
+                "plan cache       {} hits / {} misses ({} answered from disk)",
+                s.plan_cache_hits, s.plan_cache_misses, s.plan_disk_hits
+            );
+            println!(
+                "plan store       {} writes, {} quarantined",
+                s.plan_store_writes, s.plan_store_quarantined
+            );
+            println!("requests served  {}", s.requests_served);
+            println!(
+                "latency ms       p50 {:.3}  p95 {:.3}  p99 {:.3}",
+                s.p50_ms, s.p95_ms, s.p99_ms
+            );
+            Ok(())
+        }
+        "classify" | "verify" => {
+            let (payload, options) = client_request(args)?;
+            let mut client = GrootClient::connect_str(&connect)?;
+            let res = match client.classify_payload(&payload, &options)? {
+                Reply::Result(r) => r,
+                Reply::Busy => bail!("server is busy (bounded queue full) — retry later"),
+            };
+            println!(
+                "accuracy {:.4}  partitions {}  plan_cache_hit {}  infer {:?}",
+                res.accuracy,
+                res.stats.num_partitions,
+                res.stats.plan_cache_hit,
+                res.stats.infer_time
+            );
+            if args.flag("expect-cache-hit") && !res.stats.plan_cache_hit {
+                bail!("--expect-cache-hit: server re-planned (plan_cache_hit=false)");
+            }
+            if args.flag("expect-cache-miss") && res.stats.plan_cache_hit {
+                bail!("--expect-cache-miss: server reused a plan (plan_cache_hit=true)");
+            }
+            if let Some(path) = args.get("pred-out") {
+                std::fs::write(&path, &res.pred)
+                    .with_context(|| format!("write predictions to {path}"))?;
+                println!("wrote {} prediction bytes -> {path}", res.pred.len());
+            }
+            if sub == "verify" {
+                let (kind, bits) = parse_dataset(args)?;
+                let aig = match kind {
+                    DatasetKind::Csa => groot::aig::mult::csa_multiplier(bits),
+                    DatasetKind::Booth => groot::aig::booth::booth_multiplier(bits),
+                    DatasetKind::Wallace => groot::aig::wallace::wallace_multiplier(bits),
+                    _ => bail!("client verify targets AIG datasets (csa|booth|wallace)"),
+                };
+                let graph = datasets::build(kind, bits)?;
+                let outcome = groot::verify::verify_multiplier_pred(
+                    &aig,
+                    graph.num_nodes,
+                    graph.num_aig_nodes,
+                    &res.pred,
+                )?;
+                println!(
+                    "algebraic check: {} ({} adders used)",
+                    if outcome.equivalent { "EQUIVALENT ✓" } else { "NOT PROVEN ✗" },
+                    outcome.adders_used
+                );
+                if !outcome.equivalent {
+                    std::process::exit(2);
+                }
+            }
+            Ok(())
+        }
+        "fuzz" => {
+            // Protocol-abuse sweep: each case must get a structured
+            // ERROR (or a clean close) and the daemon must still answer
+            // a well-formed STATS request afterwards.
+            // (name, bytes, expect_reply): a truncated frame gets no
+            // reply — the daemon is still waiting for the missing bytes,
+            // so the client just hangs up (EOF mid-frame on the server).
+            let cases: Vec<(&str, Vec<u8>, bool)> = vec![
+                ("bad magic", b"XXXX\x01\x00\x00\x00\x00".to_vec(), true),
+                ("oversize length", {
+                    let mut f = b"GRT1\x01".to_vec();
+                    f.extend_from_slice(&u32::MAX.to_le_bytes());
+                    f
+                }, true),
+                ("truncated frame", {
+                    let mut f = Vec::new();
+                    wire::write_frame(&mut f, wire::REQ_CLASSIFY, &[1, 2, 3, 4, 5]).unwrap();
+                    f.truncate(f.len() - 3);
+                    f
+                }, false),
+                ("unknown kind", {
+                    let mut f = Vec::new();
+                    wire::write_frame(&mut f, 0x7F, &[]).unwrap();
+                    f
+                }, true),
+                ("garbage classify payload", {
+                    let mut f = Vec::new();
+                    wire::write_frame(&mut f, wire::REQ_CLASSIFY, &[0xFF; 32]).unwrap();
+                    f
+                }, true),
+            ];
+            for (name, bytes, expect_reply) in &cases {
+                let mut client = GrootClient::connect_str(&connect)?;
+                client.send_raw(bytes)?;
+                if !expect_reply {
+                    drop(client);
+                    println!("{name}: sent, connection dropped");
+                    continue;
+                }
+                match client.recv_frame() {
+                    Ok((kind, payload)) if kind == wire::RESP_ERROR => {
+                        let (code, msg) = wire::decode_error(&payload)?;
+                        println!("{name}: ERROR {code} ({msg})");
+                    }
+                    Ok((kind, _)) => bail!("{name}: unexpected reply kind {kind:#04x}"),
+                    Err(e) => bail!("{name}: no structured error reply: {e:#}"),
+                }
+            }
+            let mut client = GrootClient::connect_str(&connect)?;
+            let s = client.stats()?;
+            println!(
+                "daemon survived {} malformed cases (served {} requests so far)",
+                cases.len(),
+                s.requests_served
+            );
+            Ok(())
+        }
+        other => bail!("unknown client subcommand '{other}' (classify|verify|stats|fuzz)"),
+    }
 }
 
 fn harness(args: &mut Args) -> Result<()> {

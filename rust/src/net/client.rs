@@ -1,0 +1,158 @@
+//! `GrootClient` — blocking client for the [`super::daemon`] wire
+//! protocol. One connection, sequential request/reply; open several
+//! clients for concurrency (the daemon spawns one handler per
+//! connection).
+
+use super::daemon::BindAddr;
+use super::wire::{self, GraphPayload, WireStats};
+use crate::coordinator::server::VerifyOptions;
+use crate::coordinator::ClassifyResult;
+use crate::graph::CircuitGraph;
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::os::unix::net::UnixStream;
+
+enum ClientStream {
+    Tcp(TcpStream),
+    Unix(UnixStream),
+}
+
+impl Read for ClientStream {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            ClientStream::Tcp(s) => s.read(buf),
+            ClientStream::Unix(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for ClientStream {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            ClientStream::Tcp(s) => s.write(buf),
+            ClientStream::Unix(s) => s.write(buf),
+        }
+    }
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            ClientStream::Tcp(s) => s.flush(),
+            ClientStream::Unix(s) => s.flush(),
+        }
+    }
+}
+
+/// A classify reply the caller must branch on: the daemon answers BUSY
+/// (bounded queue full — request NOT accepted) as a normal outcome, not
+/// an error.
+#[derive(Debug)]
+pub enum Reply {
+    Result(ClassifyResult),
+    Busy,
+}
+
+pub struct GrootClient {
+    stream: ClientStream,
+    max_frame: u32,
+}
+
+impl GrootClient {
+    pub fn connect(addr: &BindAddr) -> Result<GrootClient> {
+        let stream = match addr {
+            BindAddr::Tcp(a) => {
+                let s = TcpStream::connect(a).with_context(|| format!("connect tcp {a}"))?;
+                let _ = s.set_nodelay(true);
+                ClientStream::Tcp(s)
+            }
+            BindAddr::Unix(p) => ClientStream::Unix(
+                UnixStream::connect(p)
+                    .with_context(|| format!("connect unix socket {}", p.display()))?,
+            ),
+        };
+        Ok(GrootClient { stream, max_frame: wire::DEFAULT_MAX_FRAME })
+    }
+
+    /// Parse-and-connect convenience for `--connect` strings.
+    pub fn connect_str(addr: &str) -> Result<GrootClient> {
+        GrootClient::connect(&BindAddr::parse(addr)?)
+    }
+
+    /// Classify a compact circuit (encoded client-side).
+    pub fn classify_circuit(
+        &mut self,
+        circuit: &CircuitGraph,
+        options: &VerifyOptions,
+    ) -> Result<Reply> {
+        self.classify_circuit_bytes(&circuit.to_bytes(), options)
+    }
+
+    /// Classify pre-encoded [`CircuitGraph::to_bytes`] columns — lets
+    /// benchmark loops pay the encode cost once.
+    pub fn classify_circuit_bytes(
+        &mut self,
+        bytes: &[u8],
+        options: &VerifyOptions,
+    ) -> Result<Reply> {
+        self.classify_payload(&GraphPayload::CircuitBytes(bytes.to_vec()), options)
+    }
+
+    /// Classify ASCII-AIGER text (parsed server-side through the full
+    /// streaming ingestion path).
+    pub fn classify_aag(&mut self, text: &str, options: &VerifyOptions) -> Result<Reply> {
+        self.classify_payload(&GraphPayload::AagText(text.to_string()), options)
+    }
+
+    /// Classify an already-built [`GraphPayload`] — the general form the
+    /// typed helpers above delegate to.
+    pub fn classify_payload(
+        &mut self,
+        graph: &GraphPayload,
+        options: &VerifyOptions,
+    ) -> Result<Reply> {
+        wire::write_frame(
+            &mut self.stream,
+            wire::REQ_CLASSIFY,
+            &wire::encode_classify(options, graph),
+        )
+        .context("send classify request")?;
+        let (kind, payload) = self.recv_frame()?;
+        match kind {
+            wire::RESP_RESULT => Ok(Reply::Result(wire::decode_result(&payload)?)),
+            wire::RESP_BUSY => Ok(Reply::Busy),
+            wire::RESP_ERROR => {
+                let (code, msg) = wire::decode_error(&payload)?;
+                bail!("server error {code}: {msg}")
+            }
+            other => bail!("unexpected reply kind {other:#04x}"),
+        }
+    }
+
+    /// Fetch the daemon's observability snapshot.
+    pub fn stats(&mut self) -> Result<WireStats> {
+        wire::write_frame(&mut self.stream, wire::REQ_STATS, &[])
+            .context("send stats request")?;
+        let (kind, payload) = self.recv_frame()?;
+        match kind {
+            wire::RESP_STATS => wire::decode_stats(&payload),
+            wire::RESP_ERROR => {
+                let (code, msg) = wire::decode_error(&payload)?;
+                bail!("server error {code}: {msg}")
+            }
+            other => bail!("unexpected reply kind {other:#04x}"),
+        }
+    }
+
+    /// Write raw bytes onto the connection — the protocol-fuzz tooling
+    /// (`groot client fuzz`, the malformed-frame tests) uses this to
+    /// send deliberately broken traffic.
+    pub fn send_raw(&mut self, bytes: &[u8]) -> Result<()> {
+        self.stream.write_all(bytes)?;
+        self.stream.flush()?;
+        Ok(())
+    }
+
+    /// Read one raw frame off the connection.
+    pub fn recv_frame(&mut self) -> Result<(u8, Vec<u8>)> {
+        wire::read_frame(&mut self.stream, self.max_frame).map_err(anyhow::Error::from)
+    }
+}

@@ -1,0 +1,635 @@
+//! `groot serve` — the socket daemon over the multi-worker serving
+//! runtime.
+//!
+//! ```text
+//!                    ┌───────────────────────── NetDaemon ─────────────┐
+//! TCP / unix socket ─► accept loop (nonblocking, polls stop flag)      │
+//!                    │    └─► one handler thread per connection        │
+//!                    │          frame read → decode → try_submit ──────┼─► Server
+//!                    │          Busy → RESP_BUSY   result → RESP_RESULT│   (N workers,
+//!                    └──────────────────────────────────────────────────┘    shared plan cache)
+//! ```
+//!
+//! Shutdown (SIGTERM or [`NetDaemon::trigger_shutdown`]) is a strict
+//! sequence, preserving the serving runtime's drain contract:
+//!
+//! 1. the stop flag is set; the accept loop exits and **closes the
+//!    listener first** (a Unix socket file is unlinked) — new
+//!    connections are refused from this point;
+//! 2. connection handlers finish the request they are on (workers are
+//!    still live) and reply; handlers idle at a frame boundary exit
+//!    immediately; a handler mid-frame gets `drain_grace` to finish
+//!    reading, then the connection is abandoned;
+//! 3. handler threads are joined, then [`Server::shutdown`] drains and
+//!    answers everything still queued and joins the workers.
+//!
+//! Malformed traffic never kills the daemon: a bad magic or oversize
+//! length gets one structured [`wire::ERR_MALFORMED`] reply and the
+//! connection is closed; an unparsable circuit gets
+//! [`wire::ERR_BAD_REQUEST`] and the connection stays usable.
+
+use super::wire::{self, FrameError, GraphPayload, WireStats};
+use crate::coordinator::server::{RequestGraph, Server, TrySubmit};
+use crate::graph::CircuitGraph;
+use anyhow::{bail, Context, Result};
+use std::collections::VecDeque;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Where to listen: `host:port` TCP or `unix:/path/to.sock`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum BindAddr {
+    Tcp(String),
+    Unix(PathBuf),
+}
+
+impl BindAddr {
+    /// Parse the `--listen` / `--connect` syntax: a `unix:` prefix means
+    /// a Unix-domain socket path, anything else is a TCP `host:port`.
+    pub fn parse(s: &str) -> Result<BindAddr> {
+        if let Some(path) = s.strip_prefix("unix:") {
+            if path.is_empty() {
+                bail!("empty unix socket path in {s:?}");
+            }
+            return Ok(BindAddr::Unix(PathBuf::from(path)));
+        }
+        if !s.contains(':') {
+            bail!("bad address {s:?}: expected host:port or unix:/path.sock");
+        }
+        Ok(BindAddr::Tcp(s.to_string()))
+    }
+}
+
+impl std::fmt::Display for BindAddr {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            BindAddr::Tcp(a) => write!(f, "{a}"),
+            BindAddr::Unix(p) => write!(f, "unix:{}", p.display()),
+        }
+    }
+}
+
+/// Daemon tuning knobs; the defaults serve.
+#[derive(Clone, Debug)]
+pub struct NetConfig {
+    /// Maximum accepted frame payload ([`wire::DEFAULT_MAX_FRAME`]).
+    pub max_frame: u32,
+    /// Stop-flag poll cadence; doubles as the per-connection socket read
+    /// timeout, so it bounds shutdown latency, not throughput.
+    pub poll_interval: Duration,
+    /// How long a handler mid-frame at shutdown waits for the client to
+    /// finish sending before the connection is abandoned.
+    pub drain_grace: Duration,
+    /// Chunk size for streaming AIGER-text payloads into the columnar
+    /// store.
+    pub aiger_chunk: usize,
+    /// Honor the process-wide SIGTERM flag (`groot serve` sets this;
+    /// tests drive shutdown programmatically through the same path).
+    pub watch_sigterm: bool,
+}
+
+impl Default for NetConfig {
+    fn default() -> NetConfig {
+        NetConfig {
+            max_frame: wire::DEFAULT_MAX_FRAME,
+            poll_interval: Duration::from_millis(50),
+            drain_grace: Duration::from_secs(2),
+            aiger_chunk: crate::graph::DEFAULT_CHUNK_NODES,
+            watch_sigterm: false,
+        }
+    }
+}
+
+// ---- SIGTERM ------------------------------------------------------------
+
+static SIGTERM_FLAG: AtomicBool = AtomicBool::new(false);
+
+#[cfg(unix)]
+extern "C" fn on_sigterm(_signum: i32) {
+    // The only async-signal-safe thing worth doing: flip the flag. The
+    // accept loop and handlers poll it.
+    SIGTERM_FLAG.store(true, Ordering::SeqCst);
+}
+
+/// Route SIGTERM to the drain-on-shutdown flag. Std-only: `signal(2)` is
+/// declared by hand (std already links libc on every Unix target).
+#[cfg(unix)]
+pub fn install_sigterm_handler() {
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+    const SIGTERM: i32 = 15;
+    unsafe {
+        signal(SIGTERM, on_sigterm as extern "C" fn(i32) as usize);
+    }
+}
+
+#[cfg(not(unix))]
+pub fn install_sigterm_handler() {}
+
+/// Has a SIGTERM been delivered since the last [`clear_sigterm`]?
+pub fn sigterm_pending() -> bool {
+    SIGTERM_FLAG.load(Ordering::SeqCst)
+}
+
+/// Reset the SIGTERM flag — for tests that raise the real signal and
+/// must not leak the pending state into later daemons in the process.
+pub fn clear_sigterm() {
+    SIGTERM_FLAG.store(false, Ordering::SeqCst);
+}
+
+// ---- sockets ------------------------------------------------------------
+
+/// The two stream flavors behind one object-safe face. Handlers only
+/// need `Read + Write` plus a read timeout.
+trait Conn: Read + Write + Send {
+    fn set_read_timeout(&self, d: Option<Duration>) -> std::io::Result<()>;
+}
+
+impl Conn for TcpStream {
+    fn set_read_timeout(&self, d: Option<Duration>) -> std::io::Result<()> {
+        TcpStream::set_read_timeout(self, d)
+    }
+}
+
+impl Conn for UnixStream {
+    fn set_read_timeout(&self, d: Option<Duration>) -> std::io::Result<()> {
+        UnixStream::set_read_timeout(self, d)
+    }
+}
+
+enum Listener {
+    Tcp(TcpListener),
+    Unix(UnixListener),
+}
+
+impl Listener {
+    /// Nonblocking accept: `Ok(None)` when no connection is pending.
+    fn accept(&self) -> std::io::Result<Option<Box<dyn Conn>>> {
+        match self {
+            Listener::Tcp(l) => match l.accept() {
+                Ok((s, _)) => {
+                    let _ = s.set_nodelay(true);
+                    Ok(Some(Box::new(s)))
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => Ok(None),
+                Err(e) => Err(e),
+            },
+            Listener::Unix(l) => match l.accept() {
+                Ok((s, _)) => Ok(Some(Box::new(s))),
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => Ok(None),
+                Err(e) => Err(e),
+            },
+        }
+    }
+}
+
+/// Bind a Unix listener, recovering the socket file a crashed daemon
+/// left behind (it exists but nothing accepts on it). A LIVE daemon on
+/// the path is an error, not a takeover.
+fn bind_unix(path: &Path) -> Result<UnixListener> {
+    match UnixListener::bind(path) {
+        Ok(l) => Ok(l),
+        Err(e) if e.kind() == std::io::ErrorKind::AddrInUse => {
+            if UnixStream::connect(path).is_ok() {
+                bail!("another daemon is already serving on {}", path.display());
+            }
+            std::fs::remove_file(path)
+                .with_context(|| format!("remove stale socket {}", path.display()))?;
+            UnixListener::bind(path)
+                .with_context(|| format!("rebind unix socket {}", path.display()))
+        }
+        Err(e) => Err(e).with_context(|| format!("bind unix socket {}", path.display())),
+    }
+}
+
+// ---- daemon -------------------------------------------------------------
+
+/// How many request latencies the percentile ring retains.
+const LATENCY_RING: usize = 4096;
+
+struct Shared {
+    server: Server,
+    cfg: NetConfig,
+    stop: AtomicBool,
+    /// Classify requests answered with RESP_RESULT, daemon-wide.
+    served: AtomicU64,
+    /// Wall-clock ms per answered classify request (submission → reply
+    /// decoded), most recent [`LATENCY_RING`].
+    latencies: Mutex<VecDeque<f64>>,
+}
+
+impl Shared {
+    fn stopping(&self) -> bool {
+        self.stop.load(Ordering::SeqCst) || (self.cfg.watch_sigterm && sigterm_pending())
+    }
+
+    fn record_latency(&self, ms: f64) {
+        self.served.fetch_add(1, Ordering::SeqCst);
+        let mut l = self.latencies.lock().unwrap();
+        if l.len() >= LATENCY_RING {
+            l.pop_front();
+        }
+        l.push_back(ms);
+    }
+
+    fn stats(&self) -> WireStats {
+        let s = self.server.stats();
+        let mut v: Vec<f64> = self.latencies.lock().unwrap().iter().copied().collect();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+        let pct = |p: f64| -> f64 {
+            if v.is_empty() {
+                0.0
+            } else {
+                let idx = ((v.len() - 1) as f64 * p).round() as usize;
+                v[idx.min(v.len() - 1)]
+            }
+        };
+        WireStats {
+            queue_depth: s.queue_depth as u64,
+            workers: s.workers as u64,
+            per_worker_requests: s.per_worker_requests,
+            plan_cache_hits: s.plan_cache_hits,
+            plan_cache_misses: s.plan_cache_misses,
+            plan_disk_hits: s.plan_disk_hits,
+            plan_store_writes: s.plan_store_writes,
+            plan_store_quarantined: s.plan_store_quarantined,
+            requests_served: self.served.load(Ordering::SeqCst),
+            p50_ms: pct(0.50),
+            p95_ms: pct(0.95),
+            p99_ms: pct(0.99),
+        }
+    }
+}
+
+/// A bound, serving daemon. Dropping it does NOT stop it cleanly — call
+/// [`NetDaemon::shutdown`] (or [`trigger_shutdown`](Self::trigger_shutdown)
+/// + [`join`](Self::join), which is what `groot serve` does around its
+/// SIGTERM wait).
+pub struct NetDaemon {
+    shared: Arc<Shared>,
+    accept: Option<JoinHandle<()>>,
+    bound: String,
+    local_addr: Option<SocketAddr>,
+}
+
+impl NetDaemon {
+    /// Bind the address and start accepting. The `server` is consumed:
+    /// the daemon owns the worker fleet and shuts it down last.
+    pub fn bind(addr: &BindAddr, server: Server, cfg: NetConfig) -> Result<NetDaemon> {
+        let (listener, bound, local_addr, unix_path) = match addr {
+            BindAddr::Tcp(a) => {
+                let l = TcpListener::bind(a).with_context(|| format!("bind tcp {a}"))?;
+                l.set_nonblocking(true)?;
+                let la = l.local_addr()?;
+                (Listener::Tcp(l), la.to_string(), Some(la), None)
+            }
+            BindAddr::Unix(p) => {
+                let l = bind_unix(p)?;
+                l.set_nonblocking(true)?;
+                (Listener::Unix(l), format!("unix:{}", p.display()), None, Some(p.clone()))
+            }
+        };
+        let shared = Arc::new(Shared {
+            server,
+            cfg,
+            stop: AtomicBool::new(false),
+            served: AtomicU64::new(0),
+            latencies: Mutex::new(VecDeque::new()),
+        });
+        let sh = Arc::clone(&shared);
+        let accept = std::thread::Builder::new()
+            .name("groot-net-accept".into())
+            .spawn(move || accept_loop(sh, listener, unix_path))
+            .context("spawn accept loop")?;
+        Ok(NetDaemon { shared, accept: Some(accept), bound, local_addr })
+    }
+
+    /// The resolved address: `ip:port` (with the OS-assigned port for
+    /// `:0` binds) or `unix:/path`.
+    pub fn bound(&self) -> &str {
+        &self.bound
+    }
+
+    /// TCP only: the resolved socket address.
+    pub fn local_addr(&self) -> Option<SocketAddr> {
+        self.local_addr
+    }
+
+    /// Begin the drain sequence (idempotent, non-blocking): stop
+    /// accepting, answer what is in flight, then stop the workers.
+    pub fn trigger_shutdown(&self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+    }
+
+    /// Daemon-side stats snapshot (same numbers a STATS request returns).
+    pub fn stats(&self) -> WireStats {
+        self.shared.stats()
+    }
+
+    /// Block until the daemon drains: returns after a SIGTERM (when
+    /// `watch_sigterm`) or [`Self::trigger_shutdown`] has been fully
+    /// honored — listener closed, connections finished, workers joined.
+    pub fn join(mut self) {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        // Every handler thread was joined by the accept loop, so this
+        // unwrap succeeds and the worker fleet drains deterministically.
+        // (A panicked accept loop leaves the Arc shared; the fleet then
+        // drains when the last clone drops — Server::drop.)
+        if let Ok(sh) = Arc::try_unwrap(self.shared) {
+            sh.server.shutdown();
+        }
+    }
+
+    /// [`trigger_shutdown`](Self::trigger_shutdown) + [`join`](Self::join).
+    pub fn shutdown(self) {
+        self.trigger_shutdown();
+        self.join();
+    }
+}
+
+fn accept_loop(shared: Arc<Shared>, listener: Listener, unix_path: Option<PathBuf>) {
+    let mut handlers: Vec<JoinHandle<()>> = Vec::new();
+    while !shared.stopping() {
+        match listener.accept() {
+            Ok(Some(conn)) => {
+                let sh = Arc::clone(&shared);
+                match std::thread::Builder::new()
+                    .name("groot-net-conn".into())
+                    .spawn(move || handle_conn(sh, conn))
+                {
+                    Ok(h) => handlers.push(h),
+                    Err(_) => { /* thread exhaustion: connection dropped */ }
+                }
+            }
+            Ok(None) => std::thread::sleep(shared.cfg.poll_interval),
+            Err(_) => std::thread::sleep(shared.cfg.poll_interval),
+        }
+        // Reap finished handlers so a long-lived daemon doesn't
+        // accumulate one JoinHandle per connection ever served.
+        let mut i = 0;
+        while i < handlers.len() {
+            if handlers[i].is_finished() {
+                let _ = handlers.swap_remove(i).join();
+            } else {
+                i += 1;
+            }
+        }
+    }
+    // Shutdown step 1: close the listener FIRST (unlinking a Unix socket
+    // file), so new connections are refused while in-flight requests are
+    // still being answered.
+    drop(listener);
+    if let Some(p) = unix_path {
+        let _ = std::fs::remove_file(&p);
+    }
+    // Step 2: wait for every handler to finish its in-flight work. The
+    // worker fleet is still up — replies flow until the last handler is
+    // done. Step 3 (Server::shutdown) happens in NetDaemon::join.
+    for h in handlers {
+        let _ = h.join();
+    }
+}
+
+enum FrameRead {
+    Frame(u8, Vec<u8>),
+    /// Peer closed (cleanly or mid-frame) or transport error.
+    Closed,
+    /// The daemon is draining and the connection sits at a frame
+    /// boundary — exit without touching the socket further.
+    Shutdown,
+    /// Protocol violation worth a structured reply before closing.
+    Protocol(FrameError),
+}
+
+enum Fill {
+    Done,
+    Closed,
+    Shutdown,
+}
+
+/// Read exactly `buf.len()` bytes, polling the stop flag on every read
+/// timeout. `at_boundary` marks reads that may abort cleanly on
+/// shutdown (nothing consumed yet); mid-frame reads instead get
+/// `drain_grace` to complete before the connection is abandoned.
+fn fill(conn: &mut dyn Conn, buf: &mut [u8], shared: &Shared, at_boundary: bool) -> Fill {
+    let mut filled = 0usize;
+    let mut stop_deadline: Option<Instant> = None;
+    while filled < buf.len() {
+        if shared.stopping() {
+            if at_boundary && filled == 0 {
+                return Fill::Shutdown;
+            }
+            let d = *stop_deadline
+                .get_or_insert_with(|| Instant::now() + shared.cfg.drain_grace);
+            if Instant::now() >= d {
+                return Fill::Closed;
+            }
+        }
+        match conn.read(&mut buf[filled..]) {
+            Ok(0) => return Fill::Closed,
+            Ok(n) => filled += n,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock
+                        | std::io::ErrorKind::TimedOut
+                        | std::io::ErrorKind::Interrupted
+                ) => {}
+            Err(_) => return Fill::Closed,
+        }
+    }
+    Fill::Done
+}
+
+fn read_frame_polling(conn: &mut dyn Conn, shared: &Shared) -> FrameRead {
+    let mut header = [0u8; wire::HEADER_LEN];
+    match fill(conn, &mut header, shared, true) {
+        Fill::Done => {}
+        Fill::Closed => return FrameRead::Closed,
+        Fill::Shutdown => return FrameRead::Shutdown,
+    }
+    if header[..4] != wire::MAGIC {
+        return FrameRead::Protocol(FrameError::BadMagic([
+            header[0], header[1], header[2], header[3],
+        ]));
+    }
+    let kind = header[4];
+    let len = u32::from_le_bytes([header[5], header[6], header[7], header[8]]);
+    if len > shared.cfg.max_frame {
+        return FrameRead::Protocol(FrameError::Oversize { len, max: shared.cfg.max_frame });
+    }
+    let mut payload = vec![0u8; len as usize];
+    match fill(conn, &mut payload, shared, false) {
+        Fill::Done => FrameRead::Frame(kind, payload),
+        Fill::Closed => FrameRead::Closed,
+        Fill::Shutdown => FrameRead::Shutdown,
+    }
+}
+
+/// Decode the request's circuit into a [`RequestGraph`]. Both payload
+/// forms land in the compact columnar store; `CircuitGraph::from_bytes`
+/// and the AIGER reader both validate before anything reaches a worker.
+fn build_request_graph(shared: &Shared, payload: GraphPayload) -> Result<RequestGraph> {
+    match payload {
+        GraphPayload::CircuitBytes(b) => {
+            Ok(RequestGraph::Circuit(CircuitGraph::from_bytes(&b)?))
+        }
+        GraphPayload::AagText(text) => {
+            let aig = crate::aig::aiger::read_aag_text("wire", &text)?;
+            let src = crate::features::AigSource::new(aig, shared.cfg.aiger_chunk);
+            Ok(RequestGraph::Circuit(CircuitGraph::from_source(src)?))
+        }
+    }
+}
+
+fn handle_conn(shared: Arc<Shared>, mut conn: Box<dyn Conn>) {
+    let _ = conn.set_read_timeout(Some(shared.cfg.poll_interval));
+    let handle = shared.server.handle();
+    loop {
+        let (kind, payload) = match read_frame_polling(conn.as_mut(), &shared) {
+            FrameRead::Frame(k, p) => (k, p),
+            FrameRead::Closed | FrameRead::Shutdown => return,
+            FrameRead::Protocol(err) => {
+                // One structured reply, then close: after a framing
+                // violation the byte stream cannot be trusted again.
+                let _ = wire::write_frame(
+                    &mut conn,
+                    wire::RESP_ERROR,
+                    &wire::encode_error(wire::ERR_MALFORMED, &err.to_string()),
+                );
+                return;
+            }
+        };
+        let ok = match kind {
+            wire::REQ_STATS => {
+                let stats = shared.stats();
+                wire::write_frame(&mut conn, wire::RESP_STATS, &wire::encode_stats(&stats))
+                    .is_ok()
+            }
+            wire::REQ_CLASSIFY => {
+                match serve_classify(&shared, &handle, &mut conn, &payload) {
+                    ClassifyOutcome::Continue => true,
+                    ClassifyOutcome::Close => false,
+                }
+            }
+            other => wire::write_frame(
+                &mut conn,
+                wire::RESP_ERROR,
+                &wire::encode_error(
+                    wire::ERR_UNSUPPORTED,
+                    &format!("unknown request kind {other:#04x}"),
+                ),
+            )
+            .is_ok(),
+        };
+        if !ok {
+            return;
+        }
+    }
+}
+
+enum ClassifyOutcome {
+    Continue,
+    Close,
+}
+
+fn serve_classify(
+    shared: &Shared,
+    handle: &crate::coordinator::server::ServerHandle,
+    conn: &mut Box<dyn Conn>,
+    payload: &[u8],
+) -> ClassifyOutcome {
+    let reply_err = |conn: &mut Box<dyn Conn>, code: u16, msg: &str| -> bool {
+        wire::write_frame(conn, wire::RESP_ERROR, &wire::encode_error(code, msg)).is_ok()
+    };
+    let (options, graph_payload) = match wire::decode_classify(payload) {
+        Ok(x) => x,
+        Err(e) => {
+            // The frame parsed but its payload didn't: the stream stays
+            // synchronized, yet the client is clearly broken — reply,
+            // then close.
+            let _ = reply_err(conn, wire::ERR_MALFORMED, &format!("{e:#}"));
+            return ClassifyOutcome::Close;
+        }
+    };
+    let graph = match build_request_graph(shared, graph_payload) {
+        Ok(g) => g,
+        Err(e) => {
+            // Semantically invalid circuit; the connection itself is
+            // healthy — keep serving it.
+            return if reply_err(conn, wire::ERR_BAD_REQUEST, &format!("{e:#}")) {
+                ClassifyOutcome::Continue
+            } else {
+                ClassifyOutcome::Close
+            };
+        }
+    };
+    let t0 = Instant::now();
+    let rx = match handle.try_submit(graph, options) {
+        Err(_) => {
+            let _ = reply_err(conn, wire::ERR_SHUTTING_DOWN, "daemon is draining");
+            return ClassifyOutcome::Close;
+        }
+        Ok(TrySubmit::Busy { .. }) => {
+            // Explicit wire-level back-pressure: the queue is full and
+            // the request was NOT accepted. Retry is the client's call.
+            return if wire::write_frame(conn, wire::RESP_BUSY, &[]).is_ok() {
+                ClassifyOutcome::Continue
+            } else {
+                ClassifyOutcome::Close
+            };
+        }
+        Ok(TrySubmit::Accepted(rx)) => rx,
+    };
+    match rx.recv() {
+        Ok(Ok(res)) => {
+            shared.record_latency(t0.elapsed().as_secs_f64() * 1e3);
+            if wire::write_frame(conn, wire::RESP_RESULT, &wire::encode_result(&res)).is_ok() {
+                ClassifyOutcome::Continue
+            } else {
+                ClassifyOutcome::Close
+            }
+        }
+        Ok(Err(e)) => {
+            if reply_err(conn, wire::ERR_INTERNAL, &format!("{e:#}")) {
+                ClassifyOutcome::Continue
+            } else {
+                ClassifyOutcome::Close
+            }
+        }
+        Err(_) => {
+            let _ = reply_err(conn, wire::ERR_INTERNAL, "worker dropped the reply channel");
+            ClassifyOutcome::Close
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bind_addr_parses_both_flavors() {
+        assert_eq!(
+            BindAddr::parse("unix:/tmp/groot.sock").unwrap(),
+            BindAddr::Unix(PathBuf::from("/tmp/groot.sock"))
+        );
+        assert_eq!(
+            BindAddr::parse("127.0.0.1:7878").unwrap(),
+            BindAddr::Tcp("127.0.0.1:7878".into())
+        );
+        assert!(BindAddr::parse("unix:").is_err());
+        assert!(BindAddr::parse("no-port-here").is_err());
+        assert_eq!(BindAddr::parse("unix:/a.sock").unwrap().to_string(), "unix:/a.sock");
+        assert_eq!(BindAddr::parse("[::1]:9").unwrap().to_string(), "[::1]:9");
+    }
+}

@@ -1,0 +1,26 @@
+//! Network serving subsystem — the socket face of the L3 serving runtime.
+//!
+//! Three layers, strictly stacked:
+//!
+//! * [`wire`] — the versioned, length-prefixed binary frame codec. Pure
+//!   functions over byte buffers; no sockets, no threads. Every frame is
+//!   `magic | kind | u32 payload length | payload`, with a strict
+//!   maximum frame size enforced *before* the payload allocates.
+//! * [`daemon`] — `groot serve`: an accept loop over TCP or a Unix
+//!   socket feeding the multi-worker [`crate::coordinator::server::Server`]
+//!   through `try_submit` (queue saturation becomes an explicit BUSY
+//!   reply, never an opaque stall). SIGTERM triggers the drain-on-shutdown
+//!   contract: the listener closes first, in-flight and queued requests
+//!   are answered, then the workers join.
+//! * [`client`] — `GrootClient`, the blocking client library the
+//!   `groot client` subcommands and the serve benchmarks drive.
+//!
+//! Everything is std-only (`std::net` + `std::os::unix::net`); there is
+//! no async runtime and no external protocol dependency.
+
+pub mod client;
+pub mod daemon;
+pub mod wire;
+
+pub use client::{GrootClient, Reply};
+pub use daemon::{install_sigterm_handler, sigterm_pending, BindAddr, NetConfig, NetDaemon};

@@ -1,0 +1,698 @@
+//! Versioned length-prefixed binary wire protocol.
+//!
+//! Frame grammar (all integers little-endian):
+//!
+//! ```text
+//! frame   := magic kind len payload
+//! magic   := "GRT1"                  (4 bytes; version is IN the magic)
+//! kind    := u8                      (REQ_* from clients, RESP_* back)
+//! len     := u32                     (payload byte count)
+//! payload := len bytes               (kind-specific, see encode_*)
+//! ```
+//!
+//! Hard rules enforced by [`read_frame`]:
+//! * a frame whose magic is wrong is rejected without reading further —
+//!   the stream is unsynchronized and must be closed;
+//! * `len` is checked against the configured maximum **before** the
+//!   payload buffer allocates, so an adversarial 4 GiB length prefix
+//!   costs nothing;
+//! * EOF cleanly between frames is [`FrameError::Eof`] (normal client
+//!   disconnect); EOF inside a frame is [`FrameError::Truncated`].
+//!
+//! Payload encodings are hand-rolled (the crate has no serde): fixed
+//! little-endian scalars and u64-counted vectors, mirrored by a bounds-
+//! checked [`Reader`] on the decode side. Every decoder finishes with a
+//! trailing-bytes check — a frame that parses but has leftover bytes is
+//! malformed, not "close enough".
+
+use crate::coordinator::server::VerifyOptions;
+use crate::coordinator::{ClassifyResult, RunStats};
+use anyhow::{bail, Result};
+use std::io::{Read, Write};
+use std::time::Duration;
+
+/// Frame magic: protocol identity AND version. A breaking change mints
+/// "GRT2" — old peers then fail with BadMagic instead of misparsing.
+pub const MAGIC: [u8; 4] = *b"GRT1";
+/// magic(4) + kind(1) + payload_len(4)
+pub const HEADER_LEN: usize = 9;
+/// Default maximum payload size accepted per frame (64 MiB) — far above
+/// any realistic circuit column store, far below a memory-exhaustion DoS.
+pub const DEFAULT_MAX_FRAME: u32 = 64 * 1024 * 1024;
+
+// ---- frame kinds -------------------------------------------------------
+pub const REQ_CLASSIFY: u8 = 0x01;
+pub const REQ_STATS: u8 = 0x02;
+pub const RESP_RESULT: u8 = 0x81;
+pub const RESP_ERROR: u8 = 0x82;
+pub const RESP_BUSY: u8 = 0x83;
+pub const RESP_STATS: u8 = 0x84;
+
+// ---- structured error codes (RESP_ERROR payload) -----------------------
+/// Frame or payload did not parse; the connection is closed after this.
+pub const ERR_MALFORMED: u16 = 1;
+/// Frame parsed but the request content is invalid (e.g. bad AIGER text).
+pub const ERR_BAD_REQUEST: u16 = 2;
+/// The pipeline failed serving a well-formed request.
+pub const ERR_INTERNAL: u16 = 3;
+/// The daemon is draining; no new work is accepted.
+pub const ERR_SHUTTING_DOWN: u16 = 4;
+/// Unknown request kind (client newer than server).
+pub const ERR_UNSUPPORTED: u16 = 5;
+
+/// Why a frame read failed. `Io`/`Eof`/`Truncated` are transport-fatal;
+/// `BadMagic`/`Oversize` are protocol-fatal (the daemon sends one ERROR
+/// reply, then closes).
+#[derive(Debug)]
+pub enum FrameError {
+    Io(std::io::Error),
+    /// First four bytes were not [`MAGIC`].
+    BadMagic([u8; 4]),
+    /// Declared payload length exceeds the configured maximum.
+    Oversize { len: u32, max: u32 },
+    /// Clean EOF at a frame boundary — the peer hung up between frames.
+    Eof,
+    /// EOF mid-frame — the peer died (or lied about `len`).
+    Truncated,
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::Io(e) => write!(f, "frame io error: {e}"),
+            FrameError::BadMagic(m) => write!(f, "bad frame magic {m:02x?}"),
+            FrameError::Oversize { len, max } => {
+                write!(f, "frame payload {len} bytes exceeds maximum {max}")
+            }
+            FrameError::Eof => write!(f, "connection closed"),
+            FrameError::Truncated => write!(f, "connection closed mid-frame"),
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+/// Write one frame. Payloads larger than `u32::MAX` are an error (the
+/// length prefix cannot express them).
+pub fn write_frame<W: Write>(w: &mut W, kind: u8, payload: &[u8]) -> std::io::Result<()> {
+    let len = u32::try_from(payload.len()).map_err(|_| {
+        std::io::Error::new(std::io::ErrorKind::InvalidInput, "frame payload exceeds u32")
+    })?;
+    let mut header = [0u8; HEADER_LEN];
+    header[..4].copy_from_slice(&MAGIC);
+    header[4] = kind;
+    header[5..9].copy_from_slice(&len.to_le_bytes());
+    w.write_all(&header)?;
+    w.write_all(payload)?;
+    w.flush()
+}
+
+/// Read exactly `buf.len()` bytes; distinguishes EOF-before-anything
+/// (`had_any = false` → Eof) from EOF mid-read (Truncated).
+fn read_exact_or(r: &mut impl Read, buf: &mut [u8], mut had_any: bool) -> Result<(), FrameError> {
+    let mut filled = 0;
+    while filled < buf.len() {
+        match r.read(&mut buf[filled..]) {
+            Ok(0) => {
+                return Err(if had_any || filled > 0 {
+                    FrameError::Truncated
+                } else {
+                    FrameError::Eof
+                })
+            }
+            Ok(n) => {
+                filled += n;
+                had_any = true;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(FrameError::Io(e)),
+        }
+    }
+    Ok(())
+}
+
+/// Read one frame: `(kind, payload)`. See [`FrameError`] for the failure
+/// taxonomy; `max_len` bounds the payload before it allocates.
+pub fn read_frame(r: &mut impl Read, max_len: u32) -> Result<(u8, Vec<u8>), FrameError> {
+    let mut header = [0u8; HEADER_LEN];
+    read_exact_or(r, &mut header, false)?;
+    if header[..4] != MAGIC {
+        return Err(FrameError::BadMagic([header[0], header[1], header[2], header[3]]));
+    }
+    let kind = header[4];
+    let len = u32::from_le_bytes([header[5], header[6], header[7], header[8]]);
+    if len > max_len {
+        return Err(FrameError::Oversize { len, max: max_len });
+    }
+    let mut payload = vec![0u8; len as usize];
+    read_exact_or(r, &mut payload, true)?;
+    Ok((kind, payload))
+}
+
+// ---- little-endian scalar helpers --------------------------------------
+
+fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_bits().to_le_bytes());
+}
+
+/// Bounds-checked payload reader. Every `decode_*` constructs one, pulls
+/// typed fields in layout order, and calls [`Reader::finish`].
+struct Reader<'a> {
+    buf: &'a [u8],
+    at: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, at: 0 }
+    }
+
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8]> {
+        let end = self.at.checked_add(n).filter(|&e| e <= self.buf.len());
+        match end {
+            Some(end) => {
+                let s = &self.buf[self.at..end];
+                self.at = end;
+                Ok(s)
+            }
+            None => bail!(
+                "truncated payload: {what} needs {n} bytes at offset {}, have {}",
+                self.at,
+                self.buf.len() - self.at
+            ),
+        }
+    }
+
+    fn u8(&mut self, what: &str) -> Result<u8> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    fn u16(&mut self, what: &str) -> Result<u16> {
+        let b = self.take(2, what)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    fn u64(&mut self, what: &str) -> Result<u64> {
+        let b = self.take(8, what)?;
+        Ok(u64::from_le_bytes(b.try_into().unwrap()))
+    }
+
+    fn f64(&mut self, what: &str) -> Result<f64> {
+        Ok(f64::from_bits(self.u64(what)?))
+    }
+
+    /// A u64 element count, sanity-bounded by the bytes actually left in
+    /// the payload — a hostile count can never cause an over-allocation.
+    fn count(&mut self, elem_bytes: usize, what: &str) -> Result<usize> {
+        let n = self.u64(what)?;
+        let remaining = self.buf.len() - self.at;
+        let need =
+            usize::try_from(n).ok().and_then(|n| n.checked_mul(elem_bytes.max(1)));
+        match need {
+            Some(need) if need <= remaining => Ok(n as usize),
+            _ => bail!("{what} count {n} exceeds the {remaining} payload bytes remaining"),
+        }
+    }
+
+    fn finish(self, what: &str) -> Result<()> {
+        if self.at != self.buf.len() {
+            bail!("{what}: {} trailing bytes after payload", self.buf.len() - self.at);
+        }
+        Ok(())
+    }
+}
+
+// ---- classify request ---------------------------------------------------
+
+/// The circuit half of a classify request: either raw ASCII-AIGER text
+/// (parsed server-side, full ingestion path) or a pre-encoded compact
+/// [`crate::graph::CircuitGraph`] column store
+/// ([`crate::graph::CircuitGraph::to_bytes`]) that decodes without
+/// re-deriving features.
+#[derive(Clone, Debug, PartialEq)]
+pub enum GraphPayload {
+    AagText(String),
+    CircuitBytes(Vec<u8>),
+}
+
+const FLAG_HAS_PARTITIONS: u8 = 1 << 0;
+const FLAG_HAS_REGROW: u8 = 1 << 1;
+const FLAG_REGROW_VALUE: u8 = 1 << 2;
+const FLAG_HAS_SEED: u8 = 1 << 3;
+
+const GRAPH_TAG_AAG: u8 = 0;
+const GRAPH_TAG_CIRCUIT: u8 = 1;
+
+/// Payload layout:
+/// `flags u8 | [partitions u64] | [seed u64] | tag u8 | len u64 | bytes`.
+/// Option presence lives in `flags` (bit0 partitions, bit1 regrow
+/// present, bit2 regrow value, bit3 seed).
+pub fn encode_classify(options: &VerifyOptions, graph: &GraphPayload) -> Vec<u8> {
+    let bytes: &[u8] = match graph {
+        GraphPayload::AagText(t) => t.as_bytes(),
+        GraphPayload::CircuitBytes(b) => b,
+    };
+    let mut out = Vec::with_capacity(1 + 8 + 8 + 1 + 8 + bytes.len());
+    let mut flags = 0u8;
+    if options.partitions.is_some() {
+        flags |= FLAG_HAS_PARTITIONS;
+    }
+    if let Some(r) = options.regrow {
+        flags |= FLAG_HAS_REGROW;
+        if r {
+            flags |= FLAG_REGROW_VALUE;
+        }
+    }
+    if options.seed.is_some() {
+        flags |= FLAG_HAS_SEED;
+    }
+    out.push(flags);
+    if let Some(p) = options.partitions {
+        put_u64(&mut out, p as u64);
+    }
+    if let Some(s) = options.seed {
+        put_u64(&mut out, s);
+    }
+    out.push(match graph {
+        GraphPayload::AagText(_) => GRAPH_TAG_AAG,
+        GraphPayload::CircuitBytes(_) => GRAPH_TAG_CIRCUIT,
+    });
+    put_u64(&mut out, bytes.len() as u64);
+    out.extend_from_slice(bytes);
+    out
+}
+
+pub fn decode_classify(payload: &[u8]) -> Result<(VerifyOptions, GraphPayload)> {
+    let mut rd = Reader::new(payload);
+    let flags = rd.u8("flags")?;
+    if flags & !(FLAG_HAS_PARTITIONS | FLAG_HAS_REGROW | FLAG_REGROW_VALUE | FLAG_HAS_SEED) != 0 {
+        bail!("classify request: unknown option flags {flags:#04x}");
+    }
+    let partitions = if flags & FLAG_HAS_PARTITIONS != 0 {
+        let p = rd.u64("partitions")?;
+        Some(usize::try_from(p).map_err(|_| anyhow::anyhow!("partitions {p} out of range"))?)
+    } else {
+        None
+    };
+    let regrow =
+        (flags & FLAG_HAS_REGROW != 0).then_some(flags & FLAG_REGROW_VALUE != 0);
+    let seed = if flags & FLAG_HAS_SEED != 0 { Some(rd.u64("seed")?) } else { None };
+    let tag = rd.u8("graph tag")?;
+    let len = rd.count(1, "graph bytes")?;
+    let bytes = rd.take(len, "graph bytes")?;
+    let graph = match tag {
+        GRAPH_TAG_AAG => GraphPayload::AagText(
+            std::str::from_utf8(bytes)
+                .map_err(|e| anyhow::anyhow!("aag payload is not utf-8: {e}"))?
+                .to_string(),
+        ),
+        GRAPH_TAG_CIRCUIT => GraphPayload::CircuitBytes(bytes.to_vec()),
+        other => bail!("classify request: unknown graph tag {other}"),
+    };
+    rd.finish("classify request")?;
+    Ok((VerifyOptions { partitions, regrow, seed }, graph))
+}
+
+// ---- classify result ----------------------------------------------------
+
+const RESULT_FLAG_REGROWN: u8 = 1 << 0;
+const RESULT_FLAG_CACHE_HIT: u8 = 1 << 1;
+
+/// Payload layout: `npred u64 | pred bytes | accuracy f64 | 8 × u64
+/// counters | 4 × u64 stage nanos | flags u8` — the full [`RunStats`]
+/// surface, so a socket client sees exactly what an in-process caller
+/// sees (including `plan_cache_hit`, which the warm-restart tests read).
+pub fn encode_result(res: &ClassifyResult) -> Vec<u8> {
+    let s = &res.stats;
+    let mut out = Vec::with_capacity(8 + res.pred.len() + 8 + 12 * 8 + 1);
+    put_u64(&mut out, res.pred.len() as u64);
+    out.extend_from_slice(&res.pred);
+    put_f64(&mut out, res.accuracy);
+    for v in [
+        s.num_partitions,
+        s.total_nodes,
+        s.total_boundary_nodes,
+        s.total_crossing_edges,
+        s.max_partition_nodes,
+        s.peak_bucket_n,
+        s.batch_size,
+        s.peak_resident_bytes,
+    ] {
+        put_u64(&mut out, v as u64);
+    }
+    for d in [s.partition_time, s.regrowth_time, s.pack_time, s.infer_time] {
+        put_u64(&mut out, d.as_nanos().min(u64::MAX as u128) as u64);
+    }
+    let mut flags = 0u8;
+    if s.regrown {
+        flags |= RESULT_FLAG_REGROWN;
+    }
+    if s.plan_cache_hit {
+        flags |= RESULT_FLAG_CACHE_HIT;
+    }
+    out.push(flags);
+    out
+}
+
+pub fn decode_result(payload: &[u8]) -> Result<ClassifyResult> {
+    let mut rd = Reader::new(payload);
+    let npred = rd.count(1, "pred")?;
+    let pred = rd.take(npred, "pred")?.to_vec();
+    let accuracy = rd.f64("accuracy")?;
+    let mut counters = [0u64; 8];
+    for (i, c) in counters.iter_mut().enumerate() {
+        *c = rd.u64(&format!("counter {i}"))?;
+    }
+    let mut nanos = [0u64; 4];
+    for (i, n) in nanos.iter_mut().enumerate() {
+        *n = rd.u64(&format!("stage nanos {i}"))?;
+    }
+    let flags = rd.u8("result flags")?;
+    rd.finish("classify result")?;
+    let stats = RunStats {
+        num_partitions: counters[0] as usize,
+        regrown: flags & RESULT_FLAG_REGROWN != 0,
+        partition_time: Duration::from_nanos(nanos[0]),
+        regrowth_time: Duration::from_nanos(nanos[1]),
+        pack_time: Duration::from_nanos(nanos[2]),
+        infer_time: Duration::from_nanos(nanos[3]),
+        total_nodes: counters[1] as usize,
+        total_boundary_nodes: counters[2] as usize,
+        total_crossing_edges: counters[3] as usize,
+        max_partition_nodes: counters[4] as usize,
+        peak_bucket_n: counters[5] as usize,
+        plan_cache_hit: flags & RESULT_FLAG_CACHE_HIT != 0,
+        batch_size: counters[6] as usize,
+        peak_resident_bytes: counters[7] as usize,
+    };
+    Ok(ClassifyResult { pred, accuracy, stats })
+}
+
+// ---- structured errors ---------------------------------------------------
+
+/// Payload layout: `code u16 | len u32 | utf-8 message`.
+pub fn encode_error(code: u16, message: &str) -> Vec<u8> {
+    let msg = message.as_bytes();
+    let msg = &msg[..msg.len().min(u32::MAX as usize)];
+    let mut out = Vec::with_capacity(2 + 4 + msg.len());
+    put_u16(&mut out, code);
+    out.extend_from_slice(&(msg.len() as u32).to_le_bytes());
+    out.extend_from_slice(msg);
+    out
+}
+
+pub fn decode_error(payload: &[u8]) -> Result<(u16, String)> {
+    let mut rd = Reader::new(payload);
+    let code = rd.u16("error code")?;
+    let len = rd.take(4, "error message length")?;
+    let len = u32::from_le_bytes(len.try_into().unwrap()) as usize;
+    let msg = rd.take(len, "error message")?;
+    let msg = std::str::from_utf8(msg)
+        .map_err(|e| anyhow::anyhow!("error message is not utf-8: {e}"))?
+        .to_string();
+    rd.finish("error reply")?;
+    Ok((code, msg))
+}
+
+// ---- server stats --------------------------------------------------------
+
+/// The STATS reply: queue/worker/plan-cache observability from
+/// [`crate::coordinator::server::ServerStats`] plus the daemon-level
+/// request latency distribution.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct WireStats {
+    pub queue_depth: u64,
+    pub workers: u64,
+    pub per_worker_requests: Vec<u64>,
+    pub plan_cache_hits: u64,
+    pub plan_cache_misses: u64,
+    pub plan_disk_hits: u64,
+    pub plan_store_writes: u64,
+    pub plan_store_quarantined: u64,
+    /// Classify requests the daemon has answered with RESP_RESULT.
+    pub requests_served: u64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+}
+
+/// Payload layout: `8 × u64 scalars | 3 × f64 percentiles | nworkers u64
+/// | per-worker u64s`.
+pub fn encode_stats(s: &WireStats) -> Vec<u8> {
+    let mut out = Vec::with_capacity(8 * 12 + 8 * s.per_worker_requests.len());
+    for v in [
+        s.queue_depth,
+        s.workers,
+        s.plan_cache_hits,
+        s.plan_cache_misses,
+        s.plan_disk_hits,
+        s.plan_store_writes,
+        s.plan_store_quarantined,
+        s.requests_served,
+    ] {
+        put_u64(&mut out, v);
+    }
+    for v in [s.p50_ms, s.p95_ms, s.p99_ms] {
+        put_f64(&mut out, v);
+    }
+    put_u64(&mut out, s.per_worker_requests.len() as u64);
+    for &v in &s.per_worker_requests {
+        put_u64(&mut out, v);
+    }
+    out
+}
+
+pub fn decode_stats(payload: &[u8]) -> Result<WireStats> {
+    let mut rd = Reader::new(payload);
+    let mut scalars = [0u64; 8];
+    for (i, v) in scalars.iter_mut().enumerate() {
+        *v = rd.u64(&format!("stats scalar {i}"))?;
+    }
+    let p50_ms = rd.f64("p50")?;
+    let p95_ms = rd.f64("p95")?;
+    let p99_ms = rd.f64("p99")?;
+    let n = rd.count(8, "per-worker counts")?;
+    let mut per_worker_requests = Vec::with_capacity(n);
+    for _ in 0..n {
+        per_worker_requests.push(rd.u64("per-worker count")?);
+    }
+    rd.finish("stats reply")?;
+    Ok(WireStats {
+        queue_depth: scalars[0],
+        workers: scalars[1],
+        per_worker_requests,
+        plan_cache_hits: scalars[2],
+        plan_cache_misses: scalars[3],
+        plan_disk_hits: scalars[4],
+        plan_store_writes: scalars[5],
+        plan_store_quarantined: scalars[6],
+        requests_served: scalars[7],
+        p50_ms,
+        p95_ms,
+        p99_ms,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn frame_roundtrip(kind: u8, payload: &[u8]) -> (u8, Vec<u8>) {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, kind, payload).unwrap();
+        read_frame(&mut buf.as_slice(), DEFAULT_MAX_FRAME).unwrap()
+    }
+
+    #[test]
+    fn frames_roundtrip() {
+        for (kind, payload) in [
+            (REQ_CLASSIFY, b"hello".to_vec()),
+            (REQ_STATS, Vec::new()),
+            (RESP_RESULT, vec![0u8; 10_000]),
+        ] {
+            let (k, p) = frame_roundtrip(kind, &payload);
+            assert_eq!((k, p), (kind, payload));
+        }
+    }
+
+    #[test]
+    fn read_frame_rejects_bad_magic_oversize_and_truncation() {
+        // wrong magic
+        let mut buf = Vec::new();
+        write_frame(&mut buf, REQ_STATS, b"").unwrap();
+        buf[0] = b'X';
+        assert!(matches!(
+            read_frame(&mut buf.as_slice(), DEFAULT_MAX_FRAME),
+            Err(FrameError::BadMagic(_))
+        ));
+
+        // oversize declared length is rejected before allocation
+        let mut buf = Vec::new();
+        write_frame(&mut buf, REQ_CLASSIFY, &vec![0u8; 100]).unwrap();
+        buf[5..9].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(matches!(
+            read_frame(&mut buf.as_slice(), DEFAULT_MAX_FRAME),
+            Err(FrameError::Oversize { len: u32::MAX, .. })
+        ));
+
+        // truncation at every prefix length inside the frame
+        let mut full = Vec::new();
+        write_frame(&mut full, REQ_CLASSIFY, b"abcdef").unwrap();
+        for cut in 1..full.len() {
+            let err = read_frame(&mut full[..cut].to_vec().as_slice(), DEFAULT_MAX_FRAME)
+                .expect_err("truncated frame accepted");
+            assert!(
+                matches!(err, FrameError::Truncated | FrameError::BadMagic(_)),
+                "cut {cut}: {err}"
+            );
+        }
+        // clean EOF at a boundary is Eof, not Truncated
+        let mut empty: &[u8] = &[];
+        assert!(matches!(read_frame(&mut empty, DEFAULT_MAX_FRAME), Err(FrameError::Eof)));
+    }
+
+    #[test]
+    fn classify_request_roundtrips_all_option_shapes() {
+        let graphs = [
+            GraphPayload::AagText("aag 0 0 0 0 0\n".into()),
+            GraphPayload::CircuitBytes(vec![1, 2, 3, 4]),
+        ];
+        let options = [
+            VerifyOptions::default(),
+            VerifyOptions { partitions: Some(8), regrow: Some(false), seed: Some(7) },
+            VerifyOptions { partitions: None, regrow: Some(true), seed: None },
+            VerifyOptions { partitions: Some(3), regrow: None, seed: Some(u64::MAX) },
+        ];
+        for g in &graphs {
+            for o in &options {
+                let enc = encode_classify(o, g);
+                let (o2, g2) = decode_classify(&enc).unwrap();
+                assert_eq!(o2.partitions, o.partitions);
+                assert_eq!(o2.regrow, o.regrow);
+                assert_eq!(o2.seed, o.seed);
+                assert_eq!(&g2, g);
+            }
+        }
+    }
+
+    #[test]
+    fn classify_request_rejects_malformed_payloads() {
+        let good = encode_classify(
+            &VerifyOptions::partitions(4),
+            &GraphPayload::CircuitBytes(vec![9; 16]),
+        );
+        // truncation at every cut
+        for cut in 0..good.len() {
+            assert!(decode_classify(&good[..cut]).is_err(), "cut {cut} accepted");
+        }
+        // trailing junk
+        let mut junk = good.clone();
+        junk.push(0);
+        assert!(decode_classify(&junk).is_err());
+        // unknown flags
+        let mut bad = good.clone();
+        bad[0] |= 1 << 7;
+        assert!(decode_classify(&bad).is_err());
+        // unknown graph tag (tag sits after flags + partitions u64)
+        let mut bad = good.clone();
+        bad[9] = 42;
+        assert!(decode_classify(&bad).is_err());
+        // hostile length prefix: count far beyond the buffer
+        let mut bad = good;
+        let len_at = 10;
+        bad[len_at..len_at + 8].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(decode_classify(&bad).is_err());
+        // non-utf8 aag text
+        let mut enc =
+            encode_classify(&VerifyOptions::default(), &GraphPayload::AagText("ok".into()));
+        let n = enc.len();
+        enc[n - 1] = 0xFF;
+        assert!(decode_classify(&enc).is_err());
+    }
+
+    #[test]
+    fn result_roundtrips_with_full_stats() {
+        let res = ClassifyResult {
+            pred: vec![0, 3, 1, 4, 4, 2],
+            accuracy: 0.875,
+            stats: RunStats {
+                num_partitions: 4,
+                regrown: true,
+                partition_time: Duration::from_micros(1234),
+                regrowth_time: Duration::from_micros(567),
+                pack_time: Duration::from_micros(89),
+                infer_time: Duration::from_micros(1011),
+                total_nodes: 6,
+                total_boundary_nodes: 2,
+                total_crossing_edges: 5,
+                max_partition_nodes: 3,
+                peak_bucket_n: 12,
+                plan_cache_hit: true,
+                batch_size: 4,
+                peak_resident_bytes: 4096,
+            },
+        };
+        let enc = encode_result(&res);
+        let dec = decode_result(&enc).unwrap();
+        assert_eq!(dec.pred, res.pred);
+        assert_eq!(dec.accuracy, res.accuracy);
+        let (a, b) = (&dec.stats, &res.stats);
+        assert_eq!(a.num_partitions, b.num_partitions);
+        assert_eq!(a.regrown, b.regrown);
+        assert_eq!(a.partition_time, b.partition_time);
+        assert_eq!(a.regrowth_time, b.regrowth_time);
+        assert_eq!(a.pack_time, b.pack_time);
+        assert_eq!(a.infer_time, b.infer_time);
+        assert_eq!(a.total_nodes, b.total_nodes);
+        assert_eq!(a.total_boundary_nodes, b.total_boundary_nodes);
+        assert_eq!(a.total_crossing_edges, b.total_crossing_edges);
+        assert_eq!(a.max_partition_nodes, b.max_partition_nodes);
+        assert_eq!(a.peak_bucket_n, b.peak_bucket_n);
+        assert_eq!(a.plan_cache_hit, b.plan_cache_hit);
+        assert_eq!(a.batch_size, b.batch_size);
+        assert_eq!(a.peak_resident_bytes, b.peak_resident_bytes);
+        // decoder is strict about truncation + trailing bytes
+        for cut in 0..enc.len() {
+            assert!(decode_result(&enc[..cut]).is_err(), "cut {cut}");
+        }
+        let mut junk = enc;
+        junk.push(1);
+        assert!(decode_result(&junk).is_err());
+    }
+
+    #[test]
+    fn error_and_stats_roundtrip() {
+        let enc = encode_error(ERR_BAD_REQUEST, "line 3: bad output literal \"x7\"");
+        let (code, msg) = decode_error(&enc).unwrap();
+        assert_eq!(code, ERR_BAD_REQUEST);
+        assert!(msg.contains("line 3"));
+
+        let stats = WireStats {
+            queue_depth: 2,
+            workers: 4,
+            per_worker_requests: vec![10, 11, 12, 13],
+            plan_cache_hits: 7,
+            plan_cache_misses: 3,
+            plan_disk_hits: 1,
+            plan_store_writes: 3,
+            plan_store_quarantined: 0,
+            requests_served: 46,
+            p50_ms: 1.5,
+            p95_ms: 9.25,
+            p99_ms: 20.0,
+        };
+        let enc = encode_stats(&stats);
+        assert_eq!(decode_stats(&enc).unwrap(), stats);
+        for cut in 0..enc.len() {
+            assert!(decode_stats(&enc[..cut]).is_err(), "cut {cut}");
+        }
+    }
+}

@@ -70,8 +70,20 @@ impl Partitioning {
     }
 }
 
+/// Process-wide count of [`partition_kway`] invocations. The persistent
+/// plan store's warm-restart contract is "zero re-partitioning for a
+/// known design" — this counter is how tests assert it (delta must be 0
+/// across a served repeat request), rather than trusting timing.
+static KWAY_INVOCATIONS: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+
+/// Total [`partition_kway`] calls since process start (monotone).
+pub fn kway_invocations() -> u64 {
+    KWAY_INVOCATIONS.load(std::sync::atomic::Ordering::SeqCst)
+}
+
 /// Multilevel k-way partitioning (the default used by the coordinator).
 pub fn partition_kway(csr: &Csr, k: usize, seed: u64) -> Partitioning {
+    KWAY_INVOCATIONS.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
     multilevel::partition_kway(csr, k, seed)
 }
 

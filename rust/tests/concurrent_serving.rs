@@ -298,7 +298,7 @@ fn try_submit_sheds_load_when_the_bounded_queue_is_full() {
     // hand the request back.
     match handle.try_submit(graph.clone(), opts.clone()).unwrap() {
         TrySubmit::Busy { graph: returned, .. } => {
-            assert_eq!(returned.num_nodes, graph.num_nodes, "request not handed back intact")
+            assert_eq!(returned.num_nodes(), graph.num_nodes, "request not handed back intact")
         }
         TrySubmit::Accepted(_) => panic!("queue of bound 2 accepted a 3rd queued request"),
     }

@@ -1,0 +1,573 @@
+//! Network serving subsystem tests: predictions over the socket must be
+//! byte-identical to in-process `Session::classify` across the family ×
+//! options matrix; AAG-text and circuit-bytes payloads must agree; the
+//! daemon must answer BUSY under back-pressure, drain in-flight and
+//! queued requests on shutdown (programmatic and SIGTERM) while refusing
+//! new connections, survive malformed/oversized/truncated frames, and —
+//! restarted against a populated `--plan-dir` — answer the first repeat
+//! request from the persisted plan with ZERO partitioner invocations.
+//!
+//! Every test takes the `SERIAL` lock: the partitioner invocation
+//! counter and the SIGTERM flag are process-wide, and Unix socket paths
+//! + gated backends don't mix across concurrently running tests.
+
+use groot::backend::{InferenceBackend, NativeBackend, PartitionInput, PartitionLogits};
+use groot::coordinator::server::{Server, VerifyOptions};
+use groot::coordinator::{
+    Backend, PlanStore, Session, SessionConfig, ShardedPlanCache,
+};
+use groot::datasets::{self, DatasetKind};
+use groot::features::{AigSource, EdaGraph};
+use groot::gnn::{SageLayer, SageModel};
+use groot::graph::CircuitGraph;
+use groot::net::daemon::clear_sigterm;
+use groot::net::{wire, BindAddr, GrootClient, NetConfig, NetDaemon, Reply};
+use groot::partition::kway_invocations;
+use std::path::PathBuf;
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn serial() -> std::sync::MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Deterministic 4→16→5 model with REAL aggregation (nonzero w_neigh):
+/// predictions depend on partitioning + re-growth, so socket parity is a
+/// meaningful check, not a vacuous one.
+fn aggregating_model() -> SageModel {
+    let wave = |n: usize, scale: f32| -> Vec<f32> {
+        (0..n).map(|i| ((i as f32 * 0.7).sin()) * scale).collect()
+    };
+    SageModel {
+        layers: vec![
+            SageLayer {
+                din: 4,
+                dout: 16,
+                w_self: wave(4 * 16, 0.3),
+                w_neigh: wave(4 * 16, 0.2),
+                bias: wave(16, 0.1),
+            },
+            SageLayer {
+                din: 16,
+                dout: 5,
+                w_self: wave(16 * 5, 0.3),
+                w_neigh: wave(16 * 5, 0.2),
+                bias: wave(5, 0.1),
+            },
+        ],
+    }
+}
+
+fn native_factory(threads: usize) -> impl Fn() -> anyhow::Result<Backend> + Send + Sync {
+    move || Ok(Box::new(NativeBackend::with_threads(aggregating_model(), threads)) as Backend)
+}
+
+/// Unique-per-test Unix socket path (kept short: sun_path is ~108 bytes).
+fn sock_path(tag: &str) -> PathBuf {
+    let p = std::env::temp_dir().join(format!("groot_net_{tag}_{}.sock", std::process::id()));
+    let _ = std::fs::remove_file(&p);
+    p
+}
+
+/// Fresh per-test plan-store directory.
+fn plan_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("groot_plans_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// Sequential ground truth for one (graph, options) pair: a fresh
+/// single-threaded session, the monolithic in-process classify path.
+fn sequential_pred(graph: &EdaGraph, opts: &VerifyOptions) -> Vec<u8> {
+    let base = SessionConfig { threads: 1, ..Default::default() };
+    let resolved = opts.resolve(&base);
+    let session = Session::native(
+        aggregating_model(),
+        SessionConfig {
+            num_partitions: resolved.partitions,
+            regrow: resolved.regrow,
+            seed: resolved.seed,
+            threads: 1,
+            workers: 1,
+            ..Default::default()
+        },
+    );
+    session.classify(graph).unwrap().pred
+}
+
+fn expect_result(reply: Reply) -> groot::coordinator::ClassifyResult {
+    match reply {
+        Reply::Result(r) => r,
+        Reply::Busy => panic!("unexpected BUSY from an idle daemon"),
+    }
+}
+
+#[test]
+fn socket_predictions_byte_identical_to_in_process_session() {
+    let _g = serial();
+    let server = Server::spawn(
+        SessionConfig { workers: 2, threads: 1, ..Default::default() },
+        native_factory(1),
+    );
+    let sock = sock_path("parity");
+    let daemon =
+        NetDaemon::bind(&BindAddr::Unix(sock.clone()), server, NetConfig::default()).unwrap();
+    let mut client = GrootClient::connect(&BindAddr::Unix(sock)).unwrap();
+
+    for kind in [DatasetKind::Csa, DatasetKind::Booth, DatasetKind::Wallace] {
+        let graph = datasets::build(kind, 6).unwrap();
+        let circuit = graph.to_circuit().unwrap();
+        for partitions in [2usize, 4] {
+            for regrow in [true, false] {
+                for seed in [0u64, 7] {
+                    let opts = VerifyOptions {
+                        partitions: Some(partitions),
+                        regrow: Some(regrow),
+                        seed: Some(seed),
+                    };
+                    let res = expect_result(
+                        client.classify_circuit(&circuit, &opts).unwrap(),
+                    );
+                    assert_eq!(
+                        res.pred,
+                        sequential_pred(&graph, &opts),
+                        "{kind:?} p={partitions} regrow={regrow} seed={seed}: \
+                         socket prediction diverged from Session::classify"
+                    );
+                    assert_eq!(res.pred.len(), graph.num_nodes);
+                }
+            }
+        }
+    }
+    daemon.shutdown();
+}
+
+#[test]
+fn aag_text_and_circuit_bytes_payloads_agree() {
+    let _g = serial();
+    let server = Server::spawn(
+        SessionConfig { workers: 1, threads: 1, ..Default::default() },
+        native_factory(1),
+    );
+    let sock = sock_path("payloads");
+    let daemon =
+        NetDaemon::bind(&BindAddr::Unix(sock.clone()), server, NetConfig::default()).unwrap();
+    let mut client = GrootClient::connect(&BindAddr::Unix(sock)).unwrap();
+
+    // Round-trip the SAME design through both payload encodings: write
+    // the aag, parse it back, and stream it into a client-side circuit
+    // exactly the way the daemon ingests the text payload.
+    let aig = groot::aig::mult::csa_multiplier(4);
+    let aag = std::env::temp_dir()
+        .join(format!("groot_net_payloads_{}.aag", std::process::id()));
+    groot::aig::aiger::write_aag(&aig, &aag).unwrap();
+    let text = std::fs::read_to_string(&aag).unwrap();
+    let parsed = groot::aig::aiger::read_aag_text("m4", &text).unwrap();
+    let circuit =
+        CircuitGraph::from_source(AigSource::new(parsed, groot::graph::DEFAULT_CHUNK_NODES))
+            .unwrap();
+
+    let opts = VerifyOptions {
+        partitions: Some(3),
+        regrow: Some(true),
+        seed: Some(1),
+    };
+    let from_bytes = expect_result(client.classify_circuit(&circuit, &opts).unwrap());
+    let from_text = expect_result(client.classify_aag(&text, &opts).unwrap());
+    assert_eq!(from_bytes.pred.len(), circuit.num_nodes());
+    assert_eq!(
+        from_text.pred, from_bytes.pred,
+        "AAG-text and circuit-bytes payloads produced different predictions"
+    );
+    let _ = std::fs::remove_file(&aag);
+    daemon.shutdown();
+}
+
+/// Backend that blocks inside `infer_batch` until released — makes queue
+/// saturation and drain-on-shutdown deterministic.
+struct GateBackend {
+    inner: NativeBackend,
+    started: Mutex<mpsc::Sender<()>>,
+    release: Mutex<mpsc::Receiver<()>>,
+}
+
+impl InferenceBackend for GateBackend {
+    fn name(&self) -> &'static str {
+        "gate"
+    }
+    fn num_classes(&self) -> usize {
+        self.inner.num_classes()
+    }
+    fn infer(&self, part: PartitionInput<'_>) -> anyhow::Result<PartitionLogits> {
+        self.inner.infer(part)
+    }
+    fn infer_batch(
+        &self,
+        parts: &[PartitionInput<'_>],
+    ) -> anyhow::Result<Vec<PartitionLogits>> {
+        let _ = self.started.lock().unwrap().send(());
+        self.release
+            .lock()
+            .unwrap()
+            .recv_timeout(Duration::from_secs(60))
+            .expect("gate never released");
+        self.inner.infer_batch(parts)
+    }
+}
+
+/// One gated single-worker server; the factory asserts it is called once.
+fn gated_server(
+    queue_capacity: usize,
+) -> (Server, mpsc::Receiver<()>, mpsc::Sender<()>) {
+    let (started_tx, started_rx) = mpsc::channel::<()>();
+    let (release_tx, release_rx) = mpsc::channel::<()>();
+    let slots = Mutex::new(Some((started_tx, release_rx)));
+    let server = Server::spawn_with_queue(
+        SessionConfig { workers: 1, threads: 1, ..Default::default() },
+        4,
+        queue_capacity,
+        move || {
+            let (stx, rrx) =
+                slots.lock().unwrap().take().expect("gate factory called more than once");
+            Ok(Box::new(GateBackend {
+                inner: NativeBackend::with_threads(aggregating_model(), 1),
+                started: Mutex::new(stx),
+                release: Mutex::new(rrx),
+            }) as Backend)
+        },
+    );
+    (server, started_rx, release_tx)
+}
+
+fn wait_until(deadline: Duration, what: &str, mut cond: impl FnMut() -> bool) {
+    let t0 = Instant::now();
+    while !cond() {
+        assert!(t0.elapsed() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+#[test]
+fn busy_reply_when_the_bounded_queue_is_full() {
+    let _g = serial();
+    let (server, started_rx, release_tx) = gated_server(1);
+    let sock = sock_path("busy");
+    let daemon =
+        NetDaemon::bind(&BindAddr::Unix(sock.clone()), server, NetConfig::default()).unwrap();
+    let addr = BindAddr::Unix(sock);
+    let graph = datasets::build(DatasetKind::Csa, 6).unwrap();
+    let bytes = Arc::new(graph.to_circuit().unwrap().to_bytes());
+    let opts = VerifyOptions::partitions(2);
+
+    // A occupies the worker (gate-blocked inside infer_batch)…
+    let blocked = |addr: BindAddr, bytes: Arc<Vec<u8>>, opts: VerifyOptions| {
+        std::thread::spawn(move || {
+            let mut c = GrootClient::connect(&addr).unwrap();
+            expect_result(c.classify_circuit_bytes(&bytes, &opts).unwrap())
+        })
+    };
+    let join_a = blocked(addr.clone(), Arc::clone(&bytes), opts.clone());
+    started_rx
+        .recv_timeout(Duration::from_secs(60))
+        .expect("worker never started on request A");
+    // …B fills the bound-1 queue…
+    let join_b = blocked(addr.clone(), Arc::clone(&bytes), opts.clone());
+    wait_until(Duration::from_secs(30), "request B to be queued", || {
+        daemon.stats().queue_depth == 1
+    });
+    // …so C's request must come back as an explicit BUSY wire reply.
+    let mut c = GrootClient::connect(&addr).unwrap();
+    match c.classify_circuit_bytes(&bytes, &opts).unwrap() {
+        Reply::Busy => {}
+        Reply::Result(_) => panic!("saturated daemon accepted a request past the queue bound"),
+    }
+
+    // Release A and B; both complete with full predictions, and the
+    // drained daemon accepts C's retry.
+    release_tx.send(()).unwrap();
+    release_tx.send(()).unwrap();
+    for j in [join_a, join_b] {
+        assert_eq!(j.join().unwrap().pred.len(), graph.num_nodes);
+    }
+    release_tx.send(()).unwrap();
+    let res = expect_result(c.classify_circuit_bytes(&bytes, &opts).unwrap());
+    assert_eq!(res.pred.len(), graph.num_nodes);
+    daemon.shutdown();
+}
+
+/// Shared body for the two shutdown triggers: N clients in flight or
+/// queued mid-request, shutdown fires, the listener closes (socket file
+/// removed, new connections refused) while every accepted request still
+/// gets a complete response.
+fn drain_scenario(tag: &str, cfg: NetConfig, fire: impl FnOnce(&NetDaemon), clients: usize) {
+    let (server, started_rx, release_tx) = gated_server(8);
+    let sock = sock_path(tag);
+    let daemon = NetDaemon::bind(&BindAddr::Unix(sock.clone()), server, cfg).unwrap();
+    let addr = BindAddr::Unix(sock.clone());
+    let graph = datasets::build(DatasetKind::Csa, 6).unwrap();
+    let bytes = Arc::new(graph.to_circuit().unwrap().to_bytes());
+    let opts = VerifyOptions::partitions(2);
+
+    let joins: Vec<_> = (0..clients)
+        .map(|_| {
+            let addr = addr.clone();
+            let bytes = Arc::clone(&bytes);
+            let opts = opts.clone();
+            std::thread::spawn(move || {
+                let mut c = GrootClient::connect(&addr).unwrap();
+                expect_result(c.classify_circuit_bytes(&bytes, &opts).unwrap())
+            })
+        })
+        .collect();
+    // first request is inside the gated backend, the rest are queued
+    started_rx
+        .recv_timeout(Duration::from_secs(60))
+        .expect("worker never started");
+    wait_until(Duration::from_secs(30), "remaining clients to queue", || {
+        daemon.stats().queue_depth as usize == clients - 1
+    });
+
+    fire(&daemon);
+    // listener closes first: the socket file disappears and new
+    // connections are refused while the backlog is still draining
+    wait_until(Duration::from_secs(30), "listener to close", || !sock.exists());
+    assert!(
+        GrootClient::connect(&addr).is_err(),
+        "daemon accepted a NEW connection after shutdown began"
+    );
+
+    // every accepted request — in-flight AND queued — completes
+    for _ in 0..clients {
+        release_tx.send(()).unwrap();
+    }
+    for j in joins {
+        let res = j.join().expect("client died during drain");
+        assert_eq!(res.pred.len(), graph.num_nodes, "drained response incomplete");
+    }
+    daemon.join();
+}
+
+#[test]
+fn shutdown_drains_inflight_and_queued_requests() {
+    let _g = serial();
+    drain_scenario(
+        "drain",
+        NetConfig::default(),
+        |daemon| daemon.trigger_shutdown(),
+        4,
+    );
+}
+
+#[test]
+fn sigterm_drains_then_exits() {
+    let _g = serial();
+    clear_sigterm();
+    groot::net::install_sigterm_handler();
+    extern "C" {
+        fn raise(signum: i32) -> i32;
+    }
+    drain_scenario(
+        "sigterm",
+        NetConfig { watch_sigterm: true, ..Default::default() },
+        |_daemon| {
+            // the real signal, through the real handler
+            let rc = unsafe { raise(15) };
+            assert_eq!(rc, 0, "raise(SIGTERM) failed");
+            assert!(groot::net::sigterm_pending());
+        },
+        3,
+    );
+    clear_sigterm();
+}
+
+#[test]
+fn malformed_frames_are_rejected_without_killing_the_daemon() {
+    let _g = serial();
+    let server = Server::spawn(
+        SessionConfig { workers: 1, threads: 1, ..Default::default() },
+        native_factory(1),
+    );
+    let sock = sock_path("fuzz");
+    let daemon =
+        NetDaemon::bind(&BindAddr::Unix(sock.clone()), server, NetConfig::default()).unwrap();
+    let addr = BindAddr::Unix(sock);
+
+    let frame = |kind: u8, payload: &[u8]| -> Vec<u8> {
+        let mut f = Vec::new();
+        f.extend_from_slice(&wire::MAGIC);
+        f.push(kind);
+        f.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        f.extend_from_slice(payload);
+        f
+    };
+
+    // bad magic → one MALFORMED error, then the daemon hangs up
+    let mut c = GrootClient::connect(&addr).unwrap();
+    c.send_raw(b"XXXX\x01\x00\x00\x00\x00").unwrap();
+    let (kind, payload) = c.recv_frame().unwrap();
+    assert_eq!(kind, wire::RESP_ERROR);
+    assert_eq!(wire::decode_error(&payload).unwrap().0, wire::ERR_MALFORMED);
+    assert!(c.recv_frame().is_err(), "connection stayed open after a protocol error");
+
+    // oversized declared length → MALFORMED without allocating the frame
+    let mut c = GrootClient::connect(&addr).unwrap();
+    let mut oversize = Vec::new();
+    oversize.extend_from_slice(&wire::MAGIC);
+    oversize.push(wire::REQ_CLASSIFY);
+    oversize.extend_from_slice(&u32::MAX.to_le_bytes());
+    c.send_raw(&oversize).unwrap();
+    let (kind, payload) = c.recv_frame().unwrap();
+    assert_eq!(kind, wire::RESP_ERROR);
+    assert_eq!(wire::decode_error(&payload).unwrap().0, wire::ERR_MALFORMED);
+
+    // truncated frame: header promises 100 payload bytes, client sends
+    // 10 and hangs up — the daemon must treat the EOF as a dead peer,
+    // not block or crash
+    let mut c = GrootClient::connect(&addr).unwrap();
+    let mut truncated = frame(wire::REQ_CLASSIFY, &[0u8; 100]);
+    truncated.truncate(wire::MAGIC.len() + 1 + 4 + 10);
+    c.send_raw(&truncated).unwrap();
+    drop(c);
+
+    // unknown kind → UNSUPPORTED, and the SAME connection keeps working
+    let mut c = GrootClient::connect(&addr).unwrap();
+    c.send_raw(&frame(0x7f, b"")).unwrap();
+    let (kind, payload) = c.recv_frame().unwrap();
+    assert_eq!(kind, wire::RESP_ERROR);
+    assert_eq!(wire::decode_error(&payload).unwrap().0, wire::ERR_UNSUPPORTED);
+    let stats = c.stats().unwrap();
+    assert_eq!(stats.workers, 1);
+
+    // garbage classify payload → MALFORMED (decoder, not frame layer)
+    let mut c = GrootClient::connect(&addr).unwrap();
+    c.send_raw(&frame(wire::REQ_CLASSIFY, &[0xFF; 32])).unwrap();
+    let (kind, payload) = c.recv_frame().unwrap();
+    assert_eq!(kind, wire::RESP_ERROR);
+    assert_eq!(wire::decode_error(&payload).unwrap().0, wire::ERR_MALFORMED);
+
+    // after all of the above, a clean request still round-trips
+    let graph = datasets::build(DatasetKind::Csa, 6).unwrap();
+    let mut c = GrootClient::connect(&addr).unwrap();
+    let res = expect_result(
+        c.classify_circuit(&graph.to_circuit().unwrap(), &VerifyOptions::partitions(2))
+            .unwrap(),
+    );
+    assert_eq!(res.pred, sequential_pred(&graph, &VerifyOptions::partitions(2)));
+    daemon.shutdown();
+}
+
+/// Daemon wired to a disk-backed plan cache over `dir`.
+fn store_backed_daemon(tag: &str, dir: &PathBuf) -> (NetDaemon, BindAddr) {
+    let store = PlanStore::open(dir.clone()).unwrap();
+    let cache = Arc::new(ShardedPlanCache::with_store(4, 16, store));
+    let server = Server::spawn_on_cache(
+        SessionConfig { workers: 1, threads: 1, ..Default::default() },
+        cache,
+        8,
+        native_factory(1),
+    );
+    let sock = sock_path(tag);
+    let daemon =
+        NetDaemon::bind(&BindAddr::Unix(sock.clone()), server, NetConfig::default()).unwrap();
+    (daemon, BindAddr::Unix(sock))
+}
+
+#[test]
+fn restarted_daemon_serves_repeat_request_from_the_plan_store() {
+    let _g = serial();
+    let dir = plan_dir("warm");
+    let graph = datasets::build(DatasetKind::Csa, 8).unwrap();
+    let circuit = graph.to_circuit().unwrap();
+    // partitions ≥ 2: the k-way partitioner (and its invocation counter)
+    // is bypassed entirely for single-partition plans
+    let opts = VerifyOptions::partitions(4);
+
+    // daemon #1: cold build, written back to the store
+    let (daemon, addr) = store_backed_daemon("warm1", &dir);
+    let mut client = GrootClient::connect(&addr).unwrap();
+    let cold = expect_result(client.classify_circuit(&circuit, &opts).unwrap());
+    assert!(!cold.stats.plan_cache_hit, "first-ever request reported a cache hit");
+    let warm = expect_result(client.classify_circuit(&circuit, &opts).unwrap());
+    assert!(warm.stats.plan_cache_hit, "repeat on a live daemon missed the cache");
+    let stats = daemon.stats();
+    assert_eq!(stats.plan_store_writes, 1, "built plan was not persisted");
+    drop(client);
+    daemon.shutdown();
+
+    // daemon #2: fresh process-equivalent (empty in-memory cache), same
+    // --plan-dir. The first repeat request must be answered from disk:
+    // cache hit reported, zero partitioner invocations.
+    let k0 = kway_invocations();
+    let (daemon, addr) = store_backed_daemon("warm2", &dir);
+    let mut client = GrootClient::connect(&addr).unwrap();
+    let restarted = expect_result(client.classify_circuit(&circuit, &opts).unwrap());
+    assert!(
+        restarted.stats.plan_cache_hit,
+        "restart against a populated plan dir re-planned from scratch"
+    );
+    assert_eq!(
+        kway_invocations() - k0,
+        0,
+        "warm restart invoked the partitioner"
+    );
+    assert_eq!(restarted.pred, cold.pred, "persisted plan changed the predictions");
+    let stats = daemon.stats();
+    assert_eq!(stats.plan_disk_hits, 1);
+    drop(client);
+    daemon.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn corrupted_store_files_are_quarantined_and_rebuilt() {
+    let _g = serial();
+    let dir = plan_dir("quarantine");
+    let graph = datasets::build(DatasetKind::Csa, 8).unwrap();
+    let circuit = graph.to_circuit().unwrap();
+    let opts = VerifyOptions::partitions(4);
+
+    // populate the store
+    let (daemon, addr) = store_backed_daemon("quar1", &dir);
+    let mut client = GrootClient::connect(&addr).unwrap();
+    let first = expect_result(client.classify_circuit(&circuit, &opts).unwrap());
+    drop(client);
+    daemon.shutdown();
+
+    // flip bytes in the middle of every stored plan file
+    let mut corrupted = 0usize;
+    for entry in std::fs::read_dir(&dir).unwrap() {
+        let path = entry.unwrap().path();
+        if path.extension().and_then(|e| e.to_str()) != Some("gpln") {
+            continue;
+        }
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xA5;
+        std::fs::write(&path, &bytes).unwrap();
+        corrupted += 1;
+    }
+    assert!(corrupted > 0, "store population wrote no plan files");
+
+    // restart: the corrupt file must be quarantined (not trusted, not
+    // fatal) and the plan rebuilt from scratch with identical output
+    let k0 = kway_invocations();
+    let (daemon, addr) = store_backed_daemon("quar2", &dir);
+    let mut client = GrootClient::connect(&addr).unwrap();
+    let rebuilt = expect_result(client.classify_circuit(&circuit, &opts).unwrap());
+    assert!(
+        !rebuilt.stats.plan_cache_hit,
+        "corrupted store file was served as a cache hit"
+    );
+    assert_eq!(kway_invocations() - k0, 1, "rebuild should partition exactly once");
+    assert_eq!(rebuilt.pred, first.pred);
+    let stats = daemon.stats();
+    assert!(
+        stats.plan_store_quarantined >= 1,
+        "corrupt plan file was not quarantined"
+    );
+    drop(client);
+    daemon.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
