@@ -297,6 +297,9 @@ impl NativeBackend {
         lane: &mut Lane,
         threads: usize,
     ) -> PartitionLogits {
+        let _span = crate::obs::span_with_arg("infer_partition", "backend", "rows", || {
+            part.csr.num_nodes().to_string()
+        });
         let logits = match &self.quant {
             Some(q) => q
                 .forward_with_threads(

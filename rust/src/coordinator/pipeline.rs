@@ -42,6 +42,7 @@ use super::SessionConfig;
 use crate::backend::{InferenceBackend, PartitionInput};
 use crate::features::{EdaGraph, GROOT_FEATURE_DIM};
 use crate::graph::{CircuitGraph, Csr, GraphSource};
+use crate::obs::{self, metrics};
 use crate::partition::{partition_kway, Partitioning};
 use crate::regrowth::{regrow_one, regrow_partitions, RegrownPartition, RegrowthStats};
 use anyhow::Result;
@@ -302,14 +303,25 @@ impl<'g> PreparedGraph<'g> {
         // Force lazy CSR materialization outside the stage timer so
         // partition_time means the same thing on every plan, not just
         // the first one on this PreparedGraph.
-        let graph_csr = self.csr();
+        let graph_csr = {
+            let _span = obs::span("prepare", "pipeline");
+            self.csr()
+        };
 
         let t0 = Instant::now();
-        let partitioning = self.partition(opts);
+        let partitioning = {
+            let _span = obs::span_with_arg("partition", "pipeline", "k", || {
+                opts.partitions.to_string()
+            });
+            self.partition(opts)
+        };
         let partition_time = t0.elapsed();
 
         let t1 = Instant::now();
-        let parts = regrow_partitions(graph_csr, &partitioning, opts.regrow);
+        let parts = {
+            let _span = obs::span("regrowth", "pipeline");
+            regrow_partitions(graph_csr, &partitioning, opts.regrow)
+        };
         let regrowth_time = t1.elapsed();
         let regrowth = crate::regrowth::stats(&parts);
         // HD/LD row split at the configured threshold — one O(n) scan of
@@ -360,6 +372,7 @@ impl<'g> PreparedGraph<'g> {
         let (parts, mut stats) = self.partition_and_regrow(opts);
 
         let t2 = Instant::now();
+        let _span = obs::span("gather", "pipeline");
         let parts: Vec<PlannedPartition> = parts
             .into_iter()
             .map(|part| {
@@ -565,7 +578,12 @@ pub fn execute_plan(
         inputs.iter().map(|i| partition_exec_bytes(i, classes)).sum();
 
     let t0 = Instant::now();
-    let outs = backend.infer_batch(&inputs)?;
+    let outs = {
+        let _span = obs::span_with_arg("infer", "pipeline", "partitions", || {
+            inputs.len().to_string()
+        });
+        backend.infer_batch(&inputs)?
+    };
     let infer_time = t0.elapsed();
     anyhow::ensure!(
         outs.len() == inputs.len(),
@@ -576,9 +594,12 @@ pub fn execute_plan(
 
     let mut pred = vec![0u8; plan.num_nodes];
     let mut peak_bucket_n = 0usize;
-    for (p, out) in live.iter().zip(&outs) {
-        peak_bucket_n = peak_bucket_n.max(out.bucket_rows);
-        stitch_core(&mut pred, &p.nodes, p.num_core, &out.logits, classes, p.part_id)?;
+    {
+        let _span = obs::span("stitch", "pipeline");
+        for (p, out) in live.iter().zip(&outs) {
+            peak_bucket_n = peak_bucket_n.max(out.bucket_rows);
+            stitch_core(&mut pred, &p.nodes, p.num_core, &out.logits, classes, p.part_id)?;
+        }
     }
     Ok((
         pred,
@@ -843,6 +864,43 @@ struct PlanKey {
     options: PlanOptions,
 }
 
+/// Process-wide plan-cache counters mirrored into the metrics registry
+/// (labeled by tier so one family covers the memory LRU and the disk
+/// store). The sharded cache keeps its own per-instance atomics for
+/// `ServerStats`; these aggregate across all cache instances for the
+/// exposition endpoint.
+struct CacheMetrics {
+    hits: metrics::Counter,
+    misses: metrics::Counter,
+    disk_hits: metrics::Counter,
+}
+
+fn cache_metrics() -> &'static CacheMetrics {
+    static M: OnceLock<CacheMetrics> = OnceLock::new();
+    M.get_or_init(|| {
+        let r = metrics::registry();
+        const HELP: &str =
+            "Plan-cache lookups by tier and outcome, across every cache instance.";
+        CacheMetrics {
+            hits: r.counter(
+                "groot_plan_cache_lookups_total",
+                HELP,
+                &[("tier", "memory"), ("outcome", "hit")],
+            ),
+            misses: r.counter(
+                "groot_plan_cache_lookups_total",
+                HELP,
+                &[("tier", "memory"), ("outcome", "miss")],
+            ),
+            disk_hits: r.counter(
+                "groot_plan_cache_lookups_total",
+                HELP,
+                &[("tier", "disk"), ("outcome", "hit")],
+            ),
+        }
+    })
+}
+
 /// A small LRU of `Arc<PartitionPlan>` keyed by `(graph fingerprint,
 /// PlanOptions)`. A hit skips partitioning, re-growth, and feature
 /// gathering entirely; single-threaded callers own one of these so every
@@ -1085,9 +1143,11 @@ impl ShardedPlanCache {
         // concurrent miss for the same key can never build twice.
         if let Some(plan) = guard.get(fp, opts) {
             self.hits.fetch_add(1, Ordering::SeqCst);
+            cache_metrics().hits.inc();
             return (plan, true);
         }
         self.misses.fetch_add(1, Ordering::SeqCst);
+        cache_metrics().misses.inc();
         // Persistent tier: a validated disk load skips partitioning,
         // re-growth, and gathering exactly like a memory hit (the
         // reported `plan_cache_hit` says so), still under the shard's
@@ -1097,6 +1157,7 @@ impl ShardedPlanCache {
                 let plan = Arc::new(plan);
                 guard.insert(plan.clone());
                 self.disk_hits.fetch_add(1, Ordering::SeqCst);
+                cache_metrics().disk_hits.inc();
                 return (plan, true);
             }
         }

@@ -28,9 +28,11 @@ use super::pipeline::{PlanStats, PlannedPartition};
 use super::{PartitionPlan, PlanOptions};
 use crate::features::GROOT_FEATURE_DIM;
 use crate::graph::Csr;
+use crate::obs::{log, metrics};
 use anyhow::{Context, Result};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
 use std::time::Duration;
 
 /// Store file magic + format version. Bump the version on ANY layout
@@ -41,6 +43,32 @@ pub const STORE_VERSION: u16 = 1;
 /// Fixed-size file header: magic, version, reserved pad, payload
 /// checksum, payload length.
 const HEADER_LEN: usize = 4 + 2 + 2 + 8 + 8;
+
+const LOG_TARGET: &str = "coordinator::planstore";
+
+/// Process-wide disk-tier counters for the metrics registry, one family
+/// labeled by operation (every [`PlanStore`] instance feeds the same
+/// series; per-instance numbers stay on the store's own atomics).
+struct StoreMetrics {
+    loads: metrics::Counter,
+    writes: metrics::Counter,
+    quarantined: metrics::Counter,
+}
+
+fn store_metrics() -> &'static StoreMetrics {
+    static M: OnceLock<StoreMetrics> = OnceLock::new();
+    M.get_or_init(|| {
+        let r = metrics::registry();
+        const HELP: &str = "Persistent plan-store operations by kind (load = validated \
+                            disk read, write = plan file written, quarantine = file \
+                            rejected by validation and renamed aside).";
+        StoreMetrics {
+            loads: r.counter("groot_plan_store_ops_total", HELP, &[("op", "load")]),
+            writes: r.counter("groot_plan_store_ops_total", HELP, &[("op", "write")]),
+            quarantined: r.counter("groot_plan_store_ops_total", HELP, &[("op", "quarantine")]),
+        }
+    })
+}
 
 /// Fingerprint+options-keyed persistent plan files under one directory.
 /// `Sync` (path + atomic counters only), shared by all serving workers
@@ -108,11 +136,21 @@ impl PlanStore {
         match decode_plan(&bytes, fingerprint, opts) {
             Ok(plan) => {
                 self.loads.fetch_add(1, Ordering::SeqCst);
+                store_metrics().loads.inc();
                 Some(plan)
             }
-            Err(_) => {
+            Err(e) => {
                 let n = self.quarantined.fetch_add(1, Ordering::SeqCst);
+                store_metrics().quarantined.inc();
                 let aside = path.with_extension(format!("quarantined-{n}"));
+                log::warn(
+                    LOG_TARGET,
+                    format_args!(
+                        "quarantining plan file {} ({e:#}); renamed to {}",
+                        path.display(),
+                        aside.display()
+                    ),
+                );
                 let _ = std::fs::rename(&path, aside);
                 None
             }
@@ -131,6 +169,7 @@ impl PlanStore {
         std::fs::rename(&tmp, &path)
             .with_context(|| format!("rename plan into {}", path.display()))?;
         self.writes.fetch_add(1, Ordering::SeqCst);
+        store_metrics().writes.inc();
         Ok(())
     }
 }

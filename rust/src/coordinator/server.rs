@@ -42,6 +42,7 @@ use super::{
 };
 use crate::features::EdaGraph;
 use crate::graph::CircuitGraph;
+use crate::obs::{self, log, metrics};
 use anyhow::Result;
 use std::collections::VecDeque;
 use std::sync::atomic::AtomicU64;
@@ -518,9 +519,25 @@ fn worker_loop(
     served: &AtomicU64,
 ) {
     use std::sync::atomic::Ordering;
+    // Per-worker served counter, labeled by spawn index (recovered from
+    // the "groot-serve-i" thread name). Same-index workers of successive
+    // Server instances share one process-wide series.
+    let worker_label: String = std::thread::current()
+        .name()
+        .map(|n| n.strip_prefix("groot-serve-").unwrap_or(n).to_string())
+        .unwrap_or_else(|| "?".to_string());
+    let served_metric = metrics::registry().counter(
+        "groot_worker_requests_total",
+        "Requests answered per serving worker (label worker = spawn index).",
+        &[("worker", &worker_label)],
+    );
     let backend = match make_backend() {
         Ok(b) => b,
         Err(e) => {
+            log::error(
+                "coordinator::server",
+                format_args!("worker {worker_label}: backend init failed: {e:#}"),
+            );
             // A partially-failed fleet must not race healthy workers and
             // error a random subset of requests: a failed worker steps
             // aside quietly — UNLESS it is the last live one, in which
@@ -539,6 +556,9 @@ fn worker_loop(
     };
     let session = Session::new(backend, config.clone());
     while let Some(req) = queue.pop() {
+        let _span = obs::span_with_arg("worker_request", "server", "graph", || {
+            req.graph.name().to_string()
+        });
         let opts = req.options.resolve(&session.config);
         // Preparation is cheap (content hash); the CSR and feature
         // matrix only materialize on a cache miss, inside plan().
@@ -546,6 +566,7 @@ fn worker_loop(
         let (plan, hit) = cache.get_or_build(&prepared, &opts);
         let out = session.classify_plan(&prepared, &plan, hit);
         served.fetch_add(1, Ordering::SeqCst);
+        served_metric.inc();
         let _ = req.reply.send(out);
     }
 }

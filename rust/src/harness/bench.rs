@@ -35,7 +35,11 @@ struct BenchRow {
     nodes: usize,
     partitions: usize,
     cold_median_s: f64,
+    cold_p95_s: f64,
+    cold_p99_s: f64,
     warm_median_s: f64,
+    warm_p95_s: f64,
+    warm_p99_s: f64,
     speedup: f64,
     warm_knodes_per_s: f64,
     /// Out-of-core path: compact store + windowed execution (window 4).
@@ -65,6 +69,8 @@ pub fn bench_pipeline(weights: &str, quick: bool, out_path: &str) -> Result<()> 
             "parts",
             "cold median",
             "warm median",
+            "warm p95",
+            "warm p99",
             "speedup",
             "warm knodes/s",
             "stream median",
@@ -118,7 +124,11 @@ pub fn bench_pipeline(weights: &str, quick: bool, out_path: &str) -> Result<()> 
             nodes: graph.num_nodes,
             partitions: parts,
             cold_median_s: cold.median_secs(),
+            cold_p95_s: cold.p95_secs(),
+            cold_p99_s: cold.p99_secs(),
             warm_median_s: warm.median_secs(),
+            warm_p95_s: warm.p95_secs(),
+            warm_p99_s: warm.p99_secs(),
             speedup: cold.median_secs() / warm.median_secs().max(1e-12),
             warm_knodes_per_s: graph.num_nodes as f64
                 / warm.median_secs().max(1e-12)
@@ -133,6 +143,8 @@ pub fn bench_pipeline(weights: &str, quick: bool, out_path: &str) -> Result<()> 
             row.partitions.to_string(),
             fmt_dur(cold.median),
             fmt_dur(warm.median),
+            fmt_dur(warm.p95),
+            fmt_dur(warm.p99),
             format!("{:.2}x", row.speedup),
             format!("{:.1}", row.warm_knodes_per_s),
             fmt_dur(stream.median),
@@ -159,7 +171,8 @@ fn render_json(rows: &[BenchRow]) -> String {
     for (i, r) in rows.iter().enumerate() {
         s.push_str(&format!(
             "    {{\"dataset\": \"{}\", \"nodes\": {}, \"partitions\": {}, \
-             \"cold_median_s\": {:.6}, \"warm_median_s\": {:.6}, \
+             \"cold_median_s\": {:.6}, \"cold_p95_s\": {:.6}, \"cold_p99_s\": {:.6}, \
+             \"warm_median_s\": {:.6}, \"warm_p95_s\": {:.6}, \"warm_p99_s\": {:.6}, \
              \"plan_cache_speedup\": {:.3}, \"warm_knodes_per_s\": {:.1}, \
              \"stream_median_s\": {:.6}, \"stream_peak_bytes\": {}, \
              \"eager_exec_bytes\": {}}}{}\n",
@@ -167,7 +180,11 @@ fn render_json(rows: &[BenchRow]) -> String {
             r.nodes,
             r.partitions,
             r.cold_median_s,
+            r.cold_p95_s,
+            r.cold_p99_s,
             r.warm_median_s,
+            r.warm_p95_s,
+            r.warm_p99_s,
             r.speedup,
             r.warm_knodes_per_s,
             r.stream_median_s,
@@ -843,7 +860,11 @@ mod tests {
             nodes: 9000,
             partitions: 8,
             cold_median_s: 0.01,
+            cold_p95_s: 0.015,
+            cold_p99_s: 0.016,
             warm_median_s: 0.002,
+            warm_p95_s: 0.003,
+            warm_p99_s: 0.004,
             speedup: 5.0,
             warm_knodes_per_s: 4500.0,
             stream_median_s: 0.012,
@@ -853,6 +874,8 @@ mod tests {
         let s = render_json(&rows);
         assert!(s.contains("\"dataset\": \"csa16\""));
         assert!(s.contains("\"plan_cache_speedup\": 5.000"));
+        assert!(s.contains("\"warm_p95_s\": 0.003000"));
+        assert!(s.contains("\"cold_p99_s\": 0.016000"));
         assert!(s.contains("\"stream_peak_bytes\": 50000"));
         assert_eq!(s.matches('{').count(), s.matches('}').count());
         assert_eq!(s.matches('[').count(), s.matches(']').count());

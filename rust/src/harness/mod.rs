@@ -12,6 +12,7 @@
 pub mod accuracy;
 pub mod bench;
 pub mod memory;
+pub mod profile;
 pub mod runtime;
 
 use crate::util::cli::Args;
@@ -63,11 +64,12 @@ pub fn run(which: &str, args: &mut Args) -> Result<()> {
                 bench::bench_pipeline(&weights, quick, &out)
             }
         }
+        "profile" => profile::profile(&weights, quick),
         "ablation-partitioners" => accuracy::ablation_partitioners(&weights, quick),
         "ablation-features" => accuracy::ablation_features(&weights, quick),
         other => bail!(
             "unknown harness '{other}' \
-             (fig1a|fig6a..d|fig7|fig8|fig9|fig10|tab2|bench|memory|\
+             (fig1a|fig6a..d|fig7|fig8|fig9|fig10|tab2|bench|memory|profile|\
               ablation-partitioners|ablation-features)"
         ),
     }

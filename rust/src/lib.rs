@@ -15,6 +15,7 @@ pub mod labels;
 pub mod mapping;
 pub mod memmodel;
 pub mod net;
+pub mod obs;
 pub mod partition;
 pub mod regrowth;
 pub mod runtime;

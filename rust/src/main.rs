@@ -5,6 +5,7 @@
 //!   classify      run the partition→regrow→GNN pipeline, report accuracy
 //!   verify        full verification (classification + algebraic check)
 //!   harness       regenerate a paper table/figure (fig6a, tab2, ...)
+//!   metrics       dump the metrics registry (local, or a daemon's)
 //!   info          dataset statistics (nodes, edges, degree profile)
 
 use anyhow::{bail, Context, Result};
@@ -36,9 +37,18 @@ fn run() -> Result<()> {
         "kernels",
         "expect-cache-hit",
         "expect-cache-miss",
+        "json",
     ]);
+    // Tracing: `GROOT_TRACE=out.json` or `--trace out.json` turns the
+    // span tracer on for the whole command; the buffer is drained to a
+    // Chrome trace file (Perfetto-loadable) after the command finishes.
+    groot::obs::trace::init_from_env();
+    let trace_out = args.get("trace");
+    if trace_out.is_some() {
+        groot::obs::trace::enable();
+    }
     let cmd = args.positional.first().cloned().unwrap_or_else(|| "help".into());
-    match cmd.as_str() {
+    let result = match cmd.as_str() {
         "gen-dataset" => gen_dataset(&mut args),
         "classify" => classify(&mut args),
         "verify" => verify(&mut args),
@@ -46,13 +56,49 @@ fn run() -> Result<()> {
         "harness" => harness(&mut args),
         "serve" => serve_cmd(&mut args),
         "client" => client_cmd(&mut args),
+        "metrics" => metrics_cmd(&mut args),
         "info" => info(&mut args),
         "help" | "--help" | "-h" => {
             print!("{}", HELP);
             Ok(())
         }
         other => bail!("unknown command '{other}' (try: groot help)"),
+    };
+    // Flush traces even when the command failed — a trace of the failing
+    // run is exactly what the flag was for.
+    if let Some(path) = trace_out {
+        match groot::obs::trace::write_chrome_trace(std::path::Path::new(&path)) {
+            Ok(n) => eprintln!("trace: wrote {n} span events -> {path}"),
+            Err(e) => eprintln!("trace: failed to write {path}: {e}"),
+        }
+    } else {
+        match groot::obs::trace::flush_env_trace() {
+            Ok(0) => {}
+            Ok(n) => eprintln!(
+                "trace: wrote {n} span events -> {}",
+                std::env::var("GROOT_TRACE").unwrap_or_default()
+            ),
+            Err(e) => eprintln!("trace: failed to write GROOT_TRACE file: {e}"),
+        }
     }
+    result
+}
+
+/// `groot metrics` — dump every registered metric family: the local
+/// process registry, or a running daemon's via the REQ_METRICS frame
+/// when `--connect` is given. `--json` switches the exposition format.
+fn metrics_cmd(args: &mut Args) -> Result<()> {
+    use groot::obs::MetricsFormat;
+    let format = if args.flag("json") { MetricsFormat::Json } else { MetricsFormat::Prometheus };
+    let text = match args.get("connect") {
+        Some(addr) => {
+            let mut client = groot::net::GrootClient::connect_str(&addr)?;
+            client.metrics(format)?
+        }
+        None => groot::obs::registry().render(format),
+    };
+    print!("{text}");
+    Ok(())
 }
 
 const HELP: &str = "\
@@ -83,7 +129,7 @@ USAGE:
                  [--threads N (SpMM engine lanes; matmuls follow GROOT_THREADS)]
                  [--out FILE] [--checkpoint-every 25] [--eval-every 10]
                  [--resume CKPT] [--assert-improves]
-  groot harness  fig1a|fig6a|fig6b|fig6c|fig6d|fig7|fig8|fig9|fig10|tab2|bench|memory
+  groot harness  fig1a|fig6a|fig6b|fig6c|fig6d|fig7|fig8|fig9|fig10|tab2|bench|memory|profile
                  [--weights FILE] [--quick] [--train (bench)] [--out FILE (bench|memory)]
                  [--serve (bench: concurrency sweep — in-flight clients ×
                   worker counts at a fixed total thread budget; --workers N
@@ -93,6 +139,8 @@ USAGE:
                   SIMD-vs-scalar speedup, int8-vs-f32 forward, fused batched
                   GEMM; writes BENCH_kernels.json;
                   --assert-simd-speedup X fails below X× when SIMD is active)]
+                 (profile: run the classify pipeline and report HD/LD
+                  kernel time/rows/nnz deltas from the metrics registry)
   groot serve    --listen ADDR (host:port or unix:/path.sock)
                  [--workers N] [--threads N] [--weights FILE]
                  [--plan-dir DIR (persistent plan store: plans survive
@@ -106,7 +154,20 @@ USAGE:
                  [--pred-out FILE (raw predicted-class bytes)]
                  [--expect-cache-hit | --expect-cache-miss (assert the
                   server's plan_cache_hit flag — CI warm-start checks)]
+                 [--json (stats: machine-readable output)]
+  groot metrics  [--connect ADDR] [--json]
+                 dump every registered metric family: Prometheus text
+                 exposition by default, --json for the JSON form; with
+                 --connect, scrape a running daemon over REQ_METRICS
   groot info     --dataset csa --bits 16
+
+Observability: every command accepts --trace FILE (or GROOT_TRACE=FILE)
+to record pipeline/kernel/request spans and write a Chrome trace-event
+JSON on exit — load it at https://ui.perfetto.dev or chrome://tracing.
+Tracing never changes results: predictions are byte-identical on or off.
+GROOT_LOG=error|warn|info|debug gates diagnostics on stderr (default
+warn); GROOT_SLOW_REQUEST_MS sets the daemon's slow-request warn
+threshold (default 1000).
 
 Serving: worker count lives in SessionConfig.workers (the `--workers`
 option feeds it; consumed by `groot serve`, `harness bench --serve`, the
@@ -586,6 +647,34 @@ fn client_cmd(args: &mut Args) -> Result<()> {
         "stats" => {
             let mut client = GrootClient::connect_str(&connect)?;
             let s = client.stats()?;
+            if args.flag("json") {
+                let per_worker = s
+                    .per_worker_requests
+                    .iter()
+                    .map(|n| n.to_string())
+                    .collect::<Vec<_>>()
+                    .join(", ");
+                println!(
+                    "{{\"queue_depth\": {}, \"workers\": {}, \
+                     \"per_worker_requests\": [{per_worker}], \
+                     \"plan_cache_hits\": {}, \"plan_cache_misses\": {}, \
+                     \"plan_disk_hits\": {}, \"plan_store_writes\": {}, \
+                     \"plan_store_quarantined\": {}, \"requests_served\": {}, \
+                     \"p50_ms\": {:.3}, \"p95_ms\": {:.3}, \"p99_ms\": {:.3}}}",
+                    s.queue_depth,
+                    s.workers,
+                    s.plan_cache_hits,
+                    s.plan_cache_misses,
+                    s.plan_disk_hits,
+                    s.plan_store_writes,
+                    s.plan_store_quarantined,
+                    s.requests_served,
+                    s.p50_ms,
+                    s.p95_ms,
+                    s.p99_ms
+                );
+                return Ok(());
+            }
             println!("queue depth      {}", s.queue_depth);
             println!("workers          {} (requests: {:?})", s.workers, s.per_worker_requests);
             println!(

@@ -142,6 +142,26 @@ impl GrootClient {
         }
     }
 
+    /// Scrape the daemon's metrics registry: Prometheus text exposition
+    /// or the JSON rendering, per `format`.
+    pub fn metrics(&mut self, format: crate::obs::MetricsFormat) -> Result<String> {
+        wire::write_frame(
+            &mut self.stream,
+            wire::REQ_METRICS,
+            &wire::encode_metrics_request(format),
+        )
+        .context("send metrics request")?;
+        let (kind, payload) = self.recv_frame()?;
+        match kind {
+            wire::RESP_METRICS => wire::decode_metrics_response(&payload),
+            wire::RESP_ERROR => {
+                let (code, msg) = wire::decode_error(&payload)?;
+                bail!("server error {code}: {msg}")
+            }
+            other => bail!("unexpected reply kind {other:#04x}"),
+        }
+    }
+
     /// Write raw bytes onto the connection — the protocol-fuzz tooling
     /// (`groot client fuzz`, the malformed-frame tests) uses this to
     /// send deliberately broken traffic.

@@ -31,6 +31,7 @@
 use super::wire::{self, FrameError, GraphPayload, WireStats};
 use crate::coordinator::server::{RequestGraph, Server, TrySubmit};
 use crate::graph::CircuitGraph;
+use crate::obs::{self, log, metrics, MetricsFormat};
 use anyhow::{bail, Context, Result};
 use std::collections::VecDeque;
 use std::io::{Read, Write};
@@ -38,7 +39,7 @@ use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::os::unix::net::{UnixListener, UnixStream};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -92,16 +93,24 @@ pub struct NetConfig {
     /// Honor the process-wide SIGTERM flag (`groot serve` sets this;
     /// tests drive shutdown programmatically through the same path).
     pub watch_sigterm: bool,
+    /// Classify requests slower than this emit one warn-level log record
+    /// (`GROOT_SLOW_REQUEST_MS` overrides; default 1 s).
+    pub slow_request: Duration,
 }
 
 impl Default for NetConfig {
     fn default() -> NetConfig {
+        let slow_ms = std::env::var("GROOT_SLOW_REQUEST_MS")
+            .ok()
+            .and_then(|s| s.trim().parse::<u64>().ok())
+            .unwrap_or(1000);
         NetConfig {
             max_frame: wire::DEFAULT_MAX_FRAME,
             poll_interval: Duration::from_millis(50),
             drain_grace: Duration::from_secs(2),
             aiger_chunk: crate::graph::DEFAULT_CHUNK_NODES,
             watch_sigterm: false,
+            slow_request: Duration::from_millis(slow_ms),
         }
     }
 }
@@ -214,6 +223,45 @@ fn bind_unix(path: &Path) -> Result<UnixListener> {
 /// How many request latencies the percentile ring retains.
 const LATENCY_RING: usize = 4096;
 
+const LOG_TARGET: &str = "net::daemon";
+
+/// Monotonic classify-request id, process-wide — stamped on the request
+/// span so a Perfetto trace can be joined against the slow-request log.
+static REQUEST_ID: AtomicU64 = AtomicU64::new(0);
+
+/// Daemon-level metric handles (request counter + latency histogram +
+/// mirrored queue-depth gauge), registered once per process.
+struct DaemonMetrics {
+    served: metrics::Counter,
+    latency: metrics::Histogram,
+    queue_depth: metrics::Gauge,
+}
+
+fn daemon_metrics() -> &'static DaemonMetrics {
+    static M: OnceLock<DaemonMetrics> = OnceLock::new();
+    M.get_or_init(|| {
+        let r = metrics::registry();
+        DaemonMetrics {
+            served: r.counter(
+                "groot_requests_served_total",
+                "Classify requests answered with RESP_RESULT, daemon-wide.",
+                &[],
+            ),
+            latency: r.histogram(
+                "groot_request_latency_seconds",
+                "Wall-clock seconds from submit to reply per served classify request.",
+                &[],
+                metrics::LATENCY_BUCKETS,
+            ),
+            queue_depth: r.gauge(
+                "groot_queue_depth",
+                "Classify requests waiting in the serving submit queue (sampled at scrape).",
+                &[],
+            ),
+        }
+    })
+}
+
 struct Shared {
     server: Server,
     cfg: NetConfig,
@@ -232,11 +280,23 @@ impl Shared {
 
     fn record_latency(&self, ms: f64) {
         self.served.fetch_add(1, Ordering::SeqCst);
+        let m = daemon_metrics();
+        m.served.inc();
+        m.latency.observe(ms / 1e3);
         let mut l = self.latencies.lock().unwrap();
         if l.len() >= LATENCY_RING {
             l.pop_front();
         }
         l.push_back(ms);
+    }
+
+    /// Render the process-wide metrics registry for a REQ_METRICS scrape
+    /// or the `groot metrics` CLI. Gauges that mirror live server state
+    /// (queue depth) are refreshed here; everything else is updated at
+    /// the source and just rendered.
+    fn metrics_text(&self, format: MetricsFormat) -> String {
+        daemon_metrics().queue_depth.set(self.server.stats().queue_depth as i64);
+        metrics::registry().render(format)
     }
 
     fn stats(&self) -> WireStats {
@@ -308,6 +368,7 @@ impl NetDaemon {
             .name("groot-net-accept".into())
             .spawn(move || accept_loop(sh, listener, unix_path))
             .context("spawn accept loop")?;
+        log::info(LOG_TARGET, format_args!("listening on {bound}"));
         Ok(NetDaemon { shared, accept: Some(accept), bound, local_addr })
     }
 
@@ -347,6 +408,7 @@ impl NetDaemon {
         if let Ok(sh) = Arc::try_unwrap(self.shared) {
             sh.server.shutdown();
         }
+        log::info(LOG_TARGET, format_args!("shutdown complete"));
     }
 
     /// [`trigger_shutdown`](Self::trigger_shutdown) + [`join`](Self::join).
@@ -387,6 +449,7 @@ fn accept_loop(shared: Arc<Shared>, listener: Listener, unix_path: Option<PathBu
     // Shutdown step 1: close the listener FIRST (unlinking a Unix socket
     // file), so new connections are refused while in-flight requests are
     // still being answered.
+    log::info(LOG_TARGET, format_args!("draining: listener closed, finishing in-flight requests"));
     drop(listener);
     if let Some(p) = unix_path {
         let _ = std::fs::remove_file(&p);
@@ -515,6 +578,25 @@ fn handle_conn(shared: Arc<Shared>, mut conn: Box<dyn Conn>) {
                 wire::write_frame(&mut conn, wire::RESP_STATS, &wire::encode_stats(&stats))
                     .is_ok()
             }
+            wire::REQ_METRICS => match wire::decode_metrics_request(&payload) {
+                Ok(format) => {
+                    let text = shared.metrics_text(format);
+                    wire::write_frame(
+                        &mut conn,
+                        wire::RESP_METRICS,
+                        &wire::encode_metrics_response(&text),
+                    )
+                    .is_ok()
+                }
+                Err(e) => {
+                    let _ = wire::write_frame(
+                        &mut conn,
+                        wire::RESP_ERROR,
+                        &wire::encode_error(wire::ERR_MALFORMED, &format!("{e:#}")),
+                    );
+                    false
+                }
+            },
             wire::REQ_CLASSIFY => {
                 match serve_classify(&shared, &handle, &mut conn, &payload) {
                     ClassifyOutcome::Continue => true,
@@ -573,6 +655,8 @@ fn serve_classify(
             };
         }
     };
+    let req_id = REQUEST_ID.fetch_add(1, Ordering::Relaxed);
+    let _span = obs::span_with_arg("request", "net", "request_id", || req_id.to_string());
     let t0 = Instant::now();
     let rx = match handle.try_submit(graph, options) {
         Err(_) => {
@@ -592,7 +676,20 @@ fn serve_classify(
     };
     match rx.recv() {
         Ok(Ok(res)) => {
-            shared.record_latency(t0.elapsed().as_secs_f64() * 1e3);
+            let elapsed = t0.elapsed();
+            shared.record_latency(elapsed.as_secs_f64() * 1e3);
+            if elapsed >= shared.cfg.slow_request {
+                log::warn(
+                    LOG_TARGET,
+                    format_args!(
+                        "slow request {req_id}: {:.1} ms (threshold {} ms, {} nodes, {} partitions)",
+                        elapsed.as_secs_f64() * 1e3,
+                        shared.cfg.slow_request.as_millis(),
+                        res.stats.total_nodes,
+                        res.stats.num_partitions,
+                    ),
+                );
+            }
             if wire::write_frame(conn, wire::RESP_RESULT, &wire::encode_result(&res)).is_ok() {
                 ClassifyOutcome::Continue
             } else {

@@ -27,6 +27,7 @@
 
 use crate::coordinator::server::VerifyOptions;
 use crate::coordinator::{ClassifyResult, RunStats};
+use crate::obs::MetricsFormat;
 use anyhow::{bail, Result};
 use std::io::{Read, Write};
 use std::time::Duration;
@@ -43,10 +44,12 @@ pub const DEFAULT_MAX_FRAME: u32 = 64 * 1024 * 1024;
 // ---- frame kinds -------------------------------------------------------
 pub const REQ_CLASSIFY: u8 = 0x01;
 pub const REQ_STATS: u8 = 0x02;
+pub const REQ_METRICS: u8 = 0x03;
 pub const RESP_RESULT: u8 = 0x81;
 pub const RESP_ERROR: u8 = 0x82;
 pub const RESP_BUSY: u8 = 0x83;
 pub const RESP_STATS: u8 = 0x84;
+pub const RESP_METRICS: u8 = 0x85;
 
 // ---- structured error codes (RESP_ERROR payload) -----------------------
 /// Frame or payload did not parse; the connection is closed after this.
@@ -422,6 +425,37 @@ pub fn decode_error(payload: &[u8]) -> Result<(u16, String)> {
     Ok((code, msg))
 }
 
+// ---- metrics scrape ------------------------------------------------------
+
+/// Payload layout: `format u8` ([`MetricsFormat::as_u8`]). An **empty**
+/// payload is also accepted by the decoder and means Prometheus — a
+/// scrape is `printf 'GRT1\x03\0\0\0\0' | nc`-able without knowing the
+/// format byte.
+pub fn encode_metrics_request(format: MetricsFormat) -> Vec<u8> {
+    vec![format.as_u8()]
+}
+
+pub fn decode_metrics_request(payload: &[u8]) -> Result<MetricsFormat> {
+    match payload {
+        [] => Ok(MetricsFormat::Prometheus),
+        [b] => MetricsFormat::from_u8(*b)
+            .ok_or_else(|| anyhow::anyhow!("metrics request: unknown format byte {b:#04x}")),
+        _ => bail!("metrics request: expected 0 or 1 payload bytes, got {}", payload.len()),
+    }
+}
+
+/// Payload is the rendered exposition text, UTF-8, no length prefix (the
+/// frame header already carries the length).
+pub fn encode_metrics_response(text: &str) -> Vec<u8> {
+    text.as_bytes().to_vec()
+}
+
+pub fn decode_metrics_response(payload: &[u8]) -> Result<String> {
+    Ok(std::str::from_utf8(payload)
+        .map_err(|e| anyhow::anyhow!("metrics reply is not utf-8: {e}"))?
+        .to_string())
+}
+
 // ---- server stats --------------------------------------------------------
 
 /// The STATS reply: queue/worker/plan-cache observability from
@@ -666,6 +700,27 @@ mod tests {
         let mut junk = enc;
         junk.push(1);
         assert!(decode_result(&junk).is_err());
+    }
+
+    #[test]
+    fn metrics_request_accepts_empty_and_one_byte_only() {
+        assert_eq!(
+            decode_metrics_request(&encode_metrics_request(MetricsFormat::Prometheus)).unwrap(),
+            MetricsFormat::Prometheus
+        );
+        assert_eq!(
+            decode_metrics_request(&encode_metrics_request(MetricsFormat::Json)).unwrap(),
+            MetricsFormat::Json
+        );
+        // empty payload defaults to Prometheus (netcat-able scrape)
+        assert_eq!(decode_metrics_request(&[]).unwrap(), MetricsFormat::Prometheus);
+        assert!(decode_metrics_request(&[9]).is_err());
+        assert!(decode_metrics_request(&[0, 0]).is_err());
+
+        let text = "# TYPE groot_requests_served_total counter\ngroot_requests_served_total 3\n";
+        let enc = encode_metrics_response(text);
+        assert_eq!(decode_metrics_response(&enc).unwrap(), text);
+        assert!(decode_metrics_response(&[0xFF, 0xFE]).is_err());
     }
 
     #[test]

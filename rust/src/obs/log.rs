@@ -1,0 +1,143 @@
+//! `GROOT_LOG`-gated leveled logger for the serving runtime.
+//!
+//! Levels: `off < error < warn < info < debug`, parsed once from the
+//! `GROOT_LOG` environment variable (default **warn** — operational
+//! anomalies like plan-store quarantines and slow requests surface
+//! without opting in, routine chatter does not). [`set_level`]
+//! overrides at run time (tests, future CLI flags).
+//!
+//! The check is one relaxed atomic load; formatting only happens for
+//! enabled records (call sites pass `format_args!`, which is lazy until
+//! rendered). Output goes to stderr as one line per record:
+//! `groot[warn] net::daemon: slow request …`.
+
+use std::fmt;
+use std::sync::atomic::{AtomicU8, Ordering};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Off = 0,
+    Error = 1,
+    Warn = 2,
+    Info = 3,
+    Debug = 4,
+}
+
+impl Level {
+    fn as_str(self) -> &'static str {
+        match self {
+            Level::Off => "off",
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+        }
+    }
+
+    fn parse(s: &str) -> Option<Level> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "off" | "none" | "0" => Some(Level::Off),
+            "error" | "1" => Some(Level::Error),
+            "warn" | "warning" | "2" => Some(Level::Warn),
+            "info" | "3" => Some(Level::Info),
+            "debug" | "4" => Some(Level::Debug),
+            _ => None,
+        }
+    }
+}
+
+/// Sentinel meaning "not initialized yet — read GROOT_LOG on first use".
+const UNINIT: u8 = u8::MAX;
+
+static LEVEL: AtomicU8 = AtomicU8::new(UNINIT);
+
+fn level_from_u8(v: u8) -> Level {
+    match v {
+        0 => Level::Off,
+        1 => Level::Error,
+        2 => Level::Warn,
+        3 => Level::Info,
+        _ => Level::Debug,
+    }
+}
+
+/// The active maximum level (records above it are dropped).
+pub fn max_level() -> Level {
+    let v = LEVEL.load(Ordering::Relaxed);
+    if v != UNINIT {
+        return level_from_u8(v);
+    }
+    let parsed = std::env::var("GROOT_LOG")
+        .ok()
+        .and_then(|s| Level::parse(&s))
+        .unwrap_or(Level::Warn);
+    // A racing first use parses the same env — last store wins, same value.
+    LEVEL.store(parsed as u8, Ordering::Relaxed);
+    parsed
+}
+
+/// Override the level at run time (wins over `GROOT_LOG`).
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// Would a record at `level` be emitted?
+#[inline]
+pub fn enabled(level: Level) -> bool {
+    level <= max_level() && level != Level::Off
+}
+
+/// Emit one record. `target` names the subsystem (`net::daemon`,
+/// `coordinator::planstore`, …).
+pub fn log(level: Level, target: &str, args: fmt::Arguments<'_>) {
+    if !enabled(level) {
+        return;
+    }
+    eprintln!("groot[{}] {target}: {args}", level.as_str());
+}
+
+pub fn error(target: &str, args: fmt::Arguments<'_>) {
+    log(Level::Error, target, args);
+}
+
+pub fn warn(target: &str, args: fmt::Arguments<'_>) {
+    log(Level::Warn, target, args);
+}
+
+pub fn info(target: &str, args: fmt::Arguments<'_>) {
+    log(Level::Info, target, args);
+}
+
+pub fn debug(target: &str, args: fmt::Arguments<'_>) {
+    log(Level::Debug, target, args);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_ordering_gates_records() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        assert!(!enabled(Level::Debug));
+        set_level(Level::Off);
+        assert!(!enabled(Level::Error));
+        set_level(Level::Debug);
+        assert!(enabled(Level::Debug));
+        // restore the default so other tests see warn-level behavior
+        set_level(Level::Warn);
+    }
+
+    #[test]
+    fn parse_accepts_names_and_numbers() {
+        assert_eq!(Level::parse("debug"), Some(Level::Debug));
+        assert_eq!(Level::parse("WARN"), Some(Level::Warn));
+        assert_eq!(Level::parse("2"), Some(Level::Warn));
+        assert_eq!(Level::parse("off"), Some(Level::Off));
+        assert_eq!(Level::parse("banana"), None);
+    }
+}

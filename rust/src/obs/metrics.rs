@@ -1,0 +1,756 @@
+//! Process-wide metrics registry with Prometheus text exposition.
+//!
+//! Registration (name + help + labels) takes a mutex once and hands back
+//! a clonable handle wrapping an `Arc`'d atomic; every subsequent update
+//! is a single relaxed atomic op — hot paths (SpMM kernels, the pool's
+//! steal loop, the daemon's request path) cache their handle in a
+//! `OnceLock` and never touch the registry lock again. Registering the
+//! same (name, labels) twice returns the same underlying metric, so
+//! independent call sites can share a counter without coordination.
+//!
+//! Exposition is deterministic: families sort by name, series by label
+//! set — byte-stable output for tests and CI `grep`s. The
+//! [`parse_prometheus`] round-trip parser exists for exactly those
+//! consumers.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Monotonically increasing event count.
+#[derive(Clone)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+    /// Overwrite the count — for mirroring a counter whose source of
+    /// truth lives elsewhere (e.g. a pre-existing atomic that tests pin).
+    pub fn store(&self, n: u64) {
+        self.0.store(n, Ordering::Relaxed);
+    }
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Instantaneous signed level (queue depths, live jobs).
+#[derive(Clone)]
+pub struct Gauge(Arc<AtomicI64>);
+
+impl Gauge {
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+    pub fn add(&self, n: i64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+    pub fn sub(&self, n: i64) {
+        self.0.fetch_sub(n, Ordering::Relaxed);
+    }
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Fixed-bucket histogram (Prometheus semantics: cumulative `le`
+/// buckets + `_sum` + `_count`). Bucket bounds are fixed at
+/// registration; `observe` is a linear scan over a handful of bounds
+/// plus three relaxed atomic ops.
+#[derive(Clone)]
+pub struct Histogram(Arc<HistogramCore>);
+
+struct HistogramCore {
+    /// Upper bounds, ascending; an implicit +Inf bucket follows.
+    bounds: Vec<f64>,
+    /// Per-bucket (NON-cumulative) counts; len = bounds.len() + 1.
+    counts: Vec<AtomicU64>,
+    /// f64 bits, updated by CAS (no atomic f64 in std).
+    sum_bits: AtomicU64,
+    count: AtomicU64,
+}
+
+impl Histogram {
+    pub fn observe(&self, v: f64) {
+        let core = &self.0;
+        let idx = core
+            .bounds
+            .iter()
+            .position(|&b| v <= b)
+            .unwrap_or(core.bounds.len());
+        core.counts[idx].fetch_add(1, Ordering::Relaxed);
+        core.count.fetch_add(1, Ordering::Relaxed);
+        let mut cur = core.sum_bits.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + v).to_bits();
+            match core.sum_bits.compare_exchange_weak(
+                cur,
+                next,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.0.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> f64 {
+        f64::from_bits(self.0.sum_bits.load(Ordering::Relaxed))
+    }
+
+    /// Quantile estimate by linear interpolation inside the bucket that
+    /// crosses rank `q·count` — the standard Prometheus
+    /// `histogram_quantile` approximation, here for in-process reports.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let rank = q.clamp(0.0, 1.0) * total as f64;
+        let mut seen = 0u64;
+        let mut lower = 0.0f64;
+        for (i, c) in self.0.counts.iter().enumerate() {
+            let c = c.load(Ordering::Relaxed);
+            let upper = self
+                .0
+                .bounds
+                .get(i)
+                .copied()
+                .unwrap_or(f64::INFINITY);
+            if (seen + c) as f64 >= rank {
+                if upper.is_infinite() {
+                    return lower; // best effort beyond the last bound
+                }
+                let within = if c == 0 { 0.0 } else { (rank - seen as f64) / c as f64 };
+                return lower + (upper - lower) * within;
+            }
+            seen += c;
+            lower = upper;
+        }
+        lower
+    }
+}
+
+/// Request/latency bucket ladder in seconds: 0.5 ms … 10 s.
+pub const LATENCY_BUCKETS: &[f64] = &[
+    0.0005, 0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0,
+];
+
+/// Kernel-time bucket ladder in seconds: 10 µs … 250 ms.
+pub const KERNEL_BUCKETS: &[f64] = &[
+    1e-5, 2.5e-5, 5e-5, 1e-4, 2.5e-4, 5e-4, 1e-3, 2.5e-3, 5e-3, 1e-2, 2.5e-2, 5e-2, 0.1, 0.25,
+];
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Kind {
+    Counter,
+    Gauge,
+    Histogram,
+}
+
+impl Kind {
+    fn as_str(self) -> &'static str {
+        match self {
+            Kind::Counter => "counter",
+            Kind::Gauge => "gauge",
+            Kind::Histogram => "histogram",
+        }
+    }
+}
+
+enum Handle {
+    Counter(Arc<AtomicU64>),
+    Gauge(Arc<AtomicI64>),
+    Histogram(Arc<HistogramCore>),
+}
+
+struct Family {
+    help: &'static str,
+    kind: Kind,
+    /// Keyed by the rendered label string (sorted keys) so series order
+    /// is deterministic.
+    series: BTreeMap<String, Handle>,
+}
+
+/// Exposition format negotiated over the wire and on the CLI.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MetricsFormat {
+    Prometheus,
+    Json,
+}
+
+impl MetricsFormat {
+    pub fn as_u8(self) -> u8 {
+        match self {
+            MetricsFormat::Prometheus => 0,
+            MetricsFormat::Json => 1,
+        }
+    }
+    pub fn from_u8(v: u8) -> Option<MetricsFormat> {
+        match v {
+            0 => Some(MetricsFormat::Prometheus),
+            1 => Some(MetricsFormat::Json),
+            _ => None,
+        }
+    }
+}
+
+/// One flattened sample — the unit both [`Registry::samples`] and
+/// [`parse_prometheus`] speak, so render→parse round-trips structurally.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Sample {
+    pub name: String,
+    pub labels: Vec<(String, String)>,
+    pub value: f64,
+}
+
+impl Sample {
+    /// Label lookup helper for tests and reports.
+    pub fn label(&self, key: &str) -> Option<&str> {
+        self.labels
+            .iter()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+/// A metric registry. Most code uses the process-global [`registry`];
+/// tests build private ones.
+pub struct Registry {
+    inner: Mutex<BTreeMap<String, Family>>,
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Registry::new()
+    }
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry { inner: Mutex::new(BTreeMap::new()) }
+    }
+
+    /// Get-or-register a counter series.
+    pub fn counter(&self, name: &str, help: &'static str, labels: &[(&str, &str)]) -> Counter {
+        let key = render_labels(labels);
+        let mut inner = self.inner.lock().unwrap();
+        let fam = inner.entry(name.to_string()).or_insert_with(|| Family {
+            help,
+            kind: Kind::Counter,
+            series: BTreeMap::new(),
+        });
+        debug_assert_eq!(fam.kind, Kind::Counter, "metric {name} re-registered as a counter");
+        let handle = fam
+            .series
+            .entry(key)
+            .or_insert_with(|| Handle::Counter(Arc::new(AtomicU64::new(0))));
+        match handle {
+            Handle::Counter(a) => Counter(Arc::clone(a)),
+            _ => unreachable!("kind checked above"),
+        }
+    }
+
+    /// Get-or-register a gauge series.
+    pub fn gauge(&self, name: &str, help: &'static str, labels: &[(&str, &str)]) -> Gauge {
+        let key = render_labels(labels);
+        let mut inner = self.inner.lock().unwrap();
+        let fam = inner.entry(name.to_string()).or_insert_with(|| Family {
+            help,
+            kind: Kind::Gauge,
+            series: BTreeMap::new(),
+        });
+        debug_assert_eq!(fam.kind, Kind::Gauge, "metric {name} re-registered as a gauge");
+        let handle = fam
+            .series
+            .entry(key)
+            .or_insert_with(|| Handle::Gauge(Arc::new(AtomicI64::new(0))));
+        match handle {
+            Handle::Gauge(a) => Gauge(Arc::clone(a)),
+            _ => unreachable!("kind checked above"),
+        }
+    }
+
+    /// Get-or-register a histogram series with the given bucket bounds
+    /// (ascending; +Inf is implicit). Bounds are fixed by the FIRST
+    /// registration of the series.
+    pub fn histogram(
+        &self,
+        name: &str,
+        help: &'static str,
+        labels: &[(&str, &str)],
+        bounds: &[f64],
+    ) -> Histogram {
+        let key = render_labels(labels);
+        let mut inner = self.inner.lock().unwrap();
+        let fam = inner.entry(name.to_string()).or_insert_with(|| Family {
+            help,
+            kind: Kind::Histogram,
+            series: BTreeMap::new(),
+        });
+        debug_assert_eq!(fam.kind, Kind::Histogram, "metric {name} re-registered as a histogram");
+        let handle = fam.series.entry(key).or_insert_with(|| {
+            Handle::Histogram(Arc::new(HistogramCore {
+                bounds: bounds.to_vec(),
+                counts: (0..bounds.len() + 1).map(|_| AtomicU64::new(0)).collect(),
+                sum_bits: AtomicU64::new(0.0f64.to_bits()),
+                count: AtomicU64::new(0),
+            }))
+        });
+        match handle {
+            Handle::Histogram(a) => Histogram(Arc::clone(a)),
+            _ => unreachable!("kind checked above"),
+        }
+    }
+
+    /// Flatten every series to samples (histograms expand to cumulative
+    /// `_bucket` samples plus `_sum`/`_count`) — the profile report and
+    /// the JSON renderer both consume this.
+    pub fn samples(&self) -> Vec<Sample> {
+        let inner = self.inner.lock().unwrap();
+        let mut out = Vec::new();
+        for (name, fam) in inner.iter() {
+            for (labelstr, handle) in &fam.series {
+                let labels = parse_labels(labelstr);
+                match handle {
+                    Handle::Counter(a) => out.push(Sample {
+                        name: name.clone(),
+                        labels,
+                        value: a.load(Ordering::Relaxed) as f64,
+                    }),
+                    Handle::Gauge(a) => out.push(Sample {
+                        name: name.clone(),
+                        labels,
+                        value: a.load(Ordering::Relaxed) as f64,
+                    }),
+                    Handle::Histogram(core) => {
+                        let mut cum = 0u64;
+                        for (i, c) in core.counts.iter().enumerate() {
+                            cum += c.load(Ordering::Relaxed);
+                            let le = core
+                                .bounds
+                                .get(i)
+                                .map(|b| format_f64(*b))
+                                .unwrap_or_else(|| "+Inf".to_string());
+                            let mut bl = labels.clone();
+                            bl.push(("le".to_string(), le));
+                            out.push(Sample {
+                                name: format!("{name}_bucket"),
+                                labels: bl,
+                                value: cum as f64,
+                            });
+                        }
+                        out.push(Sample {
+                            name: format!("{name}_sum"),
+                            labels: labels.clone(),
+                            value: f64::from_bits(core.sum_bits.load(Ordering::Relaxed)),
+                        });
+                        out.push(Sample {
+                            name: format!("{name}_count"),
+                            labels,
+                            value: core.count.load(Ordering::Relaxed) as f64,
+                        });
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    pub fn render(&self, format: MetricsFormat) -> String {
+        match format {
+            MetricsFormat::Prometheus => self.render_prometheus(),
+            MetricsFormat::Json => self.render_json(),
+        }
+    }
+
+    /// Prometheus text exposition format 0.0.4.
+    pub fn render_prometheus(&self) -> String {
+        let inner = self.inner.lock().unwrap();
+        let mut out = String::new();
+        for (name, fam) in inner.iter() {
+            out.push_str(&format!("# HELP {name} {}\n", fam.help));
+            out.push_str(&format!("# TYPE {name} {}\n", fam.kind.as_str()));
+            for (labelstr, handle) in &fam.series {
+                match handle {
+                    Handle::Counter(a) => {
+                        out.push_str(&format!("{name}{labelstr} {}\n", a.load(Ordering::Relaxed)));
+                    }
+                    Handle::Gauge(a) => {
+                        out.push_str(&format!("{name}{labelstr} {}\n", a.load(Ordering::Relaxed)));
+                    }
+                    Handle::Histogram(core) => {
+                        let mut cum = 0u64;
+                        for (i, c) in core.counts.iter().enumerate() {
+                            cum += c.load(Ordering::Relaxed);
+                            let le = core
+                                .bounds
+                                .get(i)
+                                .map(|b| format_f64(*b))
+                                .unwrap_or_else(|| "+Inf".to_string());
+                            out.push_str(&format!(
+                                "{name}_bucket{} {cum}\n",
+                                merge_label(labelstr, "le", &le)
+                            ));
+                        }
+                        out.push_str(&format!(
+                            "{name}_sum{labelstr} {}\n",
+                            format_f64(f64::from_bits(core.sum_bits.load(Ordering::Relaxed)))
+                        ));
+                        out.push_str(&format!(
+                            "{name}_count{labelstr} {}\n",
+                            core.count.load(Ordering::Relaxed)
+                        ));
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// JSON exposition for scripting (`--json`): one object per series.
+    pub fn render_json(&self) -> String {
+        let inner = self.inner.lock().unwrap();
+        let mut entries = Vec::new();
+        for (name, fam) in inner.iter() {
+            for (labelstr, handle) in &fam.series {
+                let labels_json = labels_to_json(&parse_labels(labelstr));
+                match handle {
+                    Handle::Counter(a) => entries.push(format!(
+                        "{{\"name\":{},\"type\":\"counter\",\"labels\":{},\"value\":{}}}",
+                        json_string(name),
+                        labels_json,
+                        a.load(Ordering::Relaxed)
+                    )),
+                    Handle::Gauge(a) => entries.push(format!(
+                        "{{\"name\":{},\"type\":\"gauge\",\"labels\":{},\"value\":{}}}",
+                        json_string(name),
+                        labels_json,
+                        a.load(Ordering::Relaxed)
+                    )),
+                    Handle::Histogram(core) => {
+                        let mut buckets = Vec::new();
+                        let mut cum = 0u64;
+                        for (i, c) in core.counts.iter().enumerate() {
+                            cum += c.load(Ordering::Relaxed);
+                            let le = core
+                                .bounds
+                                .get(i)
+                                .map(|b| format_f64(*b))
+                                .unwrap_or_else(|| "Infinity".to_string());
+                            buckets.push(format!("{{\"le\":\"{le}\",\"count\":{cum}}}"));
+                        }
+                        entries.push(format!(
+                            "{{\"name\":{},\"type\":\"histogram\",\"labels\":{},\"count\":{},\"sum\":{},\"buckets\":[{}]}}",
+                            json_string(name),
+                            labels_json,
+                            core.count.load(Ordering::Relaxed),
+                            format_f64(f64::from_bits(core.sum_bits.load(Ordering::Relaxed))),
+                            buckets.join(",")
+                        ));
+                    }
+                }
+            }
+        }
+        format!("{{\"metrics\":[\n{}\n]}}\n", entries.join(",\n"))
+    }
+}
+
+/// The process-global registry every runtime layer reports into.
+pub fn registry() -> &'static Registry {
+    static GLOBAL: OnceLock<Registry> = OnceLock::new();
+    GLOBAL.get_or_init(Registry::new)
+}
+
+/// f64 formatting that round-trips and never produces exponent notation
+/// surprises for bucket bounds (Rust's shortest-round-trip Display).
+fn format_f64(v: f64) -> String {
+    if v.is_infinite() {
+        return if v > 0.0 { "+Inf".to_string() } else { "-Inf".to_string() };
+    }
+    v.to_string()
+}
+
+fn escape_label(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+fn unescape_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    let mut chars = v.chars();
+    while let Some(c) = chars.next() {
+        if c == '\\' {
+            match chars.next() {
+                Some('n') => out.push('\n'),
+                Some(other) => out.push(other),
+                None => out.push('\\'),
+            }
+        } else {
+            out.push(c);
+        }
+    }
+    out
+}
+
+/// Render labels as `{k="v",…}` with sorted keys ("" when empty).
+fn render_labels(labels: &[(&str, &str)]) -> String {
+    if labels.is_empty() {
+        return String::new();
+    }
+    let mut sorted: Vec<_> = labels.to_vec();
+    sorted.sort();
+    let body: Vec<String> = sorted
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{}\"", escape_label(v)))
+        .collect();
+    format!("{{{}}}", body.join(","))
+}
+
+/// Inverse of [`render_labels`] for a single rendered label string.
+fn parse_labels(labelstr: &str) -> Vec<(String, String)> {
+    if labelstr.is_empty() {
+        return Vec::new();
+    }
+    let inner = labelstr.trim_start_matches('{').trim_end_matches('}');
+    split_label_body(inner)
+}
+
+/// Insert one more label pair into a rendered label string.
+fn merge_label(labelstr: &str, key: &str, value: &str) -> String {
+    let extra = format!("{key}=\"{}\"", escape_label(value));
+    if labelstr.is_empty() {
+        format!("{{{extra}}}")
+    } else {
+        format!("{},{extra}}}", labelstr.trim_end_matches('}'))
+    }
+}
+
+fn labels_to_json(labels: &[(String, String)]) -> String {
+    let body: Vec<String> = labels
+        .iter()
+        .map(|(k, v)| format!("{}:{}", json_string(k), json_string(v)))
+        .collect();
+    format!("{{{}}}", body.join(","))
+}
+
+pub(crate) fn json_string(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// Split `k="v",k2="v2"` respecting escaped quotes inside values.
+fn split_label_body(body: &str) -> Vec<(String, String)> {
+    let mut out = Vec::new();
+    let mut rest = body;
+    while !rest.is_empty() {
+        let eq = match rest.find('=') {
+            Some(i) => i,
+            None => break,
+        };
+        let key = rest[..eq].trim().to_string();
+        let after = &rest[eq + 1..];
+        if !after.starts_with('"') {
+            break;
+        }
+        // find the closing unescaped quote
+        let bytes = after.as_bytes();
+        let mut i = 1;
+        while i < bytes.len() {
+            if bytes[i] == b'\\' {
+                i += 2;
+                continue;
+            }
+            if bytes[i] == b'"' {
+                break;
+            }
+            i += 1;
+        }
+        let val = unescape_label(&after[1..i.min(after.len())]);
+        out.push((key, val));
+        rest = after[(i + 1).min(after.len())..].trim_start_matches(',');
+    }
+    out
+}
+
+/// Parse Prometheus text exposition back into flat [`Sample`]s —
+/// comment/`# TYPE`/`# HELP` lines are skipped. Used by the round-trip
+/// tests and by `groot metrics` consumers that want structured access.
+pub fn parse_prometheus(text: &str) -> Result<Vec<Sample>, String> {
+    let mut out = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        // name[{labels}] value
+        let (name_part, value_part) = match line.rfind(' ') {
+            Some(i) => (&line[..i], &line[i + 1..]),
+            None => return Err(format!("line {}: no value: {line}", lineno + 1)),
+        };
+        let (name, labels) = match name_part.find('{') {
+            Some(b) => {
+                if !name_part.ends_with('}') {
+                    return Err(format!("line {}: unterminated labels: {line}", lineno + 1));
+                }
+                (
+                    name_part[..b].to_string(),
+                    split_label_body(&name_part[b + 1..name_part.len() - 1]),
+                )
+            }
+            None => (name_part.to_string(), Vec::new()),
+        };
+        if name.is_empty()
+            || !name
+                .chars()
+                .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+        {
+            return Err(format!("line {}: bad metric name '{name}'", lineno + 1));
+        }
+        let value = match value_part {
+            "+Inf" => f64::INFINITY,
+            "-Inf" => f64::NEG_INFINITY,
+            v => v
+                .parse::<f64>()
+                .map_err(|e| format!("line {}: bad value '{v}': {e}", lineno + 1))?,
+        };
+        out.push(Sample { name, labels, value });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_round_trip() {
+        let reg = Registry::new();
+        let c = reg.counter("test_requests_total", "requests", &[("kind", "a")]);
+        c.inc();
+        c.add(4);
+        let g = reg.gauge("test_depth", "depth", &[]);
+        g.set(7);
+        g.sub(2);
+        let text = reg.render_prometheus();
+        let samples = parse_prometheus(&text).unwrap();
+        let c_s = samples.iter().find(|s| s.name == "test_requests_total").unwrap();
+        assert_eq!(c_s.value, 5.0);
+        assert_eq!(c_s.label("kind"), Some("a"));
+        let g_s = samples.iter().find(|s| s.name == "test_depth").unwrap();
+        assert_eq!(g_s.value, 5.0);
+    }
+
+    #[test]
+    fn same_series_shares_one_atomic() {
+        let reg = Registry::new();
+        let a = reg.counter("shared_total", "x", &[("l", "v")]);
+        let b = reg.counter("shared_total", "x", &[("l", "v")]);
+        a.inc();
+        b.inc();
+        assert_eq!(a.get(), 2);
+        // different labels → independent series
+        let c = reg.counter("shared_total", "x", &[("l", "w")]);
+        assert_eq!(c.get(), 0);
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative_with_inf() {
+        let reg = Registry::new();
+        let h = reg.histogram("test_lat_seconds", "latency", &[], &[0.01, 0.1, 1.0]);
+        for v in [0.005, 0.05, 0.5, 5.0, 0.05] {
+            h.observe(v);
+        }
+        assert_eq!(h.count(), 5);
+        assert!((h.sum() - 5.61).abs() < 1e-9);
+        let text = reg.render_prometheus();
+        let samples = parse_prometheus(&text).unwrap();
+        let bucket = |le: &str| {
+            samples
+                .iter()
+                .find(|s| s.name == "test_lat_seconds_bucket" && s.label("le") == Some(le))
+                .unwrap()
+                .value
+        };
+        assert_eq!(bucket("0.01"), 1.0);
+        assert_eq!(bucket("0.1"), 3.0);
+        assert_eq!(bucket("1"), 4.0);
+        assert_eq!(bucket("+Inf"), 5.0);
+        let count = samples.iter().find(|s| s.name == "test_lat_seconds_count").unwrap();
+        assert_eq!(count.value, 5.0);
+    }
+
+    #[test]
+    fn histogram_quantile_interpolates() {
+        let reg = Registry::new();
+        let h = reg.histogram("q_seconds", "q", &[], &[0.1, 0.2, 0.4, 0.8]);
+        for _ in 0..100 {
+            h.observe(0.15); // all in the (0.1, 0.2] bucket
+        }
+        let p50 = h.quantile(0.5);
+        assert!(p50 > 0.1 && p50 <= 0.2, "p50 {p50}");
+        assert_eq!(Histogram::quantile(&reg.histogram("empty", "e", &[], &[1.0]), 0.9), 0.0);
+    }
+
+    #[test]
+    fn exposition_is_deterministic_and_typed() {
+        let reg = Registry::new();
+        reg.counter("b_total", "bees", &[]).inc();
+        reg.gauge("a_depth", "ays", &[("w", "1")]).set(3);
+        let t1 = reg.render_prometheus();
+        let t2 = reg.render_prometheus();
+        assert_eq!(t1, t2);
+        // families sorted by name; HELP/TYPE precede samples
+        let a_pos = t1.find("# TYPE a_depth gauge").unwrap();
+        let b_pos = t1.find("# TYPE b_total counter").unwrap();
+        assert!(a_pos < b_pos);
+    }
+
+    #[test]
+    fn label_escaping_round_trips() {
+        let reg = Registry::new();
+        reg.counter("esc_total", "e", &[("path", "a\"b\\c\nd")]).inc();
+        let samples = parse_prometheus(&reg.render_prometheus()).unwrap();
+        assert_eq!(samples[0].label("path"), Some("a\"b\\c\nd"));
+    }
+
+    #[test]
+    fn json_render_is_balanced_and_mentions_series() {
+        let reg = Registry::new();
+        reg.counter("j_total", "j", &[("k", "v")]).add(2);
+        reg.histogram("j_seconds", "js", &[], &[0.5]).observe(0.1);
+        let js = reg.render_json();
+        assert_eq!(js.matches('{').count(), js.matches('}').count());
+        assert_eq!(js.matches('[').count(), js.matches(']').count());
+        assert!(js.contains("\"j_total\""));
+        assert!(js.contains("\"buckets\""));
+    }
+
+    #[test]
+    fn parser_rejects_garbage() {
+        assert!(parse_prometheus("no_value_here").is_err());
+        assert!(parse_prometheus("bad name 1.0").is_err());
+        assert!(parse_prometheus("ok_total 1.0").is_ok());
+    }
+}

@@ -1,0 +1,32 @@
+//! Observability — the measurement substrate under the serving runtime.
+//!
+//! Three zero-dependency pieces, all std-only and safe to leave enabled
+//! in production paths:
+//!
+//! * [`metrics`] — a process-wide registry of lock-free counters, gauges
+//!   and fixed-bucket histograms keyed by name + labels, rendered as
+//!   Prometheus text exposition (served by the daemon's `REQ_METRICS`
+//!   wire frame and the `groot metrics` CLI) or JSON.
+//! * [`trace`] — a low-overhead span tracer: thread-local thread ids,
+//!   monotonic clocks, one relaxed atomic load when disabled. Spans from
+//!   the full classify path (prepare → partition → regrowth → gather →
+//!   per-partition infer → stitch) plus daemon request spans land in a
+//!   Chrome trace-event JSON file loadable in Perfetto
+//!   (`GROOT_TRACE=out.json` or `--trace out.json`).
+//! * [`log`] — a `GROOT_LOG`-gated leveled logger (error/warn/info/
+//!   debug) for the daemon, server and plan store, replacing ad-hoc
+//!   stderr prints.
+//!
+//! Everything here is **behavior-neutral**: predictions are byte-
+//! identical with tracing/metrics on or off (pinned by
+//! rust/tests/observability.rs) — observation reads clocks and bumps
+//! atomics, never data.
+
+pub mod log;
+pub mod metrics;
+pub mod trace;
+
+pub use metrics::{registry, MetricsFormat, Registry};
+pub use trace::{span, span_with_arg, SpanGuard};
+
+pub(crate) use metrics::json_string as metrics_json_string;

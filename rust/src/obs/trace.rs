@@ -1,0 +1,313 @@
+//! Span tracer with Chrome trace-event JSON output (Perfetto-loadable).
+//!
+//! A span is an RAII guard: [`span`] stamps a monotonic start, the drop
+//! stamps the duration and appends one complete ("ph":"X") event to a
+//! process-global buffer. Thread ids are assigned lazily per OS thread
+//! and carried on every event, so per-partition inference spans from
+//! pooled lanes land on their own Perfetto tracks.
+//!
+//! Cost model: when tracing is disabled (the default), [`span`] is one
+//! relaxed atomic load and the guard holds `None` — no clock read, no
+//! allocation, no lock. When enabled, each span costs two `Instant`
+//! reads and one short mutex push at drop. Tracing therefore NEVER
+//! changes what the pipeline computes — predictions are byte-identical
+//! either way (pinned by rust/tests/observability.rs).
+//!
+//! Enable with `GROOT_TRACE=out.json` (the CLI flushes on exit) or
+//! programmatically with [`enable`] + [`write_chrome_trace`]. Load the
+//! file at <https://ui.perfetto.dev> or `chrome://tracing`.
+
+use std::borrow::Cow;
+use std::cell::Cell;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+/// Hard cap on buffered events: a long-running daemon with tracing left
+/// on must not grow without bound. Events beyond the cap are counted and
+/// dropped (the count is reported in the trace metadata).
+const MAX_EVENTS: usize = 1 << 20;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// One completed span.
+#[derive(Clone, Debug)]
+pub struct Event {
+    pub name: Cow<'static, str>,
+    pub cat: &'static str,
+    /// Microseconds since the process trace epoch.
+    pub ts_us: f64,
+    pub dur_us: f64,
+    pub tid: u64,
+    pub arg: Option<(&'static str, String)>,
+}
+
+struct Collector {
+    events: Mutex<Vec<Event>>,
+    /// (tid, thread name) pairs, recorded once per OS thread.
+    threads: Mutex<Vec<(u64, String)>>,
+    dropped: AtomicU64,
+}
+
+fn collector() -> &'static Collector {
+    static C: OnceLock<Collector> = OnceLock::new();
+    C.get_or_init(|| Collector {
+        events: Mutex::new(Vec::new()),
+        threads: Mutex::new(Vec::new()),
+        dropped: AtomicU64::new(0),
+    })
+}
+
+fn epoch() -> Instant {
+    static E: OnceLock<Instant> = OnceLock::new();
+    *E.get_or_init(Instant::now)
+}
+
+thread_local! {
+    static TID: Cell<Option<u64>> = const { Cell::new(None) };
+}
+
+fn current_tid() -> u64 {
+    TID.with(|t| {
+        if let Some(id) = t.get() {
+            return id;
+        }
+        static NEXT: AtomicU64 = AtomicU64::new(0);
+        let id = NEXT.fetch_add(1, Ordering::Relaxed);
+        t.set(Some(id));
+        let name = std::thread::current()
+            .name()
+            .map(|n| n.to_string())
+            .unwrap_or_else(|| format!("thread-{id}"));
+        collector().threads.lock().unwrap().push((id, name));
+        id
+    })
+}
+
+/// Is tracing currently on? One relaxed load — THE fast-path check.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn tracing on (idempotent). Also pins the trace epoch so the first
+/// span does not pay the `OnceLock` init inside a measured region.
+pub fn enable() {
+    let _ = epoch();
+    ENABLED.store(true, Ordering::Relaxed);
+}
+
+/// Turn tracing off; already-buffered events stay until drained.
+pub fn disable() {
+    ENABLED.store(false, Ordering::Relaxed);
+}
+
+/// The `GROOT_TRACE` output path, when set to a non-empty value.
+pub fn env_trace_path() -> Option<PathBuf> {
+    match std::env::var("GROOT_TRACE") {
+        Ok(v) if !v.trim().is_empty() => Some(PathBuf::from(v)),
+        _ => None,
+    }
+}
+
+/// Enable tracing if `GROOT_TRACE` names an output file; returns whether
+/// it did. The CLI calls this once at startup and
+/// [`flush_env_trace`] at exit.
+pub fn init_from_env() -> bool {
+    if env_trace_path().is_some() {
+        enable();
+        true
+    } else {
+        false
+    }
+}
+
+/// Write the buffered trace to the `GROOT_TRACE` path, if configured and
+/// tracing was enabled. Returns the number of events written.
+pub fn flush_env_trace() -> std::io::Result<usize> {
+    match env_trace_path() {
+        Some(path) if enabled() || !collector().events.lock().unwrap().is_empty() => {
+            write_chrome_trace(&path)
+        }
+        _ => Ok(0),
+    }
+}
+
+/// RAII span: records one complete event on drop. Construct via
+/// [`span`] / [`span_with_arg`] — holds `None` (a no-op) when tracing is
+/// disabled.
+pub struct SpanGuard(Option<SpanData>);
+
+struct SpanData {
+    name: Cow<'static, str>,
+    cat: &'static str,
+    start: Instant,
+    arg: Option<(&'static str, String)>,
+}
+
+/// Open a span named `name` in category `cat` (e.g. "pipeline",
+/// "kernel", "net"). Near-zero cost when tracing is disabled.
+#[inline]
+pub fn span(name: &'static str, cat: &'static str) -> SpanGuard {
+    if !enabled() {
+        return SpanGuard(None);
+    }
+    SpanGuard(Some(SpanData { name: Cow::Borrowed(name), cat, start: Instant::now(), arg: None }))
+}
+
+/// [`span`] carrying one key/value argument (request ids, partition
+/// indices). The value is only materialized when tracing is on: pass it
+/// through the closure so disabled paths never allocate.
+#[inline]
+pub fn span_with_arg(
+    name: &'static str,
+    cat: &'static str,
+    key: &'static str,
+    value: impl FnOnce() -> String,
+) -> SpanGuard {
+    if !enabled() {
+        return SpanGuard(None);
+    }
+    SpanGuard(Some(SpanData {
+        name: Cow::Borrowed(name),
+        cat,
+        start: Instant::now(),
+        arg: Some((key, value())),
+    }))
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        let Some(data) = self.0.take() else { return };
+        let dur = data.start.elapsed();
+        let ts = data.start.duration_since(epoch());
+        let c = collector();
+        let mut events = c.events.lock().unwrap();
+        if events.len() >= MAX_EVENTS {
+            c.dropped.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        events.push(Event {
+            name: data.name,
+            cat: data.cat,
+            ts_us: ts.as_secs_f64() * 1e6,
+            dur_us: dur.as_secs_f64() * 1e6,
+            tid: current_tid(),
+            arg: data.arg,
+        });
+    }
+}
+
+/// Number of events currently buffered (tests/diagnostics).
+pub fn buffered_events() -> usize {
+    collector().events.lock().unwrap().len()
+}
+
+/// Drain the buffer and render Chrome trace-event JSON (the
+/// `{"traceEvents": […]}` object form both Perfetto and chrome://tracing
+/// accept). Thread-name metadata events precede the spans.
+pub fn render_chrome_trace() -> String {
+    let c = collector();
+    let events: Vec<Event> = std::mem::take(&mut *c.events.lock().unwrap());
+    let threads: Vec<(u64, String)> = c.threads.lock().unwrap().clone();
+    let dropped = c.dropped.swap(0, Ordering::Relaxed);
+    let mut entries = Vec::with_capacity(events.len() + threads.len());
+    for (tid, name) in &threads {
+        entries.push(format!(
+            "{{\"ph\":\"M\",\"pid\":1,\"tid\":{tid},\"name\":\"thread_name\",\
+             \"args\":{{\"name\":{}}}}}",
+            super::metrics_json_string(name)
+        ));
+    }
+    for e in &events {
+        let args = match &e.arg {
+            Some((k, v)) => format!(
+                ",\"args\":{{{}:{}}}",
+                super::metrics_json_string(k),
+                super::metrics_json_string(v)
+            ),
+            None => String::new(),
+        };
+        entries.push(format!(
+            "{{\"ph\":\"X\",\"pid\":1,\"tid\":{},\"name\":{},\"cat\":\"{}\",\
+             \"ts\":{:.3},\"dur\":{:.3}{args}}}",
+            e.tid,
+            super::metrics_json_string(&e.name),
+            e.cat,
+            e.ts_us,
+            e.dur_us
+        ));
+    }
+    format!(
+        "{{\"traceEvents\":[\n{}\n],\"displayTimeUnit\":\"ms\",\
+         \"otherData\":{{\"droppedEvents\":\"{dropped}\"}}}}\n",
+        entries.join(",\n")
+    )
+}
+
+/// Drain the buffer into a Chrome trace JSON file. Returns the number of
+/// span events written.
+pub fn write_chrome_trace(path: &Path) -> std::io::Result<usize> {
+    let n = buffered_events();
+    std::fs::write(path, render_chrome_trace())?;
+    Ok(n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Tracing state is process-global; these tests flip it, so they
+    /// serialize on one lock instead of racing each other.
+    fn test_lock() -> std::sync::MutexGuard<'static, ()> {
+        static LOCK: Mutex<()> = Mutex::new(());
+        LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn disabled_span_records_nothing() {
+        let _g = test_lock();
+        disable();
+        let before = buffered_events();
+        {
+            let _s = span("noop", "test");
+        }
+        assert_eq!(buffered_events(), before);
+    }
+
+    #[test]
+    fn enabled_span_lands_in_the_buffer_with_nesting() {
+        let _g = test_lock();
+        enable();
+        {
+            let _outer = span("outer_span_xyz", "test");
+            std::thread::sleep(std::time::Duration::from_millis(1));
+            let _inner = span_with_arg("inner_span_xyz", "test", "id", || "42".to_string());
+        }
+        disable();
+        let json = render_chrome_trace();
+        assert!(json.contains("\"outer_span_xyz\""));
+        assert!(json.contains("\"inner_span_xyz\""));
+        assert!(json.contains("\"id\":\"42\""));
+        assert!(json.contains("\"traceEvents\""));
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+        assert_eq!(json.matches('[').count(), json.matches(']').count());
+        // drained: a second render has no spans left
+        assert!(!render_chrome_trace().contains("outer_span_xyz"));
+    }
+
+    #[test]
+    fn span_value_closure_not_called_when_disabled() {
+        let _g = test_lock();
+        disable();
+        let mut called = false;
+        {
+            let _s = span_with_arg("lazy", "test", "k", || {
+                called = true;
+                String::new()
+            });
+        }
+        assert!(!called, "arg closure must not run while tracing is off");
+    }
+}

@@ -84,7 +84,21 @@ pub fn kway_invocations() -> u64 {
 /// Multilevel k-way partitioning (the default used by the coordinator).
 pub fn partition_kway(csr: &Csr, k: usize, seed: u64) -> Partitioning {
     KWAY_INVOCATIONS.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+    kway_metric().inc();
     multilevel::partition_kway(csr, k, seed)
+}
+
+/// Registry mirror of [`KWAY_INVOCATIONS`] for the exposition endpoint
+/// (the raw atomic stays: the warm-restart tests pin against it).
+fn kway_metric() -> &'static crate::obs::metrics::Counter {
+    static M: std::sync::OnceLock<crate::obs::metrics::Counter> = std::sync::OnceLock::new();
+    M.get_or_init(|| {
+        crate::obs::metrics::registry().counter(
+            "groot_partitioner_invocations_total",
+            "Multilevel k-way partitioner invocations since process start.",
+            &[],
+        )
+    })
 }
 
 /// Random assignment baseline (worst cut, perfect balance in expectation).

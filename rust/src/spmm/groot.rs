@@ -21,9 +21,58 @@
 
 use super::SpmmEngine;
 use crate::graph::{Csr, DegreeProfile};
+use crate::obs::{self, metrics};
 use crate::util::pool::{parallel_for_dynamic, parallel_for_static, SendPtr};
 use crate::util::simd;
 use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+/// Per-half kernel observability: execution-time histogram plus row and
+/// nnz throughput counters, labeled `kernel="hd"|"ld"`. This is the
+/// paper's HD/LD polarization evidence reproduced from the runtime
+/// itself — `groot harness profile` reports it, the daemon exposes it.
+struct KernelStats {
+    time: metrics::Histogram,
+    rows: metrics::Counter,
+    nnz: metrics::Counter,
+}
+
+impl KernelStats {
+    fn register(kernel: &'static str) -> KernelStats {
+        let reg = metrics::registry();
+        let labels = [("kernel", kernel)];
+        KernelStats {
+            time: reg.histogram(
+                "groot_kernel_seconds",
+                "GROOT SpMM kernel execution time per call, split by HD/LD half",
+                &labels,
+                metrics::KERNEL_BUCKETS,
+            ),
+            rows: reg.counter(
+                "groot_kernel_rows_total",
+                "rows processed by the GROOT SpMM kernels, split by HD/LD half",
+                &labels,
+            ),
+            nnz: reg.counter(
+                "groot_kernel_nnz_total",
+                "nonzeros processed by the GROOT SpMM kernels, split by HD/LD half",
+                &labels,
+            ),
+        }
+    }
+
+    fn record(&self, elapsed: std::time::Duration, rows: usize, nnz: usize) {
+        self.time.observe(elapsed.as_secs_f64());
+        self.rows.add(rows as u64);
+        self.nnz.add(nnz as u64);
+    }
+}
+
+/// (LD, HD) kernel stats — registered once, then lock-free updates.
+fn kernel_stats() -> &'static (KernelStats, KernelStats) {
+    static S: OnceLock<(KernelStats, KernelStats)> = OnceLock::new();
+    S.get_or_init(|| (KernelStats::register("ld"), KernelStats::register("hd")))
+}
 
 /// Default HD/LD degree threshold: the `GROOT_HD_THRESHOLD` env override
 /// when set to a positive integer, otherwise the paper's
@@ -84,6 +133,10 @@ struct CachedPlan {
     /// Grow-only HD partial-sum scratch (`total slots × dim` floats),
     /// reused across calls so steady-state execution is allocation-free.
     hd_scratch: Vec<f32>,
+    /// Total nonzeros on each half — plan-time facts the per-call kernel
+    /// metrics report without rescanning degrees.
+    ld_nnz: usize,
+    hd_nnz: usize,
 }
 
 pub struct GrootSpmm {
@@ -173,6 +226,11 @@ impl GrootSpmm {
             }
             slot += nchunks;
         }
+        let hd_nnz: usize = profile
+            .hd_rows
+            .iter()
+            .map(|&u| csr.degree(u as usize))
+            .sum();
         CachedPlan {
             row_ptr: csr.row_ptr.clone(),
             profile,
@@ -180,6 +238,8 @@ impl GrootSpmm {
             hd_chunks,
             hd_reduce,
             hd_scratch: Vec::new(),
+            ld_nnz: total_ld_nnz,
+            hd_nnz,
         }
     }
 }
@@ -261,31 +321,44 @@ impl GrootSpmm {
             ref hd_chunks,
             ref hd_reduce,
             ref mut hd_scratch,
+            ld_nnz,
+            hd_nnz,
             ..
         } = *guard.as_mut().unwrap();
 
         let ptr = SendPtr(out.as_mut_ptr());
 
         // --- LD path: dynamic over degree-sorted row tasks. ---
-        parallel_for_dynamic(self.threads, ld_tasks.len(), 1, |_, ts, te| {
-            let ptr = &ptr;
-            for t in ts..te {
-                let (s, e) = ld_tasks[t];
-                for i in s..e {
-                    let u = profile.ld_rows[i] as usize;
-                    let orow =
-                        unsafe { std::slice::from_raw_parts_mut(ptr.0.add(u * dim), dim) };
-                    if backward {
-                        super::engines::row_backward(csr, x, dim, u, orow);
-                    } else {
-                        super::engines::row_mean(csr, x, dim, u, orow);
+        // Kernel profiling hooks (time/rows/nnz per half) are a clock
+        // read plus a few relaxed atomics per CALL — they never touch
+        // the data path, so output bytes are identical with or without
+        // tracing (the span is a no-op unless GROOT_TRACE is live).
+        let t_ld = Instant::now();
+        {
+            let _span = obs::span(if backward { "spmm_ld_backward" } else { "spmm_ld" }, "kernel");
+            parallel_for_dynamic(self.threads, ld_tasks.len(), 1, |_, ts, te| {
+                let ptr = &ptr;
+                for t in ts..te {
+                    let (s, e) = ld_tasks[t];
+                    for i in s..e {
+                        let u = profile.ld_rows[i] as usize;
+                        let orow =
+                            unsafe { std::slice::from_raw_parts_mut(ptr.0.add(u * dim), dim) };
+                        if backward {
+                            super::engines::row_backward(csr, x, dim, u, orow);
+                        } else {
+                            super::engines::row_mean(csr, x, dim, u, orow);
+                        }
                     }
                 }
-            }
-        });
+            });
+        }
+        kernel_stats().0.record(t_ld.elapsed(), profile.ld_rows.len(), ld_nnz);
 
         // --- HD path: chunk partials into scratch, then reduce. ---
         if !hd_chunks.is_empty() {
+            let t_hd = Instant::now();
+            let _span = obs::span(if backward { "spmm_hd_backward" } else { "spmm_hd" }, "kernel");
             let nslots: usize = hd_reduce.iter().map(|&(_, _, c)| c).sum();
             let need = nslots * dim;
             // zero the reused prefix; resize zero-fills any new tail itself
@@ -328,6 +401,7 @@ impl GrootSpmm {
                     }
                 }
             });
+            kernel_stats().1.record(t_hd.elapsed(), hd_reduce.len(), hd_nnz);
         }
     }
 }
@@ -435,6 +509,29 @@ mod tests {
             crate::graph::Csr::max_abs_diff(&got, &want) < 1e-6,
             "stale plan served for a different graph with matching n/nnz"
         );
+    }
+
+    #[test]
+    fn kernel_metrics_accumulate_per_half() {
+        // The registry is process-global and other tests run engines
+        // concurrently, so assert deltas as lower bounds.
+        let (ld0, hd0) = {
+            let (ld, hd) = kernel_stats();
+            (ld.time.count(), hd.time.count())
+        };
+        let mut rng = Rng::new(9);
+        let g = polarized_graph(&mut rng, 300, 2, 150);
+        let engine = GrootSpmm::with_config(
+            2,
+            GrootConfig { hd_threshold: 16, hd_chunk: 8, ld_nnz_per_task: 64, ..Default::default() },
+        );
+        let x = vec![1.0f32; 300 * 2];
+        let _ = engine.spmm_mean(&g, &x, 2);
+        let (ld, hd) = kernel_stats();
+        assert!(ld.time.count() > ld0, "LD kernel call was not recorded");
+        assert!(hd.time.count() > hd0, "HD kernel call was not recorded");
+        assert!(ld.rows.get() > 0 && hd.rows.get() > 0);
+        assert!(ld.nnz.get() > 0 && hd.nnz.get() > 0);
     }
 
     #[test]

@@ -26,6 +26,40 @@ use std::thread;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
+/// Pool-wide observability handles (shared by every [`ThreadPool`] in
+/// the process): a steal-event counter and a queued-jobs gauge,
+/// registered once in the global metrics registry and updated with one
+/// relaxed atomic op per enqueue/dequeue.
+fn pool_metrics() -> &'static (crate::obs::metrics::Counter, crate::obs::metrics::Gauge) {
+    static M: std::sync::OnceLock<(crate::obs::metrics::Counter, crate::obs::metrics::Gauge)> =
+        std::sync::OnceLock::new();
+    M.get_or_init(|| {
+        let reg = crate::obs::metrics::registry();
+        (
+            reg.counter(
+                "groot_pool_steals_total",
+                "work-stealing events across all thread pools (an idle worker drained half of a victim's queue)",
+                &[],
+            ),
+            reg.gauge(
+                "groot_pool_queue_depth",
+                "jobs sitting in thread-pool deques, submitted but not yet started",
+                &[],
+            ),
+        )
+    })
+}
+
+/// Total work-steal events across every pool in the process.
+pub fn steal_count() -> u64 {
+    pool_metrics().0.get()
+}
+
+/// Jobs currently queued (submitted, not yet started) across every pool.
+pub fn queued_jobs() -> i64 {
+    pool_metrics().1.get()
+}
+
 /// Error returned by [`ThreadPool::execute`] once the pool has shut down
 /// (explicitly or because it is mid-drop).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -68,6 +102,7 @@ impl PoolShared {
     /// little.
     fn pop_or_steal(&self, me: usize) -> Option<Job> {
         if let Some(job) = self.queues[me].lock().unwrap().pop_front() {
+            pool_metrics().1.sub(1);
             return Some(job);
         }
         let k = self.queues.len();
@@ -83,6 +118,9 @@ impl PoolShared {
                 // its most recently pushed (cache-warm) work.
                 vq.drain(..take).collect()
             }; // victim lock released before touching our own queue
+            let (steals, depth) = pool_metrics();
+            steals.inc();
+            depth.sub(1); // the job we are about to run; the rest stay queued
             let first = grabbed.remove(0);
             if !grabbed.is_empty() {
                 let mut mine = self.queues[me].lock().unwrap();
@@ -150,6 +188,7 @@ impl ThreadPool {
             return Err(PoolClosed);
         }
         self.shared.queues[slot].lock().unwrap().push_back(Box::new(f));
+        pool_metrics().1.add(1);
         drop(open);
         self.shared.idle.notify_one();
         Ok(())
@@ -414,6 +453,21 @@ mod tests {
             seen.lock().unwrap().len() >= 2,
             "64 sleeping jobs were all run by one worker — stealing is dead"
         );
+    }
+
+    #[test]
+    fn metrics_track_queue_and_steals() {
+        // The registry is process-global and other tests run pools
+        // concurrently, so assert monotonicity and the drained
+        // invariant rather than exact deltas.
+        let before_steals = steal_count();
+        let pool = ThreadPool::new(4);
+        for _ in 0..64 {
+            pool.execute(move || thread::sleep(Duration::from_micros(500))).unwrap();
+        }
+        drop(pool); // drains every queued job
+        assert!(steal_count() >= before_steals, "steal counter went backwards");
+        assert!(queued_jobs() >= 0, "queue-depth gauge went negative");
     }
 
     #[test]

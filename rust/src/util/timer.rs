@@ -14,6 +14,15 @@ pub struct BenchStats {
     pub min: Duration,
     pub max: Duration,
     pub stddev: Duration,
+    /// 95th/99th percentile of the sample series (nearest-rank; equal to
+    /// `max` for small n) — tail visibility for the bench tables and
+    /// BENCH_*.json, where a clean median can hide stutter.
+    pub p95: Duration,
+    pub p99: Duration,
+    /// Sorted samples, kept so [`Self::percentile`] can answer any
+    /// quantile after the fact (bench series are small — tens to a few
+    /// thousand entries).
+    sorted: Vec<Duration>,
 }
 
 impl BenchStats {
@@ -23,18 +32,42 @@ impl BenchStats {
     pub fn median_secs(&self) -> f64 {
         self.median.as_secs_f64()
     }
+    pub fn p95_secs(&self) -> f64 {
+        self.p95.as_secs_f64()
+    }
+    pub fn p99_secs(&self) -> f64 {
+        self.p99.as_secs_f64()
+    }
+
+    /// Generic nearest-rank percentile over the measured samples,
+    /// `p` in [0, 1]: `percentile(0.5)` is the median, `percentile(1.0)`
+    /// the max.
+    pub fn percentile(&self, p: f64) -> Duration {
+        percentile_of_sorted(&self.sorted, p)
+    }
+}
+
+/// Nearest-rank percentile of an ascending-sorted series (empty → zero).
+fn percentile_of_sorted(sorted: &[Duration], p: f64) -> Duration {
+    if sorted.is_empty() {
+        return Duration::ZERO;
+    }
+    let idx = (p.clamp(0.0, 1.0) * (sorted.len() - 1) as f64).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
 }
 
 impl std::fmt::Display for BenchStats {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "median {:>10} mean {:>10} ± {:<10} (n={}, min {}, max {})",
+            "median {:>10} mean {:>10} ± {:<10} (n={}, min {}, p95 {}, p99 {}, max {})",
             fmt_dur(self.median),
             fmt_dur(self.mean),
             fmt_dur(self.stddev),
             self.iters,
             fmt_dur(self.min),
+            fmt_dur(self.p95),
+            fmt_dur(self.p99),
             fmt_dur(self.max),
         )
     }
@@ -111,6 +144,9 @@ fn stats_of(samples: &mut [Duration]) -> BenchStats {
         min: samples[0],
         max: samples[n - 1],
         stddev: Duration::from_secs_f64(var.sqrt()),
+        p95: percentile_of_sorted(samples, 0.95),
+        p99: percentile_of_sorted(samples, 0.99),
+        sorted: samples.to_vec(),
     }
 }
 
@@ -168,6 +204,22 @@ mod tests {
         });
         assert_eq!(s.iters, 10);
         assert!(s.min <= s.median && s.median <= s.max);
+        assert!(s.median <= s.p95 && s.p95 <= s.p99 && s.p99 <= s.max);
+    }
+
+    #[test]
+    fn percentiles_hit_known_ranks() {
+        let mut samples: Vec<Duration> = (1..=100u64).map(Duration::from_micros).collect();
+        let s = stats_of(&mut samples);
+        assert_eq!(s.percentile(0.0), Duration::from_micros(1));
+        assert_eq!(s.percentile(1.0), Duration::from_micros(100));
+        // nearest-rank over 100 evenly spaced samples
+        assert_eq!(s.p95, Duration::from_micros(95));
+        assert_eq!(s.p99, Duration::from_micros(99));
+        assert_eq!(s.percentile(0.5), s.median);
+        // out-of-range p clamps instead of panicking
+        assert_eq!(s.percentile(2.0), Duration::from_micros(100));
+        assert_eq!(s.percentile(-1.0), Duration::from_micros(1));
     }
 
     #[test]

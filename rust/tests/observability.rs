@@ -1,0 +1,277 @@
+//! Observability subsystem tests: the Prometheus exposition must
+//! round-trip over the wire protocol (REQ_METRICS against a live daemon)
+//! with every advertised metric family present and the plan-cache hit
+//! counter moving on a warm repeat request; per-worker request counters
+//! must stay consistent with the daemon's own stats under concurrent
+//! clients; and span tracing must be behavior-neutral — predictions
+//! byte-identical with tracing on or off across the options matrix.
+//!
+//! Every test takes the `SERIAL` lock: the metrics registry and the
+//! trace collector are process-wide, so deltas are only meaningful when
+//! tests run one at a time.
+
+use groot::coordinator::server::{Server, VerifyOptions};
+use groot::coordinator::{Session, SessionConfig};
+use groot::datasets::{self, DatasetKind};
+use groot::gnn::{SageLayer, SageModel};
+use groot::net::{BindAddr, GrootClient, NetConfig, NetDaemon, Reply};
+use groot::obs::metrics::{parse_prometheus, Sample};
+use groot::obs::{trace, MetricsFormat};
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn serial() -> std::sync::MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Deterministic 4→16→5 model with REAL aggregation (nonzero w_neigh):
+/// predictions depend on partitioning, so the tracing-neutrality check
+/// exercises the instrumented pipeline, not a trivial one.
+fn aggregating_model() -> SageModel {
+    let wave = |n: usize, scale: f32| -> Vec<f32> {
+        (0..n).map(|i| ((i as f32 * 0.7).sin()) * scale).collect()
+    };
+    SageModel {
+        layers: vec![
+            SageLayer {
+                din: 4,
+                dout: 16,
+                w_self: wave(4 * 16, 0.3),
+                w_neigh: wave(4 * 16, 0.2),
+                bias: wave(16, 0.1),
+            },
+            SageLayer {
+                din: 16,
+                dout: 5,
+                w_self: wave(16 * 5, 0.3),
+                w_neigh: wave(16 * 5, 0.2),
+                bias: wave(5, 0.1),
+            },
+        ],
+    }
+}
+
+fn sock_path(tag: &str) -> PathBuf {
+    let p = std::env::temp_dir().join(format!("groot_obs_{tag}_{}.sock", std::process::id()));
+    let _ = std::fs::remove_file(&p);
+    p
+}
+
+fn spawn_daemon(tag: &str, workers: usize) -> (NetDaemon, BindAddr) {
+    let server = Server::spawn(
+        SessionConfig { workers, threads: 1, ..Default::default() },
+        move || {
+            Ok(Box::new(groot::backend::NativeBackend::with_threads(aggregating_model(), 1))
+                as groot::coordinator::Backend)
+        },
+    );
+    let sock = sock_path(tag);
+    let daemon =
+        NetDaemon::bind(&BindAddr::Unix(sock.clone()), server, NetConfig::default()).unwrap();
+    (daemon, BindAddr::Unix(sock))
+}
+
+/// First sample matching name + label subset.
+fn sample_value(samples: &[Sample], name: &str, labels: &[(&str, &str)]) -> Option<f64> {
+    samples
+        .iter()
+        .find(|s| s.name == name && labels.iter().all(|(k, v)| s.label(k) == Some(*v)))
+        .map(|s| s.value)
+}
+
+/// Sum of every series of a family (e.g. all worker labels).
+fn sample_sum(samples: &[Sample], name: &str) -> f64 {
+    samples.iter().filter(|s| s.name == name).map(|s| s.value).sum()
+}
+
+fn scrape(client: &mut GrootClient) -> Vec<Sample> {
+    let text = client.metrics(MetricsFormat::Prometheus).unwrap();
+    parse_prometheus(&text).expect("daemon served unparseable Prometheus exposition")
+}
+
+#[test]
+fn prometheus_scrape_round_trips_and_plan_cache_hit_increments() {
+    let _g = serial();
+    let (daemon, addr) = spawn_daemon("prom", 2);
+    let mut client = GrootClient::connect(&addr).unwrap();
+
+    let graph = datasets::build(DatasetKind::Csa, 6).unwrap();
+    let circuit = graph.to_circuit().unwrap();
+    let opts = VerifyOptions::partitions(4);
+
+    // cold request: builds + caches the plan
+    match client.classify_circuit(&circuit, &opts).unwrap() {
+        Reply::Result(r) => assert!(!r.stats.plan_cache_hit),
+        Reply::Busy => panic!("idle daemon replied BUSY"),
+    }
+    let cold = scrape(&mut client);
+
+    // every advertised family must be present in the exposition
+    for family in [
+        "groot_queue_depth",
+        "groot_requests_served_total",
+        "groot_request_latency_seconds_count",
+        "groot_request_latency_seconds_sum",
+        "groot_worker_requests_total",
+        "groot_plan_cache_lookups_total",
+        "groot_partitioner_invocations_total",
+        "groot_kernel_seconds_count",
+        "groot_kernel_rows_total",
+        "groot_kernel_nnz_total",
+    ] {
+        assert!(
+            cold.iter().any(|s| s.name == family),
+            "scrape is missing metric family {family}"
+        );
+    }
+    // the cold request ran LD kernels and at least one partitioner call
+    assert!(
+        sample_value(&cold, "groot_kernel_seconds_count", &[("kernel", "ld")])
+            .unwrap_or(0.0)
+            > 0.0,
+        "LD kernel histogram never observed a call"
+    );
+    assert!(sample_sum(&cold, "groot_partitioner_invocations_total") >= 1.0);
+
+    // warm repeat request: the memory-tier hit counter must move
+    let h0 = sample_value(
+        &cold,
+        "groot_plan_cache_lookups_total",
+        &[("tier", "memory"), ("outcome", "hit")],
+    )
+    .unwrap_or(0.0);
+    match client.classify_circuit(&circuit, &opts).unwrap() {
+        Reply::Result(r) => assert!(r.stats.plan_cache_hit, "repeat request missed the cache"),
+        Reply::Busy => panic!("idle daemon replied BUSY"),
+    }
+    let warm = scrape(&mut client);
+    let h1 = sample_value(
+        &warm,
+        "groot_plan_cache_lookups_total",
+        &[("tier", "memory"), ("outcome", "hit")],
+    )
+    .unwrap_or(0.0);
+    assert!(
+        h1 > h0,
+        "plan-cache hit counter did not increment on a warm request ({h0} -> {h1})"
+    );
+
+    // JSON exposition: same registry, machine-readable form
+    let json = client.metrics(MetricsFormat::Json).unwrap();
+    assert!(json.trim_start().starts_with('{'), "JSON exposition is not an object");
+    assert!(json.contains("groot_requests_served_total"));
+
+    daemon.shutdown();
+}
+
+#[test]
+fn worker_counters_consistent_under_concurrent_clients() {
+    let _g = serial();
+    let (daemon, addr) = spawn_daemon("conc", 2);
+    let graph = datasets::build(DatasetKind::Csa, 6).unwrap();
+    let bytes = Arc::new(graph.to_circuit().unwrap().to_bytes());
+    let opts = VerifyOptions::partitions(2);
+
+    let s0 = scrape(&mut GrootClient::connect(&addr).unwrap());
+    let served0 = sample_sum(&s0, "groot_requests_served_total");
+    let workers0 = sample_sum(&s0, "groot_worker_requests_total");
+
+    let (clients, per_client) = (4usize, 5usize);
+    let joins: Vec<_> = (0..clients)
+        .map(|_| {
+            let addr = addr.clone();
+            let bytes = Arc::clone(&bytes);
+            let opts = opts.clone();
+            std::thread::spawn(move || {
+                let mut c = GrootClient::connect(&addr).unwrap();
+                for _ in 0..per_client {
+                    loop {
+                        match c.classify_circuit_bytes(&bytes, &opts).unwrap() {
+                            Reply::Result(r) => {
+                                assert!(!r.pred.is_empty());
+                                break;
+                            }
+                            // bounded queue full: honest retry
+                            Reply::Busy => std::thread::yield_now(),
+                        }
+                    }
+                }
+            })
+        })
+        .collect();
+    for j in joins {
+        j.join().expect("concurrent client died");
+    }
+    let total = (clients * per_client) as f64;
+
+    let mut client = GrootClient::connect(&addr).unwrap();
+    let s1 = scrape(&mut client);
+    assert_eq!(
+        sample_sum(&s1, "groot_requests_served_total") - served0,
+        total,
+        "requests-served counter disagrees with the requests actually answered"
+    );
+    assert_eq!(
+        sample_sum(&s1, "groot_worker_requests_total") - workers0,
+        total,
+        "per-worker counters do not sum to the requests answered"
+    );
+    // and both agree with the daemon's own stats frame for ITS lifetime
+    let stats = client.stats().unwrap();
+    assert_eq!(stats.requests_served as f64, total);
+    assert_eq!(
+        stats.per_worker_requests.iter().sum::<u64>() as f64,
+        total,
+        "WireStats per-worker sum diverged"
+    );
+
+    daemon.shutdown();
+}
+
+#[test]
+fn tracing_is_behavior_neutral_predictions_byte_identical() {
+    let _g = serial();
+    let graph = datasets::build(DatasetKind::Csa, 6).unwrap();
+
+    let classify = |partitions: usize, regrow: bool, seed: u64| -> Vec<u8> {
+        let session = Session::native(
+            aggregating_model(),
+            SessionConfig {
+                num_partitions: partitions,
+                regrow,
+                seed,
+                threads: 1,
+                workers: 1,
+                ..Default::default()
+            },
+        );
+        session.classify(&graph).unwrap().pred
+    };
+
+    for partitions in [2usize, 4] {
+        for regrow in [true, false] {
+            for seed in [0u64, 7] {
+                trace::disable();
+                let off = classify(partitions, regrow, seed);
+                trace::enable();
+                let on = classify(partitions, regrow, seed);
+                trace::disable();
+                assert_eq!(
+                    on, off,
+                    "tracing changed predictions at p={partitions} regrow={regrow} seed={seed}"
+                );
+            }
+        }
+    }
+
+    // the traced runs really did record spans, and the rendered Chrome
+    // trace is loadable-shaped (drains the buffer for later tests)
+    assert!(trace::buffered_events() > 0, "traced classify runs buffered no spans");
+    let rendered = trace::render_chrome_trace();
+    assert!(rendered.contains("\"traceEvents\""));
+    assert!(rendered.contains("\"partition\""), "no partition span in the trace");
+    assert!(rendered.contains("\"cat\":\"kernel\""), "no kernel span in the trace");
+    assert_eq!(trace::buffered_events(), 0, "render did not drain the buffer");
+}
