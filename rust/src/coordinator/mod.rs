@@ -25,17 +25,20 @@ pub mod planstore;
 pub mod server;
 
 pub use pipeline::{
-    execute_plan, execute_plan_streaming, execute_plan_streaming_overlapped, ExecStats,
-    PartitionPlan, PlanCache, PlannedPartition, PlanOptions, PlanStats, PreparedGraph,
-    ShardedPlanCache, StreamPlan, StreamStats, DEFAULT_PLAN_CACHE_CAPACITY,
-    DEFAULT_PLAN_CACHE_SHARDS,
+    combine_part_digests, execute_plan, execute_plan_streaming,
+    execute_plan_streaming_overlapped, ExecStats, PartitionPlan, PlanCache, PlannedPartition,
+    PlanOptions, PlanStats, PreparedGraph, ShardedPlanCache, StreamPlan, StreamStats,
+    DEFAULT_PLAN_CACHE_CAPACITY, DEFAULT_PLAN_CACHE_SHARDS,
 };
 pub use planstore::PlanStore;
 
 use crate::backend::{InferenceBackend, NativeBackend};
 use crate::features::EdaGraph;
 use crate::gnn::SageModel;
+use crate::graph::CircuitGraph;
+use crate::incremental::{apply_edits, GraphEdit, IncrementalState};
 use anyhow::{Context, Result};
+use std::sync::Arc;
 use std::time::Duration;
 
 /// Session configuration (the CLI mirrors these).
@@ -124,15 +127,53 @@ pub struct ClassifyResult {
     pub stats: RunStats,
 }
 
-/// A verification session: backend + config.
+/// Outcome of [`Session::classify_delta`]: the classification of the
+/// edited design (byte-identical to a from-scratch [`Session::classify`]
+/// of it) plus the incremental-execution accounting.
+#[derive(Clone, Debug)]
+pub struct DeltaResult {
+    pub result: ClassifyResult,
+    /// Content fingerprint of the edited graph — the base fingerprint
+    /// for a chained follow-up delta (the session registers the edited
+    /// design automatically).
+    pub edited_fingerprint: u64,
+    /// Non-empty partitions that went through `infer_batch`.
+    pub dirty: usize,
+    /// Non-empty partitions stitched verbatim from the prediction cache.
+    pub clean: usize,
+    /// The edit list changed the topology, so the k-way partitioner ran
+    /// from scratch instead of reusing the base assignment.
+    pub repartitioned: bool,
+}
+
+/// A verification session: backend + config (+ shared incremental state).
 pub struct Session {
     pub backend: Backend,
     pub config: SessionConfig,
+    /// Base-design registry + prediction cache driving
+    /// [`Self::classify_delta`]. Private by design: a standalone session
+    /// owns its own, the serving layer injects one shared instance via
+    /// [`Self::with_incremental`].
+    incremental: IncrementalState,
 }
 
 impl Session {
     pub fn new(backend: Backend, config: SessionConfig) -> Session {
-        Session { backend, config }
+        Session { backend, config, incremental: IncrementalState::new() }
+    }
+
+    /// Replace the incremental state — the serving layer creates ONE
+    /// [`IncrementalState`] and hands a clone to every worker session so
+    /// registered bases and cached predictions are visible across
+    /// workers.
+    pub fn with_incremental(mut self, incremental: IncrementalState) -> Session {
+        self.incremental = incremental;
+        self
+    }
+
+    /// The session's incremental state (shared handle).
+    pub fn incremental(&self) -> &IncrementalState {
+        &self.incremental
     }
 
     /// Convenience: a session on the rust-native backend (GROOT SpMM
@@ -178,8 +219,9 @@ impl Session {
     ) -> Result<ClassifyResult> {
         anyhow::ensure!(
             plan.fingerprint == prepared.fingerprint(),
-            "plan fingerprint {:016x} does not match the graph's {:016x} \
-             (plan is stale or was built from a different graph)",
+            "stale plan for graph '{}': plan expected fingerprint {:016x} but the graph's \
+             actual fingerprint is {:016x} (plan is stale or was built from a different graph)",
+            prepared.name(),
             plan.fingerprint,
             prepared.fingerprint()
         );
@@ -212,6 +254,126 @@ impl Session {
         let labels = prepared.labels_u8();
         let accuracy = crate::gnn::accuracy(&pred, &labels);
         Ok(ClassifyResult { pred, accuracy, stats })
+    }
+
+    /// Classify a compact circuit AND register it as an incremental
+    /// base: the circuit, its k-way assignment, and its per-partition
+    /// core predictions all land in the session's [`IncrementalState`],
+    /// so a follow-up [`Self::classify_delta`] against the returned
+    /// fingerprint re-infers only the partitions an edit dirties.
+    pub fn prime_base(&self, circuit: Arc<CircuitGraph>) -> Result<(u64, ClassifyResult)> {
+        let prepared = PreparedGraph::from_circuit_ref(&circuit);
+        let opts = PlanOptions::from_config(&self.config);
+        let plan = prepared.plan(&opts);
+        let result = self.classify_plan(&prepared, &plan, false)?;
+        let fingerprint = prepared.fingerprint();
+        self.note_base(fingerprint, circuit.clone(), &plan, &result.pred);
+        Ok((fingerprint, result))
+    }
+
+    /// Register an already-classified circuit as an incremental base
+    /// (the zero-recompute path the serving workers use after a normal
+    /// classify): stores the circuit, the plan's recovered assignment,
+    /// and the per-partition core predictions.
+    pub fn note_base(
+        &self,
+        fingerprint: u64,
+        circuit: Arc<CircuitGraph>,
+        plan: &PartitionPlan,
+        pred: &[u8],
+    ) {
+        self.incremental.register_base(fingerprint, circuit);
+        self.incremental.store_assignment(fingerprint, &plan.options, plan.extract_assignment());
+        self.incremental.prime_predictions(plan, pred);
+    }
+
+    /// Incremental verification: apply `edits` to the registered base
+    /// design and classify the edited graph, re-inferring ONLY the
+    /// partitions whose content digest the edit moved (the rest stitch
+    /// cached core predictions verbatim). Output is byte-identical to a
+    /// from-scratch [`Self::classify`] of the edited graph.
+    ///
+    /// Topology-preserving edit lists (all [`GraphEdit::SetFunction`])
+    /// additionally reuse the base k-way assignment, skipping the
+    /// partitioner entirely; topology-changing lists repartition from
+    /// scratch (`DeltaResult::repartitioned`).
+    ///
+    /// The edited design is registered as a new base under
+    /// `DeltaResult::edited_fingerprint`, so deltas chain.
+    pub fn classify_delta(
+        &self,
+        base_fingerprint: u64,
+        edits: &[GraphEdit],
+    ) -> Result<DeltaResult> {
+        self.classify_delta_with(base_fingerprint, edits, &self.config)
+    }
+
+    /// Same, with a per-request config override (the daemon resolves
+    /// request flags into one of these).
+    pub fn classify_delta_with(
+        &self,
+        base_fingerprint: u64,
+        edits: &[GraphEdit],
+        cfg: &SessionConfig,
+    ) -> Result<DeltaResult> {
+        let base = self.incremental.base(base_fingerprint).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown base fingerprint {base_fingerprint:016x}: register the base design \
+                 first (classify it through this session, or prime_base it)"
+            )
+        })?;
+        let edited = Arc::new(apply_edits(&base, edits)?);
+        let prepared = PreparedGraph::from_circuit_ref(&edited);
+        let opts = PlanOptions::from_config(cfg);
+
+        // Topology-preserving edits keep the symmetric CSR identical, so
+        // the deterministic partitioner would reproduce the base
+        // assignment bit-for-bit — reuse it and skip k-way entirely.
+        let reusable = edits.iter().all(|e| e.preserves_topology());
+        let assignment =
+            if reusable { self.incremental.assignment(base_fingerprint, &opts) } else { None };
+        let repartitioned = assignment.is_none();
+        let plan = match assignment {
+            Some(a) => prepared.plan_with_assignment(&opts, &a)?,
+            None => prepared.plan(&opts),
+        };
+
+        let delta = crate::incremental::execute_plan_delta(
+            self.backend.as_ref(),
+            &plan,
+            self.incremental.predictions(),
+        )?;
+        let stats = RunStats {
+            num_partitions: plan.num_partitions(),
+            regrown: plan.options.regrow,
+            partition_time: plan.stats.partition_time,
+            regrowth_time: plan.stats.regrowth_time,
+            pack_time: plan.stats.gather_time,
+            infer_time: delta.stats.infer_time,
+            total_nodes: prepared.num_nodes(),
+            total_boundary_nodes: plan.stats.regrowth.total_boundary_nodes,
+            total_crossing_edges: plan.stats.regrowth.total_crossing_edges,
+            max_partition_nodes: plan.stats.regrowth.max_partition_nodes,
+            peak_bucket_n: delta.stats.peak_bucket_n,
+            plan_cache_hit: false,
+            batch_size: delta.stats.batch_size,
+            peak_resident_bytes: delta.stats.peak_resident_bytes,
+        };
+        let labels = prepared.labels_u8();
+        let accuracy = crate::gnn::accuracy(&delta.pred, &labels);
+        let edited_fingerprint = prepared.fingerprint();
+
+        // Chain: the edited design becomes a registered base, and its
+        // (possibly freshly inferred) core predictions prime the cache.
+        self.note_base(edited_fingerprint, edited.clone(), &plan, &delta.pred);
+
+        Ok(DeltaResult {
+            result: ClassifyResult { pred: delta.pred, accuracy, stats },
+            edited_fingerprint,
+            dirty: delta.dirty,
+            clean: delta.clean,
+            repartitioned,
+        })
     }
 
     /// Out-of-core classification: build a lean [`StreamPlan`] from the
@@ -462,6 +624,73 @@ mod tests {
             .classify_plan(&PreparedGraph::new(&altered), &plan, false)
             .unwrap_err();
         assert!(err.to_string().contains("fingerprint"), "{err:#}");
+    }
+
+    #[test]
+    fn classify_delta_matches_cold_classify_of_edited_graph() {
+        let base =
+            Arc::new(CircuitGraph::from_source(crate::aig::mult::csa_source(6, 64)).unwrap());
+        let cfg = SessionConfig { num_partitions: 6, regrow: true, ..Default::default() };
+        let session = Session::native(type_bit_model(), cfg.clone());
+        let (fp, primed) = session.prime_base(base.clone()).unwrap();
+        assert_eq!(session.incremental().num_bases(), 1);
+        assert_eq!(primed.pred.len(), base.num_nodes());
+
+        // one polarity flip: most partitions must stitch from cache
+        let edits = crate::incremental::synthetic_polarity_edits(&base, 1, 7);
+        assert_eq!(edits.len(), 1);
+        let delta = session.classify_delta(fp, &edits).unwrap();
+        assert!(!delta.repartitioned, "topology-preserving edit must reuse the assignment");
+        assert!(delta.dirty >= 1, "the edited node's partition must re-infer");
+        assert!(delta.clean >= 1, "untouched partitions must stitch from cache");
+
+        // byte-identity against a cold session classifying the edited graph
+        let edited = crate::incremental::apply_edits(&base, &edits).unwrap();
+        let cold = Session::native(type_bit_model(), cfg);
+        let prepared = PreparedGraph::from_circuit(edited);
+        let plan = prepared.plan(&PlanOptions::from_config(&cold.config));
+        let reference = cold.classify_plan(&prepared, &plan, false).unwrap();
+        assert_eq!(delta.result.pred, reference.pred);
+        assert_eq!(delta.result.accuracy, reference.accuracy);
+        assert_eq!(delta.edited_fingerprint, prepared.fingerprint());
+
+        // deltas chain: the edited design is now a registered base
+        let edits2 = crate::incremental::synthetic_polarity_edits(&base, 1, 8);
+        let chained = session.classify_delta(delta.edited_fingerprint, &edits2).unwrap();
+        assert!(chained.clean >= 1);
+
+        // unknown bases are rejected with a helpful message
+        let err = session.classify_delta(0xdead_beef, &[]).unwrap_err().to_string();
+        assert!(err.contains("unknown base fingerprint"), "{err}");
+    }
+
+    #[test]
+    fn topology_changing_delta_repartitions_and_still_matches() {
+        let base =
+            Arc::new(CircuitGraph::from_source(crate::aig::mult::csa_source(5, 64)).unwrap());
+        let cfg = SessionConfig { num_partitions: 4, regrow: true, ..Default::default() };
+        let session = Session::native(type_bit_model(), cfg.clone());
+        let (fp, _) = session.prime_base(base.clone()).unwrap();
+
+        // an ECO cone changes topology → full repartition, still correct
+        let at = base.num_aig_nodes() as u32;
+        let cone = crate::incremental::GraphEdit::AppendCone {
+            desc: vec![
+                crate::graph::circuit::pack_desc(crate::graph::circuit::KIND_INPUT, false, false),
+                crate::graph::circuit::pack_desc(crate::graph::circuit::KIND_AND, true, false),
+            ],
+            labels: vec![4, 3],
+            fanins: vec![(0, 1), (at, 1)],
+        };
+        let delta = session.classify_delta(fp, &[cone.clone()]).unwrap();
+        assert!(delta.repartitioned, "an appended cone must force a repartition");
+
+        let edited = crate::incremental::apply_edits(&base, &[cone]).unwrap();
+        let cold = Session::native(type_bit_model(), cfg);
+        let prepared = PreparedGraph::from_circuit(edited);
+        let plan = prepared.plan(&PlanOptions::from_config(&cold.config));
+        let reference = cold.classify_plan(&prepared, &plan, false).unwrap();
+        assert_eq!(delta.result.pred, reference.pred);
     }
 
     #[test]

@@ -303,10 +303,10 @@ impl<'g> PreparedGraph<'g> {
         // Force lazy CSR materialization outside the stage timer so
         // partition_time means the same thing on every plan, not just
         // the first one on this PreparedGraph.
-        let graph_csr = {
+        {
             let _span = obs::span("prepare", "pipeline");
-            self.csr()
-        };
+            self.csr();
+        }
 
         let t0 = Instant::now();
         let partitioning = {
@@ -316,11 +316,24 @@ impl<'g> PreparedGraph<'g> {
             self.partition(opts)
         };
         let partition_time = t0.elapsed();
+        self.regrow_and_stats(&partitioning, opts, partition_time)
+    }
 
+    /// Back half of [`Self::partition_and_regrow`], callable with an
+    /// externally supplied assignment (the incremental reuse path):
+    /// Algorithm-1 re-growth + the degree-split scan, with gather_time
+    /// (and per-partition digests) left to the plan finisher.
+    fn regrow_and_stats(
+        &self,
+        partitioning: &Partitioning,
+        opts: &PlanOptions,
+        partition_time: Duration,
+    ) -> (Vec<RegrownPartition>, PlanStats) {
+        let graph_csr = self.csr();
         let t1 = Instant::now();
         let parts = {
             let _span = obs::span("regrowth", "pipeline");
-            regrow_partitions(graph_csr, &partitioning, opts.regrow)
+            regrow_partitions(graph_csr, partitioning, opts.regrow)
         };
         let regrowth_time = t1.elapsed();
         let regrowth = crate::regrowth::stats(&parts);
@@ -343,6 +356,7 @@ impl<'g> PreparedGraph<'g> {
             regrowth,
             hd_rows,
             ld_rows,
+            content_digest: 0,
         };
         (parts, stats)
     }
@@ -356,12 +370,25 @@ impl<'g> PreparedGraph<'g> {
     }
 
     /// Stats-only probe: run the partitioner and re-growth and report the
-    /// timings/boundary arithmetic WITHOUT materializing per-partition
-    /// CSRs or gathering feature buffers. This is what the memory
-    /// harnesses sweep — a full [`Self::plan`] would inflate the very
-    /// RSS they measure with buffers nobody executes.
+    /// timings/boundary arithmetic WITHOUT retaining per-partition CSRs
+    /// or feature buffers. This is what the memory harnesses sweep — a
+    /// full [`Self::plan`] would inflate the very RSS they measure with
+    /// buffers nobody executes. Per-partition content digests ARE
+    /// computed (folded into [`PlanStats::content_digest`]) from
+    /// transient one-partition scratch buffers, so the transient
+    /// high-water mark is one partition's CSR + features, never the
+    /// whole plan.
     pub fn plan_stats(&self, opts: &PlanOptions) -> PlanStats {
-        self.partition_and_regrow(opts).1
+        let (parts, mut stats) = self.partition_and_regrow(opts);
+        let mut features = Vec::new();
+        let digests = parts.iter().map(|part| {
+            let csr = part.csr();
+            features.clear();
+            self.gather_features_into(&part.nodes, &mut features);
+            PlannedPartition::compute_digest(part.num_core, &part.nodes, &csr, &features)
+        });
+        stats.content_digest = combine_part_digests(digests);
+        stats
     }
 
     /// Stage 2 (eager): partition, re-grow, and gather — everything
@@ -369,8 +396,52 @@ impl<'g> PreparedGraph<'g> {
     /// its buffers and can be cached, shared (`Arc`), and executed any
     /// number of times.
     pub fn plan(&self, opts: &PlanOptions) -> PartitionPlan {
-        let (parts, mut stats) = self.partition_and_regrow(opts);
+        let (parts, stats) = self.partition_and_regrow(opts);
+        self.finish_plan(parts, stats, opts)
+    }
 
+    /// [`Self::plan`] with an externally supplied partition assignment —
+    /// the incremental reuse path. When an edit is topology-preserving
+    /// (node descriptors change, edges do not), the symmetric CSR is
+    /// identical to the base graph's, so the deterministic k-way
+    /// partitioner would return exactly the base assignment; reusing it
+    /// skips that invocation while producing a byte-identical plan.
+    /// Rejects assignments whose shape does not match the graph/options
+    /// (callers must not feed a stale assignment past the digest layer).
+    pub fn plan_with_assignment(
+        &self,
+        opts: &PlanOptions,
+        partitioning: &Partitioning,
+    ) -> Result<PartitionPlan> {
+        anyhow::ensure!(
+            partitioning.assignment.len() == self.num_nodes(),
+            "assignment covers {} nodes but the graph has {}",
+            partitioning.assignment.len(),
+            self.num_nodes()
+        );
+        anyhow::ensure!(
+            partitioning.k == opts.partitions.max(1),
+            "assignment has k={} but the options ask for {} partitions",
+            partitioning.k,
+            opts.partitions.max(1)
+        );
+        {
+            let _span = obs::span("prepare", "pipeline");
+            self.csr();
+        }
+        let (parts, stats) = self.regrow_and_stats(partitioning, opts, Duration::ZERO);
+        Ok(self.finish_plan(parts, stats, opts))
+    }
+
+    /// Shared back half of the eager planners: build each partition's
+    /// local CSR, gather its features, stamp its content digest, and
+    /// fold the plan-level digest into the stats.
+    fn finish_plan(
+        &self,
+        parts: Vec<RegrownPartition>,
+        mut stats: PlanStats,
+        opts: &PlanOptions,
+    ) -> PartitionPlan {
         let t2 = Instant::now();
         let _span = obs::span("gather", "pipeline");
         let parts: Vec<PlannedPartition> = parts
@@ -379,6 +450,12 @@ impl<'g> PreparedGraph<'g> {
                 let csr = part.csr();
                 let mut features = Vec::new();
                 self.gather_features_into(&part.nodes, &mut features);
+                let digest = PlannedPartition::compute_digest(
+                    part.num_core,
+                    &part.nodes,
+                    &csr,
+                    &features,
+                );
                 // Keep only what execution needs — the edge list is fully
                 // encoded in the local CSR; retaining it too would double
                 // every cached plan's adjacency footprint.
@@ -388,10 +465,12 @@ impl<'g> PreparedGraph<'g> {
                     num_core: part.num_core,
                     csr,
                     features,
+                    digest,
                 }
             })
             .collect();
         stats.gather_time = t2.elapsed();
+        stats.content_digest = combine_part_digests(parts.iter().map(|p| p.digest));
 
         PartitionPlan {
             fingerprint: self.fingerprint(),
@@ -447,12 +526,71 @@ pub struct PlannedPartition {
     pub csr: Csr,
     /// Gathered features, row-major `[nodes.len() × GROOT_FEATURE_DIM]`.
     pub features: Vec<f32>,
+    /// Content digest over (core count, global node list, local CSR,
+    /// feature bits) — see [`PlannedPartition::compute_digest`]. Equal
+    /// digests ⇒ byte-identical core predictions under a deterministic
+    /// backend, which is the incremental prediction-cache key.
+    pub digest: u64,
 }
 
 impl PlannedPartition {
     pub fn is_empty(&self) -> bool {
         self.nodes.is_empty()
     }
+
+    /// Per-partition content digest: word-wise FNV-1a over the core
+    /// count, the global node-id list (core-first order), the local
+    /// symmetric CSR, and the gathered feature bits. This is everything
+    /// `infer_batch` + `stitch_core` consume for the partition, plus the
+    /// stitch TARGETS (the global ids), so digest equality implies
+    /// byte-identical stitched core predictions under a deterministic
+    /// backend — regardless of graph representation, thread count,
+    /// eager-vs-streaming materialization, or kernel selection (none of
+    /// which appear in the hashed content).
+    pub fn compute_digest(num_core: usize, nodes: &[u32], csr: &Csr, features: &[f32]) -> u64 {
+        const PRIME: u64 = 0x0000_0100_0000_01b3;
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut eat = |word: u64| {
+            h ^= word;
+            h = h.wrapping_mul(PRIME);
+        };
+        eat(num_core as u64);
+        eat(nodes.len() as u64);
+        for &g in nodes {
+            eat(g as u64);
+        }
+        eat(csr.col_idx.len() as u64);
+        for &r in &csr.row_ptr {
+            eat(r as u64);
+        }
+        for &c in &csr.col_idx {
+            eat(c as u64);
+        }
+        for &v in features {
+            eat(v.to_bits() as u64);
+        }
+        h
+    }
+
+    /// [`Self::compute_digest`] over this partition's own content.
+    pub fn content_digest(&self) -> u64 {
+        Self::compute_digest(self.num_core, &self.nodes, &self.csr, &self.features)
+    }
+}
+
+/// Fold per-partition digests into one plan-level content digest
+/// (order-sensitive FNV-1a, seeded with the partition count).
+pub fn combine_part_digests(digests: impl Iterator<Item = u64>) -> u64 {
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut n = 0u64;
+    for d in digests {
+        h ^= d;
+        h = h.wrapping_mul(PRIME);
+        n += 1;
+    }
+    h ^= n;
+    h.wrapping_mul(PRIME)
 }
 
 /// Where the plan-build time went (paid once per `(graph, options)` when
@@ -469,6 +607,11 @@ pub struct PlanStats {
     /// neither, so `hd_rows + ld_rows ≤ n`.
     pub hd_rows: usize,
     pub ld_rows: usize,
+    /// Combined per-partition content digest
+    /// ([`combine_part_digests`] over [`PlannedPartition::digest`] in
+    /// partition order) — the plan-level identity the incremental layer
+    /// compares to decide whether anything changed at all.
+    pub content_digest: u64,
 }
 
 /// Stage-2 output: a reusable, backend-independent execution plan.
@@ -486,6 +629,29 @@ pub struct PartitionPlan {
 impl PartitionPlan {
     pub fn num_partitions(&self) -> usize {
         self.parts.len()
+    }
+
+    /// Per-partition content digests in partition order — the full list
+    /// behind the scalar [`PlanStats::content_digest`] (which stays
+    /// `Copy`); the incremental layer diffs these to find dirty
+    /// partitions.
+    pub fn digests(&self) -> Vec<u64> {
+        self.parts.iter().map(|p| p.digest).collect()
+    }
+
+    /// Reconstruct the k-way assignment this plan was built from: each
+    /// partition's core nodes (`nodes[..num_core]`) are exactly the
+    /// nodes assigned to it, and the core sets tile the graph. This is
+    /// how the incremental layer recovers a reusable [`Partitioning`]
+    /// from a cached plan without re-running the partitioner.
+    pub fn extract_assignment(&self) -> Partitioning {
+        let mut assignment = vec![0u32; self.num_nodes];
+        for part in &self.parts {
+            for &g in &part.nodes[..part.num_core] {
+                assignment[g as usize] = part.part_id as u32;
+            }
+        }
+        Partitioning { k: self.parts.len().max(1), assignment }
     }
 }
 
@@ -714,7 +880,8 @@ fn run_streaming(
 ) -> Result<(Vec<u8>, StreamStats)> {
     anyhow::ensure!(
         plan.fingerprint == prepared.fingerprint(),
-        "stream plan fingerprint {:016x} does not match the graph's {:016x}",
+        "stale stream plan for graph '{}': plan expected fingerprint {:016x} but the graph's actual fingerprint is {:016x}",
+        prepared.name(),
         plan.fingerprint,
         prepared.fingerprint()
     );
@@ -1314,6 +1481,58 @@ mod tests {
         let cores = sp.window_cores(&[2, 0]);
         assert_eq!(cores[0], plan.parts[2].nodes[..plan.parts[2].num_core]);
         assert_eq!(cores[1], plan.parts[0].nodes[..plan.parts[0].num_core]);
+    }
+
+    #[test]
+    fn digests_are_stable_and_representation_independent() {
+        let eg = graph();
+        let legacy = PreparedGraph::new(&eg);
+        let compact =
+            PreparedGraph::from_source(crate::aig::mult::csa_source(6, 64)).unwrap();
+        let opts = PlanOptions { partitions: 4, ..PlanOptions::default() };
+        let a = legacy.plan(&opts);
+        let b = legacy.plan(&opts);
+        let c = compact.plan(&opts);
+        assert_eq!(a.digests(), b.digests(), "rebuild changed digests");
+        assert_eq!(a.digests(), c.digests(), "representation changed digests");
+        assert_eq!(a.stats.content_digest, c.stats.content_digest);
+        assert_ne!(a.stats.content_digest, 0);
+        // the stats-only probe computes the same plan-level digest
+        assert_eq!(legacy.plan_stats(&opts).content_digest, a.stats.content_digest);
+        // stored digests match recomputation from partition content
+        for part in &a.parts {
+            assert_eq!(part.digest, part.content_digest());
+        }
+        // digests hash plan content, not kernel thresholds
+        let other = legacy.plan(&PlanOptions { hd_threshold: 1, ..opts.clone() });
+        assert_eq!(a.digests(), other.digests());
+        // but they do track content: a different seed moves partitions
+        let moved = legacy.plan(&PlanOptions { seed: 7, ..opts });
+        assert_ne!(a.stats.content_digest, moved.stats.content_digest);
+    }
+
+    #[test]
+    fn plan_with_assignment_reproduces_plan() {
+        let g = graph();
+        let p = PreparedGraph::new(&g);
+        let opts = PlanOptions { partitions: 4, seed: 3, ..PlanOptions::default() };
+        let base = p.plan(&opts);
+        let assignment = base.extract_assignment();
+        let rebuilt = p.plan_with_assignment(&opts, &assignment).unwrap();
+        assert_eq!(rebuilt.parts.len(), base.parts.len());
+        for (a, b) in base.parts.iter().zip(&rebuilt.parts) {
+            assert_eq!(a.nodes, b.nodes);
+            assert_eq!(a.num_core, b.num_core);
+            assert_eq!(a.csr, b.csr);
+            assert_eq!(a.features, b.features);
+            assert_eq!(a.digest, b.digest);
+        }
+        assert_eq!(rebuilt.stats.content_digest, base.stats.content_digest);
+        // shape mismatches are rejected loudly
+        let short = Partitioning { k: 4, assignment: vec![0; 3] };
+        assert!(p.plan_with_assignment(&opts, &short).is_err());
+        let wrong_k = Partitioning { k: 2, assignment: vec![0; g.num_nodes] };
+        assert!(p.plan_with_assignment(&opts, &wrong_k).is_err());
     }
 
     #[test]

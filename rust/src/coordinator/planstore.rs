@@ -37,8 +37,19 @@ use std::time::Duration;
 
 /// Store file magic + format version. Bump the version on ANY layout
 /// change: old files then quarantine and rebuild instead of misparsing.
+/// v2 adds a per-partition content digest after `num_core`; v1 files
+/// remain readable ([`STORE_MIN_VERSION`]) with digests recomputed at
+/// load.
 pub const STORE_MAGIC: [u8; 4] = *b"GPLN";
-pub const STORE_VERSION: u16 = 1;
+pub const STORE_VERSION: u16 = 2;
+/// Oldest GPLN version `load` still accepts.
+pub const STORE_MIN_VERSION: u16 = 1;
+
+/// Prediction-record magic + version — the sibling record type storing
+/// one partition's core predictions keyed by content digest + model
+/// tag (see [`PlanStore::save_predictions`]).
+pub const PRED_MAGIC: [u8; 4] = *b"GPPR";
+pub const PRED_VERSION: u16 = 1;
 
 /// Fixed-size file header: magic, version, reserved pad, payload
 /// checksum, payload length.
@@ -53,6 +64,8 @@ struct StoreMetrics {
     loads: metrics::Counter,
     writes: metrics::Counter,
     quarantined: metrics::Counter,
+    pred_loads: metrics::Counter,
+    pred_writes: metrics::Counter,
 }
 
 fn store_metrics() -> &'static StoreMetrics {
@@ -61,11 +74,14 @@ fn store_metrics() -> &'static StoreMetrics {
         let r = metrics::registry();
         const HELP: &str = "Persistent plan-store operations by kind (load = validated \
                             disk read, write = plan file written, quarantine = file \
-                            rejected by validation and renamed aside).";
+                            rejected by validation and renamed aside; pred_load / \
+                            pred_write = the prediction-record sibling type).";
         StoreMetrics {
             loads: r.counter("groot_plan_store_ops_total", HELP, &[("op", "load")]),
             writes: r.counter("groot_plan_store_ops_total", HELP, &[("op", "write")]),
             quarantined: r.counter("groot_plan_store_ops_total", HELP, &[("op", "quarantine")]),
+            pred_loads: r.counter("groot_plan_store_ops_total", HELP, &[("op", "pred_load")]),
+            pred_writes: r.counter("groot_plan_store_ops_total", HELP, &[("op", "pred_write")]),
         }
     })
 }
@@ -78,6 +94,8 @@ pub struct PlanStore {
     loads: AtomicU64,
     writes: AtomicU64,
     quarantined: AtomicU64,
+    pred_loads: AtomicU64,
+    pred_writes: AtomicU64,
 }
 
 impl PlanStore {
@@ -91,6 +109,8 @@ impl PlanStore {
             loads: AtomicU64::new(0),
             writes: AtomicU64::new(0),
             quarantined: AtomicU64::new(0),
+            pred_loads: AtomicU64::new(0),
+            pred_writes: AtomicU64::new(0),
         })
     }
 
@@ -113,48 +133,81 @@ impl PlanStore {
         self.quarantined.load(Ordering::SeqCst)
     }
 
+    /// Successful (fully validated) prediction-record loads.
+    pub fn pred_loads(&self) -> u64 {
+        self.pred_loads.load(Ordering::SeqCst)
+    }
+
+    /// Prediction records written.
+    pub fn pred_writes(&self) -> u64 {
+        self.pred_writes.load(Ordering::SeqCst)
+    }
+
+    /// The store path of a key at a specific format version.
+    fn path_for_version(&self, fingerprint: u64, opts: &PlanOptions, version: u16) -> PathBuf {
+        self.dir.join(format!(
+            "plan-{fingerprint:016x}-{:016x}.v{version}.gpln",
+            options_hash(opts)
+        ))
+    }
+
     /// The store path of a key. Options are folded into the file name by
     /// hash (the payload re-states them exactly, so a hash collision is
     /// caught at load time, not trusted).
     pub fn path_for(&self, fingerprint: u64, opts: &PlanOptions) -> PathBuf {
-        self.dir.join(format!(
-            "plan-{fingerprint:016x}-{:016x}.v{STORE_VERSION}.gpln",
-            options_hash(opts)
-        ))
+        self.path_for_version(fingerprint, opts, STORE_VERSION)
+    }
+
+    /// The store path of a prediction record (one partition's core
+    /// predictions, keyed by content digest + model tag).
+    pub fn pred_path_for(&self, digest: u64, model_tag: u64) -> PathBuf {
+        self.dir
+            .join(format!("pred-{digest:016x}-{model_tag:016x}.v{PRED_VERSION}.gppr"))
+    }
+
+    /// Rename a failed-validation file aside and record the event.
+    fn quarantine(&self, path: &Path, what: &str, e: anyhow::Error) {
+        let n = self.quarantined.fetch_add(1, Ordering::SeqCst);
+        store_metrics().quarantined.inc();
+        let aside = path.with_extension(format!("quarantined-{n}"));
+        log::warn(
+            LOG_TARGET,
+            format_args!(
+                "quarantining {what} file {} ({e:#}); renamed to {}",
+                path.display(),
+                aside.display()
+            ),
+        );
+        let _ = std::fs::rename(path, aside);
     }
 
     /// Load and validate the plan for a key. `None` means "not stored"
     /// OR "stored but untrustworthy" — the latter also renames the file
     /// to `*.quarantined-N` so the rebuilt plan's write-back replaces it
-    /// and the bad bytes stay on disk for postmortems.
+    /// and the bad bytes stay on disk for postmortems. Tries the current
+    /// format first, then falls back to still-readable older versions
+    /// (a v1 file loads with its digests recomputed; the next write-back
+    /// persists it as v2).
     pub fn load(&self, fingerprint: u64, opts: &PlanOptions) -> Option<PartitionPlan> {
-        let path = self.path_for(fingerprint, opts);
-        let bytes = match std::fs::read(&path) {
-            Ok(b) => b,
-            Err(_) => return None,
-        };
-        match decode_plan(&bytes, fingerprint, opts) {
-            Ok(plan) => {
-                self.loads.fetch_add(1, Ordering::SeqCst);
-                store_metrics().loads.inc();
-                Some(plan)
-            }
-            Err(e) => {
-                let n = self.quarantined.fetch_add(1, Ordering::SeqCst);
-                store_metrics().quarantined.inc();
-                let aside = path.with_extension(format!("quarantined-{n}"));
-                log::warn(
-                    LOG_TARGET,
-                    format_args!(
-                        "quarantining plan file {} ({e:#}); renamed to {}",
-                        path.display(),
-                        aside.display()
-                    ),
-                );
-                let _ = std::fs::rename(&path, aside);
-                None
-            }
+        for version in (STORE_MIN_VERSION..=STORE_VERSION).rev() {
+            let path = self.path_for_version(fingerprint, opts, version);
+            let bytes = match std::fs::read(&path) {
+                Ok(b) => b,
+                Err(_) => continue,
+            };
+            return match decode_plan(&bytes, fingerprint, opts) {
+                Ok(plan) => {
+                    self.loads.fetch_add(1, Ordering::SeqCst);
+                    store_metrics().loads.inc();
+                    Some(plan)
+                }
+                Err(e) => {
+                    self.quarantine(&path, "plan", e);
+                    None
+                }
+            };
         }
+        None
     }
 
     /// Serialize a plan to its key's file: write `*.tmp-<pid>`, then
@@ -171,6 +224,60 @@ impl PlanStore {
         self.writes.fetch_add(1, Ordering::SeqCst);
         store_metrics().writes.inc();
         Ok(())
+    }
+
+    /// Persist one partition's core predictions under its content
+    /// digest + model tag. The model tag pins records to one weight
+    /// bundle: content digests identify the *inputs* to inference, so
+    /// predictions are only reusable under the same weights. Same
+    /// trust model as plans: versioned, checksummed, key-re-stated,
+    /// write-temp-then-rename.
+    pub fn save_predictions(&self, digest: u64, model_tag: u64, core: &[u8]) -> Result<()> {
+        let mut p = Vec::with_capacity(24 + core.len());
+        put_u64(&mut p, digest);
+        put_u64(&mut p, model_tag);
+        put_u64(&mut p, core.len() as u64);
+        p.extend_from_slice(core);
+
+        let mut out = Vec::with_capacity(HEADER_LEN + p.len());
+        out.extend_from_slice(&PRED_MAGIC);
+        out.extend_from_slice(&PRED_VERSION.to_le_bytes());
+        out.extend_from_slice(&[0u8; 2]); // reserved
+        put_u64(&mut out, checksum(&p));
+        put_u64(&mut out, p.len() as u64);
+        out.extend_from_slice(&p);
+
+        let path = self.pred_path_for(digest, model_tag);
+        let tmp = path.with_extension(format!("tmp-{}", std::process::id()));
+        std::fs::write(&tmp, &out)
+            .with_context(|| format!("write prediction temp {}", tmp.display()))?;
+        std::fs::rename(&tmp, &path)
+            .with_context(|| format!("rename prediction into {}", path.display()))?;
+        self.pred_writes.fetch_add(1, Ordering::SeqCst);
+        store_metrics().pred_writes.inc();
+        Ok(())
+    }
+
+    /// Load and validate the prediction record for `(digest, model
+    /// tag)`. `None` means "not stored" or "failed validation" (the
+    /// latter quarantines the file, like plan loads).
+    pub fn load_predictions(&self, digest: u64, model_tag: u64) -> Option<Vec<u8>> {
+        let path = self.pred_path_for(digest, model_tag);
+        let bytes = match std::fs::read(&path) {
+            Ok(b) => b,
+            Err(_) => return None,
+        };
+        match decode_predictions(&bytes, digest, model_tag) {
+            Ok(core) => {
+                self.pred_loads.fetch_add(1, Ordering::SeqCst);
+                store_metrics().pred_loads.inc();
+                Some(core)
+            }
+            Err(e) => {
+                self.quarantine(&path, "prediction", e);
+                None
+            }
+        }
     }
 }
 
@@ -242,7 +349,7 @@ fn put_u32_slice(b: &mut Vec<u8>, vs: &[u32]) {
 /// core_nodes | boundary_nodes | internal_edges | crossing_edges | max_part |
 /// hd_rows | ld_rows |
 /// num_parts | per part:
-///   part_id | num_core |
+///   part_id | num_core | digest (v2+) |
 ///   nodes     (count | u32 × count)
 ///   row_ptr   (count | u64 × count)
 ///   col_idx   (count | u32 × count)
@@ -270,6 +377,7 @@ fn encode_plan(plan: &PartitionPlan) -> Vec<u8> {
     for part in &plan.parts {
         put_u64(&mut p, part.part_id as u64);
         put_u64(&mut p, part.num_core as u64);
+        put_u64(&mut p, part.digest);
         put_u32_slice(&mut p, &part.nodes);
         put_u64(&mut p, part.csr.row_ptr.len() as u64);
         for &r in &part.csr.row_ptr {
@@ -347,8 +455,8 @@ fn decode_plan(bytes: &[u8], fingerprint: u64, opts: &PlanOptions) -> Result<Par
     anyhow::ensure!(bytes[..4] == STORE_MAGIC, "plan store: bad magic");
     let version = u16::from_le_bytes(bytes[4..6].try_into().unwrap());
     anyhow::ensure!(
-        version == STORE_VERSION,
-        "plan store: version {version} (want {STORE_VERSION})"
+        (STORE_MIN_VERSION..=STORE_VERSION).contains(&version),
+        "plan store: version {version} (want {STORE_MIN_VERSION}..={STORE_VERSION})"
     );
     let want_sum = u64::from_le_bytes(bytes[8..16].try_into().unwrap());
     let payload_len = u64::from_le_bytes(bytes[16..24].try_into().unwrap());
@@ -377,7 +485,7 @@ fn decode_plan(bytes: &[u8], fingerprint: u64, opts: &PlanOptions) -> Result<Par
         "plan store: stored key (fp {stored_fp:016x}, {options:?}) \
          does not match requested (fp {fingerprint:016x}, {opts:?})"
     );
-    let stats = PlanStats {
+    let mut stats = PlanStats {
         partition_time: Duration::from_nanos(r.u64("partition_ns")?),
         regrowth_time: Duration::from_nanos(r.u64("regrowth_ns")?),
         gather_time: Duration::from_nanos(r.u64("gather_ns")?),
@@ -390,6 +498,7 @@ fn decode_plan(bytes: &[u8], fingerprint: u64, opts: &PlanOptions) -> Result<Par
         },
         hd_rows: r.u64("hd_rows")? as usize,
         ld_rows: r.u64("ld_rows")? as usize,
+        content_digest: 0,
     };
 
     let num_parts = r.count(16, "partition")?;
@@ -398,6 +507,10 @@ fn decode_plan(bytes: &[u8], fingerprint: u64, opts: &PlanOptions) -> Result<Par
     for i in 0..num_parts {
         let part_id = r.u64("part_id")? as usize;
         let num_core = r.u64("num_core")? as usize;
+        // v1 has no stored digest (recomputed below); v2 re-states it
+        // so content corruption that survives the checksum cannot slip
+        // a wrong-content partition past the incremental cache.
+        let stored_digest = if version >= 2 { Some(r.u64("digest")?) } else { None };
         let nodes = r.u32_vec("nodes")?;
         let row_ptr_len = r.count(8, "row_ptr")?;
         let row_ptr: Vec<usize> = r
@@ -438,20 +551,63 @@ fn decode_plan(bytes: &[u8], fingerprint: u64, opts: &PlanOptions) -> Result<Par
             nodes.len()
         );
         core_total += num_core;
-        parts.push(PlannedPartition {
-            part_id,
-            nodes,
-            num_core,
-            csr: Csr { row_ptr, col_idx },
-            features,
-        });
+        let csr = Csr { row_ptr, col_idx };
+        let digest = PlannedPartition::compute_digest(num_core, &nodes, &csr, &features);
+        if let Some(stored) = stored_digest {
+            anyhow::ensure!(
+                stored == digest,
+                "partition {i}: stored digest {stored:016x} does not match \
+                 recomputed content digest {digest:016x}"
+            );
+        }
+        parts.push(PlannedPartition { part_id, nodes, num_core, csr, features, digest });
     }
     anyhow::ensure!(r.at == payload.len(), "plan store: trailing bytes after last partition");
     anyhow::ensure!(
         core_total == num_nodes,
         "plan store: core cover {core_total} != {num_nodes} nodes"
     );
+    stats.content_digest =
+        super::pipeline::combine_part_digests(parts.iter().map(|p| p.digest));
     Ok(PartitionPlan { fingerprint: stored_fp, options, num_nodes, parts, stats })
+}
+
+/// Decode + validate a prediction record (`PRED_MAGIC` layout: header
+/// as for plans, payload = digest | model_tag | count | class bytes).
+fn decode_predictions(bytes: &[u8], digest: u64, model_tag: u64) -> Result<Vec<u8>> {
+    anyhow::ensure!(bytes.len() >= HEADER_LEN, "prediction store: short header");
+    anyhow::ensure!(bytes[..4] == PRED_MAGIC, "prediction store: bad magic");
+    let version = u16::from_le_bytes(bytes[4..6].try_into().unwrap());
+    anyhow::ensure!(
+        version == PRED_VERSION,
+        "prediction store: version {version} (want {PRED_VERSION})"
+    );
+    let want_sum = u64::from_le_bytes(bytes[8..16].try_into().unwrap());
+    let payload_len = u64::from_le_bytes(bytes[16..24].try_into().unwrap());
+    let payload = &bytes[HEADER_LEN..];
+    anyhow::ensure!(
+        payload.len() as u64 == payload_len,
+        "prediction store: payload length mismatch ({} on disk, header says {payload_len})",
+        payload.len()
+    );
+    anyhow::ensure!(checksum(payload) == want_sum, "prediction store: checksum mismatch");
+
+    let mut r = Rd { buf: payload, at: 0 };
+    let stored_digest = r.u64("digest")?;
+    let stored_tag = r.u64("model_tag")?;
+    anyhow::ensure!(
+        stored_digest == digest && stored_tag == model_tag,
+        "prediction store: stored key (digest {stored_digest:016x}, tag {stored_tag:016x}) \
+         does not match requested (digest {digest:016x}, tag {model_tag:016x})"
+    );
+    let n = r.count(1, "core predictions")?;
+    let core = r.take(n, "core predictions")?.to_vec();
+    anyhow::ensure!(r.at == payload.len(), "prediction store: trailing bytes");
+    anyhow::ensure!(
+        core.iter().all(|&c| (c as usize) < crate::labels::NUM_CLASSES),
+        "prediction store: class byte out of range"
+    );
+    Ok(core)
 }
 
 #[cfg(test)]
@@ -484,7 +640,54 @@ mod tests {
             assert_eq!(pa.nodes, pb.nodes);
             assert_eq!(pa.csr, pb.csr);
             assert_eq!(pa.features, pb.features);
+            assert_eq!(pa.digest, pb.digest);
         }
+        assert_eq!(a.stats.content_digest, b.stats.content_digest);
+    }
+
+    /// The v1 on-disk layout (no per-partition digest), for the
+    /// backward-compatible-read test.
+    fn encode_plan_v1(plan: &PartitionPlan) -> Vec<u8> {
+        let mut p = Vec::new();
+        put_u64(&mut p, plan.fingerprint);
+        put_u64(&mut p, plan.num_nodes as u64);
+        put_u64(&mut p, plan.options.partitions as u64);
+        p.push(plan.options.regrow as u8);
+        put_u64(&mut p, plan.options.seed);
+        put_u64(&mut p, plan.options.hd_threshold as u64);
+        put_u64(&mut p, plan.stats.partition_time.as_nanos() as u64);
+        put_u64(&mut p, plan.stats.regrowth_time.as_nanos() as u64);
+        put_u64(&mut p, plan.stats.gather_time.as_nanos() as u64);
+        put_u64(&mut p, plan.stats.regrowth.total_core_nodes as u64);
+        put_u64(&mut p, plan.stats.regrowth.total_boundary_nodes as u64);
+        put_u64(&mut p, plan.stats.regrowth.total_internal_edges as u64);
+        put_u64(&mut p, plan.stats.regrowth.total_crossing_edges as u64);
+        put_u64(&mut p, plan.stats.regrowth.max_partition_nodes as u64);
+        put_u64(&mut p, plan.stats.hd_rows as u64);
+        put_u64(&mut p, plan.stats.ld_rows as u64);
+        put_u64(&mut p, plan.parts.len() as u64);
+        for part in &plan.parts {
+            put_u64(&mut p, part.part_id as u64);
+            put_u64(&mut p, part.num_core as u64);
+            put_u32_slice(&mut p, &part.nodes);
+            put_u64(&mut p, part.csr.row_ptr.len() as u64);
+            for &r in &part.csr.row_ptr {
+                put_u64(&mut p, r as u64);
+            }
+            put_u32_slice(&mut p, &part.csr.col_idx);
+            put_u64(&mut p, part.features.len() as u64);
+            for &f in &part.features {
+                p.extend_from_slice(&f.to_bits().to_le_bytes());
+            }
+        }
+        let mut out = Vec::with_capacity(HEADER_LEN + p.len());
+        out.extend_from_slice(&STORE_MAGIC);
+        out.extend_from_slice(&1u16.to_le_bytes());
+        out.extend_from_slice(&[0u8; 2]);
+        put_u64(&mut out, checksum(&p));
+        put_u64(&mut out, p.len() as u64);
+        out.extend_from_slice(&p);
+        out
     }
 
     #[test]
@@ -561,6 +764,77 @@ mod tests {
         store.save(&plan).unwrap();
         let loaded = store.load(plan.fingerprint, &plan.options).unwrap();
         assert_plans_equal(&plan, &loaded);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn v1_files_load_with_recomputed_digests() {
+        let dir = temp_dir("v1-compat");
+        let store = PlanStore::open(&dir).unwrap();
+        let plan = small_plan();
+        // a pre-digest store entry, exactly as a v1 process wrote it
+        let v1_path = store.path_for_version(plan.fingerprint, &plan.options, 1);
+        std::fs::write(&v1_path, encode_plan_v1(&plan)).unwrap();
+        let loaded = store
+            .load(plan.fingerprint, &plan.options)
+            .expect("v1 file must remain readable");
+        assert_plans_equal(&plan, &loaded);
+        assert_eq!(store.quarantined(), 0);
+        // write-back (as the cache tier does) persists v2; both versions
+        // now resolve, preferring v2
+        store.save(&loaded).unwrap();
+        assert!(store.path_for(plan.fingerprint, &plan.options).exists());
+        let again = store.load(plan.fingerprint, &plan.options).unwrap();
+        assert_plans_equal(&plan, &again);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn digest_mismatch_quarantines_even_with_valid_checksum() {
+        let dir = temp_dir("digest-check");
+        let store = PlanStore::open(&dir).unwrap();
+        let plan = small_plan();
+        store.save(&plan).unwrap();
+        let path = store.path_for(plan.fingerprint, &plan.options);
+        let mut bytes = std::fs::read(&path).unwrap();
+        // Tamper the LAST feature f32 (the final 4 payload bytes) and
+        // re-stamp a VALID checksum — only the stored-digest re-check
+        // can catch this class of rewrite.
+        let n = bytes.len();
+        bytes[n - 1] ^= 0x3F;
+        let sum = checksum(&bytes[HEADER_LEN..]);
+        bytes[8..16].copy_from_slice(&sum.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(store.load(plan.fingerprint, &plan.options).is_none());
+        assert_eq!(store.quarantined(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn prediction_records_roundtrip_and_validate() {
+        let dir = temp_dir("pred");
+        let store = PlanStore::open(&dir).unwrap();
+        let core = vec![0u8, 3, 1, 4, 1];
+        assert!(store.load_predictions(0xD1, 0x7A6).is_none());
+        store.save_predictions(0xD1, 0x7A6, &core).unwrap();
+        assert_eq!(store.load_predictions(0xD1, 0x7A6).unwrap(), core);
+        assert_eq!((store.pred_writes(), store.pred_loads()), (1, 1));
+        // a different model tag is a different record — clean miss
+        assert!(store.load_predictions(0xD1, 0x7A7).is_none());
+        // corruption quarantines
+        let path = store.pred_path_for(0xD1, 0x7A6);
+        let mut bytes = std::fs::read(&path).unwrap();
+        let n = bytes.len();
+        bytes[n - 1] ^= 0x01;
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(store.load_predictions(0xD1, 0x7A6).is_none());
+        assert!(!path.exists(), "corrupt prediction record must be renamed aside");
+        assert_eq!(store.quarantined(), 1);
+        // out-of-range class bytes are rejected even with a valid checksum
+        let bad = vec![crate::labels::NUM_CLASSES as u8];
+        store.save_predictions(0xD2, 0x7A6, &bad).unwrap();
+        assert!(store.load_predictions(0xD2, 0x7A6).is_none());
+        assert_eq!(store.quarantined(), 2);
         let _ = std::fs::remove_dir_all(&dir);
     }
 

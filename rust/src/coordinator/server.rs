@@ -37,11 +37,12 @@
 //! stopped", and `join()` terminates deterministically.
 
 use super::{
-    Backend, ClassifyResult, PlanOptions, PreparedGraph, Session, SessionConfig,
+    Backend, ClassifyResult, DeltaResult, PlanOptions, PreparedGraph, Session, SessionConfig,
     ShardedPlanCache,
 };
 use crate::features::EdaGraph;
 use crate::graph::CircuitGraph;
+use crate::incremental::{GraphEdit, IncrementalState};
 use crate::obs::{self, log, metrics};
 use anyhow::Result;
 use std::collections::VecDeque;
@@ -130,6 +131,25 @@ pub struct Request {
     pub reply: mpsc::Sender<Result<ClassifyResult>>,
 }
 
+/// An incremental-verification request: a registered base fingerprint
+/// plus the edit list to apply — no graph payload. The worker resolves
+/// the base from the shared [`IncrementalState`] and answers through
+/// [`Session::classify_delta_with`], re-inferring only dirty partitions.
+pub struct DeltaRequest {
+    pub base_fingerprint: u64,
+    pub edits: Vec<GraphEdit>,
+    pub options: VerifyOptions,
+    pub reply: mpsc::Sender<Result<DeltaResult>>,
+}
+
+/// One unit of queued work: a full classify or an incremental delta.
+/// Both kinds share the one bounded queue so back-pressure and shutdown
+/// semantics are uniform.
+pub enum Job {
+    Classify(Request),
+    Delta(DeltaRequest),
+}
+
 /// Outcome of a non-blocking submission attempt.
 pub enum TrySubmit {
     /// Queued; await the result on the receiver.
@@ -138,6 +158,14 @@ pub enum TrySubmit {
     /// back untouched so the caller can retry, redirect, or shed it
     /// (the network daemon maps this to a BUSY wire reply).
     Busy { graph: RequestGraph, options: VerifyOptions },
+}
+
+/// Outcome of a non-blocking delta submission attempt.
+pub enum DeltaSubmit {
+    /// Queued; await the result on the receiver.
+    Accepted(mpsc::Receiver<Result<DeltaResult>>),
+    /// Queue full — the request is handed back (see [`TrySubmit::Busy`]).
+    Busy { base_fingerprint: u64, edits: Vec<GraphEdit>, options: VerifyOptions },
 }
 
 /// Builds one backend per worker, ON that worker's thread (weights load,
@@ -156,7 +184,7 @@ struct SubmitQueue {
 }
 
 struct QueueInner {
-    q: VecDeque<Box<Request>>,
+    q: VecDeque<Box<Job>>,
     open: bool,
 }
 
@@ -172,7 +200,7 @@ impl SubmitQueue {
 
     /// Block until there is room (back-pressure), then enqueue.
     /// `Err` hands the request back when the server has stopped.
-    fn push_blocking(&self, req: Box<Request>) -> std::result::Result<(), Box<Request>> {
+    fn push_blocking(&self, req: Box<Job>) -> std::result::Result<(), Box<Job>> {
         let mut inner = self.inner.lock().unwrap();
         loop {
             if !inner.open {
@@ -191,10 +219,7 @@ impl SubmitQueue {
     /// Non-blocking enqueue: `Ok(None)` on success, `Ok(Some(req))` when
     /// full (request handed back), `Err(req)` when stopped.
     #[allow(clippy::type_complexity)]
-    fn try_push(
-        &self,
-        req: Box<Request>,
-    ) -> std::result::Result<Option<Box<Request>>, Box<Request>> {
+    fn try_push(&self, req: Box<Job>) -> std::result::Result<Option<Box<Job>>, Box<Job>> {
         let mut inner = self.inner.lock().unwrap();
         if !inner.open {
             return Err(req);
@@ -210,7 +235,7 @@ impl SubmitQueue {
 
     /// Dequeue, blocking while the queue is open and empty; `None` once
     /// it is closed AND drained — the worker exit signal.
-    fn pop(&self) -> Option<Box<Request>> {
+    fn pop(&self) -> Option<Box<Job>> {
         let mut inner = self.inner.lock().unwrap();
         loop {
             if let Some(req) = inner.q.pop_front() {
@@ -243,7 +268,7 @@ impl SubmitQueue {
     /// blocked callers get "server dropped reply" instead of hanging on
     /// a queue no live worker will ever drain again.
     fn fail_pending(&self) {
-        let dropped: Vec<Box<Request>> = {
+        let dropped: Vec<Box<Job>> = {
             let mut inner = self.inner.lock().unwrap();
             inner.open = false;
             inner.q.drain(..).collect()
@@ -305,7 +330,7 @@ impl ServerHandle {
     ) -> Result<mpsc::Receiver<Result<ClassifyResult>>> {
         let (reply, rx) = mpsc::channel();
         self.queue
-            .push_blocking(Box::new(Request { graph: graph.into(), options, reply }))
+            .push_blocking(Box::new(Job::Classify(Request { graph: graph.into(), options, reply })))
             .map_err(|_| anyhow::anyhow!("server stopped"))?;
         Ok(rx)
     }
@@ -318,12 +343,62 @@ impl ServerHandle {
         options: VerifyOptions,
     ) -> Result<TrySubmit> {
         let (reply, rx) = mpsc::channel();
-        match self.queue.try_push(Box::new(Request { graph: graph.into(), options, reply })) {
+        let job = Job::Classify(Request { graph: graph.into(), options, reply });
+        match self.queue.try_push(Box::new(job)) {
             Ok(None) => Ok(TrySubmit::Accepted(rx)),
-            Ok(Some(req)) => {
-                let req = *req;
-                Ok(TrySubmit::Busy { graph: req.graph, options: req.options })
-            }
+            Ok(Some(job)) => match *job {
+                Job::Classify(req) => Ok(TrySubmit::Busy { graph: req.graph, options: req.options }),
+                Job::Delta(_) => unreachable!("classify submission handed back a delta job"),
+            },
+            Err(_) => Err(anyhow::anyhow!("server stopped")),
+        }
+    }
+
+    /// Submit an incremental delta and wait (convenience for tests).
+    pub fn verify_delta_blocking(
+        &self,
+        base_fingerprint: u64,
+        edits: Vec<GraphEdit>,
+        options: VerifyOptions,
+    ) -> Result<DeltaResult> {
+        let rx = self.submit_delta(base_fingerprint, edits, options)?;
+        rx.recv().map_err(|_| anyhow::anyhow!("server dropped reply"))?
+    }
+
+    /// Submit an incremental delta without waiting for the result;
+    /// blocks while the bounded queue is full (back-pressure).
+    pub fn submit_delta(
+        &self,
+        base_fingerprint: u64,
+        edits: Vec<GraphEdit>,
+        options: VerifyOptions,
+    ) -> Result<mpsc::Receiver<Result<DeltaResult>>> {
+        let (reply, rx) = mpsc::channel();
+        let job = Job::Delta(DeltaRequest { base_fingerprint, edits, options, reply });
+        self.queue.push_blocking(Box::new(job)).map_err(|_| anyhow::anyhow!("server stopped"))?;
+        Ok(rx)
+    }
+
+    /// Non-blocking delta submit — [`DeltaSubmit::Busy`] hands the edit
+    /// list back when the queue is full (the daemon maps it to BUSY).
+    pub fn try_submit_delta(
+        &self,
+        base_fingerprint: u64,
+        edits: Vec<GraphEdit>,
+        options: VerifyOptions,
+    ) -> Result<DeltaSubmit> {
+        let (reply, rx) = mpsc::channel();
+        let job = Job::Delta(DeltaRequest { base_fingerprint, edits, options, reply });
+        match self.queue.try_push(Box::new(job)) {
+            Ok(None) => Ok(DeltaSubmit::Accepted(rx)),
+            Ok(Some(job)) => match *job {
+                Job::Delta(req) => Ok(DeltaSubmit::Busy {
+                    base_fingerprint: req.base_fingerprint,
+                    edits: req.edits,
+                    options: req.options,
+                }),
+                Job::Classify(_) => unreachable!("delta submission handed back a classify job"),
+            },
             Err(_) => Err(anyhow::anyhow!("server stopped")),
         }
     }
@@ -357,6 +432,7 @@ pub struct ServerStats {
 pub struct Server {
     handle: ServerHandle,
     cache: Arc<ShardedPlanCache>,
+    incremental: IncrementalState,
     worker_counts: Arc<Vec<AtomicU64>>,
     workers: Vec<JoinHandle<()>>,
 }
@@ -426,6 +502,29 @@ impl Server {
     where
         F: Fn() -> Result<Backend> + Send + Sync + 'static,
     {
+        Self::spawn_with_incremental(
+            config,
+            cache,
+            queue_capacity,
+            IncrementalState::new(),
+            make_backend,
+        )
+    }
+
+    /// Fully explicit spawn with a caller-built [`IncrementalState`]
+    /// (e.g. one whose prediction cache has a persistent [`super::PlanStore`]
+    /// tier). ONE state is shared by every worker: a base registered or
+    /// a partition primed by any worker serves delta requests on all.
+    pub fn spawn_with_incremental<F>(
+        config: SessionConfig,
+        cache: Arc<ShardedPlanCache>,
+        queue_capacity: usize,
+        incremental: IncrementalState,
+        make_backend: F,
+    ) -> Server
+    where
+        F: Fn() -> Result<Backend> + Send + Sync + 'static,
+    {
         let queue = Arc::new(SubmitQueue::new(queue_capacity));
         let make_backend: Arc<BackendFactory> = Arc::new(make_backend);
         let worker_count = config.workers.max(1);
@@ -440,17 +539,31 @@ impl Server {
                 let live = Arc::clone(&live);
                 let counts = Arc::clone(&worker_counts);
                 let config = config.clone();
+                let incremental = incremental.clone();
                 std::thread::Builder::new()
                     .name(format!("groot-serve-{i}"))
                     .spawn(move || {
                         let guard = WorkerDeathGuard { queue: &*queue, live: &*live };
-                        worker_loop(&queue, &cache, &config, &*make_backend, &live, &counts[i]);
+                        worker_loop(
+                            &queue,
+                            &cache,
+                            &config,
+                            &*make_backend,
+                            &incremental,
+                            &live,
+                            &counts[i],
+                        );
                         std::mem::forget(guard); // normal exit: not a death
                     })
                     .expect("spawn serving worker")
             })
             .collect();
-        Server { handle: ServerHandle { queue }, cache, worker_counts, workers }
+        Server { handle: ServerHandle { queue }, cache, incremental, worker_counts, workers }
+    }
+
+    /// The shared incremental state (base registry + prediction cache).
+    pub fn incremental(&self) -> &IncrementalState {
+        &self.incremental
     }
 
     pub fn handle(&self) -> ServerHandle {
@@ -515,6 +628,7 @@ fn worker_loop(
     cache: &ShardedPlanCache,
     config: &SessionConfig,
     make_backend: &BackendFactory,
+    incremental: &IncrementalState,
     live: &std::sync::atomic::AtomicUsize,
     served: &AtomicU64,
 ) {
@@ -546,28 +660,65 @@ fn worker_loop(
             if live.fetch_sub(1, Ordering::SeqCst) > 1 {
                 return;
             }
-            while let Some(req) = queue.pop() {
-                let _ = req
-                    .reply
-                    .send(Err(anyhow::anyhow!("backend init failed: {e:#}")));
+            while let Some(job) = queue.pop() {
+                let err = || anyhow::anyhow!("backend init failed: {e:#}");
+                match *job {
+                    Job::Classify(req) => drop(req.reply.send(Err(err()))),
+                    Job::Delta(req) => drop(req.reply.send(Err(err()))),
+                }
             }
             return;
         }
     };
-    let session = Session::new(backend, config.clone());
-    while let Some(req) = queue.pop() {
-        let _span = obs::span_with_arg("worker_request", "server", "graph", || {
-            req.graph.name().to_string()
-        });
-        let opts = req.options.resolve(&session.config);
-        // Preparation is cheap (content hash); the CSR and feature
-        // matrix only materialize on a cache miss, inside plan().
-        let prepared = req.graph.prepare();
-        let (plan, hit) = cache.get_or_build(&prepared, &opts);
-        let out = session.classify_plan(&prepared, &plan, hit);
-        served.fetch_add(1, Ordering::SeqCst);
-        served_metric.inc();
-        let _ = req.reply.send(out);
+    let session = Session::new(backend, config.clone()).with_incremental(incremental.clone());
+    while let Some(job) = queue.pop() {
+        match *job {
+            Job::Classify(req) => {
+                let _span = obs::span_with_arg("worker_request", "server", "graph", || {
+                    req.graph.name().to_string()
+                });
+                let opts = req.options.resolve(&session.config);
+                // Preparation is cheap (content hash); the CSR and feature
+                // matrix only materialize on a cache miss, inside plan().
+                let prepared = req.graph.prepare();
+                let (plan, hit) = cache.get_or_build(&prepared, &opts);
+                let out = session.classify_plan(&prepared, &plan, hit);
+                let fingerprint = prepared.fingerprint();
+                drop(prepared);
+                // A compact-circuit classify doubles as delta priming:
+                // register the circuit as an incremental base and seed the
+                // prediction cache, so a follow-up delta against this
+                // fingerprint re-infers only what an edit dirties.
+                if let (Ok(result), RequestGraph::Circuit(c)) = (&out, req.graph) {
+                    session.note_base(fingerprint, Arc::new(c), &plan, &result.pred);
+                }
+                served.fetch_add(1, Ordering::SeqCst);
+                served_metric.inc();
+                let _ = req.reply.send(out);
+            }
+            Job::Delta(req) => {
+                let _span = obs::span_with_arg("worker_delta", "server", "base", || {
+                    format!("{:016x}", req.base_fingerprint)
+                });
+                // Resolve per-request overrides into a full session
+                // config for the delta path (same inheritance rule as
+                // VerifyOptions::resolve).
+                let mut cfg = session.config.clone();
+                if let Some(p) = req.options.partitions {
+                    cfg.num_partitions = p;
+                }
+                if let Some(r) = req.options.regrow {
+                    cfg.regrow = r;
+                }
+                if let Some(s) = req.options.seed {
+                    cfg.seed = s;
+                }
+                let out = session.classify_delta_with(req.base_fingerprint, &req.edits, &cfg);
+                served.fetch_add(1, Ordering::SeqCst);
+                served_metric.inc();
+                let _ = req.reply.send(out);
+            }
+        }
     }
 }
 
@@ -637,6 +788,39 @@ mod tests {
         let other = h.verify_blocking(eg, VerifyOptions::partitions(2)).unwrap();
         assert!(!other.stats.plan_cache_hit);
         assert_eq!(server.cache_stats(), (1, 2), "(hits, misses)");
+    }
+
+    #[test]
+    fn circuit_classify_primes_delta_and_delta_round_trips() {
+        let server = Server::spawn(
+            SessionConfig { num_partitions: 4, ..Default::default() },
+            dummy_backend,
+        );
+        let h = server.handle();
+        let circuit = crate::graph::CircuitGraph::from_source(crate::aig::mult::csa_source(5, 64))
+            .unwrap();
+        let base = circuit.clone();
+        // a compact-circuit classify registers the base + primes the cache
+        let cold = h.verify_blocking(circuit, VerifyOptions::default()).unwrap();
+        assert_eq!(server.incremental().num_bases(), 1);
+        let fp = PreparedGraph::from_circuit_ref(&base).fingerprint();
+
+        let edits = crate::incremental::synthetic_polarity_edits(&base, 1, 11);
+        let delta = h.verify_delta_blocking(fp, edits.clone(), VerifyOptions::default()).unwrap();
+        assert!(delta.clean >= 1, "warm delta must stitch clean partitions from cache");
+        assert!(!delta.repartitioned);
+        assert_eq!(delta.result.pred.len(), cold.pred.len());
+
+        // byte-identity against a full classify of the edited circuit
+        let edited = crate::incremental::apply_edits(&base, &edits).unwrap();
+        let full = h.verify_blocking(edited, VerifyOptions::default()).unwrap();
+        assert_eq!(delta.result.pred, full.pred);
+
+        // unknown base → an error reply, not a hang
+        let err = h
+            .verify_delta_blocking(0x1234, Vec::new(), VerifyOptions::default())
+            .unwrap_err();
+        assert!(err.to_string().contains("unknown base"), "{err:#}");
     }
 
     #[test]

@@ -149,6 +149,45 @@ impl CircuitGraph {
         Ok(g)
     }
 
+    /// Assemble a graph from loose columns plus a `(src, dst)` edge
+    /// list — the rebuild path for [`crate::incremental`] graph edits.
+    /// Edges are regrouped by ascending destination with a stable
+    /// counting sort, so same-destination edges keep their relative
+    /// order and the result matches [`Self::from_source`] emission
+    /// order (content fingerprints stay representation-independent).
+    pub fn from_components(
+        name: String,
+        num_aig_nodes: usize,
+        desc: Vec<u8>,
+        labels: Vec<u8>,
+        edges: &[(u32, u32)],
+    ) -> Result<CircuitGraph> {
+        let n = desc.len();
+        anyhow::ensure!(
+            u32::try_from(n).is_ok() && u32::try_from(edges.len()).is_ok(),
+            "graph exceeds u32 node/edge index space"
+        );
+        for &(_, d) in edges {
+            anyhow::ensure!((d as usize) < n, "edge destination {d} out of range (n={n})");
+        }
+        let mut edge_ptr = vec![0u32; n + 1];
+        for &(_, d) in edges {
+            edge_ptr[d as usize + 1] += 1;
+        }
+        for v in 0..n {
+            edge_ptr[v + 1] += edge_ptr[v];
+        }
+        let mut cursor: Vec<u32> = edge_ptr[..n].to_vec();
+        let mut edge_src = vec![0u32; edges.len()];
+        for &(s, d) in edges {
+            edge_src[cursor[d as usize] as usize] = s;
+            cursor[d as usize] += 1;
+        }
+        let g = CircuitGraph { name, num_aig_nodes, desc, labels, edge_ptr, edge_src };
+        g.check()?;
+        Ok(g)
+    }
+
     pub fn num_nodes(&self) -> usize {
         self.desc.len()
     }
@@ -443,6 +482,34 @@ mod tests {
         let mut s = two_chunk_source();
         s.chunks[1].edges = vec![(2, 3), (0, 2)]; // dst order violated
         assert!(CircuitGraph::from_source(s).is_err());
+    }
+
+    #[test]
+    fn from_components_matches_source_build() {
+        let g = CircuitGraph::from_source(two_chunk_source()).unwrap();
+        // Scramble the edge order: the stable regroup must restore it.
+        let edges = vec![(2u32, 3u32), (0, 2), (1, 2)];
+        let back = CircuitGraph::from_components(
+            g.name.clone(),
+            g.num_aig_nodes(),
+            g.desc.clone(),
+            g.labels.clone(),
+            &edges,
+        )
+        .unwrap();
+        assert_eq!(back.edges_iter().collect::<Vec<_>>(), g.edges_iter().collect::<Vec<_>>());
+        for v in 0..g.num_nodes() {
+            assert_eq!(back.fanins(v), g.fanins(v));
+        }
+        // Out-of-range destinations are rejected before any sort work.
+        assert!(CircuitGraph::from_components(
+            "bad".into(),
+            0,
+            vec![0],
+            vec![0],
+            &[(0, 9)],
+        )
+        .is_err());
     }
 
     #[test]

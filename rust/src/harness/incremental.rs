@@ -1,0 +1,211 @@
+//! Incremental-verification sweep — `groot harness incremental`.
+//!
+//! For each edit size E, measures `Session::classify_delta` (base
+//! registered once, every iteration edits E fresh nodes so the dirty
+//! partitions genuinely re-infer) against a cold full classify of the
+//! same edited design (prepare + plan + execute — what a non-incremental
+//! flow pays per edit), asserts the two produce byte-identical
+//! predictions, and writes BENCH_incremental.json. The interesting
+//! curve is speedup vs edit size: the smaller the edit, the larger the
+//! clean fraction stitched from the prediction cache.
+
+use super::Table;
+use crate::coordinator::{PlanOptions, PreparedGraph, Session, SessionConfig};
+use crate::datasets::{self, DatasetKind};
+use crate::incremental::{apply_edits, synthetic_polarity_edits};
+use crate::util::timer::{bench_for, fmt_dur};
+use anyhow::{ensure, Context, Result};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// One edit-size measurement, serialized into BENCH_incremental.json.
+struct IncRow {
+    dataset: String,
+    nodes: usize,
+    partitions: usize,
+    edit_nodes: usize,
+    dirty: usize,
+    clean: usize,
+    delta_median_s: f64,
+    full_median_s: f64,
+    speedup: f64,
+    /// Prediction-cache hit rate over the delta bench window (memory +
+    /// disk hits over all lookups) — how much of the stitch came from
+    /// cache rather than re-inference.
+    pred_cache_hit_rate: f64,
+}
+
+pub fn bench_incremental(weights: &str, quick: bool, out_path: &str) -> Result<()> {
+    let model = super::native_model(weights).unwrap_or_else(|_| super::bench::synthetic_model());
+    let (bits, partitions) = if quick { (16usize, 8usize) } else { (64, 16) };
+    let budget = Duration::from_millis(if quick { 150 } else { 600 });
+    let edit_sizes: &[usize] = if quick { &[1, 4] } else { &[1, 4, 16, 64] };
+
+    let cfg = SessionConfig { num_partitions: partitions, ..Default::default() };
+    let opts = PlanOptions::from_config(&cfg);
+    let session = Session::native(model, cfg);
+
+    let graph = datasets::build(DatasetKind::Csa, bits)?;
+    let circuit = Arc::new(graph.to_circuit()?);
+    let (base_fp, _base) = session.prime_base(circuit.clone())?;
+    println!(
+        "incremental sweep: csa{bits} ({} nodes, {partitions} partitions), \
+         base fingerprint {base_fp:016x}",
+        circuit.num_nodes()
+    );
+
+    let mut t = Table::new(
+        "Incremental verification — delta vs cold full classify, by edit size",
+        &[
+            "edits", "dirty", "clean", "delta median", "full median", "speedup",
+            "pred-cache hit rate",
+        ],
+    );
+    let mut rows = Vec::new();
+    for &size in edit_sizes {
+        // Byte-identity gate first: one delta against a cold classify of
+        // the identically edited circuit. A perf number for a path that
+        // diverges from the from-scratch pipeline would be meaningless.
+        let check_edits = synthetic_polarity_edits(&circuit, size, 4242 + size as u64);
+        ensure!(!check_edits.is_empty(), "no editable AND nodes at edit size {size}");
+        let dres = session.classify_delta(base_fp, &check_edits)?;
+        let edited = apply_edits(&circuit, &check_edits)?;
+        let prepared = PreparedGraph::from_circuit_ref(&edited);
+        let plan = prepared.plan(&opts);
+        let cold = session.classify_plan(&prepared, &plan, false)?;
+        ensure!(
+            dres.result.pred == cold.pred,
+            "edit size {size}: classify_delta diverged from a cold classify of the edited graph"
+        );
+        ensure!(
+            dres.clean > 0 || partitions == 1,
+            "edit size {size}: every partition re-inferred (clean=0) — caching is inert"
+        );
+
+        // Delta bench: a fresh seed per iteration edits new sites, so
+        // each iteration's dirty partitions miss the cache and re-infer
+        // (steady state would otherwise stitch everything and measure
+        // only the all-clean path).
+        let pred = session.incremental().predictions();
+        let (h0, d0, m0) = (pred.hits(), pred.disk_hits(), pred.misses());
+        let mut seed = 0u64;
+        let mut last = None;
+        let delta = bench_for(budget, || {
+            seed += 1;
+            let edits = synthetic_polarity_edits(&circuit, size, seed);
+            last = Some(session.classify_delta(base_fp, &edits).expect("delta classify"));
+        });
+        let last = last.expect("delta bench ran at least once");
+        let pred = session.incremental().predictions();
+        let (hits, lookups) = (
+            (pred.hits() - h0) + (pred.disk_hits() - d0),
+            (pred.hits() - h0) + (pred.misses() - m0),
+        );
+
+        // Cold full classify of one edited variant — the per-edit cost
+        // of a flow with no incremental path.
+        let full = bench_for(budget, || {
+            let prepared = PreparedGraph::from_circuit_ref(&edited);
+            let plan = prepared.plan(&opts);
+            session.classify_plan(&prepared, &plan, false).expect("full classify");
+        });
+
+        let row = IncRow {
+            dataset: format!("csa{bits}"),
+            nodes: circuit.num_nodes(),
+            partitions,
+            edit_nodes: size,
+            dirty: last.dirty,
+            clean: last.clean,
+            delta_median_s: delta.median_secs(),
+            full_median_s: full.median_secs(),
+            speedup: full.median_secs() / delta.median_secs().max(1e-12),
+            pred_cache_hit_rate: hits as f64 / (lookups as f64).max(1.0),
+        };
+        t.row(vec![
+            row.edit_nodes.to_string(),
+            row.dirty.to_string(),
+            row.clean.to_string(),
+            fmt_dur(delta.median),
+            fmt_dur(full.median),
+            format!("{:.2}x", row.speedup),
+            format!("{:.0}%", 100.0 * row.pred_cache_hit_rate),
+        ]);
+        rows.push(row);
+    }
+    t.print();
+
+    std::fs::write(out_path, render_incremental_json(&rows))
+        .with_context(|| format!("write {out_path}"))?;
+    println!("\nwrote {out_path}");
+    Ok(())
+}
+
+/// Hand-rolled JSON (no serde in the dependency set): stable key order,
+/// one row object per edit size.
+fn render_incremental_json(rows: &[IncRow]) -> String {
+    let mut s = String::from("{\n  \"bench\": \"incremental_delta\",\n");
+    s.push_str("  \"unit\": \"seconds (median)\",\n  \"results\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"dataset\": \"{}\", \"nodes\": {}, \"partitions\": {}, \
+             \"edit_nodes\": {}, \"dirty\": {}, \"clean\": {}, \
+             \"delta_median_s\": {:.6}, \"full_median_s\": {:.6}, \
+             \"speedup\": {:.3}, \"pred_cache_hit_rate\": {:.3}}}{}\n",
+            r.dataset,
+            r.nodes,
+            r.partitions,
+            r.edit_nodes,
+            r.dirty,
+            r.clean,
+            r.delta_median_s,
+            r.full_median_s,
+            r.speedup,
+            r.pred_cache_hit_rate,
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn incremental_json_is_well_formed_ish() {
+        let rows = vec![IncRow {
+            dataset: "csa16".into(),
+            nodes: 9000,
+            partitions: 8,
+            edit_nodes: 4,
+            dirty: 3,
+            clean: 5,
+            delta_median_s: 0.002,
+            full_median_s: 0.01,
+            speedup: 5.0,
+            pred_cache_hit_rate: 0.625,
+        }];
+        let s = render_incremental_json(&rows);
+        assert!(s.contains("\"bench\": \"incremental_delta\""));
+        assert!(s.contains("\"edit_nodes\": 4"));
+        assert!(s.contains("\"clean\": 5"));
+        assert!(s.contains("\"speedup\": 5.000"));
+        assert!(s.contains("\"pred_cache_hit_rate\": 0.625"));
+        assert_eq!(s.matches('{').count(), s.matches('}').count());
+        assert_eq!(s.matches('[').count(), s.matches(']').count());
+    }
+
+    #[test]
+    fn quick_sweep_runs_and_writes_json() {
+        let out = std::env::temp_dir()
+            .join(format!("groot_bench_incremental_{}.json", std::process::id()));
+        let out_s = out.to_str().unwrap().to_string();
+        bench_incremental("nonexistent-weights.bin", true, &out_s).unwrap();
+        let text = std::fs::read_to_string(&out).unwrap();
+        assert!(text.contains("\"bench\": \"incremental_delta\""));
+        assert!(text.contains("\"edit_nodes\": 1"));
+        let _ = std::fs::remove_file(&out);
+    }
+}

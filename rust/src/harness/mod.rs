@@ -11,6 +11,7 @@
 
 pub mod accuracy;
 pub mod bench;
+pub mod incremental;
 pub mod memory;
 pub mod profile;
 pub mod runtime;
@@ -65,11 +66,15 @@ pub fn run(which: &str, args: &mut Args) -> Result<()> {
             }
         }
         "profile" => profile::profile(&weights, quick),
+        "incremental" => {
+            let out = args.get_or("out", "BENCH_incremental.json");
+            incremental::bench_incremental(&weights, quick, &out)
+        }
         "ablation-partitioners" => accuracy::ablation_partitioners(&weights, quick),
         "ablation-features" => accuracy::ablation_features(&weights, quick),
         other => bail!(
             "unknown harness '{other}' \
-             (fig1a|fig6a..d|fig7|fig8|fig9|fig10|tab2|bench|memory|profile|\
+             (fig1a|fig6a..d|fig7|fig8|fig9|fig10|tab2|bench|memory|profile|incremental|\
               ablation-partitioners|ablation-features)"
         ),
     }

@@ -1,0 +1,213 @@
+//! Content-addressed per-partition prediction cache — the third cache
+//! tier (after the in-memory plan LRU and the persistent plan store).
+//!
+//! Keyed by [`PlannedPartition::digest`]: the digest covers the core
+//! count, global node list, local CSR, and feature bits — everything
+//! inference and stitching consume — so a hit may stitch the cached
+//! core-prediction bytes verbatim in place of an `infer_batch` row,
+//! byte-identically under a deterministic backend.
+//!
+//! An optional persistent tier writes each entry through to the
+//! [`PlanStore`] as a sibling record type (GPPR files, see
+//! `coordinator::planstore`), tagged with a model tag so predictions
+//! from a different weight bundle can never be stitched.
+//!
+//! [`PlannedPartition::digest`]: crate::coordinator::PlannedPartition
+
+use crate::coordinator::PlanStore;
+use crate::obs::metrics;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Process-wide prediction-cache counters, labeled like the plan-cache
+/// family so dashboards can diff the two tiers directly.
+struct PredMetrics {
+    hits: metrics::Counter,
+    misses: metrics::Counter,
+    disk_hits: metrics::Counter,
+}
+
+fn pred_metrics() -> &'static PredMetrics {
+    static M: OnceLock<PredMetrics> = OnceLock::new();
+    M.get_or_init(|| {
+        let r = metrics::registry();
+        const HELP: &str =
+            "Incremental prediction-cache lookups by tier and outcome, across every instance.";
+        PredMetrics {
+            hits: r.counter(
+                "groot_incremental_pred_cache_lookups_total",
+                HELP,
+                &[("tier", "memory"), ("outcome", "hit")],
+            ),
+            misses: r.counter(
+                "groot_incremental_pred_cache_lookups_total",
+                HELP,
+                &[("tier", "memory"), ("outcome", "miss")],
+            ),
+            disk_hits: r.counter(
+                "groot_incremental_pred_cache_lookups_total",
+                HELP,
+                &[("tier", "disk"), ("outcome", "hit")],
+            ),
+        }
+    })
+}
+
+/// Default entry capacity: per-partition core predictions are one byte
+/// per core node, so even thousands of entries cost megabytes, not the
+/// gigabytes a plan cache of the same depth would.
+pub const DEFAULT_PREDICTION_CACHE_CAPACITY: usize = 4096;
+
+/// Model tag for the persistent tier: FNV-1a over the serialized weight
+/// bundle. Two daemons tag identically iff they serve byte-identical
+/// weights, so a restarted daemon with retrained weights can never
+/// stitch a stale on-disk prediction record.
+pub fn model_tag_for_bytes(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h = (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Vec-based LRU (index 0 = eviction candidate), mirroring `PlanCache`.
+struct PredLru {
+    capacity: usize,
+    entries: Vec<(u64, Arc<Vec<u8>>)>,
+}
+
+impl PredLru {
+    fn get(&mut self, digest: u64) -> Option<Arc<Vec<u8>>> {
+        let i = self.entries.iter().position(|(d, _)| *d == digest)?;
+        let entry = self.entries.remove(i);
+        let out = entry.1.clone();
+        self.entries.push(entry);
+        Some(out)
+    }
+
+    fn insert(&mut self, digest: u64, core: Arc<Vec<u8>>) {
+        if let Some(i) = self.entries.iter().position(|(d, _)| *d == digest) {
+            self.entries.remove(i);
+        } else if self.entries.len() >= self.capacity {
+            self.entries.remove(0);
+        }
+        self.entries.push((digest, core));
+    }
+}
+
+/// Thread-safe digest → core-prediction-bytes cache with an optional
+/// persistent tier. Shared by every serving worker through
+/// [`super::IncrementalState`].
+pub struct PredictionCache {
+    inner: Mutex<PredLru>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    disk_hits: AtomicU64,
+    /// Persistent tier + the model tag stamped into every record. The
+    /// tag pins records to one weight bundle: the in-memory map lives
+    /// and dies with one backend, but disk records outlive restarts
+    /// that may load different weights.
+    store: Option<(PlanStore, u64)>,
+}
+
+impl Default for PredictionCache {
+    fn default() -> Self {
+        PredictionCache::new(DEFAULT_PREDICTION_CACHE_CAPACITY)
+    }
+}
+
+impl PredictionCache {
+    pub fn new(capacity: usize) -> PredictionCache {
+        PredictionCache {
+            inner: Mutex::new(PredLru { capacity: capacity.max(1), entries: Vec::new() }),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            disk_hits: AtomicU64::new(0),
+            store: None,
+        }
+    }
+
+    /// [`Self::new`] plus a persistent tier: memory miss → validated
+    /// disk load → caller re-infers; inserts write through best-effort.
+    pub fn with_store(capacity: usize, store: PlanStore, model_tag: u64) -> PredictionCache {
+        let mut cache = Self::new(capacity);
+        cache.store = Some((store, model_tag));
+        cache
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::SeqCst)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::SeqCst)
+    }
+
+    /// In-memory misses the persistent tier answered.
+    pub fn disk_hits(&self) -> u64 {
+        self.disk_hits.load(Ordering::SeqCst)
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Look up the core predictions for a partition digest, refreshing
+    /// LRU recency on a hit and falling back to the persistent tier on
+    /// a memory miss (a disk hit is promoted into memory).
+    pub fn get(&self, digest: u64) -> Option<Arc<Vec<u8>>> {
+        let mut guard = self.inner.lock().unwrap();
+        if let Some(core) = guard.get(digest) {
+            self.hits.fetch_add(1, Ordering::SeqCst);
+            pred_metrics().hits.inc();
+            return Some(core);
+        }
+        self.misses.fetch_add(1, Ordering::SeqCst);
+        pred_metrics().misses.inc();
+        if let Some((store, tag)) = &self.store {
+            if let Some(core) = store.load_predictions(digest, *tag) {
+                let core = Arc::new(core);
+                guard.insert(digest, core.clone());
+                self.disk_hits.fetch_add(1, Ordering::SeqCst);
+                pred_metrics().disk_hits.inc();
+                return Some(core);
+            }
+        }
+        None
+    }
+
+    /// Insert (or refresh) one partition's core predictions, writing
+    /// through to the persistent tier best-effort (a full disk must not
+    /// fail the classify that produced the predictions).
+    pub fn insert(&self, digest: u64, core: Arc<Vec<u8>>) {
+        if let Some((store, tag)) = &self.store {
+            let _ = store.save_predictions(digest, *tag, &core);
+        }
+        self.inner.lock().unwrap().insert(digest, core);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lru_semantics_and_counters() {
+        let cache = PredictionCache::new(2);
+        assert!(cache.get(1).is_none());
+        cache.insert(1, Arc::new(vec![1]));
+        cache.insert(2, Arc::new(vec![2]));
+        assert_eq!(cache.get(1).unwrap().as_slice(), &[1]);
+        cache.insert(3, Arc::new(vec![3])); // evicts 2 (LRU after the get)
+        assert!(cache.get(2).is_none());
+        assert_eq!(cache.get(1).unwrap().as_slice(), &[1]);
+        assert_eq!(cache.get(3).unwrap().as_slice(), &[3]);
+        assert_eq!(cache.hits(), 3);
+        assert_eq!(cache.misses(), 2);
+        assert_eq!(cache.len(), 2);
+    }
+}

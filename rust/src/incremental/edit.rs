@@ -1,0 +1,251 @@
+//! The edit model: a small algebra of circuit modifications
+//! ([`GraphEdit`]) applied to a compact [`CircuitGraph`] to produce the
+//! edited design. Edits are the unit the incremental verifier reasons
+//! about — `classify_delta` re-executes only the partitions whose
+//! content digest the edit actually moved.
+//!
+//! Edits deliberately mirror what production flows do between
+//! verification runs: local function/polarity rewrites (resynthesis),
+//! rewiring (edge remove + add), and appended logic cones (ECOs).
+
+use crate::graph::circuit::{desc_features, desc_kind, pack_desc, CircuitGraph, KIND_AND, KIND_PO};
+use anyhow::Result;
+
+/// One circuit modification. Node ids refer to the graph the edit list
+/// is applied to, except inside [`GraphEdit::AppendCone`] (see its
+/// field docs).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum GraphEdit {
+    /// Rewrite a node's function descriptor (kind + fanin polarities)
+    /// in place. Topology-preserving: the edge structure — and
+    /// therefore the symmetric CSR and the k-way assignment — is
+    /// untouched, which is what lets `classify_delta` reuse the base
+    /// partitioning without re-running the partitioner.
+    SetFunction { node: u32, kind: u8, inv_l: bool, inv_r: bool },
+    /// Append a fanin edge `src → dst` (after any existing fanins of
+    /// `dst`).
+    AddEdge { src: u32, dst: u32 },
+    /// Remove the first fanin edge `src → dst`. Errors if no such edge
+    /// exists. Pairing with [`GraphEdit::AddEdge`] expresses a rewire;
+    /// structural validity is checked once after the whole edit list is
+    /// applied, so transiently under-wired AND nodes are fine.
+    RemoveEdge { src: u32, dst: u32 },
+    /// Append a cone of new logic nodes — the ECO case. The cone is
+    /// spliced in at the end of the AIG-node prefix (existing PO nodes
+    /// shift up by the cone size, edges are remapped automatically).
+    /// `fanins` are `(src, dst)` pairs where `dst` is a cone-relative
+    /// index (`0..desc.len()`) and `src` is a node id in the EDITED
+    /// numbering — an existing AIG node (`< num_aig_nodes`) or an
+    /// earlier cone node (`num_aig_nodes + j` with `j < dst`).
+    AppendCone { desc: Vec<u8>, labels: Vec<u8>, fanins: Vec<(u32, u32)> },
+}
+
+impl GraphEdit {
+    /// True iff applying this edit cannot change the edge structure.
+    /// All-topology-preserving edit lists keep the symmetric CSR
+    /// byte-identical, so the deterministic partitioner would reproduce
+    /// the base assignment exactly — the reuse precondition.
+    pub fn preserves_topology(&self) -> bool {
+        matches!(self, GraphEdit::SetFunction { .. })
+    }
+}
+
+/// Apply an edit list to a circuit, producing the edited circuit. The
+/// result passes full structural validation ([`CircuitGraph::check`]);
+/// intermediate states may be transiently invalid (e.g. a rewire
+/// expressed as remove + add).
+pub fn apply_edits(base: &CircuitGraph, edits: &[GraphEdit]) -> Result<CircuitGraph> {
+    let n = base.num_nodes();
+    let mut num_aig = base.num_aig_nodes();
+    let mut desc = base.desc_slice(0, n).to_vec();
+    let mut labels = base.labels_u8().to_vec();
+    let mut edges: Vec<(u32, u32)> = base.edges_iter().collect();
+
+    for (i, edit) in edits.iter().enumerate() {
+        match edit {
+            GraphEdit::SetFunction { node, kind, inv_l, inv_r } => {
+                let u = *node as usize;
+                anyhow::ensure!(u < desc.len(), "edit {i}: node {node} out of range");
+                anyhow::ensure!(*kind <= KIND_PO, "edit {i}: invalid node kind {kind}");
+                desc[u] = pack_desc(*kind, *inv_l, *inv_r);
+            }
+            GraphEdit::AddEdge { src, dst } => {
+                anyhow::ensure!(
+                    (*src as usize) < desc.len() && (*dst as usize) < desc.len(),
+                    "edit {i}: edge ({src}, {dst}) endpoint out of range"
+                );
+                edges.push((*src, *dst));
+            }
+            GraphEdit::RemoveEdge { src, dst } => {
+                let at = edges.iter().position(|&e| e == (*src, *dst));
+                let at = at
+                    .ok_or_else(|| anyhow::anyhow!("edit {i}: no edge ({src}, {dst}) to remove"))?;
+                edges.remove(at);
+            }
+            GraphEdit::AppendCone { desc: cone_desc, labels: cone_labels, fanins } => {
+                anyhow::ensure!(
+                    cone_desc.len() == cone_labels.len(),
+                    "edit {i}: cone has {} descriptors but {} labels",
+                    cone_desc.len(),
+                    cone_labels.len()
+                );
+                let k = cone_desc.len();
+                let at = num_aig as u32;
+                // Existing nodes at or after the splice point (the PO
+                // suffix) shift up by the cone size.
+                for (s, d) in edges.iter_mut() {
+                    if *s >= at {
+                        *s += k as u32;
+                    }
+                    if *d >= at {
+                        *d += k as u32;
+                    }
+                }
+                for (j, (&cd, &cl)) in cone_desc.iter().zip(cone_labels).enumerate() {
+                    desc.insert(num_aig + j, cd);
+                    labels.insert(num_aig + j, cl);
+                }
+                for &(src, dst_rel) in fanins {
+                    anyhow::ensure!(
+                        (dst_rel as usize) < k,
+                        "edit {i}: cone fanin destination {dst_rel} outside cone of {k}"
+                    );
+                    anyhow::ensure!(
+                        src < at + dst_rel,
+                        "edit {i}: cone fanin source {src} is not an earlier node \
+                         (cone node {dst_rel} is id {})",
+                        at + dst_rel
+                    );
+                    edges.push((src, at + dst_rel));
+                }
+                num_aig += k;
+            }
+        }
+    }
+
+    CircuitGraph::from_components(base.name.clone(), num_aig, desc, labels, &edges)
+}
+
+/// Deterministic synthetic edit generator: flip the left-fanin polarity
+/// of `count` distinct AND nodes chosen by a seeded PRNG. Topology-
+/// preserving by construction — the workload the CI job and the
+/// incremental harness sweep, because it models the smallest real
+/// resynthesis deltas while keeping the k-way assignment reusable.
+pub fn synthetic_polarity_edits(circuit: &CircuitGraph, count: usize, seed: u64) -> Vec<GraphEdit> {
+    let ands: Vec<u32> = (0..circuit.num_nodes() as u32)
+        .filter(|&u| desc_kind(circuit.desc(u as usize)) == KIND_AND)
+        .collect();
+    if ands.is_empty() {
+        return Vec::new();
+    }
+    let count = count.min(ands.len());
+    let mut rng = crate::util::rng::Rng::new(seed ^ 0x1CF0_EDD1);
+    let picks = rng.sample_indices(ands.len(), count);
+    picks
+        .into_iter()
+        .map(|i| {
+            let node = ands[i];
+            let row = desc_features(circuit.desc(node as usize));
+            GraphEdit::SetFunction {
+                node,
+                kind: KIND_AND,
+                inv_l: row[2] == 0.0, // flip the left polarity bit
+                inv_r: row[3] != 0.0,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::circuit::KIND_INPUT;
+
+    fn circuit() -> CircuitGraph {
+        CircuitGraph::from_source(crate::aig::mult::csa_source(4, 64)).unwrap()
+    }
+
+    #[test]
+    fn set_function_changes_only_features() {
+        let base = circuit();
+        let edits = synthetic_polarity_edits(&base, 3, 42);
+        assert_eq!(edits.len(), 3);
+        assert!(edits.iter().all(|e| e.preserves_topology()));
+        let edited = apply_edits(&base, &edits).unwrap();
+        assert_eq!(edited.num_nodes(), base.num_nodes());
+        assert_eq!(
+            edited.edges_iter().collect::<Vec<_>>(),
+            base.edges_iter().collect::<Vec<_>>(),
+            "polarity edits must not move edges"
+        );
+        let changed = (0..base.num_nodes())
+            .filter(|&u| base.desc(u) != edited.desc(u))
+            .count();
+        assert_eq!(changed, 3);
+        // deterministic: same seed, same edits
+        assert_eq!(edits, synthetic_polarity_edits(&base, 3, 42));
+        assert_ne!(edits, synthetic_polarity_edits(&base, 3, 43));
+    }
+
+    #[test]
+    fn rewire_and_bad_edits_are_validated() {
+        let base = circuit();
+        // a rewire: retarget one AND fanin through remove + add
+        let (src, dst) = base.edges_iter().next().unwrap();
+        let rewire = vec![
+            GraphEdit::RemoveEdge { src, dst },
+            GraphEdit::AddEdge { src, dst },
+        ];
+        let edited = apply_edits(&base, &rewire).unwrap();
+        assert_eq!(edited.num_edges(), base.num_edges());
+
+        // removing a non-existent edge errors with the edit index
+        let err = apply_edits(&base, &[GraphEdit::RemoveEdge { src: 0, dst: 0 }])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("edit 0"), "{err}");
+
+        // out-of-range SetFunction rejected
+        assert!(apply_edits(
+            &base,
+            &[GraphEdit::SetFunction {
+                node: base.num_nodes() as u32,
+                kind: KIND_AND,
+                inv_l: false,
+                inv_r: false
+            }]
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn append_cone_splices_before_po_suffix() {
+        let base = circuit();
+        let at = base.num_aig_nodes() as u32;
+        let cone = GraphEdit::AppendCone {
+            desc: vec![
+                pack_desc(KIND_INPUT, false, false),
+                pack_desc(KIND_AND, true, false),
+            ],
+            labels: vec![0, 0],
+            fanins: vec![(0, 1), (at, 1)], // node 0 and cone node 0 feed cone node 1
+        };
+        let edited = apply_edits(&base, &[cone]).unwrap();
+        assert_eq!(edited.num_nodes(), base.num_nodes() + 2);
+        assert_eq!(edited.num_aig_nodes(), base.num_aig_nodes() + 2);
+        assert_eq!(edited.num_edges(), base.num_edges() + 2);
+        // the PO suffix kept its descriptors, shifted up by two
+        for u in base.num_aig_nodes()..base.num_nodes() {
+            assert_eq!(edited.desc(u + 2), base.desc(u));
+        }
+        assert_eq!(edited.fanins(at as usize + 1), &[0, at]);
+
+        // forward references inside the cone are rejected
+        let bad = GraphEdit::AppendCone {
+            desc: vec![pack_desc(KIND_AND, false, false)],
+            labels: vec![0],
+            fanins: vec![(at, 0)], // cone node 0 feeding itself
+        };
+        assert!(apply_edits(&base, &[bad]).is_err());
+    }
+}

@@ -1,0 +1,344 @@
+//! Incremental verification: make repeat verification cost proportional
+//! to the *edit*, not the *design*.
+//!
+//! Production flows verify the same design repeatedly under small edits
+//! (resynthesis, ECOs, local rewrites). The paper's partitioned
+//! execution model makes the partition the natural cache unit: each
+//! [`PlannedPartition`] carries a content digest over everything
+//! inference consumes, so after an edit the partitions whose digests
+//! are unchanged — including regrowth-halo effects, because the digest
+//! covers the re-grown boundary's nodes and features — can stitch
+//! their cached core predictions verbatim, and only the *dirty*
+//! partitions go through `infer_batch`.
+//!
+//! The pieces:
+//!
+//! * [`GraphEdit`] / [`apply_edits`] (`edit`): the edit algebra applied
+//!   to a compact [`CircuitGraph`].
+//! * [`PredictionCache`] (`cache`): digest → core-prediction bytes,
+//!   in-memory LRU with an optional persistent tier ([`PlanStore`]
+//!   GPPR records, model-tagged).
+//! * [`IncrementalState`]: the per-server registry of base designs
+//!   (circuit + reusable k-way assignments) plus the shared prediction
+//!   cache — one instance shared by every serving worker.
+//! * [`execute_plan_delta`]: the delta executor — cache-stitch clean
+//!   partitions, ONE `infer_batch` over dirty ones.
+//!
+//! Determinism contract: `Session::classify_delta` output is pinned
+//! byte-identical to a from-scratch `classify` of the edited graph.
+//! Cached entries are keyed by the partition content digest (core
+//! count, global node list, local CSR, feature bits), so a hit implies
+//! the backend would have received identical inputs and stitched to
+//! identical targets; topology-preserving edit lists additionally reuse
+//! the base assignment, which the deterministic partitioner would have
+//! reproduced bit-for-bit anyway (asserted by tests, observable via the
+//! flat `kway_invocations` counter).
+//!
+//! [`PlanStore`]: crate::coordinator::PlanStore
+
+pub mod cache;
+pub mod edit;
+
+pub use cache::{model_tag_for_bytes, PredictionCache, DEFAULT_PREDICTION_CACHE_CAPACITY};
+pub use edit::{apply_edits, synthetic_polarity_edits, GraphEdit};
+
+use crate::backend::{InferenceBackend, PartitionInput};
+use crate::coordinator::{ExecStats, PartitionPlan, PlanOptions, PlannedPartition};
+use crate::features::GROOT_FEATURE_DIM;
+use crate::graph::CircuitGraph;
+use crate::obs::{self, metrics};
+use crate::partition::Partitioning;
+use anyhow::Result;
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+/// Partition-level outcome counters for delta execution.
+struct DeltaMetrics {
+    dirty: metrics::Counter,
+    clean: metrics::Counter,
+}
+
+fn delta_metrics() -> &'static DeltaMetrics {
+    static M: OnceLock<DeltaMetrics> = OnceLock::new();
+    M.get_or_init(|| {
+        let r = metrics::registry();
+        const HELP: &str =
+            "Partitions processed by delta execution, by state (dirty = re-inferred, \
+             clean = stitched from the prediction cache).";
+        DeltaMetrics {
+            dirty: r.counter("groot_incremental_partitions_total", HELP, &[("state", "dirty")]),
+            clean: r.counter("groot_incremental_partitions_total", HELP, &[("state", "clean")]),
+        }
+    })
+}
+
+/// How many base designs one state retains (each entry holds an
+/// `Arc<CircuitGraph>` plus its assignments — bounded like the plan
+/// cache so a long-lived daemon cannot accrete every design it ever
+/// saw).
+pub const DEFAULT_BASE_CAPACITY: usize = 16;
+
+struct BaseEntry {
+    fingerprint: u64,
+    circuit: Arc<CircuitGraph>,
+    /// Reusable k-way assignments per plan-option set (tiny: one
+    /// `u32`/node each; a base rarely sees more than a couple).
+    assignments: Vec<(PlanOptions, Arc<Partitioning>)>,
+}
+
+struct Inner {
+    capacity: usize,
+    /// LRU order: index 0 is the eviction candidate.
+    bases: Mutex<Vec<BaseEntry>>,
+    predictions: PredictionCache,
+}
+
+/// Shared incremental-verification state: the base-design registry and
+/// the prediction cache. Cheap to clone (`Arc` inside); the serving
+/// layer creates ONE and hands it to every worker's `Session` so
+/// cached predictions and registered bases are visible across workers.
+#[derive(Clone)]
+pub struct IncrementalState {
+    inner: Arc<Inner>,
+}
+
+impl Default for IncrementalState {
+    fn default() -> Self {
+        IncrementalState::new()
+    }
+}
+
+impl IncrementalState {
+    pub fn new() -> IncrementalState {
+        Self::with_predictions(PredictionCache::default())
+    }
+
+    /// Build around a specific prediction cache (e.g. one with a
+    /// persistent [`crate::coordinator::PlanStore`] tier).
+    pub fn with_predictions(predictions: PredictionCache) -> IncrementalState {
+        IncrementalState {
+            inner: Arc::new(Inner {
+                capacity: DEFAULT_BASE_CAPACITY,
+                bases: Mutex::new(Vec::new()),
+                predictions,
+            }),
+        }
+    }
+
+    pub fn predictions(&self) -> &PredictionCache {
+        &self.inner.predictions
+    }
+
+    /// Number of registered base designs.
+    pub fn num_bases(&self) -> usize {
+        self.inner.bases.lock().unwrap().len()
+    }
+
+    /// Register (or refresh) a base design under its content
+    /// fingerprint, evicting the least-recently-used base at capacity.
+    pub fn register_base(&self, fingerprint: u64, circuit: Arc<CircuitGraph>) {
+        let mut bases = self.inner.bases.lock().unwrap();
+        if let Some(i) = bases.iter().position(|b| b.fingerprint == fingerprint) {
+            let mut entry = bases.remove(i);
+            entry.circuit = circuit;
+            bases.push(entry);
+            return;
+        }
+        if bases.len() >= self.inner.capacity {
+            bases.remove(0);
+        }
+        bases.push(BaseEntry { fingerprint, circuit, assignments: Vec::new() });
+    }
+
+    /// The registered base circuit for a fingerprint (refreshes LRU
+    /// recency — a looked-up base is about to be edited, keep it).
+    pub fn base(&self, fingerprint: u64) -> Option<Arc<CircuitGraph>> {
+        let mut bases = self.inner.bases.lock().unwrap();
+        let i = bases.iter().position(|b| b.fingerprint == fingerprint)?;
+        let entry = bases.remove(i);
+        let circuit = entry.circuit.clone();
+        bases.push(entry);
+        Some(circuit)
+    }
+
+    /// Attach a reusable k-way assignment to a registered base.
+    pub fn store_assignment(
+        &self,
+        fingerprint: u64,
+        opts: &PlanOptions,
+        partitioning: Partitioning,
+    ) {
+        let mut bases = self.inner.bases.lock().unwrap();
+        if let Some(entry) = bases.iter_mut().find(|b| b.fingerprint == fingerprint) {
+            match entry.assignments.iter_mut().find(|(o, _)| o == opts) {
+                Some((_, slot)) => *slot = Arc::new(partitioning),
+                None => entry.assignments.push((opts.clone(), Arc::new(partitioning))),
+            }
+        }
+    }
+
+    /// The stored assignment for `(base, options)`, if any.
+    pub fn assignment(&self, fingerprint: u64, opts: &PlanOptions) -> Option<Arc<Partitioning>> {
+        let bases = self.inner.bases.lock().unwrap();
+        let entry = bases.iter().find(|b| b.fingerprint == fingerprint)?;
+        entry.assignments.iter().find(|(o, _)| o == opts).map(|(_, a)| a.clone())
+    }
+
+    /// Seed the prediction cache from a freshly classified plan: each
+    /// non-empty partition's core predictions, keyed by its digest.
+    pub fn prime_predictions(&self, plan: &PartitionPlan, pred: &[u8]) {
+        for part in plan.parts.iter().filter(|p| !p.is_empty()) {
+            let core: Vec<u8> =
+                part.nodes[..part.num_core].iter().map(|&g| pred[g as usize]).collect();
+            self.inner.predictions.insert(part.digest, Arc::new(core));
+        }
+    }
+}
+
+/// Outcome of [`execute_plan_delta`].
+pub struct DeltaExec {
+    /// Graph-ordered predictions — byte-identical to `execute_plan` on
+    /// the same plan.
+    pub pred: Vec<u8>,
+    pub stats: ExecStats,
+    /// Non-empty partitions that went through `infer_batch`.
+    pub dirty: usize,
+    /// Non-empty partitions stitched from the prediction cache.
+    pub clean: usize,
+}
+
+/// The delta executor: stitch cached core predictions for every
+/// partition whose digest hits the cache, run ONE `infer_batch` over
+/// the remaining (dirty) partitions, and stitch + cache those. The
+/// output is byte-identical to `execute_plan` on the same plan: a
+/// digest hit implies the backend would have received identical inputs
+/// and stitched identical bytes to identical targets.
+pub fn execute_plan_delta(
+    backend: &dyn InferenceBackend,
+    plan: &PartitionPlan,
+    cache: &PredictionCache,
+) -> Result<DeltaExec> {
+    let classes = backend.num_classes();
+    let mut pred = vec![0u8; plan.num_nodes];
+    let mut dirty: Vec<&PlannedPartition> = Vec::new();
+    let mut clean = 0usize;
+    {
+        let _span = obs::span("delta-stitch-cached", "incremental");
+        for part in plan.parts.iter().filter(|p| !p.is_empty()) {
+            match cache.get(part.digest) {
+                // Defensive: a colliding or corrupt record with the
+                // wrong shape is treated as a miss, never stitched.
+                Some(core) if core.len() == part.num_core => {
+                    for (i, &g) in part.nodes[..part.num_core].iter().enumerate() {
+                        pred[g as usize] = core[i];
+                    }
+                    clean += 1;
+                }
+                _ => dirty.push(part),
+            }
+        }
+    }
+    delta_metrics().clean.add(clean as u64);
+    delta_metrics().dirty.add(dirty.len() as u64);
+
+    let mut stats = ExecStats { batch_size: dirty.len(), ..ExecStats::default() };
+    if dirty.is_empty() {
+        return Ok(DeltaExec { pred, stats, dirty: 0, clean });
+    }
+
+    let inputs: Vec<PartitionInput<'_>> = dirty
+        .iter()
+        .map(|p| PartitionInput {
+            csr: &p.csr,
+            features: &p.features,
+            feature_dim: GROOT_FEATURE_DIM,
+        })
+        .collect();
+    stats.peak_resident_bytes = inputs
+        .iter()
+        .map(|i| i.resident_bytes() + i.csr.num_nodes() * classes * std::mem::size_of::<f32>())
+        .sum();
+
+    let t0 = Instant::now();
+    let outs = {
+        let _span = obs::span_with_arg("delta-infer", "incremental", "partitions", || {
+            inputs.len().to_string()
+        });
+        backend.infer_batch(&inputs)?
+    };
+    stats.infer_time = t0.elapsed();
+    anyhow::ensure!(
+        outs.len() == inputs.len(),
+        "backend returned {} outputs for {} dirty partitions",
+        outs.len(),
+        inputs.len()
+    );
+
+    {
+        let _span = obs::span("delta-stitch-inferred", "incremental");
+        for (part, out) in dirty.iter().zip(&outs) {
+            stats.peak_bucket_n = stats.peak_bucket_n.max(out.bucket_rows);
+            anyhow::ensure!(
+                out.logits.len() >= part.num_core * classes,
+                "partition {}: {} logits < {} core nodes × {classes} classes",
+                part.part_id,
+                out.logits.len(),
+                part.num_core,
+            );
+            let mut core = Vec::with_capacity(part.num_core);
+            for (i, &g) in part.nodes[..part.num_core].iter().enumerate() {
+                let row = &out.logits[i * classes..(i + 1) * classes];
+                let cls = crate::gnn::argmax(row);
+                pred[g as usize] = cls;
+                core.push(cls);
+            }
+            cache.insert(part.digest, Arc::new(core));
+        }
+    }
+    Ok(DeltaExec { pred, stats, dirty: dirty.len(), clean })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn circuit() -> Arc<CircuitGraph> {
+        Arc::new(CircuitGraph::from_source(crate::aig::mult::csa_source(4, 64)).unwrap())
+    }
+
+    #[test]
+    fn base_registry_is_lru_bounded() {
+        let state = IncrementalState::new();
+        let c = circuit();
+        for fp in 0..(DEFAULT_BASE_CAPACITY as u64 + 4) {
+            state.register_base(fp, c.clone());
+        }
+        assert_eq!(state.num_bases(), DEFAULT_BASE_CAPACITY);
+        assert!(state.base(0).is_none(), "oldest base must be evicted");
+        assert!(state.base(DEFAULT_BASE_CAPACITY as u64 + 3).is_some());
+    }
+
+    #[test]
+    fn assignments_attach_to_registered_bases() {
+        let state = IncrementalState::new();
+        let c = circuit();
+        state.register_base(7, c.clone());
+        let opts = PlanOptions { partitions: 2, ..PlanOptions::default() };
+        assert!(state.assignment(7, &opts).is_none());
+        let partitioning =
+            Partitioning { k: 2, assignment: vec![0; c.num_nodes()] };
+        state.store_assignment(7, &opts, partitioning);
+        let got = state.assignment(7, &opts).unwrap();
+        assert_eq!(got.k, 2);
+        // different options miss; unregistered fingerprints are ignored
+        assert!(state
+            .assignment(7, &PlanOptions { partitions: 3, ..PlanOptions::default() })
+            .is_none());
+        state.store_assignment(
+            99,
+            &opts,
+            Partitioning { k: 2, assignment: vec![0; c.num_nodes()] },
+        );
+        assert!(state.assignment(99, &opts).is_none());
+    }
+}

@@ -11,6 +11,7 @@ pub mod features;
 pub mod gnn;
 pub mod graph;
 pub mod harness;
+pub mod incremental;
 pub mod labels;
 pub mod mapping;
 pub mod memmodel;

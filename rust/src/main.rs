@@ -37,6 +37,8 @@ fn run() -> Result<()> {
         "kernels",
         "expect-cache-hit",
         "expect-cache-miss",
+        "delta",
+        "expect-clean",
         "json",
     ]);
     // Tracing: `GROOT_TRACE=out.json` or `--trace out.json` turns the
@@ -130,6 +132,9 @@ USAGE:
                  [--out FILE] [--checkpoint-every 25] [--eval-every 10]
                  [--resume CKPT] [--assert-improves]
   groot harness  fig1a|fig6a|fig6b|fig6c|fig6d|fig7|fig8|fig9|fig10|tab2|bench|memory|profile
+                 |incremental (edit-size sweep: delta vs cold classify
+                  latency for edit sizes 1..64; asserts byte-identity and
+                  writes BENCH_incremental.json)
                  [--weights FILE] [--quick] [--train (bench)] [--out FILE (bench|memory)]
                  [--serve (bench: concurrency sweep — in-flight clients ×
                   worker counts at a fixed total thread budget; --workers N
@@ -143,9 +148,13 @@ USAGE:
                   kernel time/rows/nnz deltas from the metrics registry)
   groot serve    --listen ADDR (host:port or unix:/path.sock)
                  [--workers N] [--threads N] [--weights FILE]
-                 [--plan-dir DIR (persistent plan store: plans survive
-                  restarts — a restarted daemon answers repeat designs
-                  without re-partitioning)]
+                 [--plan-dir DIR (persistent plan + prediction stores:
+                  plans AND per-partition predictions survive restarts —
+                  a restarted daemon answers repeat designs without
+                  re-partitioning, and stitches unchanged partitions
+                  without re-inference; prediction records are tagged
+                  with the weight-bundle hash, so retrained weights
+                  never stitch stale records)]
                  [--plan-cache N (in-memory entries)] [--queue N]
                  [--max-frame-mb N (reject larger request frames)]
   groot client   classify|verify|stats|fuzz --connect ADDR
@@ -154,6 +163,14 @@ USAGE:
                  [--pred-out FILE (raw predicted-class bytes)]
                  [--expect-cache-hit | --expect-cache-miss (assert the
                   server's plan_cache_hit flag — CI warm-start checks)]
+                 [--delta (classify: incremental round trip — classify
+                  the base through the daemon, then send a synthetic
+                  edit list keyed by the base fingerprint; the daemon
+                  re-infers only the dirtied partitions.
+                  --edit-nodes N (default 1) polarity flips,
+                  --edit-seed S (default 7) edit-site selection,
+                  --expect-clean fails unless some partition was
+                  stitched from cache — CI incremental checks)]
                  [--json (stats: machine-readable output)]
   groot metrics  [--connect ADDR] [--json]
                  dump every registered metric family: Prometheus text
@@ -550,24 +567,46 @@ fn serve_cmd(args: &mut Args) -> Result<()> {
     let queue = args.parse_or("queue", (cfg.workers.max(1) * 8).max(32))?;
     let max_frame_mb: u32 = args.parse_or("max-frame-mb", 64u32)?;
 
-    let cache = match args.get("plan-dir") {
+    // The backend factory runs once per worker, ON that worker's thread.
+    // Weights are read (and tagged) up front: the model tag pins
+    // persisted prediction records to this exact weight bundle.
+    let backend_name = args.get_or("backend", "native");
+    let weights_path = PathBuf::from(args.get_or("weights", "artifacts/weights_csa8.bin"));
+    let raw_weights = std::fs::read(&weights_path)
+        .with_context(|| format!("load weights {}", weights_path.display()))?;
+    let model_tag = groot::incremental::model_tag_for_bytes(&raw_weights);
+    let bundle = groot::util::tensor::parse_bundle(&raw_weights)
+        .with_context(|| format!("parse weights {}", weights_path.display()))?;
+    drop(raw_weights);
+
+    // With a plan directory, BOTH persistent tiers come up: the plan
+    // store (GPLN) and the prediction store (GPPR, model-tagged) — a
+    // restarted daemon answers repeat designs without re-partitioning
+    // AND stitches unchanged partitions without re-inference.
+    let (cache, incremental) = match args.get("plan-dir") {
         Some(dir) => {
             let store = PlanStore::open(&dir)?;
             println!("plan store: {} (plans persist across restarts)", store.dir().display());
-            std::sync::Arc::new(ShardedPlanCache::with_store(
+            let pred_store = PlanStore::open(&dir)?;
+            let incremental = groot::incremental::IncrementalState::with_predictions(
+                groot::incremental::PredictionCache::with_store(
+                    groot::incremental::DEFAULT_PREDICTION_CACHE_CAPACITY,
+                    pred_store,
+                    model_tag,
+                ),
+            );
+            let cache = std::sync::Arc::new(ShardedPlanCache::with_store(
                 groot::coordinator::DEFAULT_PLAN_CACHE_SHARDS,
                 plan_cache,
                 store,
-            ))
+            ));
+            (cache, incremental)
         }
-        None => std::sync::Arc::new(ShardedPlanCache::new(plan_cache)),
+        None => (
+            std::sync::Arc::new(ShardedPlanCache::new(plan_cache)),
+            groot::incremental::IncrementalState::new(),
+        ),
     };
-
-    // The backend factory runs once per worker, ON that worker's thread.
-    let backend_name = args.get_or("backend", "native");
-    let weights_path = PathBuf::from(args.get_or("weights", "artifacts/weights_csa8.bin"));
-    let bundle = groot::util::tensor::read_bundle(&weights_path)
-        .with_context(|| format!("load weights {}", weights_path.display()))?;
     let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
     let max_bucket = args.parse_or("max-bucket", usize::MAX)?;
     let threads = cfg.threads;
@@ -584,7 +623,7 @@ fn serve_cmd(args: &mut Args) -> Result<()> {
     };
 
     let workers = cfg.workers.max(1);
-    let server = Server::spawn_on_cache(cfg, cache, queue, factory);
+    let server = Server::spawn_with_incremental(cfg, cache, queue, incremental, factory);
     groot::net::install_sigterm_handler();
     let net_cfg = NetConfig {
         max_frame: max_frame_mb.saturating_mul(1024 * 1024),
@@ -693,6 +732,12 @@ fn client_cmd(args: &mut Args) -> Result<()> {
             Ok(())
         }
         "classify" | "verify" => {
+            if args.flag("delta") {
+                if sub == "verify" {
+                    bail!("--delta is a classify flow (use: groot client classify --delta)");
+                }
+                return client_delta(args, &connect);
+            }
             let (payload, options) = client_request(args)?;
             let mut client = GrootClient::connect_str(&connect)?;
             let res = match client.classify_payload(&payload, &options)? {
@@ -802,6 +847,75 @@ fn client_cmd(args: &mut Args) -> Result<()> {
         }
         other => bail!("unknown client subcommand '{other}' (classify|verify|stats|fuzz)"),
     }
+}
+
+/// `groot client classify --delta` — the incremental round trip:
+/// classify the base design through the daemon (which registers it
+/// under its content fingerprint), build a synthetic edit list locally,
+/// and send ONLY the edits keyed by that fingerprint. The daemon
+/// re-infers just the partitions the edits dirtied and stitches the
+/// rest from its prediction cache.
+fn client_delta(args: &mut Args, connect: &str) -> Result<()> {
+    use groot::net::{DeltaReply, GrootClient, Reply};
+
+    if args.get("aag").is_some() {
+        bail!("--delta builds its base from --dataset/--bits (.aag bases are not supported)");
+    }
+    let (kind, bits) = parse_dataset(args)?;
+    let edit_nodes = args.parse_or("edit-nodes", 1usize)?;
+    let edit_seed = args.parse_or("edit-seed", 7u64)?;
+    let options = groot::coordinator::server::VerifyOptions {
+        partitions: args.parse_or("partitions", 0usize).map(|p| (p > 0).then_some(p))?,
+        regrow: args.flag("no-regrow").then_some(false),
+        seed: args.get("seed").map(|s| s.parse::<u64>()).transpose()?,
+    };
+
+    let graph = datasets::build(kind, bits)?;
+    let circuit = graph.to_circuit()?;
+    let base_fp = groot::coordinator::PreparedGraph::from_circuit_ref(&circuit).fingerprint();
+
+    let mut client = GrootClient::connect_str(connect)?;
+    let base = match client.classify_circuit(&circuit, &options)? {
+        Reply::Result(r) => r,
+        Reply::Busy => bail!("server is busy (bounded queue full) — retry later"),
+    };
+    println!(
+        "base {}{}: fingerprint {:016x}  accuracy {:.4}  {} partitions",
+        kind.name(),
+        bits,
+        base_fp,
+        base.accuracy,
+        base.stats.num_partitions
+    );
+
+    let edits = groot::incremental::synthetic_polarity_edits(&circuit, edit_nodes, edit_seed);
+    if edits.is_empty() {
+        bail!("dataset has no editable AND nodes for a synthetic edit list");
+    }
+    let res = match client.classify_delta(base_fp, &edits, &options)? {
+        DeltaReply::Result(r) => r,
+        DeltaReply::Busy => bail!("server is busy (bounded queue full) — retry later"),
+    };
+    println!(
+        "delta ({} edits): accuracy {:.4}  dirty {} / clean {} partitions{}  infer {:?}  \
+         edited fingerprint {:016x}",
+        edits.len(),
+        res.result.accuracy,
+        res.dirty,
+        res.clean,
+        if res.repartitioned { " (repartitioned)" } else { "" },
+        res.result.stats.infer_time,
+        res.edited_fingerprint
+    );
+    if args.flag("expect-clean") && res.clean == 0 {
+        bail!("--expect-clean: the daemon re-inferred every partition (clean=0)");
+    }
+    if let Some(path) = args.get("pred-out") {
+        std::fs::write(&path, &res.result.pred)
+            .with_context(|| format!("write predictions to {path}"))?;
+        println!("wrote {} prediction bytes -> {path}", res.result.pred.len());
+    }
+    Ok(())
 }
 
 fn harness(args: &mut Args) -> Result<()> {

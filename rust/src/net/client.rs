@@ -6,8 +6,9 @@
 use super::daemon::BindAddr;
 use super::wire::{self, GraphPayload, WireStats};
 use crate::coordinator::server::VerifyOptions;
-use crate::coordinator::ClassifyResult;
+use crate::coordinator::{ClassifyResult, DeltaResult};
 use crate::graph::CircuitGraph;
+use crate::incremental::GraphEdit;
 use anyhow::{bail, Context, Result};
 use std::io::{Read, Write};
 use std::net::TcpStream;
@@ -48,6 +49,13 @@ impl Write for ClientStream {
 #[derive(Debug)]
 pub enum Reply {
     Result(ClassifyResult),
+    Busy,
+}
+
+/// A delta reply — same BUSY contract as [`Reply`].
+#[derive(Debug)]
+pub enum DeltaReply {
+    Result(DeltaResult),
     Busy,
 }
 
@@ -119,6 +127,33 @@ impl GrootClient {
         match kind {
             wire::RESP_RESULT => Ok(Reply::Result(wire::decode_result(&payload)?)),
             wire::RESP_BUSY => Ok(Reply::Busy),
+            wire::RESP_ERROR => {
+                let (code, msg) = wire::decode_error(&payload)?;
+                bail!("server error {code}: {msg}")
+            }
+            other => bail!("unexpected reply kind {other:#04x}"),
+        }
+    }
+
+    /// Incremental verification: send an edit list against a base design
+    /// this daemon has already classified (its fingerprint is the key).
+    /// The daemon re-infers only the partitions the edits dirtied.
+    pub fn classify_delta(
+        &mut self,
+        base_fingerprint: u64,
+        edits: &[GraphEdit],
+        options: &VerifyOptions,
+    ) -> Result<DeltaReply> {
+        wire::write_frame(
+            &mut self.stream,
+            wire::REQ_CLASSIFY_DELTA,
+            &wire::encode_delta(options, base_fingerprint, edits),
+        )
+        .context("send delta request")?;
+        let (kind, payload) = self.recv_frame()?;
+        match kind {
+            wire::RESP_DELTA_RESULT => Ok(DeltaReply::Result(wire::decode_delta_result(&payload)?)),
+            wire::RESP_BUSY => Ok(DeltaReply::Busy),
             wire::RESP_ERROR => {
                 let (code, msg) = wire::decode_error(&payload)?;
                 bail!("server error {code}: {msg}")

@@ -29,7 +29,7 @@
 //! [`wire::ERR_BAD_REQUEST`] and the connection stays usable.
 
 use super::wire::{self, FrameError, GraphPayload, WireStats};
-use crate::coordinator::server::{RequestGraph, Server, TrySubmit};
+use crate::coordinator::server::{DeltaSubmit, RequestGraph, Server, TrySubmit};
 use crate::graph::CircuitGraph;
 use crate::obs::{self, log, metrics, MetricsFormat};
 use anyhow::{bail, Context, Result};
@@ -603,6 +603,12 @@ fn handle_conn(shared: Arc<Shared>, mut conn: Box<dyn Conn>) {
                     ClassifyOutcome::Close => false,
                 }
             }
+            wire::REQ_CLASSIFY_DELTA => {
+                match serve_delta(&shared, &handle, &mut conn, &payload) {
+                    ClassifyOutcome::Continue => true,
+                    ClassifyOutcome::Close => false,
+                }
+            }
             other => wire::write_frame(
                 &mut conn,
                 wire::RESP_ERROR,
@@ -698,6 +704,78 @@ fn serve_classify(
         }
         Ok(Err(e)) => {
             if reply_err(conn, wire::ERR_INTERNAL, &format!("{e:#}")) {
+                ClassifyOutcome::Continue
+            } else {
+                ClassifyOutcome::Close
+            }
+        }
+        Err(_) => {
+            let _ = reply_err(conn, wire::ERR_INTERNAL, "worker dropped the reply channel");
+            ClassifyOutcome::Close
+        }
+    }
+}
+
+/// Serve one REQ_CLASSIFY_DELTA frame. Same error taxonomy as
+/// [`serve_classify`], with one addition: an unregistered base
+/// fingerprint is the client's mistake (classify the base through this
+/// daemon first), so it maps to [`wire::ERR_BAD_REQUEST`] and the
+/// connection stays usable.
+fn serve_delta(
+    shared: &Shared,
+    handle: &crate::coordinator::server::ServerHandle,
+    conn: &mut Box<dyn Conn>,
+    payload: &[u8],
+) -> ClassifyOutcome {
+    let reply_err = |conn: &mut Box<dyn Conn>, code: u16, msg: &str| -> bool {
+        wire::write_frame(conn, wire::RESP_ERROR, &wire::encode_error(code, msg)).is_ok()
+    };
+    let (options, base_fingerprint, edits) = match wire::decode_delta(payload) {
+        Ok(x) => x,
+        Err(e) => {
+            let _ = reply_err(conn, wire::ERR_MALFORMED, &format!("{e:#}"));
+            return ClassifyOutcome::Close;
+        }
+    };
+    let req_id = REQUEST_ID.fetch_add(1, Ordering::Relaxed);
+    let _span = obs::span_with_arg("delta_request", "net", "request_id", || req_id.to_string());
+    let t0 = Instant::now();
+    let rx = match handle.try_submit_delta(base_fingerprint, edits, options) {
+        Err(_) => {
+            let _ = reply_err(conn, wire::ERR_SHUTTING_DOWN, "daemon is draining");
+            return ClassifyOutcome::Close;
+        }
+        Ok(DeltaSubmit::Busy { .. }) => {
+            return if wire::write_frame(conn, wire::RESP_BUSY, &[]).is_ok() {
+                ClassifyOutcome::Continue
+            } else {
+                ClassifyOutcome::Close
+            };
+        }
+        Ok(DeltaSubmit::Accepted(rx)) => rx,
+    };
+    match rx.recv() {
+        Ok(Ok(res)) => {
+            shared.record_latency(t0.elapsed().as_secs_f64() * 1e3);
+            if wire::write_frame(conn, wire::RESP_DELTA_RESULT, &wire::encode_delta_result(&res))
+                .is_ok()
+            {
+                ClassifyOutcome::Continue
+            } else {
+                ClassifyOutcome::Close
+            }
+        }
+        Ok(Err(e)) => {
+            let msg = format!("{e:#}");
+            // Distinguish the client's mistakes (unknown base, invalid
+            // edit list) from pipeline failures: the former keep the
+            // ERR_BAD_REQUEST contract of every other request kind.
+            let code = if msg.contains("unknown base") || msg.contains("edit ") {
+                wire::ERR_BAD_REQUEST
+            } else {
+                wire::ERR_INTERNAL
+            };
+            if reply_err(conn, code, &msg) {
                 ClassifyOutcome::Continue
             } else {
                 ClassifyOutcome::Close

@@ -22,5 +22,5 @@ pub mod client;
 pub mod daemon;
 pub mod wire;
 
-pub use client::{GrootClient, Reply};
+pub use client::{DeltaReply, GrootClient, Reply};
 pub use daemon::{install_sigterm_handler, sigterm_pending, BindAddr, NetConfig, NetDaemon};

@@ -26,7 +26,8 @@
 //! malformed, not "close enough".
 
 use crate::coordinator::server::VerifyOptions;
-use crate::coordinator::{ClassifyResult, RunStats};
+use crate::coordinator::{ClassifyResult, DeltaResult, RunStats};
+use crate::incremental::GraphEdit;
 use crate::obs::MetricsFormat;
 use anyhow::{bail, Result};
 use std::io::{Read, Write};
@@ -45,11 +46,15 @@ pub const DEFAULT_MAX_FRAME: u32 = 64 * 1024 * 1024;
 pub const REQ_CLASSIFY: u8 = 0x01;
 pub const REQ_STATS: u8 = 0x02;
 pub const REQ_METRICS: u8 = 0x03;
+/// Incremental verification: a registered base fingerprint + edit list
+/// (no graph payload). Answered with [`RESP_DELTA_RESULT`].
+pub const REQ_CLASSIFY_DELTA: u8 = 0x04;
 pub const RESP_RESULT: u8 = 0x81;
 pub const RESP_ERROR: u8 = 0x82;
 pub const RESP_BUSY: u8 = 0x83;
 pub const RESP_STATS: u8 = 0x84;
 pub const RESP_METRICS: u8 = 0x85;
+pub const RESP_DELTA_RESULT: u8 = 0x86;
 
 // ---- structured error codes (RESP_ERROR payload) -----------------------
 /// Frame or payload did not parse; the connection is closed after this.
@@ -322,6 +327,204 @@ pub fn decode_classify(payload: &[u8]) -> Result<(VerifyOptions, GraphPayload)> 
     };
     rd.finish("classify request")?;
     Ok((VerifyOptions { partitions, regrow, seed }, graph))
+}
+
+// ---- classify delta ------------------------------------------------------
+
+const EDIT_TAG_SET_FUNCTION: u8 = 0;
+const EDIT_TAG_ADD_EDGE: u8 = 1;
+const EDIT_TAG_REMOVE_EDGE: u8 = 2;
+const EDIT_TAG_APPEND_CONE: u8 = 3;
+
+const EDIT_INV_L: u8 = 1 << 0;
+const EDIT_INV_R: u8 = 1 << 1;
+
+fn put_edit(out: &mut Vec<u8>, edit: &GraphEdit) {
+    match edit {
+        GraphEdit::SetFunction { node, kind, inv_l, inv_r } => {
+            out.push(EDIT_TAG_SET_FUNCTION);
+            put_u64(out, *node as u64);
+            out.push(*kind);
+            let mut inv = 0u8;
+            if *inv_l {
+                inv |= EDIT_INV_L;
+            }
+            if *inv_r {
+                inv |= EDIT_INV_R;
+            }
+            out.push(inv);
+        }
+        GraphEdit::AddEdge { src, dst } => {
+            out.push(EDIT_TAG_ADD_EDGE);
+            put_u64(out, *src as u64);
+            put_u64(out, *dst as u64);
+        }
+        GraphEdit::RemoveEdge { src, dst } => {
+            out.push(EDIT_TAG_REMOVE_EDGE);
+            put_u64(out, *src as u64);
+            put_u64(out, *dst as u64);
+        }
+        GraphEdit::AppendCone { desc, labels, fanins } => {
+            out.push(EDIT_TAG_APPEND_CONE);
+            put_u64(out, desc.len() as u64);
+            out.extend_from_slice(desc);
+            out.extend_from_slice(labels);
+            put_u64(out, fanins.len() as u64);
+            for &(src, dst) in fanins {
+                put_u64(out, src as u64);
+                put_u64(out, dst as u64);
+            }
+        }
+    }
+}
+
+fn read_node_id(rd: &mut Reader<'_>, what: &str) -> Result<u32> {
+    let v = rd.u64(what)?;
+    u32::try_from(v).map_err(|_| anyhow::anyhow!("{what} {v} exceeds the u32 node-id space"))
+}
+
+fn read_edit(rd: &mut Reader<'_>, i: usize) -> Result<GraphEdit> {
+    match rd.u8("edit tag")? {
+        EDIT_TAG_SET_FUNCTION => {
+            let node = read_node_id(rd, "edit node")?;
+            let kind = rd.u8("edit kind")?;
+            let inv = rd.u8("edit polarity flags")?;
+            if inv & !(EDIT_INV_L | EDIT_INV_R) != 0 {
+                bail!("edit {i}: unknown polarity flags {inv:#04x}");
+            }
+            Ok(GraphEdit::SetFunction {
+                node,
+                kind,
+                inv_l: inv & EDIT_INV_L != 0,
+                inv_r: inv & EDIT_INV_R != 0,
+            })
+        }
+        EDIT_TAG_ADD_EDGE => Ok(GraphEdit::AddEdge {
+            src: read_node_id(rd, "edge src")?,
+            dst: read_node_id(rd, "edge dst")?,
+        }),
+        EDIT_TAG_REMOVE_EDGE => Ok(GraphEdit::RemoveEdge {
+            src: read_node_id(rd, "edge src")?,
+            dst: read_node_id(rd, "edge dst")?,
+        }),
+        EDIT_TAG_APPEND_CONE => {
+            // desc and labels are parallel byte arrays of one length:
+            // bound the count by BOTH (2 bytes per cone node minimum).
+            let k = rd.count(2, "cone size")?;
+            let desc = rd.take(k, "cone descriptors")?.to_vec();
+            let labels = rd.take(k, "cone labels")?.to_vec();
+            let nfan = rd.count(16, "cone fanins")?;
+            let mut fanins = Vec::with_capacity(nfan);
+            for _ in 0..nfan {
+                fanins.push((read_node_id(rd, "fanin src")?, read_node_id(rd, "fanin dst")?));
+            }
+            Ok(GraphEdit::AppendCone { desc, labels, fanins })
+        }
+        other => bail!("edit {i}: unknown edit tag {other}"),
+    }
+}
+
+/// Payload layout:
+/// `flags u8 | [partitions u64] | [seed u64] | base_fp u64 | nedits u64 |
+/// edits` — the option prefix is identical to [`encode_classify`]; each
+/// edit is `tag u8` + tag-specific fields (see `put_edit`).
+pub fn encode_delta(options: &VerifyOptions, base_fingerprint: u64, edits: &[GraphEdit]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(1 + 8 + 8 + 8 + 8 + edits.len() * 17);
+    let mut flags = 0u8;
+    if options.partitions.is_some() {
+        flags |= FLAG_HAS_PARTITIONS;
+    }
+    if let Some(r) = options.regrow {
+        flags |= FLAG_HAS_REGROW;
+        if r {
+            flags |= FLAG_REGROW_VALUE;
+        }
+    }
+    if options.seed.is_some() {
+        flags |= FLAG_HAS_SEED;
+    }
+    out.push(flags);
+    if let Some(p) = options.partitions {
+        put_u64(&mut out, p as u64);
+    }
+    if let Some(s) = options.seed {
+        put_u64(&mut out, s);
+    }
+    put_u64(&mut out, base_fingerprint);
+    put_u64(&mut out, edits.len() as u64);
+    for edit in edits {
+        put_edit(&mut out, edit);
+    }
+    out
+}
+
+#[allow(clippy::type_complexity)]
+pub fn decode_delta(payload: &[u8]) -> Result<(VerifyOptions, u64, Vec<GraphEdit>)> {
+    let mut rd = Reader::new(payload);
+    let flags = rd.u8("flags")?;
+    if flags & !(FLAG_HAS_PARTITIONS | FLAG_HAS_REGROW | FLAG_REGROW_VALUE | FLAG_HAS_SEED) != 0 {
+        bail!("delta request: unknown option flags {flags:#04x}");
+    }
+    let partitions = if flags & FLAG_HAS_PARTITIONS != 0 {
+        let p = rd.u64("partitions")?;
+        Some(usize::try_from(p).map_err(|_| anyhow::anyhow!("partitions {p} out of range"))?)
+    } else {
+        None
+    };
+    let regrow = (flags & FLAG_HAS_REGROW != 0).then_some(flags & FLAG_REGROW_VALUE != 0);
+    let seed = if flags & FLAG_HAS_SEED != 0 { Some(rd.u64("seed")?) } else { None };
+    let base_fingerprint = rd.u64("base fingerprint")?;
+    // the smallest edit (SetFunction) is 11 bytes — bound the count by it
+    let nedits = rd.count(11, "edits")?;
+    let mut edits = Vec::with_capacity(nedits);
+    for i in 0..nedits {
+        edits.push(read_edit(&mut rd, i)?);
+    }
+    rd.finish("delta request")?;
+    Ok((VerifyOptions { partitions, regrow, seed }, base_fingerprint, edits))
+}
+
+const DELTA_FLAG_REPARTITIONED: u8 = 1 << 0;
+
+/// Payload layout: `result_len u64 | encode_result bytes | edited_fp u64
+/// | dirty u64 | clean u64 | flags u8` — the embedded classify result is
+/// length-prefixed so its decoder keeps its own strict trailing check.
+pub fn encode_delta_result(res: &DeltaResult) -> Vec<u8> {
+    let inner = encode_result(&res.result);
+    let mut out = Vec::with_capacity(8 + inner.len() + 8 * 3 + 1);
+    put_u64(&mut out, inner.len() as u64);
+    out.extend_from_slice(&inner);
+    put_u64(&mut out, res.edited_fingerprint);
+    put_u64(&mut out, res.dirty as u64);
+    put_u64(&mut out, res.clean as u64);
+    let mut flags = 0u8;
+    if res.repartitioned {
+        flags |= DELTA_FLAG_REPARTITIONED;
+    }
+    out.push(flags);
+    out
+}
+
+pub fn decode_delta_result(payload: &[u8]) -> Result<DeltaResult> {
+    let mut rd = Reader::new(payload);
+    let inner_len = rd.count(1, "embedded result")?;
+    let inner = rd.take(inner_len, "embedded result")?;
+    let result = decode_result(inner)?;
+    let edited_fingerprint = rd.u64("edited fingerprint")?;
+    let dirty = rd.u64("dirty partitions")? as usize;
+    let clean = rd.u64("clean partitions")? as usize;
+    let flags = rd.u8("delta flags")?;
+    if flags & !DELTA_FLAG_REPARTITIONED != 0 {
+        bail!("delta result: unknown flags {flags:#04x}");
+    }
+    rd.finish("delta result")?;
+    Ok(DeltaResult {
+        result,
+        edited_fingerprint,
+        dirty,
+        clean,
+        repartitioned: flags & DELTA_FLAG_REPARTITIONED != 0,
+    })
 }
 
 // ---- classify result ----------------------------------------------------
@@ -650,6 +853,85 @@ mod tests {
         let n = enc.len();
         enc[n - 1] = 0xFF;
         assert!(decode_classify(&enc).is_err());
+    }
+
+    #[test]
+    fn delta_request_roundtrips_every_edit_kind() {
+        let edits = vec![
+            GraphEdit::SetFunction { node: 7, kind: 1, inv_l: true, inv_r: false },
+            GraphEdit::AddEdge { src: 3, dst: 9 },
+            GraphEdit::RemoveEdge { src: 2, dst: 9 },
+            GraphEdit::AppendCone {
+                desc: vec![0, 1, 1],
+                labels: vec![4, 3, 3],
+                fanins: vec![(0, 1), (1, 2), (100, 2)],
+            },
+        ];
+        let options = [
+            VerifyOptions::default(),
+            VerifyOptions { partitions: Some(8), regrow: Some(true), seed: Some(5) },
+        ];
+        for o in &options {
+            let enc = encode_delta(o, 0xDEAD_BEEF_CAFE_F00D, &edits);
+            let (o2, fp, e2) = decode_delta(&enc).unwrap();
+            assert_eq!(o2.partitions, o.partitions);
+            assert_eq!(o2.regrow, o.regrow);
+            assert_eq!(o2.seed, o.seed);
+            assert_eq!(fp, 0xDEAD_BEEF_CAFE_F00D);
+            assert_eq!(e2, edits);
+        }
+        // strict truncation + trailing-bytes checks
+        let enc = encode_delta(&VerifyOptions::default(), 1, &edits);
+        for cut in 0..enc.len() {
+            assert!(decode_delta(&enc[..cut]).is_err(), "cut {cut} accepted");
+        }
+        let mut junk = enc.clone();
+        junk.push(0);
+        assert!(decode_delta(&junk).is_err());
+        // unknown edit tag (first edit starts after flags + fp + count)
+        let mut bad = enc;
+        bad[17] = 99;
+        assert!(decode_delta(&bad).is_err());
+        // node ids above u32 are rejected, not silently truncated
+        let big = encode_delta(
+            &VerifyOptions::default(),
+            1,
+            &[GraphEdit::AddEdge { src: 1, dst: 2 }],
+        );
+        let mut bad = big;
+        bad[18..26].copy_from_slice(&u64::MAX.to_le_bytes()); // src field
+        assert!(decode_delta(&bad).is_err());
+    }
+
+    #[test]
+    fn delta_result_roundtrips() {
+        let res = DeltaResult {
+            result: ClassifyResult {
+                pred: vec![1, 2, 3, 0, 4],
+                accuracy: 0.6,
+                stats: RunStats { num_partitions: 3, batch_size: 1, ..Default::default() },
+            },
+            edited_fingerprint: 0xABCD,
+            dirty: 1,
+            clean: 2,
+            repartitioned: false,
+        };
+        let enc = encode_delta_result(&res);
+        let dec = decode_delta_result(&enc).unwrap();
+        assert_eq!(dec.result.pred, res.result.pred);
+        assert_eq!(dec.result.accuracy, res.result.accuracy);
+        assert_eq!(dec.edited_fingerprint, res.edited_fingerprint);
+        assert_eq!(dec.dirty, 1);
+        assert_eq!(dec.clean, 2);
+        assert!(!dec.repartitioned);
+        let rep = DeltaResult { repartitioned: true, ..res };
+        assert!(decode_delta_result(&encode_delta_result(&rep)).unwrap().repartitioned);
+        for cut in 0..enc.len() {
+            assert!(decode_delta_result(&enc[..cut]).is_err(), "cut {cut}");
+        }
+        let mut junk = enc;
+        junk.push(7);
+        assert!(decode_delta_result(&junk).is_err());
     }
 
     #[test]

@@ -1,0 +1,227 @@
+//! Integration tests for incremental verification: `classify_delta`
+//! byte-identity against from-scratch classification across dataset
+//! families, edit kinds, and plan options; content-digest invariance
+//! across graph representations and ingestion paths; and the
+//! partitioner-reuse contract for topology-preserving edits.
+
+use groot::coordinator::{PlanOptions, PreparedGraph, Session, SessionConfig};
+use groot::datasets::{self, DatasetKind};
+use groot::gnn::{SageLayer, SageModel};
+use groot::graph::circuit::{pack_desc, KIND_AND, KIND_INPUT};
+use groot::graph::CircuitGraph;
+use groot::incremental::{apply_edits, synthetic_polarity_edits, GraphEdit};
+use groot::partition::kway_invocations;
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Duration;
+
+fn small_model() -> SageModel {
+    SageModel {
+        layers: vec![SageLayer {
+            din: 4,
+            dout: 5,
+            w_self: vec![0.3; 20],
+            w_neigh: vec![-0.2; 20],
+            bias: vec![0.01; 5],
+        }],
+    }
+}
+
+/// Tests in this binary run on parallel threads but `kway_invocations`
+/// is a process-global counter, so every test that plans partitions
+/// takes this lock — the counter assertions stay exact.
+static PLAN_LOCK: Mutex<()> = Mutex::new(());
+
+fn plan_lock() -> MutexGuard<'static, ()> {
+    PLAN_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// The three edit shapes production flows produce: a local resynthesis
+/// (polarity rewrites), a rewire (edge remove + re-add, which swaps the
+/// fanin order and therefore the local CSR), and an appended ECO cone.
+fn edit_lists(circuit: &CircuitGraph) -> Vec<(&'static str, Vec<GraphEdit>)> {
+    let (src, dst) = circuit.edges_iter().next().unwrap();
+    let at = circuit.num_aig_nodes() as u32;
+    vec![
+        ("polarity", synthetic_polarity_edits(circuit, 2, 5)),
+        (
+            "rewire",
+            vec![GraphEdit::RemoveEdge { src, dst }, GraphEdit::AddEdge { src, dst }],
+        ),
+        (
+            "append-cone",
+            vec![GraphEdit::AppendCone {
+                desc: vec![pack_desc(KIND_INPUT, false, false), pack_desc(KIND_AND, true, false)],
+                labels: vec![4, 3],
+                fanins: vec![(0, 1), (at, 1)],
+            }],
+        ),
+    ]
+}
+
+#[test]
+fn classify_delta_matches_cold_classify_across_families_and_options() {
+    let _g = plan_lock();
+    for kind in [DatasetKind::Csa, DatasetKind::Booth, DatasetKind::Wallace] {
+        let graph = datasets::build(kind, 8).unwrap();
+        let circuit = Arc::new(graph.to_circuit().unwrap());
+        for partitions in [1usize, 4] {
+            for regrow in [true, false] {
+                let cfg = SessionConfig {
+                    num_partitions: partitions,
+                    regrow,
+                    ..Default::default()
+                };
+                let opts = PlanOptions::from_config(&cfg);
+                let session = Session::native(small_model(), cfg);
+                let (base_fp, base) = session.prime_base(circuit.clone()).unwrap();
+                for (name, edits) in edit_lists(&circuit) {
+                    let label = format!("{kind:?} parts={partitions} regrow={regrow} {name}");
+                    let delta = session.classify_delta(base_fp, &edits).unwrap();
+                    let edited = apply_edits(&circuit, &edits).unwrap();
+                    let prepared = PreparedGraph::from_circuit_ref(&edited);
+                    let plan = prepared.plan(&opts);
+                    let cold = session.classify_plan(&prepared, &plan, false).unwrap();
+                    assert_eq!(delta.result.pred, cold.pred, "{label}: predictions diverged");
+                    assert_eq!(delta.result.accuracy, cold.accuracy, "{label}");
+                    assert_eq!(delta.edited_fingerprint, prepared.fingerprint(), "{label}");
+                    let preserves = edits.iter().all(|e| e.preserves_topology());
+                    assert_eq!(delta.repartitioned, !preserves, "{label}");
+                    if preserves {
+                        // assignment reuse: no partition stage ran, and
+                        // the partition split matches the base plan's
+                        assert_eq!(
+                            delta.result.stats.partition_time,
+                            Duration::ZERO,
+                            "{label}: reuse path must skip partitioning"
+                        );
+                        assert_eq!(
+                            delta.dirty + delta.clean,
+                            base.stats.num_partitions,
+                            "{label}"
+                        );
+                        assert!(delta.dirty >= 1, "{label}: an edit must dirty something");
+                        if partitions > 1 {
+                            assert!(
+                                delta.clean > 0,
+                                "{label}: small edits must leave clean partitions"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn partition_digests_are_invariant_across_representations_and_knobs() {
+    let _g = plan_lock();
+    for kind in [DatasetKind::Csa, DatasetKind::Booth] {
+        let graph = datasets::build(kind, 8).unwrap();
+        let circuit = graph.to_circuit().unwrap();
+        // Chunked streaming ingestion (tiny chunks force many batches)
+        // and a serialization round trip must land on the same bytes.
+        let streamed =
+            PreparedGraph::from_source(datasets::source(kind, 8, 64).unwrap()).unwrap();
+        let rebuilt = CircuitGraph::from_bytes(&circuit.to_bytes()).unwrap();
+
+        let opts = PlanOptions { partitions: 4, ..Default::default() };
+        let reference = PreparedGraph::new(&graph).plan(&opts);
+        let ref_digests = reference.digests();
+        assert_eq!(
+            ref_digests.len(),
+            reference.num_partitions(),
+            "{kind:?}: one digest per partition"
+        );
+        assert_eq!(
+            groot::coordinator::combine_part_digests(ref_digests.iter().copied()),
+            reference.stats.content_digest,
+            "{kind:?}: plan digest must fold the per-partition digests"
+        );
+
+        let compact = PreparedGraph::from_circuit_ref(&circuit).plan(&opts);
+        assert_eq!(compact.digests(), ref_digests, "{kind:?}: legacy vs compact");
+        assert_eq!(streamed.plan(&opts).digests(), ref_digests, "{kind:?}: streamed ingestion");
+        assert_eq!(
+            PreparedGraph::from_circuit_ref(&rebuilt).plan(&opts).digests(),
+            ref_digests,
+            "{kind:?}: to_bytes/from_bytes round trip"
+        );
+
+        // Execution knobs that do not move partition content must not
+        // move digests: the HD/LD threshold and the SIMD dispatch.
+        let hd = PreparedGraph::new(&graph)
+            .plan(&PlanOptions { partitions: 4, hd_threshold: 8, ..Default::default() });
+        assert_eq!(hd.digests(), ref_digests, "{kind:?}: hd_threshold");
+        groot::util::simd::force_scalar(true);
+        let scalar = PreparedGraph::new(&graph).plan(&opts);
+        groot::util::simd::force_scalar(false);
+        assert_eq!(scalar.digests(), ref_digests, "{kind:?}: scalar vs simd");
+
+        // Sanity on sensitivity: a different seed or partition count is
+        // a different plan, so the digest set must move.
+        let reseeded = PreparedGraph::new(&graph)
+            .plan(&PlanOptions { partitions: 4, seed: 9, ..Default::default() });
+        assert_ne!(reseeded.digests(), ref_digests, "{kind:?}: seed must move digests");
+    }
+}
+
+#[test]
+fn topology_preserving_delta_reuses_the_base_assignment() {
+    let _g = plan_lock();
+    let cfg = SessionConfig { num_partitions: 6, ..Default::default() };
+    let session = Session::native(small_model(), cfg);
+    let circuit = Arc::new(datasets::build(DatasetKind::Csa, 8).unwrap().to_circuit().unwrap());
+    let (base_fp, _) = session.prime_base(circuit.clone()).unwrap();
+
+    let k0 = kway_invocations();
+    let delta = session
+        .classify_delta(base_fp, &synthetic_polarity_edits(&circuit, 1, 3))
+        .unwrap();
+    assert_eq!(
+        kway_invocations(),
+        k0,
+        "a topology-preserving delta must not re-run the partitioner"
+    );
+    assert!(!delta.repartitioned);
+    assert!(delta.dirty >= 1 && delta.clean > 0, "dirty={} clean={}", delta.dirty, delta.clean);
+
+    // Chained deltas: the edited design became a base too, so a second
+    // edit keyed by the edited fingerprint also reuses its assignment.
+    let edited = apply_edits(&circuit, &synthetic_polarity_edits(&circuit, 1, 3)).unwrap();
+    let chained = session
+        .classify_delta(delta.edited_fingerprint, &synthetic_polarity_edits(&edited, 1, 17))
+        .unwrap();
+    assert!(!chained.repartitioned);
+    assert_eq!(kway_invocations(), k0, "chained reuse must stay flat");
+
+    // A topology-changing edit forgoes reuse and repartitions.
+    let (src, dst) = circuit.edges_iter().next().unwrap();
+    let changed = session
+        .classify_delta(
+            base_fp,
+            &[GraphEdit::RemoveEdge { src, dst }, GraphEdit::AddEdge { src, dst }],
+        )
+        .unwrap();
+    assert!(changed.repartitioned);
+    assert!(kway_invocations() > k0, "repartitioning must actually run the partitioner");
+}
+
+#[test]
+fn repeated_identical_delta_stitches_everything_from_cache() {
+    let _g = plan_lock();
+    let cfg = SessionConfig { num_partitions: 4, ..Default::default() };
+    let session = Session::native(small_model(), cfg);
+    let circuit = Arc::new(datasets::build(DatasetKind::Csa, 8).unwrap().to_circuit().unwrap());
+    let (base_fp, _) = session.prime_base(circuit.clone()).unwrap();
+
+    let edits = synthetic_polarity_edits(&circuit, 2, 11);
+    let first = session.classify_delta(base_fp, &edits).unwrap();
+    assert!(first.dirty >= 1);
+    // The first delta cached its dirty partitions' predictions, so the
+    // identical edit list replayed against the same base is all-clean.
+    let second = session.classify_delta(base_fp, &edits).unwrap();
+    assert_eq!(second.dirty, 0, "replayed delta must be fully cached");
+    assert_eq!(second.clean, first.dirty + first.clean);
+    assert_eq!(second.result.pred, first.result.pred);
+}
