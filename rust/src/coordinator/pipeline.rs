@@ -43,17 +43,23 @@ use crate::backend::{InferenceBackend, PartitionInput};
 use crate::features::{EdaGraph, GROOT_FEATURE_DIM};
 use crate::graph::{CircuitGraph, Csr, GraphSource};
 use crate::obs::{self, metrics};
-use crate::partition::{partition_kway, Partitioning};
-use crate::regrowth::{regrow_one, regrow_partitions, RegrownPartition, RegrowthStats};
+use crate::partition::{partition_kway_threads, Partitioning};
+use crate::regrowth::{regrow_one, regrow_partitions_threads, RegrownPartition, RegrowthStats};
+use crate::util::pool::{default_threads, parallel_map};
 use anyhow::Result;
 use std::sync::Arc;
 use std::sync::OnceLock;
 use std::time::{Duration, Instant};
 
-/// The per-request knobs a plan depends on. Everything else in
-/// [`SessionConfig`] (threads) belongs to the backend, not the plan, so
-/// this is the complete plan-cache key alongside the graph fingerprint.
-#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+/// The per-request knobs a plan depends on, plus one execution hint
+/// (`threads`). The four semantic fields form the complete plan-cache key
+/// alongside the graph fingerprint; `threads` only changes how fast the
+/// plan is built — the parallel partitioner/regrowth/gather are pinned
+/// byte-identical across budgets — so it is deliberately EXCLUDED from
+/// the manual `PartialEq`/`Hash` impls below and never serialized to the
+/// plan store (two requests differing only in thread budget share one
+/// cached plan).
+#[derive(Clone, Debug)]
 pub struct PlanOptions {
     /// Number of partitions (1 = no partitioning).
     pub partitions: usize,
@@ -66,6 +72,32 @@ pub struct PlanOptions {
     /// split (so the bench harness can correlate threshold with
     /// throughput). Default 512 or the `GROOT_HD_THRESHOLD` env.
     pub hd_threshold: usize,
+    /// Thread budget for building the plan (0 = process default). An
+    /// execution hint, not part of the plan's identity.
+    pub threads: usize,
+}
+
+// Manual equality/hashing over the four SEMANTIC fields only: `threads`
+// must not fragment the plan cache (both impls are written by hand so
+// Hash and Eq stay consistent).
+impl PartialEq for PlanOptions {
+    fn eq(&self, other: &Self) -> bool {
+        self.partitions == other.partitions
+            && self.regrow == other.regrow
+            && self.seed == other.seed
+            && self.hd_threshold == other.hd_threshold
+    }
+}
+
+impl Eq for PlanOptions {}
+
+impl std::hash::Hash for PlanOptions {
+    fn hash<H: std::hash::Hasher>(&self, state: &mut H) {
+        self.partitions.hash(state);
+        self.regrow.hash(state);
+        self.seed.hash(state);
+        self.hd_threshold.hash(state);
+    }
 }
 
 impl Default for PlanOptions {
@@ -75,6 +107,7 @@ impl Default for PlanOptions {
             regrow: true,
             seed: 0,
             hd_threshold: crate::spmm::default_hd_threshold(),
+            threads: 0,
         }
     }
 }
@@ -87,6 +120,16 @@ impl PlanOptions {
             regrow: cfg.regrow,
             seed: cfg.seed,
             hd_threshold: cfg.hd_threshold,
+            threads: cfg.threads,
+        }
+    }
+
+    /// Resolved plan-build thread budget (`0` means the process default).
+    pub fn build_threads(&self) -> usize {
+        if self.threads == 0 {
+            default_threads()
+        } else {
+            self.threads
         }
     }
 }
@@ -316,6 +359,7 @@ impl<'g> PreparedGraph<'g> {
             self.partition(opts)
         };
         let partition_time = t0.elapsed();
+        plan_build_metrics().partition.observe(partition_time.as_secs_f64());
         self.regrow_and_stats(&partitioning, opts, partition_time)
     }
 
@@ -333,9 +377,10 @@ impl<'g> PreparedGraph<'g> {
         let t1 = Instant::now();
         let parts = {
             let _span = obs::span("regrowth", "pipeline");
-            regrow_partitions(graph_csr, partitioning, opts.regrow)
+            regrow_partitions_threads(graph_csr, partitioning, opts.regrow, opts.build_threads())
         };
         let regrowth_time = t1.elapsed();
+        plan_build_metrics().regrowth.observe(regrowth_time.as_secs_f64());
         let regrowth = crate::regrowth::stats(&parts);
         // HD/LD row split at the configured threshold — one O(n) scan of
         // the degree array, reported by `plan_stats` too so the memory
@@ -349,6 +394,21 @@ impl<'g> PreparedGraph<'g> {
                 ld_rows += 1;
             }
         }
+        // Partition quality (ROADMAP 5a): with re-growth on, every cut
+        // edge appears as a crossing edge in both endpoint partitions, so
+        // crossing/2 IS the edge cut — no extra scan. The ablation path
+        // (regrow=false) has no crossing edges and pays one O(m) count.
+        let edge_cut = if opts.regrow {
+            regrowth.total_crossing_edges / 2
+        } else {
+            partitioning.edge_cut(graph_csr)
+        };
+        let replication = if regrowth.total_core_nodes == 0 {
+            1.0
+        } else {
+            (regrowth.total_core_nodes + regrowth.total_boundary_nodes) as f64
+                / regrowth.total_core_nodes as f64
+        };
         let stats = PlanStats {
             partition_time,
             regrowth_time,
@@ -356,6 +416,9 @@ impl<'g> PreparedGraph<'g> {
             regrowth,
             hd_rows,
             ld_rows,
+            edge_cut,
+            replication,
+            balance: partitioning.balance(),
             content_digest: 0,
         };
         (parts, stats)
@@ -365,7 +428,7 @@ impl<'g> PreparedGraph<'g> {
         if opts.partitions <= 1 {
             Partitioning { k: 1, assignment: vec![0; self.num_nodes()] }
         } else {
-            partition_kway(self.csr(), opts.partitions, opts.seed)
+            partition_kway_threads(self.csr(), opts.partitions, opts.seed, opts.build_threads())
         }
     }
 
@@ -444,32 +507,38 @@ impl<'g> PreparedGraph<'g> {
     ) -> PartitionPlan {
         let t2 = Instant::now();
         let _span = obs::span("gather", "pipeline");
+        // Partitions are independent: build local CSRs, gather features,
+        // and stamp digests concurrently (`PreparedGraph` is Sync — the
+        // overlapped streaming executor already shares it across threads).
+        // `parallel_map`'s indexed slots keep partition order, so the
+        // plan-level digest fold below is thread-count-invariant.
+        let nthreads = opts.build_threads().max(1).min(parts.len().max(1));
+        let built: Vec<(Csr, Vec<f32>, u64)> = parallel_map(nthreads, parts.len(), |i| {
+            let part = &parts[i];
+            let csr = part.csr();
+            let mut features = Vec::new();
+            self.gather_features_into(&part.nodes, &mut features);
+            let digest =
+                PlannedPartition::compute_digest(part.num_core, &part.nodes, &csr, &features);
+            (csr, features, digest)
+        });
+        // Keep only what execution needs — the edge list is fully encoded
+        // in the local CSR; retaining it too would double every cached
+        // plan's adjacency footprint. Node lists move, not clone.
         let parts: Vec<PlannedPartition> = parts
             .into_iter()
-            .map(|part| {
-                let csr = part.csr();
-                let mut features = Vec::new();
-                self.gather_features_into(&part.nodes, &mut features);
-                let digest = PlannedPartition::compute_digest(
-                    part.num_core,
-                    &part.nodes,
-                    &csr,
-                    &features,
-                );
-                // Keep only what execution needs — the edge list is fully
-                // encoded in the local CSR; retaining it too would double
-                // every cached plan's adjacency footprint.
-                PlannedPartition {
-                    part_id: part.part_id,
-                    nodes: part.nodes,
-                    num_core: part.num_core,
-                    csr,
-                    features,
-                    digest,
-                }
+            .zip(built)
+            .map(|(part, (csr, features, digest))| PlannedPartition {
+                part_id: part.part_id,
+                nodes: part.nodes,
+                num_core: part.num_core,
+                csr,
+                features,
+                digest,
             })
             .collect();
         stats.gather_time = t2.elapsed();
+        plan_build_metrics().gather.observe(stats.gather_time.as_secs_f64());
         stats.content_digest = combine_part_digests(parts.iter().map(|p| p.digest));
 
         PartitionPlan {
@@ -593,6 +662,36 @@ pub fn combine_part_digests(digests: impl Iterator<Item = u64>) -> u64 {
     h.wrapping_mul(PRIME)
 }
 
+/// Per-stage plan-build histograms (`groot_plan_build_seconds`), labeled
+/// by stage so the exposition endpoint shows where cold planning time
+/// goes — the bench sweep's in-process counterpart.
+struct PlanBuildMetrics {
+    partition: metrics::Histogram,
+    regrowth: metrics::Histogram,
+    gather: metrics::Histogram,
+}
+
+fn plan_build_metrics() -> &'static PlanBuildMetrics {
+    static M: OnceLock<PlanBuildMetrics> = OnceLock::new();
+    M.get_or_init(|| {
+        let r = metrics::registry();
+        const BUCKETS: &[f64] = &[0.001, 0.005, 0.025, 0.1, 0.5, 2.5, 10.0];
+        let h = |stage: &str| {
+            r.histogram(
+                "groot_plan_build_seconds",
+                "Cold plan-build wall time by stage (partition / regrowth / gather).",
+                &[("stage", stage)],
+                BUCKETS,
+            )
+        };
+        PlanBuildMetrics {
+            partition: h("partition"),
+            regrowth: h("regrowth"),
+            gather: h("gather"),
+        }
+    })
+}
+
 /// Where the plan-build time went (paid once per `(graph, options)` when
 /// the plan cache is warm).
 #[derive(Clone, Copy, Debug, Default)]
@@ -607,6 +706,17 @@ pub struct PlanStats {
     /// neither, so `hd_rows + ld_rows ≤ n`.
     pub hd_rows: usize,
     pub ld_rows: usize,
+    /// Partition quality (ROADMAP 5a): undirected edges whose endpoints
+    /// land in different partitions — what the multilevel partitioner
+    /// minimizes.
+    pub edge_cut: usize,
+    /// Boundary replication factor: (core + re-grown boundary nodes) /
+    /// core nodes. 1.0 means no re-growth overhead; the paper's "≈10%
+    /// boundary" claim corresponds to ≈1.1 here.
+    pub replication: f64,
+    /// Max core-partition size over the ideal n/k (1.0 = perfectly
+    /// balanced), matching [`Partitioning::balance`].
+    pub balance: f64,
     /// Combined per-partition content digest
     /// ([`combine_part_digests`] over [`PlannedPartition::digest`] in
     /// partition order) — the plan-level identity the incremental layer

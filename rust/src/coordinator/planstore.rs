@@ -476,6 +476,10 @@ fn decode_plan(bytes: &[u8], fingerprint: u64, opts: &PlanOptions) -> Result<Par
         regrow: r.u8("regrow")? != 0,
         seed: r.u64("seed")?,
         hd_threshold: r.u64("hd_threshold")? as usize,
+        // Build-thread hint: an execution knob, never serialized (and
+        // excluded from PlanOptions equality, so the key check below
+        // still matches requests made with any budget).
+        threads: 0,
     };
     // Key check: the file content must name the key it was looked up
     // under. (The file name already encodes both, but names are cheap to
@@ -498,7 +502,21 @@ fn decode_plan(bytes: &[u8], fingerprint: u64, opts: &PlanOptions) -> Result<Par
         },
         hd_rows: r.u64("hd_rows")? as usize,
         ld_rows: r.u64("ld_rows")? as usize,
+        edge_cut: 0,
+        replication: 0.0,
+        balance: 0.0,
         content_digest: 0,
+    };
+    // Quality stats are derived, not serialized (no format bump): with
+    // re-growth every cut edge is a crossing edge in both endpoint
+    // partitions; without it crossing edges are zero and a loaded plan
+    // reports edge_cut 0 — the stored RegrowthStats carry no substitute.
+    stats.edge_cut = stats.regrowth.total_crossing_edges / 2;
+    stats.replication = if stats.regrowth.total_core_nodes == 0 {
+        1.0
+    } else {
+        (stats.regrowth.total_core_nodes + stats.regrowth.total_boundary_nodes) as f64
+            / stats.regrowth.total_core_nodes as f64
     };
 
     let num_parts = r.count(16, "partition")?;
@@ -567,6 +585,11 @@ fn decode_plan(bytes: &[u8], fingerprint: u64, opts: &PlanOptions) -> Result<Par
         core_total == num_nodes,
         "plan store: core cover {core_total} != {num_nodes} nodes"
     );
+    // Balance from the decoded core sizes (max over ideal n/k), matching
+    // Partitioning::balance on the assignment this plan tiles.
+    let max_core = parts.iter().map(|p| p.num_core).max().unwrap_or(0) as f64;
+    let ideal = num_nodes as f64 / parts.len().max(1) as f64;
+    stats.balance = if ideal == 0.0 { 1.0 } else { max_core / ideal };
     stats.content_digest =
         super::pipeline::combine_part_digests(parts.iter().map(|p| p.digest));
     Ok(PartitionPlan { fingerprint: stored_fp, options, num_nodes, parts, stats })

@@ -72,6 +72,7 @@ impl VerifyOptions {
             regrow: self.regrow.unwrap_or(base.regrow),
             seed: self.seed.unwrap_or(base.seed),
             hd_threshold: base.hd_threshold,
+            threads: base.threads,
         }
     }
 }

@@ -821,6 +821,171 @@ fn render_kernels_json(
     s
 }
 
+/// One measured plan-build row, serialized into BENCH_plan.json.
+struct PlanBenchRow {
+    dataset: String,
+    nodes: usize,
+    partitions: usize,
+    threads: usize,
+    cold_median_s: f64,
+    cold_p95_s: f64,
+    /// 1-thread cold median over this row's cold median.
+    speedup_vs_1t: f64,
+    /// Loading the same plan from the persistent GPLN store (the PR-7
+    /// warm-restart path) — cold-vs-warm in one artifact.
+    store_warm_median_s: f64,
+    edge_cut: usize,
+    replication: f64,
+    balance: f64,
+}
+
+/// `groot harness bench --plan` — the cold plan-build sweep: partition +
+/// re-growth + gather across thread budgets {1, 2, 4, 8} (clamped to the
+/// host), asserting in-process that every budget produces the SAME
+/// plan-level content digest (the determinism contract), plus a
+/// plan-store warm-load row per case so the parallel-build win and the
+/// persistence win are tracked side by side. `assert_speedup` (CI: 2.0)
+/// fails the run if the 4-thread build on the largest case lands below
+/// it vs 1 thread — auto-skipped only when the host has fewer than 4
+/// cores.
+pub fn bench_plan(quick: bool, out_path: &str, assert_speedup: Option<f64>) -> Result<()> {
+    use crate::coordinator::PlanStore;
+
+    let cases: Vec<(usize, usize)> =
+        if quick { vec![(256, 24)] } else { vec![(64, 8), (256, 24)] };
+    let budget = Duration::from_millis(if quick { 300 } else { 1500 });
+    let cores =
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let sweep: Vec<usize> =
+        [1usize, 2, 4, 8].into_iter().filter(|&t| t == 1 || t <= cores).collect();
+
+    let mut t = Table::new(
+        format!("Cold plan build — thread sweep on {cores} cores (output pinned byte-identical) + plan-store warm load"),
+        &[
+            "dataset", "nodes", "parts", "threads", "cold median", "cold p95",
+            "speedup vs 1t", "store warm", "edge cut", "replication", "balance",
+        ],
+    );
+    let mut rows: Vec<PlanBenchRow> = Vec::new();
+    let mut gate_speedup: Option<f64> = None;
+    for &(bits, parts) in &cases {
+        let graph = datasets::build(DatasetKind::Csa, bits)?;
+        let prepared = PreparedGraph::new(&graph);
+        // Force the shared symmetric closure outside every timer: the
+        // sweep measures planning, and the CSR is budget-independent.
+        prepared.csr();
+        let opts = PlanOptions { partitions: parts, seed: 1, ..Default::default() };
+
+        // Reference plan (untimed) → persistent store → warm-load bench.
+        let reference = prepared.plan(&PlanOptions { threads: 1, ..opts.clone() });
+        let dir = std::env::temp_dir()
+            .join(format!("groot-bench-plan-{}-{bits}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = PlanStore::open(&dir)?;
+        store.save(&reference)?;
+        let fp = prepared.fingerprint();
+        let warm = bench_for(budget, || {
+            let loaded = store.load(fp, &opts).expect("plan-store warm load");
+            assert_eq!(loaded.stats.content_digest, reference.stats.content_digest);
+        });
+        let _ = std::fs::remove_dir_all(&dir);
+
+        let mut median_1t = f64::NAN;
+        for &threads in &sweep {
+            let run_opts = PlanOptions { threads, ..opts.clone() };
+            let mut last = None;
+            let cold = bench_for(budget, || last = Some(prepared.plan(&run_opts)));
+            let plan = last.expect("cold bench ran at least once");
+            // The determinism contract, enforced where the numbers are
+            // made: every budget must build the byte-identical plan.
+            assert_eq!(
+                plan.stats.content_digest, reference.stats.content_digest,
+                "plan content diverged at {threads} threads (csa{bits}, k={parts})"
+            );
+            if threads == 1 {
+                median_1t = cold.median_secs();
+            }
+            let row = PlanBenchRow {
+                dataset: format!("csa{bits}"),
+                nodes: graph.num_nodes,
+                partitions: parts,
+                threads,
+                cold_median_s: cold.median_secs(),
+                cold_p95_s: cold.p95_secs(),
+                speedup_vs_1t: median_1t / cold.median_secs().max(1e-12),
+                store_warm_median_s: warm.median_secs(),
+                edge_cut: plan.stats.edge_cut,
+                replication: plan.stats.replication,
+                balance: plan.stats.balance,
+            };
+            if threads == 4 && (bits, parts) == *cases.last().unwrap() {
+                gate_speedup = Some(row.speedup_vs_1t);
+            }
+            t.row(vec![
+                row.dataset.clone(),
+                row.nodes.to_string(),
+                row.partitions.to_string(),
+                row.threads.to_string(),
+                fmt_dur(cold.median),
+                fmt_dur(cold.p95),
+                format!("{:.2}x", row.speedup_vs_1t),
+                fmt_dur(warm.median),
+                row.edge_cut.to_string(),
+                format!("{:.3}", row.replication),
+                format!("{:.3}", row.balance),
+            ]);
+            rows.push(row);
+        }
+    }
+    t.print();
+
+    std::fs::write(out_path, render_plan_json(&rows))
+        .with_context(|| format!("write {out_path}"))?;
+    println!("\nwrote {out_path}");
+
+    if let Some(min) = assert_speedup {
+        if cores < 4 {
+            println!("--assert-plan-speedup skipped: only {cores} cores available");
+        } else {
+            let s = gate_speedup
+                .context("no 4-thread row on the largest case for --assert-plan-speedup")?;
+            anyhow::ensure!(
+                s >= min,
+                "cold plan-build speedup {s:.2}x at 4 threads below required {min:.2}x"
+            );
+            println!("plan-build speedup assertion passed: {s:.2}x >= {min:.2}x at 4 threads");
+        }
+    }
+    Ok(())
+}
+
+fn render_plan_json(rows: &[PlanBenchRow]) -> String {
+    let mut s = String::from("{\n  \"bench\": \"plan_build\",\n");
+    s.push_str("  \"unit\": \"seconds (median)\",\n  \"results\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"dataset\": \"{}\", \"nodes\": {}, \"partitions\": {}, \
+             \"threads\": {}, \"cold_median_s\": {:.6}, \"cold_p95_s\": {:.6}, \
+             \"speedup_vs_1t\": {:.3}, \"store_warm_median_s\": {:.6}, \
+             \"edge_cut\": {}, \"replication\": {:.4}, \"balance\": {:.4}}}{}\n",
+            r.dataset,
+            r.nodes,
+            r.partitions,
+            r.threads,
+            r.cold_median_s,
+            r.cold_p95_s,
+            r.speedup_vs_1t,
+            r.store_warm_median_s,
+            r.edge_cut,
+            r.replication,
+            r.balance,
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
 /// Fixed-weight 4→16→5 model for artifact-free benching (values are
 /// arbitrary but deterministic; small enough to keep activations finite).
 /// Shared with the memory harness, which measures footprints, not
@@ -947,6 +1112,32 @@ mod tests {
         let s = render_train_json(&rows);
         assert!(s.contains("\"bench\": \"train_epoch\""));
         assert!(s.contains("\"final_loss\": 1.200000"));
+        assert_eq!(s.matches('{').count(), s.matches('}').count());
+        assert_eq!(s.matches('[').count(), s.matches(']').count());
+    }
+
+    #[test]
+    fn plan_json_is_well_formed_ish() {
+        let rows = vec![PlanBenchRow {
+            dataset: "csa256".into(),
+            nodes: 150_000,
+            partitions: 24,
+            threads: 4,
+            cold_median_s: 0.25,
+            cold_p95_s: 0.3,
+            speedup_vs_1t: 2.5,
+            store_warm_median_s: 0.01,
+            edge_cut: 1234,
+            replication: 1.08,
+            balance: 1.05,
+        }];
+        let s = render_plan_json(&rows);
+        assert!(s.contains("\"bench\": \"plan_build\""));
+        assert!(s.contains("\"threads\": 4"));
+        assert!(s.contains("\"speedup_vs_1t\": 2.500"));
+        assert!(s.contains("\"edge_cut\": 1234"));
+        assert!(s.contains("\"replication\": 1.0800"));
+        assert!(s.contains("\"store_warm_median_s\": 0.010000"));
         assert_eq!(s.matches('{').count(), s.matches('}').count());
         assert_eq!(s.matches('[').count(), s.matches(']').count());
     }

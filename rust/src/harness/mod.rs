@@ -60,6 +60,10 @@ pub fn run(which: &str, args: &mut Args) -> Result<()> {
                 let out = args.get_or("out", "BENCH_kernels.json");
                 let min = args.parse_or("assert-simd-speedup", 0.0f64)?;
                 bench::bench_kernels(&weights, quick, &out, (min > 0.0).then_some(min))
+            } else if args.flag("plan") {
+                let out = args.get_or("out", "BENCH_plan.json");
+                let min = args.parse_or("assert-plan-speedup", 0.0f64)?;
+                bench::bench_plan(quick, &out, (min > 0.0).then_some(min))
             } else {
                 let out = args.get_or("out", "BENCH_pipeline.json");
                 bench::bench_pipeline(&weights, quick, &out)

@@ -35,6 +35,7 @@ fn run() -> Result<()> {
         "prefetch",
         "oracle",
         "kernels",
+        "plan",
         "expect-cache-hit",
         "expect-cache-miss",
         "delta",
@@ -144,6 +145,10 @@ USAGE:
                   SIMD-vs-scalar speedup, int8-vs-f32 forward, fused batched
                   GEMM; writes BENCH_kernels.json;
                   --assert-simd-speedup X fails below X× when SIMD is active)]
+                 [--plan (bench: cold plan-build thread sweep {1,2,4,8} +
+                  plan-store warm load, with the in-process byte-identity
+                  check; writes BENCH_plan.json; --assert-plan-speedup X
+                  fails below X× at 4 threads, skipped under 4 cores)]
                  (profile: run the classify pipeline and report HD/LD
                   kernel time/rows/nnz deltas from the metrics registry)
   groot serve    --listen ADDR (host:port or unix:/path.sock)

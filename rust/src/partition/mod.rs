@@ -81,11 +81,19 @@ pub fn kway_invocations() -> u64 {
     KWAY_INVOCATIONS.load(std::sync::atomic::Ordering::SeqCst)
 }
 
-/// Multilevel k-way partitioning (the default used by the coordinator).
+/// Multilevel k-way partitioning (the default used by the coordinator),
+/// using the process-wide default thread budget.
 pub fn partition_kway(csr: &Csr, k: usize, seed: u64) -> Partitioning {
+    partition_kway_threads(csr, k, seed, crate::util::pool::default_threads())
+}
+
+/// Multilevel k-way partitioning with an explicit thread budget. The
+/// assignment is byte-identical for every budget (see
+/// [`multilevel`] module docs); `threads` only changes wall-clock.
+pub fn partition_kway_threads(csr: &Csr, k: usize, seed: u64, threads: usize) -> Partitioning {
     KWAY_INVOCATIONS.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
     kway_metric().inc();
-    multilevel::partition_kway(csr, k, seed)
+    multilevel::partition_kway(csr, k, seed, threads)
 }
 
 /// Registry mirror of [`KWAY_INVOCATIONS`] for the exposition endpoint

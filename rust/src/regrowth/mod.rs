@@ -57,13 +57,74 @@ pub fn regrow_partitions(
     partitioning: &Partitioning,
     regrow: bool,
 ) -> Vec<RegrownPartition> {
+    regrow_partitions_threads(csr, partitioning, regrow, 1)
+}
+
+/// [`regrow_partitions`] with an explicit thread budget: partitions are
+/// independent, so they map over the budget via `parallel_map` (indexed
+/// result slots keep part order). Per-partition output is produced by the
+/// same [`regrow_one`], so the result is byte-identical for every budget.
+pub fn regrow_partitions_threads(
+    csr: &Csr,
+    partitioning: &Partitioning,
+    regrow: bool,
+    threads: usize,
+) -> Vec<RegrownPartition> {
     let parts = partitioning.parts();
     let assignment = &partitioning.assignment;
-    parts
-        .iter()
-        .enumerate()
-        .map(|(p, core)| regrow_one(csr, assignment, p, core, regrow))
-        .collect()
+    let nthreads = threads.max(1).min(parts.len().max(1));
+    crate::util::pool::parallel_map(nthreads, parts.len(), |p| {
+        regrow_one(csr, assignment, p, &parts[p], regrow)
+    })
+}
+
+/// Reusable global→local id map: a stamp array over the full node space,
+/// bumped per partition so it never needs clearing (the former per-call
+/// `HashMap` dominated `regrow_one`'s profile). Thread-local so the
+/// parallel per-partition map shares nothing.
+struct LocalIds {
+    stamp: Vec<u32>,
+    local: Vec<u32>,
+    epoch: u32,
+}
+
+impl LocalIds {
+    /// Start a fresh mapping over a graph of `n` nodes. Stamps begin at
+    /// zero, epochs at one; on the (rare) u32 wrap the stamps are
+    /// re-zeroed so stale entries can't alias the new epoch.
+    fn begin(&mut self, n: usize) {
+        if self.stamp.len() < n {
+            self.stamp.resize(n, 0);
+            self.local.resize(n, 0);
+        }
+        self.epoch = self.epoch.wrapping_add(1);
+        if self.epoch == 0 {
+            self.stamp.iter_mut().for_each(|s| *s = 0);
+            self.epoch = 1;
+        }
+    }
+
+    #[inline]
+    fn insert(&mut self, u: u32, l: u32) {
+        self.stamp[u as usize] = self.epoch;
+        self.local[u as usize] = l;
+    }
+
+    #[inline]
+    fn contains(&self, u: u32) -> bool {
+        self.stamp[u as usize] == self.epoch
+    }
+
+    #[inline]
+    fn get(&self, u: u32) -> u32 {
+        debug_assert!(self.contains(u));
+        self.local[u as usize]
+    }
+}
+
+thread_local! {
+    static LOCAL_IDS: std::cell::RefCell<LocalIds> =
+        const { std::cell::RefCell::new(LocalIds { stamp: Vec::new(), local: Vec::new(), epoch: 0 }) };
 }
 
 /// Algorithm 1 for a single partition — the unit the out-of-core
@@ -77,55 +138,57 @@ pub fn regrow_one(
     core: &[u32],
     regrow: bool,
 ) -> RegrownPartition {
-    let mut local: std::collections::HashMap<u32, u32> =
-        std::collections::HashMap::with_capacity(core.len() * 2);
-    for (i, &u) in core.iter().enumerate() {
-        local.insert(u, i as u32);
-    }
-    let mut nodes = core.to_vec();
-    let mut edges = Vec::new();
-    // E[S_p]: internal edges, counted once (u < v in global id).
-    for &u in core {
-        for &v in csr.neighbors(u as usize) {
-            if v > u && assignment[v as usize] as usize == p {
-                edges.push((local[&u], local[&v]));
-            }
+    LOCAL_IDS.with(|ids| {
+        let mut local = ids.borrow_mut();
+        local.begin(assignment.len());
+        for (i, &u) in core.iter().enumerate() {
+            local.insert(u, i as u32);
         }
-    }
-    let internal = edges.len();
-    if regrow {
-        // B_p in deterministic (ascending global id) order.
-        let mut boundary: Vec<u32> = Vec::new();
+        let mut nodes = core.to_vec();
+        let mut edges = Vec::new();
+        // E[S_p]: internal edges, counted once (u < v in global id).
         for &u in core {
             for &v in csr.neighbors(u as usize) {
-                if assignment[v as usize] as usize != p && !local.contains_key(&v) {
-                    local.insert(v, 0); // placeholder, fixed below
-                    boundary.push(v);
+                if v > u && assignment[v as usize] as usize == p {
+                    edges.push((local.get(u), local.get(v)));
                 }
             }
         }
-        boundary.sort_unstable();
-        for (j, &b) in boundary.iter().enumerate() {
-            local.insert(b, (core.len() + j) as u32);
-        }
-        nodes.extend_from_slice(&boundary);
-        // C_p: crossing edges, once per adjacency pair.
-        for &u in core {
-            let lu = local[&u];
-            for &v in csr.neighbors(u as usize) {
-                if assignment[v as usize] as usize != p {
-                    edges.push((lu, local[&v]));
+        let internal = edges.len();
+        if regrow {
+            // B_p in deterministic (ascending global id) order.
+            let mut boundary: Vec<u32> = Vec::new();
+            for &u in core {
+                for &v in csr.neighbors(u as usize) {
+                    if assignment[v as usize] as usize != p && !local.contains(v) {
+                        local.insert(v, 0); // placeholder, fixed below
+                        boundary.push(v);
+                    }
+                }
+            }
+            boundary.sort_unstable();
+            for (j, &b) in boundary.iter().enumerate() {
+                local.insert(b, (core.len() + j) as u32);
+            }
+            nodes.extend_from_slice(&boundary);
+            // C_p: crossing edges, once per adjacency pair.
+            for &u in core {
+                let lu = local.get(u);
+                for &v in csr.neighbors(u as usize) {
+                    if assignment[v as usize] as usize != p {
+                        edges.push((lu, local.get(v)));
+                    }
                 }
             }
         }
-    }
-    RegrownPartition {
-        part_id: p,
-        num_core: core.len(),
-        nodes,
-        num_crossing: edges.len() - internal,
-        edges,
-    }
+        RegrownPartition {
+            part_id: p,
+            num_core: core.len(),
+            nodes,
+            num_crossing: edges.len() - internal,
+            edges,
+        }
+    })
 }
 
 /// Statistics over a set of re-grown partitions — the numbers behind the

@@ -1,0 +1,169 @@
+//! Parallel plan-construction parity tests: the cold planning path
+//! (multilevel partitioning, Algorithm-1 re-growth, per-partition
+//! gather) runs on the thread pool, and this file pins the determinism
+//! contract — byte-identical output for every thread budget — plus the
+//! new plan-quality stats. The CI `plan-parallel` job runs these under
+//! `GROOT_THREADS ∈ {1, 4}` and checks this file's tests exist via
+//! `--list`.
+
+use groot::coordinator::{PlanOptions, PreparedGraph, Session, SessionConfig};
+use groot::datasets::{self, DatasetKind};
+use groot::gnn::{SageLayer, SageModel};
+use groot::graph::Csr;
+use groot::partition::partition_kway_threads;
+use groot::regrowth::regrow_partitions_threads;
+
+/// Deterministic 4→16→5 model with REAL aggregation (nonzero w_neigh):
+/// predictions depend on partitioning + re-growth, so byte-parity across
+/// thread budgets is a meaningful check, not a vacuous one.
+fn aggregating_model() -> SageModel {
+    let wave = |n: usize, scale: f32| -> Vec<f32> {
+        (0..n).map(|i| ((i as f32 * 0.7).sin()) * scale).collect()
+    };
+    SageModel {
+        layers: vec![
+            SageLayer {
+                din: 4,
+                dout: 16,
+                w_self: wave(4 * 16, 0.3),
+                w_neigh: wave(4 * 16, 0.2),
+                bias: wave(16, 0.1),
+            },
+            SageLayer {
+                din: 16,
+                dout: 5,
+                w_self: wave(16 * 5, 0.3),
+                w_neigh: wave(16 * 5, 0.2),
+                bias: wave(5, 0.1),
+            },
+        ],
+    }
+}
+
+fn symmetric_csr(kind: DatasetKind, bits: usize) -> Csr {
+    let eg = datasets::build(kind, bits).unwrap();
+    Csr::symmetric_from_edges(eg.num_nodes, &eg.edges)
+}
+
+/// The tentpole property: `partition_kway` assignments are byte-identical
+/// for thread budgets {1, 2, 4, 8}, across (family × bits × k × seed).
+#[test]
+fn partition_assignments_identical_across_thread_budgets() {
+    for kind in [DatasetKind::Csa, DatasetKind::Booth] {
+        for bits in [6usize, 8] {
+            let csr = symmetric_csr(kind, bits);
+            for k in [2usize, 3, 8] {
+                for seed in [0u64, 7] {
+                    let base = partition_kway_threads(&csr, k, seed, 1);
+                    for threads in [2usize, 4, 8] {
+                        let p = partition_kway_threads(&csr, k, seed, threads);
+                        assert_eq!(
+                            p.assignment, base.assignment,
+                            "{kind:?}{bits} k={k} seed={seed}: \
+                             {threads}-thread assignment diverged from 1-thread"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Re-growth is the serial reference mapped over a pool: nodes, edges,
+/// core counts, and crossing counts must match the 1-thread run exactly.
+#[test]
+fn regrowth_identical_across_thread_budgets() {
+    let csr = symmetric_csr(DatasetKind::Csa, 10);
+    let partitioning = partition_kway_threads(&csr, 6, 3, 1);
+    for regrow in [true, false] {
+        let base = regrow_partitions_threads(&csr, &partitioning, regrow, 1);
+        for threads in [2usize, 4, 8] {
+            let got = regrow_partitions_threads(&csr, &partitioning, regrow, threads);
+            assert_eq!(got.len(), base.len());
+            for (g, b) in got.iter().zip(&base) {
+                assert_eq!(g.part_id, b.part_id);
+                assert_eq!(g.num_core, b.num_core, "part {}", b.part_id);
+                assert_eq!(g.nodes, b.nodes, "part {}", b.part_id);
+                assert_eq!(g.edges, b.edges, "part {}", b.part_id);
+                assert_eq!(g.num_crossing, b.num_crossing, "part {}", b.part_id);
+            }
+        }
+    }
+}
+
+/// Whole plans — node lists, local CSRs, gathered features, digests —
+/// must be byte-identical across build budgets.
+#[test]
+fn plans_are_byte_identical_across_thread_budgets() {
+    let graph = datasets::build(DatasetKind::Csa, 12).unwrap();
+    let prepared = PreparedGraph::new(&graph);
+    let opts = PlanOptions { partitions: 8, seed: 5, threads: 1, ..Default::default() };
+    let base = prepared.plan(&opts);
+    for threads in [2usize, 4, 8] {
+        let plan = prepared.plan(&PlanOptions { threads, ..opts.clone() });
+        assert_eq!(plan.stats.content_digest, base.stats.content_digest);
+        assert_eq!(plan.parts.len(), base.parts.len());
+        for (g, b) in plan.parts.iter().zip(&base.parts) {
+            assert_eq!(g.nodes, b.nodes, "part {}", b.part_id);
+            assert_eq!(g.num_core, b.num_core, "part {}", b.part_id);
+            assert_eq!(g.csr, b.csr, "part {}", b.part_id);
+            assert_eq!(g.features, b.features, "part {}", b.part_id);
+            assert_eq!(g.digest, b.digest, "part {}", b.part_id);
+        }
+    }
+}
+
+/// End-to-end: `classify` predictions through the staged pipeline are
+/// byte-identical whatever thread budget built (and executed) the plan —
+/// the serial reference is the 1-thread session.
+#[test]
+fn classify_predictions_identical_across_thread_budgets() {
+    let graph = datasets::build(DatasetKind::Csa, 8).unwrap();
+    let config = |threads: usize| SessionConfig {
+        num_partitions: 6,
+        seed: 2,
+        threads,
+        ..Default::default()
+    };
+    let base = Session::native(aggregating_model(), config(1)).classify(&graph).unwrap();
+    for threads in [2usize, 4, 8] {
+        let got = Session::native(aggregating_model(), config(threads))
+            .classify(&graph)
+            .unwrap();
+        assert_eq!(got.pred, base.pred, "{threads}-thread predictions diverged");
+        assert_eq!(got.accuracy, base.accuracy);
+    }
+}
+
+/// The new PlanStats quality fields agree with the definitions they
+/// mirror: edge_cut with `Partitioning::edge_cut` on the extracted
+/// assignment, balance with `Partitioning::balance`, replication with
+/// the boundary/core arithmetic.
+#[test]
+fn plan_stats_expose_partition_quality() {
+    let graph = datasets::build(DatasetKind::Csa, 10).unwrap();
+    let prepared = PreparedGraph::new(&graph);
+    let plan = prepared.plan(&PlanOptions { partitions: 5, seed: 1, ..Default::default() });
+    let assignment = plan.extract_assignment();
+    assert_eq!(plan.stats.edge_cut, assignment.edge_cut(prepared.csr()));
+    assert!(
+        (plan.stats.balance - assignment.balance()).abs() < 1e-9,
+        "balance {} vs {}",
+        plan.stats.balance,
+        assignment.balance()
+    );
+    let r = plan.stats.regrowth;
+    let expect = (r.total_core_nodes + r.total_boundary_nodes) as f64 / r.total_core_nodes as f64;
+    assert!((plan.stats.replication - expect).abs() < 1e-12);
+    assert!(plan.stats.replication >= 1.0);
+
+    // The ablation path derives the cut directly from the assignment.
+    let no_regrow = prepared.plan(&PlanOptions {
+        partitions: 5,
+        seed: 1,
+        regrow: false,
+        ..Default::default()
+    });
+    assert_eq!(no_regrow.stats.edge_cut, plan.stats.edge_cut);
+    assert!((no_regrow.stats.replication - 1.0).abs() < 1e-12);
+}
